@@ -1,0 +1,24 @@
+use std::path::Path;
+use winoq::data::synthcifar;
+use winoq::runtime::Artifact;
+fn main() {
+    for tag in ["t2-L-flex-8b-w0.25", "t1-L-flex-8b-w0.5"] {
+        let dir = Path::new("artifacts");
+        let t0 = std::time::Instant::now();
+        let art = Artifact::load(dir, tag).unwrap();
+        let compile_s = t0.elapsed().as_secs_f64();
+        let mut state = art.init_state(dir).unwrap();
+        let m = &art.manifest;
+        let (imgs, labels) = synthcifar::generate_batch(synthcifar::TRAIN_SEED, 0, m.train_batch);
+        let l: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
+        art.train_step(&mut state, &imgs.data, &l, 0.05).unwrap();
+        let t1 = std::time::Instant::now();
+        for _ in 0..5 { art.train_step(&mut state, &imgs.data, &l, 0.05).unwrap(); }
+        let step_s = t1.elapsed().as_secs_f64() / 5.0;
+        let (eimgs, elabels) = synthcifar::generate_batch(synthcifar::TEST_SEED, 0, m.eval_batch);
+        let el: Vec<i32> = elabels.iter().map(|&x| x as i32).collect();
+        let t2 = std::time::Instant::now();
+        art.eval_step(&state, &eimgs.data, &el).unwrap();
+        println!("{tag}: compile {compile_s:.1}s, step {step_s:.3}s, eval {:.3}s", t2.elapsed().as_secs_f64());
+    }
+}

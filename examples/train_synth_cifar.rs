@@ -1,0 +1,81 @@
+//! END-TO-END DRIVER: train ResNet18 through the full three-layer stack.
+//!
+//! Exercises every layer at once: the rust coordinator (L3) streams
+//! synthetic-CIFAR batches into the AOT-compiled JAX train step (L2, with
+//! the quantized Winograd layers whose tile pipeline is the Pallas kernel's
+//! math, L1), evaluates on the held-out split, logs the loss curve, and
+//! writes a checkpoint + metrics CSV. The run recorded in EXPERIMENTS.md
+//! §E2E came from this binary.
+//!
+//! Run: `make artifacts && cargo run --release --example train_synth_cifar
+//!       [tag] [steps]`  (default: t2-L-flex-8b-w0.25, 300 steps)
+
+use std::path::PathBuf;
+use winoq::coordinator::schedule::Schedule;
+use winoq::coordinator::trainer::{self, TrainCfg};
+use winoq::runtime::Artifact;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tag = args.first().map(|s| s.as_str()).unwrap_or("t2-L-flex-8b-w0.25");
+    let steps: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let dir = winoq::runtime::artifacts_dir();
+
+    eprintln!("== winoq end-to-end training driver ==");
+    eprintln!("artifact: {tag}  steps: {steps}");
+    eprintln!("compiling HLO on the PJRT CPU client…");
+    let t0 = std::time::Instant::now();
+    let artifact = Artifact::load(&dir, tag)?;
+    eprintln!(
+        "compiled in {:.1}s; {} params ({} f32 values)",
+        t0.elapsed().as_secs_f64(),
+        artifact.manifest.params.len(),
+        artifact.manifest.total_param_len()
+    );
+
+    let cfg = TrainCfg {
+        steps,
+        schedule: Schedule::WarmupCosine {
+            lr: 0.08,
+            warmup: steps / 10,
+            total: steps,
+            final_frac: 0.02,
+        },
+        eval_every: (steps / 6).max(1),
+        eval_batches: 5,
+        log_every: 10,
+        checkpoint: Some(PathBuf::from(format!("out/{tag}.ckpt.bin"))),
+        dataset_size: 4096,
+    };
+    let t1 = std::time::Instant::now();
+    let outcome = trainer::train(&artifact, &dir, &cfg)?;
+    let train_s = t1.elapsed().as_secs_f64();
+
+    let csv = PathBuf::from(format!("out/{tag}.metrics.csv"));
+    outcome.log.write_csv(&csv)?;
+
+    println!("\n== loss curve (train, every ~{} steps) ==", (steps / 12).max(1));
+    let stride = (outcome.log.records.len() / 12).max(1);
+    for rec in outcome.log.records.iter().step_by(stride) {
+        println!(
+            "  step {:>5}  loss {:>7.4}  acc {:>5.3}  lr {:.4}",
+            rec.step, rec.loss, rec.acc, rec.lr
+        );
+    }
+    println!("\n== eval curve ==");
+    for &(step, loss, acc) in &outcome.log.evals {
+        println!("  step {step:>5}  eval loss {loss:>7.4}  eval acc {:>6.2}%", acc * 100.0);
+    }
+    println!(
+        "\nfinal eval accuracy: {:.2}%  (loss {:.4})",
+        outcome.final_eval_acc * 100.0,
+        outcome.final_eval_loss
+    );
+    println!(
+        "wall: {train_s:.1}s for {steps} steps = {:.0} ms/step (batch {})",
+        train_s / steps as f64 * 1e3,
+        artifact.manifest.train_batch
+    );
+    println!("checkpoint: out/{tag}.ckpt.bin   metrics: {}", csv.display());
+    Ok(())
+}

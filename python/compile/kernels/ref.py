@@ -1,0 +1,74 @@
+"""Pure-jnp oracles: direct convolution and reference Winograd tile math.
+
+These are the correctness anchors for the Pallas kernel (L1) and the
+vectorised Winograd layer (L2): `python/tests/test_kernel.py` hypothesis-
+sweeps shapes against them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def direct_conv2d_nchw(x: jnp.ndarray, w: jnp.ndarray, padding: int = 0) -> jnp.ndarray:
+    """Direct 2-D correlation: x [N,C,H,W], w [K,C,R,S] -> [N,K,H',W']."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def winograd_tile_ref(x_tile: jnp.ndarray, w: jnp.ndarray, mats: dict) -> jnp.ndarray:
+    """Single-tile, single-channel 2-D Winograd correlation through the
+    base-changed pipeline (paper eq. 4), all float32. x_tile (N_t,N_t),
+    w (r,r); returns (m,m). Used to validate both the vectorised layer and
+    the Pallas kernel on one tile."""
+    g_p, bt_p, a_p = mats["g_p"], mats["bt_p"], mats["a_p"]
+    p_inv, p_inv_t = mats["p_inv"], mats["p_inv_t"]
+    ident = bool(mats["identity_base"])
+    wt = g_p @ w @ g_p.T
+    if not ident:
+        wt = p_inv @ wt @ p_inv_t
+    xt = x_tile if ident else p_inv_t @ x_tile @ p_inv
+    xt = bt_p @ xt @ bt_p.T
+    had = wt * xt
+    if not ident:
+        had = p_inv_t @ had @ p_inv
+    return a_p.T @ had @ a_p
+
+
+def extract_tiles(x: jnp.ndarray, n_t: int, m: int) -> jnp.ndarray:
+    """x [N,C,H,W] -> overlapping tiles [N,C,TH,TW,n_t,n_t], stride m.
+
+    Implemented as n_t x n_t static strided slices + stacks instead of a
+    gather: gathers (and their scatter gradients) make XLA-CPU compilation
+    of the train graph pathologically slow (minutes per layer), while
+    slices/concats compile fast and differentiate to pad+add.
+    """
+    nb, c, h, w = x.shape
+    th = (h - n_t) // m + 1
+    tw = (w - n_t) // m + 1
+    rows = []
+    for i in range(n_t):
+        cols = []
+        for j in range(n_t):
+            sl = jax.lax.slice(
+                x,
+                (0, 0, i, j),
+                (nb, c, i + (th - 1) * m + 1, j + (tw - 1) * m + 1),
+                (1, 1, m, m),
+            )  # [N,C,TH,TW]
+            cols.append(sl)
+        rows.append(jnp.stack(cols, axis=-1))  # [N,C,TH,TW,n_t]
+    return jnp.stack(rows, axis=-2)  # [N,C,TH,TW,n_t,n_t]
+
+
+def scatter_tiles(y_tiles: jnp.ndarray, oh: int, ow: int) -> jnp.ndarray:
+    """[N,K,TH,TW,m,m] -> [N,K,oh,ow] (crop the tile grid to the output)."""
+    nb, k, th, tw, m, _ = y_tiles.shape
+    y = y_tiles.transpose(0, 1, 2, 4, 3, 5).reshape(nb, k, th * m, tw * m)
+    return y[:, :, :oh, :ow]

@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: quantized Winograd F(m x m, 3 x 3) tile pipeline.
+
+The paper's compute hot-spot — input transform, channel-accumulated
+Hadamard product, output transform, with the Fig. 2 quantization casts —
+as a single Pallas kernel.
+
+TPU mapping (DESIGN.md §5): the grid walks tile rows so each program
+instance holds one row of tiles for all channels in VMEM; the 6x6
+transform constants are broadcast VMEM residents; the Hadamard-accumulate
+over input channels is shaped as a (C -> K) contraction over the tile
+axes — the MXU-friendly layout. On this image the kernel runs with
+`interpret=True` (CPU PJRT cannot execute Mosaic custom-calls); the
+real-TPU VMEM/MXU estimate is in DESIGN.md §7.
+
+The kernel consumes pre-extracted tiles (overlapping windows cannot be
+expressed by a non-overlapping BlockSpec); extraction happens in the
+surrounding jitted function, so everything lowers into one HLO module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quant
+
+
+def _tile_row_compute(x, u, bt_p, a_p, p_inv, p_inv_t, ident, hadamard_bits):
+    """Tile-row math: x [C,TW,n,n] tiles, u [K,C,n,n] transformed weights
+    -> [K,TW,m,m] output tiles. Implements the paper's eq. 4 staged
+    pipeline with optional Fig. 2 quantization casts."""
+    # Base change of the input tile: P^-T X P^-1.
+    if not ident:
+        x = jnp.einsum("ij,ctjq,ql->ctil", p_inv_t, x, p_inv)
+    # Input transform: B_P^T X' B_P.
+    xt = jnp.einsum("ij,ctjq,lq->ctil", bt_p, x, bt_p)
+    if hadamard_bits is not None:
+        xt = quant.fake_quant(xt, 8)
+    # Hadamard product accumulated over input channels (general mults).
+    acc = jnp.einsum("kcij,ctij->ktij", u, xt)
+    if hadamard_bits is not None:
+        acc = quant.fake_quant(acc, hadamard_bits)
+    # Inverse base change + output transform: A_P^T (P^-T M P^-1) A_P.
+    if not ident:
+        acc = jnp.einsum("ij,ktjq,ql->ktil", p_inv_t, acc, p_inv)
+    return jnp.einsum("ji,ktjq,ql->ktil", a_p, acc, a_p)
+
+
+def transform_weights(w: jnp.ndarray, mats: dict, quantize: bool) -> jnp.ndarray:
+    """Weight transform (amortised outside the kernel): canonical
+    Winograd-domain weights via the base-changed route
+    `P^-1 (G_P W G_P^T) P^-T` (paper eq. 2). w [K,C,r,r] -> [K,C,n,n]."""
+    g_p = jnp.asarray(mats["g_p"], jnp.float32)
+    p_inv = jnp.asarray(mats["p_inv"], jnp.float32)
+    p_inv_t = jnp.asarray(mats["p_inv_t"], jnp.float32)
+    u = jnp.einsum("ij,kcjl,ml->kcim", g_p, w, g_p)
+    if not bool(mats["identity_base"]):
+        u = jnp.einsum("ij,kcjq,ql->kcil", p_inv, u, p_inv_t)
+    if quantize:
+        u = quant.fake_quant(u, 8)
+    return u
+
+
+def winograd_conv_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    mats: dict,
+    *,
+    m: int = 4,
+    padding: int = 1,
+    hadamard_bits: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Winograd conv via the Pallas tile kernel.
+
+    x [N,C,H,W], w [K,C,r,r] -> [N,K,H',W'] (stride 1). When
+    `hadamard_bits` is set, the Fig. 2 casts run inside the kernel
+    (8-bit transforms, `hadamard_bits`-bit Hadamard accumulator).
+    """
+    from . import ref
+
+    nb, c, h, wd = x.shape
+    k, wc, r, _ = w.shape
+    assert wc == c, "channel mismatch"
+    n_t = m + r - 1
+    oh = h + 2 * padding - r + 1
+    ow = wd + 2 * padding - r + 1
+    th = -(-oh // m)  # ceil div
+    tw = -(-ow // m)
+    # Pad so the tile grid covers the output exactly.
+    ph = (th - 1) * m + n_t
+    pw = (tw - 1) * m + n_t
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (0, 0),
+            (padding, ph - h - padding),
+            (padding, pw - wd - padding),
+        ),
+    )
+    tiles = ref.extract_tiles(xp, n_t, m)  # [N,C,TH,TW,n,n]
+    u = transform_weights(w, mats, hadamard_bits is not None)
+
+    # Transform constants enter the kernel as (broadcast) inputs — Pallas
+    # kernels may not capture traced constants.
+    bt_p = jnp.asarray(mats["bt_p"], jnp.float32)
+    a_p = jnp.asarray(mats["a_p"], jnp.float32)
+    p_inv = jnp.asarray(mats["p_inv"], jnp.float32)
+    p_inv_t = jnp.asarray(mats["p_inv_t"], jnp.float32)
+    ident = bool(mats["identity_base"])
+
+    def kernel(x_ref, u_ref, bt_ref, a_ref, pi_ref, pit_ref, o_ref):
+        # x_ref block: [C, 1, TW, n, n] — one tile row, all channels.
+        xrow = x_ref[...][:, 0]
+        out = _tile_row_compute(
+            xrow,
+            u_ref[...],
+            bt_ref[...],
+            a_ref[...],
+            pi_ref[...],
+            pit_ref[...],
+            ident,
+            hadamard_bits,
+        )
+        o_ref[...] = out[:, None]
+
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    def run_one_batch(tiles_b):
+        # tiles_b: [C,TH,TW,n,n]; grid over tile rows.
+        return pl.pallas_call(
+            kernel,
+            grid=(th,),
+            in_specs=[
+                pl.BlockSpec((c, 1, tw, n_t, n_t), lambda i: (0, i, 0, 0, 0)),
+                full((k, c, n_t, n_t)),
+                full((n_t, n_t)),
+                full((n_t, m)),
+                full((n_t, n_t)),
+                full((n_t, n_t)),
+            ],
+            out_specs=pl.BlockSpec((k, 1, tw, m, m), lambda i: (0, i, 0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((k, th, tw, m, m), jnp.float32),
+            interpret=interpret,
+        )(tiles_b, u, bt_p, a_p, p_inv, p_inv_t)
+
+    y_tiles = jax.vmap(run_one_batch)(tiles)  # [N,K,TH,TW,m,m]
+    return ref.scatter_tiles(y_tiles, oh, ow)

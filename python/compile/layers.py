@@ -1,0 +1,148 @@
+"""L2 layers: the winograd-aware quantized conv (vectorised, differentiable)
+plus direct-conv/BN/linear building blocks for the ResNet.
+
+The winograd layer implements the paper's eq. 4 staged pipeline with the
+Fig. 2 quantization casts and — crucially — fake-quantization of the
+*transform matrices themselves* (the deployed int8 representation, and the
+site where the polynomial base matters; see `rust/src/quant/qwino.rs` docs
+for the measured mechanism). In *flex* mode the matrices `G_P, B_P, A_P`
+arrive as trainable parameters (the paper keeps `P, P^-1` fixed), so the
+STE gradients let training adapt them to their own quantization noise.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .kernels import ref
+
+
+class WinoSpec(NamedTuple):
+    """Static configuration of one winograd-aware conv layer."""
+
+    m: int  # output tile size (paper: 4)
+    r: int  # kernel size (paper: 3)
+    base: str  # canonical | legendre | chebyshev
+    flex: bool  # transform matrices trainable?
+    act_bits: int | None  # None = float (no quantization)
+    hadamard_bits: int | None
+    mat_bits: int | None  # fake-quant of the transform matrices
+
+
+def _fq(x, bits):
+    return x if bits is None else quant.fake_quant(x, bits)
+
+
+def wino_conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    mats: dict,
+    spec: WinoSpec,
+    padding: int = 1,
+) -> jnp.ndarray:
+    """Winograd-aware conv: x [N,C,H,W], w [K,C,r,r] -> [N,K,H',W'].
+
+    `mats` holds arrays `a_p (N,m)`, `g_p (N,r)`, `bt_p (N,N)`, `p_inv`,
+    `p_inv_t` — constants in static mode, parameters in flex mode.
+    """
+    nb, c, h, wd = x.shape
+    k = w.shape[0]
+    n_t = spec.m + spec.r - 1
+    oh = h + 2 * padding - spec.r + 1
+    ow = wd + 2 * padding - spec.r + 1
+    th = -(-oh // spec.m)
+    tw = -(-ow // spec.m)
+    ph = (th - 1) * spec.m + n_t
+    pw = (tw - 1) * spec.m + n_t
+
+    ident = bool(mats["identity_base"])
+    a_p = jnp.asarray(mats["a_p"], jnp.float32)
+    g_p = jnp.asarray(mats["g_p"], jnp.float32)
+    bt_p = jnp.asarray(mats["bt_p"], jnp.float32)
+    p_inv = jnp.asarray(mats["p_inv"], jnp.float32)
+    p_inv_t = jnp.asarray(mats["p_inv_t"], jnp.float32)
+    if spec.mat_bits is not None:
+        # The trainable/storable transforms run in integer arithmetic on the
+        # deployed target: hold their entries at mat_bits (STE lets flex
+        # training adapt). P / P^-1 stay *exact* — the paper keeps them
+        # fixed, and its Fig. 2 places casts around the G/B/A transforms
+        # only; quantizing the P conjugations adds casts the paper does not
+        # have and (measured, EXPERIMENTS.md §T1) destabilises flex training.
+        a_p = quant.fake_quant(a_p, spec.mat_bits)
+        g_p = quant.fake_quant(g_p, spec.mat_bits)
+        bt_p = quant.fake_quant(bt_p, spec.mat_bits)
+
+    # ---- weights: P^-1 (G_P W G_P^T) P^-T (paper eq. 2), one cast after.
+    w = _fq(w, spec.act_bits)
+    u = jnp.einsum("ij,kcjl,ml->kcim", g_p, w, g_p)
+    if not ident:
+        u = jnp.einsum("ij,kcjq,ql->kcil", p_inv, u, p_inv_t)
+    u = _fq(u, spec.act_bits)
+
+    # ---- input tiles: B_P^T (P^-T X P^-1) B_P, one cast after.
+    x = _fq(x, spec.act_bits)
+    xp = jnp.pad(
+        x,
+        ((0, 0), (0, 0), (padding, ph - h - padding), (padding, pw - wd - padding)),
+    )
+    tiles = ref.extract_tiles(xp, n_t, spec.m)  # [N,C,TH,TW,n,n]
+    if not ident:
+        tiles = jnp.einsum("ij,ncabjq,ql->ncabil", p_inv_t, tiles, p_inv)
+    xt = jnp.einsum("ij,ncabjq,lq->ncabil", bt_p, tiles, bt_p)
+    xt = _fq(xt, spec.act_bits)
+
+    # ---- Hadamard product, accumulated over input channels.
+    acc = jnp.einsum("kcij,ncabij->nkabij", u, xt)
+    acc = _fq(acc, spec.hadamard_bits)
+
+    # ---- output: A_P^T (P^-T M P^-1) A_P, one cast after.
+    if not ident:
+        acc = jnp.einsum("ij,nkabjq,ql->nkabil", p_inv_t, acc, p_inv)
+    y_tiles = jnp.einsum("ji,nkabjq,ql->nkabil", a_p, acc, a_p)
+    y_tiles = _fq(y_tiles, spec.act_bits)
+    return ref.scatter_tiles(y_tiles, oh, ow)
+
+
+def direct_conv2d_q(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    act_bits: int | None = None,
+) -> jnp.ndarray:
+    """Quantized direct convolution (the paper's baseline): fake-quant on
+    activations and weights, f32 accumulation."""
+    x = _fq(x, act_bits)
+    w = _fq(w, act_bits)
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def batchnorm(x: jnp.ndarray, gamma, beta, eps: float = 1e-5) -> jnp.ndarray:
+    """Batch normalisation over (N,H,W) per channel, batch statistics.
+
+    Training-mode statistics are used in both train and eval steps (the
+    eval batches are large enough that this matches running-stat behaviour;
+    noted as a simplification in DESIGN.md)."""
+    mean = jnp.mean(x, axis=(0, 2, 3), keepdims=True)
+    var = jnp.var(x, axis=(0, 2, 3), keepdims=True)
+    xhat = (x - mean) / jnp.sqrt(var + eps)
+    return xhat * gamma[None, :, None, None] + beta[None, :, None, None]
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return x @ w + b
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(2, 3))

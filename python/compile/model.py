@@ -1,0 +1,81 @@
+"""L2 train/eval steps: softmax cross-entropy, SGD with momentum.
+
+These functions are what `aot.py` lowers to HLO text; the rust coordinator
+executes them step after step with device-resident parameters. Parameters
+and momentum buffers travel as flat lists in sorted-name order (the
+manifest in `aot.py` records names/shapes so rust and python always agree).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import resnet
+from .resnet import ModelCfg
+
+
+def param_names(cfg: ModelCfg) -> list[str]:
+    """Canonical (sorted) parameter order shared with the rust runtime."""
+    return sorted(resnet.init_params(cfg, seed=0).keys())
+
+
+def loss_and_acc(params: dict, images, labels, cfg: ModelCfg):
+    logits = resnet.forward(params, images, cfg)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    return nll, acc
+
+
+def make_train_step(cfg: ModelCfg, momentum: float = 0.9, weight_decay: float = 5e-4):
+    """Returns train_step(params_list, mom_list, images, labels, lr) ->
+    (new_params_list, new_mom_list, loss, acc), all flat lists in
+    `param_names(cfg)` order."""
+    names = param_names(cfg)
+
+    def train_step(params_list, mom_list, images, labels, lr):
+        params = dict(zip(names, params_list))
+
+        def loss_fn(p):
+            return loss_and_acc(p, images, labels, cfg)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params = []
+        new_mom = []
+        for name, mom in zip(names, mom_list):
+            g = grads[name]
+            if name.endswith(".w") or name == "fc.w":
+                g = g + weight_decay * params[name]
+            v = momentum * mom + g
+            new_mom.append(v)
+            new_params.append(params[name] - lr * v)
+        return new_params, new_mom, loss, acc
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelCfg):
+    """eval_step(params_list, images, labels) -> (loss, correct_count)."""
+    names = param_names(cfg)
+
+    def eval_step(params_list, images, labels):
+        params = dict(zip(names, params_list))
+        logits = resnet.forward(params, images, cfg)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.int32))
+        return nll, correct
+
+    return eval_step
+
+
+def make_predict(cfg: ModelCfg):
+    """predict(params_list, images) -> logits (serving entry point)."""
+    names = param_names(cfg)
+
+    def predict(params_list, images):
+        params = dict(zip(names, params_list))
+        return resnet.forward(params, images, cfg)
+
+    return predict

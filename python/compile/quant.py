@@ -1,0 +1,53 @@
+"""Symmetric fake-quantization with straight-through estimator (STE).
+
+The quantization scheme of the paper's §4.2 (after Fernandez-Marques et
+al. 2020): per-tensor symmetric scale `s = max|t| / (2^{b-1} - 1)`,
+`q = clip(round(t/s), -qmax, qmax)`, dequantized back to `q*s`. The
+backward pass is identity on the unclipped region (STE), so the
+winograd-aware training graph differentiates through every cast of Fig. 2.
+
+Build-time only (baked into the AOT'd train/eval steps).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> float:
+    assert 2 <= bits <= 24, f"unsupported bit width {bits}"
+    return float((1 << (bits - 1)) - 1)
+
+
+def fake_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-tensor symmetric fake quantization with STE gradient.
+
+    Scale is computed from the current tensor (dynamic quantization — the
+    same semantics as the rust `Quantizer::calibrate` on every call).
+    """
+    qm = qmax(bits)
+    maxabs = jnp.max(jnp.abs(x))
+    scale = jnp.where(maxabs > 0, maxabs / qm, 1.0)
+    scale = jax.lax.stop_gradient(scale)
+    q = jnp.clip(jnp.round(x / scale), -qm, qm) * scale
+    # STE: forward = q, backward = identity.
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fake_quant_static_scale(x: jnp.ndarray, bits: int, scale) -> jnp.ndarray:
+    """Fake quantization with an externally supplied scale (e.g. a
+    calibrated constant for matrices known ahead of time)."""
+    qm = qmax(bits)
+    q = jnp.clip(jnp.round(x / scale), -qm, qm) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_codes(x: jnp.ndarray, bits: int):
+    """(codes int32, scale) — the true-integer view, for tests that check
+    agreement with the rust integer pipeline."""
+    qm = qmax(bits)
+    maxabs = jnp.max(jnp.abs(x))
+    scale = jnp.where(maxabs > 0, maxabs / qm, 1.0)
+    codes = jnp.clip(jnp.round(x / scale), -qm, qm).astype(jnp.int32)
+    return codes, scale

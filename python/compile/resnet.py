@@ -1,0 +1,186 @@
+"""ResNet18 (CIFAR variant, width multiplier) with winograd-aware quantized
+convolution layers — the paper's experimental model.
+
+Functional JAX model over a flat `dict[str, array]` parameter tree, mirrored
+by the rust inference model (`rust/src/nn/resnet.rs`) and consumed by the
+rust training coordinator through the AOT'd train/eval steps.
+
+Variant axes (paper Tables 1-2):
+  conv      direct | winograd
+  base      canonical | legendre (| chebyshev, ablation)
+  flex      static (fixed transforms) | flex (trainable G_P/B_P/A_P)
+  bits      float | 8-bit | 8-bit + 9-bit Hadamard
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, wino
+from .layers import WinoSpec
+
+
+class ModelCfg(NamedTuple):
+    width_mult: float = 0.25
+    num_classes: int = 10
+    conv: str = "direct"  # direct | winograd
+    base: str = "canonical"
+    flex: bool = False
+    act_bits: int | None = None
+    hadamard_bits: int | None = None
+    mat_bits: int | None = None
+    m: int = 4  # winograd output tile
+
+    @property
+    def spec(self) -> WinoSpec:
+        return WinoSpec(
+            m=self.m,
+            r=3,
+            base=self.base,
+            flex=self.flex,
+            act_bits=self.act_bits,
+            hadamard_bits=self.hadamard_bits,
+            mat_bits=self.mat_bits,
+        )
+
+    def widths(self):
+        return [max(4, int(round(c * self.width_mult))) for c in (64, 128, 256, 512)]
+
+    def label(self) -> str:
+        if self.conv == "direct":
+            tag = "direct"
+        else:
+            tag = ("L-" if self.base == "legendre" else "") + (
+                "flex" if self.flex else "static"
+            )
+            if self.base == "chebyshev":
+                tag = "C-" + ("flex" if self.flex else "static")
+        bits = (
+            "float"
+            if self.act_bits is None
+            else (
+                f"{self.act_bits}b"
+                + (
+                    f"h{self.hadamard_bits}"
+                    if self.hadamard_bits != self.act_bits
+                    else ""
+                )
+            )
+        )
+        return f"{tag}-{bits}-w{self.width_mult}"
+
+
+def conv_units(cfg: ModelCfg):
+    """(prefix, stride, cin, cout, ksize) for every conv in the network —
+    identical structure to rust `ResNet18::conv_units`."""
+    w = cfg.widths()
+    units = [("stem", 1, 3, w[0], 3)]
+    cin = w[0]
+    for si, cout in enumerate(w):
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            units.append((f"s{si}b{bi}.conv1", stride, cin, cout, 3))
+            units.append((f"s{si}b{bi}.conv2", 1, cout, cout, 3))
+            if stride != 1 or cin != cout:
+                units.append((f"s{si}b{bi}.down", stride, cin, cout, 1))
+            cin = cout
+    return units
+
+
+def wino_layer_names(cfg: ModelCfg):
+    """Prefixes of convs that run through the winograd layer: stride-1 3x3
+    (strided convs and 1x1 downsamples stay direct, as in ref [5])."""
+    return [
+        p
+        for (p, stride, _ci, _co, k) in conv_units(cfg)
+        if stride == 1 and k == 3
+    ]
+
+
+def init_params(cfg: ModelCfg, seed: int = 0) -> dict:
+    """He-init conv weights, unit BN, zero biases; flex adds per-layer
+    copies of the transform matrices (initialised at their exact values —
+    'we treat matrices G_P, A_P, B_P as trainable parameters')."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for prefix, _stride, cin, cout, k in conv_units(cfg):
+        fan_in = cin * k * k
+        std = float(np.sqrt(2.0 / fan_in))
+        params[f"{prefix}.w"] = rng.normal(0.0, std, (cout, cin, k, k)).astype(
+            np.float32
+        )
+        params[f"{prefix}.bn.gamma"] = np.ones(cout, np.float32)
+        params[f"{prefix}.bn.beta"] = np.zeros(cout, np.float32)
+    w3 = cfg.widths()[3]
+    params["fc.w"] = rng.normal(
+        0.0, np.sqrt(1.0 / w3), (w3, cfg.num_classes)
+    ).astype(np.float32)
+    params["fc.b"] = np.zeros(cfg.num_classes, np.float32)
+
+    if cfg.conv == "winograd" and cfg.flex:
+        mats = wino.winograd_matrices_np(cfg.m, 3, cfg.base)
+        for prefix in wino_layer_names(cfg):
+            params[f"{prefix}.wino.a_p"] = mats["a_p"].copy()
+            params[f"{prefix}.wino.g_p"] = mats["g_p"].copy()
+            params[f"{prefix}.wino.bt_p"] = mats["bt_p"].copy()
+    return params
+
+
+def _layer_mats(cfg: ModelCfg, params: dict, prefix: str, const_mats: dict) -> dict:
+    """Assemble the transform-matrix dict for one layer: constants in
+    static mode, parameters (plus fixed P^-1) in flex mode."""
+    if not cfg.flex:
+        return const_mats
+    return {
+        "a_p": params[f"{prefix}.wino.a_p"],
+        "g_p": params[f"{prefix}.wino.g_p"],
+        "bt_p": params[f"{prefix}.wino.bt_p"],
+        "p_inv": const_mats["p_inv"],
+        "p_inv_t": const_mats["p_inv_t"],
+        "identity_base": const_mats["identity_base"],
+    }
+
+
+def forward(params: dict, x: jnp.ndarray, cfg: ModelCfg) -> jnp.ndarray:
+    """Logits [N, num_classes] for images x [N,3,H,W]."""
+    const_mats = (
+        wino.winograd_matrices_np(cfg.m, 3, cfg.base)
+        if cfg.conv == "winograd"
+        else None
+    )
+    wino_set = set(wino_layer_names(cfg)) if cfg.conv == "winograd" else set()
+
+    def conv_unit(h, prefix, stride, ksize):
+        w = params[f"{prefix}.w"]
+        pad = 1 if ksize == 3 else 0
+        if prefix in wino_set:
+            mats = _layer_mats(cfg, params, prefix, const_mats)
+            y = layers.wino_conv2d(h, w, mats, cfg.spec, padding=pad)
+        else:
+            y = layers.direct_conv2d_q(
+                h, w, stride=stride, padding=pad, act_bits=cfg.act_bits
+            )
+        return layers.batchnorm(
+            y, params[f"{prefix}.bn.gamma"], params[f"{prefix}.bn.beta"]
+        )
+
+    h = jnp.maximum(conv_unit(x, "stem", 1, 3), 0.0)
+    widths = cfg.widths()
+    cin = widths[0]
+    for si, cout in enumerate(widths):
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            prefix = f"s{si}b{bi}"
+            y1 = jnp.maximum(conv_unit(h, f"{prefix}.conv1", stride, 3), 0.0)
+            y2 = conv_unit(y1, f"{prefix}.conv2", 1, 3)
+            if stride != 1 or cin != cout:
+                sc = conv_unit(h, f"{prefix}.down", stride, 1)
+            else:
+                sc = h
+            h = jnp.maximum(y2 + sc, 0.0)
+            cin = cout
+    pooled = layers.global_avg_pool(h)
+    return layers.linear(pooled, params["fc.w"], params["fc.b"])

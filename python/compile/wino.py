@@ -1,0 +1,214 @@
+"""Winograd/Toom-Cook matrix construction (exact, `fractions.Fraction`).
+
+Python mirror of `rust/src/wino/{toomcook,basis}.rs` — same derivation
+(Toom-Cook evaluation/interpolation + Matrix Exchange; see the rust module
+docs), same point ladder, same `F = diag(N_i)` rebalancing convention, and
+the same normalised-Legendre base change. `python/tests/test_wino_matrices.py`
+cross-checks this construction against golden values (including the paper's
+printed 6x6 `P^T`), which in turn pin the rust side via its own golden tests.
+
+Everything here is build-time only: these matrices are baked as constants
+into the JAX model (L2) and the Pallas kernel (L1) before AOT lowering.
+"""
+
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Callable, Sequence
+
+import numpy as np
+
+INF = "inf"  # sentinel for the point at infinity
+
+# Canonical point ladder: 0, 1, -1, 1/2, -1/2, 2, -2, ... then infinity.
+_LADDER = [
+    Fraction(0),
+    Fraction(1),
+    Fraction(-1),
+    Fraction(1, 2),
+    Fraction(-1, 2),
+    Fraction(2),
+    Fraction(-2),
+    Fraction(1, 4),
+    Fraction(-1, 4),
+    Fraction(4),
+    Fraction(-4),
+    Fraction(3, 4),
+    Fraction(-3, 4),
+]
+
+
+def standard_points(n: int) -> list:
+    """`n` interpolation points: n-1 from the ladder plus infinity."""
+    assert 1 <= n - 1 <= len(_LADDER), f"point ladder exhausted for n={n}"
+    return list(_LADDER[: n - 1]) + [INF]
+
+
+def _frac_mat(rows, cols, fill) -> list[list[Fraction]]:
+    return [[fill(i, j) for j in range(cols)] for i in range(rows)]
+
+
+def _matmul(a, b):
+    n, k, m = len(a), len(b), len(b[0])
+    assert len(a[0]) == k
+    out = [[Fraction(0)] * m for _ in range(n)]
+    for i in range(n):
+        for kk in range(k):
+            if a[i][kk] == 0:
+                continue
+            for j in range(m):
+                out[i][j] += a[i][kk] * b[kk][j]
+    return out
+
+
+def _transpose(a):
+    return [list(row) for row in zip(*a)]
+
+
+def _identity(n):
+    return [[Fraction(1 if i == j else 0) for j in range(n)] for i in range(n)]
+
+
+def _inverse(a):
+    """Exact Gauss-Jordan inverse over Fractions."""
+    n = len(a)
+    m = [row[:] for row in a]
+    inv = _identity(n)
+    for col in range(n):
+        piv = next(r for r in range(col, n) if m[r][col] != 0)
+        m[col], m[piv] = m[piv], m[col]
+        inv[col], inv[piv] = inv[piv], inv[col]
+        p = m[col][col]
+        m[col] = [v / p for v in m[col]]
+        inv[col] = [v / p for v in inv[col]]
+        for r in range(n):
+            if r == col or m[r][col] == 0:
+                continue
+            f = m[r][col]
+            m[r] = [mv - f * cv for mv, cv in zip(m[r], m[col])]
+            inv[r] = [iv - f * cv for iv, cv in zip(inv[r], inv[col])]
+    return inv
+
+
+def toom_cook_matrices(m: int, r: int, points: Sequence | None = None):
+    """Exact (A, G, Bt) for F(m, r): A is Nxm, G is Nxr, Bt is NxN.
+
+    Same construction as rust `WinogradPlan::with_points` — generalised
+    Vandermonde V (infinity row = e_N), A = V_m, G = F^-1 V_r,
+    Bt = F V^-T with F = diag(N_i) Lagrange denominators.
+    """
+    n = m + r - 1
+    pts = list(points) if points is not None else standard_points(n)
+    assert len(pts) == n
+    finite = [p for p in pts if p != INF]
+    assert len(set(finite)) == len(finite), "duplicate points"
+    if INF in pts:
+        assert pts[-1] == INF and pts.count(INF) == 1
+
+    def vand_row(p, width):
+        if p == INF:
+            return [Fraction(0)] * (width - 1) + [Fraction(1)]
+        return [p**j for j in range(width)]
+
+    v = [vand_row(p, n) for p in pts]
+    a = [vand_row(p, m) for p in pts]
+    g = [vand_row(p, r) for p in pts]
+
+    f = [Fraction(1)] * n
+    for i, pi in enumerate(finite):
+        prod = Fraction(1)
+        for k, pk in enumerate(finite):
+            if k != i:
+                prod *= pi - pk
+        f[i] = prod
+
+    g = [[gv / f[i] for gv in row] for i, row in enumerate(g)]
+    v_inv_t = _transpose(_inverse(v))
+    bt = [[f[i] * v_inv_t[i][j] for j in range(n)] for i in range(n)]
+    return a, g, bt
+
+
+def legendre_monic(k: int) -> list[Fraction]:
+    """Canonical coefficients (low→high) of the monic Legendre P_k."""
+    p0 = [Fraction(1)]
+    if k == 0:
+        return p0
+    p1 = [Fraction(0), Fraction(1)]
+    for j in range(1, k):
+        a = Fraction(2 * j + 1, j + 1)
+        b = Fraction(j, j + 1)
+        xp1 = [Fraction(0)] + p1  # x * p1
+        nxt = [a * c for c in xp1]
+        for idx, c in enumerate(p0):
+            nxt[idx] -= b * c
+        p0, p1 = p1, nxt
+    lead = p1[-1]
+    return [c / lead for c in p1]
+
+
+def chebyshev_monic(k: int) -> list[Fraction]:
+    """Canonical coefficients of the monic Chebyshev T_k."""
+    t0 = [Fraction(1)]
+    if k == 0:
+        return t0
+    t1 = [Fraction(0), Fraction(1)]
+    for _ in range(1, k):
+        xt1 = [Fraction(0)] + t1
+        nxt = [2 * c for c in xt1]
+        for idx, c in enumerate(t0):
+            nxt[idx] -= c
+        t0, t1 = t1, nxt
+    lead = t1[-1]
+    return [c / lead for c in t1]
+
+
+def base_change(base: str, n: int):
+    """(P, P^-1) exact for the given base name ('canonical'/'legendre'/
+    'chebyshev'). Column i of P = canonical coefficients of base poly i."""
+    if base == "canonical":
+        p = _identity(n)
+        return p, _identity(n)
+    family: Callable[[int], list[Fraction]]
+    if base == "legendre":
+        family = legendre_monic
+    elif base == "chebyshev":
+        family = chebyshev_monic
+    else:
+        raise ValueError(f"unknown base {base!r}")
+    p = [[Fraction(0)] * n for _ in range(n)]
+    for k in range(n):
+        coeffs = family(k)
+        assert len(coeffs) == k + 1 and coeffs[-1] == 1
+        for j, c in enumerate(coeffs):
+            p[j][k] = c
+    return p, _inverse(p)
+
+
+def to_np(mat, dtype=np.float32) -> np.ndarray:
+    """Lower an exact Fraction matrix to a numpy array."""
+    return np.array([[float(v) for v in row] for row in mat], dtype=dtype)
+
+
+def winograd_matrices_np(m: int, r: int, base: str, dtype=np.float32):
+    """The float matrices of the paper's eq. 4, ready for the JAX model:
+
+    returns dict with a_p (N,m), g_p (N,r), bt_p (N,N)  [= (P B)^T],
+    p_inv (N,N), p_inv_t (N,N), plus the plain canonical a/g/bt.
+    """
+    a, g, bt = toom_cook_matrices(m, r)
+    n = m + r - 1
+    p, p_inv = base_change(base, n)
+    a_p = _matmul(p, a)
+    g_p = _matmul(p, g)
+    bt_p = _matmul(bt, _transpose(p))  # (P B)^T = B^T P^T
+    return {
+        "a": to_np(a, dtype),
+        "g": to_np(g, dtype),
+        "bt": to_np(bt, dtype),
+        "a_p": to_np(a_p, dtype),
+        "g_p": to_np(g_p, dtype),
+        "bt_p": to_np(bt_p, dtype),
+        "p_inv": to_np(p_inv, dtype),
+        "p_inv_t": to_np(_transpose(p_inv), dtype),
+        "identity_base": base == "canonical",
+    }

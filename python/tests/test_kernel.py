@@ -1,0 +1,107 @@
+"""L1 kernel correctness: the Pallas Winograd kernel against the pure-jnp
+direct-conv oracle, hypothesis-swept over shapes, bases, and tile sizes.
+This is the CORE correctness signal for the kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import wino
+from compile.kernels import ref, winograd_pallas as wp
+
+
+def _mats(m, base):
+    return wino.winograd_matrices_np(m, 3, base)
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("base", ["canonical", "legendre", "chebyshev"])
+@pytest.mark.parametrize("m", [2, 4])
+def test_kernel_matches_direct(base, m):
+    x = _rand((2, 3, 16, 16), 1)
+    w = _rand((4, 3, 3, 3), 2, 0.4)
+    y_ref = ref.direct_conv2d_nchw(x, w, padding=1)
+    y = wp.winograd_conv_pallas(x, w, _mats(m, base), m=m, padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 5),
+    k=st.integers(1, 5),
+    hw=st.sampled_from([8, 11, 12, 16, 19]),
+    base=st.sampled_from(["canonical", "legendre"]),
+)
+def test_kernel_shape_sweep(n, c, k, hw, base):
+    """Hypothesis sweep: arbitrary N/C/K and non-tile-aligned spatial sizes
+    must all match the direct oracle."""
+    x = _rand((n, c, hw, hw), n * 100 + c * 10 + k)
+    w = _rand((k, c, 3, 3), hw, 0.4)
+    y_ref = ref.direct_conv2d_nchw(x, w, padding=1)
+    y = wp.winograd_conv_pallas(x, w, _mats(4, base), m=4, padding=1)
+    assert y.shape == y_ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=3e-4)
+
+
+def test_kernel_no_padding():
+    x = _rand((1, 2, 14, 14), 5)
+    w = _rand((3, 2, 3, 3), 6, 0.4)
+    y_ref = ref.direct_conv2d_nchw(x, w, padding=0)
+    y = wp.winograd_conv_pallas(x, w, _mats(4, "legendre"), m=4, padding=0)
+    assert y.shape == (1, 3, 12, 12)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+
+
+def test_kernel_quantized_runs_and_is_close():
+    x = _rand((1, 4, 16, 16), 7)
+    w = _rand((4, 4, 3, 3), 8, 0.3)
+    y_ref = ref.direct_conv2d_nchw(x, w, padding=1)
+    y8 = wp.winograd_conv_pallas(
+        x, w, _mats(4, "legendre"), m=4, padding=1, hadamard_bits=8
+    )
+    y9 = wp.winograd_conv_pallas(
+        x, w, _mats(4, "legendre"), m=4, padding=1, hadamard_bits=9
+    )
+    e8 = float(jnp.sqrt(jnp.mean((y8 - y_ref) ** 2)))
+    e9 = float(jnp.sqrt(jnp.mean((y9 - y_ref) ** 2)))
+    sig = float(jnp.sqrt(jnp.mean(y_ref**2)))
+    assert e8 > 0, "quantization must perturb the output"
+    assert e8 < 0.5 * sig, f"8-bit error too large: {e8} vs signal {sig}"
+    assert e9 < e8, f"9-bit hadamard {e9} must beat 8-bit {e8}"
+
+
+def test_kernel_single_tile():
+    """Smallest case: one 6x6 tile producing one 4x4 output block."""
+    x = _rand((1, 1, 6, 6), 11)
+    w = _rand((1, 1, 3, 3), 12)
+    y_ref = ref.direct_conv2d_nchw(x, w, padding=0)
+    y = wp.winograd_conv_pallas(x, w, _mats(4, "legendre"), m=4, padding=0)
+    assert y.shape == (1, 1, 4, 4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+def test_tile_extract_scatter_roundtrip():
+    """extract_tiles/scatter_tiles invert each other for m == n_t (non-
+    overlapping case)."""
+    x = _rand((2, 3, 12, 12), 13)
+    tiles = ref.extract_tiles(x, 4, 4)
+    assert tiles.shape == (2, 3, 3, 3, 4, 4)
+    y = ref.scatter_tiles(tiles, 12, 12)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_winograd_tile_ref_matches_direct():
+    mats = wino.winograd_matrices_np(4, 3, "legendre")
+    x = np.random.default_rng(3).normal(size=(6, 6)).astype(np.float32)
+    w = np.random.default_rng(4).normal(size=(3, 3)).astype(np.float32)
+    y = ref.winograd_tile_ref(jnp.asarray(x), jnp.asarray(w), mats)
+    y_ref = ref.direct_conv2d_nchw(
+        jnp.asarray(x)[None, None], jnp.asarray(w)[None, None], padding=0
+    )[0, 0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)

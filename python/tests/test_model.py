@@ -1,0 +1,189 @@
+"""L2 model tests: layer/oracle agreement, variant behaviour, train-step
+mechanics — on a tiny width so the suite stays fast."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers, model, resnet, wino
+from compile.kernels import ref
+from compile.layers import WinoSpec
+from compile.resnet import ModelCfg
+
+TINY = dict(width_mult=0.0625, num_classes=10)  # widths [4,8,16,32]
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------- wino_conv2d layer ----------
+
+
+@pytest.mark.parametrize("base", ["canonical", "legendre"])
+def test_float_wino_layer_matches_direct(base):
+    mats = wino.winograd_matrices_np(4, 3, base)
+    spec = WinoSpec(4, 3, base, False, None, None, None)
+    x = _rand((2, 3, 16, 16), 1)
+    w = _rand((4, 3, 3, 3), 2, 0.4)
+    y = layers.wino_conv2d(x, w, mats, spec, padding=1)
+    y_ref = ref.direct_conv2d_nchw(x, w, padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4)
+
+
+def test_quantized_wino_layer_differs_but_close():
+    mats = wino.winograd_matrices_np(4, 3, "legendre")
+    spec = WinoSpec(4, 3, "legendre", False, 8, 8, 8)
+    x = _rand((1, 4, 16, 16), 3)
+    w = _rand((4, 4, 3, 3), 4, 0.3)
+    y = layers.wino_conv2d(x, w, mats, spec, padding=1)
+    y_ref = ref.direct_conv2d_nchw(x, w, padding=1)
+    err = float(jnp.sqrt(jnp.mean((y - y_ref) ** 2)))
+    sig = float(jnp.sqrt(jnp.mean(y_ref**2)))
+    assert 0 < err < 0.6 * sig
+
+
+def test_wino_layer_grads_flow_to_matrices():
+    """Flex mode trains the transform matrices: gradients must be nonzero."""
+    mats = {
+        k: jnp.asarray(v) if isinstance(v, np.ndarray) else v
+        for k, v in wino.winograd_matrices_np(4, 3, "legendre").items()
+    }
+    spec = WinoSpec(4, 3, "legendre", True, 8, 8, 8)
+    x = _rand((1, 2, 8, 8), 5)
+    w = _rand((2, 2, 3, 3), 6, 0.3)
+
+    def loss(gp):
+        m2 = dict(mats)
+        m2["g_p"] = gp
+        return jnp.sum(layers.wino_conv2d(x, w, m2, spec, padding=1) ** 2)
+
+    g = jax.grad(loss)(mats["g_p"])
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+# ---------- resnet ----------
+
+
+def test_forward_shape_direct():
+    cfg = ModelCfg(conv="direct", **TINY)
+    params = resnet.init_params(cfg, seed=0)
+    x = _rand((2, 3, 32, 32), 7)
+    logits = resnet.forward(params, x, cfg)
+    assert logits.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_winograd_float_matches_direct_network():
+    cfg_d = ModelCfg(conv="direct", **TINY)
+    cfg_w = ModelCfg(conv="winograd", base="legendre", **TINY)
+    params = resnet.init_params(cfg_d, seed=1)
+    x = _rand((2, 3, 32, 32), 8)
+    yd = resnet.forward(params, x, cfg_d)
+    yw = resnet.forward(params, x, cfg_w)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yw), atol=5e-2)
+
+
+def test_flex_params_added():
+    cfg = ModelCfg(conv="winograd", base="legendre", flex=True, **TINY)
+    params = resnet.init_params(cfg, seed=0)
+    wino_names = [k for k in params if ".wino." in k]
+    # stride-1 3x3 convs: stem + 16 block convs - 3 strided = 14, each with
+    # 3 trainable matrices.
+    assert len(wino_names) == 3 * len(resnet.wino_layer_names(cfg))
+    assert len(resnet.wino_layer_names(cfg)) == 14
+
+
+def test_param_names_sorted_and_stable():
+    cfg = ModelCfg(conv="direct", **TINY)
+    names = model.param_names(cfg)
+    assert names == sorted(names)
+    assert "fc.w" in names and "stem.w" in names
+
+
+def test_conv_units_match_rust_structure():
+    cfg = ModelCfg(conv="direct", **TINY)
+    units = resnet.conv_units(cfg)
+    assert len(units) == 20  # stem + 16 block convs + 3 downsamples
+    downs = [u for u in units if u[0].endswith("down")]
+    assert len(downs) == 3
+    assert all(k == 1 for (_, _, _, _, k) in downs)
+
+
+# ---------- train/eval steps ----------
+
+
+def _setup_step(cfg, batch=4):
+    params = resnet.init_params(cfg, seed=2)
+    names = model.param_names(cfg)
+    plist = [jnp.asarray(params[n]) for n in names]
+    mlist = [jnp.zeros_like(p) for p in plist]
+    imgs = _rand((batch, 3, 32, 32), 9)
+    labels = jnp.asarray(np.arange(batch) % 10, jnp.int32)
+    return plist, mlist, imgs, labels
+
+
+@pytest.mark.parametrize(
+    "cfg",
+    [
+        ModelCfg(conv="direct", act_bits=8, **TINY),
+        ModelCfg(
+            conv="winograd",
+            base="legendre",
+            flex=True,
+            act_bits=8,
+            hadamard_bits=9,
+            mat_bits=8,
+            **TINY,
+        ),
+    ],
+    ids=["direct8", "Lflex8h9"],
+)
+def test_train_step_descends_fixed_batch(cfg):
+    plist, mlist, imgs, labels = _setup_step(cfg)
+    step = jax.jit(model.make_train_step(cfg))
+    out = step(plist, mlist, imgs, labels, jnp.float32(0.05))
+    first = float(out[2])
+    for _ in range(4):
+        out = step(out[0], out[1], imgs, labels, jnp.float32(0.05))
+    assert float(out[2]) < first, f"{float(out[2])} !< {first}"
+
+
+def test_eval_step_counts_correct():
+    cfg = ModelCfg(conv="direct", **TINY)
+    plist, _, imgs, labels = _setup_step(cfg, batch=6)
+    ev = jax.jit(model.make_eval_step(cfg))
+    loss, correct = ev(plist, imgs, labels)
+    assert 0 <= int(correct) <= 6
+    assert float(loss) > 0
+
+
+def test_momentum_changes_trajectory():
+    cfg = ModelCfg(conv="direct", **TINY)
+    plist, mlist, imgs, labels = _setup_step(cfg)
+    s_mom = jax.jit(model.make_train_step(cfg, momentum=0.9))
+    s_plain = jax.jit(model.make_train_step(cfg, momentum=0.0))
+    a = s_mom(plist, mlist, imgs, labels, jnp.float32(0.1))
+    a = s_mom(a[0], a[1], imgs, labels, jnp.float32(0.1))
+    b = s_plain(plist, mlist, imgs, labels, jnp.float32(0.1))
+    b = s_plain(b[0], b[1], imgs, labels, jnp.float32(0.1))
+    diff = max(
+        float(jnp.max(jnp.abs(x - y))) for x, y in zip(a[0], b[0])
+    )
+    assert diff > 1e-6
+
+
+def test_weight_decay_applied_to_weights_only():
+    cfg = ModelCfg(conv="direct", **TINY)
+    names = model.param_names(cfg)
+    plist, mlist, imgs, labels = _setup_step(cfg)
+    wd = jax.jit(model.make_train_step(cfg, weight_decay=1.0))
+    nowd = jax.jit(model.make_train_step(cfg, weight_decay=0.0))
+    a = wd(plist, mlist, imgs, labels, jnp.float32(0.01))
+    b = nowd(plist, mlist, imgs, labels, jnp.float32(0.01))
+    for n, pa, pb in zip(names, a[0], b[0]):
+        d = float(jnp.max(jnp.abs(pa - pb)))
+        if n.endswith(".bn.beta"):
+            assert d < 1e-9, f"decay leaked into {n}"

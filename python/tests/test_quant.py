@@ -1,0 +1,81 @@
+"""Quantization semantics: fake-quant forward values, STE gradients, and
+agreement with the rust `Quantizer` (same scheme, same rounding)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+def test_qmax():
+    assert quant.qmax(8) == 127
+    assert quant.qmax(9) == 255
+    with pytest.raises(AssertionError):
+        quant.qmax(1)
+
+
+def test_extremes_map_exactly():
+    x = jnp.asarray([-3.0, 1.0, 2.5, 3.0])
+    y = quant.fake_quant(x, 8)
+    np.testing.assert_allclose(float(y[-1]), 3.0, atol=1e-7)
+    np.testing.assert_allclose(float(y[0]), -3.0, atol=1e-7)
+
+
+def test_zero_tensor():
+    x = jnp.zeros(4)
+    y = quant.fake_quant(x, 8)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(4))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([4, 8, 9, 12]),
+    seed=st.integers(0, 1000),
+)
+def test_error_bounded_by_half_step(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=64).astype(np.float32) * 5)
+    y = quant.fake_quant(x, bits)
+    step = float(jnp.max(jnp.abs(x))) / quant.qmax(bits)
+    assert float(jnp.max(jnp.abs(y - x))) <= step / 2 + 1e-6
+
+
+def test_ste_gradient_is_identity():
+    # d/dx sum(fake_quant(x)) == 1 everywhere in the unclipped region.
+    x = jnp.asarray([0.1, -0.5, 0.9])
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant(v, 8)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(3), atol=1e-6)
+
+
+def test_nine_bits_shrinks_worst_case_step():
+    # A single value can round better at 8 than 9 bits; the guarantee is on
+    # the worst case: the 9-bit step (and thus max error) is ~half.
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=512).astype(np.float32))
+    e8 = float(jnp.max(jnp.abs(quant.fake_quant(x, 8) - x)))
+    e9 = float(jnp.max(jnp.abs(quant.fake_quant(x, 9) - x)))
+    assert e9 < e8
+    assert 1.0 / quant.qmax(9) < 1.0 / quant.qmax(8)
+
+
+def test_matches_rust_scheme():
+    """Same algorithm as rust Quantizer::calibrate + quantize: scale =
+    max|x|/qmax, round-to-nearest, clamp."""
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=32).astype(np.float32) * 3
+    codes, scale = quant.quantize_codes(jnp.asarray(x), 8)
+    scale = float(scale)
+    qmax = 127
+    expected = np.clip(np.round(x / scale), -qmax, qmax).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(codes), expected)
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=16).astype(np.float32))
+    y = quant.fake_quant(x, 8)
+    y2 = quant.fake_quant(y, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-6)

@@ -1,0 +1,140 @@
+"""Exactness and golden tests for the python matrix construction
+(`compile/wino.py`) — mirrors the rust test suite so the two constructions
+can never drift apart."""
+
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from compile import wino
+
+
+def direct_corr(g, d, m):
+    return [sum(g[j] * d[t + j] for j in range(len(g))) for t in range(m)]
+
+
+def wino_corr(a, g_mat, bt, gv, dv):
+    n = len(bt)
+    gt = [sum(Fraction(g_mat[i][j]) * gv[j] for j in range(len(gv))) for i in range(n)]
+    dt = [sum(Fraction(bt[i][j]) * dv[j] for j in range(n)) for i in range(n)]
+    had = [a_ * b_ for a_, b_ in zip(gt, dt)]
+    m = len(a[0])
+    return [sum(a[i][t] * had[i] for i in range(n)) for t in range(m)]
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (6, 3), (2, 5)])
+def test_exactness_against_direct(m, r):
+    a, g, bt = wino.toom_cook_matrices(m, r)
+    n = m + r - 1
+    rng = np.random.default_rng(m * 100 + r)
+    for _ in range(20):
+        gv = [Fraction(int(x), 4) for x in rng.integers(-16, 17, r)]
+        dv = [Fraction(int(x), 2) for x in rng.integers(-16, 17, n)]
+        assert wino_corr(a, g, bt, gv, dv) == direct_corr(gv, dv, m)
+
+
+def test_f43_shapes():
+    a, g, bt = wino.toom_cook_matrices(4, 3)
+    assert (len(a), len(a[0])) == (6, 4)
+    assert (len(g), len(g[0])) == (6, 3)
+    assert (len(bt), len(bt[0])) == (6, 6)
+
+
+def test_legendre_monic_matches_paper():
+    # Paper §4.1 P^T rows: monic Legendre coefficients.
+    assert wino.legendre_monic(2) == [Fraction(-1, 3), 0, 1]
+    assert wino.legendre_monic(3) == [0, Fraction(-3, 5), 0, 1]
+    assert wino.legendre_monic(4) == [Fraction(3, 35), 0, Fraction(-6, 7), 0, 1]
+    assert wino.legendre_monic(5) == [
+        0,
+        Fraction(5, 21),
+        0,
+        Fraction(-10, 9),
+        0,
+        1,
+    ]
+
+
+def test_paper_pt_6x6_golden():
+    p, p_inv = wino.base_change("legendre", 6)
+    pt = [list(row) for row in zip(*p)]
+    expected = [
+        [1, 0, 0, 0, 0, 0],
+        [0, 1, 0, 0, 0, 0],
+        [Fraction(-1, 3), 0, 1, 0, 0, 0],
+        [0, Fraction(-3, 5), 0, 1, 0, 0],
+        [Fraction(3, 35), 0, Fraction(-6, 7), 0, 1, 0],
+        [0, Fraction(5, 21), 0, Fraction(-10, 9), 0, 1],
+    ]
+    assert pt == expected
+    # P * P^-1 == I exactly.
+    ident = wino._matmul(p, p_inv)
+    assert ident == wino._identity(6)
+
+
+def test_p_sparsity_counts_match_paper():
+    # Paper: 4x4 and 6x6 P have 6 and 12 non-zeros.
+    for n, nnz_expected in [(4, 6), (6, 12)]:
+        p, _ = wino.base_change("legendre", n)
+        nnz = sum(1 for row in p for v in row if v != 0)
+        assert nnz == nnz_expected
+
+
+def test_chebyshev_base():
+    p, p_inv = wino.base_change("chebyshev", 4)
+    # monic T2 = x^2 - 1/2 ; monic T3 = x^3 - 3/4 x.
+    assert p[0][2] == Fraction(-1, 2)
+    assert p[1][3] == Fraction(-3, 4)
+    assert wino._matmul(p, p_inv) == wino._identity(4)
+
+
+def test_unknown_base_raises():
+    with pytest.raises(ValueError):
+        wino.base_change("hermite", 4)
+
+
+def test_mult_count_f43():
+    # 36 Hadamard mults for 16 outputs = 2.25/output (paper §2).
+    a, g, bt = wino.toom_cook_matrices(4, 3)
+    assert len(bt) ** 2 / (len(a[0]) ** 2) == pytest.approx(2.25)
+
+
+def test_np_lowering_matches_exact():
+    mats = wino.winograd_matrices_np(4, 3, "legendre", dtype=np.float64)
+    a, g, bt = wino.toom_cook_matrices(4, 3)
+    p, p_inv = wino.base_change("legendre", 6)
+    a_p = wino._matmul(p, a)
+    assert np.allclose(mats["a_p"], wino.to_np(a_p, np.float64))
+    # bt_p = B^T P^T.
+    btp = wino._matmul(bt, wino._transpose(p))
+    assert np.allclose(mats["bt_p"], wino.to_np(btp, np.float64))
+    assert not mats["identity_base"]
+
+
+def test_canonical_mats_are_plain():
+    mats = wino.winograd_matrices_np(4, 3, "canonical")
+    assert mats["identity_base"]
+    assert np.allclose(mats["a_p"], mats["a"])
+    assert np.allclose(mats["p_inv"], np.eye(6))
+
+
+def test_eq4_reduces_to_eq3_in_float():
+    """The base-changed pipeline (paper eq. 4) must be algebraically equal
+    to the canonical algorithm (eq. 3) in exact arithmetic — check to f64
+    precision on random tiles."""
+    rng = np.random.default_rng(7)
+    mats_l = wino.winograd_matrices_np(4, 3, "legendre", dtype=np.float64)
+    mats_c = wino.winograd_matrices_np(4, 3, "canonical", dtype=np.float64)
+    for _ in range(10):
+        x = rng.normal(size=(6, 6))
+        w = rng.normal(size=(3, 3))
+        # canonical
+        u_c = mats_c["g_p"] @ w @ mats_c["g_p"].T
+        v_c = mats_c["bt_p"] @ x @ mats_c["bt_p"].T
+        y_c = mats_c["a_p"].T @ (u_c * v_c) @ mats_c["a_p"]
+        # legendre (eq. 4)
+        u_l = mats_l["p_inv"] @ (mats_l["g_p"] @ w @ mats_l["g_p"].T) @ mats_l["p_inv_t"]
+        v_l = mats_l["bt_p"] @ (mats_l["p_inv_t"] @ x @ mats_l["p_inv"]) @ mats_l["bt_p"].T
+        y_l = mats_l["a_p"].T @ (mats_l["p_inv_t"] @ (u_l * v_l) @ mats_l["p_inv"]) @ mats_l["a_p"]
+        assert np.allclose(y_c, y_l, atol=1e-9)

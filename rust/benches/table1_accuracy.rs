@@ -1,0 +1,94 @@
+//! Bench T1 (DESIGN.md §6): regenerate the paper's **Table 1** — ResNet18
+//! x0.5, Winograd F(4x4,3x3), columns {direct, Static, Flex, L-static,
+//! L-flex} at 8 bits and 8-bit+9-bit-Hadamard — by actually training every
+//! cell's AOT artifact through the rust coordinator on the synthetic-CIFAR
+//! workload.
+//!
+//! Absolute accuracies are NOT comparable to the paper's (synthetic data,
+//! short schedule — DESIGN.md §3); the reproduced quantity is the ordering
+//! and the gap structure. The paper's numbers print alongside.
+//!
+//! Budget: WINOQ_TABLE_STEPS (default 60) training steps per cell; the
+//! width-0.5 graphs are the slow ones. Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench table1_accuracy`
+
+use winoq::coordinator::experiments::{
+    paper_table1, render_table, run_cell_cached, table1, table1_w025, table_train_cfg,
+};
+use winoq::runtime::artifacts_dir;
+
+fn main() {
+    let dir = artifacts_dir();
+    let steps: u64 = std::env::var("WINOQ_TABLE_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let cfg = table_train_cfg(steps);
+    // Wall-clock budget: stop training NEW cells once exceeded (cached cells
+    // still print). Compilation dominates on this testbed (DESIGN.md §7).
+    let budget_s: u64 = std::env::var("WINOQ_TABLE_MAX_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3600);
+    let started = std::time::Instant::now();
+    eprintln!("table 1: {steps} steps per cell (set WINOQ_TABLE_STEPS to change)");
+
+    // WINOQ_T1_WIDTH=0.25 switches to the width-0.25 replica of the grid
+    // (single-core testbeds; see DESIGN.md §3 and EXPERIMENTS.md §T1).
+    let width = std::env::var("WINOQ_T1_WIDTH").unwrap_or_else(|_| "0.5".into());
+    let grid = if width == "0.25" { table1_w025() } else { table1() };
+    let mut rows = Vec::new();
+    for (row_label, cells) in grid {
+        let mut out = Vec::new();
+        for cell in cells {
+            if !dir.join(format!("{}.manifest.txt", cell.tag)).exists() {
+                eprintln!("SKIP {}: artifact missing (run `make artifacts`)", cell.tag);
+                continue;
+            }
+            if started.elapsed().as_secs() > budget_s
+                && !cached(cell.tag, steps)
+            {
+                eprintln!("BUDGET {}: wall-clock budget exhausted, skipping", cell.tag);
+                continue;
+            }
+            eprintln!("training {}…", cell.tag);
+            let t = std::time::Instant::now();
+            match run_cell_cached(&dir, cell.tag, &cfg) {
+                Ok(acc) => {
+                    eprintln!(
+                        "  {} -> {:.2}% in {:.0}s",
+                        cell.tag,
+                        acc * 100.0,
+                        t.elapsed().as_secs_f64()
+                    );
+                    out.push((cell.column.to_string(), acc));
+                }
+                Err(e) => eprintln!("  {} FAILED: {e:#}", cell.tag),
+            }
+        }
+        rows.push((row_label, out));
+    }
+    print!(
+        "{}",
+        render_table(
+            "Table 1: ResNet18 x0.5, Winograd F4, synthetic-CIFAR substitute",
+            &rows,
+            Some(&paper_table1()),
+        )
+    );
+    println!(
+        "\nshape checks (paper): static < L-static < flex ≤ L-flex ≤ direct;\n\
+         9-bit Hadamard row ≥ its 8-bit counterpart, closing the direct gap."
+    );
+}
+
+/// Is this (tag, steps) already in the result cache?
+fn cached(tag: &str, steps: u64) -> bool {
+    std::fs::read_to_string("out/table_cache.csv")
+        .map(|t| {
+            t.lines()
+                .any(|l| l.starts_with(&format!("{tag},{steps},")))
+        })
+        .unwrap_or(false)
+}

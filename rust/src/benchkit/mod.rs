@@ -1,0 +1,98 @@
+//! Mini benchmarking harness (criterion is not in the vendored crate set):
+//! warmup + N timed samples, median / mean / p95 reporting. Used by the
+//! `rust/benches/*` targets (declared `harness = false`).
+
+use std::time::Instant;
+
+/// Timing summary over samples, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub samples: usize,
+    pub median: f64,
+    pub mean: f64,
+    pub p95: f64,
+    pub min: f64,
+}
+
+impl Summary {
+    fn from_times(mut times: Vec<f64>) -> Summary {
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        Summary {
+            samples: n,
+            median: times[n / 2],
+            mean: times.iter().sum::<f64>() / n as f64,
+            p95: times[((n as f64 * 0.95) as usize).min(n - 1)],
+            min: times[0],
+        }
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `samples` timed runs.
+pub fn bench<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Summary {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    Summary::from_times(times)
+}
+
+/// Pretty-print a benchmark row: name, median, throughput (per `work` unit).
+pub fn report(name: &str, s: &Summary, work_units: Option<(f64, &str)>) {
+    let tp = work_units
+        .map(|(w, unit)| format!("  {:>10.2} {unit}/s", w / s.median))
+        .unwrap_or_default();
+    println!(
+        "{name:<44} median {:>9}  mean {:>9}  p95 {:>9}{tp}",
+        fmt_time(s.median),
+        fmt_time(s.mean),
+        fmt_time(s.p95),
+    );
+}
+
+/// Human-readable time.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_samples() {
+        let s = bench(2, 10, || 1 + 1);
+        assert_eq!(s.samples, 10);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).ends_with(" s"));
+        assert!(fmt_time(2.5e-3).ends_with(" ms"));
+        assert!(fmt_time(2.5e-6).ends_with(" µs"));
+        assert!(fmt_time(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn summary_ordering() {
+        let s = Summary::from_times(vec![3.0, 1.0, 2.0, 5.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Hand-rolled CLI (clap is not in the vendored crate set): subcommand +
+//! `--flag value` parsing, `--help` rendering.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, `--key value` flags
+/// and bare `--switch`es.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// Flags that take a value (everything else starting with `--` is a switch).
+const VALUE_FLAGS: &[&str] = &[
+    "--artifact",
+    "--artifacts-dir",
+    "--config",
+    "--steps",
+    "--lr",
+    "--eval-every",
+    "--eval-batches",
+    "--checkpoint",
+    "--metrics-csv",
+    "--base",
+    "--m",
+    "--r",
+    "--bits",
+    "--trials",
+    "--table-steps",
+    "--dataset-size",
+    "--out",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(_name) = a.strip_prefix("--") {
+                if VALUE_FLAGS.contains(&a.as_str()) {
+                    let Some(v) = it.next() else {
+                        bail!("flag {a} requires a value");
+                    };
+                    args.flags.insert(a.clone(), v.clone());
+                } else {
+                    args.switches.push(a.clone());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{name} = {v:?} is not an integer")),
+        }
+    }
+
+    pub fn flag_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{name} = {v:?} is not a number")),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+pub const HELP: &str = "\
+winoq — quantized Winograd/Toom-Cook convolution beyond the canonical base
+
+USAGE: winoq <command> [flags]
+
+COMMANDS:
+  train           train one artifact
+                    --artifact <tag> [--steps N] [--lr F] [--eval-every N]
+                    [--checkpoint PATH] [--metrics-csv PATH]
+                    [--config FILE]   (TOML config overrides flags)
+  eval            evaluate a checkpoint
+                    --artifact <tag> [--checkpoint PATH] [--eval-batches N]
+  tables          regenerate the paper's Tables 1 & 2
+                    [--table-steps N] (per-cell training steps, default 150)
+  list            list available artifacts
+  gen-matrices    print exact G / Bᵀ / Aᵀ / P matrices
+                    [--m 4] [--r 3] [--base legendre]
+  error-analysis  numerical-error sweep across tile sizes and bases
+                    [--trials N] [--bits B]
+  serve-demo      quantized int8 winograd inference demo (pure rust)
+  help            this message
+
+Common flags: --artifacts-dir DIR (default ./artifacts, or $WINOQ_ARTIFACTS)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = Args::parse(&sv(&[
+            "train",
+            "--artifact",
+            "t2-direct-8b-w0.25",
+            "--steps",
+            "100",
+            "--verbose",
+            "pos1",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("--artifact"), Some("t2-direct-8b-w0.25"));
+        assert_eq!(a.flag_u64("--steps", 0).unwrap(), 100);
+        assert!(a.has_switch("--verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["train", "--steps"])).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&["eval"])).unwrap();
+        assert_eq!(a.flag_or("--artifact", "x"), "x");
+        assert_eq!(a.flag_u64("--steps", 7).unwrap(), 7);
+        assert!((a.flag_f32("--lr", 0.5).unwrap() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = Args::parse(&sv(&["t", "--steps", "abc"])).unwrap();
+        assert!(a.flag_u64("--steps", 0).is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal TOML-subset config parser + typed run configuration.
+//!
+//! serde isn't in the vendored crate set, so this implements the subset we
+//! need: `[section]` headers, `key = value` with string / number / bool
+//! values, `#` comments. Good enough for experiment configs like
+//! `examples/train.toml`.
+
+use crate::coordinator::schedule::Schedule;
+use crate::coordinator::trainer::TrainCfg;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A parsed config: section -> key -> raw value string.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = value.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str, default: u64) -> Result<u64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{section}.{key} = {v:?}")),
+        }
+    }
+
+    pub fn get_f32(&self, section: &str, key: &str, default: f32) -> Result<f32> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{section}.{key} = {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(section, key, default as u64)? as usize)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+/// A full training-run configuration file.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub tag: String,
+    pub artifacts_dir: PathBuf,
+    pub train: TrainCfg,
+    pub metrics_csv: Option<PathBuf>,
+}
+
+impl RunConfig {
+    /// Read the `[run]`, `[train]`, `[schedule]` sections.
+    pub fn from_config(cfg: &Config) -> Result<RunConfig> {
+        let tag = cfg
+            .get("run", "artifact")
+            .context("[run] artifact = <tag> is required")?
+            .to_string();
+        let artifacts_dir = PathBuf::from(cfg.get_or("run", "artifacts_dir", "artifacts"));
+        let steps = cfg.get_u64("train", "steps", 200)?;
+        let kind = cfg.get_or("schedule", "kind", "warmup_cosine");
+        let lr = cfg.get_f32("schedule", "lr", 0.05)?;
+        let schedule = match kind {
+            "constant" => Schedule::Constant { lr },
+            "warmup_cosine" => Schedule::WarmupCosine {
+                lr,
+                warmup: cfg.get_u64("schedule", "warmup", steps / 10)?,
+                total: cfg.get_u64("schedule", "total", steps)?,
+                final_frac: cfg.get_f32("schedule", "final_frac", 0.05)?,
+            },
+            "step_decay" => Schedule::StepDecay {
+                lr,
+                gamma: cfg.get_f32("schedule", "gamma", 0.1)?,
+                milestones: [
+                    cfg.get_u64("schedule", "m1", steps / 2)?,
+                    cfg.get_u64("schedule", "m2", 3 * steps / 4)?,
+                    cfg.get_u64("schedule", "m3", 7 * steps / 8)?,
+                ],
+            },
+            other => bail!("unknown schedule kind {other:?}"),
+        };
+        let train = TrainCfg {
+            steps,
+            schedule,
+            eval_every: cfg.get_u64("train", "eval_every", 0)?,
+            eval_batches: cfg.get_usize("train", "eval_batches", 5)?,
+            log_every: cfg.get_u64("train", "log_every", 20)?,
+            checkpoint: cfg.get("train", "checkpoint").map(PathBuf::from),
+            dataset_size: cfg.get_u64("train", "dataset_size", 4096)?,
+        };
+        let metrics_csv = cfg.get("run", "metrics_csv").map(PathBuf::from);
+        Ok(RunConfig { tag, artifacts_dir, train, metrics_csv })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+[run]
+artifact = "t2-direct-8b-w0.25"
+metrics_csv = out/metrics.csv
+
+[train]
+steps = 50
+eval_every = 25   # inline comment
+checkpoint = out/ckpt.bin
+
+[schedule]
+kind = warmup_cosine
+lr = 0.1
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("run", "artifact"), Some("t2-direct-8b-w0.25"));
+        assert_eq!(cfg.get_u64("train", "steps", 0).unwrap(), 50);
+        assert_eq!(cfg.get_u64("train", "eval_every", 0).unwrap(), 25);
+        assert_eq!(cfg.get("missing", "x"), None);
+        assert_eq!(cfg.get_or("missing", "x", "d"), "d");
+    }
+
+    #[test]
+    fn run_config_roundtrip() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let run = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(run.tag, "t2-direct-8b-w0.25");
+        assert_eq!(run.train.steps, 50);
+        assert_eq!(run.train.eval_every, 25);
+        assert!(run.train.checkpoint.is_some());
+        match run.train.schedule {
+            Schedule::WarmupCosine { lr, warmup, .. } => {
+                assert!((lr - 0.1).abs() < 1e-7);
+                assert_eq!(warmup, 5);
+            }
+            _ => panic!("wrong schedule"),
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let cfg = Config::parse("[train]\nsteps = 1\n").unwrap();
+        assert!(RunConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let cfg = Config::parse("[train]\nsteps = abc\n").unwrap();
+        assert!(cfg.get_u64("train", "steps", 0).is_err());
+    }
+
+    #[test]
+    fn step_decay_schedule() {
+        let cfg = Config::parse(
+            "[run]\nartifact = x\n[train]\nsteps = 100\n[schedule]\nkind = step_decay\nlr = 1.0\n",
+        )
+        .unwrap();
+        let run = RunConfig::from_config(&cfg).unwrap();
+        match run.train.schedule {
+            Schedule::StepDecay { milestones, .. } => {
+                assert_eq!(milestones, [50, 75, 87]);
+            }
+            _ => panic!("wrong schedule"),
+        }
+    }
+}

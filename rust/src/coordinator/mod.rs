@@ -1,0 +1,9 @@
+//! L3 coordinator: training orchestration, LR schedules, experiment
+//! definitions for the paper's tables.
+
+pub mod experiments;
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::Schedule;
+pub use trainer::{evaluate, train, TrainCfg, TrainOutcome};

@@ -1,0 +1,84 @@
+//! Learning-rate schedules for the training coordinator.
+
+/// A learning-rate schedule over global steps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// Linear warmup to `lr` over `warmup` steps, then cosine decay to
+    /// `final_frac * lr` at `total` steps — the shape used by ref [5].
+    WarmupCosine { lr: f32, warmup: u64, total: u64, final_frac: f32 },
+    /// Piecewise: multiply by `gamma` at each milestone.
+    StepDecay { lr: f32, gamma: f32, milestones: [u64; 3] },
+}
+
+impl Schedule {
+    pub fn at(&self, step: u64) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupCosine { lr, warmup, total, final_frac } => {
+                if warmup > 0 && step < warmup {
+                    return lr * (step as f32 + 1.0) / warmup as f32;
+                }
+                let total = total.max(warmup + 1);
+                let t = ((step - warmup) as f32 / (total - warmup) as f32).min(1.0);
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                let lo = lr * final_frac;
+                lo + (lr - lo) * cos
+            }
+            Schedule::StepDecay { lr, gamma, milestones } => {
+                let k = milestones.iter().filter(|&&m| step >= m).count() as i32;
+                lr * gamma.powi(k)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::WarmupCosine { lr: 1.0, warmup: 10, total: 100, final_frac: 0.0 };
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_final() {
+        let s = Schedule::WarmupCosine { lr: 1.0, warmup: 0, total: 100, final_frac: 0.1 };
+        assert!((s.at(0) - 1.0).abs() < 1e-5);
+        let mid = s.at(50);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((s.at(100) - 0.1).abs() < 1e-5);
+        assert!((s.at(1000) - 0.1).abs() < 1e-5, "clamps past total");
+    }
+
+    #[test]
+    fn cosine_is_monotone_after_warmup() {
+        let s = Schedule::WarmupCosine { lr: 0.5, warmup: 5, total: 200, final_frac: 0.01 };
+        let mut prev = f32::INFINITY;
+        for step in 5..200 {
+            let v = s.at(step);
+            assert!(v <= prev + 1e-7, "not monotone at {step}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn step_decay_milestones() {
+        let s = Schedule::StepDecay { lr: 1.0, gamma: 0.1, milestones: [10, 20, 30] };
+        assert_eq!(s.at(9), 1.0);
+        assert!((s.at(10) - 0.1).abs() < 1e-7);
+        assert!((s.at(25) - 0.01).abs() < 1e-8);
+        assert!((s.at(35) - 0.001).abs() < 1e-9);
+    }
+}

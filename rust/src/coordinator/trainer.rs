@@ -1,0 +1,157 @@
+//! The training coordinator: drives the AOT'd train/eval steps over the
+//! prefetching data pipeline, applies the LR schedule, evaluates
+//! periodically, checkpoints, and streams metrics.
+//!
+//! This is L3 of the stack: python never runs here — the `Artifact` holds
+//! the compiled step functions, and everything else (data, batching,
+//! scheduling, metrics, checkpoints) is rust.
+
+use super::schedule::Schedule;
+use crate::data::{loader, synthcifar, Loader, LoaderCfg};
+use crate::metrics::{MetricLog, StepRecord, Timer};
+use crate::runtime::{Artifact, TrainState};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: u64,
+    pub schedule: Schedule,
+    /// Evaluate every `eval_every` steps (and at the end). 0 = end only.
+    pub eval_every: u64,
+    /// Number of eval batches (of `manifest.eval_batch` examples).
+    pub eval_batches: usize,
+    /// Console log cadence; 0 = silent.
+    pub log_every: u64,
+    /// Optional checkpoint path (written at the end).
+    pub checkpoint: Option<PathBuf>,
+    /// Dataset size fed to the loader (epoch length).
+    pub dataset_size: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 200,
+            schedule: Schedule::WarmupCosine {
+                lr: 0.05,
+                warmup: 20,
+                total: 200,
+                final_frac: 0.05,
+            },
+            eval_every: 0,
+            eval_batches: 5,
+            log_every: 20,
+            checkpoint: None,
+            dataset_size: 4096,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    pub log: MetricLog,
+    pub final_eval_acc: f64,
+    pub final_eval_loss: f32,
+    pub state: TrainState,
+}
+
+/// Run the full training loop for one artifact.
+pub fn train(artifact: &Artifact, dir: &Path, cfg: &TrainCfg) -> Result<TrainOutcome> {
+    let mut state = artifact.init_state(dir)?;
+    train_from(artifact, &mut state, cfg).map(|(log, acc, loss)| TrainOutcome {
+        log,
+        final_eval_acc: acc,
+        final_eval_loss: loss,
+        state,
+    })
+}
+
+/// Train from an existing state (resume / warm start).
+pub fn train_from(
+    artifact: &Artifact,
+    state: &mut TrainState,
+    cfg: &TrainCfg,
+) -> Result<(MetricLog, f64, f32)> {
+    let m = &artifact.manifest;
+    let loader = Loader::new(LoaderCfg {
+        seed: synthcifar::TRAIN_SEED,
+        batch_size: m.train_batch,
+        prefetch: 4,
+        dataset_size: cfg.dataset_size,
+    });
+    let mut log = MetricLog::new();
+    for _ in 0..cfg.steps {
+        let step_timer = Timer::start();
+        let batch = loader.next();
+        let labels: Vec<i32> = batch.labels.iter().map(|&l| l as i32).collect();
+        let lr = cfg.schedule.at(state.step);
+        let stats = artifact
+            .train_step(state, &batch.images.data, &labels, lr)
+            .with_context(|| format!("train step {}", state.step))?;
+        log.push(StepRecord {
+            step: state.step,
+            loss: stats.loss,
+            acc: stats.acc,
+            lr,
+            seconds: step_timer.seconds(),
+        });
+        if cfg.log_every > 0 && state.step % cfg.log_every == 0 {
+            eprintln!(
+                "[{}] step {:>5}  loss {:.4}  acc {:.3}  lr {:.4}  ({:.0} ms/step)",
+                artifact.tag,
+                state.step,
+                log.recent_loss(cfg.log_every as usize),
+                log.recent_acc(cfg.log_every as usize),
+                lr,
+                log.recent_step_time(cfg.log_every as usize) * 1e3,
+            );
+        }
+        if cfg.eval_every > 0 && state.step % cfg.eval_every == 0 {
+            let (eloss, eacc) = evaluate(artifact, state, cfg.eval_batches)?;
+            log.push_eval(state.step, eloss, eacc);
+            if cfg.log_every > 0 {
+                eprintln!(
+                    "[{}] eval @ {:>5}: loss {:.4} acc {:.4}",
+                    artifact.tag, state.step, eloss, eacc
+                );
+            }
+        }
+    }
+    let (eloss, eacc) = evaluate(artifact, state, cfg.eval_batches)?;
+    log.push_eval(state.step, eloss, eacc);
+    if let Some(path) = &cfg.checkpoint {
+        let bytes = artifact.state_to_bytes(state)?;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing checkpoint {path:?}"))?;
+    }
+    Ok((log, eacc, eloss))
+}
+
+/// Evaluate on the held-out split: returns (mean loss, accuracy).
+pub fn evaluate(
+    artifact: &Artifact,
+    state: &TrainState,
+    num_batches: usize,
+) -> Result<(f32, f64)> {
+    let m = &artifact.manifest;
+    let batches = loader::eval_set(num_batches, m.eval_batch);
+    let mut total_correct = 0i64;
+    let mut total = 0usize;
+    let mut loss_sum = 0f64;
+    for (images, labels) in &batches {
+        let labels_i32: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        let (loss, correct) = artifact.eval_step(state, &images.data, &labels_i32)?;
+        loss_sum += loss as f64;
+        total_correct += correct as i64;
+        total += labels.len();
+    }
+    Ok((
+        (loss_sum / num_batches as f64) as f32,
+        total_correct as f64 / total as f64,
+    ))
+}

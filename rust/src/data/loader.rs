@@ -1,0 +1,196 @@
+//! Batched data pipeline with a background prefetch thread.
+//!
+//! The coordinator's training loop consumes batches from here; generation
+//! (procedural images) runs on a worker thread so the PJRT execute path is
+//! never stalled on data (L3 perf target: coordinator overhead < 10% of
+//! step time — see DESIGN.md §7).
+
+use super::synthcifar;
+use crate::nn::tensor::Tensor;
+use std::sync::mpsc;
+use std::thread;
+
+/// One training batch.
+pub struct Batch {
+    /// NCHW f32 images.
+    pub images: Tensor,
+    /// Labels, len = batch size.
+    pub labels: Vec<usize>,
+    /// Global step/batch index this batch was generated for.
+    pub index: u64,
+}
+
+/// Configuration for the loader.
+#[derive(Clone, Copy, Debug)]
+pub struct LoaderCfg {
+    pub seed: u64,
+    pub batch_size: usize,
+    /// How many batches to buffer ahead.
+    pub prefetch: usize,
+    /// Dataset size: indices are drawn modulo this (epoch wrap-around),
+    /// shuffled per epoch by an affine permutation.
+    pub dataset_size: u64,
+}
+
+impl Default for LoaderCfg {
+    fn default() -> Self {
+        LoaderCfg {
+            seed: synthcifar::TRAIN_SEED,
+            batch_size: 64,
+            prefetch: 4,
+            dataset_size: 50_000,
+        }
+    }
+}
+
+/// Streaming loader: spawns a generator thread, yields batches in order.
+pub struct Loader {
+    rx: mpsc::Receiver<Batch>,
+    _handle: thread::JoinHandle<()>,
+}
+
+/// Affine "shuffle": maps position `i` within an epoch to a dataset index
+/// via `(a*i + b) mod n` with `a` coprime to `n` — a cheap deterministic
+/// permutation that differs every epoch.
+fn permuted_index(epoch: u64, pos: u64, n: u64) -> u64 {
+    // Odd multiplier is coprime to any power-of-two-free n as long as
+    // gcd(a, n) == 1; pick from a fixed table of large primes.
+    const PRIMES: [u64; 8] = [
+        1_000_003, 1_000_033, 1_000_037, 1_000_039, 1_000_081, 1_000_099,
+        1_000_117, 1_000_121,
+    ];
+    let a = PRIMES[(epoch % 8) as usize] % n;
+    let a = if gcd(a, n) == 1 { a } else { 1 };
+    let b = epoch.wrapping_mul(0x9E3779B9) % n;
+    (a.wrapping_mul(pos) + b) % n
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Loader {
+    pub fn new(cfg: LoaderCfg) -> Loader {
+        let (tx, rx) = mpsc::sync_channel(cfg.prefetch);
+        let handle = thread::spawn(move || {
+            let per_epoch = cfg.dataset_size / cfg.batch_size as u64;
+            let mut batch_index = 0u64;
+            loop {
+                let epoch = batch_index / per_epoch.max(1);
+                let pos_in_epoch = batch_index % per_epoch.max(1);
+                let start = pos_in_epoch * cfg.batch_size as u64;
+                let mut data = Vec::with_capacity(
+                    cfg.batch_size * synthcifar::CHANNELS * synthcifar::IMAGE_HW * synthcifar::IMAGE_HW,
+                );
+                let mut labels = Vec::with_capacity(cfg.batch_size);
+                for b in 0..cfg.batch_size as u64 {
+                    let idx = permuted_index(epoch, start + b, cfg.dataset_size);
+                    let ex = synthcifar::generate(cfg.seed, idx);
+                    data.extend_from_slice(&ex.image);
+                    labels.push(ex.label);
+                }
+                let images = Tensor::from_vec(
+                    &[
+                        cfg.batch_size,
+                        synthcifar::CHANNELS,
+                        synthcifar::IMAGE_HW,
+                        synthcifar::IMAGE_HW,
+                    ],
+                    data,
+                );
+                let batch = Batch { images, labels, index: batch_index };
+                if tx.send(batch).is_err() {
+                    return; // consumer dropped
+                }
+                batch_index += 1;
+            }
+        });
+        Loader { rx, _handle: handle }
+    }
+
+    /// Next batch (blocks on the prefetch channel).
+    pub fn next(&self) -> Batch {
+        self.rx.recv().expect("loader thread died")
+    }
+}
+
+/// Fixed evaluation set, generated eagerly (no thread).
+pub fn eval_set(num_batches: usize, batch_size: usize) -> Vec<(Tensor, Vec<usize>)> {
+    (0..num_batches)
+        .map(|b| {
+            synthcifar::generate_batch(
+                synthcifar::TEST_SEED,
+                (b * batch_size) as u64,
+                batch_size,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loader_yields_correct_shapes() {
+        let loader = Loader::new(LoaderCfg {
+            batch_size: 8,
+            prefetch: 2,
+            dataset_size: 64,
+            ..Default::default()
+        });
+        let b = loader.next();
+        assert_eq!(b.images.dims, vec![8, 3, 32, 32]);
+        assert_eq!(b.labels.len(), 8);
+        assert_eq!(b.index, 0);
+        let b2 = loader.next();
+        assert_eq!(b2.index, 1);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        // dataset of exactly one batch: epoch 0 and epoch 1 see the same
+        // examples but (generally) in a different order / offset.
+        let loader = Loader::new(LoaderCfg {
+            batch_size: 16,
+            prefetch: 2,
+            dataset_size: 16,
+            ..Default::default()
+        });
+        let e0 = loader.next();
+        let e1 = loader.next();
+        let mut s0 = e0.labels.clone();
+        let mut s1 = e1.labels.clone();
+        assert_ne!(e0.labels, e1.labels, "expected epoch reshuffle");
+        s0.sort();
+        s1.sort();
+        assert_eq!(s0, s1, "same multiset across epochs");
+    }
+
+    #[test]
+    fn permutation_is_bijective() {
+        let n = 1000u64;
+        for epoch in 0..3 {
+            let mut seen = vec![false; n as usize];
+            for pos in 0..n {
+                let idx = permuted_index(epoch, pos, n) as usize;
+                assert!(!seen[idx], "collision at epoch {epoch} pos {pos}");
+                seen[idx] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn eval_set_deterministic() {
+        let a = eval_set(2, 4);
+        let b = eval_set(2, 4);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].0.data, b[0].0.data);
+        assert_eq!(a[1].1, b[1].1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Data substrate: the synthetic CIFAR-10 substitute and the prefetching
+//! batch loader feeding the training coordinator.
+
+pub mod loader;
+pub mod synthcifar;
+
+pub use loader::{Batch, Loader, LoaderCfg};

@@ -1,0 +1,26 @@
+//! winoq: quantized Winograd/Toom-Cook convolution for DNNs beyond the
+//! canonical polynomial base — a three-layer reproduction of Barabasz 2020.
+//!
+//! * [`wino`] — exact Toom-Cook/Winograd construction, polynomial bases,
+//!   floating-point pipelines, error analysis (the math substrate).
+//! * [`quant`] — symmetric quantization and the staged quantized-Winograd
+//!   pipeline of the paper's Fig. 2 (fake-quant + true-integer paths).
+//! * [`nn`] — pure-rust NCHW inference: layers, Winograd conv layer,
+//!   ResNet18 (the serving path).
+//! * [`data`] — synthetic CIFAR substitute + prefetching loader.
+//! * [`runtime`] — PJRT client running the AOT'd JAX/Pallas artifacts.
+//! * [`coordinator`] — the training loop, schedules and experiments.
+//! * [`config`], [`cli`], [`metrics`], [`testkit`], [`benchkit`] —
+//!   infrastructure (no serde/clap/criterion in the vendored set).
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod testkit;
+pub mod wino;

@@ -1,0 +1,265 @@
+//! winoq CLI — the L3 leader entrypoint.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use winoq::cli::{Args, HELP};
+use winoq::config::{Config, RunConfig};
+use winoq::coordinator::experiments::{self, table_train_cfg};
+use winoq::coordinator::schedule::Schedule;
+use winoq::coordinator::trainer::{self, TrainCfg};
+use winoq::quant::{QWino, QuantConfig};
+use winoq::runtime::{self, Artifact};
+use winoq::wino::basis::{Base, BaseChange};
+use winoq::wino::error as werror;
+use winoq::wino::toomcook::WinogradPlan;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{HELP}");
+        return;
+    }
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "tables" => cmd_tables(&args),
+        "list" => cmd_list(&args),
+        "gen-matrices" => cmd_gen_matrices(&args),
+        "error-analysis" => cmd_error_analysis(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.flag("--artifacts-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(runtime::artifacts_dir)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (tag, dir, cfg, metrics_csv) = if let Some(path) = args.flag("--config") {
+        let file = Config::load(Path::new(path))?;
+        let run = RunConfig::from_config(&file)?;
+        (run.tag, run.artifacts_dir, run.train, run.metrics_csv)
+    } else {
+        let tag = args
+            .flag("--artifact")
+            .context("--artifact <tag> (or --config FILE) is required")?
+            .to_string();
+        let steps = args.flag_u64("--steps", 200)?;
+        let cfg = TrainCfg {
+            steps,
+            schedule: Schedule::WarmupCosine {
+                lr: args.flag_f32("--lr", 0.05)?,
+                warmup: steps / 10,
+                total: steps,
+                final_frac: 0.05,
+            },
+            eval_every: args.flag_u64("--eval-every", 0)?,
+            eval_batches: args.flag_u64("--eval-batches", 5)? as usize,
+            log_every: 20,
+            checkpoint: args.flag("--checkpoint").map(PathBuf::from),
+            dataset_size: args.flag_u64("--dataset-size", 4096)?,
+        };
+        (
+            tag,
+            artifacts_dir(args),
+            cfg,
+            args.flag("--metrics-csv").map(PathBuf::from),
+        )
+    };
+    eprintln!("loading artifact {tag} from {dir:?} (compiling HLO)…");
+    let artifact = Artifact::load(&dir, &tag)?;
+    let outcome = trainer::train(&artifact, &dir, &cfg)?;
+    if let Some(csv) = metrics_csv {
+        outcome.log.write_csv(&csv)?;
+        eprintln!("metrics written to {csv:?}");
+    }
+    println!(
+        "{tag}: final eval accuracy {:.2}% (loss {:.4}) after {} steps",
+        outcome.final_eval_acc * 100.0,
+        outcome.final_eval_loss,
+        cfg.steps
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let tag = args.flag("--artifact").context("--artifact <tag> required")?;
+    let dir = artifacts_dir(args);
+    let artifact = Artifact::load(&dir, tag)?;
+    let state = match args.flag("--checkpoint") {
+        Some(path) => {
+            let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+            artifact.state_from_bytes(&bytes)?
+        }
+        None => artifact.init_state(&dir)?,
+    };
+    let batches = args.flag_u64("--eval-batches", 5)? as usize;
+    let (loss, acc) = trainer::evaluate(&artifact, &state, batches)?;
+    println!("{tag}: eval accuracy {:.2}% (loss {loss:.4})", acc * 100.0);
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let steps = args.flag_u64("--table-steps", 150)?;
+    let cfg = table_train_cfg(steps);
+    let tables: [(&str, Vec<_>, Option<Vec<_>>); 2] = [
+        (
+            "Table 1: ResNet18 x0.5, Winograd F4 (synthetic CIFAR substitute)",
+            experiments::table1(),
+            Some(experiments::paper_table1()),
+        ),
+        (
+            "Table 2: width 0.25 / 0.5, 8-bit",
+            experiments::table2(),
+            None,
+        ),
+    ];
+    for (title, table, paper) in tables {
+        let mut rows = Vec::new();
+        for (row_label, cells) in &table {
+            let mut out_cells = Vec::new();
+            for cell in cells {
+                eprintln!("training {} ({} steps)…", cell.tag, steps);
+                let acc = experiments::run_cell(&dir, cell.tag, &cfg)?;
+                out_cells.push((cell.column.to_string(), acc));
+            }
+            rows.push((*row_label, out_cells));
+        }
+        print!(
+            "{}",
+            experiments::render_table(title, &rows, paper.as_deref())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let tags = runtime::list_artifacts(&dir)?;
+    if tags.is_empty() {
+        bail!("no artifacts in {dir:?} — run `make artifacts` first");
+    }
+    for t in tags {
+        println!("{t}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_matrices(args: &Args) -> Result<()> {
+    let m = args.flag_u64("--m", 4)? as usize;
+    let r = args.flag_u64("--r", 3)? as usize;
+    let base_name = args.flag_or("--base", "legendre");
+    let base = Base::from_name(base_name)
+        .with_context(|| format!("unknown base {base_name:?}"))?;
+    let plan = WinogradPlan::new(m, r);
+    println!("F({m}x{m}, {r}x{r}), N = {}", plan.n);
+    println!(
+        "general mults/output (2-D): {:.4}  (direct: {})",
+        plan.mults_per_output_2d(),
+        r * r
+    );
+    println!("\nA (N x m):\n{:?}", plan.a);
+    println!("G (N x r):\n{:?}", plan.g);
+    println!("Bᵀ (N x N):\n{:?}", plan.bt);
+    let bc = BaseChange::new(base, plan.n);
+    println!("base = {}:\nPᵀ:\n{:?}", base.name(), bc.p.transpose());
+    println!("P⁻ᵀ:\n{:?}", bc.p_inv.transpose());
+    println!(
+        "P non-zeros: {} (off-diagonal: {})",
+        bc.p.nnz(),
+        bc.nnz_offdiag()
+    );
+    Ok(())
+}
+
+fn cmd_error_analysis(args: &Args) -> Result<()> {
+    let trials = args.flag_u64("--trials", 300)? as usize;
+    let bits = args.flag_u64("--bits", 8)? as u32;
+    println!("fp32 pipeline error vs f64 direct oracle ({trials} trials):");
+    println!(
+        "{:>7} {:>12} {:>12} {:>12}",
+        "tile", "canonical", "legendre", "chebyshev"
+    );
+    for m in [2usize, 4, 6] {
+        let mut row = format!("{:>7}", format!("F({m},3)"));
+        for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+            let e = werror::measure_tile_error(m, 3, base, trials, 42);
+            row += &format!(" {:>12.3e}", e.mean_rel_l2);
+        }
+        println!("{row}");
+    }
+    println!("\n{bits}-bit quantized pipeline (matrices quantized, Fig. 2 casts):");
+    println!(
+        "{:>7} {:>12} {:>12} {:>12}",
+        "tile", "canonical", "legendre", "chebyshev"
+    );
+    for m in [2usize, 4, 6] {
+        let mut row = format!("{:>7}", format!("F({m},3)"));
+        for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+            let q = QWino::new_quantized_mats(m, 3, base, QuantConfig::uniform(bits), bits);
+            row += &format!(" {:>12.4}", q.measure_error(trials, 42));
+        }
+        println!("{row}");
+    }
+    println!("\ncondition numbers κ₂ of the transforms (canonical → legendre):");
+    for m in [2usize, 4, 6] {
+        let c = werror::condition_numbers(m, 3, Base::Canonical);
+        let l = werror::condition_numbers(m, 3, Base::Legendre);
+        println!(
+            "F({m},3): Bᵀ {:9.2} → {:9.2} | G {:7.2} → {:7.2} | A {:7.2} → {:7.2}",
+            c.kappa_bt, l.kappa_bt, c.kappa_g, l.kappa_g, c.kappa_a, l.kappa_a
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_demo(_args: &Args) -> Result<()> {
+    use winoq::data::synthcifar;
+    use winoq::nn::{ConvMode, ResNet18, ResNetCfg};
+    // Pure-rust int8 winograd inference on the synthetic eval split.
+    let cfg = ResNetCfg {
+        width_mult: 0.25,
+        num_classes: 10,
+        mode: ConvMode::Winograd {
+            m: 4,
+            base: Base::Legendre,
+            quant: Some(QuantConfig::w8()),
+        },
+    };
+    let mut net = ResNet18::init(cfg, 7);
+    let (calib, _) = synthcifar::generate_batch(synthcifar::TRAIN_SEED, 0, 8);
+    net.calibrate_quant(&calib);
+    let (images, labels) = synthcifar::generate_batch(synthcifar::TEST_SEED, 0, 16);
+    let t = std::time::Instant::now();
+    let acc = net.accuracy(&images, &labels);
+    println!(
+        "int8 L-winograd ResNet18x0.25 (untrained weights): {} images in {:.1} ms, accuracy {:.1}% (chance 10%)",
+        labels.len(),
+        t.elapsed().as_secs_f64() * 1e3,
+        acc * 100.0
+    );
+    println!("(train a checkpoint via `winoq train --checkpoint …`, then `winoq eval`)");
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Metric stream: step records, moving averages, CSV export and console
+//! reporting for the training coordinator and the bench harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// One recorded training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+    /// Wall-clock seconds for this step (compute + coordinator overhead).
+    pub seconds: f64,
+}
+
+/// Accumulates step records; computes summaries; writes CSV.
+#[derive(Default)]
+pub struct MetricLog {
+    pub records: Vec<StepRecord>,
+    pub evals: Vec<(u64, f32, f64)>, // (step, eval loss, eval accuracy)
+}
+
+impl MetricLog {
+    pub fn new() -> MetricLog {
+        MetricLog::default()
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn push_eval(&mut self, step: u64, loss: f32, accuracy: f64) {
+        self.evals.push((step, loss, accuracy));
+    }
+
+    /// Mean training loss over the last `n` steps.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Mean training accuracy over the last `n` steps.
+    pub fn recent_acc(&self, n: usize) -> f32 {
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|r| r.acc).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Mean seconds/step over the last `n` steps.
+    pub fn recent_step_time(&self, n: usize) -> f64 {
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|r| r.seconds).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Best (max) eval accuracy seen.
+    pub fn best_eval_acc(&self) -> Option<f64> {
+        self.evals
+            .iter()
+            .map(|&(_, _, a)| a)
+            .max_by(|x, y| x.partial_cmp(y).unwrap())
+    }
+
+    /// Final eval accuracy.
+    pub fn last_eval_acc(&self) -> Option<f64> {
+        self.evals.last().map(|&(_, _, a)| a)
+    }
+
+    /// CSV: step,loss,acc,lr,seconds plus eval rows.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("kind,step,loss,acc,lr,seconds\n");
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "train,{},{:.6},{:.4},{:.6},{:.4}",
+                r.step, r.loss, r.acc, r.lr, r.seconds
+            );
+        }
+        for &(step, loss, acc) in &self.evals {
+            let _ = writeln!(s, "eval,{step},{loss:.6},{acc:.4},,");
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32) -> StepRecord {
+        StepRecord { step, loss, acc: 0.5, lr: 0.1, seconds: 0.01 }
+    }
+
+    #[test]
+    fn recent_loss_windows() {
+        let mut log = MetricLog::new();
+        for i in 0..10 {
+            log.push(rec(i, i as f32));
+        }
+        assert!((log.recent_loss(2) - 8.5).abs() < 1e-6);
+        assert!((log.recent_loss(100) - 4.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_log_is_nan() {
+        let log = MetricLog::new();
+        assert!(log.recent_loss(5).is_nan());
+        assert!(log.best_eval_acc().is_none());
+    }
+
+    #[test]
+    fn eval_tracking() {
+        let mut log = MetricLog::new();
+        log.push_eval(10, 1.0, 0.4);
+        log.push_eval(20, 0.8, 0.7);
+        log.push_eval(30, 0.9, 0.6);
+        assert_eq!(log.best_eval_acc(), Some(0.7));
+        assert_eq!(log.last_eval_acc(), Some(0.6));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut log = MetricLog::new();
+        log.push(rec(1, 2.0));
+        log.push_eval(1, 1.5, 0.3);
+        let csv = log.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("kind,step"));
+        assert!(lines[1].starts_with("train,1,"));
+        assert!(lines[2].starts_with("eval,1,"));
+    }
+
+    #[test]
+    fn timer_runs() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.seconds() >= 0.004);
+    }
+}

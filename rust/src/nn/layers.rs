@@ -1,0 +1,244 @@
+//! Inference-path NN layers (pure rust, NCHW): direct conv2d, batch norm,
+//! ReLU, linear, pooling. These are the building blocks of the rust-side
+//! ResNet18 (`nn::resnet`) used by the serving example and the direct-conv
+//! baseline of the throughput bench.
+
+use super::tensor::Tensor;
+
+/// 2-D convolution (correlation) parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dCfg {
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Default for Conv2dCfg {
+    fn default() -> Self {
+        Conv2dCfg { stride: 1, padding: 0 }
+    }
+}
+
+/// Direct conv2d: `x` [N,C,H,W], `w` [K,C,R,S] → [N,K,H',W'] with
+/// `H' = (H + 2p − R)/stride + 1`.
+pub fn conv2d(x: &Tensor, w: &Tensor, bias: Option<&[f32]>, cfg: Conv2dCfg) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c, h, wd) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (k, wc, r, s) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+    assert_eq!(c, wc, "channel mismatch");
+    let oh = (h + 2 * cfg.padding - r) / cfg.stride + 1;
+    let ow = (wd + 2 * cfg.padding - s) / cfg.stride + 1;
+    let mut y = Tensor::zeros(&[n, k, oh, ow]);
+    for ni in 0..n {
+        for ki in 0..k {
+            let b = bias.map_or(0.0, |bs| bs[ki]);
+            for oi in 0..oh {
+                for oj in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..c {
+                        for ri in 0..r {
+                            let ih = (oi * cfg.stride + ri) as isize - cfg.padding as isize;
+                            if ih < 0 || ih >= h as isize {
+                                continue;
+                            }
+                            for si in 0..s {
+                                let iw = (oj * cfg.stride + si) as isize - cfg.padding as isize;
+                                if iw < 0 || iw >= wd as isize {
+                                    continue;
+                                }
+                                acc += x.at4(ni, ci, ih as usize, iw as usize)
+                                    * w.at4(ki, ci, ri, si);
+                            }
+                        }
+                    }
+                    *y.at4_mut(ni, ki, oi, oj) = acc + b;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Inference-time batch norm: `y = gamma * (x − mean)/sqrt(var + eps) + beta`
+/// per channel.
+pub fn batchnorm(x: &Tensor, gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32], eps: f32) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let c = x.dims[1];
+    assert!(gamma.len() == c && beta.len() == c && mean.len() == c && var.len() == c);
+    let mut y = x.clone();
+    let (n, _, h, w) = (x.dims[0], c, x.dims[2], x.dims[3]);
+    for ci in 0..c {
+        let inv = 1.0 / (var[ci] + eps).sqrt();
+        let g = gamma[ci] * inv;
+        let b = beta[ci] - mean[ci] * g;
+        for ni in 0..n {
+            for hi in 0..h {
+                for wi in 0..w {
+                    let v = y.at4(ni, ci, hi, wi);
+                    *y.at4_mut(ni, ci, hi, wi) = v * g + b;
+                }
+            }
+        }
+    }
+    y
+}
+
+pub fn relu(x: &Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+/// Global average pool: [N,C,H,W] → [N,C].
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (n, c, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let mut y = Tensor::zeros(&[n, c]);
+    let denom = (h * w) as f32;
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut acc = 0.0;
+            for hi in 0..h {
+                for wi in 0..w {
+                    acc += x.at4(ni, ci, hi, wi);
+                }
+            }
+            y.data[ni * c + ci] = acc / denom;
+        }
+    }
+    y
+}
+
+/// Fully connected: `x` [N,F] × `w` [F,O] + b[O] → [N,O].
+pub fn linear(x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    assert_eq!(w.rank(), 2);
+    let (n, f) = (x.dims[0], x.dims[1]);
+    let (wf, o) = (w.dims[0], w.dims[1]);
+    assert_eq!(f, wf);
+    assert_eq!(bias.len(), o);
+    let mut y = Tensor::zeros(&[n, o]);
+    for ni in 0..n {
+        for oi in 0..o {
+            let mut acc = bias[oi];
+            for fi in 0..f {
+                acc += x.at2(ni, fi) * w.at2(fi, oi);
+            }
+            y.data[ni * o + oi] = acc;
+        }
+    }
+    y
+}
+
+/// Zero-pad the spatial dims of an NCHW tensor.
+pub fn pad_hw(x: &Tensor, pad: usize) -> Tensor {
+    if pad == 0 {
+        return x.clone();
+    }
+    let (n, c, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let mut y = Tensor::zeros(&[n, c, h + 2 * pad, w + 2 * pad]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for hi in 0..h {
+                for wi in 0..w {
+                    *y.at4_mut(ni, ci, hi + pad, wi + pad) = x.at4(ni, ci, hi, wi);
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_identity_1x1() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, None, Conv2dCfg::default());
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv2d_3x3_known() {
+        // All-ones 3×3 kernel over a 3×3 input of 1..9 sums everything = 45.
+        let x = Tensor::from_vec(&[1, 1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let y = conv2d(&x, &w, None, Conv2dCfg::default());
+        assert_eq!(y.dims, vec![1, 1, 1, 1]);
+        assert_eq!(y.data, vec![45.0]);
+    }
+
+    #[test]
+    fn conv2d_padding_same() {
+        let x = Tensor::from_vec(&[1, 1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        let y = conv2d(&x, &w, None, Conv2dCfg { stride: 1, padding: 1 });
+        // Center-tap kernel with same-padding reproduces the input.
+        assert_eq!(y.dims, vec![1, 1, 3, 3]);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv2d_stride() {
+        let x = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, None, Conv2dCfg { stride: 2, padding: 0 });
+        assert_eq!(y.dims, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn conv2d_multichannel_accumulates() {
+        let x = Tensor::from_vec(&[1, 2, 1, 1], vec![3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 2, 1, 1], vec![10.0, 100.0]);
+        let y = conv2d(&x, &w, None, Conv2dCfg::default());
+        assert_eq!(y.data, vec![430.0]);
+    }
+
+    #[test]
+    fn conv2d_bias() {
+        let x = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let w = Tensor::from_vec(&[2, 1, 1, 1], vec![2.0, 3.0]);
+        let y = conv2d(&x, &w, Some(&[10.0, 20.0]), Conv2dCfg::default());
+        assert_eq!(y.data, vec![12.0, 23.0]);
+    }
+
+    #[test]
+    fn batchnorm_normalises() {
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![4.0, 6.0]);
+        let y = batchnorm(&x, &[1.0], &[0.0], &[5.0], &[1.0], 0.0);
+        assert_eq!(y.data, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
+        assert_eq!(relu(&x).data, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = Tensor::from_vec(&[1, 2, 1, 2], vec![1.0, 3.0, 10.0, 30.0]);
+        let y = global_avg_pool(&x);
+        assert_eq!(y.dims, vec![1, 2]);
+        assert_eq!(y.data, vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn linear_known() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = linear(&x, &w, &[0.5, -0.5]);
+        assert_eq!(y.data, vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn pad_hw_zero_border() {
+        let x = Tensor::from_vec(&[1, 1, 1, 1], vec![5.0]);
+        let y = pad_hw(&x, 1);
+        assert_eq!(y.dims, vec![1, 1, 3, 3]);
+        assert_eq!(y.at4(0, 0, 1, 1), 5.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Pure-rust NN inference substrate: NCHW tensors, direct layers, the
+//! Winograd conv layer (all bases + Fig. 2 quantization), and the ResNet18
+//! serving model.
+
+pub mod layers;
+pub mod resnet;
+pub mod tensor;
+pub mod winolayer;
+
+pub use resnet::{ConvMode, Params, ResNet18, ResNetCfg};
+pub use tensor::Tensor;

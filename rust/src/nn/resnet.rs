@@ -1,0 +1,328 @@
+//! ResNet18 (CIFAR variant, width-multiplier) — pure-rust inference path.
+//!
+//! Mirrors the JAX training model in `python/compile/resnet.py`: a 3×3 stem
+//! into four stages of two basic blocks with channel widths
+//! `[64, 128, 256, 512] × width_mult`, stride 2 between stages, global
+//! average pool and a linear head. Every stride-1 3×3 convolution can run
+//! either direct or through the (optionally quantized) Winograd layer —
+//! exactly the substitution the paper's winograd-aware training makes.
+//!
+//! Parameters are loaded from the checkpoint format written by
+//! `runtime::params` (the rust trainer) so a trained network can be served
+//! without python.
+
+use super::layers::{batchnorm, conv2d, global_avg_pool, linear, relu, Conv2dCfg};
+use super::tensor::Tensor;
+use super::winolayer::WinoConv2d;
+use crate::quant::scheme::QuantConfig;
+use crate::wino::basis::Base;
+use std::collections::HashMap;
+
+/// How to execute the stride-1 3×3 convolutions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ConvMode {
+    /// Plain direct convolution (the paper's baseline column).
+    Direct,
+    /// Winograd F(m×m, 3×3) in `base`, optionally quantized.
+    Winograd { m: usize, base: Base, quant: Option<QuantConfig> },
+}
+
+/// Model hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ResNetCfg {
+    pub width_mult: f32,
+    pub num_classes: usize,
+    pub mode: ConvMode,
+}
+
+impl ResNetCfg {
+    pub fn widths(&self) -> [usize; 4] {
+        let w = |c: usize| ((c as f32 * self.width_mult).round() as usize).max(4);
+        [w(64), w(128), w(256), w(512)]
+    }
+}
+
+/// Named parameter collection (flat f32 tensors).
+pub type Params = HashMap<String, Tensor>;
+
+/// A conv+bn unit's parameter names.
+fn conv_bn_names(prefix: &str) -> (String, String, String, String, String) {
+    (
+        format!("{prefix}.w"),
+        format!("{prefix}.bn.gamma"),
+        format!("{prefix}.bn.beta"),
+        format!("{prefix}.bn.mean"),
+        format!("{prefix}.bn.var"),
+    )
+}
+
+pub struct ResNet18 {
+    pub cfg: ResNetCfg,
+    pub params: Params,
+    /// Pre-built Winograd layers keyed by conv prefix (built lazily from
+    /// params at construction when mode is Winograd).
+    wino: HashMap<String, WinoConv2d>,
+}
+
+impl ResNet18 {
+    /// All conv-unit prefixes of the architecture, with (stride, in, out).
+    pub fn conv_units(cfg: &ResNetCfg) -> Vec<(String, usize, usize, usize)> {
+        let w = cfg.widths();
+        let mut units = vec![("stem".to_string(), 1, 3, w[0])];
+        let mut cin = w[0];
+        for (si, &cout) in w.iter().enumerate() {
+            for bi in 0..2usize {
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                units.push((format!("s{si}b{bi}.conv1"), stride, cin, cout));
+                units.push((format!("s{si}b{bi}.conv2"), 1, cout, cout));
+                if stride != 1 || cin != cout {
+                    units.push((format!("s{si}b{bi}.down"), stride, cin, cout));
+                }
+                cin = cout;
+            }
+        }
+        units
+    }
+
+    /// Initialise with He-style pseudo-random params (for tests / untrained
+    /// serving demos).
+    pub fn init(cfg: ResNetCfg, seed: u64) -> ResNet18 {
+        use crate::wino::error::Prng;
+        let mut rng = Prng::new(seed);
+        let mut params: Params = HashMap::new();
+        for (prefix, _stride, cin, cout) in Self::conv_units(&cfg) {
+            let ksize = if prefix.ends_with("down") { 1 } else { 3 };
+            let fan_in = (cin * ksize * ksize) as f64;
+            let std = (2.0 / fan_in).sqrt();
+            let n = cout * cin * ksize * ksize;
+            let w = Tensor::from_vec(
+                &[cout, cin, ksize, ksize],
+                (0..n).map(|_| (rng.uniform(std) * 1.73) as f32).collect(),
+            );
+            let (wn, g, b, m, v) = conv_bn_names(&prefix);
+            params.insert(wn, w);
+            params.insert(g, Tensor::from_vec(&[cout], vec![1.0; cout]));
+            params.insert(b, Tensor::from_vec(&[cout], vec![0.0; cout]));
+            params.insert(m, Tensor::from_vec(&[cout], vec![0.0; cout]));
+            params.insert(v, Tensor::from_vec(&[cout], vec![1.0; cout]));
+        }
+        let w3 = cfg.widths()[3];
+        let std = (2.0 / w3 as f64).sqrt();
+        params.insert(
+            "fc.w".into(),
+            Tensor::from_vec(
+                &[w3, cfg.num_classes],
+                (0..w3 * cfg.num_classes)
+                    .map(|_| (rng.uniform(std)) as f32)
+                    .collect(),
+            ),
+        );
+        params.insert(
+            "fc.b".into(),
+            Tensor::from_vec(&[cfg.num_classes], vec![0.0; cfg.num_classes]),
+        );
+        Self::from_params(cfg, params)
+    }
+
+    /// Build from a parameter collection (e.g. a loaded checkpoint).
+    pub fn from_params(cfg: ResNetCfg, params: Params) -> ResNet18 {
+        let mut wino = HashMap::new();
+        if let ConvMode::Winograd { m, base, .. } = cfg.mode {
+            for (prefix, stride, _cin, _cout) in Self::conv_units(&cfg) {
+                if stride != 1 || prefix.ends_with("down") {
+                    continue; // strided/1×1 convs stay direct (as in ref [5])
+                }
+                let w = params
+                    .get(&format!("{prefix}.w"))
+                    .unwrap_or_else(|| panic!("missing weights for {prefix}"));
+                wino.insert(prefix.clone(), WinoConv2d::new(m, w, base));
+            }
+        }
+        ResNet18 { cfg, params, wino }
+    }
+
+    /// Calibrate the quantized Winograd layers on a representative batch.
+    pub fn calibrate_quant(&mut self, batch: &Tensor) {
+        if let ConvMode::Winograd { quant: Some(qcfg), .. } = self.cfg.mode {
+            // Run the network stem-to-tail, calibrating each wino layer on
+            // its actual input activations.
+            let keys: Vec<String> = self.wino.keys().cloned().collect();
+            let _ = keys;
+            let mut captured: HashMap<String, Tensor> = HashMap::new();
+            self.forward_impl(batch, Some(&mut captured));
+            for (prefix, layer) in self.wino.iter_mut() {
+                if let Some(input) = captured.get(prefix) {
+                    layer.quantize(qcfg, input, 1);
+                }
+            }
+        }
+    }
+
+    fn conv_unit(
+        &self,
+        x: &Tensor,
+        prefix: &str,
+        stride: usize,
+        capture: &mut Option<&mut HashMap<String, Tensor>>,
+    ) -> Tensor {
+        let (wn, g, b, m, v) = conv_bn_names(prefix);
+        let w = &self.params[&wn];
+        let pad = if w.dims[2] == 3 { 1 } else { 0 };
+        if let Some(cap) = capture.as_deref_mut() {
+            if self.wino.contains_key(prefix) {
+                cap.insert(prefix.to_string(), x.clone());
+            }
+        }
+        let y = match (&self.cfg.mode, self.wino.get(prefix)) {
+            (ConvMode::Winograd { .. }, Some(layer)) if stride == 1 => {
+                layer.forward(x, Conv2dCfg { stride: 1, padding: pad })
+            }
+            _ => conv2d(x, w, None, Conv2dCfg { stride, padding: pad }),
+        };
+        batchnorm(
+            &y,
+            &self.params[&g].data,
+            &self.params[&b].data,
+            &self.params[&m].data,
+            &self.params[&v].data,
+            1e-5,
+        )
+    }
+
+    fn forward_impl(
+        &self,
+        x: &Tensor,
+        mut capture: Option<&mut HashMap<String, Tensor>>,
+    ) -> Tensor {
+        let mut h = relu(&self.conv_unit(x, "stem", 1, &mut capture));
+        let widths = self.cfg.widths();
+        let mut cin = widths[0];
+        for (si, &cout) in widths.iter().enumerate() {
+            for bi in 0..2usize {
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                let prefix = format!("s{si}b{bi}");
+                let y1 = relu(&self.conv_unit(&h, &format!("{prefix}.conv1"), stride, &mut capture));
+                let y2 = self.conv_unit(&y1, &format!("{prefix}.conv2"), 1, &mut capture);
+                let shortcut = if stride != 1 || cin != cout {
+                    self.conv_unit(&h, &format!("{prefix}.down"), stride, &mut capture)
+                } else {
+                    h.clone()
+                };
+                h = relu(&y2.add(&shortcut));
+                cin = cout;
+            }
+        }
+        let pooled = global_avg_pool(&h);
+        linear(&pooled, &self.params["fc.w"], &self.params["fc.b"].data)
+    }
+
+    /// Forward pass: `x` [N,3,H,W] → logits [N, num_classes].
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_impl(x, None)
+    }
+
+    /// Top-1 accuracy on a labelled batch.
+    pub fn accuracy(&self, x: &Tensor, labels: &[usize]) -> f64 {
+        let logits = self.forward(x);
+        let preds = logits.argmax_rows();
+        let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        correct as f64 / labels.len() as f64
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wino::error::Prng;
+
+    fn small_cfg(mode: ConvMode) -> ResNetCfg {
+        ResNetCfg { width_mult: 0.25, num_classes: 10, mode }
+    }
+
+    fn rand_images(seed: u64, n: usize, hw: usize) -> Tensor {
+        let mut rng = Prng::new(seed);
+        let len = n * 3 * hw * hw;
+        Tensor::from_vec(
+            &[n, 3, hw, hw],
+            (0..len).map(|_| rng.uniform(1.0) as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn forward_shape() {
+        let net = ResNet18::init(small_cfg(ConvMode::Direct), 1);
+        let x = rand_images(2, 2, 32);
+        let y = net.forward(&x);
+        assert_eq!(y.dims, vec![2, 10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn winograd_mode_matches_direct_unquantized() {
+        // Float Winograd is algebraically a re-ordering — logits must agree
+        // with direct conv to f32 tolerance.
+        let direct = ResNet18::init(small_cfg(ConvMode::Direct), 7);
+        let wino = ResNet18::from_params(
+            small_cfg(ConvMode::Winograd { m: 4, base: Base::Legendre, quant: None }),
+            direct.params.clone(),
+        );
+        let x = rand_images(3, 1, 32);
+        let yd = direct.forward(&x);
+        let yw = wino.forward(&x);
+        for (a, b) in yd.data.iter().zip(&yw.data) {
+            assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn param_count_scales_with_width() {
+        let small = ResNet18::init(small_cfg(ConvMode::Direct), 1);
+        let big = ResNet18::init(
+            ResNetCfg { width_mult: 0.5, num_classes: 10, mode: ConvMode::Direct },
+            1,
+        );
+        assert!(big.param_count() > 3 * small.param_count());
+    }
+
+    #[test]
+    fn conv_units_structure() {
+        let units = ResNet18::conv_units(&small_cfg(ConvMode::Direct));
+        // stem + 4 stages × 2 blocks × 2 convs + 3 downsamples = 20.
+        assert_eq!(units.len(), 20);
+        let downs: Vec<_> = units.iter().filter(|u| u.0.ends_with("down")).collect();
+        assert_eq!(downs.len(), 3);
+    }
+
+    #[test]
+    fn accuracy_on_random_labels_near_chance() {
+        let net = ResNet18::init(small_cfg(ConvMode::Direct), 5);
+        let x = rand_images(11, 16, 32);
+        let labels: Vec<usize> = (0..16).map(|i| i % 10).collect();
+        let acc = net.accuracy(&x, &labels);
+        assert!(acc <= 0.6, "untrained net should be near chance, got {acc}");
+    }
+
+    #[test]
+    fn quantized_winograd_runs_and_differs() {
+        let direct = ResNet18::init(small_cfg(ConvMode::Direct), 9);
+        let mut qnet = ResNet18::from_params(
+            small_cfg(ConvMode::Winograd {
+                m: 4,
+                base: Base::Legendre,
+                quant: Some(QuantConfig::w8()),
+            }),
+            direct.params.clone(),
+        );
+        let x = rand_images(13, 2, 32);
+        qnet.calibrate_quant(&x);
+        let yq = qnet.forward(&x);
+        let yd = direct.forward(&x);
+        assert_eq!(yq.dims, yd.dims);
+        assert!(yq.data.iter().all(|v| v.is_finite()));
+        assert!(yq.data != yd.data, "quantization must perturb logits");
+    }
+}

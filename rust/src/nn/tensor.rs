@@ -1,0 +1,156 @@
+//! Minimal NCHW f32 tensor for the pure-rust inference path.
+//!
+//! The rust serving pipeline (`nn::resnet` + `quant::qwino`) needs only
+//! dense 4-D/2-D/1-D tensors with a handful of ops; this keeps it
+//! dependency-free (no ndarray in the vendored set).
+
+/// Dense f32 tensor, row-major over its dims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "dims/data mismatch");
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// NCHW indexing for rank-4 tensors.
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (_, cc, hh, ww) = (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, c: usize, h: usize, w: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (_, cc, hh, ww) = (self.dims[0], self.dims[1], self.dims[2], self.dims[3]);
+        &mut self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    /// 2-D indexing.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    pub fn reshape(mut self, dims: &[usize]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims.to_vec();
+        self
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            dims: self.dims.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    /// Elementwise add (shapes must match).
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.dims, rhs.dims);
+        Tensor {
+            dims: self.dims.clone(),
+            data: self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    /// argmax over the last axis for each row of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let cols = self.dims[1];
+        self.data
+            .chunks(cols)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_len() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.len(), 120);
+        assert_eq!(t.rank(), 4);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn at4_layout_is_nchw() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 4]);
+        *t.at4_mut(1, 2, 3, 3) = 7.0;
+        // flat index = ((1*3+2)*4+3)*4+3 = 95
+        assert_eq!(t.data[95], 7.0);
+        assert_eq!(t.at4(1, 2, 3, 3), 7.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data, t.data);
+        assert_eq!(r.dims, vec![3, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_wrong_size_panics() {
+        let _ = Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.3, 2.0, -1.0, 0.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn add_and_map() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![10.0, 20.0]);
+        assert_eq!(a.add(&b).data, vec![11.0, 22.0]);
+        assert_eq!(a.map(|x| x * 2.0).data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let t = Tensor::from_vec(&[3], vec![-5.0, 2.0, 4.5]);
+        assert_eq!(t.max_abs(), 5.0);
+    }
+}

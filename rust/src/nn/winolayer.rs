@@ -1,0 +1,354 @@
+//! Winograd convolution layer over NCHW tensors — the rust serving-path
+//! counterpart of the JAX training layer.
+//!
+//! Tiles the padded input into N×N patches with stride m, transforms each
+//! patch once, multiplies against pre-transformed weights with channel
+//! accumulation in the Winograd domain, and back-transforms — i.e. the
+//! standard layer-level amortisation the paper's §1 describes ("the cost of
+//! transformations amortizes over multiple uses"). Supports all bases and
+//! the quantized pipeline of Fig. 2.
+
+use super::layers::{pad_hw, Conv2dCfg};
+use super::tensor::Tensor;
+use crate::quant::scheme::{QuantConfig, Quantizer};
+use crate::wino::basis::Base;
+use crate::wino::matrix::Mat;
+use crate::wino::toomcook::WinogradPlan;
+use crate::wino::transform::WinoF;
+
+/// Per-layer quantization state (calibrated scales), if quantization is on.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerScales {
+    pub input: Quantizer,
+    pub input_t: Quantizer,
+    pub weights_t: Quantizer,
+    pub hadamard: Quantizer,
+    pub output: Quantizer,
+}
+
+/// A Winograd conv layer: F(m×m, r×r), stride 1, `same`-style padding
+/// supplied by the caller.
+pub struct WinoConv2d {
+    pub wf: WinoF,
+    /// Pre-transformed weights, `[K][C]` of N×N mats (already through the
+    /// base-change conjugation, i.e. canonical Winograd domain).
+    pub wt: Vec<Vec<Mat>>,
+    pub k: usize,
+    pub c: usize,
+    pub quant: Option<(QuantConfig, LayerScales)>,
+}
+
+impl WinoConv2d {
+    /// Build from float weights `[K,C,r,r]`; transforms them once.
+    pub fn new(m: usize, weights: &Tensor, base: Base) -> WinoConv2d {
+        assert_eq!(weights.rank(), 4);
+        let (k, c, r, s) = (
+            weights.dims[0],
+            weights.dims[1],
+            weights.dims[2],
+            weights.dims[3],
+        );
+        assert_eq!(r, s, "square kernels only");
+        let plan = WinogradPlan::new(m, r);
+        let wf = WinoF::new(&plan, base);
+        let mut wt = Vec::with_capacity(k);
+        for ki in 0..k {
+            let mut per_c = Vec::with_capacity(c);
+            for ci in 0..c {
+                let mut w = Mat::zeros(r, r);
+                for a in 0..r {
+                    for b in 0..r {
+                        w[(a, b)] = weights.at4(ki, ci, a, b) as f64;
+                    }
+                }
+                per_c.push(wf.transform_weights(&w));
+            }
+            wt.push(per_c);
+        }
+        WinoConv2d { wf, wt, k, c, quant: None }
+    }
+
+    /// Enable the quantized pipeline: calibrate scales on a representative
+    /// input batch, then fake-quantize the stored transformed weights.
+    pub fn quantize(&mut self, cfg: QuantConfig, calib: &Tensor, padding: usize) {
+        let wt_all: Vec<f64> = self
+            .wt
+            .iter()
+            .flat_map(|per_c| per_c.iter().flat_map(|m| m.data().iter().copied()))
+            .collect();
+        let weights_t = Quantizer::calibrate(cfg.weight_bits, &wt_all);
+        // Calibrate input/transformed-input/hadamard/output ranges by a dry
+        // run over the calibration batch.
+        let x = pad_hw(calib, padding);
+        let in_all: Vec<f64> = x.data.iter().map(|&v| v as f64).collect();
+        let input = Quantizer::calibrate(cfg.act_bits, &in_all);
+        let mut xt_max = 0.0f64;
+        let mut had_max = 0.0f64;
+        let mut out_max = 0.0f64;
+        let n = self.wf.n;
+        let m = self.wf.m;
+        let (bn, _, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        let tiles_h = (h.saturating_sub(n)) / m + 1;
+        let tiles_w = (w.saturating_sub(n)) / m + 1;
+        for ni in 0..bn.min(2) {
+            for th in 0..tiles_h {
+                for tw in 0..tiles_w {
+                    let mut acc = Mat::zeros(n, n);
+                    for ci in 0..self.c {
+                        let tile = extract_tile(&x, ni, ci, th * m, tw * m, n);
+                        let xt = self.wf.transform_input(&tile);
+                        for i in 0..n {
+                            for j in 0..n {
+                                xt_max = xt_max.max(xt[(i, j)].abs());
+                            }
+                        }
+                        let wt = &self.wt[0][ci];
+                        for i in 0..n {
+                            for j in 0..n {
+                                acc[(i, j)] += xt[(i, j)] * wt[(i, j)];
+                                had_max = had_max.max(acc[(i, j)].abs());
+                            }
+                        }
+                    }
+                    let y = self.wf.transform_output(&acc);
+                    for i in 0..m {
+                        for j in 0..m {
+                            out_max = out_max.max(y[(i, j)].abs());
+                        }
+                    }
+                }
+            }
+        }
+        let mk = |bits: u32, maxabs: f64| {
+            Quantizer::with_scale(
+                bits,
+                if maxabs == 0.0 { 1.0 } else { maxabs / Quantizer::qmax(bits) as f64 },
+            )
+        };
+        let scales = LayerScales {
+            input,
+            input_t: mk(cfg.act_bits, xt_max),
+            weights_t,
+            hadamard: mk(cfg.hadamard_bits, had_max),
+            output: mk(cfg.out_bits, out_max),
+        };
+        // Bake weight quantization into the stored transforms.
+        for per_c in &mut self.wt {
+            for w in per_c.iter_mut() {
+                *w = Mat::from_vec(w.rows(), w.cols(), weights_t.fake_all(w.data()));
+            }
+        }
+        self.quant = Some((cfg, scales));
+    }
+
+    /// Forward pass: `x` [N,C,H,W] → [N,K,H',W'] (stride 1).
+    pub fn forward(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
+        assert_eq!(cfg.stride, 1, "winograd layer is stride-1");
+        let x = pad_hw(x, cfg.padding);
+        let x = match &self.quant {
+            Some((_, s)) => x.map(|v| s.input.fake(v as f64) as f32),
+            None => x,
+        };
+        let n = self.wf.n;
+        let m = self.wf.m;
+        let r = self.wf.r;
+        let (bn, c, h, w) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        assert_eq!(c, self.c);
+        let oh = h - r + 1;
+        let ow = w - r + 1;
+        // Tile grid covering the output: ceil-division, edge tiles clamped
+        // by input zero-extension.
+        let tiles_h = oh.div_ceil(m);
+        let tiles_w = ow.div_ceil(m);
+        let mut y = Tensor::zeros(&[bn, self.k, oh, ow]);
+        for ni in 0..bn {
+            // Transform all input tiles once per image (amortised across K).
+            let mut xt_tiles: Vec<Vec<Mat>> =
+                vec![Vec::with_capacity(tiles_h * tiles_w); c];
+            for (ci, xt_c) in xt_tiles.iter_mut().enumerate() {
+                for th in 0..tiles_h {
+                    for tw in 0..tiles_w {
+                        let tile = extract_tile(&x, ni, ci, th * m, tw * m, n);
+                        let mut xt = self.wf.transform_input(&tile);
+                        if let Some((_, s)) = &self.quant {
+                            xt = Mat::from_vec(n, n, s.input_t.fake_all(xt.data()));
+                        }
+                        xt_c.push(xt);
+                    }
+                }
+            }
+            for ki in 0..self.k {
+                for th in 0..tiles_h {
+                    for tw in 0..tiles_w {
+                        let mut acc = Mat::zeros(n, n);
+                        for ci in 0..c {
+                            let xt = &xt_tiles[ci][th * tiles_w + tw];
+                            let wt = &self.wt[ki][ci];
+                            for i in 0..n {
+                                for j in 0..n {
+                                    acc[(i, j)] += xt[(i, j)] * wt[(i, j)];
+                                }
+                            }
+                        }
+                        if let Some((_, s)) = &self.quant {
+                            acc = Mat::from_vec(n, n, s.hadamard.fake_all(acc.data()));
+                        }
+                        let mut out = self.wf.transform_output(&acc);
+                        if let Some((_, s)) = &self.quant {
+                            out = Mat::from_vec(m, m, s.output.fake_all(out.data()));
+                        }
+                        for i in 0..m {
+                            let oi = th * m + i;
+                            if oi >= oh {
+                                break;
+                            }
+                            for j in 0..m {
+                                let oj = tw * m + j;
+                                if oj >= ow {
+                                    break;
+                                }
+                                *y.at4_mut(ni, ki, oi, oj) = out[(i, j)] as f32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Extract an n×n patch starting at (h0, w0), zero-extended past the edge.
+fn extract_tile(x: &Tensor, ni: usize, ci: usize, h0: usize, w0: usize, n: usize) -> Mat {
+    let (h, w) = (x.dims[2], x.dims[3]);
+    let mut t = Mat::zeros(n, n);
+    for i in 0..n {
+        if h0 + i >= h {
+            break;
+        }
+        for j in 0..n {
+            if w0 + j >= w {
+                break;
+            }
+            t[(i, j)] = x.at4(ni, ci, h0 + i, w0 + j) as f64;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layers::conv2d;
+    use super::*;
+    use crate::wino::error::Prng;
+
+    fn prng_tensor(seed: u64, dims: &[usize], scale: f64) -> Tensor {
+        let mut rng = Prng::new(seed);
+        let n = dims.iter().product();
+        Tensor::from_vec(
+            dims,
+            (0..n).map(|_| rng.uniform(scale) as f32).collect(),
+        )
+    }
+
+    fn assert_tensors_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.dims, b.dims);
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert!((x - y).abs() <= tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_direct_conv_no_padding() {
+        // 8×8 input, F(4,3): output 6×6 needs 2×2 tiles with edge clamping.
+        let x = prng_tensor(1, &[2, 3, 8, 8], 1.0);
+        let w = prng_tensor(2, &[4, 3, 3, 3], 0.5);
+        let direct = conv2d(&x, &w, None, Conv2dCfg::default());
+        for base in [Base::Canonical, Base::Legendre] {
+            let layer = WinoConv2d::new(4, &w, base);
+            let y = layer.forward(&x, Conv2dCfg::default());
+            assert_tensors_close(&y, &direct, 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_direct_conv_same_padding() {
+        let x = prng_tensor(3, &[1, 2, 8, 8], 1.0);
+        let w = prng_tensor(4, &[2, 2, 3, 3], 0.5);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let direct = conv2d(&x, &w, None, cfg);
+        let layer = WinoConv2d::new(4, &w, Base::Legendre);
+        let y = layer.forward(&x, cfg);
+        assert_eq!(y.dims, vec![1, 2, 8, 8]);
+        assert_tensors_close(&y, &direct, 1e-4);
+    }
+
+    #[test]
+    fn non_multiple_output_size() {
+        // 7×7 output (not a multiple of m=4) exercises edge-tile clamping.
+        let x = prng_tensor(5, &[1, 2, 9, 9], 1.0);
+        let w = prng_tensor(6, &[2, 2, 3, 3], 0.5);
+        let direct = conv2d(&x, &w, None, Conv2dCfg::default());
+        let layer = WinoConv2d::new(4, &w, Base::Canonical);
+        let y = layer.forward(&x, Conv2dCfg::default());
+        assert_eq!(y.dims, vec![1, 2, 7, 7]);
+        assert_tensors_close(&y, &direct, 1e-4);
+    }
+
+    #[test]
+    fn f2_variant_matches() {
+        let x = prng_tensor(7, &[1, 1, 6, 6], 1.0);
+        let w = prng_tensor(8, &[1, 1, 3, 3], 0.5);
+        let direct = conv2d(&x, &w, None, Conv2dCfg::default());
+        let layer = WinoConv2d::new(2, &w, Base::Legendre);
+        assert_tensors_close(&layer.forward(&x, Conv2dCfg::default()), &direct, 1e-4);
+    }
+
+    #[test]
+    fn quantized_stays_close_and_differs() {
+        let x = prng_tensor(9, &[1, 4, 12, 12], 1.0);
+        let w = prng_tensor(10, &[4, 4, 3, 3], 0.3);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let direct = conv2d(&x, &w, None, cfg);
+        let mut layer = WinoConv2d::new(4, &w, Base::Legendre);
+        layer.quantize(QuantConfig::w8(), &x, 1);
+        let y = layer.forward(&x, cfg);
+        // Quantized ≠ exact but same ballpark.
+        let max_direct = direct.max_abs();
+        let mut max_err = 0.0f32;
+        let mut identical = true;
+        for (a, b) in y.data.iter().zip(&direct.data) {
+            max_err = max_err.max((a - b).abs());
+            if a != b {
+                identical = false;
+            }
+        }
+        assert!(!identical, "quantization must change values");
+        assert!(
+            max_err < 0.35 * max_direct,
+            "quantized error too large: {max_err} vs signal {max_direct}"
+        );
+    }
+
+    #[test]
+    fn nine_bit_hadamard_tightens_layer_error() {
+        let x = prng_tensor(11, &[1, 8, 12, 12], 1.0);
+        let w = prng_tensor(12, &[8, 8, 3, 3], 0.3);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let direct = conv2d(&x, &w, None, cfg);
+        let l2 = |q: QuantConfig| -> f32 {
+            let mut layer = WinoConv2d::new(4, &w, Base::Legendre);
+            layer.quantize(q, &x, 1);
+            let y = layer.forward(&x, cfg);
+            y.data
+                .iter()
+                .zip(&direct.data)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt()
+        };
+        let e8 = l2(QuantConfig::w8());
+        let e9 = l2(QuantConfig::w8_h9());
+        assert!(e9 < e8, "9-bit hadamard {e9} !< 8-bit {e8}");
+    }
+}

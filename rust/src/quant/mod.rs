@@ -1,0 +1,10 @@
+//! Quantization substrate: symmetric linear quantizers, the staged
+//! quantized-Winograd pipeline of the paper's Fig. 2 (fake-quant training
+//! semantics and true-integer deployment semantics), and bit-width
+//! configuration.
+
+pub mod qwino;
+pub mod scheme;
+
+pub use qwino::{QWino, StageScales};
+pub use scheme::{QuantConfig, Quantizer};

@@ -1,0 +1,226 @@
+//! Symmetric linear quantization — the scheme of the paper's §4.2 (and of
+//! Fernandez-Marques et al. 2020, its ref [5]).
+//!
+//! A tensor `t` is mapped to integers via a per-tensor scale
+//! `s = max|t| / qmax` with `qmax = 2^{bits−1} − 1`, i.e. `q = round(t/s)`
+//! clamped to `[−qmax, qmax]`. Symmetric (no zero-point) because the
+//! Winograd domain is sign-symmetric. The paper's two operating points are
+//! `bits = 8` everywhere and `bits = 9` for the Hadamard product stage.
+
+/// A symmetric quantizer for a fixed bit width.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    pub bits: u32,
+    /// Scale: real value = `q * scale`.
+    pub scale: f64,
+}
+
+impl Quantizer {
+    /// Largest representable magnitude for `bits`-bit symmetric signed
+    /// quantization: `2^{bits−1} − 1` (127 for 8 bits, 255 for 9 bits).
+    pub fn qmax(bits: u32) -> i32 {
+        assert!((2..=24).contains(&bits), "unsupported bit width {bits}");
+        (1i32 << (bits - 1)) - 1
+    }
+
+    /// Calibrate a quantizer from data: scale = max|t| / qmax.
+    /// Degenerate all-zero tensors get scale 1 (every value quantizes to 0).
+    pub fn calibrate(bits: u32, data: &[f64]) -> Quantizer {
+        let maxabs = data.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        let scale = if maxabs == 0.0 {
+            1.0
+        } else {
+            maxabs / Self::qmax(bits) as f64
+        };
+        Quantizer { bits, scale }
+    }
+
+    /// Calibrate from f32 data.
+    pub fn calibrate_f32(bits: u32, data: &[f32]) -> Quantizer {
+        let maxabs = data.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
+        let scale = if maxabs == 0.0 {
+            1.0
+        } else {
+            maxabs / Self::qmax(bits) as f64
+        };
+        Quantizer { bits, scale }
+    }
+
+    /// With an explicit scale (e.g. a trained/EMA scale).
+    pub fn with_scale(bits: u32, scale: f64) -> Quantizer {
+        assert!(scale > 0.0, "non-positive scale");
+        Quantizer { bits, scale }
+    }
+
+    /// Quantize one value to its integer code (round-to-nearest-even like
+    /// the JAX side's `jnp.round`; ties in practice never matter here).
+    pub fn quantize(&self, x: f64) -> i32 {
+        let qmax = Self::qmax(self.bits);
+        let q = (x / self.scale).round();
+        (q as i32).clamp(-qmax, qmax)
+    }
+
+    /// Integer code back to real.
+    pub fn dequantize(&self, q: i32) -> f64 {
+        q as f64 * self.scale
+    }
+
+    /// Fake-quantize: quantize-then-dequantize — the operation inserted
+    /// throughout the winograd-aware training graph (Fig. 2's casts).
+    pub fn fake(&self, x: f64) -> f64 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// Quantize a slice to integer codes.
+    pub fn quantize_all(&self, xs: &[f64]) -> Vec<i32> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Fake-quantize a slice.
+    pub fn fake_all(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.fake(x)).collect()
+    }
+
+    /// The worst-case absolute rounding error of this quantizer (half a
+    /// step), ignoring clipping.
+    pub fn step_error(&self) -> f64 {
+        self.scale * 0.5
+    }
+}
+
+/// Bit-width configuration of the quantized Winograd pipeline — which stage
+/// uses how many bits. The paper's two configurations are
+/// `QuantConfig::w8()` (all-8-bit) and `QuantConfig::w8_h9()` (8-bit with a
+/// 9-bit Hadamard product).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantConfig {
+    /// Bits for activations entering the layer and transformed inputs.
+    pub act_bits: u32,
+    /// Bits for weights and transformed weights.
+    pub weight_bits: u32,
+    /// Bits for the Hadamard-product operands/result (the paper's knob:
+    /// 8 → ~0.5% accuracy loss, 9 → parity with direct convolution).
+    pub hadamard_bits: u32,
+    /// Bits for the post-transform output.
+    pub out_bits: u32,
+}
+
+impl QuantConfig {
+    /// Everything at 8 bits (paper Table 1 row "8 bits").
+    pub fn w8() -> QuantConfig {
+        QuantConfig { act_bits: 8, weight_bits: 8, hadamard_bits: 8, out_bits: 8 }
+    }
+
+    /// 8 bits with 9-bit Hadamard (paper Table 1 row "8b + 9b").
+    pub fn w8_h9() -> QuantConfig {
+        QuantConfig { act_bits: 8, weight_bits: 8, hadamard_bits: 9, out_bits: 8 }
+    }
+
+    /// Uniform width helper for sweeps.
+    pub fn uniform(bits: u32) -> QuantConfig {
+        QuantConfig { act_bits: bits, weight_bits: bits, hadamard_bits: bits, out_bits: bits }
+    }
+
+    pub fn label(&self) -> String {
+        if self.act_bits == self.weight_bits
+            && self.act_bits == self.out_bits
+        {
+            if self.hadamard_bits == self.act_bits {
+                format!("{} bits", self.act_bits)
+            } else {
+                format!("{}b + {}b", self.act_bits, self.hadamard_bits)
+            }
+        } else {
+            format!(
+                "a{}w{}h{}o{}",
+                self.act_bits, self.weight_bits, self.hadamard_bits, self.out_bits
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(Quantizer::qmax(8), 127);
+        assert_eq!(Quantizer::qmax(9), 255);
+        assert_eq!(Quantizer::qmax(2), 1);
+        assert_eq!(Quantizer::qmax(16), 32767);
+    }
+
+    #[test]
+    #[should_panic]
+    fn qmax_rejects_1bit() {
+        let _ = Quantizer::qmax(1);
+    }
+
+    #[test]
+    fn calibrate_maps_extremes_exactly() {
+        let data = [-3.0, 1.0, 2.5, 3.0];
+        let q = Quantizer::calibrate(8, &data);
+        assert_eq!(q.quantize(3.0), 127);
+        assert_eq!(q.quantize(-3.0), -127);
+        assert!((q.dequantize(q.quantize(3.0)) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibrate_zero_tensor() {
+        let q = Quantizer::calibrate(8, &[0.0, 0.0]);
+        assert_eq!(q.quantize(0.0), 0);
+        assert_eq!(q.fake(0.0), 0.0);
+    }
+
+    #[test]
+    fn quantize_clamps_out_of_range() {
+        let q = Quantizer::with_scale(8, 1.0);
+        assert_eq!(q.quantize(1e9), 127);
+        assert_eq!(q.quantize(-1e9), -127);
+    }
+
+    #[test]
+    fn fake_error_bounded_by_half_step() {
+        let data: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.013 - 6.0).collect();
+        let q = Quantizer::calibrate(8, &data);
+        for &x in &data {
+            assert!((q.fake(x) - x).abs() <= q.step_error() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn nine_bits_halves_the_step() {
+        let data = [-1.0, 1.0];
+        let q8 = Quantizer::calibrate(8, &data);
+        let q9 = Quantizer::calibrate(9, &data);
+        let ratio = q8.step_error() / q9.step_error();
+        assert!((ratio - 255.0 / 127.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fake_is_idempotent() {
+        let q = Quantizer::with_scale(8, 0.037);
+        for i in -127..=127 {
+            let x = q.dequantize(i);
+            assert_eq!(q.fake(x), x);
+        }
+    }
+
+    #[test]
+    fn config_labels() {
+        assert_eq!(QuantConfig::w8().label(), "8 bits");
+        assert_eq!(QuantConfig::w8_h9().label(), "8b + 9b");
+        assert_eq!(QuantConfig::uniform(6).label(), "6 bits");
+    }
+
+    #[test]
+    fn quantize_all_matches_scalar() {
+        let q = Quantizer::with_scale(8, 0.1);
+        let xs = [0.04, 0.06, -0.14, 12.7];
+        let all = q.quantize_all(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(all[i], q.quantize(x));
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts, compile them once on the
+//! CPU PJRT client, and expose typed train/eval step calls.
+//!
+//! Interchange is HLO text (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md). The executable outputs arrive as a single
+//! tuple buffer; we sync it to a literal and decompose — on the CPU client
+//! this is a memcpy, measured in the L3 perf pass (EXPERIMENTS.md §Perf)
+//! at well under 10% of step time.
+
+use super::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled model variant: manifest + train/eval executables.
+pub struct Artifact {
+    pub tag: String,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    train_exe: Option<xla::PjRtLoadedExecutable>,
+    eval_exe: Option<xla::PjRtLoadedExecutable>,
+}
+
+/// Training state: parameter + momentum literals in canonical order.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub momentum: Vec<xla::Literal>,
+    pub step: u64,
+}
+
+/// One train-step result.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 path")?,
+    )
+    .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))
+}
+
+fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal size mismatch: dims {dims:?} vs {} values", data.len());
+    }
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+fn i32_literal(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+impl Artifact {
+    /// Load `<dir>/<tag>.{manifest.txt, train.hlo.txt, eval.hlo.txt}` and
+    /// compile the step functions. Missing step files are tolerated (e.g.
+    /// eval-only use); calling the corresponding step then errors.
+    pub fn load(dir: &Path, tag: &str) -> Result<Artifact> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Self::load_with_client(dir, tag, client)
+    }
+
+    pub fn load_with_client(
+        dir: &Path,
+        tag: &str,
+        client: xla::PjRtClient,
+    ) -> Result<Artifact> {
+        let manifest = Manifest::load(&dir.join(format!("{tag}.manifest.txt")))?;
+        let train_path = dir.join(format!("{tag}.train.hlo.txt"));
+        let eval_path = dir.join(format!("{tag}.eval.hlo.txt"));
+        let train_exe = if train_path.exists() {
+            Some(compile(&client, &train_path)?)
+        } else {
+            None
+        };
+        let eval_exe = if eval_path.exists() {
+            Some(compile(&client, &eval_path)?)
+        } else {
+            None
+        };
+        if train_exe.is_none() && eval_exe.is_none() {
+            bail!("artifact {tag}: no train or eval HLO found in {dir:?}");
+        }
+        Ok(Artifact { tag: tag.to_string(), manifest, client, train_exe, eval_exe })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Initial training state from `<dir>/<tag>.init.bin` (flat f32 LE in
+    /// canonical order; momentum zero-filled).
+    pub fn init_state(&self, dir: &Path) -> Result<TrainState> {
+        let path = dir.join(format!("{}.init.bin", self.tag));
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        self.state_from_bytes(&bytes)
+    }
+
+    /// Build a state from a flat f32-LE parameter blob (init or checkpoint).
+    pub fn state_from_bytes(&self, bytes: &[u8]) -> Result<TrainState> {
+        let want = self.manifest.total_param_len() * 4;
+        if bytes.len() != want {
+            bail!(
+                "param blob is {} bytes, manifest wants {want} ({} f32)",
+                bytes.len(),
+                self.manifest.total_param_len()
+            );
+        }
+        let mut params = Vec::with_capacity(self.manifest.params.len());
+        let mut momentum = Vec::with_capacity(self.manifest.params.len());
+        let mut off = 0usize;
+        for spec in &self.manifest.params {
+            let n = spec.len();
+            let mut vals = vec![0f32; n];
+            for (i, v) in vals.iter_mut().enumerate() {
+                let b = off + i * 4;
+                *v = f32::from_le_bytes([bytes[b], bytes[b + 1], bytes[b + 2], bytes[b + 3]]);
+            }
+            off += n * 4;
+            params.push(f32_literal(&spec.dims, &vals)?);
+            momentum.push(f32_literal(&spec.dims, &vec![0f32; n])?);
+        }
+        Ok(TrainState { params, momentum, step: 0 })
+    }
+
+    /// Serialize the current parameters back to the flat blob format
+    /// (checkpointing; momentum is not persisted, matching init semantics).
+    pub fn state_to_bytes(&self, state: &TrainState) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.manifest.total_param_len() * 4);
+        for (lit, spec) in state.params.iter().zip(&self.manifest.params) {
+            let vals: Vec<f32> = lit
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+            if vals.len() != spec.len() {
+                bail!("param {} has {} values, want {}", spec.name, vals.len(), spec.len());
+            }
+            for v in vals {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// One SGD step. `images` is NCHW f32 (train_batch), `labels` i32.
+    /// Advances `state` in place and returns (loss, acc).
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<StepStats> {
+        let exe = self.train_exe.as_ref().context("artifact has no train step")?;
+        let m = &self.manifest;
+        let (c, h, w) = m.image;
+        if images.len() != m.train_batch * c * h * w {
+            bail!("train images: got {} values", images.len());
+        }
+        if labels.len() != m.train_batch {
+            bail!("train labels: got {}", labels.len());
+        }
+        let np = m.params.len();
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * np + 3);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.momentum.iter());
+        let img_lit = f32_literal(&[m.train_batch, c, h, w], images)?;
+        let lab_lit = i32_literal(&[m.train_batch], labels)?;
+        let lr_lit = xla::Literal::scalar(lr);
+        inputs.push(&img_lit);
+        inputs.push(&lab_lit);
+        inputs.push(&lr_lit);
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("train execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        let mut parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != 2 * np + 2 {
+            bail!("train step returned {} outputs, want {}", parts.len(), 2 * np + 2);
+        }
+        let acc_lit = parts.pop().unwrap();
+        let loss_lit = parts.pop().unwrap();
+        let momentum = parts.split_off(np);
+        state.params = parts;
+        state.momentum = momentum;
+        state.step += 1;
+        Ok(StepStats {
+            loss: loss_lit
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?,
+            acc: acc_lit
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow::anyhow!("acc: {e:?}"))?,
+        })
+    }
+
+    /// Evaluate one batch: returns (mean nll, #correct).
+    pub fn eval_step(
+        &self,
+        state: &TrainState,
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<(f32, i32)> {
+        let exe = self.eval_exe.as_ref().context("artifact has no eval step")?;
+        let m = &self.manifest;
+        let (c, h, w) = m.image;
+        if images.len() != m.eval_batch * c * h * w {
+            bail!("eval images: got {} values", images.len());
+        }
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(m.params.len() + 2);
+        inputs.extend(state.params.iter());
+        let img_lit = f32_literal(&[m.eval_batch, c, h, w], images)?;
+        let lab_lit = i32_literal(&[m.eval_batch], labels)?;
+        inputs.push(&img_lit);
+        inputs.push(&lab_lit);
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("eval execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        let (loss_lit, correct_lit) = tuple
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("to_tuple2: {e:?}"))?;
+        Ok((
+            loss_lit
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow::anyhow!("loss: {e:?}"))?,
+            correct_lit
+                .get_first_element::<i32>()
+                .map_err(|e| anyhow::anyhow!("correct: {e:?}"))?,
+        ))
+    }
+}
+
+/// List artifact tags present in a directory (any `<tag>.manifest.txt`).
+pub fn list_artifacts(dir: &Path) -> Result<Vec<String>> {
+    let mut tags = Vec::new();
+    if !dir.exists() {
+        return Ok(tags);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(tag) = name.strip_suffix(".manifest.txt") {
+            tags.push(tag.to_string());
+        }
+    }
+    tags.sort();
+    Ok(tags)
+}
+
+/// Default artifacts directory: `$WINOQ_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("WINOQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

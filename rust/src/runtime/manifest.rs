@@ -1,0 +1,170 @@
+//! Artifact manifest parser — the contract between `python/compile/aot.py`
+//! and the rust runtime: parameter names/shapes in canonical order plus
+//! batch geometry.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One parameter's metadata.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed `<tag>.manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variant: String,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    /// (C, H, W).
+    pub image: (usize, usize, usize),
+    pub num_classes: usize,
+    /// Parameters in canonical (sorted-name) order.
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        if header.trim() != "winoq-manifest v1" {
+            bail!("bad manifest header: {header:?}");
+        }
+        let mut variant = String::new();
+        let mut train_batch = 0;
+        let mut eval_batch = 0;
+        let mut image = (0, 0, 0);
+        let mut num_classes = 0;
+        let mut params = Vec::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().context("empty line")?;
+            match key {
+                "variant" => variant = it.next().context("variant value")?.to_string(),
+                "train_batch" => {
+                    train_batch = it.next().context("train_batch")?.parse()?
+                }
+                "eval_batch" => eval_batch = it.next().context("eval_batch")?.parse()?,
+                "image" => {
+                    let v = it.next().context("image value")?;
+                    let dims: Vec<usize> = v
+                        .split('x')
+                        .map(|d| d.parse())
+                        .collect::<Result<_, _>>()?;
+                    if dims.len() != 3 {
+                        bail!("image must be CxHxW, got {v:?}");
+                    }
+                    image = (dims[0], dims[1], dims[2]);
+                }
+                "num_classes" => num_classes = it.next().context("num_classes")?.parse()?,
+                "param" => {
+                    let name = it.next().context("param name")?.to_string();
+                    let shape = it.next().context("param shape")?;
+                    let dims = shape
+                        .split('x')
+                        .map(|d| d.parse())
+                        .collect::<Result<Vec<usize>, _>>()?;
+                    params.push(ParamSpec { name, dims });
+                }
+                other => bail!("unknown manifest key {other:?}"),
+            }
+        }
+        if variant.is_empty() || params.is_empty() {
+            bail!("manifest missing variant or params");
+        }
+        // Canonical order is sorted-name: verify so a drifted aot.py fails
+        // loudly here instead of silently permuting parameters.
+        for w in params.windows(2) {
+            if w[0].name >= w[1].name {
+                bail!(
+                    "manifest params not in canonical sorted order: {} >= {}",
+                    w[0].name,
+                    w[1].name
+                );
+            }
+        }
+        Ok(Manifest { variant, train_batch, eval_batch, image, num_classes, params })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Total f32 count across all params (the size of `<tag>.init.bin` / 4).
+    pub fn total_param_len(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "winoq-manifest v1\n\
+        variant t2-direct-8b-w0.25\n\
+        train_batch 32\n\
+        eval_batch 100\n\
+        image 3x32x32\n\
+        num_classes 10\n\
+        param a.w 4x3x3x3\n\
+        param b.bn.gamma 4\n\
+        param fc.w 128x10\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.variant, "t2-direct-8b-w0.25");
+        assert_eq!(m.train_batch, 32);
+        assert_eq!(m.eval_batch, 100);
+        assert_eq!(m.image, (3, 32, 32));
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].dims, vec![4, 3, 3, 3]);
+        assert_eq!(m.params[0].len(), 108);
+        assert_eq!(m.total_param_len(), 108 + 4 + 1280);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("nope v9\nvariant x\nparam a 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_params() {
+        let bad = "winoq-manifest v1\nvariant v\nparam z.w 1\nparam a.w 1\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_image() {
+        let bad = "winoq-manifest v1\nvariant v\nimage 3x32\nparam a.w 1\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn scalar_param_shape() {
+        let m = Manifest::parse(
+            "winoq-manifest v1\nvariant v\nparam s 1\n",
+        )
+        .unwrap();
+        assert_eq!(m.params[0].len(), 1);
+    }
+}

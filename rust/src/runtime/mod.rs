@@ -1,0 +1,8 @@
+//! Runtime: PJRT client wrapper loading the AOT'd HLO-text artifacts and
+//! exposing typed train/eval steps to the coordinator.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{artifacts_dir, list_artifacts, Artifact, StepStats, TrainState};
+pub use manifest::{Manifest, ParamSpec};

@@ -1,0 +1,77 @@
+//! Mini property-testing harness (proptest is not in the vendored crate
+//! set): deterministic generators over a seeded PRNG plus a `forall` runner
+//! that reports the failing seed/case for reproduction.
+
+use crate::wino::error::Prng;
+
+/// A generator of values of `T` from the PRNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Prng) -> T;
+}
+
+impl<T, F: Fn(&mut Prng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Prng) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` on `cases` generated values; panic with the case index and
+/// seed on the first failure so it can be replayed.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        assert!(
+            prop(&value),
+            "property failed at case {case} (seed {seed}): {value:?}"
+        );
+    }
+}
+
+/// Uniform f64 in [lo, hi].
+pub fn uniform(lo: f64, hi: f64) -> impl Fn(&mut Prng) -> f64 {
+    move |rng| lo + (rng.uniform(1.0) * 0.5 + 0.5) * (hi - lo)
+}
+
+/// Uniform usize in [lo, hi].
+pub fn uniform_usize(lo: usize, hi: usize) -> impl Fn(&mut Prng) -> usize {
+    move |rng| lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+/// Vec of f64 with the given length.
+pub fn vec_f64(len: usize, scale: f64) -> impl Fn(&mut Prng) -> Vec<f64> {
+    move |rng| (0..len).map(|_| rng.uniform(scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(1, 100, uniform(0.0, 1.0), |&x| (0.0..=1.0).contains(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 100, uniform(0.0, 1.0), |&x| x < 0.5);
+    }
+
+    #[test]
+    fn uniform_usize_in_range() {
+        forall(3, 200, uniform_usize(2, 6), |&n| (2..=6).contains(&n));
+    }
+
+    #[test]
+    fn vec_gen_length() {
+        forall(4, 20, vec_f64(7, 2.0), |v| {
+            v.len() == 7 && v.iter().all(|x| x.abs() <= 2.0)
+        });
+    }
+}

@@ -1,0 +1,237 @@
+//! Polynomial-base-change matrices — the paper's §4.1 contribution.
+//!
+//! The Winograd transforms are evaluations/interpolations of polynomials
+//! written, by default, in the canonical (monomial) base `1, x, x², …` — and
+//! the associated Vandermonde matrices are notoriously ill-conditioned
+//! (Pan 2016, paper ref [8]). Re-expressing the polynomials in a better
+//! base — the paper uses *normalised (monic) Legendre* polynomials —
+//! conditions the transforms.
+//!
+//! With `P` the base-change matrix (column `i` holds the canonical
+//! coefficients of the i-th base polynomial) the paper defines
+//! `G_P = PG`, `B_P = PB`, `A_P = PA` and computes (its eq. 4)
+//!
+//! ```text
+//! Y = A_Pᵀ [ P⁻ᵀ [ (P⁻¹ (G_P W G_Pᵀ) P⁻ᵀ) ⊙ (B_Pᵀ (P⁻ᵀ X P⁻¹) B_P) ] P⁻¹ ] A_P
+//! ```
+//!
+//! which is *algebraically identical* to the canonical algorithm — every `P`
+//! cancels — but performs the floating-point/quantised arithmetic through
+//! better-scaled intermediates. `P` is sparse (the paper counts 6 non-zero
+//! *off-diagonal+diagonal-structure* entries at size 4×4 and 12 at 6×6 for
+//! the strictly-lower part; see [`BaseChange::nnz_offdiag`]), so the extra
+//! pre/post work is a handful of multiply-adds while the Hadamard stage —
+//! the general-multiplication count — is untouched.
+
+use super::matrix::RatMat;
+use super::poly::Poly;
+use super::rational::Rational;
+
+/// Which polynomial base to run the Winograd transforms in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Base {
+    /// Canonical monomial base — the plain Winograd/Toom-Cook algorithm.
+    Canonical,
+    /// Normalised (monic) Legendre polynomials — the paper's method ("L").
+    Legendre,
+    /// Monic Chebyshev (first kind) — mentioned by the paper as an
+    /// alternative conditioning base; implemented for the ablation bench.
+    Chebyshev,
+}
+
+impl Base {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Base::Canonical => "canonical",
+            Base::Legendre => "legendre",
+            Base::Chebyshev => "chebyshev",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Base> {
+        match s {
+            "canonical" => Some(Base::Canonical),
+            "legendre" => Some(Base::Legendre),
+            "chebyshev" => Some(Base::Chebyshev),
+            _ => None,
+        }
+    }
+}
+
+/// The base-change pair `(P, P⁻¹)` for an `n×n` transform, exact.
+#[derive(Clone)]
+pub struct BaseChange {
+    pub base: Base,
+    /// `P` — column `i` = canonical coefficients of base polynomial `i`.
+    pub p: RatMat,
+    /// `P⁻¹`, exact.
+    pub p_inv: RatMat,
+}
+
+impl BaseChange {
+    /// Build the base change for transform size `n`.
+    pub fn new(base: Base, n: usize) -> BaseChange {
+        let p = match base {
+            Base::Canonical => RatMat::identity(n),
+            Base::Legendre => poly_base_matrix(n, Poly::legendre_monic),
+            Base::Chebyshev => poly_base_matrix(n, |k| {
+                // T₀ and T₁ are already monic; monic() would panic on the
+                // zero-degree edge only if T₀ were zero, which it is not.
+                Poly::chebyshev_monic(k)
+            }),
+        };
+        let p_inv = p.inverse();
+        BaseChange { base, p, p_inv }
+    }
+
+    pub fn n(&self) -> usize {
+        self.p.rows()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.p == RatMat::identity(self.n())
+    }
+
+    /// Non-zeros of `P` excluding the unit diagonal — the sparse extra
+    /// multiply-adds the paper prices (6 at n=6 for Legendre's strictly
+    /// lower-triangular part… see tests for the exact paper counts).
+    pub fn nnz_offdiag(&self) -> usize {
+        let n = self.n();
+        let mut count = 0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && !self.p[(i, j)].is_zero() {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// `Pᵀ` lowered to f64 — for comparison against the paper's printed
+    /// matrices.
+    pub fn p_transpose_f64(&self) -> Vec<Vec<f64>> {
+        let pt = self.p.transpose();
+        (0..pt.rows())
+            .map(|i| (0..pt.cols()).map(|j| pt[(i, j)].to_f64()).collect())
+            .collect()
+    }
+}
+
+/// Build `P` (n×n) whose column `k` holds the canonical coefficients of the
+/// k-th base polynomial (which must be monic of degree k, so `P` is
+/// unit-upper-triangular in the (coeff-index, poly-index) layout).
+fn poly_base_matrix(n: usize, family: impl Fn(usize) -> Poly) -> RatMat {
+    let mut p = RatMat::zeros(n, n);
+    for k in 0..n {
+        let poly = family(k);
+        assert_eq!(poly.degree(), k);
+        assert!(poly.leading().is_one(), "base polynomial {k} not monic");
+        for j in 0..=k {
+            p[(j, k)] = poly.coeff(j);
+        }
+    }
+    p
+}
+
+/// The paper's printed `Pᵀ` for n = 6 (its §4.1 matrix), kept as a golden
+/// constant so construction changes can never silently drift from the paper.
+pub fn paper_pt_6x6() -> RatMat {
+    use super::rational::rat;
+    let z = Rational::ZERO;
+    let one = Rational::ONE;
+    RatMat::from_rows(vec![
+        vec![one, z, z, z, z, z],
+        vec![z, one, z, z, z, z],
+        vec![rat(-1, 3), z, one, z, z, z],
+        vec![z, rat(-3, 5), z, one, z, z],
+        vec![rat(3, 35), z, rat(-6, 7), z, one, z],
+        vec![z, rat(5, 21), z, rat(-10, 9), z, one],
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::rational::rat;
+    use super::*;
+
+    #[test]
+    fn canonical_is_identity() {
+        let bc = BaseChange::new(Base::Canonical, 6);
+        assert!(bc.is_identity());
+        assert_eq!(bc.nnz_offdiag(), 0);
+    }
+
+    #[test]
+    fn legendre_matches_paper_matrix() {
+        // The paper prints Pᵀ for the 6×6 case; our construction must
+        // reproduce it exactly.
+        let bc = BaseChange::new(Base::Legendre, 6);
+        assert_eq!(bc.p.transpose(), paper_pt_6x6());
+    }
+
+    #[test]
+    fn p_inverse_roundtrips() {
+        for base in [Base::Legendre, Base::Chebyshev] {
+            for n in [2usize, 4, 6, 8] {
+                let bc = BaseChange::new(base, n);
+                assert_eq!(bc.p.matmul(&bc.p_inv), RatMat::identity(n));
+                assert_eq!(bc.p_inv.matmul(&bc.p), RatMat::identity(n));
+            }
+        }
+    }
+
+    #[test]
+    fn p_is_unit_triangular() {
+        // Monic degree-k polynomials ⇒ P is unit upper triangular in
+        // (coefficient row, polynomial column) layout; hence det P = 1 and
+        // the base change is numerically benign by itself.
+        let bc = BaseChange::new(Base::Legendre, 6);
+        for i in 0..6 {
+            assert!(bc.p[(i, i)].is_one());
+            for j in 0..i {
+                assert!(bc.p[(i, j)].is_zero(), "P[{i},{j}] should be 0");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_sparsity_counts() {
+        // Paper §4.1: "The matrices of the size 4×4 and 6×6 include 6 and 12
+        // non zero elements" — i.e. P beyond the identity structure: the 4×4
+        // Legendre P has 2 off-diagonal nnz (total 6 nnz), the 6×6 has 6
+        // off-diagonal (total 12 nnz).
+        let bc4 = BaseChange::new(Base::Legendre, 4);
+        assert_eq!(bc4.p.nnz(), 6);
+        let bc6 = BaseChange::new(Base::Legendre, 6);
+        assert_eq!(bc6.p.nnz(), 12);
+    }
+
+    #[test]
+    fn legendre_specific_entries() {
+        let bc = BaseChange::new(Base::Legendre, 6);
+        // Column 4 = monic P4 = x⁴ − 6/7 x² + 3/35.
+        assert_eq!(bc.p[(0, 4)], rat(3, 35));
+        assert_eq!(bc.p[(2, 4)], rat(-6, 7));
+        assert_eq!(bc.p[(4, 4)], rat(1, 1));
+        // Column 5 = monic P5 = x⁵ − 10/9 x³ + 5/21 x.
+        assert_eq!(bc.p[(1, 5)], rat(5, 21));
+        assert_eq!(bc.p[(3, 5)], rat(-10, 9));
+    }
+
+    #[test]
+    fn chebyshev_entries() {
+        // Monic T2 = x² − 1/2, monic T3 = x³ − 3/4 x.
+        let bc = BaseChange::new(Base::Chebyshev, 4);
+        assert_eq!(bc.p[(0, 2)], rat(-1, 2));
+        assert_eq!(bc.p[(1, 3)], rat(-3, 4));
+    }
+
+    #[test]
+    fn base_names_roundtrip() {
+        for b in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+            assert_eq!(Base::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Base::from_name("hermite"), None);
+    }
+}

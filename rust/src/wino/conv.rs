@@ -1,0 +1,97 @@
+//! Direct convolution/correlation oracles.
+//!
+//! These are the ground-truth implementations every Winograd path in the
+//! crate is validated against (and the "direct" baseline column of the
+//! paper's Tables 1–2).
+
+use super::matrix::Mat;
+
+/// Valid 2-D correlation of a single tile: `x` is H×W, `w` is r×r, output
+/// is (H−r+1)×(W−r+1). `Y[i,j] = Σ_{a,b} w[a,b] · x[i+a, j+b]`.
+pub fn direct_correlate_2d(x: &Mat, w: &Mat) -> Mat {
+    let r = w.rows();
+    assert_eq!(w.cols(), r);
+    assert!(x.rows() >= r && x.cols() >= r);
+    let oh = x.rows() - r + 1;
+    let ow = x.cols() - r + 1;
+    let mut y = Mat::zeros(oh, ow);
+    for i in 0..oh {
+        for j in 0..ow {
+            let mut acc = 0.0;
+            for a in 0..r {
+                for b in 0..r {
+                    acc += w[(a, b)] * x[(i + a, j + b)];
+                }
+            }
+            y[(i, j)] = acc;
+        }
+    }
+    y
+}
+
+/// Valid 1-D correlation: `y[t] = Σ_j g[j] d[t+j]`.
+pub fn direct_correlate_1d(g: &[f64], d: &[f64]) -> Vec<f64> {
+    assert!(d.len() >= g.len());
+    let m = d.len() - g.len() + 1;
+    (0..m)
+        .map(|t| g.iter().enumerate().map(|(j, &gj)| gj * d[t + j]).sum())
+        .collect()
+}
+
+/// Multi-channel correlation accumulating over channels — oracle for
+/// `WinoF::correlate_tile_multichannel` and the NN conv layers.
+pub fn direct_correlate_2d_multichannel(xs: &[Mat], ws: &[Mat]) -> Mat {
+    assert_eq!(xs.len(), ws.len());
+    assert!(!xs.is_empty());
+    let mut acc = direct_correlate_2d(&xs[0], &ws[0]);
+    for (x, w) in xs.iter().zip(ws).skip(1) {
+        let y = direct_correlate_2d(x, w);
+        for i in 0..acc.rows() {
+            for j in 0..acc.cols() {
+                acc[(i, j)] += y[(i, j)];
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correlate_1d_known() {
+        let y = direct_correlate_1d(&[1.0, 2.0, 3.0], &[1.0, 0.0, -1.0, 2.0]);
+        // t=0: 1*1 + 2*0 + 3*(-1) = -2 ; t=1: 1*0 + 2*(-1) + 3*2 = 4
+        assert_eq!(y, vec![-2.0, 4.0]);
+    }
+
+    #[test]
+    fn correlate_2d_identity_kernel() {
+        // 1×1 kernel of value 1 returns the input.
+        let x = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let w = Mat::from_rows(vec![vec![1.0]]);
+        assert_eq!(direct_correlate_2d(&x, &w).data(), x.data());
+    }
+
+    #[test]
+    fn correlate_2d_known() {
+        let x = Mat::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]);
+        let w = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let y = direct_correlate_2d(&x, &w);
+        // y[i,j] = x[i,j] + x[i+1,j+1]
+        assert_eq!(y.data(), &[6.0, 8.0, 12.0, 14.0]);
+    }
+
+    #[test]
+    fn multichannel_accumulates() {
+        let x = Mat::from_rows(vec![vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let w = Mat::from_rows(vec![vec![2.0]]);
+        let y = direct_correlate_2d_multichannel(&[x.clone(), x], &[w.clone(), w]);
+        assert_eq!(y.data(), &[4.0, 4.0, 4.0, 4.0]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Numerical-error analysis harness — experiment M1 in DESIGN.md.
+//!
+//! Quantifies the paper's motivating claims:
+//! * §1: the Winograd error grows at least exponentially with the tile
+//!   size (ill-conditioned Vandermonde transforms, Pan 2016);
+//! * §4.1: changing to the Legendre base lowers both the condition numbers
+//!   of the transforms and the end-to-end error.
+//!
+//! Error is measured against an f64 direct-convolution oracle while the
+//! Winograd pipeline runs with f32-rounded transform matrices and
+//! (optionally) f32-rounded intermediates.
+
+use super::basis::Base;
+use super::conv::direct_correlate_2d;
+use super::matrix::Mat;
+use super::toomcook::WinogradPlan;
+use super::transform::WinoF;
+
+/// Deterministic xorshift64* PRNG — uniform in [-scale, scale].
+pub struct Prng(u64);
+
+impl Prng {
+    pub fn new(seed: u64) -> Prng {
+        Prng(seed.wrapping_add(0x9E3779B97F4A7C15).max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn uniform(&mut self, scale: f64) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        (u * 2.0 - 1.0) * scale
+    }
+
+    pub fn mat(&mut self, rows: usize, cols: usize, scale: f64) -> Mat {
+        let data = (0..rows * cols).map(|_| self.uniform(scale)).collect();
+        Mat::from_vec(rows, cols, data)
+    }
+}
+
+/// One measured error statistic set.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorStats {
+    /// Mean relative L2 error over trials.
+    pub mean_rel_l2: f64,
+    /// Max elementwise absolute error over all trials.
+    pub max_abs: f64,
+    /// Mean elementwise absolute error.
+    pub mean_abs: f64,
+}
+
+/// Measure Winograd-vs-direct error for `F(m, 3)` in the given base, over
+/// `trials` random tiles, with transform matrices rounded through f32
+/// (mimicking a deployed fp32 kernel against an fp64 oracle).
+pub fn measure_tile_error(
+    m: usize,
+    r: usize,
+    base: Base,
+    trials: usize,
+    seed: u64,
+) -> ErrorStats {
+    let plan = WinogradPlan::new(m, r);
+    let wf = WinoF::new(&plan, base).through_f32();
+    let mut rng = Prng::new(seed);
+    let mut sum_rel = 0.0;
+    let mut max_abs = 0.0f64;
+    let mut sum_abs = 0.0;
+    let mut count_abs = 0usize;
+    for _ in 0..trials {
+        let x = rng.mat(plan.n, plan.n, 1.0);
+        let w = rng.mat(r, r, 1.0);
+        let oracle = direct_correlate_2d(&x, &w);
+        let got = wino_f32_rounded(&wf, &x, &w);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..m {
+            for j in 0..m {
+                let d = (got[(i, j)] - oracle[(i, j)]).abs();
+                num += d * d;
+                den += oracle[(i, j)] * oracle[(i, j)];
+                max_abs = max_abs.max(d);
+                sum_abs += d;
+                count_abs += 1;
+            }
+        }
+        sum_rel += (num / den.max(1e-300)).sqrt();
+    }
+    ErrorStats {
+        mean_rel_l2: sum_rel / trials as f64,
+        max_abs,
+        mean_abs: sum_abs / count_abs as f64,
+    }
+}
+
+/// Run the tile pipeline with every intermediate rounded through f32 —
+/// models a pure-f32 implementation (input/weight transform results, the
+/// Hadamard products, and the output all pass through f32 storage).
+fn wino_f32_rounded(wf: &WinoF, x: &Mat, w: &Mat) -> Mat {
+    let xt = wf.transform_input(x).through_f32();
+    let wt = wf.transform_weights(w).through_f32();
+    let mut had = Mat::zeros(wf.n, wf.n);
+    for i in 0..wf.n {
+        for j in 0..wf.n {
+            had[(i, j)] = xt[(i, j)] * wt[(i, j)];
+        }
+    }
+    wf.transform_output(&had.through_f32()).through_f32()
+}
+
+/// Condition numbers κ₂ of the three (base-changed) transform matrices —
+/// the quantity Pan 2016 ties the error growth to.
+#[derive(Clone, Copy, Debug)]
+pub struct ConditionNumbers {
+    pub kappa_a: f64,
+    pub kappa_g: f64,
+    pub kappa_bt: f64,
+}
+
+/// κ₂ of the effective evaluation matrices for `F(m,r)` in `base`.
+/// Non-square A_P/G_P use σ_max/σ_min through the Gram matrix.
+pub fn condition_numbers(m: usize, r: usize, base: Base) -> ConditionNumbers {
+    let plan = WinogradPlan::new(m, r);
+    let wf = WinoF::new(&plan, base);
+    ConditionNumbers {
+        kappa_a: rect_condition(&wf.a_p),
+        kappa_g: rect_condition(&wf.g_p),
+        kappa_bt: wf.bt_p.condition_number(),
+    }
+}
+
+/// Condition number for (possibly rectangular) matrices via the Gram
+/// matrix: κ(M) = sqrt(κ₂(MᵀM)).
+fn rect_condition(mat: &Mat) -> f64 {
+    let gram = mat.transpose().matmul(mat);
+    let smax = gram.sigma_max();
+    let smin = gram.sigma_min();
+    (smax / smin).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prng_is_deterministic() {
+        let mut a = Prng::new(7);
+        let mut b = Prng::new(7);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn prng_uniform_in_range() {
+        let mut rng = Prng::new(3);
+        for _ in 0..1000 {
+            let v = rng.uniform(2.5);
+            assert!(v >= -2.5 && v <= 2.5);
+        }
+    }
+
+    #[test]
+    fn error_grows_with_tile_size() {
+        // Paper §1: error increases (at least exponentially) with output
+        // size — F(6,3) must be measurably worse than F(2,3) in f32.
+        let e2 = measure_tile_error(2, 3, Base::Canonical, 200, 11);
+        let e6 = measure_tile_error(6, 3, Base::Canonical, 200, 11);
+        assert!(
+            e6.mean_rel_l2 > e2.mean_rel_l2,
+            "F(6,3) err {} !> F(2,3) err {}",
+            e6.mean_rel_l2,
+            e2.mean_rel_l2
+        );
+    }
+
+    #[test]
+    fn error_is_small_relative_to_signal() {
+        let e = measure_tile_error(4, 3, Base::Canonical, 100, 5);
+        assert!(e.mean_rel_l2 < 1e-3, "rel err unexpectedly large: {e:?}");
+        assert!(e.mean_rel_l2 > 0.0, "f32 rounding must show up");
+    }
+
+    #[test]
+    fn legendre_base_not_worse_f43() {
+        // The headline mechanism: at F(4,3) the Legendre pipeline's error
+        // must not exceed the canonical one's (paper shows strict gains at
+        // int8; at f32 we assert non-inferiority with margin).
+        let can = measure_tile_error(4, 3, Base::Canonical, 500, 23);
+        let leg = measure_tile_error(4, 3, Base::Legendre, 500, 23);
+        assert!(
+            leg.mean_rel_l2 <= can.mean_rel_l2 * 1.5,
+            "legendre {} vs canonical {}",
+            leg.mean_rel_l2,
+            can.mean_rel_l2
+        );
+    }
+
+    #[test]
+    fn condition_numbers_finite_and_ordered() {
+        let c = condition_numbers(4, 3, Base::Canonical);
+        assert!(c.kappa_bt.is_finite() && c.kappa_bt >= 1.0);
+        assert!(c.kappa_a.is_finite() && c.kappa_a >= 1.0);
+        assert!(c.kappa_g.is_finite() && c.kappa_g >= 1.0);
+        // Condition worsens with tile size (Vandermonde pathology).
+        let c6 = condition_numbers(6, 3, Base::Canonical);
+        assert!(c6.kappa_bt > c.kappa_bt);
+    }
+}

@@ -1,0 +1,517 @@
+//! Small dense matrices — exact (rational) and floating-point.
+//!
+//! The transform matrices involved are at most ~10×10, so everything here
+//! is simple O(n³) dense code; clarity and exactness matter, not BLAS.
+
+use super::rational::Rational;
+
+/// Dense matrix with exact rational entries (row-major).
+#[derive(Clone, PartialEq, Eq)]
+pub struct RatMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<Rational>,
+}
+
+impl RatMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        RatMat { rows, cols, data: vec![Rational::ZERO; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = RatMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = Rational::ONE;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<Rational>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        RatMat { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[Rational] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> RatMat {
+        let mut out = RatMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, rhs: &RatMat) -> RatMat {
+        assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
+        let mut out = RatMat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a.is_zero() {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    let b = rhs[(k, j)];
+                    if !b.is_zero() {
+                        out[(i, j)] += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact inverse by Gauss-Jordan elimination with partial pivoting on
+    /// exact rationals (pivot = first non-zero). Panics if singular.
+    pub fn inverse(&self) -> RatMat {
+        assert_eq!(self.rows, self.cols, "inverse of non-square matrix");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = RatMat::identity(n);
+        for col in 0..n {
+            // Find a pivot row.
+            let pivot = (col..n)
+                .find(|&r| !a[(r, col)].is_zero())
+                .expect("singular matrix in RatMat::inverse");
+            if pivot != col {
+                a.swap_rows(pivot, col);
+                inv.swap_rows(pivot, col);
+            }
+            let p = a[(col, col)].recip();
+            for j in 0..n {
+                a[(col, j)] *= p;
+                inv[(col, j)] *= p;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a[(r, col)];
+                if f.is_zero() {
+                    continue;
+                }
+                for j in 0..n {
+                    let ac = a[(col, j)];
+                    let ic = inv[(col, j)];
+                    a[(r, j)] -= f * ac;
+                    inv[(r, j)] -= f * ic;
+                }
+            }
+        }
+        inv
+    }
+
+    fn swap_rows(&mut self, r1: usize, r2: usize) {
+        if r1 == r2 {
+            return;
+        }
+        for j in 0..self.cols {
+            self.data.swap(r1 * self.cols + j, r2 * self.cols + j);
+        }
+    }
+
+    /// Number of non-zero entries — the paper highlights P's sparsity
+    /// (6 non-zeros at size 4, 12 at size 6... counting off-diagonal + diag).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|c| !c.is_zero()).count()
+    }
+
+    pub fn to_f64(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|c| c.to_f64()).collect(),
+        }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.data.iter().map(|c| c.to_f32()).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for RatMat {
+    type Output = Rational;
+    fn index(&self, (i, j): (usize, usize)) -> &Rational {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for RatMat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut Rational {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl std::fmt::Debug for RatMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for i in 0..self.rows {
+            write!(f, "[")?;
+            for j in 0..self.cols {
+                if j > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{:>7}", format!("{}", self[(i, j)]))?;
+            }
+            writeln!(f, "]")?;
+        }
+        Ok(())
+    }
+}
+
+/// Dense f64 matrix (row-major) — the floating-point shadow of `RatMat`,
+/// used by the numerical-error experiments.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out[(i, j)] += a * rhs[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                (0..self.cols).map(|j| self[(i, j)] * v[j]).sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Largest singular value via power iteration on `MᵀM`.
+    pub fn sigma_max(&self) -> f64 {
+        let mtm = self.transpose().matmul(self);
+        let n = mtm.rows;
+        let mut v = vec![1.0 / (n as f64).sqrt(); n];
+        let mut lambda = 0.0f64;
+        for _ in 0..500 {
+            let w = mtm.matvec(&v);
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm == 0.0 {
+                return 0.0;
+            }
+            let next: Vec<f64> = w.iter().map(|x| x / norm).collect();
+            let delta: f64 =
+                next.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+            v = next;
+            lambda = norm;
+            if delta < 1e-14 {
+                break;
+            }
+        }
+        lambda.sqrt()
+    }
+
+    /// Smallest singular value via inverse power iteration (through an
+    /// explicit inverse — fine at these sizes). Requires square invertible.
+    pub fn sigma_min(&self) -> f64 {
+        let inv = self.inverse_f64();
+        let s = inv.sigma_max();
+        if s == 0.0 {
+            0.0
+        } else {
+            1.0 / s
+        }
+    }
+
+    /// Spectral (2-norm) condition number κ₂ = σ_max/σ_min.
+    pub fn condition_number(&self) -> f64 {
+        self.sigma_max() / self.sigma_min()
+    }
+
+    /// f64 Gauss-Jordan inverse with partial pivoting.
+    pub fn inverse_f64(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Mat::identity(n);
+        for col in 0..n {
+            let pivot = (col..n)
+                .max_by(|&r1, &r2| {
+                    a[(r1, col)]
+                        .abs()
+                        .partial_cmp(&a[(r2, col)].abs())
+                        .unwrap()
+                })
+                .unwrap();
+            assert!(a[(pivot, col)].abs() > 1e-300, "singular matrix");
+            if pivot != col {
+                a.swap_rows(pivot, col);
+                inv.swap_rows(pivot, col);
+            }
+            let p = 1.0 / a[(col, col)];
+            for j in 0..n {
+                a[(col, j)] *= p;
+                inv[(col, j)] *= p;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a[(r, col)];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    let ac = a[(col, j)];
+                    let ic = inv[(col, j)];
+                    a[(r, j)] -= f * ac;
+                    inv[(r, j)] -= f * ic;
+                }
+            }
+        }
+        inv
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    fn swap_rows(&mut self, r1: usize, r2: usize) {
+        if r1 == r2 {
+            return;
+        }
+        for j in 0..self.cols {
+            self.data.swap(r1 * self.cols + j, r2 * self.cols + j);
+        }
+    }
+
+    /// Round-trip every entry through f32 — models the precision loss of
+    /// storing the transform matrices in single precision.
+    pub fn through_f32(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f32 as f64).collect(),
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for i in 0..self.rows {
+            write!(f, "[")?;
+            for j in 0..self.cols {
+                if j > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{:>10.5}", self[(i, j)])?;
+            }
+            writeln!(f, "]")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::rational::rat;
+    use super::*;
+
+    fn r(n: i128) -> Rational {
+        Rational::from_int(n)
+    }
+
+    #[test]
+    fn ratmat_identity_matmul() {
+        let i3 = RatMat::identity(3);
+        let m = RatMat::from_rows(vec![
+            vec![r(1), r(2), r(3)],
+            vec![r(4), r(5), r(6)],
+            vec![r(7), r(8), r(10)],
+        ]);
+        assert_eq!(i3.matmul(&m), m);
+        assert_eq!(m.matmul(&i3), m);
+    }
+
+    #[test]
+    fn ratmat_inverse_roundtrip() {
+        let m = RatMat::from_rows(vec![
+            vec![r(1), r(2), r(3)],
+            vec![r(4), r(5), r(6)],
+            vec![r(7), r(8), r(10)],
+        ]);
+        let inv = m.inverse();
+        assert_eq!(m.matmul(&inv), RatMat::identity(3));
+        assert_eq!(inv.matmul(&m), RatMat::identity(3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ratmat_singular_inverse_panics() {
+        let m = RatMat::from_rows(vec![
+            vec![r(1), r(2)],
+            vec![r(2), r(4)],
+        ]);
+        let _ = m.inverse();
+    }
+
+    #[test]
+    fn ratmat_inverse_fractions() {
+        let m = RatMat::from_rows(vec![
+            vec![rat(1, 2), r(0)],
+            vec![rat(1, 3), rat(2, 5)],
+        ]);
+        let inv = m.inverse();
+        assert_eq!(m.matmul(&inv), RatMat::identity(2));
+    }
+
+    #[test]
+    fn ratmat_transpose_involution() {
+        let m = RatMat::from_rows(vec![vec![r(1), r(2), r(3)], vec![r(4), r(5), r(6)]]);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().rows(), 3);
+    }
+
+    #[test]
+    fn ratmat_nnz() {
+        let mut m = RatMat::zeros(3, 3);
+        m[(0, 0)] = r(1);
+        m[(2, 1)] = rat(3, 35);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn mat_matmul_known() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn mat_inverse_roundtrip() {
+        let m = Mat::from_rows(vec![
+            vec![4.0, 7.0],
+            vec![2.0, 6.0],
+        ]);
+        let inv = m.inverse_f64();
+        let prod = m.matmul(&inv);
+        for i in 0..2 {
+            for j in 0..2 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn condition_number_identity_is_one() {
+        let i4 = Mat::identity(4);
+        let k = i4.condition_number();
+        assert!((k - 1.0).abs() < 1e-6, "kappa={k}");
+    }
+
+    #[test]
+    fn condition_number_diagonal() {
+        // diag(10, 1) has kappa = 10.
+        let m = Mat::from_rows(vec![vec![10.0, 0.0], vec![0.0, 1.0]]);
+        let k = m.condition_number();
+        assert!((k - 10.0).abs() < 1e-6, "kappa={k}");
+    }
+
+    #[test]
+    fn sigma_max_known() {
+        // [[3,0],[0,4]] -> sigma_max 4
+        let m = Mat::from_rows(vec![vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert!((m.sigma_max() - 4.0).abs() < 1e-9);
+        assert!((m.sigma_min() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratmat_to_f64_matches() {
+        let m = RatMat::from_rows(vec![vec![rat(1, 2), rat(-3, 4)]]);
+        let f = m.to_f64();
+        assert_eq!(f.data(), &[0.5, -0.75]);
+    }
+}

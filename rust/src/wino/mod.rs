@@ -1,0 +1,20 @@
+//! Winograd/Toom-Cook substrate: exact matrix construction, polynomial
+//! bases, floating-point pipelines, and error analysis.
+//!
+//! This module is the mathematical core of the paper's contribution — see
+//! DESIGN.md §4 for how each submodule maps to the paper.
+
+pub mod basis;
+pub mod conv;
+pub mod error;
+pub mod matrix;
+pub mod poly;
+pub mod rational;
+pub mod toomcook;
+pub mod transform;
+
+pub use basis::{Base, BaseChange};
+pub use matrix::{Mat, RatMat};
+pub use rational::Rational;
+pub use toomcook::{Point, WinogradPlan};
+pub use transform::WinoF;

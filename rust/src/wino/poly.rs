@@ -1,0 +1,386 @@
+//! Polynomial arithmetic over exact rationals.
+//!
+//! Used to construct the Toom-Cook matrices (products of `(x - pᵢ)` root
+//! polynomials, Lagrange interpolation denominators) and the orthogonal
+//! polynomial families (Legendre, Chebyshev) whose change-of-base matrices
+//! the paper uses to condition the Winograd transforms.
+
+use super::rational::Rational;
+use std::fmt;
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// A polynomial with rational coefficients, `coeffs[i]` is the coefficient
+/// of `x^i`. The zero polynomial is represented by an empty vector; all
+/// other representations keep the leading coefficient non-zero.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Poly {
+    coeffs: Vec<Rational>,
+}
+
+impl Poly {
+    pub fn zero() -> Self {
+        Poly { coeffs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        Poly::constant(Rational::ONE)
+    }
+
+    pub fn constant(c: Rational) -> Self {
+        if c.is_zero() {
+            Poly::zero()
+        } else {
+            Poly { coeffs: vec![c] }
+        }
+    }
+
+    /// The monomial `x`.
+    pub fn x() -> Self {
+        Poly { coeffs: vec![Rational::ZERO, Rational::ONE] }
+    }
+
+    /// `x - r` — linear root polynomial used by Toom-Cook's CRT moduli.
+    pub fn linear_root(r: Rational) -> Self {
+        Poly { coeffs: vec![-r, Rational::ONE] }
+    }
+
+    /// Build from low-to-high coefficients, trimming leading zeros.
+    pub fn from_coeffs(coeffs: Vec<Rational>) -> Self {
+        let mut p = Poly { coeffs };
+        p.trim();
+        p
+    }
+
+    fn trim(&mut self) {
+        while matches!(self.coeffs.last(), Some(c) if c.is_zero()) {
+            self.coeffs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.coeffs.is_empty()
+    }
+
+    /// Degree; the zero polynomial reports degree 0 by convention here
+    /// (callers in this crate never branch on deg of zero).
+    pub fn degree(&self) -> usize {
+        self.coeffs.len().saturating_sub(1)
+    }
+
+    /// Coefficient of `x^i` (zero beyond the stored length).
+    pub fn coeff(&self, i: usize) -> Rational {
+        self.coeffs.get(i).copied().unwrap_or(Rational::ZERO)
+    }
+
+    pub fn coeffs(&self) -> &[Rational] {
+        &self.coeffs
+    }
+
+    pub fn leading(&self) -> Rational {
+        self.coeffs.last().copied().unwrap_or(Rational::ZERO)
+    }
+
+    /// Evaluate at `x` by Horner's rule.
+    pub fn eval(&self, x: Rational) -> Rational {
+        let mut acc = Rational::ZERO;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * x + c;
+        }
+        acc
+    }
+
+    /// Multiply every coefficient by `s`.
+    pub fn scale(&self, s: Rational) -> Self {
+        if s.is_zero() {
+            return Poly::zero();
+        }
+        Poly { coeffs: self.coeffs.iter().map(|&c| c * s).collect() }
+    }
+
+    /// Normalise so the leading coefficient is 1 (monic). Panics on zero.
+    pub fn monic(&self) -> Self {
+        assert!(!self.is_zero(), "monic of zero polynomial");
+        self.scale(self.leading().recip())
+    }
+
+    /// Polynomial long division: returns `(quotient, remainder)`.
+    pub fn div_rem(&self, divisor: &Poly) -> (Poly, Poly) {
+        assert!(!divisor.is_zero(), "polynomial division by zero");
+        if self.degree() < divisor.degree() || self.is_zero() {
+            return (Poly::zero(), self.clone());
+        }
+        let mut rem = self.coeffs.clone();
+        let dlead = divisor.leading();
+        let ddeg = divisor.degree();
+        let qdeg = self.degree() - ddeg;
+        let mut quot = vec![Rational::ZERO; qdeg + 1];
+        for qi in (0..=qdeg).rev() {
+            let top = rem[qi + ddeg];
+            if top.is_zero() {
+                continue;
+            }
+            let q = top / dlead;
+            quot[qi] = q;
+            for (di, &dc) in divisor.coeffs.iter().enumerate() {
+                rem[qi + di] = rem[qi + di] - q * dc;
+            }
+        }
+        (Poly::from_coeffs(quot), Poly::from_coeffs(rem))
+    }
+
+    /// Product of `(x - p)` for each point — the Toom-Cook modulus `m(x)`.
+    pub fn from_roots(roots: &[Rational]) -> Self {
+        let mut acc = Poly::one();
+        for &r in roots {
+            acc = &acc * &Poly::linear_root(r);
+        }
+        acc
+    }
+
+    /// Formal derivative.
+    pub fn derivative(&self) -> Poly {
+        if self.coeffs.len() <= 1 {
+            return Poly::zero();
+        }
+        let coeffs = self
+            .coeffs
+            .iter()
+            .enumerate()
+            .skip(1)
+            .map(|(i, &c)| c * Rational::from_int(i as i128))
+            .collect();
+        Poly::from_coeffs(coeffs)
+    }
+
+    /// Legendre polynomial `P_n` by Bonnet recursion:
+    /// `(n+1) P_{n+1} = (2n+1) x P_n − n P_{n−1}`.
+    pub fn legendre(n: usize) -> Poly {
+        let mut p0 = Poly::one();
+        if n == 0 {
+            return p0;
+        }
+        let mut p1 = Poly::x();
+        for k in 1..n {
+            let k = k as i128;
+            let a = Rational::new(2 * k + 1, k + 1); // (2n+1)/(n+1)
+            let b = Rational::new(k, k + 1); // n/(n+1)
+            let next = &(&Poly::x() * &p1).scale(a) - &p0.scale(b);
+            p0 = p1;
+            p1 = next;
+        }
+        p1
+    }
+
+    /// "Normalised" Legendre polynomial of the paper: `P_n` rescaled so the
+    /// leading coefficient is 1 (monic Legendre).
+    pub fn legendre_monic(n: usize) -> Poly {
+        Poly::legendre(n).monic()
+    }
+
+    /// Chebyshev polynomial of the first kind `T_n`:
+    /// `T_{n+1} = 2x T_n − T_{n−1}`.
+    pub fn chebyshev(n: usize) -> Poly {
+        let mut t0 = Poly::one();
+        if n == 0 {
+            return t0;
+        }
+        let mut t1 = Poly::x();
+        for _ in 1..n {
+            let next = &(&Poly::x() * &t1).scale(Rational::from_int(2)) - &t0;
+            t0 = t1;
+            t1 = next;
+        }
+        t1
+    }
+
+    /// Monic Chebyshev (leading coefficient rescaled to 1).
+    pub fn chebyshev_monic(n: usize) -> Poly {
+        Poly::chebyshev(n).monic()
+    }
+}
+
+impl fmt::Debug for Poly {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        let mut first = true;
+        for (i, c) in self.coeffs.iter().enumerate().rev() {
+            if c.is_zero() {
+                continue;
+            }
+            if !first {
+                write!(f, " + ")?;
+            }
+            first = false;
+            match i {
+                0 => write!(f, "{c}")?,
+                1 => write!(f, "{c}·x")?,
+                _ => write!(f, "{c}·x^{i}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Add for &Poly {
+    type Output = Poly;
+    fn add(self, rhs: &Poly) -> Poly {
+        let n = self.coeffs.len().max(rhs.coeffs.len());
+        let coeffs = (0..n).map(|i| self.coeff(i) + rhs.coeff(i)).collect();
+        Poly::from_coeffs(coeffs)
+    }
+}
+
+impl Sub for &Poly {
+    type Output = Poly;
+    fn sub(self, rhs: &Poly) -> Poly {
+        let n = self.coeffs.len().max(rhs.coeffs.len());
+        let coeffs = (0..n).map(|i| self.coeff(i) - rhs.coeff(i)).collect();
+        Poly::from_coeffs(coeffs)
+    }
+}
+
+impl Mul for &Poly {
+    type Output = Poly;
+    fn mul(self, rhs: &Poly) -> Poly {
+        if self.is_zero() || rhs.is_zero() {
+            return Poly::zero();
+        }
+        let mut coeffs =
+            vec![Rational::ZERO; self.coeffs.len() + rhs.coeffs.len() - 1];
+        for (i, &a) in self.coeffs.iter().enumerate() {
+            if a.is_zero() {
+                continue;
+            }
+            for (j, &b) in rhs.coeffs.iter().enumerate() {
+                coeffs[i + j] += a * b;
+            }
+        }
+        Poly::from_coeffs(coeffs)
+    }
+}
+
+impl Neg for &Poly {
+    type Output = Poly;
+    fn neg(self) -> Poly {
+        self.scale(-Rational::ONE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::rational::rat;
+    use super::*;
+
+    #[test]
+    fn from_roots_expands() {
+        // (x)(x-1)(x+1) = x^3 - x
+        let p = Poly::from_roots(&[rat(0, 1), rat(1, 1), rat(-1, 1)]);
+        assert_eq!(p.coeff(0), rat(0, 1));
+        assert_eq!(p.coeff(1), rat(-1, 1));
+        assert_eq!(p.coeff(2), rat(0, 1));
+        assert_eq!(p.coeff(3), rat(1, 1));
+    }
+
+    #[test]
+    fn eval_horner() {
+        let p = Poly::from_coeffs(vec![rat(1, 1), rat(2, 1), rat(3, 1)]); // 1+2x+3x^2
+        assert_eq!(p.eval(rat(2, 1)), rat(17, 1));
+        assert_eq!(p.eval(rat(-1, 2)), rat(3, 4));
+    }
+
+    #[test]
+    fn div_rem_roundtrip() {
+        let a = Poly::from_roots(&[rat(1, 1), rat(2, 1), rat(3, 1)]);
+        let b = Poly::from_roots(&[rat(2, 1)]);
+        let (q, r) = a.div_rem(&b);
+        assert!(r.is_zero());
+        assert_eq!(&(&q * &b) + &r, a);
+    }
+
+    #[test]
+    fn div_rem_with_remainder() {
+        // x^2 + 1 divided by x - 1 -> q = x + 1, r = 2
+        let a = Poly::from_coeffs(vec![rat(1, 1), rat(0, 1), rat(1, 1)]);
+        let b = Poly::linear_root(rat(1, 1));
+        let (q, r) = a.div_rem(&b);
+        assert_eq!(q, Poly::from_coeffs(vec![rat(1, 1), rat(1, 1)]));
+        assert_eq!(r, Poly::constant(rat(2, 1)));
+    }
+
+    #[test]
+    fn legendre_first_few() {
+        // P0=1, P1=x, P2=(3x^2-1)/2, P3=(5x^3-3x)/2, P4=(35x^4-30x^2+3)/8
+        assert_eq!(Poly::legendre(0), Poly::one());
+        assert_eq!(Poly::legendre(1), Poly::x());
+        let p2 = Poly::legendre(2);
+        assert_eq!(p2.coeff(2), rat(3, 2));
+        assert_eq!(p2.coeff(0), rat(-1, 2));
+        let p4 = Poly::legendre(4);
+        assert_eq!(p4.coeff(4), rat(35, 8));
+        assert_eq!(p4.coeff(2), rat(-30, 8));
+        assert_eq!(p4.coeff(0), rat(3, 8));
+    }
+
+    #[test]
+    fn legendre_monic_matches_paper_entries() {
+        // Monic P2 = x^2 - 1/3 — the paper's P^T row 3 is (-1/3, 0, 1, ...).
+        let p2 = Poly::legendre_monic(2);
+        assert_eq!(p2.coeff(0), rat(-1, 3));
+        assert_eq!(p2.coeff(2), rat(1, 1));
+        // Monic P3 = x^3 - 3/5 x — row 4 is (0, -3/5, 0, 1, ...).
+        let p3 = Poly::legendre_monic(3);
+        assert_eq!(p3.coeff(1), rat(-3, 5));
+        // Monic P4 = x^4 - 6/7 x^2 + 3/35 — row 5 is (3/35, 0, -6/7, 0, 1, ...).
+        let p4 = Poly::legendre_monic(4);
+        assert_eq!(p4.coeff(0), rat(3, 35));
+        assert_eq!(p4.coeff(2), rat(-6, 7));
+        // Monic P5 = x^5 - 10/9 x^3 + 5/21 x — row 6 (0, 5/21, 0, -10/9, 0, 1).
+        let p5 = Poly::legendre_monic(5);
+        assert_eq!(p5.coeff(1), rat(5, 21));
+        assert_eq!(p5.coeff(3), rat(-10, 9));
+    }
+
+    #[test]
+    fn chebyshev_first_few() {
+        // T2 = 2x^2 - 1, T3 = 4x^3 - 3x
+        let t2 = Poly::chebyshev(2);
+        assert_eq!(t2.coeff(2), rat(2, 1));
+        assert_eq!(t2.coeff(0), rat(-1, 1));
+        let t3 = Poly::chebyshev(3);
+        assert_eq!(t3.coeff(3), rat(4, 1));
+        assert_eq!(t3.coeff(1), rat(-3, 1));
+    }
+
+    #[test]
+    fn legendre_orthogonality_spot_check() {
+        // ∫_{-1}^{1} P2·P3 dx = 0: integrate the product exactly.
+        let prod = &Poly::legendre(2) * &Poly::legendre(3);
+        // Integral of x^k over [-1,1] is 0 for odd k, 2/(k+1) for even k.
+        let mut integral = Rational::ZERO;
+        for (k, &c) in prod.coeffs().iter().enumerate() {
+            if k % 2 == 0 {
+                integral += c * rat(2, (k + 1) as i128);
+            }
+        }
+        assert!(integral.is_zero());
+    }
+
+    #[test]
+    fn derivative() {
+        let p = Poly::from_coeffs(vec![rat(1, 1), rat(2, 1), rat(3, 1)]);
+        assert_eq!(
+            p.derivative(),
+            Poly::from_coeffs(vec![rat(2, 1), rat(6, 1)])
+        );
+        assert_eq!(Poly::one().derivative(), Poly::zero());
+    }
+
+    #[test]
+    fn monic_scales_leading_to_one() {
+        let p = Poly::from_coeffs(vec![rat(1, 1), rat(0, 1), rat(4, 1)]).monic();
+        assert!(p.leading().is_one());
+        assert_eq!(p.coeff(0), rat(1, 4));
+    }
+}

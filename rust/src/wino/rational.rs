@@ -1,0 +1,323 @@
+//! Exact rational arithmetic over `i128`.
+//!
+//! The Toom-Cook / Winograd transform matrices (G, Bᵀ, Aᵀ) and the
+//! polynomial-base-change matrices (P, P⁻¹) are built from exact rational
+//! entries — e.g. the paper's normalised-Legendre `Pᵀ` contains 3/35 and
+//! 10/9 — and only lowered to f32/f64 at the very end. Constructing them in
+//! floating point would contaminate the very error measurements the paper
+//! is about, so everything in `wino::{poly,toomcook,basis}` runs on this
+//! type.
+//!
+//! `i128` numerator/denominator is ample: the largest intermediate values in
+//! the constructions we perform (tile sizes ≤ 10, Legendre degree ≤ 10)
+//! stay far below 2⁶⁴ after reduction; every operation checks overflow.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Greatest common divisor (non-negative result).
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// An exact rational number `num/den`, always stored reduced with `den > 0`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rational {
+    num: i128,
+    den: i128,
+}
+
+impl Rational {
+    pub const ZERO: Rational = Rational { num: 0, den: 1 };
+    pub const ONE: Rational = Rational { num: 1, den: 1 };
+
+    /// Construct `num/den`, reducing to lowest terms. Panics if `den == 0`.
+    pub fn new(num: i128, den: i128) -> Self {
+        assert!(den != 0, "Rational with zero denominator");
+        let sign = if den < 0 { -1 } else { 1 };
+        let g = gcd(num, den).max(1);
+        Rational { num: sign * num / g, den: sign * den / g }
+    }
+
+    pub fn from_int(n: i128) -> Self {
+        Rational { num: n, den: 1 }
+    }
+
+    pub fn num(&self) -> i128 {
+        self.num
+    }
+
+    pub fn den(&self) -> i128 {
+        self.den
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.num == 1 && self.den == 1
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    pub fn abs(&self) -> Self {
+        Rational { num: self.num.abs(), den: self.den }
+    }
+
+    /// Multiplicative inverse. Panics on zero.
+    pub fn recip(&self) -> Self {
+        assert!(self.num != 0, "reciprocal of zero");
+        Rational::new(self.den, self.num)
+    }
+
+    pub fn pow(&self, mut e: u32) -> Self {
+        let mut base = *self;
+        let mut acc = Rational::ONE;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc * base;
+            }
+            base = base * base;
+            e >>= 1;
+        }
+        acc
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    pub fn to_f32(&self) -> f32 {
+        self.to_f64() as f32
+    }
+
+    fn checked_add(self, rhs: Self) -> Option<Self> {
+        // a/b + c/d = (a*d + c*b) / (b*d) — reduce via gcd of denominators
+        // first to keep intermediates small.
+        let g = gcd(self.den, rhs.den).max(1);
+        let lhs_mul = rhs.den / g;
+        let rhs_mul = self.den / g;
+        let num = self
+            .num
+            .checked_mul(lhs_mul)?
+            .checked_add(rhs.num.checked_mul(rhs_mul)?)?;
+        let den = self.den.checked_mul(lhs_mul)?;
+        Some(Rational::new(num, den))
+    }
+
+    fn checked_mul_impl(self, rhs: Self) -> Option<Self> {
+        // Cross-reduce before multiplying to avoid overflow.
+        let g1 = gcd(self.num, rhs.den).max(1);
+        let g2 = gcd(rhs.num, self.den).max(1);
+        let num = (self.num / g1).checked_mul(rhs.num / g2)?;
+        let den = (self.den / g2).checked_mul(rhs.den / g1)?;
+        Some(Rational::new(num, den))
+    }
+}
+
+impl fmt::Debug for Rational {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl fmt::Display for Rational {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl Add for Rational {
+    type Output = Rational;
+    fn add(self, rhs: Self) -> Self {
+        self.checked_add(rhs).expect("Rational add overflow")
+    }
+}
+
+impl Sub for Rational {
+    type Output = Rational;
+    fn sub(self, rhs: Self) -> Self {
+        self + (-rhs)
+    }
+}
+
+impl Mul for Rational {
+    type Output = Rational;
+    fn mul(self, rhs: Self) -> Self {
+        self.checked_mul_impl(rhs).expect("Rational mul overflow")
+    }
+}
+
+impl Div for Rational {
+    type Output = Rational;
+    fn div(self, rhs: Self) -> Self {
+        self * rhs.recip()
+    }
+}
+
+impl Neg for Rational {
+    type Output = Rational;
+    fn neg(self) -> Self {
+        Rational { num: -self.num, den: self.den }
+    }
+}
+
+impl AddAssign for Rational {
+    fn add_assign(&mut self, rhs: Self) {
+        *self = *self + rhs;
+    }
+}
+
+impl SubAssign for Rational {
+    fn sub_assign(&mut self, rhs: Self) {
+        *self = *self - rhs;
+    }
+}
+
+impl MulAssign for Rational {
+    fn mul_assign(&mut self, rhs: Self) {
+        *self = *self * rhs;
+    }
+}
+
+impl DivAssign for Rational {
+    fn div_assign(&mut self, rhs: Self) {
+        *self = *self / rhs;
+    }
+}
+
+impl PartialOrd for Rational {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Rational {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // a/b ? c/d  <=>  a*d ? c*b (both dens positive)
+        (self.num * other.den).cmp(&(other.num * self.den))
+    }
+}
+
+impl From<i128> for Rational {
+    fn from(n: i128) -> Self {
+        Rational::from_int(n)
+    }
+}
+
+impl From<i64> for Rational {
+    fn from(n: i64) -> Self {
+        Rational::from_int(n as i128)
+    }
+}
+
+impl From<i32> for Rational {
+    fn from(n: i32) -> Self {
+        Rational::from_int(n as i128)
+    }
+}
+
+/// Convenience constructor: `rat(3, 35)` = 3/35.
+pub fn rat(num: i128, den: i128) -> Rational {
+    Rational::new(num, den)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduces_on_construction() {
+        let r = Rational::new(6, -8);
+        assert_eq!(r.num(), -3);
+        assert_eq!(r.den(), 4);
+    }
+
+    #[test]
+    fn zero_and_one() {
+        assert!(Rational::ZERO.is_zero());
+        assert!(Rational::ONE.is_one());
+        assert_eq!(Rational::ZERO + Rational::ONE, Rational::ONE);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_denominator_panics() {
+        let _ = Rational::new(1, 0);
+    }
+
+    #[test]
+    fn add_sub() {
+        assert_eq!(rat(1, 3) + rat(1, 6), rat(1, 2));
+        assert_eq!(rat(1, 2) - rat(1, 3), rat(1, 6));
+        assert_eq!(rat(-1, 2) + rat(1, 2), Rational::ZERO);
+    }
+
+    #[test]
+    fn mul_div() {
+        assert_eq!(rat(2, 3) * rat(3, 4), rat(1, 2));
+        assert_eq!(rat(1, 2) / rat(1, 4), rat(2, 1));
+    }
+
+    #[test]
+    fn recip() {
+        assert_eq!(rat(-3, 5).recip(), rat(-5, 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn recip_zero_panics() {
+        let _ = Rational::ZERO.recip();
+    }
+
+    #[test]
+    fn pow() {
+        assert_eq!(rat(1, 2).pow(0), Rational::ONE);
+        assert_eq!(rat(1, 2).pow(3), rat(1, 8));
+        assert_eq!(rat(-2, 1).pow(3), rat(-8, 1));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(rat(1, 3) < rat(1, 2));
+        assert!(rat(-1, 2) < rat(-1, 3));
+        assert!(rat(3, 35) > Rational::ZERO);
+    }
+
+    #[test]
+    fn to_float() {
+        assert!((rat(3, 35).to_f64() - 0.08571428571428572).abs() < 1e-15);
+        assert_eq!(rat(10, 9).to_f32(), (10.0f64 / 9.0) as f32);
+    }
+
+    #[test]
+    fn cross_reduction_avoids_overflow() {
+        // (big/1) * (1/big) must not overflow even though num*num would.
+        let big = i128::MAX / 2;
+        let a = Rational::new(big, 1);
+        let b = Rational::new(1, big);
+        assert_eq!(a * b, Rational::ONE);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(format!("{}", rat(3, 35)), "3/35");
+        assert_eq!(format!("{}", rat(4, 2)), "2");
+        assert_eq!(format!("{}", rat(-1, 3)), "-1/3");
+    }
+}

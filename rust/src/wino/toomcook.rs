@@ -1,0 +1,473 @@
+//! Toom-Cook / Winograd convolution matrix construction, in exact arithmetic.
+//!
+//! For `F(m, r)` — m correlation outputs of an r-tap filter over an
+//! `N = m + r − 1` input tile — the algorithm is
+//!
+//! ```text
+//! Y = Aᵀ [ (G g) ⊙ (Bᵀ d) ]          (1-D)
+//! Y = Aᵀ [ (G W Gᵀ) ⊙ (Bᵀ X B) ] A    (2-D)
+//! ```
+//!
+//! Derivation used here (Toom–Cook + Matrix Exchange, as in the paper's
+//! refs [1,2,11]): evaluate the filter polynomial `g(x)` and the
+//! linear-convolution operand at `N` interpolation points (the last one may
+//! be the point at infinity, contributing the leading coefficient), multiply
+//! pointwise, interpolate back. With
+//!
+//! * `V` — the generalised `N×N` Vandermonde over the points (∞ row = e_N),
+//! * `V_r`, `V_m` — its first `r` / `m` columns,
+//!
+//! the linear convolution of `u` (len m) by `g` is
+//! `s = V⁻¹ [(V_r g) ⊙ (V_m u)]`, and the Matrix Exchange Theorem
+//! transposes the `u ↦ s` map into the correlation map, giving
+//!
+//! * `A = V_m`              (N×m)
+//! * `G = F⁻¹ V_r`          (N×r),  `F = diag(Nᵢ)`, `Nᵢ = Πₖ≠ᵢ(pᵢ−pₖ)`
+//! * `Bᵀ = F V⁻ᵀ`           (N×N)
+//!
+//! The diagonal `F` rebalancing (allowed because `(Fa)⊙(F⁻¹b) = a⊙b`) is the
+//! standard convention that makes `Bᵀ` integer-valued for the classic point
+//! sets — exactly the matrices of Lavin & Gray / the paper's Fig. 1.
+//!
+//! Everything is exact (`Rational`); `WinogradPlan::exact()` is
+//! property-tested against direct correlation in `tests` below.
+
+use super::matrix::RatMat;
+use super::rational::{rat, Rational};
+
+/// An interpolation point: finite rational or the point at infinity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Point {
+    Finite(Rational),
+    Infinity,
+}
+
+impl Point {
+    pub fn finite(num: i128, den: i128) -> Point {
+        Point::Finite(rat(num, den))
+    }
+}
+
+/// The canonical interpolation-point ladder used throughout the literature
+/// (and by the paper for F(4,3)): `0, 1, −1, ½, −½, 2, −2, ¼, −¼, 4, −4, …`
+/// with the point at infinity last.
+///
+/// `n` is the total number of points including infinity.
+pub fn standard_points(n: usize) -> Vec<Point> {
+    assert!(n >= 1);
+    let ladder = [
+        (0i128, 1i128),
+        (1, 1),
+        (-1, 1),
+        (1, 2),
+        (-1, 2),
+        (2, 1),
+        (-2, 1),
+        (1, 4),
+        (-1, 4),
+        (4, 1),
+        (-4, 1),
+        (3, 4),
+        (-3, 4),
+    ];
+    assert!(n - 1 <= ladder.len(), "point ladder exhausted for n={n}");
+    let mut pts: Vec<Point> =
+        ladder[..n - 1].iter().map(|&(a, b)| Point::finite(a, b)).collect();
+    pts.push(Point::Infinity);
+    pts
+}
+
+/// A complete Winograd/Toom-Cook plan for `F(m, r)`: the exact transform
+/// matrices plus cost metadata.
+#[derive(Clone)]
+pub struct WinogradPlan {
+    /// Output tile size (per dimension).
+    pub m: usize,
+    /// Kernel size (per dimension).
+    pub r: usize,
+    /// Input tile size `N = m + r − 1`.
+    pub n: usize,
+    /// Interpolation points (len N).
+    pub points: Vec<Point>,
+    /// `A` — N×m output-side evaluation matrix (apply as `Aᵀ · `).
+    pub a: RatMat,
+    /// `G` — N×r weight transform.
+    pub g: RatMat,
+    /// `Bᵀ` — N×N input transform (apply as `Bᵀ · d`).
+    pub bt: RatMat,
+}
+
+impl WinogradPlan {
+    /// Build the plan for `F(m, r)` with the standard point ladder.
+    pub fn new(m: usize, r: usize) -> WinogradPlan {
+        let n = m + r - 1;
+        Self::with_points(m, r, standard_points(n))
+    }
+
+    /// Build the plan for `F(m, r)` over explicit interpolation points.
+    /// Points must be pairwise distinct; at most one `Infinity`, and if
+    /// present it must be the last point.
+    pub fn with_points(m: usize, r: usize, points: Vec<Point>) -> WinogradPlan {
+        let n = m + r - 1;
+        assert_eq!(points.len(), n, "need N = m+r-1 = {n} points");
+        for (i, p) in points.iter().enumerate() {
+            if matches!(p, Point::Infinity) {
+                assert_eq!(i, n - 1, "Infinity must be the last point");
+            }
+        }
+        // Distinctness of finite points.
+        let finite: Vec<Rational> = points
+            .iter()
+            .filter_map(|p| match p {
+                Point::Finite(v) => Some(*v),
+                Point::Infinity => None,
+            })
+            .collect();
+        for i in 0..finite.len() {
+            for j in (i + 1)..finite.len() {
+                assert!(finite[i] != finite[j], "duplicate interpolation point");
+            }
+        }
+
+        let has_inf = matches!(points.last(), Some(Point::Infinity));
+
+        // Generalised Vandermonde V (N×N): finite row i = [1, p, …, p^{N−1}],
+        // infinity row = e_{N−1} (leading coefficient of the degree-(N−1)
+        // product polynomial).
+        let mut v = RatMat::zeros(n, n);
+        for (i, p) in points.iter().enumerate() {
+            match p {
+                Point::Finite(pv) => {
+                    for j in 0..n {
+                        v[(i, j)] = pv.pow(j as u32);
+                    }
+                }
+                Point::Infinity => {
+                    v[(i, n - 1)] = Rational::ONE;
+                }
+            }
+        }
+
+        // A = V_m, pre-scale G0 = V_r.
+        let mut a = RatMat::zeros(n, m);
+        let mut g = RatMat::zeros(n, r);
+        for (i, p) in points.iter().enumerate() {
+            match p {
+                Point::Finite(pv) => {
+                    for t in 0..m {
+                        a[(i, t)] = pv.pow(t as u32);
+                    }
+                    for j in 0..r {
+                        g[(i, j)] = pv.pow(j as u32);
+                    }
+                }
+                Point::Infinity => {
+                    a[(i, m - 1)] = Rational::ONE;
+                    g[(i, r - 1)] = Rational::ONE;
+                }
+            }
+        }
+
+        // F = diag(Nᵢ) over finite points (and 1 for the ∞ row): the
+        // Lagrange denominators Nᵢ = Πₖ≠ᵢ (pᵢ − pₖ).
+        let mut f = vec![Rational::ONE; n];
+        let n_finite = finite.len();
+        for i in 0..n_finite {
+            let mut prod = Rational::ONE;
+            for k in 0..n_finite {
+                if k != i {
+                    prod *= finite[i] - finite[k];
+                }
+            }
+            f[i] = prod;
+        }
+        debug_assert!(has_inf || finite.len() == n);
+
+        // G = F⁻¹ V_r ;  Bᵀ = F V⁻ᵀ.
+        for i in 0..n {
+            let inv = f[i].recip();
+            for j in 0..r {
+                g[(i, j)] *= inv;
+            }
+        }
+        let v_inv_t = v.inverse().transpose();
+        let mut bt = RatMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                bt[(i, j)] = f[i] * v_inv_t[(i, j)];
+            }
+        }
+
+        WinogradPlan { m, r, n, points, a, g, bt }
+    }
+
+    /// Exact 1-D Winograd correlation: `Y = Aᵀ[(G g) ⊙ (Bᵀ d)]`.
+    /// `g` has len r, `d` len N; returns len m.
+    pub fn correlate_exact(&self, g: &[Rational], d: &[Rational]) -> Vec<Rational> {
+        assert_eq!(g.len(), self.r);
+        assert_eq!(d.len(), self.n);
+        let gt: Vec<Rational> = (0..self.n)
+            .map(|i| (0..self.r).map(|j| self.g[(i, j)] * g[j]).fold(Rational::ZERO, |a, b| a + b))
+            .collect();
+        let dt: Vec<Rational> = (0..self.n)
+            .map(|i| (0..self.n).map(|j| self.bt[(i, j)] * d[j]).fold(Rational::ZERO, |a, b| a + b))
+            .collect();
+        let had: Vec<Rational> = gt.iter().zip(&dt).map(|(&a, &b)| a * b).collect();
+        (0..self.m)
+            .map(|t| {
+                (0..self.n)
+                    .map(|i| self.a[(i, t)] * had[i])
+                    .fold(Rational::ZERO, |a, b| a + b)
+            })
+            .collect()
+    }
+
+    /// Number of general multiplications per 1-D output point: `N/m`.
+    pub fn mults_per_output_1d(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    /// General multiplications per 2-D output point: `N²/m²`
+    /// (paper §1/§2: 2.25 for F(4×4, 3×3) vs 9 for direct 3×3).
+    pub fn mults_per_output_2d(&self) -> f64 {
+        let n = self.n as f64;
+        let m = self.m as f64;
+        (n * n) / (m * m)
+    }
+}
+
+/// Cost model for one 2-D Winograd layer application — used by the
+/// transform-cost bench (experiment M2 in DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransformCost {
+    /// General (Hadamard-stage) multiplications per output point.
+    pub general_mults_per_output: f64,
+    /// Scalar multiply-adds in the input transform, per input tile.
+    pub input_transform_madds: usize,
+    /// Scalar multiply-adds in the output transform, per tile.
+    pub output_transform_madds: usize,
+    /// Scalar multiply-adds in the weight transform, per filter (amortised
+    /// across the whole feature map, so usually negligible).
+    pub weight_transform_madds: usize,
+}
+
+impl WinogradPlan {
+    /// Transform cost of the plain (canonical-base) 2-D algorithm.
+    /// A two-sided transform `M X Mᵀ` costs ≈ `nnz(M)` multiply-adds per
+    /// column on each side, so sparsity of the matrices directly prices it.
+    pub fn cost_canonical(&self) -> TransformCost {
+        // Input: Bᵀ X B, X is N×N → 2 matmuls of N×N by N×N with sparsity
+        // nnz(Bᵀ): cost ≈ nnz(Bᵀ)·N per side.
+        let bt_madds = 2 * self.bt.nnz() * self.n;
+        // Output: Aᵀ M A, M is N×N, Aᵀ is m×N: nnz(A)·N + nnz(A)·m.
+        let at_madds = self.a.nnz() * self.n + self.a.nnz() * self.m;
+        // Weights: G W Gᵀ, W is r×r: nnz(G)·r + nnz(G)·N.
+        let g_madds = self.g.nnz() * self.r + self.g.nnz() * self.n;
+        TransformCost {
+            general_mults_per_output: self.mults_per_output_2d(),
+            input_transform_madds: bt_madds,
+            output_transform_madds: at_madds,
+            weight_transform_madds: g_madds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::rational::rat;
+    use super::*;
+
+    /// Direct (oracle) correlation: Y_t = Σ_j g_j d_{t+j}.
+    fn direct_corr(g: &[Rational], d: &[Rational], m: usize) -> Vec<Rational> {
+        (0..m)
+            .map(|t| {
+                g.iter()
+                    .enumerate()
+                    .map(|(j, &gj)| gj * d[t + j])
+                    .fold(Rational::ZERO, |a, b| a + b)
+            })
+            .collect()
+    }
+
+    fn pseudorandom_rationals(seed: u64, n: usize) -> Vec<Rational> {
+        // xorshift64* — deterministic small rationals in [-8, 8] with
+        // denominators in {1,2,4}.
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            let v = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 33) as i128;
+            let num = (v % 17) - 8;
+            let den = [1i128, 2, 4][(v % 3).unsigned_abs() as usize % 3];
+            out.push(rat(num, den));
+        }
+        out
+    }
+
+    #[test]
+    fn f23_matches_direct_exactly() {
+        let plan = WinogradPlan::new(2, 3);
+        assert_eq!(plan.n, 4);
+        for seed in 0..50 {
+            let g = pseudorandom_rationals(seed, 3);
+            let d = pseudorandom_rationals(seed + 1000, 4);
+            assert_eq!(plan.correlate_exact(&g, &d), direct_corr(&g, &d, 2));
+        }
+    }
+
+    #[test]
+    fn f43_matches_direct_exactly() {
+        let plan = WinogradPlan::new(4, 3);
+        assert_eq!(plan.n, 6);
+        for seed in 0..50 {
+            let g = pseudorandom_rationals(seed, 3);
+            let d = pseudorandom_rationals(seed + 91, 6);
+            assert_eq!(plan.correlate_exact(&g, &d), direct_corr(&g, &d, 4));
+        }
+    }
+
+    #[test]
+    fn f63_matches_direct_exactly() {
+        let plan = WinogradPlan::new(6, 3);
+        assert_eq!(plan.n, 8);
+        for seed in 0..25 {
+            let g = pseudorandom_rationals(seed, 3);
+            let d = pseudorandom_rationals(seed + 7, 8);
+            assert_eq!(plan.correlate_exact(&g, &d), direct_corr(&g, &d, 6));
+        }
+    }
+
+    #[test]
+    fn f25_matches_direct_exactly() {
+        // Different kernel size exercises the V_r slicing.
+        let plan = WinogradPlan::new(2, 5);
+        assert_eq!(plan.n, 6);
+        for seed in 0..25 {
+            let g = pseudorandom_rationals(seed, 5);
+            let d = pseudorandom_rationals(seed + 3, 6);
+            assert_eq!(plan.correlate_exact(&g, &d), direct_corr(&g, &d, 2));
+        }
+    }
+
+    #[test]
+    fn all_finite_points_also_exact() {
+        // Without the infinity point the plain Vandermonde path is used.
+        let pts = vec![
+            Point::finite(0, 1),
+            Point::finite(1, 1),
+            Point::finite(-1, 1),
+            Point::finite(2, 1),
+        ];
+        let plan = WinogradPlan::with_points(2, 3, pts);
+        for seed in 0..25 {
+            let g = pseudorandom_rationals(seed, 3);
+            let d = pseudorandom_rationals(seed + 13, 4);
+            assert_eq!(plan.correlate_exact(&g, &d), direct_corr(&g, &d, 2));
+        }
+    }
+
+    #[test]
+    fn f23_bt_is_integer_valued() {
+        // The classic F(2,3) Bᵀ is the integer matrix
+        // [[1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]] up to row signs that
+        // depend on the F convention; with F=diag(Nᵢ) all entries must be
+        // integers.
+        let plan = WinogradPlan::new(2, 3);
+        for i in 0..plan.n {
+            for j in 0..plan.n {
+                assert!(
+                    plan.bt[(i, j)].is_integer(),
+                    "Bᵀ[{i},{j}] = {} not integer",
+                    plan.bt[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f43_shapes() {
+        let plan = WinogradPlan::new(4, 3);
+        assert_eq!((plan.a.rows(), plan.a.cols()), (6, 4));
+        assert_eq!((plan.g.rows(), plan.g.cols()), (6, 3));
+        assert_eq!((plan.bt.rows(), plan.bt.cols()), (6, 6));
+    }
+
+    #[test]
+    fn mult_counts_match_paper() {
+        // Paper §2: F(4×4, 3×3) needs 2.25 general mults per output point
+        // (vs 9 for direct 3×3); Meng & Brothers' superlinear variant: 3.06.
+        let plan = WinogradPlan::new(4, 3);
+        assert!((plan.mults_per_output_2d() - 2.25).abs() < 1e-12);
+        let f23 = WinogradPlan::new(2, 3);
+        assert!((f23.mults_per_output_2d() - 4.0).abs() < 1e-12);
+        let f63 = WinogradPlan::new(6, 3);
+        assert!((f63.mults_per_output_2d() - (64.0 / 36.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_points_rejected() {
+        let pts = vec![
+            Point::finite(1, 1),
+            Point::finite(1, 1),
+            Point::finite(0, 1),
+            Point::Infinity,
+        ];
+        let _ = WinogradPlan::with_points(2, 3, pts);
+    }
+
+    #[test]
+    #[should_panic]
+    fn infinity_not_last_rejected() {
+        let pts = vec![
+            Point::Infinity,
+            Point::finite(1, 1),
+            Point::finite(0, 1),
+            Point::finite(-1, 1),
+        ];
+        let _ = WinogradPlan::with_points(2, 3, pts);
+    }
+
+    #[test]
+    fn standard_points_ladder() {
+        let pts = standard_points(6);
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], Point::finite(0, 1));
+        assert_eq!(pts[3], Point::finite(1, 2));
+        assert_eq!(pts[5], Point::Infinity);
+    }
+
+    #[test]
+    fn cost_canonical_positive() {
+        let c = WinogradPlan::new(4, 3).cost_canonical();
+        assert!(c.input_transform_madds > 0);
+        assert!(c.output_transform_madds > 0);
+        assert!(c.weight_transform_madds > 0);
+        assert!((c.general_mults_per_output - 2.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hadamard_rebalance_invariance() {
+        // Multiplying G rows by s and Bᵀ rows by 1/s must not change the
+        // result — the diagonal-rescale freedom the construction relies on.
+        let plan = WinogradPlan::new(4, 3);
+        let mut g2 = plan.g.clone();
+        let mut bt2 = plan.bt.clone();
+        for i in 0..plan.n {
+            let s = rat(((i + 2) as i128) * 3, 2);
+            for j in 0..plan.r {
+                g2[(i, j)] *= s;
+            }
+            let inv = s.recip();
+            for j in 0..plan.n {
+                bt2[(i, j)] *= inv;
+            }
+        }
+        let rebal = WinogradPlan { g: g2, bt: bt2, ..plan.clone() };
+        let g = pseudorandom_rationals(5, 3);
+        let d = pseudorandom_rationals(6, 6);
+        assert_eq!(plan.correlate_exact(&g, &d), rebal.correlate_exact(&g, &d));
+    }
+}

@@ -1,0 +1,263 @@
+//! Floating-point 2-D Winograd convolution — canonical (paper eq. 3) and
+//! base-changed (paper eq. 4) evaluation pipelines.
+//!
+//! Both pipelines are algebraically identical; they differ only in the
+//! order of floating-point operations, which is precisely what the paper
+//! exploits: the base-changed pipeline routes the arithmetic through
+//! better-conditioned intermediates, so the *rounding* (fp32 here, int8 in
+//! `quant::qwino`) error shrinks.
+
+use super::basis::{Base, BaseChange};
+use super::matrix::Mat;
+use super::toomcook::WinogradPlan;
+
+/// Floating-point lowering of a [`WinogradPlan`] + [`BaseChange`]: all the
+/// matrices of eq. 4 precomputed in f64 (and optionally rounded through f32
+/// to model single-precision storage).
+#[derive(Clone)]
+pub struct WinoF {
+    pub m: usize,
+    pub r: usize,
+    pub n: usize,
+    pub base: Base,
+    /// `A_P = P A` (N×m).
+    pub a_p: Mat,
+    /// `G_P = P G` (N×r).
+    pub g_p: Mat,
+    /// `B_Pᵀ = (P B)ᵀ = Bᵀ Pᵀ` (N×N).
+    pub bt_p: Mat,
+    /// `P⁻¹` (N×N).
+    pub p_inv: Mat,
+    /// `P⁻ᵀ` (N×N).
+    pub p_inv_t: Mat,
+    /// True when `P = I`, letting the hot path skip the base-change stages.
+    pub identity_base: bool,
+}
+
+impl WinoF {
+    pub fn new(plan: &WinogradPlan, base: Base) -> WinoF {
+        let bc = BaseChange::new(base, plan.n);
+        let p = bc.p.to_f64();
+        let p_inv = bc.p_inv.to_f64();
+        let a = plan.a.to_f64();
+        let g = plan.g.to_f64();
+        let bt = plan.bt.to_f64();
+        WinoF {
+            m: plan.m,
+            r: plan.r,
+            n: plan.n,
+            base,
+            a_p: p.matmul(&a),
+            g_p: p.matmul(&g),
+            bt_p: bt.matmul(&p.transpose()),
+            p_inv_t: p_inv.transpose(),
+            p_inv,
+            identity_base: bc.is_identity(),
+        }
+    }
+
+    /// Round every transform matrix through f32 — models storing the
+    /// transforms in single precision (as a deployed kernel would).
+    pub fn through_f32(&self) -> WinoF {
+        WinoF {
+            a_p: self.a_p.through_f32(),
+            g_p: self.g_p.through_f32(),
+            bt_p: self.bt_p.through_f32(),
+            p_inv: self.p_inv.through_f32(),
+            p_inv_t: self.p_inv_t.through_f32(),
+            ..self.clone()
+        }
+    }
+
+    /// Weight transform: canonical `G W Gᵀ`, or through the base:
+    /// `P⁻¹ (G_P W G_Pᵀ) P⁻ᵀ` (paper eq. 2). `w` is r×r; result N×N.
+    pub fn transform_weights(&self, w: &Mat) -> Mat {
+        assert_eq!((w.rows(), w.cols()), (self.r, self.r));
+        let core = self.g_p.matmul(w).matmul(&self.g_p.transpose());
+        if self.identity_base {
+            core
+        } else {
+            self.p_inv.matmul(&core).matmul(&self.p_inv_t)
+        }
+    }
+
+    /// Input transform: canonical `Bᵀ X B`, or `B_Pᵀ (P⁻ᵀ X P⁻¹) B_P`.
+    /// `x` is N×N; result N×N.
+    pub fn transform_input(&self, x: &Mat) -> Mat {
+        assert_eq!((x.rows(), x.cols()), (self.n, self.n));
+        if self.identity_base {
+            self.bt_p.matmul(x).matmul(&self.bt_p.transpose())
+        } else {
+            let xp = self.p_inv_t.matmul(x).matmul(&self.p_inv);
+            self.bt_p.matmul(&xp).matmul(&self.bt_p.transpose())
+        }
+    }
+
+    /// Output transform: canonical `Aᵀ M A`, or `A_Pᵀ (P⁻ᵀ M P⁻¹) A_P`.
+    /// `m_had` is N×N; result m×m.
+    pub fn transform_output(&self, m_had: &Mat) -> Mat {
+        assert_eq!((m_had.rows(), m_had.cols()), (self.n, self.n));
+        let at = self.a_p.transpose();
+        if self.identity_base {
+            at.matmul(m_had).matmul(&self.a_p)
+        } else {
+            let mp = self.p_inv_t.matmul(m_had).matmul(&self.p_inv);
+            at.matmul(&mp).matmul(&self.a_p)
+        }
+    }
+
+    /// Full single-tile, single-channel 2-D Winograd correlation:
+    /// `Y = out( in(X) ⊙ wt(W) )`, X N×N, W r×r, Y m×m.
+    pub fn correlate_tile(&self, x: &Mat, w: &Mat) -> Mat {
+        let xt = self.transform_input(x);
+        let wt = self.transform_weights(w);
+        let mut had = Mat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                had[(i, j)] = xt[(i, j)] * wt[(i, j)];
+            }
+        }
+        self.transform_output(&had)
+    }
+
+    /// Multi-channel tile correlation: Hadamard products accumulated over
+    /// `C` input channels before the single output transform — the layout
+    /// every real Winograd conv layer uses (and where quantised accumulation
+    /// error concentrates, per the paper's §5/§6 analysis).
+    pub fn correlate_tile_multichannel(&self, xs: &[Mat], ws: &[Mat]) -> Mat {
+        assert_eq!(xs.len(), ws.len());
+        let mut acc = Mat::zeros(self.n, self.n);
+        for (x, w) in xs.iter().zip(ws) {
+            let xt = self.transform_input(x);
+            let wt = self.transform_weights(w);
+            for i in 0..self.n {
+                for j in 0..self.n {
+                    acc[(i, j)] += xt[(i, j)] * wt[(i, j)];
+                }
+            }
+        }
+        self.transform_output(&acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::conv::direct_correlate_2d;
+    use super::*;
+
+    fn prng_mat(seed: u64, rows: usize, cols: usize, scale: f64) -> Mat {
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            let u = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64
+                / (1u64 << 53) as f64;
+            data.push((u * 2.0 - 1.0) * scale);
+        }
+        Mat::from_vec(rows, cols, data)
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                let d = (a[(i, j)] - b[(i, j)]).abs();
+                assert!(
+                    d <= tol,
+                    "mismatch at ({i},{j}): {} vs {} (|Δ|={d})",
+                    a[(i, j)],
+                    b[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f43_canonical_matches_direct() {
+        let plan = WinogradPlan::new(4, 3);
+        let wf = WinoF::new(&plan, Base::Canonical);
+        for seed in 0..20 {
+            let x = prng_mat(seed, 6, 6, 1.0);
+            let w = prng_mat(seed + 100, 3, 3, 1.0);
+            let direct = direct_correlate_2d(&x, &w);
+            let wino = wf.correlate_tile(&x, &w);
+            assert_close(&wino, &direct, 1e-10);
+        }
+    }
+
+    #[test]
+    fn f43_legendre_matches_direct() {
+        let plan = WinogradPlan::new(4, 3);
+        let wf = WinoF::new(&plan, Base::Legendre);
+        for seed in 0..20 {
+            let x = prng_mat(seed + 7, 6, 6, 1.0);
+            let w = prng_mat(seed + 300, 3, 3, 1.0);
+            assert_close(&wf.correlate_tile(&x, &w), &direct_correlate_2d(&x, &w), 1e-10);
+        }
+    }
+
+    #[test]
+    fn f43_chebyshev_matches_direct() {
+        let plan = WinogradPlan::new(4, 3);
+        let wf = WinoF::new(&plan, Base::Chebyshev);
+        let x = prng_mat(42, 6, 6, 1.0);
+        let w = prng_mat(43, 3, 3, 1.0);
+        assert_close(&wf.correlate_tile(&x, &w), &direct_correlate_2d(&x, &w), 1e-10);
+    }
+
+    #[test]
+    fn f23_and_f63_all_bases_match_direct() {
+        for (m, r) in [(2usize, 3usize), (6, 3)] {
+            let plan = WinogradPlan::new(m, r);
+            for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+                let wf = WinoF::new(&plan, base);
+                let x = prng_mat(m as u64 * 31, plan.n, plan.n, 1.0);
+                let w = prng_mat(m as u64 * 37, r, r, 1.0);
+                // f63 is numerically harsher — widen tolerance accordingly.
+                assert_close(
+                    &wf.correlate_tile(&x, &w),
+                    &direct_correlate_2d(&x, &w),
+                    1e-8,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multichannel_matches_sum_of_tiles() {
+        let plan = WinogradPlan::new(4, 3);
+        let wf = WinoF::new(&plan, Base::Legendre);
+        let xs: Vec<Mat> = (0..8).map(|c| prng_mat(c, 6, 6, 1.0)).collect();
+        let ws: Vec<Mat> = (0..8).map(|c| prng_mat(c + 50, 3, 3, 1.0)).collect();
+        let fused = wf.correlate_tile_multichannel(&xs, &ws);
+        let mut summed = Mat::zeros(4, 4);
+        for (x, w) in xs.iter().zip(&ws) {
+            let y = direct_correlate_2d(x, w);
+            for i in 0..4 {
+                for j in 0..4 {
+                    summed[(i, j)] += y[(i, j)];
+                }
+            }
+        }
+        assert_close(&fused, &summed, 1e-9);
+    }
+
+    #[test]
+    fn legendre_pipeline_differs_in_rounding_not_value() {
+        // Through f32-rounded transform matrices the two pipelines give
+        // *different* results (different rounding) while both stay close to
+        // the exact answer — the mechanism the paper exploits.
+        let plan = WinogradPlan::new(4, 3);
+        let can = WinoF::new(&plan, Base::Canonical).through_f32();
+        let leg = WinoF::new(&plan, Base::Legendre).through_f32();
+        let x = prng_mat(5, 6, 6, 10.0);
+        let w = prng_mat(6, 3, 3, 1.0);
+        let yc = can.correlate_tile(&x, &w);
+        let yl = leg.correlate_tile(&x, &w);
+        let direct = direct_correlate_2d(&x, &w);
+        assert_close(&yc, &direct, 1e-3);
+        assert_close(&yl, &direct, 1e-3);
+    }
+}
