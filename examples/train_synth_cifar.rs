@@ -4,8 +4,8 @@
 //! synthetic-CIFAR batches into the AOT-compiled JAX train step (L2, with
 //! the quantized Winograd layers whose tile pipeline is the Pallas kernel's
 //! math, L1), evaluates on the held-out split, logs the loss curve, and
-//! writes a checkpoint + metrics CSV. The run recorded in EXPERIMENTS.md
-//! §E2E came from this binary.
+//! writes a checkpoint + metrics CSV (the historical end-to-end validation
+//! run for the reproduction came from this binary).
 //!
 //! Run: `make artifacts && cargo run --release --example train_synth_cifar
 //!       [tag] [steps]`  (default: t2-L-flex-8b-w0.25, 300 steps)

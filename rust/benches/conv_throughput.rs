@@ -1,13 +1,22 @@
-//! Bench M3 (DESIGN.md §6): layer-level throughput — direct conv vs the
-//! Winograd layer (canonical/Legendre, float/quantized) on realistic
-//! ResNet-stage shapes. Checks the paper's §1 claim that Winograd's
-//! reduced multiplication count yields real speedups (up to ~4x on
-//! mobile CPUs in ref [6]; here: whatever this CPU + naive direct conv
-//! gives — the *ratio* is the point).
+//! Bench M3 (docs/ARCHITECTURE.md §Experiments): layer-level throughput —
+//! direct conv vs the per-tile Winograd reference vs the batched
+//! [`WinoEngine`] (canonical/Legendre, float/quantized) on realistic
+//! ResNet-stage shapes, reporting tiles/sec for the Winograd paths.
+//!
+//! Two claims are on the line:
+//! * the paper's §1 arithmetic argument — Winograd's reduced
+//!   multiplication count (2.25 vs 9 mults/output for F(4,3)) yields real
+//!   speedups over direct convolution;
+//! * the engine acceptance bar — the batched flat-buffer engine must be
+//!   ≥ 3× faster than the per-tile reference path on the ResNet18-shaped
+//!   layer (C=K=64, 32×32, batch 8), from GEMM-shaped panels, scratch
+//!   reuse and thread parallelism (set `WINOQ_THREADS=1` to isolate the
+//!   layout win from the threading win).
 //!
 //! Run: `cargo bench --bench conv_throughput`
 
 use winoq::benchkit;
+use winoq::engine::EngineScratch;
 use winoq::nn::layers::{conv2d, Conv2dCfg};
 use winoq::nn::tensor::Tensor;
 use winoq::nn::winolayer::WinoConv2d;
@@ -20,15 +29,15 @@ fn rand_tensor(rng: &mut Prng, dims: &[usize], scale: f64) -> Tensor {
     Tensor::from_vec(dims, (0..n).map(|_| rng.uniform(scale) as f32).collect())
 }
 
-fn main() {
-    let mut rng = Prng::new(9);
+/// Per-stage sweep: direct vs engine-backed Winograd layer on single images.
+fn stage_shapes(rng: &mut Prng) {
     // ResNet-stage shapes at width 0.5 (paper's Table 1 model): C=K, HxW.
     let shapes: &[(usize, usize)] = &[(32, 32), (64, 16), (128, 8)];
     let cfg = Conv2dCfg { stride: 1, padding: 1 };
 
     for &(c, hw) in shapes {
-        let x = rand_tensor(&mut rng, &[1, c, hw, hw], 1.0);
-        let w = rand_tensor(&mut rng, &[c, c, 3, 3], 0.2);
+        let x = rand_tensor(rng, &[1, c, hw, hw], 1.0);
+        let w = rand_tensor(rng, &[c, c, 3, 3], 0.2);
         let outputs = (c * hw * hw) as f64;
 
         let s_direct = benchkit::bench(2, 8, || conv2d(&x, &w, None, cfg));
@@ -40,31 +49,71 @@ fn main() {
 
         for base in [Base::Canonical, Base::Legendre] {
             let layer = WinoConv2d::new(4, &w, base);
-            let s = benchkit::bench(2, 8, || layer.forward(&x, cfg));
+            let tiles = layer.engine().tile_count_for(&x.dims, cfg.padding) as f64;
+            let mut scratch = EngineScratch::new();
+            let s = benchkit::bench(2, 8, || layer.forward_with_scratch(&x, cfg, &mut scratch));
             benchkit::report(
                 &format!("wino F4 {} C={c} {hw}x{hw}", base.name()),
                 &s,
-                Some((outputs, "out-px")),
+                Some((tiles, "tiles")),
             );
-            println!(
-                "{:<44} speedup vs direct: {:.2}x",
-                "",
-                s_direct.median / s.median
-            );
+            benchkit::report_speedup("", &s_direct, &s);
         }
 
         // Quantized Legendre layer (Fig. 2 casts on the hot path).
         let mut qlayer = WinoConv2d::new(4, &w, Base::Legendre);
         qlayer.quantize(QuantConfig::w8(), &x, 1);
-        let s_q = benchkit::bench(2, 8, || qlayer.forward(&x, cfg));
+        let tiles = qlayer.engine().tile_count_for(&x.dims, cfg.padding) as f64;
+        let mut scratch = EngineScratch::new();
+        let s_q = benchkit::bench(2, 8, || qlayer.forward_with_scratch(&x, cfg, &mut scratch));
         benchkit::report(
             &format!("wino F4 legendre int8 C={c} {hw}x{hw}"),
             &s_q,
-            Some((outputs, "out-px")),
+            Some((tiles, "tiles")),
         );
         println!();
     }
+}
 
+/// Engine acceptance shape: C=K=64, 32×32, batch 8 — batched engine vs
+/// the per-tile reference path (the seed implementation).
+fn engine_vs_per_tile(rng: &mut Prng) {
+    let cfg = Conv2dCfg { stride: 1, padding: 1 };
+    let x = rand_tensor(rng, &[8, 64, 32, 32], 1.0);
+    let w = rand_tensor(rng, &[64, 64, 3, 3], 0.2);
+    let layer = WinoConv2d::new(4, &w, Base::Legendre);
+    let tiles = layer.engine().tile_count_for(&x.dims, cfg.padding) as f64;
+
+    println!("── engine acceptance shape: C=K=64 32x32 batch=8 ({tiles} tiles) ──");
+    let s_ref = benchkit::bench(1, 5, || layer.forward_reference(&x, cfg));
+    benchkit::report("per-tile reference (seed path)", &s_ref, Some((tiles, "tiles")));
+
+    let mut scratch = EngineScratch::new();
+    let s_eng = benchkit::bench(1, 5, || layer.forward_with_scratch(&x, cfg, &mut scratch));
+    benchkit::report("batched engine (flat buffers)", &s_eng, Some((tiles, "tiles")));
+    benchkit::report_speedup("engine vs per-tile", &s_ref, &s_eng);
+
+    let ok = benchkit::speedup(&s_ref, &s_eng) >= 3.0;
+    println!(
+        "acceptance (engine ≥ 3x per-tile): {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+
+    // Sanity on the measured run: both paths agree bit-for-bit.
+    let yr = layer.forward_reference(&x, cfg);
+    let ye = layer.forward_with_scratch(&x, cfg, &mut scratch);
+    assert_eq!(yr.data, ye.data, "engine/per-tile outputs diverged");
+    println!();
+}
+
+fn main() {
+    let mut rng = Prng::new(9);
+    engine_vs_per_tile(&mut rng);
+    stage_shapes(&mut rng);
     println!("note: the arithmetic-count advantage is 9/2.25 = 4.0x; the measured");
     println!("ratio reflects this CPU's memory behaviour and the naive direct loop.");
+    println!(
+        "threads: {} (override with WINOQ_THREADS)",
+        winoq::engine::parallel::num_threads()
+    );
 }

@@ -1,4 +1,4 @@
-//! Bench M1 (DESIGN.md §6): numerical error vs tile size and base, plus
+//! Bench M1 (docs/ARCHITECTURE.md §Experiments): numerical error vs tile size and base, plus
 //! transform condition numbers — regenerates the paper's §1/§4.1 motivating
 //! claims as a table.
 //!

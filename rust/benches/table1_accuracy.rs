@@ -1,11 +1,11 @@
-//! Bench T1 (DESIGN.md §6): regenerate the paper's **Table 1** — ResNet18
+//! Bench T1 (docs/ARCHITECTURE.md §Experiments): regenerate the paper's **Table 1** — ResNet18
 //! x0.5, Winograd F(4x4,3x3), columns {direct, Static, Flex, L-static,
 //! L-flex} at 8 bits and 8-bit+9-bit-Hadamard — by actually training every
 //! cell's AOT artifact through the rust coordinator on the synthetic-CIFAR
 //! workload.
 //!
 //! Absolute accuracies are NOT comparable to the paper's (synthetic data,
-//! short schedule — DESIGN.md §3); the reproduced quantity is the ordering
+//! short schedule — docs/ARCHITECTURE.md §Experiments); the reproduced quantity is the ordering
 //! and the gap structure. The paper's numbers print alongside.
 //!
 //! Budget: WINOQ_TABLE_STEPS (default 60) training steps per cell; the
@@ -26,7 +26,7 @@ fn main() {
         .unwrap_or(60);
     let cfg = table_train_cfg(steps);
     // Wall-clock budget: stop training NEW cells once exceeded (cached cells
-    // still print). Compilation dominates on this testbed (DESIGN.md §7).
+    // still print). Compilation dominates on this testbed (docs/ARCHITECTURE.md §Experiments).
     let budget_s: u64 = std::env::var("WINOQ_TABLE_MAX_SECONDS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -35,7 +35,7 @@ fn main() {
     eprintln!("table 1: {steps} steps per cell (set WINOQ_TABLE_STEPS to change)");
 
     // WINOQ_T1_WIDTH=0.25 switches to the width-0.25 replica of the grid
-    // (single-core testbeds; see DESIGN.md §3 and EXPERIMENTS.md §T1).
+    // (single-core testbeds; see docs/ARCHITECTURE.md §Experiments ).
     let width = std::env::var("WINOQ_T1_WIDTH").unwrap_or_else(|_| "0.5".into());
     let grid = if width == "0.25" { table1_w025() } else { table1() };
     let mut rows = Vec::new();

@@ -1,4 +1,4 @@
-//! Bench T2 (DESIGN.md §6): regenerate the paper's **Table 2** — the same
+//! Bench T2 (docs/ARCHITECTURE.md §Experiments): regenerate the paper's **Table 2** — the same
 //! column set at 8 bits for width multipliers 0.25 and 0.5 (the 0.5 row
 //! reuses the Table 1 artifacts).
 //!
@@ -16,7 +16,7 @@ fn main() {
         .unwrap_or(60);
     let cfg = table_train_cfg(steps);
     // Wall-clock budget: stop training NEW cells once exceeded (cached cells
-    // still print). Compilation dominates on this testbed (DESIGN.md §7).
+    // still print). Compilation dominates on this testbed (docs/ARCHITECTURE.md §Experiments).
     let budget_s: u64 = std::env::var("WINOQ_TABLE_MAX_SECONDS")
         .ok()
         .and_then(|s| s.parse().ok())

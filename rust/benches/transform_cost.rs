@@ -1,4 +1,4 @@
-//! Bench M2 (DESIGN.md §6): operation counts — general multiplications per
+//! Bench M2 (docs/ARCHITECTURE.md §Experiments): operation counts — general multiplications per
 //! output point and pre/post-transform multiply-adds, canonical vs
 //! Legendre, vs the Meng & Brothers superlinear variant the paper's §2
 //! compares against.

@@ -56,6 +56,17 @@ pub fn report(name: &str, s: &Summary, work_units: Option<(f64, &str)>) {
     );
 }
 
+/// Median-over-median speedup of `new` relative to `baseline` (>1 means
+/// `new` is faster).
+pub fn speedup(baseline: &Summary, new: &Summary) -> f64 {
+    baseline.median / new.median
+}
+
+/// Pretty-print a speedup row under a pair of [`report`] rows.
+pub fn report_speedup(label: &str, baseline: &Summary, new: &Summary) {
+    println!("{label:<44} speedup: {:.2}x", speedup(baseline, new));
+}
+
 /// Human-readable time.
 pub fn fmt_time(seconds: f64) -> String {
     if seconds >= 1.0 {
@@ -94,5 +105,12 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.median, 3.0);
         assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let slow = Summary::from_times(vec![4.0]);
+        let fast = Summary::from_times(vec![1.0]);
+        assert!((speedup(&slow, &fast) - 4.0).abs() < 1e-12);
     }
 }

@@ -3,7 +3,7 @@
 //! `winoq tables` CLI command.
 //!
 //! Absolute accuracies differ from the paper (synthetic workload, short
-//! schedule — see DESIGN.md §3); what must reproduce is the *ordering*:
+//! schedule — see docs/ARCHITECTURE.md §Experiments); what must reproduce is the *ordering*:
 //! canonical-static worst, Legendre improving each column, flex > static,
 //! and the 9-bit Hadamard row closing the gap to direct.
 
@@ -165,7 +165,7 @@ pub fn run_cell_cached(dir: &Path, tag: &str, cfg: &TrainCfg) -> Result<f64> {
 }
 
 /// Training configuration used for table regeneration: short schedule,
-/// scaled from the paper's 200-epoch runs (documented in EXPERIMENTS.md).
+/// scaled from the paper's 200-epoch runs (see docs/ARCHITECTURE.md §Experiments).
 pub fn table_train_cfg(steps: u64) -> TrainCfg {
     TrainCfg {
         steps,

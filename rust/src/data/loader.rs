@@ -3,7 +3,7 @@
 //! The coordinator's training loop consumes batches from here; generation
 //! (procedural images) runs on a worker thread so the PJRT execute path is
 //! never stalled on data (L3 perf target: coordinator overhead < 10% of
-//! step time — see DESIGN.md §7).
+//! step time — see docs/ARCHITECTURE.md §Experiments).
 
 use super::synthcifar;
 use crate::nn::tensor::Tensor;

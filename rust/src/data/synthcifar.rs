@@ -1,5 +1,5 @@
 //! Synthetic CIFAR-10-like dataset — the environment substitution for
-//! CIFAR10 (see DESIGN.md §3: no dataset download is possible here).
+//! CIFAR10 (see docs/ARCHITECTURE.md §Experiments: no dataset download is possible here).
 //!
 //! Ten classes of procedurally generated 32×32×3 images. Each class is
 //! defined by a deterministic template mixing: (a) a class-specific 2-D

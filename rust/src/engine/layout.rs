@@ -1,0 +1,163 @@
+//! Tile-grid geometry and flat-buffer layouts for the batched engine.
+//!
+//! The engine lowers an NCHW activation tensor into three flat buffers
+//! (all indices row-major within the bracketed shape):
+//!
+//! * `xt` — transformed input tiles, shape `[C][N²][T]`: for a fixed
+//!   channel `c` and frequency point `f`, the `T` tile values form a
+//!   contiguous row, which is the right-hand panel of the per-frequency
+//!   GEMM.
+//! * `had` — Hadamard/channel accumulators, shape `[N²][K][T]`: for a
+//!   fixed frequency `f`, `[K][T]` is the GEMM output panel.
+//! * transformed weights, shape `[N²][K][C]`: for a fixed `f`, `[K][C]`
+//!   is the left-hand GEMM panel.
+//!
+//! `T = BN · tiles_h · tiles_w` counts tiles across the whole batch, so
+//! one GEMM per frequency point covers every image; tile `t` of image
+//! `ni` at grid position `(th, tw)` is `t = (ni·tiles_h + th)·tiles_w +
+//! tw` (see [`TileGrid::tile_index`]).
+
+use crate::nn::tensor::Tensor;
+use crate::wino::matrix::Mat;
+
+/// Geometry of one lowered layer application: padded input size, output
+/// size, and the tile grid covering it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    /// Batch size.
+    pub bn: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Padded input height/width.
+    pub h: usize,
+    pub w: usize,
+    /// Output tile size `m` and input tile size `n = m + r − 1`.
+    pub m: usize,
+    pub n: usize,
+    /// Output spatial size (`h − r + 1`, `w − r + 1`).
+    pub oh: usize,
+    pub ow: usize,
+    /// Tile-grid extent: `ceil(oh/m) × ceil(ow/m)`; edge tiles read
+    /// zero-extended input and write clamped output.
+    pub tiles_h: usize,
+    pub tiles_w: usize,
+}
+
+impl TileGrid {
+    /// Build the grid for a padded NCHW input and an `F(m, r)` plan.
+    pub fn new(padded_dims: &[usize], m: usize, r: usize) -> TileGrid {
+        assert_eq!(padded_dims.len(), 4, "NCHW input required");
+        let (bn, c, h, w) = (padded_dims[0], padded_dims[1], padded_dims[2], padded_dims[3]);
+        assert!(h >= r && w >= r, "input {h}x{w} smaller than kernel {r}");
+        let oh = h - r + 1;
+        let ow = w - r + 1;
+        TileGrid {
+            bn,
+            c,
+            h,
+            w,
+            m,
+            n: m + r - 1,
+            oh,
+            ow,
+            tiles_h: oh.div_ceil(m),
+            tiles_w: ow.div_ceil(m),
+        }
+    }
+
+    /// Tiles per image.
+    pub fn tiles_per_image(&self) -> usize {
+        self.tiles_h * self.tiles_w
+    }
+
+    /// Total tiles across the batch (`T`, the GEMM panel width).
+    pub fn tile_count(&self) -> usize {
+        self.bn * self.tiles_per_image()
+    }
+
+    /// Flat tile index of image `ni`, grid row `th`, grid column `tw`.
+    #[inline]
+    pub fn tile_index(&self, ni: usize, th: usize, tw: usize) -> usize {
+        (ni * self.tiles_h + th) * self.tiles_w + tw
+    }
+
+    /// Top-left input coordinate of tile `(th, tw)`.
+    #[inline]
+    pub fn tile_origin(&self, th: usize, tw: usize) -> (usize, usize) {
+        (th * self.m, tw * self.m)
+    }
+}
+
+/// Extract an `n×n` input patch starting at `(h0, w0)` of image `ni`,
+/// channel `ci`, zero-extended past the spatial edge — shared by the
+/// batched engine's scatter stage and the per-tile reference path in
+/// [`nn::winolayer`](crate::nn::winolayer).
+pub fn extract_tile(
+    x: &Tensor,
+    ni: usize,
+    ci: usize,
+    h0: usize,
+    w0: usize,
+    n: usize,
+) -> Mat {
+    let (h, w) = (x.dims[2], x.dims[3]);
+    let mut t = Mat::zeros(n, n);
+    for i in 0..n {
+        if h0 + i >= h {
+            break;
+        }
+        for j in 0..n {
+            if w0 + j >= w {
+                break;
+            }
+            t[(i, j)] = x.at4(ni, ci, h0 + i, w0 + j) as f64;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shapes_f43() {
+        // 34×34 padded input, F(4,3): 32×32 output in an 8×8 tile grid.
+        let g = TileGrid::new(&[8, 64, 34, 34], 4, 3);
+        assert_eq!((g.oh, g.ow), (32, 32));
+        assert_eq!((g.tiles_h, g.tiles_w), (8, 8));
+        assert_eq!(g.tile_count(), 8 * 64);
+        assert_eq!(g.n, 6);
+    }
+
+    #[test]
+    fn grid_clamps_non_multiple_output() {
+        // 9×9 input, F(4,3): 7×7 output needs 2×2 tiles (last one partial).
+        let g = TileGrid::new(&[1, 2, 9, 9], 4, 3);
+        assert_eq!((g.oh, g.ow), (7, 7));
+        assert_eq!((g.tiles_h, g.tiles_w), (2, 2));
+    }
+
+    #[test]
+    fn tile_index_is_batch_major() {
+        let g = TileGrid::new(&[2, 1, 9, 9], 4, 3);
+        assert_eq!(g.tile_index(0, 0, 0), 0);
+        assert_eq!(g.tile_index(0, 1, 1), 3);
+        assert_eq!(g.tile_index(1, 0, 0), 4);
+        assert_eq!(g.tile_index(1, 1, 1), g.tile_count() - 1);
+    }
+
+    #[test]
+    fn extract_tile_zero_extends() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let t = extract_tile(&x, 0, 0, 1, 1, 3);
+        assert_eq!(t[(0, 0)], 4.0);
+        for i in 0..3 {
+            for j in 0..3 {
+                if (i, j) != (0, 0) {
+                    assert_eq!(t[(i, j)], 0.0, "({i},{j}) should be zero-extended");
+                }
+            }
+        }
+    }
+}

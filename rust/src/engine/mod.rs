@@ -1,0 +1,540 @@
+//! Batched Winograd execution engine — the serving-path hot loop.
+//!
+//! The per-tile layer in [`nn::winolayer`](crate::nn::winolayer)
+//! materialises one small matrix per tile per channel and walks it with
+//! nested loops, so the Hadamard stage — the part of the pipeline the
+//! paper keeps at 8/9 bits (its Fig. 2) and the only stage whose cost
+//! scales with `K·C` — never becomes the GEMM-shaped kernel it is in real
+//! deployments (Lavin & Gray 2016). [`WinoEngine`] restructures the same
+//! arithmetic around flat buffers:
+//!
+//! 1. **Scatter/transform** every tile of the whole batch once into a
+//!    `[C][N²][T]` workspace (`T` = batch × tile-grid size), applying the
+//!    input transform (and the Fig. 2 input casts when quantized) on the
+//!    way in — parallel over channels.
+//! 2. **Hadamard-with-channel-accumulation** as one `[K,C] × [C,T]`
+//!    panel multiply per frequency point `f ∈ N²`, blocked over `T` for
+//!    cache locality — parallel over frequency points. This is where the
+//!    `2.25×` multiplication advantage of `F(4×4, 3×3)` lives.
+//! 3. **Back-transform** each `(image, filter)` plane in bulk, clamping
+//!    edge tiles — parallel over output planes.
+//!
+//! Accumulation order over channels is identical to the per-tile path
+//! (`c = 0..C`, one fused multiply-add chain per `(k, f, t)`), so the
+//! engine is **bit-for-bit equal** to
+//! [`WinoConv2d::forward_reference`](crate::nn::winolayer::WinoConv2d::forward_reference)
+//! in both float and quantized modes — the parity tests assert exact
+//! equality, and `rust/tests/engine_parity.rs` checks the engine against
+//! the direct-convolution oracle at `1e-9` in f64.
+//!
+//! Parallelism comes from [`parallel`] (scoped threads with a
+//! rayon-shaped API; see that module for why rayon itself is not a
+//! dependency here), and repeated calls reuse [`EngineScratch`] buffers
+//! to stay allocation-free on the large workspaces.
+//!
+//! ```
+//! use winoq::engine::WinoEngine;
+//! use winoq::nn::layers::{conv2d, Conv2dCfg};
+//! use winoq::nn::tensor::Tensor;
+//! use winoq::wino::basis::Base;
+//!
+//! let cfg = Conv2dCfg { stride: 1, padding: 1 };
+//! let x = Tensor::from_vec(&[1, 2, 8, 8], (0..128).map(|i| (i % 13) as f32 * 0.1).collect());
+//! let w = Tensor::from_vec(&[3, 2, 3, 3], (0..54).map(|i| (i % 7) as f32 * 0.05).collect());
+//! let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+//! let y = engine.forward(&x, cfg);
+//! let oracle = conv2d(&x, &w, None, cfg);
+//! assert_eq!(y.dims, oracle.dims);
+//! for (a, b) in y.data.iter().zip(&oracle.data) {
+//!     assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+//! }
+//! ```
+
+pub mod layout;
+pub mod parallel;
+pub mod scratch;
+
+pub use layout::TileGrid;
+pub use scratch::EngineScratch;
+
+use crate::nn::layers::{pad_hw, Conv2dCfg};
+use crate::nn::tensor::Tensor;
+use crate::nn::winolayer::LayerScales;
+use crate::quant::scheme::{QuantConfig, Quantizer};
+use crate::wino::basis::Base;
+use crate::wino::matrix::Mat;
+use crate::wino::toomcook::WinogradPlan;
+use crate::wino::transform::WinoF;
+
+/// `T`-dimension block size for the per-frequency panel multiply: keeps
+/// one `[tile-block]` stripe of the input panel resident in cache across
+/// the `K` output filters. Blocking never reorders the per-`(k, f, t)`
+/// accumulation chain, so it cannot perturb parity with the per-tile path.
+const T_BLOCK: usize = 512;
+
+/// A lowered Winograd conv layer: pre-transformed weights stored as
+/// per-frequency `[K][C]` panels plus the float transform pipeline,
+/// executing over flat batch-wide tile buffers.
+///
+/// Build one with [`WinoEngine::from_weights`] (from raw `[K,C,r,r]`
+/// weights) or [`WinoEngine::from_transformed_weights`] (from the
+/// already-transformed per-tile matrices a
+/// [`WinoConv2d`](crate::nn::winolayer::WinoConv2d) holds).
+pub struct WinoEngine {
+    /// Float transform pipeline (plan + polynomial base).
+    pub wf: WinoF,
+    /// Output filters.
+    pub k: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Transformed weights, layout `[N²][K][C]` (frequency-major panels).
+    wt_panels: Vec<f64>,
+    /// Fig. 2 quantized-pipeline state, if enabled.
+    pub quant: Option<(QuantConfig, LayerScales)>,
+}
+
+/// Transform a `[K,C,r,r]` float weight tensor into the `[K][C]` bank of
+/// `N×N` Winograd-domain matrices — the one lowering shared by
+/// [`WinoEngine::from_weights`] and
+/// [`WinoConv2d::new`](crate::nn::winolayer::WinoConv2d::new), so the
+/// two construction paths cannot diverge.
+pub fn transform_weight_bank(wf: &WinoF, weights: &Tensor) -> Vec<Vec<Mat>> {
+    assert_eq!(weights.rank(), 4);
+    let (k, c, r, s) = (
+        weights.dims[0],
+        weights.dims[1],
+        weights.dims[2],
+        weights.dims[3],
+    );
+    assert_eq!(r, s, "square kernels only");
+    assert_eq!(r, wf.r, "kernel size mismatch with the plan");
+    let mut bank = Vec::with_capacity(k);
+    let mut w = Mat::zeros(r, r);
+    for ki in 0..k {
+        let mut per_c = Vec::with_capacity(c);
+        for ci in 0..c {
+            for a in 0..r {
+                for b in 0..r {
+                    w[(a, b)] = weights.at4(ki, ci, a, b) as f64;
+                }
+            }
+            per_c.push(wf.transform_weights(&w));
+        }
+        bank.push(per_c);
+    }
+    bank
+}
+
+impl WinoEngine {
+    /// Build from float weights `[K,C,r,r]`, transforming them once —
+    /// the standalone counterpart of
+    /// [`WinoConv2d::new`](crate::nn::winolayer::WinoConv2d::new).
+    pub fn from_weights(m: usize, weights: &Tensor, base: Base) -> WinoEngine {
+        assert_eq!(weights.rank(), 4, "weights must be [K,C,r,r]");
+        let plan = WinogradPlan::new(m, weights.dims[2]);
+        let wf = WinoF::new(&plan, base);
+        let bank = transform_weight_bank(&wf, weights);
+        Self::from_transformed_weights(wf, &bank, None)
+    }
+
+    /// Build from already-transformed `[K][C]` tile matrices (each
+    /// `N×N`), e.g. the `wt` a `WinoConv2d` computed — including any
+    /// fake-quantisation already baked into them.
+    pub fn from_transformed_weights(
+        wf: WinoF,
+        wt: &[Vec<Mat>],
+        quant: Option<(QuantConfig, LayerScales)>,
+    ) -> WinoEngine {
+        let k = wt.len();
+        assert!(k > 0, "need at least one output filter");
+        let c = wt[0].len();
+        let nn = wf.n * wf.n;
+        let mut wt_panels = vec![0.0; nn * k * c];
+        for (ki, per_c) in wt.iter().enumerate() {
+            assert_eq!(per_c.len(), c, "ragged filter bank");
+            for (ci, mat) in per_c.iter().enumerate() {
+                assert_eq!((mat.rows(), mat.cols()), (wf.n, wf.n));
+                let d = mat.data();
+                for f in 0..nn {
+                    wt_panels[(f * k + ki) * c + ci] = d[f];
+                }
+            }
+        }
+        WinoEngine { wf, k, c, wt_panels, quant }
+    }
+
+    /// The `[K][C]` weight panel for frequency point `f` (row-major), as
+    /// stored — mainly for tests and introspection.
+    pub fn weight_panel(&self, f: usize) -> &[f64] {
+        &self.wt_panels[f * self.k * self.c..(f + 1) * self.k * self.c]
+    }
+
+    /// Forward pass allocating a fresh workspace. Prefer
+    /// [`forward_with`](Self::forward_with) in serving loops.
+    pub fn forward(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
+        let mut scratch = EngineScratch::new();
+        self.forward_with(x, cfg, &mut scratch)
+    }
+
+    /// Forward pass `x` `[N,C,H,W]` → `[N,K,H',W']` (stride 1) reusing
+    /// `scratch` buffers across calls.
+    pub fn forward_with(
+        &self,
+        x: &Tensor,
+        cfg: Conv2dCfg,
+        scratch: &mut EngineScratch,
+    ) -> Tensor {
+        let grid = self.execute(x, cfg, scratch);
+        Tensor::from_vec(
+            &[grid.bn, self.k, grid.oh, grid.ow],
+            scratch.out.iter().map(|&v| v as f32).collect(),
+        )
+    }
+
+    /// Forward pass returning the f64 output (pre-f32-cast) together
+    /// with its NCHW dims — the precision the engine computes in
+    /// internally, used by the oracle-parity tests.
+    pub fn forward_f64(&self, x: &Tensor, cfg: Conv2dCfg) -> (Vec<f64>, [usize; 4]) {
+        let mut scratch = EngineScratch::new();
+        let grid = self.execute(x, cfg, &mut scratch);
+        (scratch.out.clone(), [grid.bn, self.k, grid.oh, grid.ow])
+    }
+
+    /// Number of tiles one forward over `x_dims` processes — the work
+    /// unit the throughput bench reports (tiles/sec).
+    pub fn tile_count_for(&self, x_dims: &[usize], padding: usize) -> usize {
+        let padded = [
+            x_dims[0],
+            x_dims[1],
+            x_dims[2] + 2 * padding,
+            x_dims[3] + 2 * padding,
+        ];
+        TileGrid::new(&padded, self.wf.m, self.wf.r).tile_count()
+    }
+
+    /// The three-stage lowered pipeline; leaves the f64 output in
+    /// `scratch.out` (layout `[BN][K][OH][OW]`) and returns the grid.
+    fn execute(&self, x: &Tensor, cfg: Conv2dCfg, scratch: &mut EngineScratch) -> TileGrid {
+        assert_eq!(cfg.stride, 1, "winograd engine is stride-1");
+        assert_eq!(x.rank(), 4, "NCHW input required");
+        let x = pad_hw(x, cfg.padding);
+        // Fig. 2 input cast (identical to the per-tile path: fake-quant
+        // the padded activations before tiling).
+        let x = match &self.quant {
+            Some((_, s)) => x.map(|v| s.input.fake(v as f64) as f32),
+            None => x,
+        };
+        let (n, m) = (self.wf.n, self.wf.m);
+        let nn = n * n;
+        let grid = TileGrid::new(&x.dims, m, self.wf.r);
+        assert_eq!(grid.c, self.c, "channel mismatch");
+        let t_total = grid.tile_count();
+        scratch.prepare(
+            self.c * nn * t_total,
+            nn * self.k * t_total,
+            grid.bn * self.k * grid.oh * grid.ow,
+        );
+        let EngineScratch { xt, had, out } = scratch;
+        let wf = &self.wf;
+        let quant = &self.quant;
+
+        // Stage 1 — scatter/transform, parallel over channels. Each
+        // channel owns the contiguous `[N²][T]` block `xt[c]`.
+        parallel::par_chunks_mut(&mut xt[..], nn * t_total, |ci, chunk| {
+            for ni in 0..grid.bn {
+                for th in 0..grid.tiles_h {
+                    for tw in 0..grid.tiles_w {
+                        let t = grid.tile_index(ni, th, tw);
+                        let (h0, w0) = grid.tile_origin(th, tw);
+                        let tile = layout::extract_tile(&x, ni, ci, h0, w0, n);
+                        let xt_m = wf.transform_input(&tile);
+                        let d = xt_m.data();
+                        match quant {
+                            Some((_, s)) => {
+                                for f in 0..nn {
+                                    chunk[f * t_total + t] = s.input_t.fake(d[f]);
+                                }
+                            }
+                            None => {
+                                for f in 0..nn {
+                                    chunk[f * t_total + t] = d[f];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+
+        // Stage 2 — per-frequency panel multiply `[K,C] × [C,T]`,
+        // parallel over the N² frequency points; `T`-blocked. The inner
+        // axpy accumulates channels in order `c = 0..C`, matching the
+        // per-tile path's Hadamard accumulation exactly.
+        let xt_ro: &[f64] = xt.as_slice();
+        parallel::par_chunks_mut(&mut had[..], self.k * t_total, |f, panel| {
+            let wpan = &self.wt_panels[f * self.k * self.c..][..self.k * self.c];
+            let mut tb = 0;
+            while tb < t_total {
+                let te = (tb + T_BLOCK).min(t_total);
+                for ki in 0..self.k {
+                    let row = &mut panel[ki * t_total..][..t_total];
+                    for ci in 0..self.c {
+                        let wkc = wpan[ki * self.c + ci];
+                        let xrow = &xt_ro[(ci * nn + f) * t_total..][..t_total];
+                        for t in tb..te {
+                            row[t] += wkc * xrow[t];
+                        }
+                    }
+                }
+                tb = te;
+            }
+            // Fig. 2 Hadamard cast, after full channel accumulation —
+            // same site as the per-tile path.
+            if let Some((_, s)) = quant {
+                for v in panel.iter_mut() {
+                    *v = s.hadamard.fake(*v);
+                }
+            }
+        });
+
+        // Stage 3 — back-transform in bulk, parallel over `(image,
+        // filter)` output planes; edge tiles write clamped.
+        let had_ro: &[f64] = had.as_slice();
+        parallel::par_chunks_mut(&mut out[..], grid.oh * grid.ow, |plane, ochunk| {
+            let ni = plane / self.k;
+            let ki = plane % self.k;
+            let mut acc = Mat::zeros(n, n);
+            for th in 0..grid.tiles_h {
+                for tw in 0..grid.tiles_w {
+                    let t = grid.tile_index(ni, th, tw);
+                    for f in 0..nn {
+                        acc[(f / n, f % n)] = had_ro[(f * self.k + ki) * t_total + t];
+                    }
+                    let mut o = wf.transform_output(&acc);
+                    if let Some((_, s)) = quant {
+                        o = Mat::from_vec(m, m, s.output.fake_all(o.data()));
+                    }
+                    for i in 0..m {
+                        let oi = th * m + i;
+                        if oi >= grid.oh {
+                            break;
+                        }
+                        for j in 0..m {
+                            let oj = tw * m + j;
+                            if oj >= grid.ow {
+                                break;
+                            }
+                            ochunk[oi * grid.ow + oj] = o[(i, j)];
+                        }
+                    }
+                }
+            }
+        });
+        grid
+    }
+}
+
+/// Batched integer Hadamard stage over flat code panels — the
+/// true-integer (deployed) counterpart of stage 2 for the single-channel
+/// tile pipeline in [`quant::qwino`](crate::quant::qwino).
+///
+/// `xt_codes` is `[N²][T]` (transformed-input codes), `wt_codes` is
+/// `[N²]` (transformed-weight codes); each i32×i32 product is widened to
+/// i64, rescaled by `prod_scale` (the product of the two operand scales)
+/// and requantized through `hq` into `had_codes` (`[N²][T]`) — parallel
+/// over frequency points for large batches.
+pub fn hadamard_requant_i32(
+    xt_codes: &[i32],
+    wt_codes: &[i32],
+    prod_scale: f64,
+    hq: &Quantizer,
+    had_codes: &mut [i32],
+) {
+    let nn = wt_codes.len();
+    assert_eq!(xt_codes.len(), had_codes.len());
+    assert_eq!(xt_codes.len() % nn, 0, "panel length not a multiple of N²");
+    let t_total = xt_codes.len() / nn;
+    if t_total == 0 {
+        return;
+    }
+    parallel::par_chunks_mut(had_codes, t_total, |f, row| {
+        let wc = wt_codes[f] as i64;
+        let xrow = &xt_codes[f * t_total..][..t_total];
+        for (h, &xc) in row.iter_mut().zip(xrow) {
+            let real = (xc as i64 * wc) as f64 * prod_scale;
+            *h = hq.quantize(real);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::conv2d;
+    use crate::nn::winolayer::WinoConv2d;
+    use crate::quant::scheme::QuantConfig;
+    use crate::wino::conv::direct_correlate_2d_multichannel;
+    use crate::wino::error::Prng;
+
+    fn prng_tensor(seed: u64, dims: &[usize], scale: f64) -> Tensor {
+        let mut rng = Prng::new(seed);
+        let len = dims.iter().product();
+        Tensor::from_vec(dims, (0..len).map(|_| rng.uniform(scale) as f32).collect())
+    }
+
+    #[test]
+    fn engine_matches_direct_oracle_at_1e9_f64() {
+        // Acceptance bar: engine f64 output vs the f64 multichannel
+        // direct-correlation oracle within 1e-9, per tile.
+        let x = prng_tensor(21, &[2, 5, 10, 10], 1.0);
+        let w = prng_tensor(22, &[3, 5, 3, 3], 0.5);
+        for base in [Base::Canonical, Base::Legendre] {
+            let engine = WinoEngine::from_weights(4, &w, base);
+            let (y, dims) = engine.forward_f64(&x, Conv2dCfg { stride: 1, padding: 0 });
+            let [bn, k, oh, ow] = dims;
+            // f64 copy of the input for the oracle.
+            for ni in 0..bn {
+                for ki in 0..k {
+                    for oi in 0..oh {
+                        for oj in 0..ow {
+                            let mut oracle = 0.0f64;
+                            for ci in 0..5 {
+                                for a in 0..3 {
+                                    for b in 0..3 {
+                                        oracle += w.at4(ki, ci, a, b) as f64
+                                            * x.at4(ni, ci, oi + a, oj + b) as f64;
+                                    }
+                                }
+                            }
+                            let got = y[((ni * k + ki) * oh + oi) * ow + oj];
+                            assert!(
+                                (got - oracle).abs() < 1e-9,
+                                "({ni},{ki},{oi},{oj}): {got} vs {oracle} [{base:?}]"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_per_tile_layer_bit_for_bit_float() {
+        let x = prng_tensor(31, &[2, 4, 9, 9], 1.0);
+        let w = prng_tensor(32, &[6, 4, 3, 3], 0.4);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+            let layer = WinoConv2d::new(4, &w, base);
+            let reference = layer.forward_reference(&x, cfg);
+            let batched = layer.engine().forward(&x, cfg);
+            assert_eq!(reference.dims, batched.dims);
+            for (i, (a, b)) in reference.data.iter().zip(&batched.data).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "idx {i}: {a} vs {b} not bit-identical [{base:?}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_per_tile_layer_bit_for_bit_quantized() {
+        let x = prng_tensor(41, &[1, 4, 12, 12], 1.0);
+        let w = prng_tensor(42, &[4, 4, 3, 3], 0.3);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+            let mut layer = WinoConv2d::new(4, &w, Base::Legendre);
+            layer.quantize(qcfg, &x, 1);
+            let reference = layer.forward_reference(&x, cfg);
+            let batched = layer.engine().forward(&x, cfg);
+            for (i, (a, b)) in reference.data.iter().zip(&batched.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "idx {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_matches_multichannel_tile_oracle() {
+        // Interior tile cross-check through the wino-level oracle:
+        // direct_correlate_2d_multichannel on the tile's channel stack.
+        let x = prng_tensor(51, &[1, 3, 6, 6], 1.0);
+        let w = prng_tensor(52, &[2, 3, 3, 3], 0.5);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let (y, [_, _, oh, ow]) = engine.forward_f64(&x, Conv2dCfg::default());
+        for ki in 0..2 {
+            let xs: Vec<Mat> = (0..3)
+                .map(|ci| layout::extract_tile(&x, 0, ci, 0, 0, 6))
+                .collect();
+            let ws: Vec<Mat> = (0..3)
+                .map(|ci| {
+                    let mut m = Mat::zeros(3, 3);
+                    for a in 0..3 {
+                        for b in 0..3 {
+                            m[(a, b)] = w.at4(ki, ci, a, b) as f64;
+                        }
+                    }
+                    m
+                })
+                .collect();
+            let oracle = direct_correlate_2d_multichannel(&xs, &ws);
+            for i in 0..4 {
+                for j in 0..4 {
+                    let got = y[(ki * oh + i) * ow + j];
+                    assert!(
+                        (got - oracle[(i, j)]).abs() < 1e-9,
+                        "k={ki} ({i},{j}): {got} vs {}",
+                        oracle[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let x1 = prng_tensor(61, &[2, 3, 8, 8], 1.0);
+        let x2 = prng_tensor(62, &[1, 3, 12, 12], 1.0);
+        let w = prng_tensor(63, &[3, 3, 3, 3], 0.5);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let mut scratch = EngineScratch::new();
+        // Big shape first, then small: reused (larger) buffers must not
+        // leak stale values into the smaller pass.
+        let big = engine.forward_with(&x2, cfg, &mut scratch);
+        let small = engine.forward_with(&x1, cfg, &mut scratch);
+        assert_eq!(big.data, engine.forward(&x2, cfg).data);
+        assert_eq!(small.data, engine.forward(&x1, cfg).data);
+    }
+
+    #[test]
+    fn weight_panels_match_per_tile_transforms() {
+        let w = prng_tensor(71, &[2, 3, 3, 3], 0.5);
+        let layer = WinoConv2d::new(4, &w, Base::Legendre);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let nn = 36;
+        for f in 0..nn {
+            let panel = engine.weight_panel(f);
+            for ki in 0..2 {
+                for ci in 0..3 {
+                    assert_eq!(panel[ki * 3 + ci], layer.wt[ki][ci].data()[f]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_requant_matches_scalar_pipeline() {
+        let hq = Quantizer::with_scale(9, 0.01);
+        let xt: Vec<i32> = (0..4 * 6).map(|i| (i as i32 % 17) - 8).collect();
+        let wt: Vec<i32> = vec![3, -5, 7, 11];
+        let mut had = vec![0i32; xt.len()];
+        hadamard_requant_i32(&xt, &wt, 2.5e-4, &hq, &mut had);
+        for f in 0..4 {
+            for t in 0..6 {
+                let real = (xt[f * 6 + t] as i64 * wt[f] as i64) as f64 * 2.5e-4;
+                assert_eq!(had[f * 6 + t], hq.quantize(real));
+            }
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Scoped-thread data parallelism for the batched engine.
+//!
+//! The vendored build has no crates.io access, so `rayon` itself cannot be
+//! a dependency; this module provides the one primitive the engine needs —
+//! a rayon-style *indexed parallel iteration over disjoint mutable chunks*
+//! — on top of [`std::thread::scope`]. Every engine stage is expressed as
+//! "each worker owns a contiguous run of equally-sized chunks", which is
+//! exactly `rayon`'s `par_chunks_mut().enumerate()` shape, so swapping the
+//! real crate in later is a one-line change per call site.
+//!
+//! Thread count defaults to [`std::thread::available_parallelism`] and can
+//! be pinned with the `WINOQ_THREADS` environment variable (`1` forces the
+//! serial path, which the parity tests use to keep failure cases
+//! deterministic to debug — results are identical either way because
+//! workers never share output elements).
+
+/// Number of worker threads to use: `WINOQ_THREADS` if set and valid,
+/// otherwise the machine's available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("WINOQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Apply `f(chunk_index, chunk)` to every `chunk_len`-sized chunk of
+/// `data` (the last chunk may be shorter), distributing contiguous runs
+/// of chunks across up to [`num_threads`] scoped threads.
+///
+/// Chunks are disjoint `&mut` slices, so this is data-race-free by
+/// construction; `f` must be `Sync` because all workers share it.
+///
+/// ```
+/// let mut v = vec![0u64; 10];
+/// winoq::engine::parallel::par_chunks_mut(&mut v, 3, |ci, chunk| {
+///     for x in chunk.iter_mut() {
+///         *x = ci as u64;
+///     }
+/// });
+/// assert_eq!(v, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3]);
+/// ```
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let workers = num_threads().min(n_chunks);
+    if workers <= 1 {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci, chunk);
+        }
+        return;
+    }
+    // Split the chunk range into `workers` contiguous runs (first
+    // `rem` runs get one extra chunk), and the data slice with it.
+    let per = n_chunks / workers;
+    let rem = n_chunks % workers;
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut first_chunk = 0usize;
+        for w in 0..workers {
+            let my_chunks = per + usize::from(w < rem);
+            let my_len = (my_chunks * chunk_len).min(rest.len());
+            let (mine, tail) = rest.split_at_mut(my_len);
+            rest = tail;
+            let base = first_chunk;
+            first_chunk += my_chunks;
+            let f = &f;
+            scope.spawn(move || {
+                for (ci, chunk) in mine.chunks_mut(chunk_len).enumerate() {
+                    f(base + ci, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Run `f(i)` for every `i in 0..n` across up to [`num_threads`] scoped
+/// threads, handing each worker a contiguous index range. Use when the
+/// per-index work writes through interior indirection (e.g. gathering
+/// into thread-owned buffers) rather than into one shared slice.
+pub fn par_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let per = n / workers;
+    let rem = n % workers;
+    std::thread::scope(|scope| {
+        let mut start = 0usize;
+        for w in 0..workers {
+            let len = per + usize::from(w < rem);
+            let range = start..start + len;
+            start += len;
+            let f = &f;
+            scope.spawn(move || {
+                for i in range {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        let mut v = vec![0u32; 1000];
+        par_chunks_mut(&mut v, 7, |_, chunk| {
+            for x in chunk.iter_mut() {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_indices_are_global() {
+        let mut v = vec![0usize; 64];
+        par_chunks_mut(&mut v, 4, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i / 4, "element {i}");
+        }
+    }
+
+    #[test]
+    fn ragged_tail_chunk() {
+        let mut v = vec![0u8; 10];
+        par_chunks_mut(&mut v, 4, |ci, chunk| {
+            assert_eq!(chunk.len(), if ci == 2 { 2 } else { 4 });
+            chunk.fill(ci as u8 + 1);
+        });
+        assert_eq!(v, [1, 1, 1, 1, 2, 2, 2, 2, 3, 3]);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut empty: Vec<u8> = Vec::new();
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![9u8];
+        par_chunks_mut(&mut one, 4, |ci, c| {
+            assert_eq!((ci, c.len()), (0, 1));
+        });
+    }
+
+    #[test]
+    fn par_for_counts() {
+        let hits = AtomicUsize::new(0);
+        par_for(137, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 137);
+    }
+
+    #[test]
+    fn more_workers_than_chunks() {
+        // n_chunks < threads must not spawn empty-range workers that panic.
+        let mut v = vec![0u32; 3];
+        par_chunks_mut(&mut v, 2, |_, chunk| chunk.fill(5));
+        assert_eq!(v, [5, 5, 5]);
+    }
+}

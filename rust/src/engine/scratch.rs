@@ -1,0 +1,66 @@
+//! Reusable workspace buffers for [`WinoEngine`](super::WinoEngine).
+//!
+//! One engine forward pass needs three large flat buffers (transformed
+//! input panels, Hadamard accumulators, f64 output staging). Allocating
+//! them per call would dominate small-batch latency, so callers that run
+//! many forwards (the ResNet serving path, the throughput bench) hold an
+//! [`EngineScratch`] and pass it to
+//! [`WinoEngine::forward_with`](super::WinoEngine::forward_with); buffers
+//! grow to the high-water mark of the layer shapes seen and are then
+//! reused allocation-free.
+
+/// Scratch buffers for one in-flight engine forward pass.
+///
+/// Not `Clone` on purpose: the point is to share one allocation across
+/// calls, not to copy multi-megabyte workspaces around.
+#[derive(Default)]
+pub struct EngineScratch {
+    /// Transformed input tiles, layout `[C][N²][T]` (channel-major panels).
+    pub(super) xt: Vec<f64>,
+    /// Hadamard/channel accumulators, layout `[N²][K][T]` (frequency-major).
+    pub(super) had: Vec<f64>,
+    /// f64 output staging, layout `[BN][K][OH][OW]`.
+    pub(super) out: Vec<f64>,
+}
+
+impl EngineScratch {
+    pub fn new() -> EngineScratch {
+        EngineScratch::default()
+    }
+
+    /// Size the three buffers for a pass. Only `had` is zero-filled —
+    /// it accumulates with `+=` in stage 2; `xt` and `out` have every
+    /// element overwritten (stage 1 / stage 3), so they are resized
+    /// without the redundant memset. Capacity is retained across calls.
+    pub(super) fn prepare(&mut self, xt_len: usize, had_len: usize, out_len: usize) {
+        self.xt.resize(xt_len, 0.0);
+        self.had.clear();
+        self.had.resize(had_len, 0.0);
+        self.out.resize(out_len, 0.0);
+    }
+
+    /// Total f64 capacity currently held (for memory accounting/tests).
+    pub fn capacity(&self) -> usize {
+        self.xt.capacity() + self.had.capacity() + self.out.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_zeroes_accumulator_and_keeps_capacity() {
+        let mut s = EngineScratch::new();
+        s.prepare(100, 200, 50);
+        s.had[3] = 7.0;
+        let cap = s.capacity();
+        s.prepare(80, 150, 50);
+        assert!(
+            s.had.iter().all(|&v| v == 0.0),
+            "the += accumulator must be zeroed between passes"
+        );
+        assert_eq!((s.xt.len(), s.had.len(), s.out.len()), (80, 150, 50));
+        assert!(s.capacity() >= cap.min(280), "capacity should be retained");
+    }
+}

@@ -7,17 +7,25 @@
 //!   pipeline of the paper's Fig. 2 (fake-quant + true-integer paths).
 //! * [`nn`] — pure-rust NCHW inference: layers, Winograd conv layer,
 //!   ResNet18 (the serving path).
+//! * [`engine`] — the batched Winograd execution engine: flat tile
+//!   buffers, per-frequency GEMM panels, scoped-thread parallelism and
+//!   reusable scratch (the serving hot loop; see `docs/ARCHITECTURE.md`).
 //! * [`data`] — synthetic CIFAR substitute + prefetching loader.
-//! * [`runtime`] — PJRT client running the AOT'd JAX/Pallas artifacts.
+//! * [`runtime`] — PJRT client running the AOT'd JAX/Pallas artifacts
+//!   (stubbed bindings in this vendored build; see `runtime::pjrt_stub`).
 //! * [`coordinator`] — the training loop, schedules and experiments.
 //! * [`config`], [`cli`], [`metrics`], [`testkit`], [`benchkit`] —
 //!   infrastructure (no serde/clap/criterion in the vendored set).
+//!
+//! Start with the repo-level `README.md` for the quickstart and
+//! `docs/ARCHITECTURE.md` for the module graph and buffer layouts.
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod metrics;
 pub mod nn;
 pub mod quant;

@@ -7,13 +7,20 @@
 //! either direct or through the (optionally quantized) Winograd layer —
 //! exactly the substitution the paper's winograd-aware training makes.
 //!
-//! Parameters are loaded from the checkpoint format written by
-//! `runtime::params` (the rust trainer) so a trained network can be served
-//! without python.
+//! Parameters are loaded from the flat-f32 checkpoint blob format the
+//! runtime's artifact manifests describe (see `runtime::manifest`), so a
+//! trained network can be served without python.
+//!
+//! The stride-1 3×3 Winograd convolutions execute on the batched
+//! [`WinoEngine`](crate::engine::WinoEngine); one
+//! [`EngineScratch`](crate::engine::EngineScratch) workspace is threaded
+//! through the whole forward pass so the per-layer flat buffers are
+//! allocated once per call, not once per layer.
 
 use super::layers::{batchnorm, conv2d, global_avg_pool, linear, relu, Conv2dCfg};
 use super::tensor::Tensor;
 use super::winolayer::WinoConv2d;
+use crate::engine::EngineScratch;
 use crate::quant::scheme::QuantConfig;
 use crate::wino::basis::Base;
 use std::collections::HashMap;
@@ -164,6 +171,7 @@ impl ResNet18 {
         prefix: &str,
         stride: usize,
         capture: &mut Option<&mut HashMap<String, Tensor>>,
+        scratch: &mut EngineScratch,
     ) -> Tensor {
         let (wn, g, b, m, v) = conv_bn_names(prefix);
         let w = &self.params[&wn];
@@ -175,7 +183,7 @@ impl ResNet18 {
         }
         let y = match (&self.cfg.mode, self.wino.get(prefix)) {
             (ConvMode::Winograd { .. }, Some(layer)) if stride == 1 => {
-                layer.forward(x, Conv2dCfg { stride: 1, padding: pad })
+                layer.forward_with_scratch(x, Conv2dCfg { stride: 1, padding: pad }, scratch)
             }
             _ => conv2d(x, w, None, Conv2dCfg { stride, padding: pad }),
         };
@@ -194,17 +202,22 @@ impl ResNet18 {
         x: &Tensor,
         mut capture: Option<&mut HashMap<String, Tensor>>,
     ) -> Tensor {
-        let mut h = relu(&self.conv_unit(x, "stem", 1, &mut capture));
+        // One engine workspace for the whole pass: grows to the largest
+        // Winograd layer shape once, then every layer runs allocation-free.
+        let mut scratch = EngineScratch::new();
+        let sc = &mut scratch;
+        let mut h = relu(&self.conv_unit(x, "stem", 1, &mut capture, sc));
         let widths = self.cfg.widths();
         let mut cin = widths[0];
         for (si, &cout) in widths.iter().enumerate() {
             for bi in 0..2usize {
                 let stride = if si > 0 && bi == 0 { 2 } else { 1 };
                 let prefix = format!("s{si}b{bi}");
-                let y1 = relu(&self.conv_unit(&h, &format!("{prefix}.conv1"), stride, &mut capture));
-                let y2 = self.conv_unit(&y1, &format!("{prefix}.conv2"), 1, &mut capture);
+                let y1 =
+                    relu(&self.conv_unit(&h, &format!("{prefix}.conv1"), stride, &mut capture, sc));
+                let y2 = self.conv_unit(&y1, &format!("{prefix}.conv2"), 1, &mut capture, sc);
                 let shortcut = if stride != 1 || cin != cout {
-                    self.conv_unit(&h, &format!("{prefix}.down"), stride, &mut capture)
+                    self.conv_unit(&h, &format!("{prefix}.down"), stride, &mut capture, sc)
                 } else {
                     h.clone()
                 };

@@ -1,5 +1,9 @@
 //! Winograd convolution layer over NCHW tensors — the rust serving-path
-//! counterpart of the JAX training layer.
+//! counterpart of the JAX/Pallas winograd-aware *training* layer, which
+//! lives in `python/compile/` (`wino.py` constructs the same exact
+//! matrices, `layers.py`/`model.py` build the fake-quant training graph);
+//! `python/tests/test_wino_matrices.py` pins both halves to identical
+//! constants.
 //!
 //! Tiles the padded input into N×N patches with stride m, transforms each
 //! patch once, multiplies against pre-transformed weights with channel
@@ -7,9 +11,17 @@
 //! standard layer-level amortisation the paper's §1 describes ("the cost of
 //! transformations amortizes over multiple uses"). Supports all bases and
 //! the quantized pipeline of Fig. 2.
+//!
+//! Execution is delegated to the batched flat-buffer
+//! [`WinoEngine`](crate::engine::WinoEngine); the original per-tile
+//! nested-loop evaluation is kept as
+//! [`WinoConv2d::forward_reference`] — the bit-for-bit validation oracle
+//! the engine parity tests run against.
 
 use super::layers::{pad_hw, Conv2dCfg};
 use super::tensor::Tensor;
+use crate::engine::layout::extract_tile;
+use crate::engine::{transform_weight_bank, EngineScratch, WinoEngine};
 use crate::quant::scheme::{QuantConfig, Quantizer};
 use crate::wino::basis::Base;
 use crate::wino::matrix::Mat;
@@ -36,36 +48,27 @@ pub struct WinoConv2d {
     pub k: usize,
     pub c: usize,
     pub quant: Option<(QuantConfig, LayerScales)>,
+    /// Batched execution engine lowered from `wt` (rebuilt on
+    /// [`quantize`](Self::quantize)).
+    engine: WinoEngine,
 }
 
 impl WinoConv2d {
-    /// Build from float weights `[K,C,r,r]`; transforms them once.
+    /// Build from float weights `[K,C,r,r]`; transforms them once (via
+    /// the shared [`transform_weight_bank`] lowering).
     pub fn new(m: usize, weights: &Tensor, base: Base) -> WinoConv2d {
         assert_eq!(weights.rank(), 4);
-        let (k, c, r, s) = (
-            weights.dims[0],
-            weights.dims[1],
-            weights.dims[2],
-            weights.dims[3],
-        );
-        assert_eq!(r, s, "square kernels only");
+        let (k, c, r) = (weights.dims[0], weights.dims[1], weights.dims[2]);
         let plan = WinogradPlan::new(m, r);
         let wf = WinoF::new(&plan, base);
-        let mut wt = Vec::with_capacity(k);
-        for ki in 0..k {
-            let mut per_c = Vec::with_capacity(c);
-            for ci in 0..c {
-                let mut w = Mat::zeros(r, r);
-                for a in 0..r {
-                    for b in 0..r {
-                        w[(a, b)] = weights.at4(ki, ci, a, b) as f64;
-                    }
-                }
-                per_c.push(wf.transform_weights(&w));
-            }
-            wt.push(per_c);
-        }
-        WinoConv2d { wf, wt, k, c, quant: None }
+        let wt = transform_weight_bank(&wf, weights);
+        let engine = WinoEngine::from_transformed_weights(wf.clone(), &wt, None);
+        WinoConv2d { wf, wt, k, c, quant: None, engine }
+    }
+
+    /// The batched execution engine this layer runs on.
+    pub fn engine(&self) -> &WinoEngine {
+        &self.engine
     }
 
     /// Enable the quantized pipeline: calibrate scales on a representative
@@ -139,10 +142,36 @@ impl WinoConv2d {
             }
         }
         self.quant = Some((cfg, scales));
+        // Re-lower: the engine snapshots the (now fake-quantized) weight
+        // panels and the Fig. 2 cast sites.
+        self.engine =
+            WinoEngine::from_transformed_weights(self.wf.clone(), &self.wt, self.quant);
     }
 
-    /// Forward pass: `x` [N,C,H,W] → [N,K,H',W'] (stride 1).
+    /// Forward pass: `x` [N,C,H,W] → [N,K,H',W'] (stride 1), executed on
+    /// the batched [`WinoEngine`]. Allocates a fresh workspace; serving
+    /// loops should prefer [`forward_with_scratch`](Self::forward_with_scratch).
     pub fn forward(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
+        self.engine.forward(x, cfg)
+    }
+
+    /// Forward pass reusing caller-held engine scratch buffers (see
+    /// [`EngineScratch`]); output is identical to [`forward`](Self::forward).
+    pub fn forward_with_scratch(
+        &self,
+        x: &Tensor,
+        cfg: Conv2dCfg,
+        scratch: &mut EngineScratch,
+    ) -> Tensor {
+        self.engine.forward_with(x, cfg, scratch)
+    }
+
+    /// The original per-tile nested-loop forward pass, kept as the
+    /// engine's validation oracle: `engine::tests` and
+    /// `tests/engine_parity.rs` assert the batched path reproduces this
+    /// bit-for-bit in float and quantized modes. Use it for debugging and
+    /// differential testing only — it is the slow path by design.
+    pub fn forward_reference(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
         assert_eq!(cfg.stride, 1, "winograd layer is stride-1");
         let x = pad_hw(x, cfg.padding);
         let x = match &self.quant {
@@ -216,24 +245,6 @@ impl WinoConv2d {
         }
         y
     }
-}
-
-/// Extract an n×n patch starting at (h0, w0), zero-extended past the edge.
-fn extract_tile(x: &Tensor, ni: usize, ci: usize, h0: usize, w0: usize, n: usize) -> Mat {
-    let (h, w) = (x.dims[2], x.dims[3]);
-    let mut t = Mat::zeros(n, n);
-    for i in 0..n {
-        if h0 + i >= h {
-            break;
-        }
-        for j in 0..n {
-            if w0 + j >= w {
-                break;
-            }
-            t[(i, j)] = x.at4(ni, ci, h0 + i, w0 + j) as f64;
-        }
-    }
-    t
 }
 
 #[cfg(test)]
@@ -327,6 +338,20 @@ mod tests {
         assert!(
             max_err < 0.35 * max_direct,
             "quantized error too large: {max_err} vs signal {max_direct}"
+        );
+    }
+
+    #[test]
+    fn engine_and_reference_paths_agree() {
+        // forward() (batched engine) and forward_reference() (per-tile
+        // oracle) must be interchangeable — exact f32 equality.
+        let x = prng_tensor(20, &[2, 3, 9, 9], 1.0);
+        let w = prng_tensor(21, &[4, 3, 3, 3], 0.5);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let layer = WinoConv2d::new(4, &w, Base::Legendre);
+        assert_eq!(
+            layer.forward(&x, cfg).data,
+            layer.forward_reference(&x, cfg).data
         );
     }
 

@@ -5,15 +5,21 @@
 //! Two interchangeable evaluations are provided:
 //!
 //! * [`QWino::forward_fake`] — fake-quantized floating point, matching the
-//!   training-graph semantics (what the JAX L2 model computes);
+//!   training-graph semantics (what the JAX model in `python/compile/`
+//!   computes);
 //! * [`QWino::forward_int`] — true integer arithmetic: int8/int9 codes with
-//!   i32 accumulation, the deployed inference path.
+//!   widened integer accumulation, the deployed inference path. It is a
+//!   one-tile wrapper over [`QWino::forward_int_batch`], which runs the
+//!   integer Hadamard stage over the engine's flat `[N²][T]` code panels
+//!   ([`engine::hadamard_requant_i32`](crate::engine::hadamard_requant_i32))
+//!   so many tiles share one pass.
 //!
 //! A property test asserts the two agree to the dequantization scale — the
 //! guarantee that lets the coordinator serve with the integer path while
 //! training with the fake path.
 
 use super::scheme::{QuantConfig, Quantizer};
+use crate::engine::hadamard_requant_i32;
 use crate::wino::basis::Base;
 use crate::wino::matrix::Mat;
 use crate::wino::toomcook::WinogradPlan;
@@ -145,35 +151,55 @@ impl QWino {
     /// f64 on dequantized codes (the output transform's constants are
     /// rationals — a deployment would fold them into fixed-point, which is
     /// an exact rescaling and does not change the values being tested).
+    ///
+    /// One-tile convenience over [`forward_int_batch`](Self::forward_int_batch).
     pub fn forward_int(&self, x: &Mat, w: &Mat, s: &StageScales) -> Mat {
+        self.forward_int_batch(std::slice::from_ref(x), w, s)
+            .pop()
+            .expect("one tile in, one tile out")
+    }
+
+    /// True-integer correlation of a *batch* of tiles against one filter,
+    /// staged over the engine's flat code panels:
+    ///
+    /// 1. quantize every transformed tile into one `[N²][T]` i32 panel
+    ///    (and the transformed filter into `[N²]` codes) — identical
+    ///    rounding decisions to [`forward_fake`](Self::forward_fake);
+    /// 2. run the integer Hadamard + requantization for all tiles in one
+    ///    [`hadamard_requant_i32`] pass (i64-widened products, rescaled by
+    ///    the product of the operand scales — an integer-preserving
+    ///    rescale);
+    /// 3. dequantize and back-transform each tile, with the final output
+    ///    cast.
+    pub fn forward_int_batch(&self, xs: &[Mat], w: &Mat, s: &StageScales) -> Vec<Mat> {
         let n = self.wf.n;
-        // Stage 1: quantize inputs/weights to codes, dequantize, transform,
-        // requantize — identical rounding decisions to forward_fake by
-        // construction.
-        let qx = fake_mat(x, &s.input);
+        let nn = n * n;
+        let t_total = xs.len();
         let qw = fake_mat(w, &s.weights);
-        let xt_codes = quant_mat(&self.wf.transform_input(&qx), &s.input_t);
         let wt_codes = quant_mat(&self.wf.transform_weights(&qw), &s.weights_t);
-        // Stage 2: integer Hadamard in i32, requantize to hadamard_bits.
-        // real value of product = (cx*cw) * (sx*sw); requantization to the
-        // hadamard scale is an integer-preserving rescale.
+        // Stage 1: per-tile input transform into the [N²][T] code panel.
+        let mut xt_codes = vec![0i32; nn * t_total];
+        for (t, x) in xs.iter().enumerate() {
+            let qx = fake_mat(x, &s.input);
+            let codes = quant_mat(&self.wf.transform_input(&qx), &s.input_t);
+            for f in 0..nn {
+                xt_codes[f * t_total + t] = codes[f];
+            }
+        }
+        // Stage 2: integer Hadamard over the whole panel.
         let prod_scale = s.input_t.scale * s.weights_t.scale;
-        let mut had_codes = vec![0i32; n * n];
-        for i in 0..n {
-            for j in 0..n {
-                let prod = xt_codes[i * n + j] as i64 * wt_codes[i * n + j] as i64;
-                let real = prod as f64 * prod_scale;
-                had_codes[i * n + j] = s.hadamard.quantize(real);
-            }
-        }
-        // Stage 3: dequantize Hadamard codes, output transform, final cast.
+        let mut had_codes = vec![0i32; nn * t_total];
+        hadamard_requant_i32(&xt_codes, &wt_codes, prod_scale, &s.hadamard, &mut had_codes);
+        // Stage 3: dequantize, back-transform, final cast — per tile.
         let mut had = Mat::zeros(n, n);
-        for i in 0..n {
-            for j in 0..n {
-                had[(i, j)] = s.hadamard.dequantize(had_codes[i * n + j]);
-            }
-        }
-        fake_mat(&self.wf.transform_output(&had), &s.output)
+        (0..t_total)
+            .map(|t| {
+                for f in 0..nn {
+                    had[(f / n, f % n)] = s.hadamard.dequantize(had_codes[f * t_total + t]);
+                }
+                fake_mat(&self.wf.transform_output(&had), &s.output)
+            })
+            .collect()
     }
 
     /// Measure end-to-end error vs the f64 direct-convolution oracle over
@@ -251,6 +277,20 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn int_batch_matches_per_tile_int_path() {
+        // The flat-panel batched integer pipeline must reproduce the
+        // tile-at-a-time results exactly (same codes, same requant).
+        let (qw, s, xs, ws) = setup(Base::Legendre, QuantConfig::w8_h9());
+        let w = &ws[0];
+        let batched = qw.forward_int_batch(&xs, w, &s);
+        assert_eq!(batched.len(), xs.len());
+        for (x, yb) in xs.iter().zip(&batched) {
+            let y1 = qw.forward_int(x, w, &s);
+            assert_eq!(y1.data(), yb.data(), "batched ≠ per-tile integer path");
         }
     }
 

@@ -1,13 +1,16 @@
 //! PJRT runtime: load AOT'd HLO-text artifacts, compile them once on the
 //! CPU PJRT client, and expose typed train/eval step calls.
 //!
-//! Interchange is HLO text (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md). The executable outputs arrive as a single
-//! tuple buffer; we sync it to a literal and decompose — on the CPU client
-//! this is a memcpy, measured in the L3 perf pass (EXPERIMENTS.md §Perf)
-//! at well under 10% of step time.
+//! Interchange is HLO text (see `python/compile/aot.py`). The executable
+//! outputs arrive as a single tuple buffer; we sync it to a literal and
+//! decompose — on a CPU client this is a memcpy, well under 10% of step
+//! time in past perf passes.
+//!
+//! The `xla` alias below binds to [`pjrt_stub`](super::pjrt_stub) in this
+//! vendored build; point it at the real `xla-rs` crate to enable PJRT.
 
 use super::manifest::Manifest;
+use super::pjrt_stub as xla;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 

@@ -1,8 +1,13 @@
-//! Runtime: PJRT client wrapper loading the AOT'd HLO-text artifacts and
-//! exposing typed train/eval steps to the coordinator.
+//! Runtime: PJRT client wrapper loading the AOT'd HLO-text artifacts
+//! (written by `python/compile/aot.py`) and exposing typed train/eval
+//! steps to the coordinator.
+//!
+//! In this vendored build the XLA bindings are provided by
+//! [`pjrt_stub`]; see that module for how to swap in a real backend.
 
 pub mod client;
 pub mod manifest;
+pub mod pjrt_stub;
 
 pub use client::{artifacts_dir, list_artifacts, Artifact, StepStats, TrainState};
 pub use manifest::{Manifest, ParamSpec};

@@ -1,0 +1,244 @@
+//! Build-time stub for the `xla` (PJRT) bindings.
+//!
+//! The vendored build environment has no crates.io/network access, so the
+//! real `xla-rs` crate cannot be declared in `Cargo.toml`. This module
+//! mirrors exactly the slice of its API that [`runtime::client`] uses:
+//!
+//! * [`Literal`] is **fully functional** — an in-memory typed buffer with
+//!   reshape/tuple/scalar accessors, so checkpoint (de)serialisation and
+//!   manifest plumbing stay testable without a PJRT backend;
+//! * [`PjRtClient`], [`HloModuleProto`] and the compile/execute surface
+//!   return a descriptive [`XlaError`], so anything that would actually
+//!   need XLA fails fast with a clear message instead of at link time.
+//!
+//! To wire a real backend, change the `use crate::runtime::pjrt_stub as
+//! xla;` alias in `runtime/client.rs` to `use xla;` and add the binding
+//! crate to `Cargo.toml`; no other code changes are needed.
+//!
+//! [`runtime::client`]: super::client
+
+/// Error type standing in for `xla::Error`. Only ever formatted with
+/// `{:?}`, matching how `runtime::client` reports backend failures.
+pub struct XlaError(pub String);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT backend unavailable (built with runtime::pjrt_stub; \
+         the xla-rs bindings are not vendored in this environment)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Marker trait for native element types (`f32`, `i32`).
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<&[f32]> {
+        match data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<&[i32]> {
+        match data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// In-memory typed buffer mirroring `xla::Literal`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    pub dims: Vec<i64>,
+    pub data: LiteralData,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: LiteralData::F32(vec![v]) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reshape without moving data; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape to {dims:?} ({want} elements) from {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Copy the contents out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::unwrap(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| XlaError("to_vec: element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        match self.data {
+            LiteralData::Tuple(parts) => Ok(parts),
+            _ => Err(XlaError("to_tuple: literal is not a tuple".into())),
+        }
+    }
+
+    /// Decompose a 2-tuple literal.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), XlaError> {
+        let mut parts = self.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(XlaError(format!("to_tuple2: arity {}", parts.len())));
+        }
+        let b = parts.pop().unwrap();
+        let a = parts.pop().unwrap();
+        Ok((a, b))
+    }
+
+    /// First element of a non-empty typed literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, XlaError> {
+        T::unwrap(&self.data)
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| XlaError("get_first_element: empty or mistyped".into()))
+    }
+}
+
+/// Parsed HLO module handle (stub: construction always fails).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// Computation handle wrapping a parsed HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT device buffer (stub — never constructed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub — never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: `cpu()` always fails with a clear message).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let shaped = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(shaped.dims, vec![2, 2]);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(shaped.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_type_mismatch() {
+        let lit = Literal::vec1(&[1i32, 2]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn reshape_size_checked() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal {
+            dims: vec![],
+            data: LiteralData::Tuple(vec![Literal::scalar(1.0), Literal::scalar(2.0)]),
+        };
+        let (a, b) = t.to_tuple2().unwrap();
+        assert_eq!(a.get_first_element::<f32>().unwrap(), 1.0);
+        assert_eq!(b.get_first_element::<f32>().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn backend_calls_fail_with_message() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err:?}").contains("pjrt_stub"));
+    }
+}

@@ -70,6 +70,21 @@ pub struct BaseChange {
 
 impl BaseChange {
     /// Build the base change for transform size `n`.
+    ///
+    /// `P` is exact (rational) and unit-upper-triangular, so `P⁻¹` always
+    /// exists; the canonical base yields the identity.
+    ///
+    /// ```
+    /// use winoq::wino::basis::{Base, BaseChange};
+    ///
+    /// let bc = BaseChange::new(Base::Legendre, 6);
+    /// assert_eq!(bc.n(), 6);
+    /// // Paper §4.1: the 6×6 Legendre P has 12 non-zeros (6 off-diagonal).
+    /// assert_eq!(bc.p.nnz(), 12);
+    /// assert_eq!(bc.nnz_offdiag(), 6);
+    /// assert!(!bc.is_identity());
+    /// assert!(BaseChange::new(Base::Canonical, 6).is_identity());
+    /// ```
     pub fn new(base: Base, n: usize) -> BaseChange {
         let p = match base {
             Base::Canonical => RatMat::identity(n),

@@ -1,4 +1,4 @@
-//! Numerical-error analysis harness — experiment M1 in DESIGN.md.
+//! Numerical-error analysis harness — experiment M1 (docs/ARCHITECTURE.md §Experiments).
 //!
 //! Quantifies the paper's motivating claims:
 //! * §1: the Winograd error grows at least exponentially with the tile

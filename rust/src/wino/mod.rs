@@ -2,7 +2,7 @@
 //! bases, floating-point pipelines, and error analysis.
 //!
 //! This module is the mathematical core of the paper's contribution — see
-//! DESIGN.md §4 for how each submodule maps to the paper.
+//! docs/ARCHITECTURE.md for how each submodule maps to the paper.
 
 pub mod basis;
 pub mod conv;

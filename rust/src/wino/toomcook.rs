@@ -99,6 +99,22 @@ pub struct WinogradPlan {
 
 impl WinogradPlan {
     /// Build the plan for `F(m, r)` with the standard point ladder.
+    ///
+    /// The construction is exact, so the resulting algorithm reproduces
+    /// direct correlation identically on rational inputs:
+    ///
+    /// ```
+    /// use winoq::wino::rational::Rational;
+    /// use winoq::wino::toomcook::WinogradPlan;
+    ///
+    /// let plan = WinogradPlan::new(2, 3); // F(2, 3): N = 4 input points
+    /// assert_eq!(plan.n, 4);
+    /// let r = Rational::from_int;
+    /// let g = [r(1), r(2), r(3)];
+    /// let d = [r(1), r(0), r(-1), r(2)];
+    /// // direct correlation: y[t] = Σ_j g[j]·d[t+j] = [-2, 4]
+    /// assert_eq!(plan.correlate_exact(&g, &d), vec![r(-2), r(4)]);
+    /// ```
     pub fn new(m: usize, r: usize) -> WinogradPlan {
         let n = m + r - 1;
         Self::with_points(m, r, standard_points(n))
@@ -229,6 +245,11 @@ impl WinogradPlan {
 
     /// General multiplications per 2-D output point: `N²/m²`
     /// (paper §1/§2: 2.25 for F(4×4, 3×3) vs 9 for direct 3×3).
+    ///
+    /// ```
+    /// let plan = winoq::wino::toomcook::WinogradPlan::new(4, 3);
+    /// assert_eq!(plan.mults_per_output_2d(), 2.25);
+    /// ```
     pub fn mults_per_output_2d(&self) -> f64 {
         let n = self.n as f64;
         let m = self.m as f64;
@@ -237,7 +258,7 @@ impl WinogradPlan {
 }
 
 /// Cost model for one 2-D Winograd layer application — used by the
-/// transform-cost bench (experiment M2 in DESIGN.md).
+/// transform-cost bench (experiment M2, docs/ARCHITECTURE.md §Experiments).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TransformCost {
     /// General (Hadamard-stage) multiplications per output point.

@@ -35,6 +35,35 @@ pub struct WinoF {
 }
 
 impl WinoF {
+    /// Lower an exact plan into f64, conjugating the transforms by the
+    /// base-change matrix `P` (`A_P = PA`, `G_P = PG`, `B_Pᵀ = BᵀPᵀ`).
+    ///
+    /// Both bases evaluate the same function — only the floating-point
+    /// rounding route differs:
+    ///
+    /// ```
+    /// use winoq::wino::basis::Base;
+    /// use winoq::wino::conv::direct_correlate_2d;
+    /// use winoq::wino::matrix::Mat;
+    /// use winoq::wino::toomcook::WinogradPlan;
+    /// use winoq::wino::transform::WinoF;
+    ///
+    /// let plan = WinogradPlan::new(4, 3);
+    /// let x = Mat::from_rows(
+    ///     (0..6).map(|i| (0..6).map(|j| ((5 * i + j) % 7) as f64).collect()).collect(),
+    /// );
+    /// let w = Mat::from_rows(vec![vec![1.0, 0.0, -1.0]; 3]);
+    /// let direct = direct_correlate_2d(&x, &w);
+    /// for base in [Base::Canonical, Base::Legendre] {
+    ///     let wf = WinoF::new(&plan, base);
+    ///     let y = wf.correlate_tile(&x, &w);
+    ///     for i in 0..4 {
+    ///         for j in 0..4 {
+    ///             assert!((y[(i, j)] - direct[(i, j)]).abs() < 1e-10);
+    ///         }
+    ///     }
+    /// }
+    /// ```
     pub fn new(plan: &WinogradPlan, base: Base) -> WinoF {
         let bc = BaseChange::new(base, plan.n);
         let p = bc.p.to_f64();

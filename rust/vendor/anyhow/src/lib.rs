@@ -1,0 +1,188 @@
+//! Vendored, API-compatible subset of `anyhow` (dtolnay/anyhow).
+//!
+//! This build environment has no crates.io access, so the handful of
+//! `anyhow` features the crate uses — [`Error`], [`Result`], the
+//! [`anyhow!`]/[`bail!`] macros and the [`Context`] extension trait — are
+//! reimplemented here as a path dependency. The surface is intentionally
+//! tiny; if the real crate ever becomes available this directory can be
+//! deleted and the `Cargo.toml` entry pointed at crates.io unchanged.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context frames.
+///
+/// Like the real `anyhow::Error`, this type deliberately does **not**
+/// implement [`std::error::Error`]: that is what allows the blanket
+/// `From<E: std::error::Error>` conversion below to coexist with the
+/// standard library's reflexive `From<T> for T`.
+pub struct Error {
+    /// Outermost message first (most recent context frame at index 0).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole cause chain, like the real anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::msg(err)
+    }
+}
+
+/// `anyhow::Result<T>` — a [`Result`](std::result::Result) defaulting its
+/// error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an ad-hoc [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an ad-hoc [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok() -> Result<u32> {
+        let v: u32 = "42".parse().context("parsing")?;
+        Ok(v)
+    }
+
+    fn parse_err() -> Result<u32> {
+        let v: u32 = "nope".parse().with_context(|| format!("parsing {:?}", "nope"))?;
+        Ok(v)
+    }
+
+    fn bails(flag: bool) -> Result<()> {
+        if flag {
+            bail!("flag was {flag}");
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn ok_path() {
+        assert_eq!(parse_ok().unwrap(), 42);
+        assert!(bails(false).is_ok());
+    }
+
+    #[test]
+    fn error_carries_context() {
+        let e = parse_err().unwrap_err();
+        assert!(e.to_string().contains("parsing"));
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "missing cause chain: {dbg}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = bails(true).unwrap_err();
+        assert_eq!(e.to_string(), "flag was true");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let r: Result<Vec<u8>> =
+            std::fs::read("/definitely/not/a/path").map_err(Into::into);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn question_mark_on_anyhow_error() {
+        fn inner() -> Result<()> {
+            bail!("inner failure")
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert!(outer().is_err());
+    }
+}

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification + lint gate (see ROADMAP.md).
+#
+# Order matters: correctness first (build + all test targets including
+# doctests), then the style/doc gate (scripts/lint.sh).
+
+set -euo pipefail
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
+
+echo "==> cargo build --release"
+cargo build --release
+
+# `cargo test` runs unit, integration AND doc tests; no separate
+# --doc pass needed (lint.sh keeps one for standalone doc-gate runs).
+echo "==> cargo test -q"
+cargo test -q
+
+"$SCRIPT_DIR/lint.sh"
+
+echo "CI OK"

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Lint + doc-rot gate for the winoq crate.
+#
+# Run from anywhere: resolves the repo root relative to this script.
+# Fails fast on: formatting drift, clippy warnings, rustdoc warnings
+# (broken intra-doc links are how stale docs die here), and doctest
+# failures. Tier-1 correctness (`cargo build/test`) lives in ci.sh.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo fmt --check"
+cargo fmt --all --check
+
+echo "==> cargo clippy (-D warnings)"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --document-private-items
+
+echo "==> cargo test --doc"
+cargo test --doc -q
+
+echo "lint OK"
