@@ -1,16 +1,27 @@
 //! Mini benchmarking harness (criterion is not in the vendored crate set):
-//! warmup + N timed samples, median / mean / p95 reporting. Used by the
-//! `rust/benches/*` targets (declared `harness = false`).
+//! warmup + N timed samples, median / mean / p50-p95-p99 reporting. Used
+//! by the `rust/benches/*` targets (declared `harness = false`) and by the
+//! latency-percentile summaries the serve bench JSON carries.
 
 use std::time::Instant;
 
-/// Timing summary over samples, in seconds.
+/// Nearest-rank percentile (`q` in `[0, 1]`) over an ascending-sorted
+/// sample array. NaN-free inputs assumed (timings always are).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample set");
+    let rank = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Timing summary over samples, in seconds. `median` is the 50th
+/// percentile (kept under its historical name; `p50` in reports).
 #[derive(Clone, Copy, Debug)]
 pub struct Summary {
     pub samples: usize,
     pub median: f64,
     pub mean: f64,
     pub p95: f64,
+    pub p99: f64,
     pub min: f64,
 }
 
@@ -20,9 +31,10 @@ impl Summary {
         let n = times.len();
         Summary {
             samples: n,
-            median: times[n / 2],
+            median: percentile_sorted(&times, 0.50),
             mean: times.iter().sum::<f64>() / n as f64,
-            p95: times[((n as f64 * 0.95) as usize).min(n - 1)],
+            p95: percentile_sorted(&times, 0.95),
+            p99: percentile_sorted(&times, 0.99),
             min: times[0],
         }
     }
@@ -43,16 +55,18 @@ pub fn bench<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Summ
     Summary::from_times(times)
 }
 
-/// Pretty-print a benchmark row: name, median, throughput (per `work` unit).
+/// Pretty-print a benchmark row: name, percentiles, throughput (per
+/// `work` unit).
 pub fn report(name: &str, s: &Summary, work_units: Option<(f64, &str)>) {
     let tp = work_units
         .map(|(w, unit)| format!("  {:>10.2} {unit}/s", w / s.median))
         .unwrap_or_default();
     println!(
-        "{name:<44} median {:>9}  mean {:>9}  p95 {:>9}{tp}",
+        "{name:<44} p50 {:>9}  mean {:>9}  p95 {:>9}  p99 {:>9}{tp}",
         fmt_time(s.median),
         fmt_time(s.mean),
         fmt_time(s.p95),
+        fmt_time(s.p99),
     );
 }
 
@@ -88,7 +102,20 @@ mod tests {
     fn bench_counts_samples() {
         let s = bench(2, 10, || 1 + 1);
         assert_eq!(s.samples, 10);
-        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&v, 0.50), 50.0);
+        assert_eq!(percentile_sorted(&v, 0.95), 95.0);
+        assert_eq!(percentile_sorted(&v, 0.99), 99.0);
+        assert_eq!(percentile_sorted(&v, 1.0), 100.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.99), 7.0);
+        let s = Summary::from_times(v);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.p95, 95.0);
     }
 
     #[test]

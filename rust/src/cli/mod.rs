@@ -1,8 +1,101 @@
 //! Hand-rolled CLI (clap is not in the vendored crate set): subcommand +
 //! `--flag value` parsing, `--help` rendering.
+//!
+//! Every flag the binary understands is registered in exactly one of two
+//! tables — [`VALUE_FLAGS`] (takes a value) or [`SWITCH_FLAGS`] (bare
+//! switch). [`Args::parse`] rejects anything not in the tables, and
+//! [`help`] renders the flag reference from the same tables, so a flag
+//! cannot exist without being documented (and vice versa). Historically
+//! unknown `--flags` were treated as switches, which made their intended
+//! value silently become a positional argument — a typo like
+//! `--max-batch8 8` then changed behaviour without any error.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+
+/// One registered flag: name, value metavar (value flags only), help line.
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub metavar: &'static str,
+    pub help: &'static str,
+}
+
+/// Flags that take a value. The single registry `Args::parse` consumes a
+/// value from and `help()` renders the FLAGS section from.
+pub const VALUE_FLAGS: &[FlagSpec] = &[
+    FlagSpec { name: "--artifact", metavar: "TAG", help: "artifact tag (train/eval/serve)" },
+    FlagSpec {
+        name: "--artifacts-dir",
+        metavar: "DIR",
+        help: "artifacts directory (default ./artifacts or $WINOQ_ARTIFACTS)",
+    },
+    FlagSpec { name: "--config", metavar: "FILE", help: "TOML run config (overrides flags)" },
+    FlagSpec { name: "--steps", metavar: "N", help: "training steps" },
+    FlagSpec { name: "--lr", metavar: "F", help: "peak learning rate" },
+    FlagSpec { name: "--eval-every", metavar: "N", help: "eval every N steps (0 = off)" },
+    FlagSpec { name: "--eval-batches", metavar: "N", help: "batches per evaluation" },
+    FlagSpec { name: "--checkpoint", metavar: "PATH", help: "checkpoint blob to load/save" },
+    FlagSpec { name: "--metrics-csv", metavar: "PATH", help: "write training metrics CSV" },
+    FlagSpec {
+        name: "--base",
+        metavar: "NAME",
+        help: "polynomial base: canonical|legendre|chebyshev",
+    },
+    FlagSpec { name: "--m", metavar: "N", help: "Winograd output tile size m" },
+    FlagSpec { name: "--r", metavar: "N", help: "kernel size r" },
+    FlagSpec { name: "--bits", metavar: "B", help: "quantization bit width" },
+    FlagSpec { name: "--trials", metavar: "N", help: "error-analysis trials" },
+    FlagSpec { name: "--table-steps", metavar: "N", help: "per-cell training steps for tables" },
+    FlagSpec { name: "--dataset-size", metavar: "N", help: "synthetic dataset size" },
+    FlagSpec { name: "--out", metavar: "PATH", help: "output path" },
+    // serve flags (see `winoq serve`)
+    FlagSpec { name: "--model", metavar: "NAME", help: "serve: registry name for the model" },
+    FlagSpec { name: "--requests", metavar: "N", help: "serve: total synthetic requests" },
+    FlagSpec { name: "--concurrency", metavar: "K", help: "serve: closed-loop client threads" },
+    FlagSpec { name: "--max-batch", metavar: "B", help: "serve: micro-batch size cap" },
+    FlagSpec {
+        name: "--batch-window-us",
+        metavar: "US",
+        help: "serve: micro-batch assembly deadline in microseconds",
+    },
+    FlagSpec { name: "--queue-cap", metavar: "N", help: "serve: admission queue capacity" },
+    FlagSpec { name: "--workers", metavar: "W", help: "serve: engine worker threads" },
+    FlagSpec {
+        name: "--width-mult",
+        metavar: "F",
+        help: "serve: synthetic ResNet18 width multiplier",
+    },
+    FlagSpec { name: "--quant", metavar: "CFG", help: "serve: quantization, w8|w8_h9|uN|none" },
+    FlagSpec {
+        name: "--stats-json",
+        metavar: "PATH",
+        help: "serve: write the stats report JSON here",
+    },
+    FlagSpec {
+        name: "--bench-json",
+        metavar: "PATH",
+        help: "serve: also run a max-batch-1 baseline and write a bench JSON",
+    },
+];
+
+/// Bare switches (no value).
+pub const SWITCH_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "--synthetic",
+        metavar: "",
+        help: "serve: run the built-in closed-loop client",
+    },
+    FlagSpec { name: "--verbose", metavar: "", help: "more logging where supported" },
+    FlagSpec { name: "--help", metavar: "", help: "show this help (also -h)" },
+];
+
+fn value_flag(name: &str) -> bool {
+    VALUE_FLAGS.iter().any(|f| f.name == name)
+}
+
+fn switch_flag(name: &str) -> bool {
+    SWITCH_FLAGS.iter().any(|f| f.name == name)
+}
 
 /// Parsed command line: subcommand, positional args, `--key value` flags
 /// and bare `--switch`es.
@@ -14,27 +107,6 @@ pub struct Args {
     pub switches: Vec<String>,
 }
 
-/// Flags that take a value (everything else starting with `--` is a switch).
-const VALUE_FLAGS: &[&str] = &[
-    "--artifact",
-    "--artifacts-dir",
-    "--config",
-    "--steps",
-    "--lr",
-    "--eval-every",
-    "--eval-batches",
-    "--checkpoint",
-    "--metrics-csv",
-    "--base",
-    "--m",
-    "--r",
-    "--bits",
-    "--trials",
-    "--table-steps",
-    "--dataset-size",
-    "--out",
-];
-
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args = Args::default();
@@ -43,14 +115,19 @@ impl Args {
             args.command = cmd.clone();
         }
         while let Some(a) = it.next() {
-            if let Some(_name) = a.strip_prefix("--") {
-                if VALUE_FLAGS.contains(&a.as_str()) {
+            if a == "-h" {
+                // The short help idiom must never be an unknown-flag error.
+                args.switches.push("--help".to_string());
+            } else if a.starts_with("--") {
+                if value_flag(a) {
                     let Some(v) = it.next() else {
                         bail!("flag {a} requires a value");
                     };
                     args.flags.insert(a.clone(), v.clone());
-                } else {
+                } else if switch_flag(a) {
                     args.switches.push(a.clone());
+                } else {
+                    bail!("unknown flag {a} (run `winoq help` for the flag reference)");
                 }
             } else {
                 args.positional.push(a.clone());
@@ -90,7 +167,7 @@ impl Args {
     }
 }
 
-pub const HELP: &str = "\
+const COMMANDS: &str = "\
 winoq — quantized Winograd/Toom-Cook convolution beyond the canonical base
 
 USAGE: winoq <command> [flags]
@@ -109,11 +186,30 @@ COMMANDS:
                     [--m 4] [--r 3] [--base legendre]
   error-analysis  numerical-error sweep across tile sizes and bases
                     [--trials N] [--bits B]
-  serve-demo      quantized int8 winograd inference demo (pure rust)
+  serve           micro-batching inference server (pure rust engine path)
+                    --synthetic [--requests N] [--concurrency K]
+                    [--max-batch B] [--batch-window-us US] [--queue-cap N]
+                    [--workers W] [--width-mult F] [--m 4] [--base legendre]
+                    [--quant w8|w8_h9|none] [--artifact TAG] [--checkpoint P]
+                    [--stats-json PATH] [--bench-json PATH]
   help            this message
-
-Common flags: --artifacts-dir DIR (default ./artifacts, or $WINOQ_ARTIFACTS)
 ";
+
+/// Render the full help text: the command summary plus a flag reference
+/// generated from [`VALUE_FLAGS`] / [`SWITCH_FLAGS`] — the same tables the
+/// parser accepts, so help and behaviour cannot drift apart.
+pub fn help() -> String {
+    let mut out = String::from(COMMANDS);
+    out.push_str("\nFLAGS:\n");
+    for f in VALUE_FLAGS {
+        let head = format!("{} <{}>", f.name, f.metavar);
+        out.push_str(&format!("  {head:<26} {}\n", f.help));
+    }
+    for f in SWITCH_FLAGS {
+        out.push_str(&format!("  {:<26} {}\n", f.name, f.help));
+    }
+    out
+}
 
 #[cfg(test)]
 mod tests {
@@ -148,6 +244,44 @@ mod tests {
     }
 
     #[test]
+    fn unknown_flag_rejected() {
+        // The historical bug: `--max-bach 8` (typo) used to parse as a
+        // switch plus positional "8" — it must be a hard error instead.
+        let err = Args::parse(&sv(&["serve", "--max-bach", "8"])).unwrap_err();
+        assert!(err.to_string().contains("--max-bach"), "{err}");
+    }
+
+    #[test]
+    fn help_idioms_parse_as_help_switch() {
+        // `winoq serve --help` and `winoq serve -h` must reach the help
+        // path, not die as unknown flags/positionals.
+        for idiom in ["--help", "-h"] {
+            let a = Args::parse(&sv(&["serve", idiom])).unwrap();
+            assert!(a.has_switch("--help"), "{idiom} must set the help switch");
+            assert!(a.positional.is_empty());
+        }
+    }
+
+    #[test]
+    fn serve_flags_registered() {
+        let a = Args::parse(&sv(&[
+            "serve",
+            "--synthetic",
+            "--requests",
+            "64",
+            "--max-batch",
+            "8",
+            "--batch-window-us",
+            "500",
+        ]))
+        .unwrap();
+        assert!(a.has_switch("--synthetic"));
+        assert_eq!(a.flag_u64("--requests", 0).unwrap(), 64);
+        assert_eq!(a.flag_u64("--max-batch", 0).unwrap(), 8);
+        assert_eq!(a.flag_u64("--batch-window-us", 0).unwrap(), 500);
+    }
+
+    #[test]
     fn defaults() {
         let a = Args::parse(&sv(&["eval"])).unwrap();
         assert_eq!(a.flag_or("--artifact", "x"), "x");
@@ -157,7 +291,17 @@ mod tests {
 
     #[test]
     fn bad_number() {
-        let a = Args::parse(&sv(&["t", "--steps", "abc"])).unwrap();
+        let a = Args::parse(&sv(&["train", "--steps", "abc"])).unwrap();
         assert!(a.flag_u64("--steps", 0).is_err());
+    }
+
+    #[test]
+    fn help_lists_every_registered_flag() {
+        let h = help();
+        for f in VALUE_FLAGS.iter().chain(SWITCH_FLAGS) {
+            assert!(h.contains(f.name), "help() is missing {}", f.name);
+        }
+        // The retired serve-demo command must not resurface.
+        assert!(!h.contains("serve-demo"));
     }
 }

@@ -184,7 +184,7 @@ impl WinoEngine {
         cfg: Conv2dCfg,
         scratch: &mut EngineScratch,
     ) -> Tensor {
-        let grid = self.execute(x, cfg, scratch);
+        let grid = self.execute_into(x, cfg, scratch);
         Tensor::from_vec(
             &[grid.bn, self.k, grid.oh, grid.ow],
             scratch.out.iter().map(|&v| v as f32).collect(),
@@ -196,7 +196,7 @@ impl WinoEngine {
     /// internally, used by the oracle-parity tests.
     pub fn forward_f64(&self, x: &Tensor, cfg: Conv2dCfg) -> (Vec<f64>, [usize; 4]) {
         let mut scratch = EngineScratch::new();
-        let grid = self.execute(x, cfg, &mut scratch);
+        let grid = self.execute_into(x, cfg, &mut scratch);
         (scratch.out.clone(), [grid.bn, self.k, grid.oh, grid.ow])
     }
 
@@ -212,9 +212,20 @@ impl WinoEngine {
         TileGrid::new(&padded, self.wf.m, self.wf.r).tile_count()
     }
 
-    /// The three-stage lowered pipeline; leaves the f64 output in
-    /// `scratch.out` (layout `[BN][K][OH][OW]`) and returns the grid.
-    fn execute(&self, x: &Tensor, cfg: Conv2dCfg, scratch: &mut EngineScratch) -> TileGrid {
+    /// The three-stage lowered pipeline — the **panel-level entry** for
+    /// pre-planned engines: runs scatter/transform → per-frequency panel
+    /// multiply → back-transform, leaving the f64 output in `scratch.out`
+    /// (layout `[BN][K][OH][OW]`) and returning the [`TileGrid`]. The
+    /// serving path ([`serve`](crate::serve)) calls this (through
+    /// [`forward_with`](Self::forward_with)) on micro-batched request
+    /// panels; callers that want the f64 output without the f32 cast —
+    /// parity oracles, stacked post-processing — use it directly.
+    pub fn execute_into(
+        &self,
+        x: &Tensor,
+        cfg: Conv2dCfg,
+        scratch: &mut EngineScratch,
+    ) -> TileGrid {
         assert_eq!(cfg.stride, 1, "winograd engine is stride-1");
         assert_eq!(x.rank(), 4, "NCHW input required");
         let x = pad_hw(x, cfg.padding);
@@ -370,17 +381,10 @@ pub fn hadamard_requant_i32(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::layers::conv2d;
     use crate::nn::winolayer::WinoConv2d;
     use crate::quant::scheme::QuantConfig;
+    use crate::testkit::prng_tensor;
     use crate::wino::conv::direct_correlate_2d_multichannel;
-    use crate::wino::error::Prng;
-
-    fn prng_tensor(seed: u64, dims: &[usize], scale: f64) -> Tensor {
-        let mut rng = Prng::new(seed);
-        let len = dims.iter().product();
-        Tensor::from_vec(dims, (0..len).map(|_| rng.uniform(scale) as f32).collect())
-    }
 
     #[test]
     fn engine_matches_direct_oracle_at_1e9_f64() {
@@ -489,6 +493,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn execute_into_exposes_f64_panels() {
+        // The public panel-level entry must leave exactly the
+        // forward_f64 output in the caller's scratch.
+        let x = prng_tensor(91, &[1, 2, 8, 8], 1.0);
+        let w = prng_tensor(92, &[2, 2, 3, 3], 0.5);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let (want, dims) = engine.forward_f64(&x, cfg);
+        let mut scratch = EngineScratch::new();
+        let grid = engine.execute_into(&x, cfg, &mut scratch);
+        assert_eq!([grid.bn, engine.k, grid.oh, grid.ow], dims);
+        assert_eq!(scratch.output(), &want[..]);
     }
 
     #[test]

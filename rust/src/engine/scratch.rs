@@ -43,6 +43,13 @@ impl EngineScratch {
     pub fn capacity(&self) -> usize {
         self.xt.capacity() + self.had.capacity() + self.out.capacity()
     }
+
+    /// The f64 output staging buffer left by the most recent
+    /// [`WinoEngine::execute_into`](super::WinoEngine::execute_into)
+    /// (layout `[BN][K][OH][OW]` for that pass's [`TileGrid`](super::TileGrid)).
+    pub fn output(&self) -> &[f64] {
+        &self.out
+    }
 }
 
 #[cfg(test)]

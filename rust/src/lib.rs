@@ -10,6 +10,9 @@
 //! * [`engine`] — the batched Winograd execution engine: flat tile
 //!   buffers, per-frequency GEMM panels, scoped-thread parallelism and
 //!   reusable scratch (the serving hot loop; see `docs/ARCHITECTURE.md`).
+//! * [`serve`] — micro-batching inference serving: bounded request
+//!   queue, model registry, transform-plan cache, latency stats (the
+//!   `winoq serve` subsystem).
 //! * [`data`] — synthetic CIFAR substitute + prefetching loader.
 //! * [`runtime`] — PJRT client running the AOT'd JAX/Pallas artifacts
 //!   (stubbed bindings in this vendored build; see `runtime::pjrt_stub`).
@@ -30,5 +33,6 @@ pub mod metrics;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod wino;

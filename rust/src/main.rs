@@ -2,7 +2,7 @@
 
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
-use winoq::cli::{Args, HELP};
+use winoq::cli::{self, Args};
 use winoq::config::{Config, RunConfig};
 use winoq::coordinator::experiments::{self, table_train_cfg};
 use winoq::coordinator::schedule::Schedule;
@@ -16,7 +16,7 @@ use winoq::wino::toomcook::WinogradPlan;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        print!("{HELP}");
+        print!("{}", cli::help());
         return;
     }
     let args = match Args::parse(&argv) {
@@ -26,6 +26,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if args.has_switch("--help") {
+        print!("{}", cli::help());
+        return;
+    }
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
@@ -33,13 +37,17 @@ fn main() {
         "list" => cmd_list(&args),
         "gen-matrices" => cmd_gen_matrices(&args),
         "error-analysis" => cmd_error_analysis(&args),
-        "serve-demo" => cmd_serve_demo(&args),
+        "serve" => cmd_serve(&args),
+        "serve-demo" => {
+            eprintln!("serve-demo was retired; use `winoq serve --synthetic` (see `winoq help`)");
+            std::process::exit(2);
+        }
         "help" | "--help" | "-h" => {
-            print!("{HELP}");
+            print!("{}", cli::help());
             Ok(())
         }
         other => {
-            eprintln!("unknown command {other:?}\n\n{HELP}");
+            eprintln!("unknown command {other:?}\n\n{}", cli::help());
             std::process::exit(2);
         }
     };
@@ -235,31 +243,169 @@ fn cmd_error_analysis(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve_demo(_args: &Args) -> Result<()> {
+/// `winoq serve`: the micro-batching inference server with the built-in
+/// synthetic closed-loop client (the only frontend in this vendored
+/// build — there is no socket listener; embedders drive
+/// `serve::ServeQueue` directly).
+fn cmd_serve(args: &Args) -> Result<()> {
     use winoq::data::synthcifar;
-    use winoq::nn::{ConvMode, ResNet18, ResNetCfg};
-    // Pure-rust int8 winograd inference on the synthetic eval split.
-    let cfg = ResNetCfg {
-        width_mult: 0.25,
-        num_classes: 10,
-        mode: ConvMode::Winograd {
-            m: 4,
-            base: Base::Legendre,
-            quant: Some(QuantConfig::w8()),
-        },
+    use winoq::nn::{ConvMode, ResNetCfg, Tensor};
+    use winoq::serve::{run_closed_loop, BatchModel, ModelRegistry, ServeConfig};
+
+    if !args.has_switch("--synthetic") {
+        bail!(
+            "no network frontend exists in this vendored build; run the built-in \
+             closed-loop client with `winoq serve --synthetic` (see `winoq help`)"
+        );
+    }
+    let requests = args.flag_u64("--requests", 256)? as usize;
+    let concurrency = args.flag_u64("--concurrency", 16)? as usize;
+    // Zero is never meaningful for these; clamp instead of panicking in
+    // the queue's capacity assert.
+    let serve_cfg = ServeConfig {
+        max_batch: (args.flag_u64("--max-batch", 8)? as usize).max(1),
+        batch_window_us: args.flag_u64("--batch-window-us", 2000)?,
+        queue_cap: (args.flag_u64("--queue-cap", 256)? as usize).max(1),
+        workers: (args.flag_u64("--workers", 1)? as usize).max(1),
     };
-    let mut net = ResNet18::init(cfg, 7);
-    let (calib, _) = synthcifar::generate_batch(synthcifar::TRAIN_SEED, 0, 8);
-    net.calibrate_quant(&calib);
-    let (images, labels) = synthcifar::generate_batch(synthcifar::TEST_SEED, 0, 16);
-    let t = std::time::Instant::now();
-    let acc = net.accuracy(&images, &labels);
-    println!(
-        "int8 L-winograd ResNet18x0.25 (untrained weights): {} images in {:.1} ms, accuracy {:.1}% (chance 10%)",
-        labels.len(),
-        t.elapsed().as_secs_f64() * 1e3,
-        acc * 100.0
+    let m = args.flag_u64("--m", 4)? as usize;
+    let base_name = args.flag_or("--base", "legendre");
+    let base = Base::from_name(base_name)
+        .with_context(|| format!("unknown base {base_name:?}"))?;
+    let quant = match args.flag_or("--quant", "w8") {
+        "none" => None,
+        q => Some(
+            QuantConfig::from_name(q)
+                .with_context(|| format!("unknown quant config {q:?} (w8|w8_h9|uN|none)"))?,
+        ),
+    };
+    let mode = ConvMode::Winograd { m, base, quant };
+    let name = args.flag_or("--model", "resnet18-synthetic");
+
+    let mut registry = ModelRegistry::new();
+    let served = if let Some(tag) = args.flag("--artifact") {
+        registry.register_checkpoint(
+            name,
+            &artifacts_dir(args),
+            tag,
+            args.flag("--checkpoint").map(Path::new),
+            mode,
+            8,
+        )?
+    } else {
+        let cfg = ResNetCfg {
+            width_mult: args.flag_f32("--width-mult", 0.5)?,
+            num_classes: 10,
+            mode,
+        };
+        registry.register_synthetic(name, cfg, 32, 7, 8)?
+    };
+    let (plan_counters, bank_counters) = registry.plans().counters();
+    eprintln!(
+        "model {name:?}: width x{:.2}, {} | {} wino tiles/request | plan cache: {} plans \
+         ({} hits / {} misses), {} weight banks ({} hits / {} misses)",
+        served.net.cfg.width_mult,
+        mode_label(&mode),
+        served.tiles_per_item(),
+        registry.plans().plan_count(),
+        plan_counters.hits,
+        plan_counters.misses,
+        registry.plans().bank_count(),
+        bank_counters.hits,
+        bank_counters.misses,
     );
-    println!("(train a checkpoint via `winoq train --checkpoint …`, then `winoq eval`)");
+
+    // Request pool: distinct synthetic images, round-robined by clients.
+    let pool_n = concurrency.clamp(8, 64);
+    let (batch, _) = synthcifar::generate_batch(synthcifar::TEST_SEED, 0, pool_n);
+    let item = 3 * 32 * 32;
+    let inputs: Vec<Tensor> = (0..pool_n)
+        .map(|i| {
+            Tensor::from_vec(&[3, 32, 32], batch.data[i * item..(i + 1) * item].to_vec())
+        })
+        .collect();
+
+    eprintln!(
+        "closed loop: {requests} requests, {concurrency} clients | max_batch {}, \
+         window {} µs, queue cap {}, {} worker(s)",
+        serve_cfg.max_batch, serve_cfg.batch_window_us, serve_cfg.queue_cap, serve_cfg.workers
+    );
+    let report = run_closed_loop(served.as_ref(), &serve_cfg, &inputs, requests, concurrency);
+    println!("{}", report.summary_line());
+    if report.completed as usize != requests {
+        bail!("served {} of {requests} requests", report.completed);
+    }
+
+    if let Some(path) = args.flag("--stats-json") {
+        std::fs::write(path, report.to_json() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("stats JSON written to {path}");
+    }
+
+    // Bench mode: rerun the identical closed loop forced to max_batch 1
+    // and report the micro-batching payoff (acceptance bar: ≥ 2× tiles/s).
+    if let Some(path) = args.flag("--bench-json") {
+        eprintln!("baseline run (max_batch 1)…");
+        let base_cfg = ServeConfig { max_batch: 1, ..serve_cfg };
+        let baseline = run_closed_loop(served.as_ref(), &base_cfg, &inputs, requests, concurrency);
+        println!("batch=1  {}", baseline.summary_line());
+        let ratio = if baseline.tiles_per_sec > 0.0 {
+            report.tiles_per_sec / baseline.tiles_per_sec
+        } else {
+            0.0
+        };
+        println!(
+            "micro-batching payoff: {ratio:.2}x tiles/s at max_batch {} vs 1 {}",
+            serve_cfg.max_batch,
+            if ratio >= 2.0 { "(PASS ≥2x)" } else { "(below 2x bar)" }
+        );
+        let json = format!(
+            concat!(
+                "{{\"bench\": \"serve\", \"model\": \"{}\", \"mode\": \"{}\", ",
+                "\"requests\": {}, \"concurrency\": {}, \"max_batch\": {}, ",
+                "\"batch_window_us\": {}, \"workers\": {}, ",
+                "\"tiles_per_sec_ratio_vs_batch1\": {:.3}, ",
+                "\"run\": {}, \"baseline_batch1\": {}}}"
+            ),
+            json_escape(name),
+            json_escape(&mode_label(&mode)),
+            requests,
+            concurrency,
+            serve_cfg.max_batch,
+            serve_cfg.batch_window_us,
+            serve_cfg.workers,
+            ratio,
+            report.to_json(),
+            baseline.to_json(),
+        );
+        std::fs::write(path, json + "\n").with_context(|| format!("writing {path}"))?;
+        eprintln!("bench JSON written to {path}");
+    }
     Ok(())
+}
+
+/// Minimal JSON string escaping for interpolated values (the rest of the
+/// emitted JSON is static keys and numbers).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn mode_label(mode: &winoq::nn::ConvMode) -> String {
+    match *mode {
+        winoq::nn::ConvMode::Direct => "direct".to_string(),
+        winoq::nn::ConvMode::Winograd { m, base, quant } => format!(
+            "F({m},3) {} {}",
+            base.name(),
+            quant.map_or("float".to_string(), |q| q.label())
+        ),
+    }
 }

@@ -23,6 +23,8 @@ use super::winolayer::WinoConv2d;
 use crate::engine::EngineScratch;
 use crate::quant::scheme::QuantConfig;
 use crate::wino::basis::Base;
+use crate::wino::toomcook::WinogradPlan;
+use crate::wino::transform::WinoF;
 use std::collections::HashMap;
 
 /// How to execute the stride-1 3×3 convolutions.
@@ -94,10 +96,18 @@ impl ResNet18 {
     /// Initialise with He-style pseudo-random params (for tests / untrained
     /// serving demos).
     pub fn init(cfg: ResNetCfg, seed: u64) -> ResNet18 {
+        Self::from_params(cfg, Self::init_params(&cfg, seed))
+    }
+
+    /// He-style pseudo-random parameter collection for `cfg` — split out of
+    /// [`init`](Self::init) so callers holding a shared transform plan (the
+    /// serve registry) can route through
+    /// [`from_params_with_plan`](Self::from_params_with_plan).
+    pub fn init_params(cfg: &ResNetCfg, seed: u64) -> Params {
         use crate::wino::error::Prng;
         let mut rng = Prng::new(seed);
         let mut params: Params = HashMap::new();
-        for (prefix, _stride, cin, cout) in Self::conv_units(&cfg) {
+        for (prefix, _stride, cin, cout) in Self::conv_units(cfg) {
             let ksize = if prefix.ends_with("down") { 1 } else { 3 };
             let fan_in = (cin * ksize * ksize) as f64;
             let std = (2.0 / fan_in).sqrt();
@@ -128,13 +138,69 @@ impl ResNet18 {
             "fc.b".into(),
             Tensor::from_vec(&[cfg.num_classes], vec![0.0; cfg.num_classes]),
         );
-        Self::from_params(cfg, params)
+        params
     }
 
-    /// Build from a parameter collection (e.g. a loaded checkpoint).
+    /// Build from a parameter collection (e.g. a loaded checkpoint). In
+    /// Winograd mode the `F(m, 3)` transform plan is lowered **once** and
+    /// shared across all stride-1 3×3 layers (it used to be rebuilt per
+    /// layer); callers with a cross-model plan cache pass theirs via
+    /// [`from_params_with_plan`](Self::from_params_with_plan).
     pub fn from_params(cfg: ResNetCfg, params: Params) -> ResNet18 {
+        match cfg.mode {
+            ConvMode::Winograd { m, base, .. } => {
+                let wf = WinoF::new(&WinogradPlan::new(m, 3), base);
+                Self::build(cfg, params, Some(&|_prefix: &str, w: &Tensor| {
+                    WinoConv2d::with_plan(wf.clone(), w)
+                }))
+            }
+            ConvMode::Direct => Self::build(cfg, params, None),
+        }
+    }
+
+    /// Build from a parameter collection and a shared, already-lowered
+    /// transform plan (the serve registry's plan-cache path). `wf` must
+    /// match the mode's `(m, base)` — the per-layer engines are lowered
+    /// from it without re-running the Toom-Cook construction.
+    pub fn from_params_with_plan(cfg: ResNetCfg, params: Params, wf: &WinoF) -> ResNet18 {
+        Self::check_plan(&cfg, wf);
+        Self::build(cfg, params, Some(&|_prefix: &str, w: &Tensor| {
+            WinoConv2d::with_plan(wf.clone(), w)
+        }))
+    }
+
+    /// Build with a caller-supplied layer lowering `(prefix, weights) →
+    /// layer` — how the serve registry routes every stride-1 3×3 layer
+    /// through its transform-plan / weight-bank cache. `wf` is only used
+    /// to validate the mode; the closure owns construction.
+    pub fn from_params_lowered(
+        cfg: ResNetCfg,
+        params: Params,
+        wf: &WinoF,
+        lower: &dyn Fn(&str, &Tensor) -> WinoConv2d,
+    ) -> ResNet18 {
+        Self::check_plan(&cfg, wf);
+        Self::build(cfg, params, Some(lower))
+    }
+
+    fn check_plan(cfg: &ResNetCfg, wf: &WinoF) {
+        match cfg.mode {
+            ConvMode::Winograd { m, base, .. } => {
+                assert_eq!(wf.m, m, "plan tile size mismatch");
+                assert_eq!(wf.base, base, "plan base mismatch");
+                assert_eq!(wf.r, 3, "ResNet18 wino layers are 3x3");
+            }
+            ConvMode::Direct => panic!("a transform plan requires Winograd mode"),
+        }
+    }
+
+    fn build(
+        cfg: ResNetCfg,
+        params: Params,
+        lower: Option<&dyn Fn(&str, &Tensor) -> WinoConv2d>,
+    ) -> ResNet18 {
         let mut wino = HashMap::new();
-        if let ConvMode::Winograd { m, base, .. } = cfg.mode {
+        if let (ConvMode::Winograd { .. }, Some(lower)) = (cfg.mode, lower) {
             for (prefix, stride, _cin, _cout) in Self::conv_units(&cfg) {
                 if stride != 1 || prefix.ends_with("down") {
                     continue; // strided/1×1 convs stay direct (as in ref [5])
@@ -142,7 +208,7 @@ impl ResNet18 {
                 let w = params
                     .get(&format!("{prefix}.w"))
                     .unwrap_or_else(|| panic!("missing weights for {prefix}"));
-                wino.insert(prefix.clone(), WinoConv2d::new(m, w, base));
+                wino.insert(prefix.clone(), lower(&prefix, w));
             }
         }
         ResNet18 { cfg, params, wino }
@@ -153,10 +219,8 @@ impl ResNet18 {
         if let ConvMode::Winograd { quant: Some(qcfg), .. } = self.cfg.mode {
             // Run the network stem-to-tail, calibrating each wino layer on
             // its actual input activations.
-            let keys: Vec<String> = self.wino.keys().cloned().collect();
-            let _ = keys;
             let mut captured: HashMap<String, Tensor> = HashMap::new();
-            self.forward_impl(batch, Some(&mut captured));
+            self.forward_impl(batch, Some(&mut captured), &mut EngineScratch::new());
             for (prefix, layer) in self.wino.iter_mut() {
                 if let Some(input) = captured.get(prefix) {
                     layer.quantize(qcfg, input, 1);
@@ -201,11 +265,8 @@ impl ResNet18 {
         &self,
         x: &Tensor,
         mut capture: Option<&mut HashMap<String, Tensor>>,
+        sc: &mut EngineScratch,
     ) -> Tensor {
-        // One engine workspace for the whole pass: grows to the largest
-        // Winograd layer shape once, then every layer runs allocation-free.
-        let mut scratch = EngineScratch::new();
-        let sc = &mut scratch;
         let mut h = relu(&self.conv_unit(x, "stem", 1, &mut capture, sc));
         let widths = self.cfg.widths();
         let mut cin = widths[0];
@@ -229,9 +290,19 @@ impl ResNet18 {
         linear(&pooled, &self.params["fc.w"], &self.params["fc.b"].data)
     }
 
-    /// Forward pass: `x` [N,3,H,W] → logits [N, num_classes].
+    /// Forward pass: `x` [N,3,H,W] → logits [N, num_classes]. Allocates a
+    /// fresh engine workspace; serving loops should prefer
+    /// [`forward_with_scratch`](Self::forward_with_scratch).
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        self.forward_impl(x, None)
+        self.forward_impl(x, None, &mut EngineScratch::new())
+    }
+
+    /// Forward pass reusing a caller-held engine workspace — the serve
+    /// workers hold one [`EngineScratch`] each, so repeated micro-batch
+    /// passes stay allocation-free on the large flat buffers. Output is
+    /// identical to [`forward`](Self::forward).
+    pub fn forward_with_scratch(&self, x: &Tensor, scratch: &mut EngineScratch) -> Tensor {
+        self.forward_impl(x, None, scratch)
     }
 
     /// Top-1 accuracy on a labelled batch.
@@ -317,6 +388,21 @@ mod tests {
         let labels: Vec<usize> = (0..16).map(|i| i % 10).collect();
         let acc = net.accuracy(&x, &labels);
         assert!(acc <= 0.6, "untrained net should be near chance, got {acc}");
+    }
+
+    #[test]
+    fn shared_plan_construction_matches_fresh() {
+        // from_params_with_plan (serve registry path) must be
+        // indistinguishable from from_params' per-net plan.
+        use crate::wino::toomcook::WinogradPlan;
+        use crate::wino::transform::WinoF;
+        let cfg = small_cfg(ConvMode::Winograd { m: 4, base: Base::Legendre, quant: None });
+        let params = ResNet18::init_params(&cfg, 17);
+        let fresh = ResNet18::from_params(cfg, params.clone());
+        let wf = WinoF::new(&WinogradPlan::new(4, 3), Base::Legendre);
+        let shared = ResNet18::from_params_with_plan(cfg, params, &wf);
+        let x = rand_images(19, 1, 32);
+        assert_eq!(fresh.forward(&x).data, shared.forward(&x).data);
     }
 
     #[test]

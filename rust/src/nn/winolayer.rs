@@ -55,13 +55,43 @@ pub struct WinoConv2d {
 
 impl WinoConv2d {
     /// Build from float weights `[K,C,r,r]`; transforms them once (via
-    /// the shared [`transform_weight_bank`] lowering).
+    /// the shared [`transform_weight_bank`] lowering). Constructs a fresh
+    /// transform plan — callers instantiating many layers with the same
+    /// `F(m, r)`/base (a ResNet, the serve registry) should build the
+    /// [`WinoF`] once and use [`with_plan`](Self::with_plan).
     pub fn new(m: usize, weights: &Tensor, base: Base) -> WinoConv2d {
         assert_eq!(weights.rank(), 4);
-        let (k, c, r) = (weights.dims[0], weights.dims[1], weights.dims[2]);
-        let plan = WinogradPlan::new(m, r);
-        let wf = WinoF::new(&plan, base);
+        let plan = WinogradPlan::new(m, weights.dims[2]);
+        Self::with_plan(WinoF::new(&plan, base), weights)
+    }
+
+    /// Build from float weights and an already-lowered transform plan
+    /// (shared across layers / cached by `serve::plan::PlanCache`), so the
+    /// exact Toom-Cook construction and base-change conjugation are not
+    /// redone per layer.
+    pub fn with_plan(wf: WinoF, weights: &Tensor) -> WinoConv2d {
+        assert_eq!(weights.rank(), 4);
+        let r = weights.dims[2];
+        assert_eq!(r, wf.r, "kernel size {r} does not match the plan's r = {}", wf.r);
         let wt = transform_weight_bank(&wf, weights);
+        Self::from_transformed(wf, wt)
+    }
+
+    /// Build from an already-transformed `[K][C]` weight bank (e.g. one
+    /// cached by `serve::plan::PlanCache`) — no weight transform runs at
+    /// all. The engine is lowered through
+    /// [`WinoEngine::from_transformed_weights`], the single serving
+    /// construction path.
+    pub fn from_transformed(wf: WinoF, wt: Vec<Vec<Mat>>) -> WinoConv2d {
+        let k = wt.len();
+        assert!(k > 0, "need at least one output filter");
+        let c = wt[0].len();
+        for per_c in &wt {
+            assert_eq!(per_c.len(), c, "ragged filter bank");
+            for m in per_c {
+                assert_eq!((m.rows(), m.cols()), (wf.n, wf.n), "bank/plan tile mismatch");
+            }
+        }
         let engine = WinoEngine::from_transformed_weights(wf.clone(), &wt, None);
         WinoConv2d { wf, wt, k, c, quant: None, engine }
     }
@@ -251,16 +281,7 @@ impl WinoConv2d {
 mod tests {
     use super::super::layers::conv2d;
     use super::*;
-    use crate::wino::error::Prng;
-
-    fn prng_tensor(seed: u64, dims: &[usize], scale: f64) -> Tensor {
-        let mut rng = Prng::new(seed);
-        let n = dims.iter().product();
-        Tensor::from_vec(
-            dims,
-            (0..n).map(|_| rng.uniform(scale) as f32).collect(),
-        )
-    }
+    use crate::testkit::prng_tensor;
 
     fn assert_tensors_close(a: &Tensor, b: &Tensor, tol: f32) {
         assert_eq!(a.dims, b.dims);
@@ -353,6 +374,21 @@ mod tests {
             layer.forward(&x, cfg).data,
             layer.forward_reference(&x, cfg).data
         );
+    }
+
+    #[test]
+    fn with_plan_matches_fresh_construction() {
+        // Sharing one lowered WinoF across layers (the serve/plan path)
+        // must be indistinguishable from per-layer construction.
+        use crate::wino::toomcook::WinogradPlan;
+        use crate::wino::transform::WinoF;
+        let x = prng_tensor(30, &[1, 3, 9, 9], 1.0);
+        let w = prng_tensor(31, &[2, 3, 3, 3], 0.5);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let wf = WinoF::new(&WinogradPlan::new(4, 3), Base::Chebyshev);
+        let shared = WinoConv2d::with_plan(wf, &w);
+        let fresh = WinoConv2d::new(4, &w, Base::Chebyshev);
+        assert_eq!(shared.forward(&x, cfg).data, fresh.forward(&x, cfg).data);
     }
 
     #[test]

@@ -58,7 +58,14 @@ impl QWino {
     /// Float transform matrices (fake-quant on values only).
     pub fn new(m: usize, r: usize, base: Base, cfg: QuantConfig) -> QWino {
         let plan = WinogradPlan::new(m, r);
-        QWino { wf: WinoF::new(&plan, base), cfg, mat_bits: None }
+        Self::with_plan(WinoF::new(&plan, base), cfg)
+    }
+
+    /// Build from an already-lowered transform plan (shared across layers
+    /// or served models, e.g. by `serve::plan::PlanCache`) instead of
+    /// re-running the exact Toom-Cook construction per instance.
+    pub fn with_plan(wf: WinoF, cfg: QuantConfig) -> QWino {
+        QWino { wf, cfg, mat_bits: None }
     }
 
     /// Deployed configuration: transform matrices quantized to `mat_bits`
@@ -292,6 +299,16 @@ mod tests {
             let y1 = qw.forward_int(x, w, &s);
             assert_eq!(y1.data(), yb.data(), "batched ≠ per-tile integer path");
         }
+    }
+
+    #[test]
+    fn with_plan_matches_fresh_construction() {
+        // A shared lowered plan (the serve plan-cache path) must produce
+        // a pipeline indistinguishable from per-instance construction.
+        let plan = WinogradPlan::new(4, 3);
+        let shared = QWino::with_plan(WinoF::new(&plan, Base::Legendre), QuantConfig::w8());
+        let fresh = QWino::new(4, 3, Base::Legendre, QuantConfig::w8());
+        assert_eq!(shared.measure_error(50, 5), fresh.measure_error(50, 5));
     }
 
     #[test]

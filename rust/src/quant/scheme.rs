@@ -121,6 +121,20 @@ impl QuantConfig {
         QuantConfig { act_bits: bits, weight_bits: bits, hadamard_bits: bits, out_bits: bits }
     }
 
+    /// Parse a CLI-style config name: the paper's two operating points
+    /// (`w8`, `w8_h9`/`w8h9`) plus `uN` for a uniform N-bit sweep point.
+    pub fn from_name(s: &str) -> Option<QuantConfig> {
+        match s {
+            "w8" => Some(Self::w8()),
+            "w8_h9" | "w8h9" => Some(Self::w8_h9()),
+            _ => s
+                .strip_prefix('u')
+                .and_then(|b| b.parse::<u32>().ok())
+                .filter(|b| (2..=24).contains(b))
+                .map(Self::uniform),
+        }
+    }
+
     pub fn label(&self) -> String {
         if self.act_bits == self.weight_bits
             && self.act_bits == self.out_bits
@@ -212,6 +226,17 @@ mod tests {
         assert_eq!(QuantConfig::w8().label(), "8 bits");
         assert_eq!(QuantConfig::w8_h9().label(), "8b + 9b");
         assert_eq!(QuantConfig::uniform(6).label(), "6 bits");
+    }
+
+    #[test]
+    fn config_from_name() {
+        assert_eq!(QuantConfig::from_name("w8"), Some(QuantConfig::w8()));
+        assert_eq!(QuantConfig::from_name("w8_h9"), Some(QuantConfig::w8_h9()));
+        assert_eq!(QuantConfig::from_name("w8h9"), Some(QuantConfig::w8_h9()));
+        assert_eq!(QuantConfig::from_name("u6"), Some(QuantConfig::uniform(6)));
+        assert_eq!(QuantConfig::from_name("u1"), None);
+        assert_eq!(QuantConfig::from_name("none"), None);
+        assert_eq!(QuantConfig::from_name("w9"), None);
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Micro-batching inference serving: bounded request [`queue`], named
+//! model [`registry`], transform-[`plan`] cache and latency [`stats`].
+//!
+//! The deployment story the paper (and LANCE, arXiv 2003.08646) tells —
+//! quantized Winograd in a conditioned base wins at serving time — only
+//! materializes when independent requests are **micro-batched into one
+//! engine pass**: the per-frequency `[K,C] × [C,T]` panel multiply reads
+//! each weight panel once per pass, so widening `T` from one request's
+//! tiles to a whole batch's amortizes weight traffic, thread fork/join
+//! and workspace setup across the batch. The flow:
+//!
+//! ```text
+//!  clients ──submit──▶ ServeQueue (bounded, rejects when full)
+//!                          │ drain ≤ max_batch within batch_window_us
+//!                          ▼
+//!                    worker threads (one EngineScratch each)
+//!                          │ stack [C,H,W] items → [B,C,H,W]
+//!                          ▼
+//!            BatchModel::infer_batch (WinoEngine panel pipeline,
+//!              lowered once via registry + PlanCache)
+//!                          │ split rows, per-request Response
+//!                          ▼
+//!                  response channels + ServeStats (p50/p95/p99)
+//! ```
+//!
+//! Batching changes **nothing numerically**: every engine stage is
+//! per-tile independent with a fixed channel-accumulation order, so a
+//! response is bit-identical to running that request alone
+//! (`rust/tests/serve_parity.rs` pins this for both paper quant configs
+//! across bases). Workers hand the actual parallelism to the engine's
+//! scoped pool ([`engine::parallel`](crate::engine::parallel)); keep
+//! `workers × WINOQ_THREADS` at or below the core count.
+
+pub mod plan;
+pub mod queue;
+pub mod registry;
+pub mod stats;
+
+pub use plan::{PlanCache, PlanKey};
+pub use queue::{Rejected, Request, Response, ServeQueue};
+pub use registry::{ModelRegistry, ServedModel};
+pub use stats::{ServeStats, StatsReport};
+
+use crate::engine::{EngineScratch, WinoEngine};
+use crate::nn::layers::Conv2dCfg;
+use crate::nn::tensor::Tensor;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Anything the serve loop can host: a batched forward pass over stacked
+/// per-item inputs. `Sync` because one model instance is shared by every
+/// worker thread.
+pub trait BatchModel: Sync {
+    /// Per-item input dims (no batch axis), e.g. `[3, 32, 32]`.
+    fn input_dims(&self) -> &[usize];
+
+    /// Run one micro-batch: `batch` is `[B, ..input_dims]`, the result
+    /// must keep the batch axis first (`[B, ..]`) with per-item rows
+    /// independent of `B` — the worker splits it back into responses.
+    fn infer_batch(&self, batch: &Tensor, scratch: &mut EngineScratch) -> Tensor;
+
+    /// Winograd tiles one item pushes through the engine (the stats
+    /// throughput unit; 0 when unknown).
+    fn tiles_per_item(&self) -> usize;
+}
+
+/// Serving loop knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Micro-batch size cap per engine pass.
+    pub max_batch: usize,
+    /// How long a worker waits (µs) to widen a batch past one request.
+    pub batch_window_us: u64,
+    /// Admission queue capacity (backpressure bound).
+    pub queue_cap: usize,
+    /// Worker threads (each owns one [`EngineScratch`]).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { max_batch: 8, batch_window_us: 2000, queue_cap: 256, workers: 1 }
+    }
+}
+
+/// A single pre-planned [`WinoEngine`] served as a model — one conv layer
+/// behind the queue. Used by the parity tests and useful as a
+/// minimal-overhead serving target; full networks go through the
+/// [`registry`].
+pub struct EngineModel<'a> {
+    engine: &'a WinoEngine,
+    conv: Conv2dCfg,
+    input_dims: Vec<usize>,
+    tiles_per_item: usize,
+}
+
+impl<'a> EngineModel<'a> {
+    pub fn new(engine: &'a WinoEngine, conv: Conv2dCfg, input_dims: [usize; 3]) -> EngineModel<'a> {
+        let [c, h, w] = input_dims;
+        assert_eq!(c, engine.c, "input channels must match the engine");
+        let tiles_per_item = engine.tile_count_for(&[1, c, h, w], conv.padding);
+        EngineModel { engine, conv, input_dims: input_dims.to_vec(), tiles_per_item }
+    }
+}
+
+impl BatchModel for EngineModel<'_> {
+    fn input_dims(&self) -> &[usize] {
+        &self.input_dims
+    }
+
+    fn infer_batch(&self, batch: &Tensor, scratch: &mut EngineScratch) -> Tensor {
+        self.engine.forward_with(batch, self.conv, scratch)
+    }
+
+    fn tiles_per_item(&self) -> usize {
+        self.tiles_per_item
+    }
+}
+
+/// Closes the queue when dropped — including when the client closure
+/// unwinds, so worker threads never outlive a panicking session (the
+/// scope would otherwise join them against a never-closed queue forever).
+struct CloseOnDrop<'a>(&'a ServeQueue);
+
+impl Drop for CloseOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Aborts the queue if the owning thread is unwinding — a dead worker
+/// must not leave clients blocked on responses that will never come.
+struct AbortOnPanic<'a>(&'a ServeQueue);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        }
+    }
+}
+
+/// Run a serving session: spawn `cfg.workers` scoped worker threads over
+/// a fresh bounded queue, hand the queue to `client`, and shut the
+/// workers down (draining admitted requests) when `client` returns.
+///
+/// The client closure runs on the calling thread, so non-`Send` state and
+/// return values flow through untouched. Panic-safe in both directions: a
+/// panicking client still closes the queue (workers exit, the panic
+/// propagates), and a panicking worker aborts the queue (pending and
+/// future submissions fail with [`Rejected::Closed`] instead of hanging).
+pub fn with_server<R>(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    client: impl FnOnce(&ServeQueue) -> R,
+) -> R {
+    // Shape-validating queue: malformed submissions are rejected at
+    // admission instead of reaching (and panicking) a worker.
+    let queue = ServeQueue::with_dims(cfg.queue_cap, model.input_dims().to_vec());
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.workers.max(1) {
+            scope.spawn(|| {
+                let _guard = AbortOnPanic(&queue);
+                worker_loop(model, &queue, cfg, stats);
+            });
+        }
+        let _close = CloseOnDrop(&queue);
+        client(&queue)
+    })
+}
+
+/// One worker: drain micro-batches, stack them, run the engine pass,
+/// split and answer. Owns its [`EngineScratch`] for the whole session.
+fn worker_loop(
+    model: &dyn BatchModel,
+    queue: &ServeQueue,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+) {
+    let mut scratch = EngineScratch::new();
+    let window = Duration::from_micros(cfg.batch_window_us);
+    let item_dims = model.input_dims().to_vec();
+    let item_len: usize = item_dims.iter().product();
+    while let Some(batch) = queue.next_batch(cfg.max_batch, window) {
+        let depth_after_drain = queue.depth();
+        let bsz = batch.len();
+        let mut data = Vec::with_capacity(bsz * item_len);
+        for req in &batch {
+            // Admission already validated shapes (ServeQueue::with_dims).
+            debug_assert_eq!(req.input.dims, item_dims, "request shape mismatch");
+            data.extend_from_slice(&req.input.data);
+        }
+        let mut dims = Vec::with_capacity(item_dims.len() + 1);
+        dims.push(bsz);
+        dims.extend_from_slice(&item_dims);
+        let y = model.infer_batch(&Tensor::from_vec(&dims, data), &mut scratch);
+        assert_eq!(y.dims[0], bsz, "model must preserve the batch axis");
+        let row = y.data.len() / bsz;
+        let out_dims: Vec<usize> = y.dims[1..].to_vec();
+        let mut lat_us = Vec::with_capacity(bsz);
+        for (i, req) in batch.into_iter().enumerate() {
+            let output = Tensor::from_vec(&out_dims, y.data[i * row..(i + 1) * row].to_vec());
+            let latency_us = req.enqueued.elapsed().as_micros() as u64;
+            lat_us.push(latency_us);
+            // A gone client (dropped receiver) is not a server error.
+            let _ = req.tx.send(Response { output, latency_us, batch_size: bsz });
+        }
+        stats.record_batch(
+            bsz,
+            (model.tiles_per_item() * bsz) as u64,
+            depth_after_drain,
+            &lat_us,
+        );
+    }
+}
+
+/// The built-in synthetic closed-loop client: `concurrency` threads each
+/// submit one request from `inputs` (round-robin), wait for its response,
+/// and repeat until `total_requests` have completed. Admission rejections
+/// are counted and retried after a short backoff, so the loop always
+/// finishes. Returns the folded stats report (wall clock measured around
+/// the whole session, server startup included).
+pub fn run_closed_loop(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    inputs: &[Tensor],
+    total_requests: usize,
+    concurrency: usize,
+) -> StatsReport {
+    assert!(!inputs.is_empty(), "need at least one input to serve");
+    let stats = ServeStats::new();
+    let started = Instant::now();
+    let next = AtomicUsize::new(0);
+    with_server(model, cfg, &stats, |queue| {
+        std::thread::scope(|s| {
+            for _ in 0..concurrency.max(1) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total_requests {
+                        break;
+                    }
+                    let input = &inputs[i % inputs.len()];
+                    loop {
+                        match queue.submit(input.clone()) {
+                            Ok(rx) => {
+                                let _ = rx.recv();
+                                break;
+                            }
+                            Err(Rejected::Full) => {
+                                stats.record_reject();
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(e) => panic!("closed-loop submit failed: {e}"),
+                        }
+                    }
+                });
+            }
+        });
+    });
+    stats.report(started.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prng_tensor;
+    use crate::wino::basis::Base;
+
+    fn engine_and_inputs() -> (WinoEngine, Vec<Tensor>) {
+        let w = prng_tensor(81, &[3, 2, 3, 3], 0.4);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let inputs = (0..5)
+            .map(|i| prng_tensor(100 + i, &[2, 8, 8], 1.0))
+            .collect();
+        (engine, inputs)
+    }
+
+    #[test]
+    fn served_responses_match_single_request_forward() {
+        let (engine, inputs) = engine_and_inputs();
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let model = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let stats = ServeStats::new();
+        let cfg = ServeConfig { max_batch: 4, batch_window_us: 3000, ..Default::default() };
+        let responses = with_server(&model, &cfg, &stats, |queue| {
+            // Submit everything up front, then collect: forces real
+            // micro-batches to assemble.
+            let rxs: Vec<_> = inputs
+                .iter()
+                .map(|x| queue.submit(x.clone()).unwrap())
+                .collect();
+            rxs.into_iter()
+                .map(|rx| rx.recv().expect("worker died"))
+                .collect::<Vec<Response>>()
+        });
+        assert_eq!(responses.len(), inputs.len());
+        for (x, resp) in inputs.iter().zip(&responses) {
+            let mut single = x.clone();
+            single.dims.insert(0, 1);
+            let want = engine.forward(&single, conv);
+            assert_eq!(resp.output.dims, want.dims[1..].to_vec());
+            for (a, b) in resp.output.data.iter().zip(&want.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "served ≠ single-request");
+            }
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+        }
+        let report = stats.report(0.1);
+        assert_eq!(report.completed, 5);
+        assert!(report.batches <= 5);
+        assert!(report.tiles_per_sec > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_completes_every_request() {
+        let (engine, inputs) = engine_and_inputs();
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let model = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let cfg = ServeConfig {
+            max_batch: 4,
+            batch_window_us: 200,
+            queue_cap: 8,
+            workers: 2,
+        };
+        let report = run_closed_loop(&model, &cfg, &inputs, 23, 6);
+        assert_eq!(report.completed, 23);
+        assert!(report.wall_seconds > 0.0);
+        assert!(report.requests_per_sec > 0.0);
+    }
+
+    struct PanickingModel;
+
+    impl BatchModel for PanickingModel {
+        fn input_dims(&self) -> &[usize] {
+            &[1, 2, 2]
+        }
+
+        fn infer_batch(&self, _batch: &Tensor, _scratch: &mut EngineScratch) -> Tensor {
+            panic!("model exploded");
+        }
+
+        fn tiles_per_item(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn dead_worker_fails_fast_instead_of_hanging() {
+        let stats = ServeStats::new();
+        let cfg = ServeConfig { max_batch: 2, batch_window_us: 100, queue_cap: 4, workers: 1 };
+        let item = || Tensor::from_vec(&[1, 2, 2], vec![0.0; 4]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            with_server(&PanickingModel, &cfg, &stats, |queue| {
+                let rx = queue.submit(item()).unwrap();
+                // The worker dies on this batch: the response channel must
+                // error out rather than block forever...
+                assert!(rx.recv().is_err());
+                // ...and the queue must transition to Closed (the dying
+                // worker aborts it), never stranding later submitters.
+                loop {
+                    match queue.submit(item()) {
+                        Err(Rejected::Closed) => break,
+                        Ok(_) | Err(Rejected::Full) => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(e) => panic!("unexpected rejection: {e}"),
+                    }
+                }
+            });
+        }));
+        assert!(result.is_err(), "the worker's panic must propagate, not vanish");
+    }
+
+    #[test]
+    fn backpressure_is_observable() {
+        // One slow-ish model, capacity 1, many eager clients: some
+        // submissions must bounce and be retried.
+        let (engine, inputs) = engine_and_inputs();
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let model = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window_us: 0,
+            queue_cap: 1,
+            workers: 1,
+        };
+        let report = run_closed_loop(&model, &cfg, &inputs, 12, 4);
+        assert_eq!(report.completed, 12, "retries must finish the closed loop");
+        assert!(report.rejected > 0, "cap-1 queue with 4 clients must reject");
+    }
+}

@@ -1,0 +1,191 @@
+//! Transform-plan cache: the precomputed base-changed `Bᵀ/G/A` matrices
+//! and transformed (optionally fake-quantized) `G·W` weight banks, shared
+//! across every model and layer the server hosts.
+//!
+//! The exact Toom-Cook construction runs over rationals and the base
+//! change conjugates three matrices — cheap once, wasteful when repeated
+//! per layer per model per registration. [`PlanCache`] memoizes the
+//! lowered [`WinoF`] by [`PlanKey`] `(m, r, base)` and the per-layer
+//! transformed weight banks by `(layer id, key)`. The registry consumes
+//! both ([`weight_bank`](PlanCache::weight_bank) →
+//! [`WinoConv2d::from_transformed`](crate::nn::winolayer::WinoConv2d::from_transformed)),
+//! so in the serving path
+//! [`WinoEngine::from_transformed_weights`](crate::engine::WinoEngine::from_transformed_weights)
+//! is the **only** engine construction route: transforms are computed
+//! once, engines are lowered from cached panels.
+
+use crate::engine::transform_weight_bank;
+use crate::nn::tensor::Tensor;
+use crate::wino::basis::Base;
+use crate::wino::matrix::Mat;
+use crate::wino::toomcook::WinogradPlan;
+use crate::wino::transform::WinoF;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cache key for one transform plan: `F(m×m, r×r)` in `base`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub m: usize,
+    pub r: usize,
+    pub base: Base,
+}
+
+impl PlanKey {
+    pub fn f(m: usize, r: usize, base: Base) -> PlanKey {
+        PlanKey { m, r, base }
+    }
+}
+
+/// Hit/miss counters for one cache map (telemetry for the stats dump).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// A transformed `[K][C]` weight bank (each entry an `N×N` tile matrix).
+pub type WeightBank = Vec<Vec<Mat>>;
+
+type BankMap = HashMap<(String, PlanKey), Arc<WeightBank>>;
+
+/// Shared cache of lowered transform plans and transformed weight banks.
+///
+/// Interior mutability (`Mutex`) so one cache can be shared by reference
+/// across the registry and worker threads; both maps are tiny (a handful
+/// of plans, one bank per hosted layer) and are only touched at model
+/// registration time, never on the request hot path.
+#[derive(Default)]
+pub struct PlanCache {
+    wfs: Mutex<HashMap<PlanKey, Arc<WinoF>>>,
+    banks: Mutex<BankMap>,
+    wf_counters: Mutex<CacheCounters>,
+    bank_counters: Mutex<CacheCounters>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The lowered transform plan for `key`, building it on first use.
+    pub fn wf(&self, key: PlanKey) -> Arc<WinoF> {
+        let mut map = self.wfs.lock().unwrap();
+        let mut counters = self.wf_counters.lock().unwrap();
+        if let Some(wf) = map.get(&key) {
+            counters.hits += 1;
+            return wf.clone();
+        }
+        counters.misses += 1;
+        let wf = Arc::new(WinoF::new(&WinogradPlan::new(key.m, key.r), key.base));
+        map.insert(key, wf.clone());
+        wf
+    }
+
+    /// The transformed `[K][C]` weight bank for one layer, computing it on
+    /// first use. `layer_id` must be globally unique per weight tensor
+    /// (the registry uses `"<model>/<layer prefix>"`); re-registering the
+    /// same model — or building several quantized variants of one
+    /// checkpoint — reuses the float bank instead of re-transforming.
+    pub fn weight_bank(&self, layer_id: &str, key: PlanKey, weights: &Tensor) -> Arc<WeightBank> {
+        let map_key = (layer_id.to_string(), key);
+        let wf = self.wf(key);
+        // The map lock is held across the transform: this runs at model
+        // registration, never on the request hot path, and serializing
+        // concurrent registrations of the same layer guarantees the heavy
+        // transform runs exactly once (and the hit/miss telemetry stays
+        // truthful) instead of racing check-then-insert.
+        let mut map = self.banks.lock().unwrap();
+        let mut counters = self.bank_counters.lock().unwrap();
+        if let Some(bank) = map.get(&map_key) {
+            counters.hits += 1;
+            return bank.clone();
+        }
+        counters.misses += 1;
+        let bank = Arc::new(transform_weight_bank(&wf, weights));
+        map.insert(map_key, bank.clone());
+        bank
+    }
+
+    /// Number of distinct plans currently cached.
+    pub fn plan_count(&self) -> usize {
+        self.wfs.lock().unwrap().len()
+    }
+
+    /// Number of distinct weight banks currently cached.
+    pub fn bank_count(&self) -> usize {
+        self.banks.lock().unwrap().len()
+    }
+
+    /// `(plan, bank)` hit/miss counters.
+    pub fn counters(&self) -> (CacheCounters, CacheCounters) {
+        (
+            *self.wf_counters.lock().unwrap(),
+            *self.bank_counters.lock().unwrap(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::Conv2dCfg;
+    use crate::nn::winolayer::WinoConv2d;
+    use crate::testkit::prng_tensor;
+
+    #[test]
+    fn plans_are_shared_and_counted() {
+        let cache = PlanCache::new();
+        let key = PlanKey::f(4, 3, Base::Legendre);
+        let a = cache.wf(key);
+        let b = cache.wf(key);
+        assert!(Arc::ptr_eq(&a, &b), "same key must return the same plan");
+        assert_eq!(cache.plan_count(), 1);
+        let (wf_c, _) = cache.counters();
+        assert_eq!((wf_c.hits, wf_c.misses), (1, 1));
+        cache.wf(PlanKey::f(2, 3, Base::Canonical));
+        assert_eq!(cache.plan_count(), 2);
+    }
+
+    #[test]
+    fn banks_are_reused_per_layer_id() {
+        let cache = PlanCache::new();
+        let key = PlanKey::f(4, 3, Base::Legendre);
+        let w = prng_tensor(5, &[2, 3, 3, 3], 0.5);
+        let a = cache.weight_bank("m/conv1", key, &w);
+        let b = cache.weight_bank("m/conv1", key, &w);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = cache.weight_bank("m/conv2", key, &w);
+        assert!(!Arc::ptr_eq(&a, &c), "different layer ids are distinct banks");
+        assert_eq!(cache.bank_count(), 2);
+    }
+
+    #[test]
+    fn cached_bank_lowering_matches_fresh_layer() {
+        // The serving lowering (cached bank → WinoConv2d::from_transformed)
+        // must be bit-identical to building the layer from scratch, in
+        // float and after quantization.
+        use crate::quant::scheme::QuantConfig;
+        let cache = PlanCache::new();
+        let key = PlanKey::f(4, 3, Base::Legendre);
+        let w = prng_tensor(7, &[3, 4, 3, 3], 0.4);
+        let x = prng_tensor(8, &[1, 4, 10, 10], 1.0);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+
+        let fresh = WinoConv2d::new(4, &w, Base::Legendre);
+        let wf = cache.wf(key);
+        let bank = cache.weight_bank("m/l0", key, &w);
+        let cached = WinoConv2d::from_transformed(wf.as_ref().clone(), bank.as_ref().clone());
+        assert_eq!(cached.forward(&x, cfg).data, fresh.forward(&x, cfg).data);
+
+        // Quantizing the bank-lowered layer must match quantizing a fresh
+        // one (the cache hands out pristine float banks).
+        let mut qfresh = WinoConv2d::new(4, &w, Base::Legendre);
+        qfresh.quantize(QuantConfig::w8(), &x, 1);
+        let bank2 = cache.weight_bank("m/l0", key, &w);
+        let mut qcached =
+            WinoConv2d::from_transformed(wf.as_ref().clone(), bank2.as_ref().clone());
+        qcached.quantize(QuantConfig::w8(), &x, 1);
+        assert_eq!(qcached.forward(&x, cfg).data, qfresh.forward(&x, cfg).data);
+    }
+}

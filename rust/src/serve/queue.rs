@@ -1,0 +1,304 @@
+//! Bounded request queue with micro-batching and admission backpressure.
+//!
+//! Clients [`submit`](ServeQueue::submit) one item each and get a
+//! per-request response channel back; admission fails immediately
+//! (`Err(Rejected)`) when the queue is at capacity, so overload turns
+//! into fast rejections instead of unbounded memory growth and latency
+//! collapse. Workers call [`next_batch`](ServeQueue::next_batch), which
+//! blocks for the first request and then keeps draining until either
+//! `max_batch` requests are assembled or the `batch_window` deadline
+//! expires — the standard micro-batching trade: a bounded wait buys a
+//! wider `T` panel for the engine pass.
+//!
+//! Everything is `std::sync` (`Mutex` + `Condvar` + `mpsc`): no async
+//! runtime exists in the vendored crate set, and none is needed — the
+//! engine pass dwarfs wakeup latency at serving batch sizes.
+
+use crate::nn::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Admission rejection. Only [`Full`](Rejected::Full) is transient —
+/// closed-loop clients retry it; the other variants are terminal for the
+/// request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// Queue at capacity (backpressure) — retry later or shed the load.
+    Full,
+    /// The server is shutting down.
+    Closed,
+    /// The input's dims don't match the served model's per-item dims.
+    /// Validated at admission so a malformed request cannot reach (and
+    /// kill) a worker thread.
+    Shape { expected: Vec<usize>, got: Vec<usize> },
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::Full => write!(f, "request rejected: serve queue at capacity"),
+            Rejected::Closed => write!(f, "request rejected: server is shutting down"),
+            Rejected::Shape { expected, got } => write!(
+                f,
+                "request rejected: input dims {got:?} do not match the model's {expected:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// One queued inference request.
+pub struct Request {
+    /// Per-item input tensor (no batch axis; e.g. `[C, H, W]`).
+    pub input: Tensor,
+    /// Admission timestamp — latency is measured from here.
+    pub enqueued: Instant,
+    /// Where the worker sends the response.
+    pub tx: Sender<Response>,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Per-item output tensor (no batch axis; e.g. logits `[num_classes]`).
+    pub output: Tensor,
+    /// End-to-end latency (admission → response), microseconds.
+    pub latency_us: u64,
+    /// Size of the micro-batch this request rode in.
+    pub batch_size: usize,
+}
+
+struct QueueState {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// The bounded micro-batching queue shared by clients and workers.
+pub struct ServeQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    cap: usize,
+    /// When set, `submit` rejects inputs whose dims differ.
+    expected_dims: Option<Vec<usize>>,
+}
+
+impl ServeQueue {
+    /// A queue admitting at most `cap` in-flight (queued) requests, with
+    /// no input-shape validation (the embedder's responsibility).
+    pub fn new(cap: usize) -> ServeQueue {
+        Self::build(cap, None)
+    }
+
+    /// A queue that additionally validates every submission against the
+    /// served model's per-item dims — what [`with_server`](super::with_server)
+    /// constructs, so a malformed request is rejected at admission
+    /// instead of panicking a worker.
+    pub fn with_dims(cap: usize, expected_dims: Vec<usize>) -> ServeQueue {
+        Self::build(cap, Some(expected_dims))
+    }
+
+    fn build(cap: usize, expected_dims: Option<Vec<usize>>) -> ServeQueue {
+        assert!(cap > 0, "queue capacity must be positive");
+        ServeQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            cap,
+            expected_dims,
+        }
+    }
+
+    /// Submit one item; returns the response channel, or [`Rejected`]
+    /// when the input shape is wrong, the queue is at capacity, or the
+    /// server is shutting down.
+    pub fn submit(&self, input: Tensor) -> Result<Receiver<Response>, Rejected> {
+        if let Some(expected) = &self.expected_dims {
+            if &input.dims != expected {
+                return Err(Rejected::Shape {
+                    expected: expected.clone(),
+                    got: input.dims.clone(),
+                });
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(Rejected::Closed);
+        }
+        if st.items.len() >= self.cap {
+            return Err(Rejected::Full);
+        }
+        let (tx, rx) = channel();
+        st.items.push_back(Request { input, enqueued: Instant::now(), tx });
+        drop(st);
+        self.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Current queue depth (queued, not yet drained).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// Close the queue: pending requests still drain, new submissions are
+    /// rejected, and workers return `None` once the queue is empty.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Close the queue **and drop every pending request** — each waiting
+    /// client's `recv` errors out immediately instead of blocking on a
+    /// batch that will never run. Called when a worker dies so a broken
+    /// session fails fast rather than hanging submitters.
+    pub fn abort(&self) {
+        let pending: Vec<Request> = {
+            let mut st = self.state.lock().unwrap();
+            st.closed = true;
+            st.items.drain(..).collect()
+        };
+        self.cv.notify_all();
+        drop(pending);
+    }
+
+    /// Worker side: block until at least one request is queued, then keep
+    /// waiting up to `batch_window` (from the moment the first request is
+    /// seen) for more, returning as soon as `max_batch` are available.
+    /// Returns `None` when the queue is closed and drained. Never returns
+    /// an empty batch: if a racing worker drains the queue during this
+    /// worker's batch window, it goes back to waiting.
+    pub fn next_batch(&self, max_batch: usize, batch_window: Duration) -> Option<Vec<Request>> {
+        let max_batch = max_batch.max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            while st.items.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.cv.wait(st).unwrap();
+            }
+            let deadline = Instant::now() + batch_window;
+            while st.items.len() < max_batch && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            let take = st.items.len().min(max_batch);
+            if take > 0 {
+                return Some(st.items.drain(..take).collect());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(v: f32) -> Tensor {
+        Tensor::from_vec(&[1, 2, 2], vec![v; 4])
+    }
+
+    #[test]
+    fn admission_rejects_when_full() {
+        let q = ServeQueue::new(2);
+        let _a = q.submit(item(1.0)).unwrap();
+        let _b = q.submit(item(2.0)).unwrap();
+        assert_eq!(q.submit(item(3.0)).unwrap_err(), Rejected::Full);
+        assert_eq!(q.depth(), 2);
+        // Draining frees capacity again.
+        let batch = q.next_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(q.submit(item(4.0)).is_ok());
+    }
+
+    #[test]
+    fn admission_rejects_wrong_shape() {
+        let q = ServeQueue::with_dims(4, vec![1, 2, 2]);
+        assert!(q.submit(item(1.0)).is_ok());
+        let bad = Tensor::from_vec(&[2, 2], vec![0.0; 4]);
+        match q.submit(bad).unwrap_err() {
+            Rejected::Shape { expected, got } => {
+                assert_eq!(expected, vec![1, 2, 2]);
+                assert_eq!(got, vec![2, 2]);
+            }
+            other => panic!("expected Shape rejection, got {other:?}"),
+        }
+        // The well-formed request is still queued and served.
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn batch_respects_max_batch_and_fifo() {
+        let q = ServeQueue::new(16);
+        for i in 0..5 {
+            q.submit(item(i as f32)).unwrap();
+        }
+        let batch = q.next_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].input.data[0], 0.0);
+        assert_eq!(batch[2].input.data[0], 2.0);
+        let rest = q.next_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest[0].input.data[0], 3.0);
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_drains() {
+        let q = ServeQueue::new(4);
+        q.submit(item(1.0)).unwrap();
+        q.close();
+        assert_eq!(q.submit(item(2.0)).unwrap_err(), Rejected::Closed);
+        // The already-admitted request still comes out...
+        assert_eq!(q.next_batch(8, Duration::from_millis(50)).unwrap().len(), 1);
+        // ...and then workers are told to stop.
+        assert!(q.next_batch(8, Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn window_expires_with_partial_batch() {
+        let q = ServeQueue::new(4);
+        q.submit(item(1.0)).unwrap();
+        let t = Instant::now();
+        let batch = q.next_batch(8, Duration::from_millis(20)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(15), "window must be honoured");
+    }
+
+    #[test]
+    fn max_batch_one_skips_the_window() {
+        let q = ServeQueue::new(4);
+        q.submit(item(1.0)).unwrap();
+        let t = Instant::now();
+        let batch = q.next_batch(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() < Duration::from_secs(1), "no window wait at max_batch 1");
+    }
+
+    #[test]
+    fn cross_thread_batching_assembles() {
+        let q = ServeQueue::new(64);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..6 {
+                    q.submit(item(i as f32)).unwrap();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            });
+            let mut total = 0;
+            while total < 6 {
+                let batch = q.next_batch(8, Duration::from_millis(100)).unwrap();
+                assert!(!batch.is_empty());
+                total += batch.len();
+            }
+            assert_eq!(total, 6);
+        });
+    }
+}

@@ -1,0 +1,481 @@
+//! Named model registry for the serving subsystem.
+//!
+//! A [`ServedModel`] is a ResNet18 pinned to one
+//! [`ConvMode`]/[`QuantConfig`](crate::quant::QuantConfig) operating
+//! point, wrapped with the per-item input geometry and tile accounting
+//! the queue workers need. Models come from two sources:
+//!
+//! * **checkpoints** — the `runtime::client` interchange format: a
+//!   `<tag>.manifest.txt` naming parameters in canonical sorted order
+//!   plus a flat f32-LE blob (`<tag>.init.bin` or a trained checkpoint
+//!   file), loaded without touching the (stubbed) PJRT client;
+//! * **synthetic** — He-initialised and calibration-quantized in
+//!   process, so the whole serve path is exercisable offline.
+//!
+//! All transform lowering goes through the shared
+//! [`PlanCache`](super::plan::PlanCache): one registry hosting several
+//! variants of a model (w8 vs w8_h9, Legendre vs Chebyshev) builds each
+//! `F(m, r)` plan exactly once.
+
+use super::plan::{PlanCache, PlanKey};
+use super::BatchModel;
+use crate::data::synthcifar;
+use crate::engine::{EngineScratch, TileGrid};
+use crate::nn::tensor::Tensor;
+use crate::nn::{ConvMode, Params, ResNet18, ResNetCfg};
+use crate::runtime::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// A registered model: the network plus serving metadata.
+pub struct ServedModel {
+    pub name: String,
+    pub net: ResNet18,
+    /// Per-item input dims (no batch axis), `[C, H, W]`.
+    input_dims: Vec<usize>,
+    /// Winograd tiles one item pushes through the engine (stats unit).
+    tiles_per_item: usize,
+}
+
+impl BatchModel for ServedModel {
+    fn input_dims(&self) -> &[usize] {
+        &self.input_dims
+    }
+
+    fn infer_batch(&self, batch: &Tensor, scratch: &mut EngineScratch) -> Tensor {
+        self.net.forward_with_scratch(batch, scratch)
+    }
+
+    fn tiles_per_item(&self) -> usize {
+        self.tiles_per_item
+    }
+}
+
+/// Winograd tiles a single item pushes through all engine-backed layers:
+/// walks the conv units tracking the spatial size stage by stage.
+fn wino_tiles_per_item(cfg: &ResNetCfg, input_hw: usize) -> usize {
+    let m = match cfg.mode {
+        ConvMode::Winograd { m, .. } => m,
+        ConvMode::Direct => return 0,
+    };
+    let pad = 1; // all wino units are 3×3 `same` convs
+    let mut tiles = 0;
+    let mut hw = input_hw;
+    for (prefix, stride, _cin, _cout) in ResNet18::conv_units(cfg) {
+        if prefix.ends_with("down") {
+            continue; // parallel 1×1 path; conv1 already advanced `hw`
+        }
+        if stride == 1 {
+            let g = TileGrid::new(&[1, 1, hw + 2 * pad, hw + 2 * pad], m, 3);
+            tiles += g.tile_count();
+        }
+        hw /= stride;
+    }
+    tiles
+}
+
+/// Named model registry sharing one [`PlanCache`].
+pub struct ModelRegistry {
+    plans: Arc<PlanCache>,
+    models: HashMap<String, Arc<ServedModel>>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        Self::with_plans(Arc::new(PlanCache::new()))
+    }
+
+    /// Share an existing plan cache (e.g. across registries in tests).
+    pub fn with_plans(plans: Arc<PlanCache>) -> ModelRegistry {
+        ModelRegistry { plans, models: HashMap::new() }
+    }
+
+    /// The shared transform-plan cache.
+    pub fn plans(&self) -> &PlanCache {
+        &self.plans
+    }
+
+    /// Look up a model by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ServedModel>> {
+        self.models.get(name).cloned()
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.models.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Register a He-initialised synthetic model (calibrated on a
+    /// synthetic batch when its mode is quantized). `image_hw` is the
+    /// square input size; 32 uses the synthetic-CIFAR generator.
+    pub fn register_synthetic(
+        &mut self,
+        name: &str,
+        cfg: ResNetCfg,
+        image_hw: usize,
+        seed: u64,
+        calib_batch: usize,
+    ) -> Result<Arc<ServedModel>> {
+        self.ensure_unregistered(name)?;
+        let params = ResNet18::init_params(&cfg, seed);
+        // Bank namespace keyed by content (seed + width), not registry
+        // name: two registered variants of one synthetic model share the
+        // float weight banks.
+        let ns = format!("synth:{seed}:w{}", cfg.width_mult);
+        let net = self.build_net(cfg, params, &ns);
+        self.finish(name, net, [3, image_hw, image_hw], seed, calib_batch)
+    }
+
+    /// Register a model from the `runtime::client` checkpoint format:
+    /// `<dir>/<tag>.manifest.txt` plus a flat f32-LE parameter blob
+    /// (`checkpoint` path, or `<dir>/<tag>.init.bin` when `None`). The
+    /// width multiplier is inferred from the stem's output channels; the
+    /// serving `mode` pins base and quantization.
+    pub fn register_checkpoint(
+        &mut self,
+        name: &str,
+        dir: &Path,
+        tag: &str,
+        checkpoint: Option<&Path>,
+        mode: ConvMode,
+        calib_batch: usize,
+    ) -> Result<Arc<ServedModel>> {
+        self.ensure_unregistered(name)?;
+        let manifest = Manifest::load(&dir.join(format!("{tag}.manifest.txt")))?;
+        let blob_path = match checkpoint {
+            Some(p) => p.to_path_buf(),
+            None => dir.join(format!("{tag}.init.bin")),
+        };
+        let bytes = std::fs::read(&blob_path)
+            .with_context(|| format!("reading checkpoint blob {blob_path:?}"))?;
+        let want = manifest.total_param_len() * 4;
+        if bytes.len() != want {
+            bail!(
+                "checkpoint blob {blob_path:?} is {} bytes, manifest wants {want}",
+                bytes.len()
+            );
+        }
+        let mut params: Params = HashMap::new();
+        let mut off = 0usize;
+        for spec in &manifest.params {
+            let n = spec.len();
+            let mut vals = vec![0f32; n];
+            for (i, v) in vals.iter_mut().enumerate() {
+                let b = off + i * 4;
+                *v = f32::from_le_bytes([bytes[b], bytes[b + 1], bytes[b + 2], bytes[b + 3]]);
+            }
+            off += n * 4;
+            params.insert(spec.name.clone(), Tensor::from_vec(&spec.dims, vals));
+        }
+        let (c, h, w) = manifest.image;
+        if c != 3 || h != w {
+            bail!("expected a 3xHxH image, manifest says {c}x{h}x{w}");
+        }
+        let stem = params
+            .get("stem.w")
+            .context("checkpoint has no stem.w — not a ResNet18 parameter blob")?;
+        let width_mult = stem.dims[0] as f32 / 64.0;
+        if manifest.num_classes == 0 {
+            bail!("manifest is missing num_classes");
+        }
+        let cfg = ResNetCfg { width_mult, num_classes: manifest.num_classes, mode };
+        // Validate shapes, not just names: an inferred width that does not
+        // round-trip through the stage-channel arithmetic must fail here,
+        // not panic mid-serving inside a worker.
+        for (prefix, _stride, cin, cout) in ResNet18::conv_units(&cfg) {
+            let ksize = if prefix.ends_with("down") { 1 } else { 3 };
+            let want = vec![cout, cin, ksize, ksize];
+            match params.get(&format!("{prefix}.w")) {
+                None => bail!("checkpoint is missing {prefix}.w for inferred width {width_mult}"),
+                Some(t) if t.dims != want => bail!(
+                    "checkpoint {prefix}.w has dims {:?}, inferred width {width_mult} wants {want:?}",
+                    t.dims
+                ),
+                Some(_) => {}
+            }
+            for bn in ["bn.gamma", "bn.beta", "bn.mean", "bn.var"] {
+                match params.get(&format!("{prefix}.{bn}")) {
+                    Some(t) if t.dims == vec![cout] => {}
+                    other => bail!(
+                        "checkpoint {prefix}.{bn} is {:?}, want [{cout}]",
+                        other.map(|t| t.dims.clone())
+                    ),
+                }
+            }
+        }
+        let w3 = cfg.widths()[3];
+        match params.get("fc.w") {
+            Some(t) if t.dims == vec![w3, manifest.num_classes] => {}
+            other => bail!(
+                "checkpoint fc.w is {:?}, want [{w3}, {}]",
+                other.map(|t| t.dims.clone()),
+                manifest.num_classes
+            ),
+        }
+        // Bank namespace keyed by the blob's *content* (not its path, and
+        // not the registry name): the same bytes registered under several
+        // quant/base-pinned entries reuse the transformed float banks,
+        // while an overwritten checkpoint file can never serve stale
+        // banks.
+        let ns = format!("ckpt:{tag}:{:016x}", fnv1a64(&bytes));
+        let net = self.build_net(cfg, params, &ns);
+        self.finish(name, net, [3, h, w], 0x5EED, calib_batch)
+    }
+
+    /// Lower the network through the shared plan cache (Winograd modes) or
+    /// directly (Direct mode). Every Winograd layer's transformed weight
+    /// bank is fetched from (or inserted into) the cache under
+    /// `<bank_ns>/<layer prefix>` and the layer is constructed via
+    /// [`WinoConv2d::from_transformed`](crate::nn::winolayer::WinoConv2d::from_transformed)
+    /// — `WinoEngine::from_transformed_weights` is the only engine
+    /// construction path in serving.
+    fn build_net(&self, cfg: ResNetCfg, params: Params, bank_ns: &str) -> ResNet18 {
+        use crate::nn::winolayer::WinoConv2d;
+        match cfg.mode {
+            ConvMode::Winograd { m, base, .. } => {
+                let key = PlanKey::f(m, 3, base);
+                let wf = self.plans.wf(key);
+                let plans = &self.plans;
+                ResNet18::from_params_lowered(
+                    cfg,
+                    params,
+                    &wf,
+                    &|prefix: &str, w: &Tensor| {
+                        let bank = plans.weight_bank(&format!("{bank_ns}/{prefix}"), key, w);
+                        WinoConv2d::from_transformed(wf.as_ref().clone(), bank.as_ref().clone())
+                    },
+                )
+            }
+            ConvMode::Direct => ResNet18::from_params(cfg, params),
+        }
+    }
+
+    /// Duplicate names fail before any parse/transform/calibration cost
+    /// is paid (and before the shared bank cache is touched).
+    fn ensure_unregistered(&self, name: &str) -> Result<()> {
+        if self.models.contains_key(name) {
+            bail!("model {name:?} is already registered");
+        }
+        Ok(())
+    }
+
+    /// Calibrate (if quantized), wrap and insert the model.
+    fn finish(
+        &mut self,
+        name: &str,
+        mut net: ResNet18,
+        input_dims: [usize; 3],
+        seed: u64,
+        calib_batch: usize,
+    ) -> Result<Arc<ServedModel>> {
+        if self.models.contains_key(name) {
+            bail!("model {name:?} is already registered");
+        }
+        if let ConvMode::Winograd { quant: Some(_), .. } = net.cfg.mode {
+            let calib = calibration_batch(&input_dims, seed, calib_batch.max(1));
+            net.calibrate_quant(&calib);
+        }
+        let tiles_per_item = wino_tiles_per_item(&net.cfg, input_dims[1]);
+        let model = Arc::new(ServedModel {
+            name: name.to_string(),
+            net,
+            input_dims: input_dims.to_vec(),
+            tiles_per_item,
+        });
+        self.models.insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+}
+
+/// FNV-1a over a byte slice — fingerprints checkpoint blobs for the
+/// weight-bank cache namespace, so two registrations share banks only
+/// when their bytes are identical. Not cryptographic; 64 bits across a
+/// handful of hosted models is ample separation.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A representative calibration batch: the synthetic-CIFAR generator for
+/// 32×32 inputs, a seeded uniform tensor otherwise.
+fn calibration_batch(input_dims: &[usize; 3], seed: u64, batch: usize) -> Tensor {
+    if input_dims[1] == 32 && input_dims[2] == 32 {
+        return synthcifar::generate_batch(synthcifar::TRAIN_SEED, 0, batch).0;
+    }
+    let dims = [batch, input_dims[0], input_dims[1], input_dims[2]];
+    crate::testkit::prng_tensor(seed, &dims, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantConfig;
+    use crate::wino::basis::Base;
+
+    fn wino_cfg(quant: Option<QuantConfig>) -> ResNetCfg {
+        ResNetCfg {
+            width_mult: 0.25,
+            num_classes: 10,
+            mode: ConvMode::Winograd { m: 4, base: Base::Legendre, quant },
+        }
+    }
+
+    #[test]
+    fn synthetic_registration_and_lookup() {
+        let mut reg = ModelRegistry::new();
+        let m = reg
+            .register_synthetic("rn", wino_cfg(Some(QuantConfig::w8())), 32, 7, 4)
+            .unwrap();
+        assert_eq!(m.input_dims(), &[3, 32, 32]);
+        assert!(m.tiles_per_item() > 0);
+        assert!(reg.get("rn").is_some());
+        assert!(reg.get("absent").is_none());
+        assert_eq!(reg.names(), vec!["rn".to_string()]);
+        // Duplicate names are an error.
+        assert!(reg.register_synthetic("rn", wino_cfg(None), 32, 7, 4).is_err());
+        // The F(4,3)/Legendre plan was built exactly once.
+        assert_eq!(reg.plans().plan_count(), 1);
+    }
+
+    #[test]
+    fn registry_variants_share_one_plan_and_banks() {
+        let mut reg = ModelRegistry::new();
+        reg.register_synthetic("a", wino_cfg(Some(QuantConfig::w8())), 32, 7, 2)
+            .unwrap();
+        reg.register_synthetic("b", wino_cfg(Some(QuantConfig::w8_h9())), 32, 7, 2)
+            .unwrap();
+        let (wf_counters, bank_counters) = reg.plans().counters();
+        assert_eq!(reg.plans().plan_count(), 1, "both variants share F(4,3)/Legendre");
+        assert!(wf_counters.hits >= 1, "second registration must hit the plan cache");
+        // ResNet18 has 14 stride-1 3×3 layers: the first registration
+        // transforms each once, the second reuses every bank.
+        assert_eq!(reg.plans().bank_count(), 14);
+        assert_eq!(bank_counters.misses, 14);
+        assert_eq!(bank_counters.hits, 14);
+    }
+
+    #[test]
+    fn tiles_per_item_counts_stage_grids() {
+        // Width 0.25, 32×32: stem + s0 (5 layers at 8×8 tiles = 64),
+        // s1: 3 wino layers at 16×16 → 16 tiles, s2: 3 at 8×8 → 4,
+        // s3: 3 at 4×4 → 1. Total 5·64 + 3·16 + 3·4 + 3·1 = 383.
+        let tiles = wino_tiles_per_item(&wino_cfg(None), 32);
+        assert_eq!(tiles, 383);
+        assert_eq!(
+            wino_tiles_per_item(
+                &ResNetCfg { width_mult: 0.25, num_classes: 10, mode: ConvMode::Direct },
+                32
+            ),
+            0
+        );
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        // Serialize init params in manifest (sorted-name) order, then load
+        // through the registry and check the model serves the same logits
+        // as a directly-constructed network.
+        let cfg = wino_cfg(None);
+        let params = ResNet18::init_params(&cfg, 11);
+        let mut names: Vec<&String> = params.keys().collect();
+        names.sort();
+        let mut manifest = String::from(
+            "winoq-manifest v1\nvariant test-ckpt\ntrain_batch 8\neval_batch 8\n\
+             image 3x32x32\nnum_classes 10\n",
+        );
+        let mut blob: Vec<u8> = Vec::new();
+        for name in &names {
+            let t = &params[name.as_str()];
+            let dims: Vec<String> = t.dims.iter().map(|d| d.to_string()).collect();
+            manifest.push_str(&format!("param {name} {}\n", dims.join("x")));
+            for v in &t.data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("winoq-reg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("test-ckpt.manifest.txt"), &manifest).unwrap();
+        std::fs::write(dir.join("test-ckpt.init.bin"), &blob).unwrap();
+
+        let mut reg = ModelRegistry::new();
+        let served = reg
+            .register_checkpoint("ckpt", &dir, "test-ckpt", None, cfg.mode, 2)
+            .unwrap();
+        assert_eq!(served.net.cfg.width_mult, 0.25);
+        let x = calibration_batch(&[3, 32, 32], 3, 2);
+        let direct = ResNet18::from_params(cfg, params).forward(&x);
+        let mut scratch = EngineScratch::new();
+        let got = served.infer_batch(&x, &mut scratch);
+        assert_eq!(got.data, direct.data, "checkpoint model must serve identical logits");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_mismatched_dims() {
+        // Same byte count, wrong shape: fc.w written transposed. Name
+        // validation alone would admit it; the dims check must not.
+        let cfg = wino_cfg(None);
+        let params = ResNet18::init_params(&cfg, 13);
+        let mut names: Vec<&String> = params.keys().collect();
+        names.sort();
+        let mut manifest = String::from(
+            "winoq-manifest v1\nvariant flip\ntrain_batch 8\neval_batch 8\n\
+             image 3x32x32\nnum_classes 10\n",
+        );
+        let mut blob: Vec<u8> = Vec::new();
+        for name in &names {
+            let t = &params[name.as_str()];
+            let dims: Vec<String> = if name.as_str() == "fc.w" {
+                t.dims.iter().rev().map(|d| d.to_string()).collect()
+            } else {
+                t.dims.iter().map(|d| d.to_string()).collect()
+            };
+            manifest.push_str(&format!("param {name} {}\n", dims.join("x")));
+            for v in &t.data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("winoq-reg-flip-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("flip.manifest.txt"), &manifest).unwrap();
+        std::fs::write(dir.join("flip.init.bin"), &blob).unwrap();
+        let mut reg = ModelRegistry::new();
+        let err = reg
+            .register_checkpoint("flip", &dir, "flip", None, cfg.mode, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("fc.w"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_bad_blob() {
+        let dir = std::env::temp_dir().join(format!("winoq-reg-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("bad.manifest.txt"),
+            "winoq-manifest v1\nvariant bad\nimage 3x32x32\nnum_classes 10\nparam stem.w 16x3x3x3\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("bad.init.bin"), vec![0u8; 7]).unwrap();
+        let mut reg = ModelRegistry::new();
+        let err = reg
+            .register_checkpoint("bad", &dir, "bad", None, ConvMode::Direct, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("bytes"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,205 @@
+//! Serving telemetry: per-request latency percentiles, queue depth,
+//! batch-size and throughput accounting, dumped as JSON.
+//!
+//! One [`ServeStats`] is shared by all workers and clients of a serving
+//! run (interior mutability; workers record one batch at a time, so the
+//! single mutex is uncontended relative to engine passes). At the end of
+//! a run [`ServeStats::report`] folds the raw samples into a
+//! [`StatsReport`] — p50/p95/p99 latency (nearest-rank, via
+//! [`benchkit::percentile_sorted`]), requests/sec and tiles/sec — whose
+//! [`to_json`](StatsReport::to_json) output is what
+//! `winoq serve --stats-json` writes and `scripts/ci.sh` smoke-checks.
+
+use crate::benchkit;
+use std::sync::Mutex;
+
+/// Raw samples accumulated during a serving run.
+#[derive(Default)]
+struct StatsState {
+    /// One entry per completed request: enqueue→response microseconds.
+    latencies_us: Vec<u64>,
+    /// One entry per engine pass: requests in that micro-batch.
+    batch_sizes: Vec<usize>,
+    /// Admission rejections (queue full).
+    rejected: u64,
+    /// Winograd tiles processed (batch size × tiles per item).
+    tiles: u64,
+    /// High-water mark of the queue depth observed at drain time.
+    max_queue_depth: usize,
+}
+
+/// Shared, thread-safe stats sink for one serving run.
+#[derive(Default)]
+pub struct ServeStats {
+    state: Mutex<StatsState>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Record one completed micro-batch: its size, the tiles it pushed
+    /// through the engine, the queue depth left behind, and every
+    /// member request's end-to-end latency in microseconds.
+    pub fn record_batch(&self, batch_size: usize, tiles: u64, depth: usize, lat_us: &[u64]) {
+        let mut st = self.state.lock().unwrap();
+        st.batch_sizes.push(batch_size);
+        st.tiles += tiles;
+        st.max_queue_depth = st.max_queue_depth.max(depth);
+        st.latencies_us.extend_from_slice(lat_us);
+    }
+
+    /// Record one admission rejection (backpressure).
+    pub fn record_reject(&self) {
+        self.state.lock().unwrap().rejected += 1;
+    }
+
+    /// Completed-request count so far.
+    pub fn completed(&self) -> u64 {
+        self.state.lock().unwrap().latencies_us.len() as u64
+    }
+
+    /// Fold the samples into a report; `wall_seconds` is the run's
+    /// wall-clock duration (measured by the caller around the whole
+    /// closed loop, queueing included). Percentiles are
+    /// [`benchkit::percentile_sorted`] (nearest-rank), the same estimator
+    /// the bench harness reports.
+    pub fn report(&self, wall_seconds: f64) -> StatsReport {
+        let st = self.state.lock().unwrap();
+        let mut lat_ms: Vec<f64> = st.latencies_us.iter().map(|&v| v as f64 / 1e3).collect();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| {
+            if lat_ms.is_empty() {
+                0.0
+            } else {
+                benchkit::percentile_sorted(&lat_ms, q)
+            }
+        };
+        let completed = lat_ms.len() as u64;
+        let batches = st.batch_sizes.len() as u64;
+        let wall = wall_seconds.max(1e-9);
+        StatsReport {
+            completed,
+            rejected: st.rejected,
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                completed as f64 / batches as f64
+            },
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: lat_ms.last().copied().unwrap_or(0.0),
+            requests_per_sec: completed as f64 / wall,
+            tiles_per_sec: st.tiles as f64 / wall,
+            max_queue_depth: st.max_queue_depth,
+            wall_seconds,
+        }
+    }
+}
+
+/// Folded summary of one serving run.
+#[derive(Clone, Copy, Debug)]
+pub struct StatsReport {
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub requests_per_sec: f64,
+    pub tiles_per_sec: f64,
+    pub max_queue_depth: usize,
+    pub wall_seconds: f64,
+}
+
+impl StatsReport {
+    /// Flat JSON object (no serde in the vendored crate set). Keys are
+    /// stable — `scripts/ci.sh` greps `"completed"` out of this.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"completed\": {}, \"rejected\": {}, \"batches\": {}, ",
+                "\"mean_batch\": {:.3}, ",
+                "\"latency_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}}, ",
+                "\"requests_per_sec\": {:.2}, \"tiles_per_sec\": {:.1}, ",
+                "\"max_queue_depth\": {}, \"wall_seconds\": {:.4}}}"
+            ),
+            self.completed,
+            self.rejected,
+            self.batches,
+            self.mean_batch,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.requests_per_sec,
+            self.tiles_per_sec,
+            self.max_queue_depth,
+            self.wall_seconds,
+        )
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} ok / {} rejected in {:.2}s | {:.1} req/s, {:.0} tiles/s | \
+             batch mean {:.2} over {} passes | p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+            self.completed,
+            self.rejected,
+            self.wall_seconds,
+            self.requests_per_sec,
+            self.tiles_per_sec,
+            self.mean_batch,
+            self.batches,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_folds_batches_and_latencies() {
+        let s = ServeStats::new();
+        s.record_batch(4, 400, 3, &[1000, 2000, 3000, 4000]);
+        s.record_batch(2, 200, 7, &[5000, 6000]);
+        s.record_reject();
+        assert_eq!(s.completed(), 6);
+        let r = s.report(2.0);
+        assert_eq!(r.completed, 6);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.batches, 2);
+        assert!((r.mean_batch - 3.0).abs() < 1e-12);
+        assert!((r.p50_ms - 3.0).abs() < 1e-9);
+        assert!((r.max_ms - 6.0).abs() < 1e-9);
+        assert!((r.requests_per_sec - 3.0).abs() < 1e-9);
+        assert!((r.tiles_per_sec - 300.0).abs() < 1e-9);
+        assert_eq!(r.max_queue_depth, 7);
+    }
+
+    #[test]
+    fn json_has_stable_keys() {
+        let r = ServeStats::new().report(1.0);
+        let j = r.to_json();
+        for key in [
+            "\"completed\"",
+            "\"rejected\"",
+            "\"batches\"",
+            "\"latency_ms\"",
+            "\"p99\"",
+            "\"tiles_per_sec\"",
+            "\"max_queue_depth\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

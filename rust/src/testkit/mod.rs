@@ -48,6 +48,18 @@ pub fn vec_f64(len: usize, scale: f64) -> impl Fn(&mut Prng) -> Vec<f64> {
     move |rng| (0..len).map(|_| rng.uniform(scale)).collect()
 }
 
+/// Seeded uniform f32 tensor in `[-scale, scale]` — the shared fixture
+/// generator for the engine/serve parity suites (one definition keeps
+/// seed/scale semantics identical across them).
+pub fn prng_tensor(seed: u64, dims: &[usize], scale: f64) -> crate::nn::tensor::Tensor {
+    let mut rng = Prng::new(seed);
+    let len = dims.iter().product();
+    crate::nn::tensor::Tensor::from_vec(
+        dims,
+        (0..len).map(|_| rng.uniform(scale) as f32).collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,153 @@
+//! Serve-path parity: responses that rode a micro-batched engine pass
+//! must be **bit-identical** to running the same request alone through
+//! `WinoEngine::forward` — for both paper quantization configs
+//! (`w8`, `w8_h9` with its 9-bit Hadamard) across the Legendre and
+//! Chebyshev bases. This is the contract that makes micro-batching a
+//! pure throughput knob: batching changes `T`, never a single tile's
+//! arithmetic (per-tile transforms, fixed `c = 0..C` accumulation
+//! order, per-plane back-transform).
+
+use winoq::engine::EngineScratch;
+use winoq::nn::layers::Conv2dCfg;
+use winoq::nn::tensor::Tensor;
+use winoq::nn::winolayer::WinoConv2d;
+use winoq::nn::{ConvMode, ResNetCfg};
+use winoq::quant::QuantConfig;
+use winoq::serve::{
+    run_closed_loop, BatchModel, EngineModel, ModelRegistry, Response, ServeConfig, ServeStats,
+};
+use winoq::testkit::prng_tensor;
+use winoq::wino::basis::Base;
+
+/// Serve `inputs` through a micro-batching session and hand back the
+/// responses in submission order, asserting real batches assembled.
+fn serve_all(model: &dyn BatchModel, cfg: &ServeConfig, inputs: &[Tensor]) -> Vec<Response> {
+    let stats = ServeStats::new();
+    let responses = winoq::serve::with_server(model, cfg, &stats, |queue| {
+        // Submit everything before collecting so the worker can drain
+        // full micro-batches.
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|x| queue.submit(x.clone()).expect("queue sized for the test"))
+            .collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv().expect("worker died"))
+            .collect::<Vec<Response>>()
+    });
+    let report = stats.report(1.0);
+    assert_eq!(report.completed as usize, inputs.len());
+    assert!(
+        report.batches < inputs.len() as u64,
+        "expected micro-batches to assemble, got {} singleton passes",
+        report.batches
+    );
+    responses
+}
+
+#[test]
+fn quantized_engine_responses_bit_identical_across_bases_and_configs() {
+    let cfg = Conv2dCfg { stride: 1, padding: 1 };
+    let calib = prng_tensor(11, &[2, 3, 12, 12], 1.0);
+    let w = prng_tensor(12, &[4, 3, 3, 3], 0.4);
+    let inputs: Vec<Tensor> = (0..12)
+        .map(|i| prng_tensor(100 + i, &[3, 12, 12], 1.0))
+        .collect();
+    for base in [Base::Legendre, Base::Chebyshev] {
+        for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+            let mut layer = WinoConv2d::new(4, &w, base);
+            layer.quantize(qcfg, &calib, 1);
+            let engine = layer.engine();
+            let model = EngineModel::new(engine, cfg, [3, 12, 12]);
+            // Generous window: submissions are µs apart, so batches
+            // assemble even on a heavily loaded CI machine.
+            let serve_cfg = ServeConfig {
+                max_batch: 8,
+                batch_window_us: 200_000,
+                queue_cap: 32,
+                workers: 1,
+            };
+            let responses = serve_all(&model, &serve_cfg, &inputs);
+            for (x, resp) in inputs.iter().zip(&responses) {
+                let single = x.clone().reshape(&[1, 3, 12, 12]);
+                let want = engine.forward(&single, cfg);
+                assert_eq!(resp.output.dims, want.dims[1..].to_vec());
+                for (i, (a, b)) in resp.output.data.iter().zip(&want.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "idx {i}: served {a} vs single-request {b} \
+                         [{base:?}, {}]",
+                        qcfg.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn float_engine_parity_with_concurrent_workers() {
+    // Two workers racing over the queue must not change any response.
+    let cfg = Conv2dCfg { stride: 1, padding: 1 };
+    let w = prng_tensor(21, &[3, 2, 3, 3], 0.5);
+    let layer = WinoConv2d::new(4, &w, Base::Legendre);
+    let engine = layer.engine();
+    let model = EngineModel::new(engine, cfg, [2, 9, 9]);
+    let inputs: Vec<Tensor> = (0..10)
+        .map(|i| prng_tensor(300 + i, &[2, 9, 9], 1.0))
+        .collect();
+    let serve_cfg = ServeConfig {
+        max_batch: 4,
+        batch_window_us: 500,
+        queue_cap: 16,
+        workers: 2,
+    };
+    let report = run_closed_loop(&model, &serve_cfg, &inputs, 20, 5);
+    assert_eq!(report.completed, 20);
+    // Deterministic spot check through the full session machinery.
+    let stats = ServeStats::new();
+    let resp = winoq::serve::with_server(&model, &serve_cfg, &stats, |queue| {
+        queue.submit(inputs[0].clone()).unwrap().recv().unwrap()
+    });
+    let want = engine.forward(&inputs[0].clone().reshape(&[1, 2, 9, 9]), cfg);
+    assert_eq!(resp.output.data, want.data);
+}
+
+#[test]
+fn registry_resnet_serving_matches_direct_forward() {
+    // End-to-end: a quantized synthetic ResNet18 from the registry,
+    // served in micro-batches, must reproduce ResNet18::forward on the
+    // single request bit-for-bit (the whole network, not just one layer).
+    let mut reg = ModelRegistry::new();
+    let cfg = ResNetCfg {
+        width_mult: 0.25,
+        num_classes: 10,
+        mode: ConvMode::Winograd {
+            m: 4,
+            base: Base::Legendre,
+            quant: Some(QuantConfig::w8()),
+        },
+    };
+    let served = reg.register_synthetic("rn", cfg, 32, 7, 4).unwrap();
+    let inputs: Vec<Tensor> = (0..6)
+        .map(|i| prng_tensor(500 + i, &[3, 32, 32], 1.0))
+        .collect();
+    let serve_cfg = ServeConfig {
+        max_batch: 8,
+        batch_window_us: 200_000,
+        queue_cap: 16,
+        workers: 1,
+    };
+    let responses = serve_all(served.as_ref(), &serve_cfg, &inputs);
+    let mut scratch = EngineScratch::new();
+    for (x, resp) in inputs.iter().zip(&responses) {
+        let single = x.clone().reshape(&[1, 3, 32, 32]);
+        let want = served.net.forward_with_scratch(&single, &mut scratch);
+        assert_eq!(resp.output.dims, vec![10]);
+        assert_eq!(
+            resp.output.data,
+            want.data,
+            "served logits diverged from single-request forward"
+        );
+    }
+}

@@ -16,6 +16,26 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Serve smoke: the micro-batching server must complete a synthetic
+# closed-loop run and report non-zero completions in its stats JSON.
+# Also refreshes the serve bench trajectory (BENCH_serve.json).
+echo "==> winoq serve smoke (synthetic closed loop)"
+SMOKE_JSON="$(mktemp)"
+./target/release/winoq serve --synthetic --requests 64 --max-batch 8 \
+  --stats-json "$SMOKE_JSON" --bench-json "$SCRIPT_DIR/../BENCH_serve.json"
+if [ ! -s "$SMOKE_JSON" ]; then
+  echo "serve smoke FAILED: stats JSON missing or empty" >&2
+  exit 1
+fi
+COMPLETED="$(sed -n 's/.*"completed": *\([0-9][0-9]*\).*/\1/p' "$SMOKE_JSON")"
+if [ -z "$COMPLETED" ] || [ "$COMPLETED" -eq 0 ]; then
+  echo "serve smoke FAILED: stats JSON reports zero completed requests" >&2
+  cat "$SMOKE_JSON" >&2
+  exit 1
+fi
+echo "serve smoke OK ($COMPLETED requests completed)"
+rm -f "$SMOKE_JSON"
+
 "$SCRIPT_DIR/lint.sh"
 
 echo "CI OK"
