@@ -76,6 +76,47 @@ pub const VALUE_FLAGS: &[FlagSpec] = &[
         metavar: "PATH",
         help: "serve: also run a max-batch-1 baseline and write a bench JSON",
     },
+    // tune flags (see `winoq tune`); --plan is shared with `winoq serve`
+    FlagSpec {
+        name: "--plan",
+        metavar: "PATH",
+        help: "serve: load a tuned NetPlan JSON (from `winoq tune`)",
+    },
+    FlagSpec {
+        name: "--plan-out",
+        metavar: "PATH",
+        help: "tune: write the NetPlan artifact here (default netplan.json)",
+    },
+    FlagSpec {
+        name: "--objective",
+        metavar: "NAME",
+        help: "tune: selection objective, error|throughput|balanced",
+    },
+    FlagSpec {
+        name: "--max-err",
+        metavar: "E",
+        help: "tune: absolute per-layer error budget (default: uniform baseline's)",
+    },
+    FlagSpec {
+        name: "--calib-pct",
+        metavar: "P",
+        help: "tune: activation calibration percentile (default 100 = max)",
+    },
+    FlagSpec {
+        name: "--calib-batch",
+        metavar: "N",
+        help: "tune: calibration batch size (default 4)",
+    },
+    FlagSpec {
+        name: "--grid",
+        metavar: "NAME",
+        help: "tune: candidate grid, full|tiny",
+    },
+    FlagSpec {
+        name: "--layers",
+        metavar: "N",
+        help: "tune: tune only the first N eligible layers (0 = all)",
+    },
 ];
 
 /// Bare switches (no value).
@@ -162,6 +203,15 @@ impl Args {
         }
     }
 
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{name} = {v:?} is not a number")),
+        }
+    }
+
     pub fn has_switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -191,7 +241,12 @@ COMMANDS:
                     [--max-batch B] [--batch-window-us US] [--queue-cap N]
                     [--workers W] [--width-mult F] [--m 4] [--base legendre]
                     [--quant w8|w8_h9|none] [--artifact TAG] [--checkpoint P]
-                    [--stats-json PATH] [--bench-json PATH]
+                    [--plan NETPLAN.json] [--stats-json PATH] [--bench-json PATH]
+  tune            per-layer base/tile/bit-width autotuner → NetPlan JSON
+                    --synthetic [--grid full|tiny] [--layers N]
+                    [--objective error|throughput|balanced] [--max-err E]
+                    [--calib-pct P] [--calib-batch N] [--width-mult F]
+                    [--plan-out netplan.json] [--out BENCH_tune.json]
   help            this message
 ";
 
@@ -279,6 +334,45 @@ mod tests {
         assert_eq!(a.flag_u64("--requests", 0).unwrap(), 64);
         assert_eq!(a.flag_u64("--max-batch", 0).unwrap(), 8);
         assert_eq!(a.flag_u64("--batch-window-us", 0).unwrap(), 500);
+    }
+
+    #[test]
+    fn tune_flags_registered() {
+        let a = Args::parse(&sv(&[
+            "tune",
+            "--synthetic",
+            "--grid",
+            "tiny",
+            "--layers",
+            "2",
+            "--objective",
+            "balanced",
+            "--max-err",
+            "0.05",
+            "--calib-pct",
+            "99.5",
+            "--plan-out",
+            "np.json",
+        ]))
+        .unwrap();
+        assert!(a.has_switch("--synthetic"));
+        assert_eq!(a.flag("--grid"), Some("tiny"));
+        assert_eq!(a.flag_u64("--layers", 0).unwrap(), 2);
+        assert_eq!(a.flag("--objective"), Some("balanced"));
+        assert!((a.flag_f64("--max-err", 0.0).unwrap() - 0.05).abs() < 1e-12);
+        assert!((a.flag_f64("--calib-pct", 100.0).unwrap() - 99.5).abs() < 1e-12);
+        assert!(a.flag_f64("--max-err", 0.0).is_ok());
+        assert!(Args::parse(&sv(&["tune", "--max-err", "abc"]))
+            .unwrap()
+            .flag_f64("--max-err", 0.0)
+            .is_err());
+        assert_eq!(a.flag("--plan-out"), Some("np.json"));
+    }
+
+    #[test]
+    fn serve_plan_flag_registered() {
+        let a = Args::parse(&sv(&["serve", "--synthetic", "--plan", "netplan.json"])).unwrap();
+        assert_eq!(a.flag("--plan"), Some("netplan.json"));
     }
 
     #[test]

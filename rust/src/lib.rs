@@ -13,6 +13,11 @@
 //! * [`serve`] — micro-batching inference serving: bounded request
 //!   queue, model registry, transform-plan cache, latency stats (the
 //!   `winoq serve` subsystem).
+//! * [`tune`] — the per-layer autotuner: sweeps base × tile size ×
+//!   Hadamard bit width per conv layer, selects winners under an
+//!   accuracy budget, and emits deployable [`tune::NetPlan`] JSON
+//!   artifacts that `winoq serve --plan` loads (the `winoq tune`
+//!   subsystem).
 //! * [`data`] — synthetic CIFAR substitute + prefetching loader.
 //! * [`runtime`] — PJRT client running the AOT'd JAX/Pallas artifacts
 //!   (stubbed bindings in this vendored build; see `runtime::pjrt_stub`).
@@ -35,4 +40,5 @@ pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod testkit;
+pub mod tune;
 pub mod wino;

@@ -38,6 +38,7 @@ fn main() {
         "gen-matrices" => cmd_gen_matrices(&args),
         "error-analysis" => cmd_error_analysis(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         "serve-demo" => {
             eprintln!("serve-demo was retired; use `winoq serve --synthetic` (see `winoq help`)");
             std::process::exit(2);
@@ -180,7 +181,7 @@ fn cmd_gen_matrices(args: &Args) -> Result<()> {
     let r = args.flag_u64("--r", 3)? as usize;
     let base_name = args.flag_or("--base", "legendre");
     let base = Base::from_name(base_name)
-        .with_context(|| format!("unknown base {base_name:?}"))?;
+        .with_context(|| format!("unknown base {base_name:?} (valid: {})", Base::names()))?;
     let plan = WinogradPlan::new(m, r);
     println!("F({m}x{m}, {r}x{r}), N = {}", plan.n);
     println!(
@@ -271,7 +272,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = args.flag_u64("--m", 4)? as usize;
     let base_name = args.flag_or("--base", "legendre");
     let base = Base::from_name(base_name)
-        .with_context(|| format!("unknown base {base_name:?}"))?;
+        .with_context(|| format!("unknown base {base_name:?} (valid: {})", Base::names()))?;
     let quant = match args.flag_or("--quant", "w8") {
         "none" => None,
         q => Some(
@@ -283,7 +284,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.flag_or("--model", "resnet18-synthetic");
 
     let mut registry = ModelRegistry::new();
-    let served = if let Some(tag) = args.flag("--artifact") {
+    let served = if let Some(plan_path) = args.flag("--plan") {
+        // The NetPlan pins the whole operating point (width, per-layer
+        // m/base/bits, calibration); a conflicting flag would be silently
+        // ignored — reject it instead.
+        let pinned_by_plan =
+            ["--artifact", "--checkpoint", "--quant", "--m", "--base", "--width-mult"];
+        for conflicting in pinned_by_plan {
+            if args.flag(conflicting).is_some() {
+                bail!(
+                    "{conflicting} conflicts with --plan: the NetPlan already pins the \
+                     model and its per-layer operating points"
+                );
+            }
+        }
+        let plan = winoq::tune::NetPlan::load(Path::new(plan_path))?;
+        eprintln!(
+            "loaded NetPlan v{} from {plan_path}: {} tuned layer(s), width x{:.2}",
+            plan.version,
+            plan.layers.len(),
+            plan.width_mult
+        );
+        registry.register_netplan(name, &plan)?
+    } else if let Some(tag) = args.flag("--artifact") {
         registry.register_checkpoint(
             name,
             &artifacts_dir(args),
@@ -300,12 +323,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         registry.register_synthetic(name, cfg, 32, 7, 8)?
     };
+    // Heterogeneous NetPlan models report their nominal (modal) mode.
+    let mode_str = if args.flag("--plan").is_some() {
+        format!("netplan, nominal {}", mode_label(&served.net.cfg.mode))
+    } else {
+        mode_label(&mode)
+    };
     let (plan_counters, bank_counters) = registry.plans().counters();
     eprintln!(
         "model {name:?}: width x{:.2}, {} | {} wino tiles/request | plan cache: {} plans \
          ({} hits / {} misses), {} weight banks ({} hits / {} misses)",
         served.net.cfg.width_mult,
-        mode_label(&mode),
+        mode_str,
         served.tiles_per_item(),
         registry.plans().plan_count(),
         plan_counters.hits,
@@ -337,7 +366,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     if let Some(path) = args.flag("--stats-json") {
-        std::fs::write(path, report.to_json() + "\n")
+        // Re-read the counters at dump time: the plan cache is only
+        // touched at registration, but a future in-session registration
+        // flow should not silently report stale telemetry.
+        let (pc, bc) = registry.plans().counters();
+        std::fs::write(path, report.to_json_with_plan_cache(pc, bc) + "\n")
             .with_context(|| format!("writing {path}"))?;
         eprintln!("stats JSON written to {path}");
     }
@@ -368,7 +401,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 "\"run\": {}, \"baseline_batch1\": {}}}"
             ),
             json_escape(name),
-            json_escape(&mode_label(&mode)),
+            json_escape(&mode_str),
             requests,
             concurrency,
             serve_cfg.max_batch,
@@ -384,20 +417,109 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Minimal JSON string escaping for interpolated values (the rest of the
-/// emitted JSON is static keys and numbers).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
+/// `winoq tune`: per-layer base/tile/bit-width autotuning over a
+/// synthetic ResNet18, emitting a deployable NetPlan JSON artifact (for
+/// `winoq serve --plan`) and the `BENCH_tune.json` report.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use winoq::tune::{self, grid, Objective, TuneConfig};
+
+    if !args.has_switch("--synthetic") {
+        bail!(
+            "only the synthetic model source exists offline; run \
+             `winoq tune --synthetic` (see `winoq help`)"
+        );
     }
-    out
+    let objective_name = args.flag_or("--objective", "balanced");
+    let objective = Objective::from_name(objective_name).with_context(|| {
+        format!(
+            "unknown objective {objective_name:?} (valid: {})",
+            Objective::names()
+        )
+    })?;
+    let grid_name = args.flag_or("--grid", "full");
+    let grid = grid::grid_from_name(grid_name)
+        .with_context(|| format!("unknown grid {grid_name:?} (valid: {})", grid::grid_names()))?;
+    let max_err = match args.flag("--max-err") {
+        None => None,
+        Some(_) => Some(args.flag_f64("--max-err", 0.0)?),
+    };
+    let cfg = TuneConfig {
+        width_mult: args.flag_f32("--width-mult", 0.25)?,
+        calib_batch: args.flag_u64("--calib-batch", 4)? as usize,
+        calib_pct: args.flag_f64("--calib-pct", 100.0)?,
+        max_err,
+        objective,
+        grid,
+        max_layers: args.flag_u64("--layers", 0)? as usize,
+        verbose: args.has_switch("--verbose"),
+        ..TuneConfig::default()
+    };
+    eprintln!(
+        "tuning resnet18-synthetic x{:.2}: {} candidates/layer, objective {}, \
+         calib pct {} over batch {}…",
+        cfg.width_mult,
+        cfg.grid.len(),
+        cfg.objective.name(),
+        cfg.calib_pct,
+        cfg.calib_batch
+    );
+    let outcome = tune::tune_synthetic(&cfg)?;
+
+    println!(
+        "{:<12} {:>4} {:>4} {:>4}  {:<24} {:>11} {:>11} {:>8}",
+        "layer", "C", "K", "HW", "winner", "err", "base err", "speed"
+    );
+    for lr in &outcome.layers {
+        let w = lr.winner_result();
+        let b = lr.baseline_result();
+        let speed = if b.measure.outputs_per_sec > 0.0 {
+            w.measure.outputs_per_sec / b.measure.outputs_per_sec
+        } else {
+            0.0
+        };
+        println!(
+            "{:<12} {:>4} {:>4} {:>4}  {:<24} {:>11.3e} {:>11.3e} {:>7.2}x",
+            lr.prefix,
+            lr.c,
+            lr.k,
+            lr.hw,
+            w.cand.label(),
+            w.measure.err,
+            b.measure.err,
+            speed,
+        );
+    }
+    println!(
+        "tuned vs uniform (end to end, {} layers changed): logit err {:.3e} vs {:.3e}, \
+         {:.1} vs {:.1} uniform-equivalent tiles/s ({:.2}x)",
+        outcome.changed_layers,
+        outcome.tuned.logit_rel_l2,
+        outcome.uniform.logit_rel_l2,
+        outcome.tuned.eq_tiles_per_sec,
+        outcome.uniform.eq_tiles_per_sec,
+        if outcome.uniform.eq_tiles_per_sec > 0.0 {
+            outcome.tuned.eq_tiles_per_sec / outcome.uniform.eq_tiles_per_sec
+        } else {
+            0.0
+        },
+    );
+
+    let plan_path = args.flag_or("--plan-out", "netplan.json");
+    outcome.plan.save(Path::new(plan_path))?;
+    eprintln!(
+        "NetPlan written to {plan_path} (serve it: `winoq serve --synthetic --plan {plan_path}`)"
+    );
+    let bench_path = args.flag_or("--out", "BENCH_tune.json");
+    std::fs::write(bench_path, tune::bench_json(&cfg, &outcome))
+        .with_context(|| format!("writing {bench_path}"))?;
+    eprintln!("bench JSON written to {bench_path}");
+    Ok(())
 }
+
+// Minimal JSON string escaping for interpolated values (the rest of the
+// emitted JSON is static keys and numbers) — the tune subsystem's
+// reader/escaper, aliased so serve's writer and tune's reader cannot drift.
+use winoq::tune::json::escape as json_escape;
 
 fn mode_label(mode: &winoq::nn::ConvMode) -> String {
     match *mode {

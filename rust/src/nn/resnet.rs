@@ -20,7 +20,7 @@
 use super::layers::{batchnorm, conv2d, global_avg_pool, linear, relu, Conv2dCfg};
 use super::tensor::Tensor;
 use super::winolayer::WinoConv2d;
-use crate::engine::EngineScratch;
+use crate::engine::{EngineScratch, TileGrid};
 use crate::quant::scheme::QuantConfig;
 use crate::wino::basis::Base;
 use crate::wino::toomcook::WinogradPlan;
@@ -53,6 +53,15 @@ impl ResNetCfg {
 
 /// Named parameter collection (flat f32 tensors).
 pub type Params = HashMap<String, Tensor>;
+
+/// The single Winograd-eligibility rule: stride-1 3×3 units that are not
+/// the parallel 1×1 downsample path. Consumed by the per-layer builder
+/// (via [`ResNet18::wino_eligible_units`]) and the activation-capture
+/// site, so the two can never disagree about which layers the tuner may
+/// plan.
+fn is_wino_eligible(prefix: &str, stride: usize, ksize: usize) -> bool {
+    stride == 1 && ksize == 3 && !prefix.ends_with("down")
+}
 
 /// A conv+bn unit's parameter names.
 fn conv_bn_names(prefix: &str) -> (String, String, String, String, String) {
@@ -91,6 +100,24 @@ impl ResNet18 {
             }
         }
         units
+    }
+
+    /// The Winograd-**eligible** conv units of a config, in network
+    /// order: `(prefix, in channels, out channels)` for every stride-1
+    /// 3×3 unit (strided and 1×1 downsample convs stay direct, as in
+    /// ref [5]). The builder, the activation capture, the tuner's sweep,
+    /// and the serve registry's NetPlan validation all consume the same
+    /// `is_wino_eligible` rule, so eligibility cannot drift between
+    /// them.
+    pub fn wino_eligible_units(cfg: &ResNetCfg) -> Vec<(String, usize, usize)> {
+        Self::conv_units(cfg)
+            .into_iter()
+            .filter(|(prefix, stride, _, _)| {
+                let ksize = if prefix.ends_with("down") { 1 } else { 3 };
+                is_wino_eligible(prefix, *stride, ksize)
+            })
+            .map(|(prefix, _, cin, cout)| (prefix, cin, cout))
+            .collect()
     }
 
     /// Initialise with He-style pseudo-random params (for tests / untrained
@@ -183,6 +210,27 @@ impl ResNet18 {
         Self::build(cfg, params, Some(lower))
     }
 
+    /// Build a **heterogeneous** network: the closure decides, per
+    /// stride-1 3×3 conv unit, which Winograd operating point the layer
+    /// runs (returning a lowered layer) or whether it stays direct
+    /// (returning `None`). This is how a tuned
+    /// [`NetPlan`](crate::tune::netplan::NetPlan) materializes — each
+    /// layer may carry its own `(m, base, bit-width)` — generalizing the
+    /// one-plan-per-net constructors above. `cfg.mode` must be a Winograd
+    /// mode; its `(m, base, quant)` are the *nominal* label (reporting
+    /// only), not a constraint on individual layers.
+    pub fn from_params_per_layer(
+        cfg: ResNetCfg,
+        params: Params,
+        lower: &dyn Fn(&str, &Tensor) -> Option<WinoConv2d>,
+    ) -> ResNet18 {
+        assert!(
+            matches!(cfg.mode, ConvMode::Winograd { .. }),
+            "per-layer lowering requires a Winograd mode label"
+        );
+        Self::build_per_layer(cfg, params, Some(lower))
+    }
+
     fn check_plan(cfg: &ResNetCfg, wf: &WinoF) {
         match cfg.mode {
             ConvMode::Winograd { m, base, .. } => {
@@ -199,34 +247,105 @@ impl ResNet18 {
         params: Params,
         lower: Option<&dyn Fn(&str, &Tensor) -> WinoConv2d>,
     ) -> ResNet18 {
+        match (cfg.mode, lower) {
+            (ConvMode::Winograd { .. }, Some(lower)) => Self::build_per_layer(
+                cfg,
+                params,
+                Some(&|prefix: &str, w: &Tensor| Some(lower(prefix, w))),
+            ),
+            _ => Self::build_per_layer(cfg, params, None),
+        }
+    }
+
+    fn build_per_layer(
+        cfg: ResNetCfg,
+        params: Params,
+        lower: Option<&dyn Fn(&str, &Tensor) -> Option<WinoConv2d>>,
+    ) -> ResNet18 {
         let mut wino = HashMap::new();
-        if let (ConvMode::Winograd { .. }, Some(lower)) = (cfg.mode, lower) {
-            for (prefix, stride, _cin, _cout) in Self::conv_units(&cfg) {
-                if stride != 1 || prefix.ends_with("down") {
-                    continue; // strided/1×1 convs stay direct (as in ref [5])
-                }
+        if let Some(lower) = lower {
+            for (prefix, _cin, _cout) in Self::wino_eligible_units(&cfg) {
                 let w = params
                     .get(&format!("{prefix}.w"))
                     .unwrap_or_else(|| panic!("missing weights for {prefix}"));
-                wino.insert(prefix.clone(), lower(&prefix, w));
+                if let Some(layer) = lower(&prefix, w) {
+                    wino.insert(prefix.clone(), layer);
+                }
             }
         }
         ResNet18 { cfg, params, wino }
     }
 
+    /// The Winograd layer serving `prefix`, if that conv unit is lowered.
+    pub fn wino_layer(&self, prefix: &str) -> Option<&WinoConv2d> {
+        self.wino.get(prefix)
+    }
+
+    /// Run the network on `x` and return each Winograd-eligible layer's
+    /// input activations (keyed by conv-unit prefix) — the calibration
+    /// data the tuner sweeps candidates against. Captures every stride-1
+    /// 3×3 unit, whether or not it is currently lowered to Winograd, so a
+    /// direct-mode reference net yields the same activation set.
+    pub fn capture_wino_inputs(&self, x: &Tensor) -> HashMap<String, Tensor> {
+        let mut captured: HashMap<String, Tensor> = HashMap::new();
+        self.forward_impl(x, Some(&mut captured), &mut EngineScratch::new());
+        captured
+    }
+
     /// Calibrate the quantized Winograd layers on a representative batch.
     pub fn calibrate_quant(&mut self, batch: &Tensor) {
         if let ConvMode::Winograd { quant: Some(qcfg), .. } = self.cfg.mode {
-            // Run the network stem-to-tail, calibrating each wino layer on
-            // its actual input activations.
-            let mut captured: HashMap<String, Tensor> = HashMap::new();
-            self.forward_impl(batch, Some(&mut captured), &mut EngineScratch::new());
-            for (prefix, layer) in self.wino.iter_mut() {
-                if let Some(input) = captured.get(prefix) {
-                    layer.quantize(qcfg, input, 1);
-                }
+            self.calibrate_quant_with(batch, &|_prefix| Some((qcfg, 100.0)));
+        }
+    }
+
+    /// Calibrate with a per-layer bit-width policy: the closure maps a
+    /// conv-unit prefix to `(QuantConfig, activation calibration
+    /// percentile)`, or `None` to leave that layer float. Each layer is
+    /// calibrated on its **actual** input activations (captured by a
+    /// stem-to-tail forward pass of the still-float network). The uniform
+    /// [`calibrate_quant`](Self::calibrate_quant) delegates here; tuned
+    /// NetPlans use it to give every layer its own operating point.
+    pub fn calibrate_quant_with(
+        &mut self,
+        batch: &Tensor,
+        policy: &dyn Fn(&str) -> Option<(QuantConfig, f64)>,
+    ) {
+        let captured = self.capture_wino_inputs(batch);
+        for (prefix, layer) in self.wino.iter_mut() {
+            if let (Some((qcfg, pct)), Some(input)) = (policy(prefix), captured.get(prefix)) {
+                layer.quantize_pct(qcfg, input, 1, pct);
             }
         }
+    }
+
+    /// Winograd tiles a single item (square `input_hw`×`input_hw` image)
+    /// pushes through this network's lowered layers — the serve-stats
+    /// throughput unit. Walks the conv units tracking the spatial size
+    /// stage by stage; each lowered layer contributes its **own** `m`'s
+    /// tile grid, so heterogeneous (per-layer-tuned) networks are counted
+    /// correctly.
+    pub fn wino_tiles_per_item(&self, input_hw: usize) -> usize {
+        let pad = 1; // all wino units are 3×3 `same` convs
+        let mut tiles = 0;
+        let mut hw = input_hw;
+        for (prefix, stride, _cin, _cout) in Self::conv_units(&self.cfg) {
+            if prefix.ends_with("down") {
+                continue; // parallel 1×1 path; conv1 already advanced `hw`
+            }
+            if stride == 1 {
+                if let Some(layer) = self.wino.get(&prefix) {
+                    let g = TileGrid::new(
+                        &[1, 1, hw + 2 * pad, hw + 2 * pad],
+                        layer.wf.m,
+                        layer.wf.r,
+                    );
+                    tiles += g.tile_count();
+                }
+            }
+            hw /= stride;
+        }
+        tiles
     }
 
     fn conv_unit(
@@ -241,12 +360,15 @@ impl ResNet18 {
         let w = &self.params[&wn];
         let pad = if w.dims[2] == 3 { 1 } else { 0 };
         if let Some(cap) = capture.as_deref_mut() {
-            if self.wino.contains_key(prefix) {
+            // Capture every Winograd-eligible unit (stride-1 3×3), not just
+            // currently-lowered ones, so a direct-mode net still yields the
+            // tuner's calibration activations.
+            if is_wino_eligible(prefix, stride, w.dims[2]) {
                 cap.insert(prefix.to_string(), x.clone());
             }
         }
-        let y = match (&self.cfg.mode, self.wino.get(prefix)) {
-            (ConvMode::Winograd { .. }, Some(layer)) if stride == 1 => {
+        let y = match self.wino.get(prefix) {
+            Some(layer) if stride == 1 => {
                 layer.forward_with_scratch(x, Conv2dCfg { stride: 1, padding: pad }, scratch)
             }
             _ => conv2d(x, w, None, Conv2dCfg { stride, padding: pad }),
@@ -403,6 +525,78 @@ mod tests {
         let shared = ResNet18::from_params_with_plan(cfg, params, &wf);
         let x = rand_images(19, 1, 32);
         assert_eq!(fresh.forward(&x).data, shared.forward(&x).data);
+    }
+
+    #[test]
+    fn per_layer_heterogeneous_build_runs_and_counts_tiles() {
+        // Mix m=4 Legendre and m=2 canonical across layers, leave one
+        // layer direct: the net must run, and tile accounting must follow
+        // each layer's own grid.
+        use crate::wino::toomcook::WinogradPlan;
+        use crate::wino::transform::WinoF;
+        let cfg = small_cfg(ConvMode::Winograd { m: 4, base: Base::Legendre, quant: None });
+        let params = ResNet18::init_params(&cfg, 23);
+        let wf4 = WinoF::new(&WinogradPlan::new(4, 3), Base::Legendre);
+        let wf2 = WinoF::new(&WinogradPlan::new(2, 3), Base::Canonical);
+        let net = ResNet18::from_params_per_layer(cfg, params.clone(), &|prefix, w| {
+            match prefix {
+                "stem" => None, // stays direct
+                p if p.starts_with("s0") => Some(WinoConv2d::with_plan(wf2.clone(), w)),
+                _ => Some(WinoConv2d::with_plan(wf4.clone(), w)),
+            }
+        });
+        assert!(net.wino_layer("stem").is_none());
+        assert_eq!(net.wino_layer("s0b0.conv1").unwrap().wf.m, 2);
+        assert_eq!(net.wino_layer("s1b0.conv2").unwrap().wf.m, 4);
+        // Float winograd ≈ direct regardless of the per-layer mix.
+        let x = rand_images(29, 1, 32);
+        let yd = ResNet18::from_params(small_cfg(ConvMode::Direct), params).forward(&x);
+        let yh = net.forward(&x);
+        for (a, b) in yd.data.iter().zip(&yh.data) {
+            assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+        }
+        // Tiles: s0 runs m=2 on 32×32 (16×16 = 256 tiles × 4 layers),
+        // stem is direct (0), s1..s3 run m=4: 3·16 + 3·4 + 3·1 = 63.
+        assert_eq!(net.wino_tiles_per_item(32), 4 * 256 + 63);
+    }
+
+    #[test]
+    fn capture_covers_eligible_layers_even_in_direct_mode() {
+        let net = ResNet18::init(small_cfg(ConvMode::Direct), 3);
+        let x = rand_images(4, 2, 32);
+        let captured = net.capture_wino_inputs(&x);
+        // stem + s0's 4 block convs + 3 per later stage (conv1 of s1..s3
+        // b0 are stride 2; downsamples are 1×1): 14 captured activations.
+        assert_eq!(captured.len(), 14);
+        assert!(captured.contains_key("stem"));
+        assert!(captured.contains_key("s3b1.conv2"));
+        assert!(!captured.contains_key("s1b0.conv1"), "stride-2 conv is not wino-eligible");
+        assert!(!captured.contains_key("s1b0.down"));
+        assert_eq!(captured["stem"].dims, vec![2, 3, 32, 32]);
+        assert_eq!(captured["s1b1.conv1"].dims, vec![2, 8, 16, 16]);
+    }
+
+    #[test]
+    fn calibrate_quant_with_per_layer_policy() {
+        // Two layers get different bit policies; the rest stay float.
+        let cfg = small_cfg(ConvMode::Winograd {
+            m: 4,
+            base: Base::Legendre,
+            quant: Some(QuantConfig::w8()),
+        });
+        let mut net = ResNet18::init(cfg, 31);
+        let x = rand_images(37, 2, 32);
+        net.calibrate_quant_with(&x, &|prefix| match prefix {
+            "stem" => Some((QuantConfig::w8(), 100.0)),
+            "s0b0.conv1" => Some((QuantConfig::w8_h9(), 99.0)),
+            _ => None,
+        });
+        let stem_q = net.wino_layer("stem").unwrap().quant.unwrap();
+        assert_eq!(stem_q.0, QuantConfig::w8());
+        let c1_q = net.wino_layer("s0b0.conv1").unwrap().quant.unwrap();
+        assert_eq!(c1_q.0.hadamard_bits, 9);
+        assert!(net.wino_layer("s0b0.conv2").unwrap().quant.is_none());
+        assert!(net.forward(&x).data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

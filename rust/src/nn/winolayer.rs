@@ -103,7 +103,28 @@ impl WinoConv2d {
 
     /// Enable the quantized pipeline: calibrate scales on a representative
     /// input batch, then fake-quantize the stored transformed weights.
+    /// Activation calibration uses the full range (`max|t|`); the tuner's
+    /// percentile variant is [`quantize_pct`](Self::quantize_pct).
     pub fn quantize(&mut self, cfg: QuantConfig, calib: &Tensor, padding: usize) {
+        self.quantize_pct(cfg, calib, padding, 100.0);
+    }
+
+    /// [`quantize`](Self::quantize) with percentile activation calibration:
+    /// the *input* quantizer's scale comes from the `calib_pct`-th
+    /// magnitude percentile of the calibration activations
+    /// ([`Quantizer::calibrate_percentile`]) instead of their maximum, so a
+    /// single activation outlier cannot blow up the step size for the whole
+    /// layer. `calib_pct = 100` is exactly [`quantize`](Self::quantize);
+    /// the transformed-input/Hadamard/output scales still come from the
+    /// dry-run maxima (those ranges are post-transform aggregates, not raw
+    /// activation tails).
+    pub fn quantize_pct(
+        &mut self,
+        cfg: QuantConfig,
+        calib: &Tensor,
+        padding: usize,
+        calib_pct: f64,
+    ) {
         let wt_all: Vec<f64> = self
             .wt
             .iter()
@@ -114,7 +135,7 @@ impl WinoConv2d {
         // run over the calibration batch.
         let x = pad_hw(calib, padding);
         let in_all: Vec<f64> = x.data.iter().map(|&v| v as f64).collect();
-        let input = Quantizer::calibrate(cfg.act_bits, &in_all);
+        let input = Quantizer::calibrate_percentile(cfg.act_bits, &in_all, calib_pct);
         let mut xt_max = 0.0f64;
         let mut had_max = 0.0f64;
         let mut out_max = 0.0f64;
@@ -359,6 +380,37 @@ mod tests {
         assert!(
             max_err < 0.35 * max_direct,
             "quantized error too large: {max_err} vs signal {max_direct}"
+        );
+    }
+
+    #[test]
+    fn quantize_pct_100_matches_quantize() {
+        let x = prng_tensor(40, &[1, 3, 10, 10], 1.0);
+        let w = prng_tensor(41, &[3, 3, 3, 3], 0.4);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let mut a = WinoConv2d::new(4, &w, Base::Legendre);
+        a.quantize(QuantConfig::w8(), &x, 1);
+        let mut b = WinoConv2d::new(4, &w, Base::Legendre);
+        b.quantize_pct(QuantConfig::w8(), &x, 1, 100.0);
+        assert_eq!(a.forward(&x, cfg).data, b.forward(&x, cfg).data);
+    }
+
+    #[test]
+    fn quantize_pct_shrinks_input_scale_under_outlier() {
+        // One planted outlier owns the max-calibrated input scale; the
+        // percentile calibration must not let it.
+        let mut x = prng_tensor(42, &[1, 2, 10, 10], 0.5);
+        x.data[7] = 50.0;
+        let w = prng_tensor(43, &[2, 2, 3, 3], 0.4);
+        let mut qmax = WinoConv2d::new(4, &w, Base::Legendre);
+        qmax.quantize(QuantConfig::w8(), &x, 1);
+        let mut qpct = WinoConv2d::new(4, &w, Base::Legendre);
+        qpct.quantize_pct(QuantConfig::w8(), &x, 1, 99.0);
+        let s_max = qmax.quant.unwrap().1.input.scale;
+        let s_pct = qpct.quant.unwrap().1.input.scale;
+        assert!(
+            s_pct < s_max / 10.0,
+            "percentile scale {s_pct} should be far below outlier-driven {s_max}"
         );
     }
 

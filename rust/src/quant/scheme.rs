@@ -35,6 +35,48 @@ impl Quantizer {
         Quantizer { bits, scale }
     }
 
+    /// Calibrate from a magnitude percentile instead of the maximum:
+    /// `scale = percentile(|t|, pct) / qmax` with nearest-rank percentiles
+    /// (the same estimator as [`crate::benchkit::percentile_sorted`],
+    /// which this reuses). `pct` is in percent; `pct = 100` reproduces
+    /// [`calibrate`](Self::calibrate) exactly. Lower percentiles trade a
+    /// little clipping of outliers for a finer step on the bulk of the
+    /// distribution — the `winoq tune --calib-pct` activation-calibration
+    /// knob, after the robust-calibration observation of
+    /// Fernandez-Marques et al. 2020.
+    ///
+    /// Two guard rails: `pct >= 100` short-circuits to
+    /// [`calibrate`](Self::calibrate) (no clone/sort on the default
+    /// path, NaN-tolerant like before), and a percentile that lands on
+    /// `0.0` — easy with post-ReLU activations, where half the tensor
+    /// plus the zero padding is exactly zero — falls back to the max
+    /// instead of pinning a meaningless `scale = 1`.
+    pub fn calibrate_percentile(bits: u32, data: &[f64], pct: f64) -> Quantizer {
+        assert!(
+            pct > 0.0 && pct <= 100.0,
+            "calibration percentile must be in (0, 100], got {pct}"
+        );
+        if pct >= 100.0 {
+            return Self::calibrate(bits, data);
+        }
+        // NaNs are dropped (the max-calibration fold ignores them too),
+        // so the sort is total and panic-free.
+        let mut mags: Vec<f64> = data.iter().map(|v| v.abs()).filter(|v| !v.is_nan()).collect();
+        mags.sort_by(|a, b| a.total_cmp(b));
+        let ref_mag = if mags.is_empty() {
+            0.0
+        } else {
+            crate::benchkit::percentile_sorted(&mags, pct / 100.0)
+        };
+        if ref_mag == 0.0 {
+            // The pct-th magnitude is zero (sparse/ReLU data): the
+            // percentile carries no range information, so degrade to
+            // max-calibration rather than a garbage unit scale.
+            return Self::calibrate(bits, data);
+        }
+        Quantizer { bits, scale: ref_mag / Self::qmax(bits) as f64 }
+    }
+
     /// Calibrate from f32 data.
     pub fn calibrate_f32(bits: u32, data: &[f32]) -> Quantizer {
         let maxabs = data.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
@@ -178,6 +220,54 @@ mod tests {
         assert_eq!(q.quantize(3.0), 127);
         assert_eq!(q.quantize(-3.0), -127);
         assert!((q.dequantize(q.quantize(3.0)) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibrate_percentile_100_matches_max() {
+        let data: Vec<f64> = (0..57).map(|i| (i as f64) * 0.31 - 8.0).collect();
+        let a = Quantizer::calibrate(8, &data);
+        let b = Quantizer::calibrate_percentile(8, &data, 100.0);
+        assert_eq!(a, b, "pct=100 must reproduce max-calibration exactly");
+    }
+
+    #[test]
+    fn calibrate_percentile_ignores_outlier() {
+        // 99 well-behaved values plus one huge outlier: max-calibration
+        // inflates the scale 100x, the 99th percentile does not.
+        let mut data: Vec<f64> = (1..=99).map(|i| i as f64 / 99.0).collect();
+        data.push(100.0);
+        let q_max = Quantizer::calibrate(8, &data);
+        let q_pct = Quantizer::calibrate_percentile(8, &data, 99.0);
+        assert!((q_max.scale - 100.0 / 127.0).abs() < 1e-12);
+        assert!((q_pct.scale - 1.0 / 127.0).abs() < 1e-12);
+        // The outlier clips to qmax instead of owning the range.
+        assert_eq!(q_pct.quantize(100.0), 127);
+    }
+
+    #[test]
+    fn calibrate_percentile_zero_and_empty() {
+        let q = Quantizer::calibrate_percentile(8, &[0.0, 0.0], 95.0);
+        assert_eq!(q.scale, 1.0);
+        let q = Quantizer::calibrate_percentile(8, &[], 95.0);
+        assert_eq!(q.scale, 1.0);
+    }
+
+    #[test]
+    fn calibrate_percentile_sparse_data_falls_back_to_max() {
+        // Post-ReLU-like data: 60% exact zeros. A 50th percentile lands
+        // on 0.0 — the quantizer must degrade to max-calibration, not a
+        // meaningless unit scale.
+        let mut data = vec![0.0f64; 60];
+        data.extend((1..=40).map(|i| i as f64 / 40.0));
+        let q = Quantizer::calibrate_percentile(8, &data, 50.0);
+        assert_eq!(q, Quantizer::calibrate(8, &data));
+        assert!((q.scale - 1.0 / 127.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn calibrate_percentile_rejects_zero_pct() {
+        let _ = Quantizer::calibrate_percentile(8, &[1.0], 0.0);
     }
 
     #[test]

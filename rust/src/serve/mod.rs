@@ -23,6 +23,13 @@
 //!                  response channels + ServeStats (p50/p95/p99)
 //! ```
 //!
+//! Models are registered either at one uniform operating point or from a
+//! tuned [`NetPlan`](crate::tune::netplan::NetPlan) artifact
+//! ([`ModelRegistry::register_netplan`], `winoq serve --plan`), in which
+//! case every conv layer carries its own `(m, base, bit-width)` engine —
+//! the plan cache keys `(m, r, base)`, so heterogeneous models simply
+//! populate more entries (watch `plan_cache` in the stats JSON).
+//!
 //! Batching changes **nothing numerically**: every engine stage is
 //! per-tile independent with a fixed channel-accumulation order, so a
 //! response is bit-identical to running that request alone

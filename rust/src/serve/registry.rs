@@ -1,16 +1,20 @@
 //! Named model registry for the serving subsystem.
 //!
-//! A [`ServedModel`] is a ResNet18 pinned to one
-//! [`ConvMode`]/[`QuantConfig`](crate::quant::QuantConfig) operating
-//! point, wrapped with the per-item input geometry and tile accounting
-//! the queue workers need. Models come from two sources:
+//! A [`ServedModel`] is a ResNet18 wrapped with the per-item input
+//! geometry and tile accounting the queue workers need — either pinned
+//! to one [`ConvMode`]/[`QuantConfig`](crate::quant::QuantConfig)
+//! operating point, or **heterogeneous** (one operating point per layer,
+//! from a tuned NetPlan). Models come from three sources:
 //!
 //! * **checkpoints** — the `runtime::client` interchange format: a
 //!   `<tag>.manifest.txt` naming parameters in canonical sorted order
 //!   plus a flat f32-LE blob (`<tag>.init.bin` or a trained checkpoint
 //!   file), loaded without touching the (stubbed) PJRT client;
 //! * **synthetic** — He-initialised and calibration-quantized in
-//!   process, so the whole serve path is exercisable offline.
+//!   process, so the whole serve path is exercisable offline;
+//! * **NetPlans** — `winoq tune` artifacts rebuilding a synthetic model
+//!   with per-layer `(m, base, bit-width)` engines
+//!   ([`ModelRegistry::register_netplan`]).
 //!
 //! All transform lowering goes through the shared
 //! [`PlanCache`](super::plan::PlanCache): one registry hosting several
@@ -20,10 +24,12 @@
 use super::plan::{PlanCache, PlanKey};
 use super::BatchModel;
 use crate::data::synthcifar;
-use crate::engine::{EngineScratch, TileGrid};
+use crate::engine::EngineScratch;
 use crate::nn::tensor::Tensor;
+use crate::nn::winolayer::WinoConv2d;
 use crate::nn::{ConvMode, Params, ResNet18, ResNetCfg};
 use crate::runtime::manifest::Manifest;
+use crate::tune::netplan::NetPlan;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -51,29 +57,6 @@ impl BatchModel for ServedModel {
     fn tiles_per_item(&self) -> usize {
         self.tiles_per_item
     }
-}
-
-/// Winograd tiles a single item pushes through all engine-backed layers:
-/// walks the conv units tracking the spatial size stage by stage.
-fn wino_tiles_per_item(cfg: &ResNetCfg, input_hw: usize) -> usize {
-    let m = match cfg.mode {
-        ConvMode::Winograd { m, .. } => m,
-        ConvMode::Direct => return 0,
-    };
-    let pad = 1; // all wino units are 3×3 `same` convs
-    let mut tiles = 0;
-    let mut hw = input_hw;
-    for (prefix, stride, _cin, _cout) in ResNet18::conv_units(cfg) {
-        if prefix.ends_with("down") {
-            continue; // parallel 1×1 path; conv1 already advanced `hw`
-        }
-        if stride == 1 {
-            let g = TileGrid::new(&[1, 1, hw + 2 * pad, hw + 2 * pad], m, 3);
-            tiles += g.tile_count();
-        }
-        hw /= stride;
-    }
-    tiles
 }
 
 /// Named model registry sharing one [`PlanCache`].
@@ -132,8 +115,81 @@ impl ModelRegistry {
         // name: two registered variants of one synthetic model share the
         // float weight banks.
         let ns = format!("synth:{seed}:w{}", cfg.width_mult);
-        let net = self.build_net(cfg, params, &ns);
-        self.finish(name, net, [3, image_hw, image_hw], seed, calib_batch)
+        let mut net = self.build_net(cfg, params, &ns);
+        calibrate_uniform(&mut net, [3, image_hw, image_hw], seed, calib_batch);
+        self.finish(name, net, [3, image_hw, image_hw])
+    }
+
+    /// Register a tuned, **heterogeneous** model from a
+    /// [`NetPlan`](crate::tune::netplan::NetPlan) artifact (the output of
+    /// `winoq tune`, loaded by `winoq serve --plan`): synthetic
+    /// parameters come from the plan's recorded seed, every planned layer
+    /// is lowered through the shared [`PlanCache`] under its **own**
+    /// `(m, base)` key, and each is calibrated to its own bit widths with
+    /// the plan's calibration recipe (batch + activation percentile), so
+    /// the served network is bit-identical to what the tuner measured.
+    /// Layers absent from the plan run direct convolution.
+    pub fn register_netplan(&mut self, name: &str, plan: &NetPlan) -> Result<Arc<ServedModel>> {
+        self.ensure_unregistered(name)?;
+        if !plan.model.starts_with("resnet18") {
+            bail!(
+                "NetPlan model {:?} is not a resnet18 variant this registry can build",
+                plan.model
+            );
+        }
+        // The synthetic source (and the tuner's own calibration pass) is
+        // pinned to the synthetic-CIFAR geometry; any other image size
+        // would silently calibrate on different data than the tuner
+        // measured, breaking the bit-identical tune→serve invariant.
+        if plan.image_hw != synthcifar::IMAGE_HW {
+            bail!(
+                "NetPlan image_hw {} is not the synthetic-CIFAR size {}",
+                plan.image_hw,
+                synthcifar::IMAGE_HW
+            );
+        }
+        let (nm, nb, nq) = plan
+            .nominal()
+            .context("NetPlan has no layers — nothing to serve")?;
+        let cfg = ResNetCfg {
+            width_mult: plan.width_mult,
+            num_classes: plan.num_classes,
+            mode: ConvMode::Winograd { m: nm, base: nb, quant: Some(nq) },
+        };
+        // Validate plan layer names against this architecture before any
+        // transform/calibration cost is paid (same eligibility rule the
+        // builder and tuner use).
+        let eligible = ResNet18::wino_eligible_units(&cfg);
+        for l in &plan.layers {
+            if !eligible.iter().any(|(p, _, _)| p == &l.layer) {
+                bail!(
+                    "NetPlan names layer {:?}, which is not a Winograd-eligible unit \
+                     of resnet18 at width {}",
+                    l.layer,
+                    plan.width_mult
+                );
+            }
+        }
+        let params = ResNet18::init_params(&cfg, plan.seed);
+        // Same namespace scheme as register_synthetic: banks are shared
+        // with uniform variants of the same seed/width wherever the
+        // per-layer (m, base) keys coincide.
+        let ns = format!("synth:{}:w{}", plan.seed, cfg.width_mult);
+        let plans = &self.plans;
+        let mut net = ResNet18::from_params_per_layer(cfg, params, &|prefix: &str, w: &Tensor| {
+            plan.layer(prefix).map(|l| {
+                let key = PlanKey::f(l.m, 3, l.base);
+                let wf = plans.wf(key);
+                let bank = plans.weight_bank(&format!("{ns}/{prefix}"), key, w);
+                WinoConv2d::from_transformed(wf.as_ref().clone(), bank.as_ref().clone())
+            })
+        });
+        let hw = plan.image_hw;
+        let calib = calibration_batch(&[3, hw, hw], plan.seed, plan.calib_batch.max(1));
+        net.calibrate_quant_with(&calib, &|prefix| {
+            plan.layer(prefix).map(|l| (l.quant, plan.calib_pct))
+        });
+        self.finish(name, net, [3, hw, hw])
     }
 
     /// Register a model from the `runtime::client` checkpoint format:
@@ -228,8 +284,9 @@ impl ModelRegistry {
         // while an overwritten checkpoint file can never serve stale
         // banks.
         let ns = format!("ckpt:{tag}:{:016x}", fnv1a64(&bytes));
-        let net = self.build_net(cfg, params, &ns);
-        self.finish(name, net, [3, h, w], 0x5EED, calib_batch)
+        let mut net = self.build_net(cfg, params, &ns);
+        calibrate_uniform(&mut net, [3, h, w], 0x5EED, calib_batch);
+        self.finish(name, net, [3, h, w])
     }
 
     /// Lower the network through the shared plan cache (Winograd modes) or
@@ -269,23 +326,20 @@ impl ModelRegistry {
         Ok(())
     }
 
-    /// Calibrate (if quantized), wrap and insert the model.
+    /// Wrap and insert an already-calibrated model. Tile accounting walks
+    /// the network's own lowered layers
+    /// ([`ResNet18::wino_tiles_per_item`]), so heterogeneous NetPlan
+    /// models are counted per their actual per-layer grids.
     fn finish(
         &mut self,
         name: &str,
-        mut net: ResNet18,
+        net: ResNet18,
         input_dims: [usize; 3],
-        seed: u64,
-        calib_batch: usize,
     ) -> Result<Arc<ServedModel>> {
         if self.models.contains_key(name) {
             bail!("model {name:?} is already registered");
         }
-        if let ConvMode::Winograd { quant: Some(_), .. } = net.cfg.mode {
-            let calib = calibration_batch(&input_dims, seed, calib_batch.max(1));
-            net.calibrate_quant(&calib);
-        }
-        let tiles_per_item = wino_tiles_per_item(&net.cfg, input_dims[1]);
+        let tiles_per_item = net.wino_tiles_per_item(input_dims[1]);
         let model = Arc::new(ServedModel {
             name: name.to_string(),
             net,
@@ -294,6 +348,16 @@ impl ModelRegistry {
         });
         self.models.insert(name.to_string(), model.clone());
         Ok(model)
+    }
+}
+
+/// The uniform calibration step `register_synthetic`/`register_checkpoint`
+/// share: quantized Winograd modes calibrate on a representative batch,
+/// everything else is a no-op.
+fn calibrate_uniform(net: &mut ResNet18, input_dims: [usize; 3], seed: u64, calib_batch: usize) {
+    if let ConvMode::Winograd { quant: Some(_), .. } = net.cfg.mode {
+        let calib = calibration_batch(&input_dims, seed, calib_batch.max(1));
+        net.calibrate_quant(&calib);
     }
 }
 
@@ -373,15 +437,72 @@ mod tests {
         // Width 0.25, 32×32: stem + s0 (5 layers at 8×8 tiles = 64),
         // s1: 3 wino layers at 16×16 → 16 tiles, s2: 3 at 8×8 → 4,
         // s3: 3 at 4×4 → 1. Total 5·64 + 3·16 + 3·4 + 3·1 = 383.
-        let tiles = wino_tiles_per_item(&wino_cfg(None), 32);
-        assert_eq!(tiles, 383);
-        assert_eq!(
-            wino_tiles_per_item(
-                &ResNetCfg { width_mult: 0.25, num_classes: 10, mode: ConvMode::Direct },
-                32
-            ),
-            0
+        let mut reg = ModelRegistry::new();
+        let served = reg.register_synthetic("t", wino_cfg(None), 32, 7, 1).unwrap();
+        assert_eq!(served.tiles_per_item(), 383);
+        let direct = ResNet18::init(
+            ResNetCfg { width_mult: 0.25, num_classes: 10, mode: ConvMode::Direct },
+            7,
         );
+        assert_eq!(direct.wino_tiles_per_item(32), 0);
+    }
+
+    #[test]
+    fn netplan_registration_builds_heterogeneous_engines() {
+        use crate::quant::scheme::QuantConfig;
+        use crate::tune::netplan::{LayerPlan, NetPlan, NETPLAN_VERSION};
+        let plan = NetPlan {
+            version: NETPLAN_VERSION,
+            model: "resnet18-synthetic".into(),
+            width_mult: 0.25,
+            num_classes: 10,
+            image_hw: 32,
+            seed: 7,
+            calib_batch: 2,
+            calib_pct: 100.0,
+            layers: vec![
+                LayerPlan {
+                    layer: "stem".into(),
+                    m: 4,
+                    base: Base::Legendre,
+                    quant: QuantConfig::w8_h9(),
+                },
+                LayerPlan {
+                    layer: "s0b0.conv1".into(),
+                    m: 2,
+                    base: Base::Canonical,
+                    quant: QuantConfig::w8(),
+                },
+            ],
+        };
+        let mut reg = ModelRegistry::new();
+        let served = reg.register_netplan("tuned", &plan).unwrap();
+        // Two distinct (m, base) keys were lowered.
+        assert_eq!(reg.plans().plan_count(), 2);
+        // Per-layer engines carry their own operating points.
+        assert_eq!(served.net.wino_layer("stem").unwrap().wf.m, 4);
+        assert_eq!(served.net.wino_layer("stem").unwrap().quant.unwrap().0.hadamard_bits, 9);
+        assert_eq!(served.net.wino_layer("s0b0.conv1").unwrap().wf.m, 2);
+        assert!(served.net.wino_layer("s0b0.conv2").is_none(), "unplanned layer stays direct");
+        // Tiles: stem m=4 on 32×32 → 64, s0b0.conv1 m=2 → 256.
+        assert_eq!(served.tiles_per_item(), 64 + 256);
+        // And it serves finite logits.
+        let x = calibration_batch(&[3, 32, 32], 3, 2);
+        let mut scratch = EngineScratch::new();
+        let y = served.infer_batch(&x, &mut scratch);
+        assert_eq!(y.dims, vec![2, 10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // Bad layer names are rejected before any lowering.
+        let mut bad = plan.clone();
+        bad.layers[0].layer = "s0b0.down".into();
+        let err = reg.register_netplan("bad", &bad).unwrap_err();
+        assert!(err.to_string().contains("s0b0.down"), "{err}");
+        // A non-synthetic-CIFAR geometry would calibrate on different
+        // data than the tuner measured — rejected, not served.
+        let mut bad_hw = plan.clone();
+        bad_hw.image_hw = 64;
+        let err = reg.register_netplan("bad-hw", &bad_hw).unwrap_err();
+        assert!(err.to_string().contains("image_hw"), "{err}");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! [`to_json`](StatsReport::to_json) output is what
 //! `winoq serve --stats-json` writes and `scripts/ci.sh` smoke-checks.
 
+use super::plan::CacheCounters;
 use crate::benchkit;
 use std::sync::Mutex;
 
@@ -144,6 +145,28 @@ impl StatsReport {
         )
     }
 
+    /// [`to_json`](Self::to_json) extended with the serving registry's
+    /// transform-plan cache telemetry — hits/misses for the lowered-plan
+    /// and weight-bank maps ([`PlanCache::counters`](super::plan::PlanCache::counters)).
+    /// Heterogeneous (NetPlan-tuned) models make this worth watching: one
+    /// model may populate several `(m, base)` plan entries, and a second
+    /// registration should hit, not re-transform.
+    pub fn to_json_with_plan_cache(&self, plans: CacheCounters, banks: CacheCounters) -> String {
+        let core = self.to_json();
+        format!(
+            concat!(
+                "{}, \"plan_cache\": {{",
+                "\"plans\": {{\"hits\": {}, \"misses\": {}}}, ",
+                "\"banks\": {{\"hits\": {}, \"misses\": {}}}}}}}"
+            ),
+            &core[..core.len() - 1],
+            plans.hits,
+            plans.misses,
+            banks.hits,
+            banks.misses,
+        )
+    }
+
     /// One-line human summary for the CLI.
     pub fn summary_line(&self) -> String {
         format!(
@@ -184,6 +207,27 @@ mod tests {
         assert!((r.requests_per_sec - 3.0).abs() < 1e-9);
         assert!((r.tiles_per_sec - 300.0).abs() < 1e-9);
         assert_eq!(r.max_queue_depth, 7);
+    }
+
+    #[test]
+    fn json_with_plan_cache_appends_counters() {
+        let r = ServeStats::new().report(1.0);
+        let j = r.to_json_with_plan_cache(
+            CacheCounters { hits: 3, misses: 2 },
+            CacheCounters { hits: 28, misses: 14 },
+        );
+        assert!(j.contains("\"plan_cache\""), "{j}");
+        assert!(j.contains("\"plans\": {\"hits\": 3, \"misses\": 2}"), "{j}");
+        assert!(j.contains("\"banks\": {\"hits\": 28, \"misses\": 14}"), "{j}");
+        // Still one well-formed object: the base keys survive and the
+        // braces balance.
+        assert!(j.contains("\"completed\""));
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces in {j}"
+        );
+        assert!(j.ends_with("}}}"), "{j}");
     }
 
     #[test]

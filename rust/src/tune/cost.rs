@@ -1,0 +1,249 @@
+//! The tuner's cost model: what one `(layer, candidate)` cell costs in
+//! quantized numerical error and what it buys in throughput.
+//!
+//! * **Error** — the candidate layer is quantized exactly the way serving
+//!   quantizes it ([`WinoConv2d::quantize_pct`] on the layer's real
+//!   captured activations, Fig. 2 cast sites) and its forward output is
+//!   compared against an **f64 direct-convolution oracle** (same
+//!   convolution, no Winograd, no quantization — the reference
+//!   `wino::error` measures tiles against, lifted to NCHW layers). The
+//!   statistic is relative L2 over the whole output tensor.
+//! * **Throughput** — short timed [`benchkit`] runs of the lowered
+//!   engine's forward pass. Two units are reported: `tiles_per_sec` in
+//!   the candidate's **own** tile grid (the serving-stats unit) and
+//!   `outputs_per_sec` (output pixels × filters per second), which is
+//!   invariant to `m` and therefore the unit candidate selection
+//!   compares across tile sizes.
+
+use super::grid::Candidate;
+use crate::benchkit;
+use crate::engine::EngineScratch;
+use crate::nn::layers::Conv2dCfg;
+use crate::nn::tensor::Tensor;
+use crate::nn::winolayer::WinoConv2d;
+use crate::wino::matrix::Mat;
+use crate::wino::transform::WinoF;
+
+/// Measurement knobs (small by default — tuning is offline but should
+/// not take minutes per layer).
+#[derive(Clone, Copy, Debug)]
+pub struct CostOpts {
+    /// Images (from the captured activation batch) the error statistic
+    /// averages over.
+    pub err_images: usize,
+    /// Images per timed forward pass.
+    pub bench_images: usize,
+    /// Untimed warmup passes.
+    pub bench_warmup: usize,
+    /// Timed samples (median is reported).
+    pub bench_samples: usize,
+    /// Activation calibration percentile (see `Quantizer::calibrate_percentile`).
+    pub calib_pct: f64,
+}
+
+impl Default for CostOpts {
+    fn default() -> CostOpts {
+        CostOpts {
+            err_images: 2,
+            bench_images: 2,
+            bench_warmup: 1,
+            bench_samples: 3,
+            calib_pct: 100.0,
+        }
+    }
+}
+
+/// One measured `(layer, candidate)` cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Measure {
+    /// Relative L2 error of the quantized candidate vs the f64 direct
+    /// oracle over the error subset.
+    pub err: f64,
+    /// Median seconds per timed forward pass (`bench_images` images).
+    pub seconds: f64,
+    /// Winograd tiles per second in the candidate's own grid.
+    pub tiles_per_sec: f64,
+    /// Output elements (pixels × filters × images) per second —
+    /// comparable across tile sizes.
+    pub outputs_per_sec: f64,
+}
+
+/// First `images` items of an NCHW batch (or the whole batch if smaller).
+fn head_images(x: &Tensor, images: usize) -> Tensor {
+    let b = x.dims[0].min(images.max(1));
+    let item: usize = x.dims[1..].iter().product();
+    let mut dims = x.dims.clone();
+    dims[0] = b;
+    Tensor::from_vec(&dims, x.data[..b * item].to_vec())
+}
+
+/// Plain f64 direct correlation of `x` `[N,C,H,W]` (padded by `padding`)
+/// against `w` `[K,C,3,3]` — the oracle quantized candidates are scored
+/// against. Everything accumulates in f64; the (f32) inputs are lifted
+/// exactly.
+pub fn direct_conv_f64(x: &Tensor, w: &Tensor, padding: usize) -> Vec<f64> {
+    let (bn, c, h, wid) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (k, wc, r, s) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+    assert_eq!(c, wc, "channel mismatch");
+    assert_eq!(r, s, "square kernels only");
+    let (ph, pw) = (h + 2 * padding, wid + 2 * padding);
+    let (oh, ow) = (ph - r + 1, pw - r + 1);
+    let mut out = vec![0.0f64; bn * k * oh * ow];
+    let at = |ni: usize, ci: usize, i: isize, j: isize| -> f64 {
+        let (i, j) = (i - padding as isize, j - padding as isize);
+        if i < 0 || j < 0 || i as usize >= h || j as usize >= wid {
+            0.0
+        } else {
+            x.at4(ni, ci, i as usize, j as usize) as f64
+        }
+    };
+    for ni in 0..bn {
+        for ki in 0..k {
+            let plane = &mut out[(ni * k + ki) * oh * ow..][..oh * ow];
+            for ci in 0..c {
+                for a in 0..r {
+                    for b in 0..r {
+                        let wv = w.at4(ki, ci, a, b) as f64;
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        for oi in 0..oh {
+                            for oj in 0..ow {
+                                plane[oi * ow + oj] +=
+                                    wv * at(ni, ci, (oi + a) as isize, (oj + b) as isize);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Relative L2 distance between an f32 output and the f64 oracle.
+pub fn rel_l2(got: &[f32], oracle: &[f64]) -> f64 {
+    assert_eq!(got.len(), oracle.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&g, &o) in got.iter().zip(oracle) {
+        let d = g as f64 - o;
+        num += d * d;
+        den += o * o;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Measure one candidate on one layer: lower the layer from the shared
+/// `wf` and pre-transformed float weight `bank` (both must match the
+/// candidate's `(m, base)` — candidates differing only in bit width
+/// share them, halving the sweep's transform cost), quantize it on the
+/// full captured activation batch with the candidate's bit config, score
+/// error on the first `err_images`, and time the engine forward. `weights`
+/// is the raw `[K,C,3,3]` tensor, needed for the direct oracle.
+pub fn measure_candidate(
+    wf: &WinoF,
+    bank: &[Vec<Mat>],
+    cand: Candidate,
+    weights: &Tensor,
+    acts: &Tensor,
+    opts: &CostOpts,
+) -> Measure {
+    assert_eq!(wf.m, cand.m, "plan/candidate tile mismatch");
+    assert_eq!(wf.base, cand.base, "plan/candidate base mismatch");
+    let conv = Conv2dCfg { stride: 1, padding: 1 };
+    // quantize_pct bakes the weight cast into the stored bank, so each
+    // candidate gets its own copy of the shared float bank.
+    let mut layer = WinoConv2d::from_transformed(wf.clone(), bank.to_vec());
+    layer.quantize_pct(cand.quant(), acts, 1, opts.calib_pct);
+
+    // Error vs the f64 direct oracle.
+    let err_x = head_images(acts, opts.err_images);
+    let got = layer.forward(&err_x, conv);
+    let oracle = direct_conv_f64(&err_x, weights, 1);
+    let err = rel_l2(&got.data, &oracle);
+
+    // Throughput: short engine runs through benchkit.
+    let bench_x = head_images(acts, opts.bench_images);
+    let mut scratch = EngineScratch::new();
+    let summary = benchkit::bench(opts.bench_warmup, opts.bench_samples.max(1), || {
+        layer.forward_with_scratch(&bench_x, conv, &mut scratch)
+    });
+    let tiles = layer.engine().tile_count_for(&bench_x.dims, 1);
+    let k = weights.dims[0];
+    let outputs = bench_x.dims[0] * k * bench_x.dims[2] * bench_x.dims[3];
+    Measure {
+        err,
+        seconds: summary.median,
+        tiles_per_sec: tiles as f64 / summary.median.max(1e-12),
+        outputs_per_sec: outputs as f64 / summary.median.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::conv2d;
+    use crate::testkit::prng_tensor;
+    use crate::wino::basis::Base;
+    use crate::wino::toomcook::WinogradPlan;
+
+    #[test]
+    fn f64_oracle_matches_f32_direct_conv() {
+        let x = prng_tensor(51, &[2, 3, 9, 9], 1.0);
+        let w = prng_tensor(52, &[4, 3, 3, 3], 0.5);
+        for padding in [0usize, 1] {
+            let oracle = direct_conv_f64(&x, &w, padding);
+            let direct = conv2d(&x, &w, None, Conv2dCfg { stride: 1, padding });
+            assert_eq!(oracle.len(), direct.data.len());
+            for (o, d) in oracle.iter().zip(&direct.data) {
+                assert!((o - *d as f64).abs() < 1e-4, "{o} vs {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn head_images_slices_the_batch() {
+        let x = prng_tensor(53, &[3, 2, 4, 4], 1.0);
+        let h = head_images(&x, 2);
+        assert_eq!(h.dims, vec![2, 2, 4, 4]);
+        assert_eq!(h.data[..], x.data[..2 * 2 * 16]);
+        assert_eq!(head_images(&x, 10).dims[0], 3);
+    }
+
+    #[test]
+    fn rel_l2_basics() {
+        assert_eq!(rel_l2(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let e = rel_l2(&[1.1, 2.0], &[1.0, 2.0]);
+        assert!((e - (0.01f64 / 5.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn candidate_measurement_is_sane_and_h9_beats_h8() {
+        use crate::engine::transform_weight_bank;
+        let acts = prng_tensor(54, &[2, 4, 12, 12], 1.0);
+        let w = prng_tensor(55, &[4, 4, 3, 3], 0.3);
+        let wf = WinoF::new(&WinogradPlan::new(4, 3), Base::Legendre);
+        let bank = transform_weight_bank(&wf, &w);
+        let opts = CostOpts { bench_samples: 1, bench_warmup: 0, ..Default::default() };
+        let m8 = measure_candidate(
+            &wf,
+            &bank,
+            Candidate { m: 4, base: Base::Legendre, hadamard_bits: 8 },
+            &w,
+            &acts,
+            &opts,
+        );
+        let m9 = measure_candidate(
+            &wf,
+            &bank,
+            Candidate { m: 4, base: Base::Legendre, hadamard_bits: 9 },
+            &w,
+            &acts,
+            &opts,
+        );
+        assert!(m8.err > 1e-5 && m8.err < 0.5, "8-bit err out of range: {}", m8.err);
+        assert!(m9.err < m8.err, "9-bit hadamard {} !< 8-bit {}", m9.err, m8.err);
+        assert!(m8.seconds > 0.0 && m8.tiles_per_sec > 0.0 && m8.outputs_per_sec > 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! The tuner's candidate space: every `(polynomial base, tile size m,
+//! Hadamard bit width)` operating point a layer may run. The paper's two
+//! bit configurations (8-bit, 8-bit + 9-bit Hadamard) crossed with the
+//! three implemented bases and the `F(2,3)/F(4,3)/F(6,3)` tile sizes give
+//! 18 candidates; the uniform deployment default — canonical `F(4,3)`
+//! all-8-bit — is one of them and doubles as the per-layer accuracy
+//! budget when `--max-err` is not given.
+
+use super::netplan::SUPPORTED_M;
+use crate::quant::scheme::QuantConfig;
+use crate::wino::basis::Base;
+
+/// Hadamard-stage widths the grid sweeps (paper Table 1's two rows).
+pub const HADAMARD_BITS: [u32; 2] = [8, 9];
+
+/// One point of the search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    /// Output tile size `m` of `F(m×m, 3×3)`.
+    pub m: usize,
+    pub base: Base,
+    /// Bit width of the Hadamard-product stage (8 or 9 in the paper).
+    pub hadamard_bits: u32,
+}
+
+impl Candidate {
+    /// The staged bit-width configuration this candidate quantizes with
+    /// (everything 8-bit except the swept Hadamard stage).
+    pub fn quant(&self) -> QuantConfig {
+        QuantConfig {
+            act_bits: 8,
+            weight_bits: 8,
+            hadamard_bits: self.hadamard_bits,
+            out_bits: 8,
+        }
+    }
+
+    /// Transform size `n = m + r − 1` (r = 3 throughout the grid).
+    pub fn n(&self) -> usize {
+        self.m + 2
+    }
+
+    /// Human label, e.g. `F(4,3)/legendre/h9`.
+    pub fn label(&self) -> String {
+        format!("F({},3)/{}/h{}", self.m, self.base.name(), self.hadamard_bits)
+    }
+
+    /// The uniform deployment default: canonical `F(4,3)`, all-8-bit —
+    /// today's one-globally-hard-coded operating point and the tuner's
+    /// built-in baseline.
+    pub fn uniform_default() -> Candidate {
+        Candidate { m: 4, base: Base::Canonical, hadamard_bits: 8 }
+    }
+}
+
+/// The full sweep: every base × m × Hadamard width (18 candidates, the
+/// uniform default included).
+pub fn default_grid() -> Vec<Candidate> {
+    let mut grid = Vec::new();
+    for base in Base::ALL {
+        for m in SUPPORTED_M {
+            for hadamard_bits in HADAMARD_BITS {
+                grid.push(Candidate { m, base, hadamard_bits });
+            }
+        }
+    }
+    grid
+}
+
+/// The CI smoke grid: the uniform default plus the paper's headline
+/// alternative (Legendre with a 9-bit Hadamard) — two candidates, enough
+/// to exercise selection, NetPlan emission and serve loading cheaply.
+pub fn tiny_grid() -> Vec<Candidate> {
+    vec![
+        Candidate::uniform_default(),
+        Candidate { m: 4, base: Base::Legendre, hadamard_bits: 9 },
+    ]
+}
+
+/// Resolve a grid name (`full` | `tiny`).
+pub fn grid_from_name(name: &str) -> Option<Vec<Candidate>> {
+    match name {
+        "full" => Some(default_grid()),
+        "tiny" => Some(tiny_grid()),
+        _ => None,
+    }
+}
+
+/// Valid grid names rendered `a|b` for CLI errors.
+pub fn grid_names() -> String {
+    "full|tiny".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grid_covers_the_space() {
+        let grid = default_grid();
+        assert_eq!(grid.len(), Base::ALL.len() * SUPPORTED_M.len() * HADAMARD_BITS.len());
+        assert!(grid.contains(&Candidate::uniform_default()));
+        // No duplicates.
+        for (i, a) in grid.iter().enumerate() {
+            assert!(!grid[i + 1..].contains(a), "duplicate candidate {a:?}");
+        }
+    }
+
+    #[test]
+    fn tiny_grid_contains_baseline_and_an_alternative() {
+        let grid = tiny_grid();
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0], Candidate::uniform_default());
+        assert_ne!(grid[1], grid[0]);
+    }
+
+    #[test]
+    fn candidate_quant_and_label() {
+        let c = Candidate { m: 6, base: Base::Chebyshev, hadamard_bits: 9 };
+        assert_eq!(c.quant().hadamard_bits, 9);
+        assert_eq!(c.quant().act_bits, 8);
+        assert_eq!(c.n(), 8);
+        assert_eq!(c.label(), "F(6,3)/chebyshev/h9");
+        assert_eq!(Candidate::uniform_default().quant(), QuantConfig::w8());
+    }
+
+    #[test]
+    fn grid_names_resolve() {
+        assert_eq!(grid_from_name("full").unwrap().len(), 18);
+        assert_eq!(grid_from_name("tiny").unwrap().len(), 2);
+        assert!(grid_from_name("huge").is_none());
+        assert_eq!(grid_names(), "full|tiny");
+    }
+}

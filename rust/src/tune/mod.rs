@@ -1,0 +1,791 @@
+//! Per-layer autotuning — searching the paper's operating space so each
+//! conv layer gets its *own* `(polynomial base, tile size m, Hadamard bit
+//! width)` instead of one globally hard-coded choice.
+//!
+//! The paper's whole point is that this operating point decides whether
+//! quantized accuracy survives; Fernandez-Marques et al. 2020 (ref [5])
+//! show the space should be searched per layer. This subsystem wires the
+//! repo's pieces into that search:
+//!
+//! ```text
+//!   nn/resnet (layer shapes, captured activations from data/synthcifar)
+//!        │
+//!        ▼
+//!   grid::default_grid  ──▶  cost::measure_candidate  per (layer, cand):
+//!   {base}×{m}×{h-bits}       err  = quantized layer vs f64 direct oracle
+//!        │                    perf = short engine runs through benchkit
+//!        ▼
+//!   select_winner (Pareto front + --max-err / --objective)
+//!        │
+//!        ▼
+//!   netplan::NetPlan  ──(JSON artifact)──▶  winoq serve --plan
+//!                                           (heterogeneous per-layer engines)
+//! ```
+//!
+//! Selection is budgeted: every candidate whose error exceeds the
+//! accuracy budget (`--max-err`, defaulting to the uniform
+//! canonical-`F(4,3)`-8-bit baseline's own measured error on that layer)
+//! is infeasible; among feasible candidates the [`Objective`] picks the
+//! winner ([`Objective::Balanced`], the default, minimizes error while
+//! refusing to give up more than ~10% of the baseline's throughput). The
+//! emitted [`NetPlan`](netplan::NetPlan) is versioned JSON that
+//! `serve::registry::ModelRegistry::register_netplan` rebuilds
+//! bit-identically (pinned by `rust/tests/tune_roundtrip.rs`).
+
+pub mod cost;
+pub mod grid;
+pub mod json;
+pub mod netplan;
+
+pub use grid::{default_grid, tiny_grid, Candidate};
+pub use netplan::{LayerPlan, NetPlan, NETPLAN_VERSION};
+
+use crate::benchkit;
+use crate::data::synthcifar;
+use crate::engine::{transform_weight_bank, EngineScratch};
+use crate::nn::tensor::Tensor;
+use crate::nn::winolayer::WinoConv2d;
+use crate::nn::{ConvMode, Params, ResNet18, ResNetCfg};
+use crate::wino::basis::Base;
+use crate::wino::matrix::Mat;
+use crate::wino::toomcook::WinogradPlan;
+use crate::wino::transform::WinoF;
+use anyhow::{ensure, Context, Result};
+use cost::{CostOpts, Measure};
+use std::collections::HashMap;
+
+/// What the tuner optimizes once the accuracy budget is satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize quantized error; throughput unconstrained.
+    Error,
+    /// Maximize throughput among candidates within the error budget.
+    Throughput,
+    /// Minimize error among candidates within the error budget that also
+    /// keep ≥ 90% of the baseline's throughput (the default).
+    Balanced,
+}
+
+impl Objective {
+    /// Table behind [`from_name`](Self::from_name)/[`names`](Self::names)
+    /// — the same single-registry pattern as [`Base::ALL`].
+    pub const ALL: [Objective; 3] =
+        [Objective::Error, Objective::Throughput, Objective::Balanced];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Error => "error",
+            Objective::Throughput => "throughput",
+            Objective::Balanced => "balanced",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Objective> {
+        Objective::ALL.into_iter().find(|o| o.name() == s)
+    }
+
+    /// Valid objective names rendered `a|b|c` for CLI errors.
+    pub fn names() -> String {
+        Objective::ALL.map(|o| o.name()).join("|")
+    }
+}
+
+/// Search configuration (CLI flags map onto this).
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    pub width_mult: f32,
+    pub num_classes: usize,
+    /// Synthetic parameter seed (recorded in the NetPlan).
+    pub seed: u64,
+    /// Calibration batch size (synthetic-CIFAR train split).
+    pub calib_batch: usize,
+    /// Activation calibration percentile (`--calib-pct`, 100 = max).
+    pub calib_pct: f64,
+    /// Absolute per-layer error budget; `None` = each layer's uniform
+    /// baseline error.
+    pub max_err: Option<f64>,
+    pub objective: Objective,
+    pub grid: Vec<Candidate>,
+    /// Tune only the first N eligible layers (0 = all) — the CI smoke
+    /// knob; untuned layers run direct convolution in the emitted plan.
+    pub max_layers: usize,
+    /// Cost-model knobs (see [`CostOpts`]).
+    pub err_images: usize,
+    pub bench_images: usize,
+    pub bench_warmup: usize,
+    pub bench_samples: usize,
+    /// End-to-end comparison batch (synthetic-CIFAR test split).
+    pub eval_batch: usize,
+    /// Throughput slack for [`Objective::Balanced`] (0.10 = may give up
+    /// 10% of baseline throughput).
+    pub throughput_slack: f64,
+    /// Per-layer progress on stderr.
+    pub verbose: bool,
+}
+
+impl Default for TuneConfig {
+    fn default() -> TuneConfig {
+        TuneConfig {
+            width_mult: 0.25,
+            num_classes: 10,
+            seed: 7,
+            calib_batch: 4,
+            calib_pct: 100.0,
+            max_err: None,
+            objective: Objective::Balanced,
+            grid: default_grid(),
+            max_layers: 0,
+            err_images: 2,
+            bench_images: 2,
+            bench_warmup: 1,
+            bench_samples: 3,
+            eval_batch: 8,
+            throughput_slack: 0.10,
+            verbose: false,
+        }
+    }
+}
+
+/// One measured candidate on one layer, with its selection flags.
+#[derive(Clone, Copy, Debug)]
+pub struct CandidateResult {
+    pub cand: Candidate,
+    pub measure: Measure,
+    /// Within the error budget (and, for `Balanced`, the throughput bar).
+    pub feasible: bool,
+    /// On the (error ↓, outputs/sec ↑) Pareto front of this layer.
+    pub pareto: bool,
+}
+
+/// One layer's full sweep.
+#[derive(Clone, Debug)]
+pub struct LayerResult {
+    pub prefix: String,
+    pub c: usize,
+    pub k: usize,
+    /// Input spatial size (square).
+    pub hw: usize,
+    /// Per-layer error budget the selection used.
+    pub budget: f64,
+    /// Index (into `candidates`) of the winner / the uniform baseline.
+    pub winner: usize,
+    pub baseline: usize,
+    pub candidates: Vec<CandidateResult>,
+}
+
+impl LayerResult {
+    pub fn winner_result(&self) -> &CandidateResult {
+        &self.candidates[self.winner]
+    }
+
+    pub fn baseline_result(&self) -> &CandidateResult {
+        &self.candidates[self.baseline]
+    }
+}
+
+/// End-to-end measurement of one whole network.
+#[derive(Clone, Debug)]
+pub struct EndToEnd {
+    /// Relative L2 of the quantized net's logits vs the float direct net.
+    pub logit_rel_l2: f64,
+    /// Median seconds per eval-batch forward.
+    pub seconds: f64,
+    pub images_per_sec: f64,
+    /// Winograd tiles per image in this net's own per-layer grids.
+    pub tiles_per_item: usize,
+    pub tiles_per_sec: f64,
+    /// Tiles/sec counted in the *uniform* net's grid for both sides —
+    /// work-normalized, so the tuned:uniform ratio equals the images/sec
+    /// ratio even when tile sizes differ per layer.
+    pub eq_tiles_per_sec: f64,
+}
+
+/// Everything one `winoq tune` run produces.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub plan: NetPlan,
+    pub layers: Vec<LayerResult>,
+    pub uniform: EndToEnd,
+    pub tuned: EndToEnd,
+    /// Layers whose winner differs from the uniform default.
+    pub changed_layers: usize,
+}
+
+/// Mark the (error ↓, outputs/sec ↑) Pareto front.
+fn pareto_flags(measures: &[Measure]) -> Vec<bool> {
+    measures
+        .iter()
+        .map(|a| {
+            !measures.iter().any(|b| {
+                b.err <= a.err
+                    && b.outputs_per_sec >= a.outputs_per_sec
+                    && (b.err < a.err || b.outputs_per_sec > a.outputs_per_sec)
+            })
+        })
+        .collect()
+}
+
+/// Feasibility + winner selection for one layer. Returns the feasibility
+/// flags and the winning index; if nothing is feasible (a user-set
+/// `--max-err` below every candidate) the minimum-error candidate wins.
+fn select_winner(
+    objective: Objective,
+    measures: &[Measure],
+    baseline: usize,
+    budget: f64,
+    slack: f64,
+) -> (Vec<bool>, usize) {
+    let tps_bar = match objective {
+        Objective::Balanced => measures[baseline].outputs_per_sec * (1.0 - slack),
+        _ => 0.0,
+    };
+    let feasible: Vec<bool> = measures
+        .iter()
+        .map(|m| m.err <= budget && m.outputs_per_sec >= tps_bar)
+        .collect();
+    let better = |a: &Measure, b: &Measure| -> bool {
+        match objective {
+            Objective::Error | Objective::Balanced => {
+                a.err < b.err || (a.err == b.err && a.outputs_per_sec > b.outputs_per_sec)
+            }
+            Objective::Throughput => {
+                a.outputs_per_sec > b.outputs_per_sec
+                    || (a.outputs_per_sec == b.outputs_per_sec && a.err < b.err)
+            }
+        }
+    };
+    let mut winner: Option<usize> = None;
+    for (i, m) in measures.iter().enumerate() {
+        if !feasible[i] {
+            continue;
+        }
+        let improves = match winner {
+            None => true,
+            Some(w) => better(m, &measures[w]),
+        };
+        if improves {
+            winner = Some(i);
+        }
+    }
+    let winner = winner.unwrap_or_else(|| {
+        // Budget unreachable: degrade gracefully to the most accurate
+        // candidate instead of failing the whole tune.
+        (0..measures.len())
+            .min_by(|&a, &b| measures[a].err.partial_cmp(&measures[b].err).unwrap())
+            .unwrap()
+    });
+    (feasible, winner)
+}
+
+/// The Winograd-eligible conv units the tuner sweeps — delegates to the
+/// single eligibility definition in [`ResNet18::wino_eligible_units`].
+pub fn eligible_layers(cfg: &ResNetCfg) -> Vec<(String, usize, usize)> {
+    ResNet18::wino_eligible_units(cfg)
+}
+
+/// Build the (float, then per-layer-calibrated) network a NetPlan
+/// describes, straight from its parameter set — the same lowering the
+/// serve registry performs through its plan cache, without the cache.
+/// `rust/tests/tune_roundtrip.rs` pins the two bit-identical.
+pub fn build_plan_net(plan: &NetPlan, params: &Params) -> Result<ResNet18> {
+    let (nm, nb, nq) = plan
+        .nominal()
+        .context("NetPlan has no layers — nothing to build")?;
+    let cfg = ResNetCfg {
+        width_mult: plan.width_mult,
+        num_classes: plan.num_classes,
+        mode: ConvMode::Winograd { m: nm, base: nb, quant: Some(nq) },
+    };
+    let mut wfs: HashMap<(usize, Base), WinoF> = HashMap::new();
+    for l in &plan.layers {
+        wfs.entry((l.m, l.base))
+            .or_insert_with(|| WinoF::new(&WinogradPlan::new(l.m, 3), l.base));
+    }
+    let eligible = eligible_layers(&cfg);
+    for l in &plan.layers {
+        ensure!(
+            eligible.iter().any(|(p, _, _)| p == &l.layer),
+            "NetPlan names layer {:?}, which is not a Winograd-eligible unit of this net",
+            l.layer
+        );
+    }
+    let mut net = ResNet18::from_params_per_layer(cfg, params.clone(), &|prefix, w| {
+        plan.layer(prefix)
+            .map(|l| WinoConv2d::with_plan(wfs[&(l.m, l.base)].clone(), w))
+    });
+    let (calib, _) =
+        synthcifar::generate_batch(synthcifar::TRAIN_SEED, 0, plan.calib_batch.max(1));
+    net.calibrate_quant_with(&calib, &|prefix| {
+        plan.layer(prefix).map(|l| (l.quant, plan.calib_pct))
+    });
+    Ok(net)
+}
+
+fn end_to_end(
+    net: &ResNet18,
+    eval_x: &Tensor,
+    ref_logits: &[f64],
+    eq_tiles_per_item: usize,
+    warmup: usize,
+    samples: usize,
+) -> EndToEnd {
+    let logits = net.forward(eval_x);
+    let logit_rel_l2 = cost::rel_l2(&logits.data, ref_logits);
+    let mut scratch = EngineScratch::new();
+    let s = benchkit::bench(warmup, samples.max(1), || {
+        net.forward_with_scratch(eval_x, &mut scratch)
+    });
+    let images = eval_x.dims[0];
+    let tiles_per_item = net.wino_tiles_per_item(eval_x.dims[2]);
+    let sec = s.median.max(1e-12);
+    EndToEnd {
+        logit_rel_l2,
+        seconds: s.median,
+        images_per_sec: images as f64 / sec,
+        tiles_per_item,
+        tiles_per_sec: (tiles_per_item * images) as f64 / sec,
+        eq_tiles_per_sec: (eq_tiles_per_item * images) as f64 / sec,
+    }
+}
+
+/// Run the whole search on a synthetic (He-initialised, calibrated)
+/// ResNet18: sweep the grid per layer, select winners, assemble the
+/// NetPlan, and measure the tuned network against the uniform
+/// canonical-`F(4,3)`-8-bit baseline end to end.
+pub fn tune_synthetic(cfg: &TuneConfig) -> Result<TuneOutcome> {
+    ensure!(!cfg.grid.is_empty(), "empty candidate grid");
+    ensure!(
+        cfg.calib_pct > 0.0 && cfg.calib_pct <= 100.0,
+        "--calib-pct must be in (0, 100], got {}",
+        cfg.calib_pct
+    );
+    let direct_cfg = ResNetCfg {
+        width_mult: cfg.width_mult,
+        num_classes: cfg.num_classes,
+        mode: ConvMode::Direct,
+    };
+    let params = ResNet18::init_params(&direct_cfg, cfg.seed);
+    let direct = ResNet18::from_params(direct_cfg, params.clone());
+    let (calib, _) =
+        synthcifar::generate_batch(synthcifar::TRAIN_SEED, 0, cfg.calib_batch.max(1));
+    let captured = direct.capture_wino_inputs(&calib);
+
+    let mut layers = eligible_layers(&direct_cfg);
+    if cfg.max_layers > 0 {
+        layers.truncate(cfg.max_layers);
+    }
+
+    let mut grid = cfg.grid.clone();
+    let baseline_cand = Candidate::uniform_default();
+    if !grid.contains(&baseline_cand) {
+        grid.push(baseline_cand);
+    }
+    let baseline = grid.iter().position(|c| *c == baseline_cand).unwrap();
+
+    let mut wfs: HashMap<(usize, Base), WinoF> = HashMap::new();
+    let opts = CostOpts {
+        err_images: cfg.err_images,
+        bench_images: cfg.bench_images,
+        bench_warmup: cfg.bench_warmup,
+        bench_samples: cfg.bench_samples,
+        calib_pct: cfg.calib_pct,
+    };
+
+    let mut layer_results = Vec::with_capacity(layers.len());
+    let mut plan_layers = Vec::with_capacity(layers.len());
+    for (li, (prefix, c, k)) in layers.iter().enumerate() {
+        let weights = params
+            .get(&format!("{prefix}.w"))
+            .with_context(|| format!("missing weights for {prefix}"))?;
+        let acts = captured
+            .get(prefix)
+            .with_context(|| format!("no captured activations for {prefix}"))?;
+        if cfg.verbose {
+            eprintln!(
+                "tune: layer {}/{} {prefix} (C={c}, K={k}, {}x{}) over {} candidates…",
+                li + 1,
+                layers.len(),
+                acts.dims[2],
+                acts.dims[3],
+                grid.len()
+            );
+        }
+        // One float weight transform per distinct (m, base) — candidates
+        // differing only in bit width reuse the bank.
+        let mut banks: HashMap<(usize, Base), Vec<Vec<Mat>>> = HashMap::new();
+        let measures: Vec<Measure> = grid
+            .iter()
+            .map(|cand| {
+                let key = (cand.m, cand.base);
+                let wf = wfs
+                    .entry(key)
+                    .or_insert_with(|| WinoF::new(&WinogradPlan::new(cand.m, 3), cand.base))
+                    .clone();
+                let bank = banks
+                    .entry(key)
+                    .or_insert_with(|| transform_weight_bank(&wf, weights));
+                cost::measure_candidate(&wf, bank, *cand, weights, acts, &opts)
+            })
+            .collect();
+        let budget = cfg.max_err.unwrap_or(measures[baseline].err);
+        let (feasible, winner) =
+            select_winner(cfg.objective, &measures, baseline, budget, cfg.throughput_slack);
+        let pareto = pareto_flags(&measures);
+        plan_layers.push(LayerPlan {
+            layer: prefix.clone(),
+            m: grid[winner].m,
+            base: grid[winner].base,
+            quant: grid[winner].quant(),
+        });
+        layer_results.push(LayerResult {
+            prefix: prefix.clone(),
+            c: *c,
+            k: *k,
+            hw: acts.dims[2],
+            budget,
+            winner,
+            baseline,
+            candidates: grid
+                .iter()
+                .zip(&measures)
+                .zip(feasible.iter().zip(&pareto))
+                .map(|((cand, measure), (f, p))| CandidateResult {
+                    cand: *cand,
+                    measure: *measure,
+                    feasible: *f,
+                    pareto: *p,
+                })
+                .collect(),
+        });
+    }
+
+    let plan = NetPlan {
+        version: NETPLAN_VERSION,
+        model: "resnet18-synthetic".to_string(),
+        width_mult: cfg.width_mult,
+        num_classes: cfg.num_classes,
+        image_hw: synthcifar::IMAGE_HW,
+        seed: cfg.seed,
+        calib_batch: cfg.calib_batch.max(1),
+        calib_pct: cfg.calib_pct,
+        layers: plan_layers,
+    };
+    let changed_layers = layer_results
+        .iter()
+        .filter(|lr| lr.candidates[lr.winner].cand != baseline_cand)
+        .count();
+
+    // End-to-end: tuned vs a uniform-baseline net over the *same* layer
+    // set and the *same* calibration percentile (so a truncated smoke run
+    // — or a --calib-pct run — compares like with like: the per-layer
+    // budget measurements also calibrate every candidate, the baseline
+    // included, at cfg.calib_pct), both against the float direct net's
+    // logits.
+    let uniform_plan = NetPlan {
+        layers: plan
+            .layers
+            .iter()
+            .map(|l| LayerPlan {
+                layer: l.layer.clone(),
+                m: baseline_cand.m,
+                base: baseline_cand.base,
+                quant: baseline_cand.quant(),
+            })
+            .collect(),
+        ..plan.clone()
+    };
+    let tuned_net = build_plan_net(&plan, &params)?;
+    let uniform_net = build_plan_net(&uniform_plan, &params)?;
+    let (eval_x, _) =
+        synthcifar::generate_batch(synthcifar::TEST_SEED, 0, cfg.eval_batch.max(1));
+    let ref_logits: Vec<f64> = direct.forward(&eval_x).data.iter().map(|&v| v as f64).collect();
+    let eq_tiles = uniform_net.wino_tiles_per_item(eval_x.dims[2]);
+    let uniform = end_to_end(
+        &uniform_net,
+        &eval_x,
+        &ref_logits,
+        eq_tiles,
+        cfg.bench_warmup,
+        cfg.bench_samples,
+    );
+    let tuned = end_to_end(
+        &tuned_net,
+        &eval_x,
+        &ref_logits,
+        eq_tiles,
+        cfg.bench_warmup,
+        cfg.bench_samples,
+    );
+    Ok(TuneOutcome { plan, layers: layer_results, uniform, tuned, changed_layers })
+}
+
+fn candidate_json(cand: &Candidate, m: &Measure) -> String {
+    format!(
+        concat!(
+            "\"m\": {}, \"base\": \"{}\", \"hadamard_bits\": {}, ",
+            "\"err\": {:e}, \"seconds\": {:e}, \"tiles_per_sec\": {:.1}, ",
+            "\"outputs_per_sec\": {:.1}"
+        ),
+        cand.m, cand.base.name(), cand.hadamard_bits,
+        m.err, m.seconds, m.tiles_per_sec, m.outputs_per_sec,
+    )
+}
+
+fn end_to_end_json(e: &EndToEnd) -> String {
+    format!(
+        concat!(
+            "{{\"logit_rel_l2\": {:e}, \"seconds\": {:e}, ",
+            "\"images_per_sec\": {:.2}, \"tiles_per_item\": {}, ",
+            "\"tiles_per_sec\": {:.1}, \"uniform_equiv_tiles_per_sec\": {:.1}}}"
+        ),
+        e.logit_rel_l2, e.seconds, e.images_per_sec, e.tiles_per_item,
+        e.tiles_per_sec, e.eq_tiles_per_sec,
+    )
+}
+
+/// Render the `BENCH_tune.json` report: per-layer winner table, every
+/// candidate's error/throughput, and the end-to-end tuned-vs-uniform
+/// comparison. The throughput ratio is work-normalized (both sides
+/// counted in the uniform net's tiles), so `≥ 0.9` means the tuned net
+/// kept at least 90% of the baseline's speed.
+pub fn bench_json(cfg: &TuneConfig, out: &TuneOutcome) -> String {
+    let mut s = format!(
+        concat!(
+            "{{\n\"bench\": \"tune\", \"netplan_version\": {}, \"model\": \"{}\", ",
+            "\"width_mult\": {}, \"objective\": \"{}\", \"max_err\": {}, ",
+            "\"calib_pct\": {}, \"calib_batch\": {}, \"grid_size\": {}, ",
+            "\"layers_tuned\": {}, \"layers_changed_vs_uniform\": {},\n",
+            "\"layers\": [\n"
+        ),
+        out.plan.version,
+        json::escape(&out.plan.model),
+        out.plan.width_mult,
+        cfg.objective.name(),
+        cfg.max_err.map_or("null".to_string(), |e| format!("{e:e}")),
+        out.plan.calib_pct,
+        out.plan.calib_batch,
+        out.layers.first().map_or(0, |l| l.candidates.len()),
+        out.layers.len(),
+        out.changed_layers,
+    );
+    for (i, lr) in out.layers.iter().enumerate() {
+        let w = lr.winner_result();
+        let b = lr.baseline_result();
+        s.push_str(&format!(
+            concat!(
+                "  {{\"layer\": \"{}\", \"c\": {}, \"k\": {}, \"hw\": {}, ",
+                "\"budget\": {:e},\n   \"winner\": {{{}}},\n   \"baseline\": {{{}}},\n",
+                "   \"candidates\": [\n"
+            ),
+            json::escape(&lr.prefix),
+            lr.c,
+            lr.k,
+            lr.hw,
+            lr.budget,
+            candidate_json(&w.cand, &w.measure),
+            candidate_json(&b.cand, &b.measure),
+        ));
+        for (ci, cr) in lr.candidates.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{{}, \"feasible\": {}, \"pareto\": {}}}{}\n",
+                candidate_json(&cr.cand, &cr.measure),
+                cr.feasible,
+                cr.pareto,
+                if ci + 1 == lr.candidates.len() { "" } else { "," },
+            ));
+        }
+        s.push_str(&format!(
+            "   ]}}{}\n",
+            if i + 1 == out.layers.len() { "" } else { "," }
+        ));
+    }
+    let ratio = if out.uniform.eq_tiles_per_sec > 0.0 {
+        out.tuned.eq_tiles_per_sec / out.uniform.eq_tiles_per_sec
+    } else {
+        0.0
+    };
+    let err_ratio = if out.uniform.logit_rel_l2 > 0.0 {
+        out.tuned.logit_rel_l2 / out.uniform.logit_rel_l2
+    } else {
+        0.0
+    };
+    s.push_str(&format!(
+        concat!(
+            "],\n\"endtoend\": {{\"eval_batch\": {}, \"uniform\": {}, \"tuned\": {}, ",
+            "\"err_ratio_tuned_vs_uniform\": {:.4}, ",
+            "\"tiles_per_sec_ratio_tuned_vs_uniform\": {:.4}}}\n}}\n"
+        ),
+        cfg.eval_batch.max(1),
+        end_to_end_json(&out.uniform),
+        end_to_end_json(&out.tuned),
+        err_ratio,
+        ratio,
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scheme::QuantConfig;
+
+    fn m(err: f64, ops: f64) -> Measure {
+        Measure { err, seconds: 1.0, tiles_per_sec: ops, outputs_per_sec: ops }
+    }
+
+    #[test]
+    fn pareto_front_flags() {
+        // (err, ops): b dominates c; a and b are on the front; d ties a on
+        // err but is slower — dominated.
+        let ms = [m(1.0, 10.0), m(2.0, 20.0), m(3.0, 15.0), m(1.0, 5.0)];
+        assert_eq!(pareto_flags(&ms), vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn balanced_minimizes_error_within_throughput_bar() {
+        // Baseline idx 0. Candidate 1: lower err, same speed — wins.
+        // Candidate 2: even lower err but 50% slower — infeasible.
+        let ms = [m(1.0, 100.0), m(0.5, 99.0), m(0.1, 50.0)];
+        let (feasible, w) = select_winner(Objective::Balanced, &ms, 0, 1.0, 0.10);
+        assert_eq!(feasible, vec![true, true, false]);
+        assert_eq!(w, 1);
+    }
+
+    #[test]
+    fn throughput_maximizes_speed_within_budget() {
+        let ms = [m(1.0, 100.0), m(0.9, 300.0), m(2.0, 900.0)];
+        let (feasible, w) = select_winner(Objective::Throughput, &ms, 0, 1.0, 0.10);
+        assert_eq!(feasible, vec![true, true, false]);
+        assert_eq!(w, 1);
+    }
+
+    #[test]
+    fn error_objective_ignores_throughput() {
+        let ms = [m(1.0, 100.0), m(0.2, 1.0)];
+        let (_, w) = select_winner(Objective::Error, &ms, 0, 1.0, 0.10);
+        assert_eq!(w, 1);
+    }
+
+    #[test]
+    fn unreachable_budget_falls_back_to_min_error() {
+        let ms = [m(1.0, 100.0), m(0.5, 10.0)];
+        let (feasible, w) = select_winner(Objective::Balanced, &ms, 0, 1e-9, 0.10);
+        assert_eq!(feasible, vec![false, false]);
+        assert_eq!(w, 1, "fallback must be the most accurate candidate");
+    }
+
+    #[test]
+    fn objective_names_round_trip() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::from_name(o.name()), Some(o));
+        }
+        assert_eq!(Objective::from_name("speed"), None);
+        assert_eq!(Objective::names(), "error|throughput|balanced");
+    }
+
+    #[test]
+    fn eligible_layer_listing() {
+        let cfg = ResNetCfg {
+            width_mult: 0.25,
+            num_classes: 10,
+            mode: ConvMode::Direct,
+        };
+        let layers = eligible_layers(&cfg);
+        assert_eq!(layers.len(), 14);
+        assert_eq!(layers[0].0, "stem");
+        assert!(layers.iter().all(|(p, _, _)| !p.ends_with("down")));
+    }
+
+    #[test]
+    fn tiny_tune_emits_a_consistent_plan() {
+        // The CI-smoke shape of the search: 2 layers × 2 candidates.
+        let cfg = TuneConfig {
+            grid: tiny_grid(),
+            max_layers: 2,
+            calib_batch: 2,
+            err_images: 1,
+            bench_images: 1,
+            bench_warmup: 0,
+            bench_samples: 1,
+            eval_batch: 2,
+            objective: Objective::Error,
+            ..Default::default()
+        };
+        let out = tune_synthetic(&cfg).unwrap();
+        assert_eq!(out.plan.layers.len(), 2);
+        assert_eq!(out.plan.layers[0].layer, "stem");
+        for lr in &out.layers {
+            assert_eq!(lr.candidates.len(), 2);
+            let w = lr.winner_result();
+            let b = lr.baseline_result();
+            assert!(
+                w.measure.err <= b.measure.err,
+                "{}: winner err {} > baseline {}",
+                lr.prefix,
+                w.measure.err,
+                b.measure.err
+            );
+            assert!(lr.baseline_result().cand == Candidate::uniform_default());
+        }
+        // The 9-bit-Hadamard alternative strictly tightens layer error, so
+        // under the error objective the plan must leave the uniform default.
+        assert!(out.changed_layers >= 1, "no layer left the uniform default");
+        // Tuned end-to-end error cannot exceed the uniform baseline's
+        // (same layers, each at most as erroneous).
+        assert!(
+            out.tuned.logit_rel_l2 <= out.uniform.logit_rel_l2 * 1.01,
+            "tuned {} vs uniform {}",
+            out.tuned.logit_rel_l2,
+            out.uniform.logit_rel_l2
+        );
+        // NetPlan artifact round-trips.
+        let reloaded = NetPlan::from_json(&out.plan.to_json()).unwrap();
+        assert_eq!(reloaded, out.plan);
+        // Report JSON carries the stable keys CI greps.
+        let report = bench_json(&cfg, &out);
+        for key in [
+            "\"bench\": \"tune\"",
+            "\"layers_changed_vs_uniform\"",
+            "\"winner\"",
+            "\"endtoend\"",
+            "\"tiles_per_sec_ratio_tuned_vs_uniform\"",
+        ] {
+            assert!(report.contains(key), "missing {key}");
+        }
+        // And parses back as JSON (the writer emits what the reader reads).
+        let doc = json::parse(&report).unwrap();
+        assert_eq!(
+            doc.get("layers").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert!(doc.get("endtoend").unwrap().get("tuned").is_some());
+    }
+
+    #[test]
+    fn build_plan_net_rejects_unknown_layers() {
+        let plan = NetPlan {
+            version: NETPLAN_VERSION,
+            model: "resnet18-synthetic".into(),
+            width_mult: 0.25,
+            num_classes: 10,
+            image_hw: 32,
+            seed: 3,
+            calib_batch: 1,
+            calib_pct: 100.0,
+            layers: vec![LayerPlan {
+                layer: "s9b9.conv9".into(),
+                m: 4,
+                base: Base::Legendre,
+                quant: QuantConfig::w8(),
+            }],
+        };
+        let cfg = ResNetCfg {
+            width_mult: 0.25,
+            num_classes: 10,
+            mode: ConvMode::Direct,
+        };
+        let params = ResNet18::init_params(&cfg, 3);
+        let err = build_plan_net(&plan, &params).unwrap_err();
+        assert!(err.to_string().contains("s9b9.conv9"), "{err}");
+    }
+}

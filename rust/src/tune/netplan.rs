@@ -1,0 +1,352 @@
+//! NetPlan — the versioned, deployable artifact the autotuner emits: one
+//! Winograd operating point `(m, base, bit widths)` per conv layer, plus
+//! everything a server needs to rebuild the exact same network
+//! (parameter seed, width, calibration recipe).
+//!
+//! `winoq tune` writes one (`NetPlan::save`), `winoq serve --plan` loads
+//! it (`NetPlan::load`) and the registry builds a **heterogeneous**
+//! per-layer-engine network from it
+//! (`serve::registry::ModelRegistry::register_netplan`). The format is
+//! plain JSON with an explicit `netplan_version` so older servers reject
+//! newer plans loudly instead of misreading them; layers absent from the
+//! plan run direct convolution.
+
+use super::json::{self, escape, Json};
+use crate::quant::scheme::QuantConfig;
+use crate::wino::basis::Base;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The NetPlan schema version this build writes and accepts.
+pub const NETPLAN_VERSION: u64 = 1;
+
+/// Tile sizes the tuner grid sweeps (and a loaded plan may use).
+pub const SUPPORTED_M: [usize; 3] = [2, 4, 6];
+
+/// One conv layer's chosen operating point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// Conv-unit prefix, e.g. `"stem"` or `"s2b1.conv2"`.
+    pub layer: String,
+    /// Winograd output tile size `m` (kernel is always 3×3 here).
+    pub m: usize,
+    pub base: Base,
+    /// Full per-stage bit widths (the tuner varies `hadamard_bits`; the
+    /// rest are recorded explicitly so future grids can widen the sweep
+    /// without a schema change).
+    pub quant: QuantConfig,
+}
+
+/// A tuned network: per-layer operating points + reconstruction recipe.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetPlan {
+    pub version: u64,
+    /// Model family tag; `"resnet18-synthetic"` is the only source today.
+    pub model: String,
+    pub width_mult: f32,
+    pub num_classes: usize,
+    /// Square input size (synthetic CIFAR = 32).
+    pub image_hw: usize,
+    /// Parameter seed (synthetic source) — pins the exact weights.
+    pub seed: u64,
+    /// Calibration recipe: batch size and activation percentile, so a
+    /// server reproduces the tuner's quantizer scales bit-for-bit.
+    pub calib_batch: usize,
+    pub calib_pct: f64,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl NetPlan {
+    /// The plan entry for a conv-unit prefix, if tuned.
+    pub fn layer(&self, prefix: &str) -> Option<&LayerPlan> {
+        self.layers.iter().find(|l| l.layer == prefix)
+    }
+
+    /// The modal `(m, base, quant)` across layers — the nominal label a
+    /// heterogeneous network carries in its `ConvMode` (reporting only).
+    pub fn nominal(&self) -> Option<(usize, Base, QuantConfig)> {
+        let mut best: Option<(usize, Base, QuantConfig)> = None;
+        let mut best_count = 0;
+        for l in &self.layers {
+            let key = (l.m, l.base, l.quant);
+            let count = self
+                .layers
+                .iter()
+                .filter(|o| (o.m, o.base, o.quant) == key)
+                .count();
+            if count > best_count {
+                best_count = count;
+                best = Some(key);
+            }
+        }
+        best
+    }
+
+    /// Serialize to the versioned JSON artifact (stable key order).
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            concat!(
+                "{{\n  \"netplan_version\": {},\n  \"model\": \"{}\",\n",
+                "  \"width_mult\": {},\n  \"num_classes\": {},\n",
+                "  \"image_hw\": {},\n  \"seed\": {},\n",
+                "  \"calib\": {{\"batch\": {}, \"pct\": {}}},\n  \"layers\": [\n"
+            ),
+            self.version,
+            escape(&self.model),
+            self.width_mult,
+            self.num_classes,
+            self.image_hw,
+            self.seed,
+            self.calib_batch,
+            self.calib_pct,
+        );
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push_str(&format!(
+                concat!(
+                    "    {{\"layer\": \"{}\", \"m\": {}, \"base\": \"{}\", ",
+                    "\"act_bits\": {}, \"weight_bits\": {}, ",
+                    "\"hadamard_bits\": {}, \"out_bits\": {}}}{}\n"
+                ),
+                escape(&l.layer),
+                l.m,
+                l.base.name(),
+                l.quant.act_bits,
+                l.quant.weight_bits,
+                l.quant.hadamard_bits,
+                l.quant.out_bits,
+                if i + 1 == self.layers.len() { "" } else { "," },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse and validate a NetPlan JSON document.
+    pub fn from_json(text: &str) -> Result<NetPlan> {
+        let doc = json::parse(text).context("parsing NetPlan JSON")?;
+        let version = doc
+            .get("netplan_version")
+            .and_then(Json::as_u64)
+            .context("NetPlan is missing netplan_version")?;
+        if version != NETPLAN_VERSION {
+            bail!(
+                "NetPlan version {version} is not supported (this build reads v{NETPLAN_VERSION})"
+            );
+        }
+        let calib = member(&doc, "calib", "NetPlan")?;
+        let calib_batch = calib
+            .get("batch")
+            .and_then(Json::as_u64)
+            .context("NetPlan calib.batch must be a non-negative integer")?
+            as usize;
+        let calib_pct = calib
+            .get("pct")
+            .and_then(Json::as_f64)
+            .context("NetPlan calib.pct must be a number")?;
+        if !(calib_pct > 0.0 && calib_pct <= 100.0) {
+            bail!("NetPlan calib.pct {calib_pct} out of (0, 100]");
+        }
+        let mut layers: Vec<LayerPlan> = Vec::new();
+        for (i, l) in member(&doc, "layers", "NetPlan")?
+            .as_arr()
+            .context("NetPlan layers must be an array")?
+            .iter()
+            .enumerate()
+        {
+            let what = format!("NetPlan layer {i}");
+            let m = member(l, "m", &what)?
+                .as_u64()
+                .with_context(|| format!("{what} m must be an integer"))?
+                as usize;
+            if !SUPPORTED_M.contains(&m) {
+                bail!("{what} m = {m} not in the supported set {SUPPORTED_M:?}");
+            }
+            let base_name = member(l, "base", &what)?
+                .as_str()
+                .with_context(|| format!("{what} base must be a string"))?;
+            let base = Base::from_name(base_name).with_context(|| {
+                format!(
+                    "{what} has unknown base {base_name:?} (valid: {})",
+                    Base::names()
+                )
+            })?;
+            let layer = member(l, "layer", &what)?
+                .as_str()
+                .with_context(|| format!("{what} layer must be a string"))?
+                .to_string();
+            if layers.iter().any(|p| p.layer == layer) {
+                bail!("NetPlan names layer {layer:?} twice");
+            }
+            layers.push(LayerPlan {
+                layer,
+                m,
+                base,
+                quant: QuantConfig {
+                    act_bits: bits(l, "act_bits", &what)?,
+                    weight_bits: bits(l, "weight_bits", &what)?,
+                    hadamard_bits: bits(l, "hadamard_bits", &what)?,
+                    out_bits: bits(l, "out_bits", &what)?,
+                },
+            });
+        }
+        Ok(NetPlan {
+            version,
+            model: member(&doc, "model", "NetPlan")?
+                .as_str()
+                .context("NetPlan model must be a string")?
+                .to_string(),
+            width_mult: member(&doc, "width_mult", "NetPlan")?
+                .as_f64()
+                .context("NetPlan width_mult must be a number")? as f32,
+            num_classes: uint(&doc, "num_classes")? as usize,
+            image_hw: uint(&doc, "image_hw")? as usize,
+            seed: uint(&doc, "seed")?,
+            calib_batch,
+            calib_pct,
+            layers,
+        })
+    }
+
+    /// Write the artifact to disk. Refuses a seed at or above 2⁵³ — the
+    /// JSON reader's exact-integer limit — so a plan can never emit an
+    /// artifact it (or a server) cannot reload.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if self.seed >= (1u64 << 53) {
+            bail!(
+                "NetPlan seed {} exceeds the JSON exact-integer limit (2^53) and \
+                 could not be reloaded; pick a smaller seed",
+                self.seed
+            );
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing NetPlan {path:?}"))
+    }
+
+    /// Load and validate an artifact from disk.
+    pub fn load(path: &Path) -> Result<NetPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading NetPlan {path:?}"))?;
+        Self::from_json(&text).with_context(|| format!("in NetPlan {path:?}"))
+    }
+}
+
+/// Required-member lookup with a contextual error.
+fn member<'a>(doc: &'a Json, key: &str, what: &str) -> Result<&'a Json> {
+    doc.get(key)
+        .with_context(|| format!("{what} is missing {key:?}"))
+}
+
+/// Required non-negative integer member of the top-level document.
+fn uint(doc: &Json, key: &str) -> Result<u64> {
+    member(doc, key, "NetPlan")?
+        .as_u64()
+        .with_context(|| format!("NetPlan {key:?} must be a non-negative integer"))
+}
+
+/// Required bit-width member, range-checked to the quantizer's 2..=24.
+fn bits(l: &Json, key: &str, what: &str) -> Result<u32> {
+    let b = member(l, key, what)?
+        .as_u64()
+        .with_context(|| format!("{what} {key:?} must be an integer"))?;
+    if !(2..=24).contains(&b) {
+        bail!("{what} {key} = {b} out of the supported 2..=24");
+    }
+    Ok(b as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> NetPlan {
+        NetPlan {
+            version: NETPLAN_VERSION,
+            model: "resnet18-synthetic".into(),
+            width_mult: 0.25,
+            num_classes: 10,
+            image_hw: 32,
+            seed: 7,
+            calib_batch: 4,
+            calib_pct: 99.5,
+            layers: vec![
+                LayerPlan {
+                    layer: "stem".into(),
+                    m: 4,
+                    base: Base::Legendre,
+                    quant: QuantConfig::w8_h9(),
+                },
+                LayerPlan {
+                    layer: "s0b0.conv1".into(),
+                    m: 6,
+                    base: Base::Canonical,
+                    quant: QuantConfig::w8(),
+                },
+                LayerPlan {
+                    layer: "s0b0.conv2".into(),
+                    m: 4,
+                    base: Base::Legendre,
+                    quant: QuantConfig::w8_h9(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let plan = sample();
+        let reloaded = NetPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, reloaded);
+    }
+
+    #[test]
+    fn lookup_and_nominal() {
+        let plan = sample();
+        assert_eq!(plan.layer("s0b0.conv1").unwrap().m, 6);
+        assert!(plan.layer("absent").is_none());
+        // Two of three layers run (4, Legendre, w8_h9) — the modal label.
+        assert_eq!(
+            plan.nominal(),
+            Some((4, Base::Legendre, QuantConfig::w8_h9()))
+        );
+    }
+
+    #[test]
+    fn rejects_future_versions_and_bad_fields() {
+        let plan = sample();
+        let bumped = plan.to_json().replace(
+            "\"netplan_version\": 1",
+            "\"netplan_version\": 99",
+        );
+        let err = NetPlan::from_json(&bumped).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+
+        let bad_m = plan.to_json().replace("\"m\": 6", "\"m\": 5");
+        assert!(NetPlan::from_json(&bad_m).is_err(), "m=5 must be rejected");
+
+        let bad_base = plan.to_json().replace("\"canonical\"", "\"hermite\"");
+        let err = NetPlan::from_json(&bad_base).unwrap_err();
+        assert!(format!("{err:#}").contains("hermite"), "{err:#}");
+
+        let dup = plan
+            .to_json()
+            .replace("\"layer\": \"s0b0.conv2\"", "\"layer\": \"stem\"");
+        assert!(NetPlan::from_json(&dup).is_err(), "duplicate layer must be rejected");
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("winoq-netplan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let plan = sample();
+        plan.save(&path).unwrap();
+        assert_eq!(NetPlan::load(&path).unwrap(), plan);
+        // A seed the JSON reader could not reload must be refused at
+        // write time, not discovered at serve time.
+        let mut unrepresentable = sample();
+        unrepresentable.seed = 1u64 << 53;
+        let err = unrepresentable.save(&path).unwrap_err();
+        assert!(err.to_string().contains("2^53"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

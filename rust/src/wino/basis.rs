@@ -40,6 +40,12 @@ pub enum Base {
 }
 
 impl Base {
+    /// Every implemented base, in display order. This is the single table
+    /// behind [`from_name`](Self::from_name) and [`names`](Self::names), so
+    /// adding a base automatically extends name parsing, CLI error
+    /// messages and the tuner's candidate grid.
+    pub const ALL: [Base; 3] = [Base::Canonical, Base::Legendre, Base::Chebyshev];
+
     pub fn name(&self) -> &'static str {
         match self {
             Base::Canonical => "canonical",
@@ -49,12 +55,13 @@ impl Base {
     }
 
     pub fn from_name(s: &str) -> Option<Base> {
-        match s {
-            "canonical" => Some(Base::Canonical),
-            "legendre" => Some(Base::Legendre),
-            "chebyshev" => Some(Base::Chebyshev),
-            _ => None,
-        }
+        Base::ALL.into_iter().find(|b| b.name() == s)
+    }
+
+    /// The valid base names rendered `a|b|c` — what CLI errors print so an
+    /// unknown `--base` tells the user the accepted spellings.
+    pub fn names() -> String {
+        Base::ALL.map(|b| b.name()).join("|")
     }
 }
 
@@ -244,9 +251,18 @@ mod tests {
 
     #[test]
     fn base_names_roundtrip() {
-        for b in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+        for b in Base::ALL {
             assert_eq!(Base::from_name(b.name()), Some(b));
         }
         assert_eq!(Base::from_name("hermite"), None);
+    }
+
+    #[test]
+    fn names_lists_every_base() {
+        let names = Base::names();
+        assert_eq!(names, "canonical|legendre|chebyshev");
+        for b in Base::ALL {
+            assert!(names.contains(b.name()));
+        }
     }
 }

@@ -1,0 +1,149 @@
+//! Tune-subsystem integration pins:
+//!
+//! 1. the exact-arithmetic property behind every tuner candidate — the
+//!    base-change pair satisfies `P·P⁻¹ = P⁻¹·P = I` *exactly* (over
+//!    rationals) for every base × transform size the grid sweeps;
+//! 2. the tune → serve round trip — a NetPlan serialized to JSON,
+//!    reloaded, and registered through the serving registry (plan cache,
+//!    weight banks, `from_transformed` lowering) produces per-layer
+//!    forwards **bit-identical** to engines built directly from the same
+//!    per-layer parameters (`tune::build_plan_net`'s cache-free lowering).
+
+use winoq::nn::layers::Conv2dCfg;
+use winoq::nn::{ResNet18, ResNetCfg};
+use winoq::quant::QuantConfig;
+use winoq::serve::ModelRegistry;
+use winoq::tune::netplan::{LayerPlan, NetPlan, NETPLAN_VERSION};
+use winoq::tune::{build_plan_net, default_grid};
+use winoq::wino::basis::{Base, BaseChange};
+use winoq::wino::matrix::RatMat;
+
+#[test]
+fn base_change_inverse_is_exact_for_every_grid_candidate() {
+    // Every (base, n = m + 2) pair the tuner can put in a NetPlan must
+    // have an exactly-invertible base change — the algebraic cancellation
+    // the paper's eq. 4 relies on. Checked over rationals, not floats.
+    for cand in default_grid() {
+        let n = cand.n();
+        let bc = BaseChange::new(cand.base, n);
+        let id = RatMat::identity(n);
+        assert_eq!(
+            bc.p.matmul(&bc.p_inv),
+            id,
+            "P·P⁻¹ ≠ I for {} n={n}",
+            cand.base.name()
+        );
+        assert_eq!(
+            bc.p_inv.matmul(&bc.p),
+            id,
+            "P⁻¹·P ≠ I for {} n={n}",
+            cand.base.name()
+        );
+    }
+}
+
+fn heterogeneous_plan() -> NetPlan {
+    NetPlan {
+        version: NETPLAN_VERSION,
+        model: "resnet18-synthetic".into(),
+        width_mult: 0.25,
+        num_classes: 10,
+        image_hw: 32,
+        seed: 11,
+        calib_batch: 2,
+        // Off-max percentile so the round trip also pins the
+        // percentile-calibration path.
+        calib_pct: 99.0,
+        layers: vec![
+            LayerPlan {
+                layer: "stem".into(),
+                m: 4,
+                base: Base::Legendre,
+                quant: QuantConfig::w8_h9(),
+            },
+            LayerPlan {
+                layer: "s0b0.conv1".into(),
+                m: 2,
+                base: Base::Canonical,
+                quant: QuantConfig::w8(),
+            },
+            LayerPlan {
+                layer: "s0b1.conv2".into(),
+                m: 6,
+                base: Base::Chebyshev,
+                quant: QuantConfig::w8_h9(),
+            },
+        ],
+    }
+}
+
+#[test]
+fn netplan_serve_round_trip_is_bit_identical() {
+    let plan = heterogeneous_plan();
+
+    // Serialize → disk → reload: lossless.
+    let dir = std::env::temp_dir().join(format!("winoq-tune-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("netplan.json");
+    plan.save(&path).unwrap();
+    let loaded = NetPlan::load(&path).unwrap();
+    assert_eq!(loaded, plan, "NetPlan JSON round trip must be lossless");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Serve side: registry builds the heterogeneous net through its plan
+    // cache and transformed-weight banks.
+    let mut registry = ModelRegistry::new();
+    let served = registry.register_netplan("tuned", &loaded).unwrap();
+    assert_eq!(registry.plans().plan_count(), 3, "three distinct (m, base) keys");
+
+    // Direct side: the cache-free lowering from the same per-layer
+    // params (WinoConv2d::with_plan + per-layer calibration).
+    let cfg = ResNetCfg {
+        width_mult: plan.width_mult,
+        num_classes: plan.num_classes,
+        mode: winoq::nn::ConvMode::Direct, // init_params ignores the mode
+    };
+    let params = ResNet18::init_params(&cfg, plan.seed);
+    let direct_net = build_plan_net(&plan, &params).unwrap();
+
+    // Whole-net logits: bit-identical.
+    let (eval_x, _) = winoq::data::synthcifar::generate_batch(
+        winoq::data::synthcifar::TEST_SEED,
+        0,
+        4,
+    );
+    let served_logits = served.net.forward(&eval_x);
+    let direct_logits = direct_net.forward(&eval_x);
+    assert_eq!(served_logits.dims, direct_logits.dims);
+    for (a, b) in served_logits.data.iter().zip(&direct_logits.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "served ≠ directly-built logits");
+    }
+
+    // Per-layer forwards on each layer's real activations: bit-identical,
+    // and each layer carries exactly the plan's operating point.
+    let captured = direct_net.capture_wino_inputs(&eval_x);
+    let conv = Conv2dCfg { stride: 1, padding: 1 };
+    for l in &plan.layers {
+        let x = &captured[&l.layer];
+        let a = served.net.wino_layer(&l.layer).unwrap();
+        let b = direct_net.wino_layer(&l.layer).unwrap();
+        assert_eq!(a.wf.m, l.m);
+        assert_eq!(a.wf.base, l.base);
+        assert_eq!(a.quant.unwrap().0, l.quant);
+        assert_eq!(b.quant.unwrap().0, l.quant);
+        let ya = a.forward(x, conv);
+        let yb = b.forward(x, conv);
+        assert_eq!(ya.dims, yb.dims);
+        for (va, vb) in ya.data.iter().zip(&yb.data) {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "layer {} diverges between serve and direct lowering",
+                l.layer
+            );
+        }
+    }
+    // Unplanned layers stayed direct on both sides.
+    assert!(served.net.wino_layer("s0b0.conv2").is_none());
+    assert!(direct_net.wino_layer("s0b0.conv2").is_none());
+}

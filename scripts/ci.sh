@@ -36,6 +36,46 @@ fi
 echo "serve smoke OK ($COMPLETED requests completed)"
 rm -f "$SMOKE_JSON"
 
+# Tune smoke: the autotuner must sweep a tiny grid (2 layers × 2
+# candidates), emit a valid BENCH_tune.json + NetPlan, and the serve path
+# must load that NetPlan and complete a closed-loop run.
+echo "==> winoq tune smoke (tiny grid) + serve --plan"
+TUNE_DIR="$(mktemp -d)"
+./target/release/winoq tune --synthetic --grid tiny --layers 2 \
+  --calib-batch 2 --plan-out "$TUNE_DIR/netplan.json" \
+  --out "$SCRIPT_DIR/../BENCH_tune.json"
+if [ ! -s "$SCRIPT_DIR/../BENCH_tune.json" ]; then
+  echo "tune smoke FAILED: BENCH_tune.json missing or empty" >&2
+  exit 1
+fi
+for key in '"bench": "tune"' '"winner"' '"endtoend"'; do
+  if ! grep -q "$key" "$SCRIPT_DIR/../BENCH_tune.json"; then
+    echo "tune smoke FAILED: BENCH_tune.json is missing $key" >&2
+    exit 1
+  fi
+done
+if [ ! -s "$TUNE_DIR/netplan.json" ] \
+   || ! grep -q '"netplan_version": 1' "$TUNE_DIR/netplan.json"; then
+  echo "tune smoke FAILED: NetPlan missing or unversioned" >&2
+  exit 1
+fi
+PLAN_JSON="$(mktemp)"
+./target/release/winoq serve --synthetic --plan "$TUNE_DIR/netplan.json" \
+  --requests 32 --max-batch 4 --stats-json "$PLAN_JSON"
+PLAN_COMPLETED="$(sed -n 's/.*"completed": *\([0-9][0-9]*\).*/\1/p' "$PLAN_JSON")"
+if [ -z "$PLAN_COMPLETED" ] || [ "$PLAN_COMPLETED" -eq 0 ]; then
+  echo "tune smoke FAILED: serve --plan completed zero requests" >&2
+  cat "$PLAN_JSON" >&2
+  exit 1
+fi
+if ! grep -q '"plan_cache"' "$PLAN_JSON"; then
+  echo "tune smoke FAILED: stats JSON lacks plan_cache counters" >&2
+  exit 1
+fi
+echo "tune smoke OK ($PLAN_COMPLETED requests served from the NetPlan)"
+rm -f "$PLAN_JSON"
+rm -rf "$TUNE_DIR"
+
 "$SCRIPT_DIR/lint.sh"
 
 echo "CI OK"
