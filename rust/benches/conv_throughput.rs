@@ -16,6 +16,7 @@
 //! Run: `cargo bench --bench conv_throughput`
 
 use winoq::benchkit;
+use winoq::engine::int::int_vs_float_bench_json;
 use winoq::engine::EngineScratch;
 use winoq::nn::layers::{conv2d, Conv2dCfg};
 use winoq::nn::tensor::Tensor;
@@ -106,9 +107,35 @@ fn engine_vs_per_tile(rng: &mut Prng) {
     println!();
 }
 
+/// Integer engine vs the dequantize-to-float path on the acceptance
+/// shape, emitting `BENCH_int.json` (path override: `WINOQ_BENCH_INT`).
+/// Acceptance bar: the integer path delivers ≥ 2× tiles/sec.
+fn int_vs_dequantize_float(rng: &mut Prng) {
+    let cfg = Conv2dCfg { stride: 1, padding: 1 };
+    let x = rand_tensor(rng, &[8, 64, 32, 32], 1.0);
+    let w = rand_tensor(rng, &[64, 64, 3, 3], 0.2);
+    let mut layer = WinoConv2d::new(4, &w, Base::Legendre);
+    layer.quantize(QuantConfig::w8_h9(), &x, 1);
+    println!("── integer engine vs dequantize-to-float: w8_h9, C=K=64 32x32 batch=8 ──");
+    let (json, ratio) = int_vs_float_bench_json(&layer, &x, cfg, 1, 5);
+    println!("{json}");
+    println!(
+        "acceptance (int ≥ 2x float tiles/s): {} ({ratio:.2}x)",
+        if ratio >= 2.0 { "PASS" } else { "FAIL" }
+    );
+    let path =
+        std::env::var("WINOQ_BENCH_INT").unwrap_or_else(|_| "BENCH_int.json".to_string());
+    match std::fs::write(&path, json + "\n") {
+        Ok(()) => println!("BENCH_int.json written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    println!();
+}
+
 fn main() {
     let mut rng = Prng::new(9);
     engine_vs_per_tile(&mut rng);
+    int_vs_dequantize_float(&mut rng);
     stage_shapes(&mut rng);
     println!("note: the arithmetic-count advantage is 9/2.25 = 4.0x; the measured");
     println!("ratio reflects this CPU's memory behaviour and the naive direct loop.");

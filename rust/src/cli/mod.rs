@@ -76,6 +76,11 @@ pub const VALUE_FLAGS: &[FlagSpec] = &[
         metavar: "PATH",
         help: "serve: also run a max-batch-1 baseline and write a bench JSON",
     },
+    FlagSpec {
+        name: "--int-bench-json",
+        metavar: "PATH",
+        help: "serve: time the integer engine vs the dequantize-to-float path (BENCH_int.json)",
+    },
     // tune flags (see `winoq tune`); --plan is shared with `winoq serve`
     FlagSpec {
         name: "--plan",
@@ -242,6 +247,7 @@ COMMANDS:
                     [--workers W] [--width-mult F] [--m 4] [--base legendre]
                     [--quant w8|w8_h9|none] [--artifact TAG] [--checkpoint P]
                     [--plan NETPLAN.json] [--stats-json PATH] [--bench-json PATH]
+                    [--int-bench-json PATH]
   tune            per-layer base/tile/bit-width autotuner → NetPlan JSON
                     --synthetic [--grid full|tiny] [--layers N]
                     [--objective error|throughput|balanced] [--max-err E]

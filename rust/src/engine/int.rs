@@ -1,0 +1,799 @@
+//! Fully integer-domain batched Winograd execution — the deployed path
+//! for the paper's quantized scenario.
+//!
+//! The float [`WinoEngine`](super::WinoEngine) models quantization by
+//! *fake* casts: every panel stays f64 and each cast site rounds through
+//! the code grid. That is the right oracle for training semantics, but a
+//! deployment stores int8/int9 **codes**, and the channel reduction — the
+//! only stage whose cost scales with `K·C` — runs on integers
+//! (Fernandez-Marques et al. 2020; LANCE 2020). [`IntWinoEngine`] is that
+//! path over the same flat-buffer geometry as the float engine:
+//!
+//! 1. **Quantize-on-transform** — each input tile is cast through the
+//!    layer's input quantizer (f64, Fig. 2's first cast), transformed,
+//!    and immediately quantized into a flat `[C][N²][T]` **i16** code
+//!    panel; no f64 activation panel is ever materialized.
+//! 2. **Integer channel reduction** — one `[K,C] × [C,T]` panel multiply
+//!    per frequency point ([`panel_mul_requant_i16`]): i16×i16 products
+//!    widened to i32, accumulated over channels in i64 (exact, so
+//!    accumulation order cannot matter), then requantized once per
+//!    `(k, f, t)` into the Hadamard code grid — 8 or 9 bits per
+//!    [`QuantConfig::hadamard_bits`], the paper's headline knob.
+//! 3. **Requantize-on-inverse** — Hadamard codes are dequantized, the
+//!    output transform runs in f64 (its constants are rationals; a
+//!    hardware deployment folds them into fixed point, an exact
+//!    rescaling), and the final output cast writes the clamped planes.
+//!
+//! The per-tile arithmetic is **bit-identical** to
+//! [`QWino::forward_int_batch`](crate::quant::qwino::QWino::forward_int_batch)
+//! (single channel) and
+//! [`QWino::forward_int_batch_mc`](crate::quant::qwino::QWino::forward_int_batch_mc)
+//! (multi-channel) — the scalar oracles `rust/tests/int_parity.rs` pins
+//! this engine against for both paper quant configs across all bases.
+//!
+//! Weight codes live in an [`IntWeightBank`] (`[N²][K][C]` i16), computed
+//! once per layer and shared across served model variants by
+//! [`PlanCache`](crate::serve::plan::PlanCache), so quantized models are
+//! served without ever dequantizing their weights.
+
+use std::sync::Arc;
+
+use super::layout::{self, TileGrid};
+use super::parallel;
+use super::scratch::EngineScratch;
+use crate::benchkit;
+use crate::nn::layers::{pad_hw, Conv2dCfg};
+use crate::nn::tensor::Tensor;
+use crate::nn::winolayer::{LayerScales, WinoConv2d};
+use crate::quant::scheme::{QuantConfig, Quantizer};
+use crate::wino::matrix::Mat;
+use crate::wino::transform::WinoF;
+
+/// Largest per-stage bit width whose codes fit the i16 panels
+/// (`qmax(16) = 32767 = i16::MAX`). Wider configs (`uN`, N > 16) fall
+/// back to the float fake-quant engine.
+pub const MAX_CODE_BITS: u32 = 16;
+
+/// `T`-dimension block size for the integer panel multiply — same
+/// cache-blocking idea as the float engine's stage 2. Blocking cannot
+/// perturb results: the i64 channel accumulation is exact.
+const T_BLOCK: usize = 1024;
+
+/// A layer's transformed-weight **codes**: `[N²][K][C]` i16 plus the
+/// quantizer that produced them. Computed once from the float
+/// transformed-weight bank and shared (`Arc`) across engines and served
+/// model variants.
+pub struct IntWeightBank {
+    /// Frequency points `N²`.
+    pub nn: usize,
+    /// Output filters.
+    pub k: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Codes, layout `[N²][K][C]` (frequency-major panels).
+    codes: Vec<i16>,
+    /// The symmetric quantizer the codes were taken with — identical (by
+    /// construction: same calibration over the same float bank) to the
+    /// `weights_t` scale `WinoConv2d::quantize_pct` computes.
+    pub weights_t: Quantizer,
+}
+
+impl IntWeightBank {
+    /// Calibrate a quantizer on a **pristine** float `[K][C]`
+    /// transformed-weight bank (max-abs, matching
+    /// `WinoConv2d::quantize_pct`'s `weights_t`) and quantize it into
+    /// codes. Returns `None` when `weight_bits` exceeds
+    /// [`MAX_CODE_BITS`]. For an already fake-quantized bank use
+    /// [`with_quantizer`](Self::with_quantizer) with the layer's own
+    /// `weights_t`: requantizing fake values reproduces their codes
+    /// exactly (`quantize(q·s) = q`), but *re-calibrating* on them could
+    /// drift the scale by an ulp.
+    pub fn from_float_bank(wt: &[Vec<Mat>], weight_bits: u32) -> Option<IntWeightBank> {
+        if weight_bits > MAX_CODE_BITS {
+            return None;
+        }
+        // Same calibration as WinoConv2d::quantize_pct's weights_t —
+        // scale = max|w| / qmax (1.0 for an all-zero bank) — folded
+        // straight over the bank: no flattened copy of a possibly
+        // multi-megabyte weight bank just to take a maximum.
+        let maxabs = wt
+            .iter()
+            .flat_map(|per_c| per_c.iter().flat_map(|m| m.data().iter().copied()))
+            .fold(0.0f64, |a, b| a.max(b.abs()));
+        let scale = if maxabs == 0.0 {
+            1.0
+        } else {
+            maxabs / Quantizer::qmax(weight_bits) as f64
+        };
+        Some(Self::with_quantizer(wt, Quantizer { bits: weight_bits, scale }))
+    }
+
+    /// Quantize a `[K][C]` transformed-weight bank with an explicitly
+    /// supplied quantizer (a layer's already-computed `weights_t`).
+    pub fn with_quantizer(wt: &[Vec<Mat>], weights_t: Quantizer) -> IntWeightBank {
+        assert!(
+            weights_t.bits <= MAX_CODE_BITS,
+            "{}-bit weight codes do not fit the i16 panels",
+            weights_t.bits
+        );
+        let k = wt.len();
+        assert!(k > 0, "need at least one output filter");
+        let c = wt[0].len();
+        assert!(c > 0, "need at least one input channel");
+        let nn = wt[0][0].rows() * wt[0][0].cols();
+        let mut codes = vec![0i16; nn * k * c];
+        for (ki, per_c) in wt.iter().enumerate() {
+            assert_eq!(per_c.len(), c, "ragged filter bank");
+            for (ci, mat) in per_c.iter().enumerate() {
+                let d = mat.data();
+                assert_eq!(d.len(), nn, "bank tile size mismatch");
+                for f in 0..nn {
+                    codes[(f * k + ki) * c + ci] = weights_t.quantize(d[f]) as i16;
+                }
+            }
+        }
+        IntWeightBank { nn, k, c, codes, weights_t }
+    }
+
+    /// The `[K][C]` code panel for frequency point `f` (row-major).
+    pub fn panel(&self, f: usize) -> &[i16] {
+        &self.codes[f * self.k * self.c..][..self.k * self.c]
+    }
+
+    /// All codes, layout `[N²][K][C]`.
+    pub fn codes(&self) -> &[i16] {
+        &self.codes
+    }
+}
+
+/// Geometry of one integer panel multiply: input channels, output
+/// filters and frequency points (`N²`); the tile count `T` is inferred
+/// from the panel lengths.
+#[derive(Clone, Copy, Debug)]
+pub struct PanelDims {
+    pub c: usize,
+    pub k: usize,
+    pub nn: usize,
+}
+
+/// Per-frequency integer panel multiply with fused requantization — the
+/// integer engine's stage 2, exposed standalone for the property tests.
+///
+/// `xt_codes` is `[C][N²][T]`, `wt_codes` is `[N²][K][C]`, `had_codes`
+/// is `[N²][K][T]` (all i16/i32 row-major in the bracketed shapes; `T`
+/// is inferred). For every `(f, k, t)`: the i16×i16 products over `c`
+/// are widened to i32 and accumulated in i64 — exact for any `C` up to
+/// 2³³ even at 16-bit codes — then the real value
+/// `acc · prod_scale` (`prod_scale` = input-code scale × weight-code
+/// scale) is requantized through `hq`, clamping to `±qmax` (saturation,
+/// never wraparound). Parallel over frequency points.
+pub fn panel_mul_requant_i16(
+    xt_codes: &[i16],
+    wt_codes: &[i16],
+    dims: PanelDims,
+    prod_scale: f64,
+    hq: &Quantizer,
+    had_codes: &mut [i32],
+) {
+    let PanelDims { c, k, nn } = dims;
+    assert!(c > 0 && k > 0 && nn > 0, "degenerate panel shape");
+    assert_eq!(xt_codes.len() % (c * nn), 0, "xt panel not [C][N²][T]");
+    let t_total = xt_codes.len() / (c * nn);
+    assert_eq!(wt_codes.len(), nn * k * c, "wt panel not [N²][K][C]");
+    assert_eq!(had_codes.len(), nn * k * t_total, "had panel not [N²][K][T]");
+    if t_total == 0 {
+        return;
+    }
+    parallel::par_chunks_mut(had_codes, k * t_total, |f, chunk| {
+        let wpan = &wt_codes[f * k * c..][..k * c];
+        // One i64 accumulator row per output filter, reused across `k`.
+        let mut acc = vec![0i64; t_total];
+        for ki in 0..k {
+            acc.fill(0);
+            let mut tb = 0;
+            while tb < t_total {
+                let te = (tb + T_BLOCK).min(t_total);
+                for ci in 0..c {
+                    let wkc = wpan[ki * c + ci] as i32;
+                    if wkc == 0 {
+                        // Zero weight codes contribute exactly nothing —
+                        // skipping them is a pure speedup.
+                        continue;
+                    }
+                    let xrow = &xt_codes[(ci * nn + f) * t_total..][..t_total];
+                    for t in tb..te {
+                        acc[t] += (wkc * xrow[t] as i32) as i64;
+                    }
+                }
+                tb = te;
+            }
+            let row = &mut chunk[ki * t_total..][..t_total];
+            for t in 0..t_total {
+                row[t] = hq.quantize(acc[t] as f64 * prod_scale);
+            }
+        }
+    });
+}
+
+/// A lowered **integer-domain** Winograd conv layer: i16 weight codes
+/// plus the layer's calibrated stage quantizers, executing over flat i16
+/// input-code panels. Built by
+/// [`WinoConv2d::quantize_pct`](crate::nn::winolayer::WinoConv2d::quantize_pct)
+/// alongside the float engine whenever the bit config fits
+/// [`MAX_CODE_BITS`]; `WinoConv2d::forward*` then dispatches here, making
+/// this the serving path for quantized layers.
+pub struct IntWinoEngine {
+    /// Float transform pipeline (plan + polynomial base) — the input and
+    /// output transforms still run through it in f64.
+    pub wf: WinoF,
+    /// Output filters.
+    pub k: usize,
+    /// Input channels.
+    pub c: usize,
+    /// The bit-width configuration this engine honors.
+    pub cfg: QuantConfig,
+    /// Calibrated per-stage quantizers (Fig. 2 cast sites).
+    pub scales: LayerScales,
+    bank: Arc<IntWeightBank>,
+    /// `input_t.scale × weights_t.scale` — the exact real value of one
+    /// integer Hadamard product unit.
+    prod_scale: f64,
+}
+
+impl IntWinoEngine {
+    /// Whether `cfg`'s activation/weight codes fit the i16 panels.
+    pub fn supports(cfg: &QuantConfig) -> bool {
+        cfg.act_bits <= MAX_CODE_BITS && cfg.weight_bits <= MAX_CODE_BITS
+    }
+
+    /// Build from a shared weight-code bank and calibrated layer scales.
+    /// The bank's quantizer must be the layer's `weights_t` (same bits
+    /// and scale) — the invariant that makes cached banks and
+    /// freshly-computed ones interchangeable bit-for-bit.
+    pub fn from_bank(
+        wf: WinoF,
+        bank: Arc<IntWeightBank>,
+        cfg: QuantConfig,
+        scales: LayerScales,
+    ) -> IntWinoEngine {
+        assert!(Self::supports(&cfg), "bit config {cfg:?} exceeds i16 code range");
+        assert_eq!(bank.nn, wf.n * wf.n, "bank/plan tile size mismatch");
+        assert_eq!(
+            bank.weights_t, scales.weights_t,
+            "weight-code bank quantizer differs from the layer's weights_t scale"
+        );
+        let prod_scale = scales.input_t.scale * scales.weights_t.scale;
+        IntWinoEngine { k: bank.k, c: bank.c, wf, cfg, scales, bank, prod_scale }
+    }
+
+    /// The shared weight-code bank (for cache-sharing assertions).
+    pub fn bank(&self) -> &Arc<IntWeightBank> {
+        &self.bank
+    }
+
+    /// Tiles one forward over `x_dims` processes (same grid as the float
+    /// engine — the integer path changes arithmetic, not geometry; both
+    /// delegate to [`layout::tile_count_for`]).
+    pub fn tile_count_for(&self, x_dims: &[usize], padding: usize) -> usize {
+        layout::tile_count_for(x_dims, padding, self.wf.m, self.wf.r)
+    }
+
+    /// Forward pass allocating a fresh workspace. Prefer
+    /// [`forward_with`](Self::forward_with) in serving loops.
+    pub fn forward(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
+        let mut scratch = EngineScratch::new();
+        self.forward_with(x, cfg, &mut scratch)
+    }
+
+    /// Forward pass `x` `[N,C,H,W]` → `[N,K,H',W']` (stride 1) reusing
+    /// `scratch` buffers across calls.
+    pub fn forward_with(
+        &self,
+        x: &Tensor,
+        cfg: Conv2dCfg,
+        scratch: &mut EngineScratch,
+    ) -> Tensor {
+        let grid = self.execute_into(x, cfg, scratch);
+        Tensor::from_vec(
+            &[grid.bn, self.k, grid.oh, grid.ow],
+            scratch.output().iter().map(|&v| v as f32).collect(),
+        )
+    }
+
+    /// Forward pass returning the f64 output (pre-f32-cast) with its
+    /// NCHW dims — what the oracle-parity tests compare bit-for-bit.
+    pub fn forward_f64(&self, x: &Tensor, cfg: Conv2dCfg) -> (Vec<f64>, [usize; 4]) {
+        let mut scratch = EngineScratch::new();
+        let grid = self.execute_into(x, cfg, &mut scratch);
+        (scratch.output().to_vec(), [grid.bn, self.k, grid.oh, grid.ow])
+    }
+
+    /// The three-stage integer pipeline: quantize-on-transform →
+    /// integer panel reduction → requantize-on-inverse. Leaves the f64
+    /// output in `scratch.out` (layout `[BN][K][OH][OW]`) and returns the
+    /// [`TileGrid`].
+    pub fn execute_into(
+        &self,
+        x: &Tensor,
+        cfg: Conv2dCfg,
+        scratch: &mut EngineScratch,
+    ) -> TileGrid {
+        assert_eq!(cfg.stride, 1, "winograd engine is stride-1");
+        assert_eq!(x.rank(), 4, "NCHW input required");
+        let x = pad_hw(x, cfg.padding);
+        let (n, m) = (self.wf.n, self.wf.m);
+        let nn = n * n;
+        let grid = TileGrid::new(&x.dims, m, self.wf.r);
+        assert_eq!(grid.c, self.c, "channel mismatch");
+        let t_total = grid.tile_count();
+        scratch.prepare_int(
+            self.c * nn * t_total,
+            nn * self.k * t_total,
+            grid.bn * self.k * grid.oh * grid.ow,
+        );
+        let EngineScratch { xt_codes, had_codes, out, .. } = scratch;
+        let wf = &self.wf;
+        let sc = &self.scales;
+
+        // Stage 1 — quantize-on-transform, parallel over channels. The
+        // input cast runs in f64 (the integer path's oracle is QWino's
+        // f64 pipeline; no f32 detour as in the fake-quant engine), then
+        // the transformed tile is quantized straight into the i16 panel.
+        parallel::par_chunks_mut(&mut xt_codes[..], nn * t_total, |ci, chunk| {
+            for ni in 0..grid.bn {
+                for th in 0..grid.tiles_h {
+                    for tw in 0..grid.tiles_w {
+                        let t = grid.tile_index(ni, th, tw);
+                        let (h0, w0) = grid.tile_origin(th, tw);
+                        let tile = layout::extract_tile(&x, ni, ci, h0, w0, n);
+                        let faked =
+                            Mat::from_vec(n, n, sc.input.fake_all(tile.data()));
+                        let xt_m = wf.transform_input(&faked);
+                        let d = xt_m.data();
+                        for f in 0..nn {
+                            chunk[f * t_total + t] = sc.input_t.quantize(d[f]) as i16;
+                        }
+                    }
+                }
+            }
+        });
+
+        // Stage 2 — the integer channel reduction + Hadamard requant.
+        panel_mul_requant_i16(
+            &xt_codes[..],
+            &self.bank.codes,
+            PanelDims { c: self.c, k: self.k, nn },
+            self.prod_scale,
+            &sc.hadamard,
+            &mut had_codes[..],
+        );
+
+        // Stage 3 — dequantize, back-transform in bulk, output cast;
+        // parallel over (image, filter) planes, edge tiles clamped.
+        let had_ro: &[i32] = had_codes.as_slice();
+        parallel::par_chunks_mut(&mut out[..], grid.oh * grid.ow, |plane, ochunk| {
+            let ni = plane / self.k;
+            let ki = plane % self.k;
+            let mut acc = Mat::zeros(n, n);
+            for th in 0..grid.tiles_h {
+                for tw in 0..grid.tiles_w {
+                    let t = grid.tile_index(ni, th, tw);
+                    for f in 0..nn {
+                        acc[(f / n, f % n)] =
+                            sc.hadamard.dequantize(had_ro[(f * self.k + ki) * t_total + t]);
+                    }
+                    let o = wf.transform_output(&acc);
+                    let o = Mat::from_vec(m, m, sc.output.fake_all(o.data()));
+                    for i in 0..m {
+                        let oi = th * m + i;
+                        if oi >= grid.oh {
+                            break;
+                        }
+                        for j in 0..m {
+                            let oj = tw * m + j;
+                            if oj >= grid.ow {
+                                break;
+                            }
+                            ochunk[oi * grid.ow + oj] = o[(i, j)];
+                        }
+                    }
+                }
+            }
+        });
+        grid
+    }
+}
+
+/// Time the integer path against the dequantize-to-float path (the fake
+/// quant [`WinoEngine`](super::WinoEngine)) on one quantized layer and
+/// one workload, returning `(BENCH_int JSON, tiles/sec ratio)`. Shared
+/// by `benches/conv_throughput.rs` and `winoq serve --int-bench-json`.
+///
+/// The two paths compute through different numeric routes (integer vs
+/// fake-quant channel accumulation), so outputs agree only to the
+/// quantization step — the JSON reports the observed max |Δ| alongside a
+/// step-derived bound so a degenerate run is visible in CI.
+pub fn int_vs_float_bench_json(
+    layer: &WinoConv2d,
+    x: &Tensor,
+    conv: Conv2dCfg,
+    warmup: usize,
+    samples: usize,
+) -> (String, f64) {
+    let ie = layer
+        .int_engine()
+        .expect("int bench requires a quantized layer with an integer engine");
+    let fe = layer.engine();
+    let tiles = fe.tile_count_for(&x.dims, conv.padding) as f64;
+    let samples = samples.max(1);
+    let mut s_int_scratch = EngineScratch::new();
+    let s_int = benchkit::bench(warmup, samples, || {
+        ie.forward_with(x, conv, &mut s_int_scratch)
+    });
+    let mut s_f_scratch = EngineScratch::new();
+    let s_float = benchkit::bench(warmup, samples, || {
+        fe.forward_with(x, conv, &mut s_f_scratch)
+    });
+    let int_tps = tiles / s_int.median.max(1e-12);
+    let float_tps = tiles / s_float.median.max(1e-12);
+    let ratio = if float_tps > 0.0 { int_tps / float_tps } else { 0.0 };
+    let yi = ie.forward(x, conv);
+    let yf = fe.forward(x, conv);
+    let mut max_diff = 0.0f32;
+    for (a, b) in yi.data.iter().zip(&yf.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    let out_step = ie.scales.output.scale;
+    let json = format!(
+        concat!(
+            "{{\"bench\": \"int_engine\", \"m\": {}, \"base\": \"{}\", ",
+            "\"quant\": \"{}\", \"shape\": {:?}, \"tiles\": {}, ",
+            "\"int\": {{\"seconds\": {:e}, \"tiles_per_sec\": {:.1}}}, ",
+            "\"float\": {{\"seconds\": {:e}, \"tiles_per_sec\": {:.1}}}, ",
+            "\"tiles_per_sec_ratio_int_vs_float\": {:.3}, ",
+            "\"parity_max_abs_diff\": {:e}, \"output_step\": {:e}}}"
+        ),
+        layer.wf.m,
+        layer.wf.base.name(),
+        ie.cfg.label(),
+        x.dims,
+        tiles as u64,
+        s_int.median,
+        int_tps,
+        s_float.median,
+        float_tps,
+        ratio,
+        max_diff,
+        out_step,
+    );
+    (json, ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scheme::QuantConfig;
+    use crate::testkit::{forall, prng_tensor};
+    use crate::wino::basis::Base;
+    use crate::wino::error::Prng;
+
+    fn quantized_layer(seed: u64, qcfg: QuantConfig, base: Base, m: usize) -> (WinoConv2d, Tensor) {
+        let x = prng_tensor(seed, &[2, 3, 9, 9], 1.0);
+        let w = prng_tensor(seed + 1, &[4, 3, 3, 3], 0.4);
+        let mut layer = WinoConv2d::new(m, &w, base);
+        layer.quantize(qcfg, &x, 1);
+        (layer, x)
+    }
+
+    #[test]
+    fn int_bank_codes_match_layer_weights_t() {
+        // The engine's bank must carry exactly the layer's weights_t
+        // quantizer, and its codes must equal requantizing the baked
+        // (fake-quantized) bank — fake is code-idempotent, so the
+        // pristine-bank codes and the baked-bank codes coincide.
+        let (layer, _) = quantized_layer(11, QuantConfig::w8(), Base::Legendre, 4);
+        let scales = layer.quant.unwrap().1;
+        let bank = layer.int_engine().unwrap().bank();
+        assert_eq!(bank.weights_t, scales.weights_t);
+        let nn = layer.wf.n * layer.wf.n;
+        for f in 0..nn {
+            let panel = bank.panel(f);
+            for ki in 0..layer.k {
+                for ci in 0..layer.c {
+                    let want = scales.weights_t.quantize(layer.wt[ki][ci].data()[f]);
+                    assert_eq!(panel[ki * layer.c + ci] as i32, want, "({f},{ki},{ci})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_bank_rejects_wide_codes() {
+        let w = prng_tensor(5, &[2, 2, 3, 3], 0.5);
+        let layer = WinoConv2d::new(4, &w, Base::Canonical);
+        assert!(IntWeightBank::from_float_bank(&layer.wt, 17).is_none());
+        assert!(IntWeightBank::from_float_bank(&layer.wt, 16).is_some());
+        assert!(IntWinoEngine::supports(&QuantConfig::w8_h9()));
+        assert!(IntWinoEngine::supports(&QuantConfig::uniform(16)));
+        assert!(!IntWinoEngine::supports(&QuantConfig::uniform(17)));
+    }
+
+    #[test]
+    fn panel_kernel_matches_scalar_reference() {
+        // Against independent naive loops, including tie-prone scales.
+        let (c, k, nn, t) = (5, 3, 4, 7);
+        let mut rng = Prng::new(42);
+        let xt: Vec<i16> = (0..c * nn * t)
+            .map(|_| (rng.next_u64() % 511) as i16 - 255)
+            .collect();
+        let wt: Vec<i16> = (0..nn * k * c)
+            .map(|_| (rng.next_u64() % 255) as i16 - 127)
+            .collect();
+        let hq = Quantizer::with_scale(9, 3.7e-4);
+        let ps = 1.9e-4;
+        let mut had = vec![0i32; nn * k * t];
+        panel_mul_requant_i16(&xt, &wt, PanelDims { c, k, nn }, ps, &hq, &mut had);
+        for f in 0..nn {
+            for ki in 0..k {
+                for ti in 0..t {
+                    let mut acc = 0i64;
+                    for ci in 0..c {
+                        acc += wt[(f * k + ki) * c + ci] as i64
+                            * xt[(ci * nn + f) * t + ti] as i64;
+                    }
+                    let want = hq.quantize(acc as f64 * ps);
+                    assert_eq!(had[(f * k + ki) * t + ti], want, "({f},{ki},{ti})");
+                }
+            }
+        }
+    }
+
+    /// One random property case for the requant properties below.
+    #[derive(Debug)]
+    struct RequantCase {
+        xt: Vec<i16>,
+        wt: Vec<i16>,
+        c: usize,
+        t: usize,
+        prod_scale: f64,
+        had_scale: f64,
+    }
+
+    fn requant_gen(hadamard_bits: u32) -> impl Fn(&mut Prng) -> RequantCase {
+        move |rng: &mut Prng| {
+            let c = 1 + (rng.next_u64() as usize) % 8;
+            let t = 1 + (rng.next_u64() as usize) % 6;
+            let code =
+                |rng: &mut Prng, q: i64| ((rng.next_u64() % (2 * q as u64 + 1)) as i64 - q) as i16;
+            let xt: Vec<i16> = (0..c * t).map(|_| code(rng, 255)).collect();
+            let wt: Vec<i16> = (0..c).map(|_| code(rng, 127)).collect();
+            // Scales spanning several orders of magnitude, biased so the
+            // requant both saturates and rounds near ties.
+            let prod_scale = 10f64.powf(rng.uniform(3.0) - 4.0);
+            let had_scale =
+                10f64.powf(rng.uniform(2.0) - 3.0) * (255.0 / Quantizer::qmax(hadamard_bits) as f64);
+            RequantCase { xt, wt, c, t, prod_scale, had_scale }
+        }
+    }
+
+    fn run_case(case: &RequantCase, bits: u32) -> Vec<i32> {
+        let hq = Quantizer::with_scale(bits, case.had_scale);
+        let mut had = vec![0i32; case.t];
+        panel_mul_requant_i16(
+            &case.xt,
+            &case.wt,
+            PanelDims { c: case.c, k: 1, nn: 1 },
+            case.prod_scale,
+            &hq,
+            &mut had,
+        );
+        had
+    }
+
+    #[test]
+    fn forall_requant_matches_f64_reference_within_one_ulp() {
+        // The kernel's i64-accumulated real value must agree with a
+        // per-term f64 reference to accumulation ulps: the integer sum is
+        // exact, so the difference is bounded by the f64 reference's own
+        // rounding (≪ one quantization step). Consequently the requant
+        // code differs from the f64-reference code by at most 1 (a tie
+        // flip), and the dequantized value by at most one step.
+        forall(901, 300, requant_gen(9), |case| {
+            let hq = Quantizer::with_scale(9, case.had_scale);
+            let had = run_case(case, 9);
+            for t in 0..case.t {
+                let mut acc = 0i64;
+                let mut per_term = 0.0f64;
+                let mut mag = 0.0f64;
+                for ci in 0..case.c {
+                    let p = case.wt[ci] as i64 * case.xt[ci * case.t + t] as i64;
+                    acc += p;
+                    per_term += p as f64 * case.prod_scale;
+                    mag += (p as f64 * case.prod_scale).abs();
+                }
+                let exact = acc as f64 * case.prod_scale;
+                // 1-ulp-per-term bound on the f64 reference accumulation.
+                if (exact - per_term).abs() > 1e-13 * mag.max(1e-300) {
+                    return false;
+                }
+                let code = had[t];
+                let ref_code = hq.quantize(per_term);
+                if (code - ref_code).abs() > 1 {
+                    return false;
+                }
+                if (hq.dequantize(code) - exact).abs()
+                    > hq.scale * 0.5 + 1e-12 * exact.abs() + f64::MIN_POSITIVE
+                {
+                    // Within half a step unless clipped; clipping means
+                    // the code sits at ±qmax.
+                    if code.abs() != Quantizer::qmax(9) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn forall_nine_bit_codes_saturate_never_wrap() {
+        // 9-bit Hadamard codes stay in [-255, 255] ⊂ [-256, 255] for any
+        // operand codes and scales — saturation, not i32/i64 wraparound.
+        forall(902, 400, requant_gen(9), |case| {
+            run_case(case, 9).iter().all(|&h| (-255..=255).contains(&h))
+        });
+        // Worst-case magnitudes: max codes, huge prod scale, tiny
+        // Hadamard scale — must pin to exactly ±qmax.
+        let c = 64;
+        let case = RequantCase {
+            xt: vec![255; c],
+            wt: vec![127; c],
+            c,
+            t: 1,
+            prod_scale: 1e6,
+            had_scale: 1e-9,
+        };
+        assert_eq!(run_case(&case, 9), vec![255]);
+        let neg = RequantCase { wt: vec![-127; c], ..case };
+        assert_eq!(run_case(&neg, 9), vec![-255]);
+    }
+
+    #[test]
+    fn forall_eight_bit_codes_saturate_never_wrap() {
+        forall(903, 300, requant_gen(8), |case| {
+            run_case(case, 8).iter().all(|&h| (-127..=127).contains(&h))
+        });
+    }
+
+    #[test]
+    fn forall_hadamard_requant_i32_matches_definition_and_saturates() {
+        // The single-channel i32 kernel (QWino::forward_int_batch's
+        // stage 2) under the same generator: each code must equal the
+        // defining formula exactly and respect the 9-bit clamp.
+        use crate::engine::hadamard_requant_i32;
+        forall(904, 300, requant_gen(9), |case| {
+            // Reinterpret the case as an [N²][T] panel: nn = c rows.
+            let hq = Quantizer::with_scale(9, case.had_scale);
+            let xt: Vec<i32> = case.xt.iter().map(|&v| v as i32).collect();
+            let wt: Vec<i32> = case.wt.iter().map(|&v| v as i32).collect();
+            let mut had = vec![0i32; xt.len()];
+            hadamard_requant_i32(&xt, &wt, case.prod_scale, &hq, &mut had);
+            for f in 0..case.c {
+                for t in 0..case.t {
+                    let real = (xt[f * case.t + t] as i64 * wt[f] as i64) as f64
+                        * case.prod_scale;
+                    if had[f * case.t + t] != hq.quantize(real) {
+                        return false;
+                    }
+                    if !(-255..=255).contains(&had[f * case.t + t]) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn int_engine_matches_naive_per_tile_pipeline() {
+        // In-module mirror of the scalar integer pipeline (the
+        // cross-module oracle parity lives in rust/tests/int_parity.rs).
+        for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+            let (layer, x) = quantized_layer(21, qcfg, Base::Legendre, 4);
+            let ie = layer.int_engine().expect("w8 fits the int engine");
+            let conv = Conv2dCfg { stride: 1, padding: 1 };
+            let (got, dims) = ie.forward_f64(&x, conv);
+            let sc = &ie.scales;
+            let padded = pad_hw(&x, 1);
+            let grid = TileGrid::new(&padded.dims, 4, 3);
+            let n = 6;
+            let nn = 36;
+            for ni in 0..grid.bn {
+                for ki in 0..layer.k {
+                    for th in 0..grid.tiles_h {
+                        for tw in 0..grid.tiles_w {
+                            // Naive per-tile integer pipeline.
+                            let mut acc = vec![0i64; nn];
+                            for ci in 0..layer.c {
+                                let tile = layout::extract_tile(
+                                    &padded, ni, ci, th * 4, tw * 4, n,
+                                );
+                                let faked =
+                                    Mat::from_vec(n, n, sc.input.fake_all(tile.data()));
+                                let xt = layer.wf.transform_input(&faked);
+                                for f in 0..nn {
+                                    let xc = sc.input_t.quantize(xt.data()[f]) as i64;
+                                    let wc = ie.bank().panel(f)[ki * layer.c + ci] as i64;
+                                    acc[f] += xc * wc;
+                                }
+                            }
+                            let ps = sc.input_t.scale * sc.weights_t.scale;
+                            let mut had = Mat::zeros(n, n);
+                            for f in 0..nn {
+                                let code = sc.hadamard.quantize(acc[f] as f64 * ps);
+                                had[(f / n, f % n)] = sc.hadamard.dequantize(code);
+                            }
+                            let o = layer.wf.transform_output(&had);
+                            let o = Mat::from_vec(4, 4, sc.output.fake_all(o.data()));
+                            for i in 0..4 {
+                                let oi = th * 4 + i;
+                                if oi >= grid.oh {
+                                    break;
+                                }
+                                for j in 0..4 {
+                                    let oj = tw * 4 + j;
+                                    if oj >= grid.ow {
+                                        break;
+                                    }
+                                    let g = got[((ni * layer.k + ki) * dims[2] + oi)
+                                        * dims[3]
+                                        + oj];
+                                    assert_eq!(
+                                        g.to_bits(),
+                                        o[(i, j)].to_bits(),
+                                        "({ni},{ki},{oi},{oj}) [{}]",
+                                        qcfg.label()
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_engine_scratch_reuse_and_batch_invariance() {
+        let (layer, x) = quantized_layer(31, QuantConfig::w8_h9(), Base::Chebyshev, 2);
+        let ie = layer.int_engine().unwrap();
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let mut scratch = EngineScratch::new();
+        let fresh = ie.forward(&x, conv);
+        let reused = ie.forward_with(&x, conv, &mut scratch);
+        assert_eq!(fresh.data, reused.data);
+        // Batch invariance: each image alone reproduces its batch rows.
+        let item: usize = x.dims[1..].iter().product();
+        for ni in 0..x.dims[0] {
+            let mut dims = x.dims.clone();
+            dims[0] = 1;
+            let single = Tensor::from_vec(&dims, x.data[ni * item..(ni + 1) * item].to_vec());
+            let y1 = ie.forward_with(&single, conv, &mut scratch);
+            let row = y1.data.len();
+            assert_eq!(&y1.data[..], &fresh.data[ni * row..(ni + 1) * row]);
+        }
+    }
+
+    #[test]
+    fn bench_json_emits_and_reports_ratio() {
+        let (layer, x) = quantized_layer(41, QuantConfig::w8(), Base::Legendre, 4);
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let (json, ratio) = int_vs_float_bench_json(&layer, &x, conv, 0, 1);
+        assert!(json.contains("\"bench\": \"int_engine\""), "{json}");
+        assert!(json.contains("tiles_per_sec_ratio_int_vs_float"));
+        assert!(ratio > 0.0, "degenerate ratio");
+        // The emitted document is valid JSON for the in-crate reader.
+        let doc = crate::tune::json::parse(&json).unwrap();
+        assert!(doc.get("int").unwrap().get("tiles_per_sec").is_some());
+    }
+}

@@ -16,6 +16,20 @@
 //! one GEMM per frequency point covers every image; tile `t` of image
 //! `ni` at grid position `(th, tw)` is `t = (ni·tiles_h + th)·tiles_w +
 //! tw` (see [`TileGrid::tile_index`]).
+//!
+//! The integer engine ([`engine::int`](super::int)) reuses the same
+//! bracketed shapes with code-typed elements:
+//!
+//! * `xt_codes` — transformed-input **codes**, `[C][N²][T]` i16 (2 bytes
+//!   per element instead of 8 — a 4× cut in panel traffic on the hot
+//!   per-frequency reduction);
+//! * weight codes — `[N²][K][C]` i16
+//!   ([`IntWeightBank`](super::int::IntWeightBank));
+//! * `had_codes` — requantized Hadamard codes, `[N²][K][T]` i32 (the
+//!   i64 channel accumulator is kernel-local, never materialized).
+//!
+//! Geometry ([`TileGrid`], [`extract_tile`]) is shared verbatim between
+//! the two pipelines: the integer path changes arithmetic, not tiling.
 
 use crate::nn::tensor::Tensor;
 use crate::wino::matrix::Mat;
@@ -86,6 +100,20 @@ impl TileGrid {
     pub fn tile_origin(&self, th: usize, tw: usize) -> (usize, usize) {
         (th * self.m, tw * self.m)
     }
+}
+
+/// Tiles one engine forward over an **unpadded** NCHW shape processes
+/// once `padding` is applied — the throughput work unit both the float
+/// and integer engines report (`tile_count_for`); one definition so the
+/// two paths can never disagree about what a "tile" is.
+pub fn tile_count_for(x_dims: &[usize], padding: usize, m: usize, r: usize) -> usize {
+    let padded = [
+        x_dims[0],
+        x_dims[1],
+        x_dims[2] + 2 * padding,
+        x_dims[3] + 2 * padding,
+    ];
+    TileGrid::new(&padded, m, r).tile_count()
 }
 
 /// Extract an `n×n` input patch starting at `(h0, w0)` of image `ni`,

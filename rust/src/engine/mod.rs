@@ -32,6 +32,13 @@
 //! dependency here), and repeated calls reuse [`EngineScratch`] buffers
 //! to stay allocation-free on the large workspaces.
 //!
+//! [`WinoEngine`] is the **float / fake-quant** pipeline (f64 panels,
+//! Fig. 2 casts as quantize-dequantize round trips) — the training-graph
+//! semantics and the float serving path. Its true-integer counterpart is
+//! [`int::IntWinoEngine`]: i16 code panels, the channel reduction in the
+//! integer domain, and a single Hadamard requantization per `(k, f, t)`
+//! — the deployed path quantized layers dispatch to (see [`int`]).
+//!
 //! ```
 //! use winoq::engine::WinoEngine;
 //! use winoq::nn::layers::{conv2d, Conv2dCfg};
@@ -50,10 +57,12 @@
 //! }
 //! ```
 
+pub mod int;
 pub mod layout;
 pub mod parallel;
 pub mod scratch;
 
+pub use int::{IntWeightBank, IntWinoEngine};
 pub use layout::TileGrid;
 pub use scratch::EngineScratch;
 
@@ -201,15 +210,10 @@ impl WinoEngine {
     }
 
     /// Number of tiles one forward over `x_dims` processes — the work
-    /// unit the throughput bench reports (tiles/sec).
+    /// unit the throughput bench reports (tiles/sec); shared definition
+    /// in [`layout::tile_count_for`].
     pub fn tile_count_for(&self, x_dims: &[usize], padding: usize) -> usize {
-        let padded = [
-            x_dims[0],
-            x_dims[1],
-            x_dims[2] + 2 * padding,
-            x_dims[3] + 2 * padding,
-        ];
-        TileGrid::new(&padded, self.wf.m, self.wf.r).tile_count()
+        layout::tile_count_for(x_dims, padding, self.wf.m, self.wf.r)
     }
 
     /// The three-stage lowered pipeline — the **panel-level entry** for
@@ -245,7 +249,7 @@ impl WinoEngine {
             nn * self.k * t_total,
             grid.bn * self.k * grid.oh * grid.ow,
         );
-        let EngineScratch { xt, had, out } = scratch;
+        let EngineScratch { xt, had, out, .. } = scratch;
         let wf = &self.wf;
         let quant = &self.quant;
 

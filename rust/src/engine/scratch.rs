@@ -11,6 +11,11 @@
 
 /// Scratch buffers for one in-flight engine forward pass.
 ///
+/// Holds both the float pipeline's f64 panels and the integer pipeline's
+/// code panels ([`IntWinoEngine`](super::int::IntWinoEngine)); a serving
+/// worker threads one scratch through heterogeneous float/int layers and
+/// each buffer grows to its own high-water mark.
+///
 /// Not `Clone` on purpose: the point is to share one allocation across
 /// calls, not to copy multi-megabyte workspaces around.
 #[derive(Default)]
@@ -19,8 +24,14 @@ pub struct EngineScratch {
     pub(super) xt: Vec<f64>,
     /// Hadamard/channel accumulators, layout `[N²][K][T]` (frequency-major).
     pub(super) had: Vec<f64>,
-    /// f64 output staging, layout `[BN][K][OH][OW]`.
+    /// f64 output staging, layout `[BN][K][OH][OW]` — shared by the float
+    /// and integer pipelines (both back-transform into f64 before the f32
+    /// cast).
     pub(super) out: Vec<f64>,
+    /// Integer pipeline: transformed-input codes, layout `[C][N²][T]`.
+    pub(super) xt_codes: Vec<i16>,
+    /// Integer pipeline: requantized Hadamard codes, layout `[N²][K][T]`.
+    pub(super) had_codes: Vec<i32>,
 }
 
 impl EngineScratch {
@@ -39,9 +50,26 @@ impl EngineScratch {
         self.out.resize(out_len, 0.0);
     }
 
-    /// Total f64 capacity currently held (for memory accounting/tests).
+    /// Size the integer pipeline's buffers for a pass. Nothing is
+    /// zero-filled: stage 1 overwrites every `xt_codes` element, the panel
+    /// kernel's requantization overwrites every `had_codes` element (its
+    /// i64 channel accumulation happens in a kernel-local row, not here),
+    /// and stage 3 overwrites every `out` element.
+    pub(super) fn prepare_int(&mut self, xt_len: usize, had_len: usize, out_len: usize) {
+        self.xt_codes.resize(xt_len, 0);
+        self.had_codes.resize(had_len, 0);
+        self.out.resize(out_len, 0.0);
+    }
+
+    /// Total buffer capacity currently held, in **bytes**, across the
+    /// float (f64) and integer (i16/i32) workspaces — a worker serving a
+    /// quantized model grows the code panels while the f64 panels stay
+    /// empty, and memory accounting must see both.
     pub fn capacity(&self) -> usize {
-        self.xt.capacity() + self.had.capacity() + self.out.capacity()
+        (self.xt.capacity() + self.had.capacity() + self.out.capacity())
+            * std::mem::size_of::<f64>()
+            + self.xt_codes.capacity() * std::mem::size_of::<i16>()
+            + self.had_codes.capacity() * std::mem::size_of::<i32>()
     }
 
     /// The f64 output staging buffer left by the most recent
@@ -55,6 +83,20 @@ impl EngineScratch {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prepare_int_sizes_code_buffers() {
+        let mut s = EngineScratch::new();
+        s.prepare_int(64, 32, 16);
+        assert_eq!((s.xt_codes.len(), s.had_codes.len(), s.out.len()), (64, 32, 16));
+        // Shrinking keeps capacity; the pass overwrites every element, so
+        // no zeroing is required (or asserted).
+        s.prepare_int(8, 4, 2);
+        assert_eq!((s.xt_codes.len(), s.had_codes.len(), s.out.len()), (8, 4, 2));
+        assert!(s.xt_codes.capacity() >= 64);
+        // The code panels count toward the (byte) capacity accounting.
+        assert!(s.capacity() >= 64 * 2 + 32 * 4 + 16 * 8);
+    }
 
     #[test]
     fn prepare_zeroes_accumulator_and_keeps_capacity() {

@@ -7,9 +7,11 @@
 //!   pipeline of the paper's Fig. 2 (fake-quant + true-integer paths).
 //! * [`nn`] — pure-rust NCHW inference: layers, Winograd conv layer,
 //!   ResNet18 (the serving path).
-//! * [`engine`] — the batched Winograd execution engine: flat tile
+//! * [`engine`] — the batched Winograd execution engines: flat tile
 //!   buffers, per-frequency GEMM panels, scoped-thread parallelism and
 //!   reusable scratch (the serving hot loop; see `docs/ARCHITECTURE.md`).
+//!   [`engine::int`] is the fully integer-domain variant (i16 code
+//!   panels, i64-widened channel reduction) quantized layers serve on.
 //! * [`serve`] — micro-batching inference serving: bounded request
 //!   queue, model registry, transform-plan cache, latency stats (the
 //!   `winoq serve` subsystem).

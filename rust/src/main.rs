@@ -330,9 +330,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mode_label(&mode)
     };
     let (plan_counters, bank_counters) = registry.plans().counters();
+    let int_counters = registry.plans().int_counters();
     eprintln!(
         "model {name:?}: width x{:.2}, {} | {} wino tiles/request | plan cache: {} plans \
-         ({} hits / {} misses), {} weight banks ({} hits / {} misses)",
+         ({} hits / {} misses), {} weight banks ({} hits / {} misses), \
+         {} int code banks ({} hits / {} misses)",
         served.net.cfg.width_mult,
         mode_str,
         served.tiles_per_item(),
@@ -342,6 +344,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         registry.plans().bank_count(),
         bank_counters.hits,
         bank_counters.misses,
+        registry.plans().int_bank_count(),
+        int_counters.hits,
+        int_counters.misses,
     );
 
     // Request pool: distinct synthetic images, round-robined by clients.
@@ -370,7 +375,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // touched at registration, but a future in-session registration
         // flow should not silently report stale telemetry.
         let (pc, bc) = registry.plans().counters();
-        std::fs::write(path, report.to_json_with_plan_cache(pc, bc) + "\n")
+        let ic = registry.plans().int_counters();
+        std::fs::write(path, report.to_json_with_plan_cache(pc, bc, ic) + "\n")
             .with_context(|| format!("writing {path}"))?;
         eprintln!("stats JSON written to {path}");
     }
@@ -413,6 +419,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         std::fs::write(path, json + "\n").with_context(|| format!("writing {path}"))?;
         eprintln!("bench JSON written to {path}");
+    }
+
+    // Integer-engine bench: time the true-integer path against the
+    // dequantize-to-float path on a representative quantized layer at
+    // the served operating point (m/base/quant), and emit BENCH_int.json
+    // (the same emitter `cargo bench --bench conv_throughput` runs on
+    // the bigger acceptance shape).
+    if let Some(path) = args.flag("--int-bench-json") {
+        use winoq::nn::layers::Conv2dCfg;
+        use winoq::nn::winolayer::WinoConv2d;
+        use winoq::testkit::prng_tensor;
+        let Some(q) = quant else {
+            bail!("--int-bench-json requires a quantized mode (--quant w8|w8_h9|uN)");
+        };
+        let c = 32;
+        let x = prng_tensor(0xB1, &[4, c, 32, 32], 1.0);
+        let w = prng_tensor(0xB2, &[c, c, 3, 3], 0.25);
+        let mut layer = WinoConv2d::new(m, &w, base);
+        layer.quantize(q, &x, 1);
+        if layer.int_engine().is_none() {
+            bail!(
+                "--int-bench-json: quant config {} exceeds the i16 code range, \
+                 no integer engine to bench",
+                q.label()
+            );
+        }
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let (json, ratio) =
+            winoq::engine::int::int_vs_float_bench_json(&layer, &x, conv, 1, 3);
+        println!(
+            "int engine vs dequantize-to-float (C=K={c}, 32x32, batch 4, {}): \
+             {ratio:.2}x tiles/s {}",
+            q.label(),
+            if ratio >= 2.0 { "(PASS ≥2x)" } else { "(below 2x bar)" }
+        );
+        std::fs::write(path, json + "\n").with_context(|| format!("writing {path}"))?;
+        eprintln!("int bench JSON written to {path}");
     }
     Ok(())
 }

@@ -17,9 +17,18 @@
 //! nested-loop evaluation is kept as
 //! [`WinoConv2d::forward_reference`] — the bit-for-bit validation oracle
 //! the engine parity tests run against.
+//!
+//! Quantized layers additionally lower an
+//! [`IntWinoEngine`](crate::engine::int::IntWinoEngine) (i16 code
+//! panels, integer-domain channel reduction) at
+//! [`WinoConv2d::quantize`] time, and [`WinoConv2d::forward`] dispatches
+//! to it — the paper's core quantized scenario is the fast path, with
+//! the fake-quant float engine kept as the explicit
+//! [`WinoConv2d::forward_float`] route (training semantics / baseline).
 
 use super::layers::{pad_hw, Conv2dCfg};
 use super::tensor::Tensor;
+use crate::engine::int::{IntWeightBank, IntWinoEngine};
 use crate::engine::layout::extract_tile;
 use crate::engine::{transform_weight_bank, EngineScratch, WinoEngine};
 use crate::quant::scheme::{QuantConfig, Quantizer};
@@ -27,6 +36,7 @@ use crate::wino::basis::Base;
 use crate::wino::matrix::Mat;
 use crate::wino::toomcook::WinogradPlan;
 use crate::wino::transform::WinoF;
+use std::sync::Arc;
 
 /// Per-layer quantization state (calibrated scales), if quantization is on.
 #[derive(Clone, Copy, Debug)]
@@ -48,9 +58,17 @@ pub struct WinoConv2d {
     pub k: usize,
     pub c: usize,
     pub quant: Option<(QuantConfig, LayerScales)>,
-    /// Batched execution engine lowered from `wt` (rebuilt on
-    /// [`quantize`](Self::quantize)).
+    /// Batched float (fake-quant) execution engine lowered from `wt`
+    /// (rebuilt on [`quantize`](Self::quantize)).
     engine: WinoEngine,
+    /// Integer-domain batched engine — built by
+    /// [`quantize_pct`](Self::quantize_pct) whenever the bit config fits
+    /// the i16 code panels; when present, [`forward`](Self::forward)
+    /// dispatches here (quantized serving never dequantizes weights).
+    int_engine: Option<IntWinoEngine>,
+    /// Shared weight-code bank injected by the serve plan cache
+    /// ([`set_int_codes`](Self::set_int_codes)) before calibration.
+    int_codes: Option<Arc<IntWeightBank>>,
 }
 
 impl WinoConv2d {
@@ -93,12 +111,38 @@ impl WinoConv2d {
             }
         }
         let engine = WinoEngine::from_transformed_weights(wf.clone(), &wt, None);
-        WinoConv2d { wf, wt, k, c, quant: None, engine }
+        WinoConv2d { wf, wt, k, c, quant: None, engine, int_engine: None, int_codes: None }
     }
 
-    /// The batched execution engine this layer runs on.
+    /// The batched **float** (fake-quant) execution engine. Quantized
+    /// layers serve through [`int_engine`](Self::int_engine) instead; use
+    /// [`forward_float`](Self::forward_float) to force this path.
     pub fn engine(&self) -> &WinoEngine {
         &self.engine
+    }
+
+    /// The integer-domain engine, present after a
+    /// [`quantize`](Self::quantize) whose bit config fits the i16 code
+    /// panels (see [`IntWinoEngine::supports`]).
+    pub fn int_engine(&self) -> Option<&IntWinoEngine> {
+        self.int_engine.as_ref()
+    }
+
+    /// Inject a shared transformed-weight **code** bank (from
+    /// `serve::plan::PlanCache`) for the upcoming
+    /// [`quantize_pct`](Self::quantize_pct) call: when its quantizer
+    /// matches the layer's computed `weights_t` scale — guaranteed when
+    /// the bank came from this layer's own float bank at the same
+    /// `weight_bits` — the integer engine is lowered from the cached
+    /// codes instead of requantizing, and served model variants share one
+    /// bank. A mismatched bank is ignored (codes are recomputed).
+    pub fn set_int_codes(&mut self, bank: Arc<IntWeightBank>) {
+        assert_eq!(
+            (bank.k, bank.c, bank.nn),
+            (self.k, self.c, self.wf.n * self.wf.n),
+            "weight-code bank shape does not match this layer"
+        );
+        self.int_codes = Some(bank);
     }
 
     /// Enable the quantized pipeline: calibrate scales on a representative
@@ -186,6 +230,20 @@ impl WinoConv2d {
             hadamard: mk(cfg.hadamard_bits, had_max),
             output: mk(cfg.out_bits, out_max),
         };
+        // Integer code bank: reuse an injected (plan-cache-shared) bank
+        // when its quantizer is exactly this layer's weights_t; otherwise
+        // quantize the bank here. Taken from the still-pristine `self.wt`
+        // (requantizing baked values would give the same codes, but the
+        // cached bank's quantizer is calibrated on pristine values, so
+        // this keeps the two routes trivially identical).
+        let int_bank = if IntWinoEngine::supports(&cfg) {
+            Some(match &self.int_codes {
+                Some(b) if b.weights_t == weights_t => b.clone(),
+                _ => Arc::new(IntWeightBank::with_quantizer(&self.wt, weights_t)),
+            })
+        } else {
+            None
+        };
         // Bake weight quantization into the stored transforms.
         for per_c in &mut self.wt {
             for w in per_c.iter_mut() {
@@ -193,22 +251,53 @@ impl WinoConv2d {
             }
         }
         self.quant = Some((cfg, scales));
-        // Re-lower: the engine snapshots the (now fake-quantized) weight
-        // panels and the Fig. 2 cast sites.
+        // Re-lower: the float engine snapshots the (now fake-quantized)
+        // weight panels and the Fig. 2 cast sites; the integer engine
+        // snapshots the code bank and the same calibrated scales.
         self.engine =
             WinoEngine::from_transformed_weights(self.wf.clone(), &self.wt, self.quant);
+        self.int_engine =
+            int_bank.map(|b| IntWinoEngine::from_bank(self.wf.clone(), b, cfg, scales));
     }
 
-    /// Forward pass: `x` [N,C,H,W] → [N,K,H',W'] (stride 1), executed on
-    /// the batched [`WinoEngine`]. Allocates a fresh workspace; serving
-    /// loops should prefer [`forward_with_scratch`](Self::forward_with_scratch).
+    /// Forward pass: `x` [N,C,H,W] → [N,K,H',W'] (stride 1) — the
+    /// **serving path**. Quantized layers with a lowered
+    /// [`IntWinoEngine`] execute fully in the integer domain (i16 code
+    /// panels, integer channel reduction, one Hadamard requant);
+    /// everything else runs the float [`WinoEngine`]. Allocates a fresh
+    /// workspace; serving loops should prefer
+    /// [`forward_with_scratch`](Self::forward_with_scratch).
     pub fn forward(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
-        self.engine.forward(x, cfg)
+        match &self.int_engine {
+            Some(ie) => ie.forward(x, cfg),
+            None => self.engine.forward(x, cfg),
+        }
     }
 
     /// Forward pass reusing caller-held engine scratch buffers (see
     /// [`EngineScratch`]); output is identical to [`forward`](Self::forward).
     pub fn forward_with_scratch(
+        &self,
+        x: &Tensor,
+        cfg: Conv2dCfg,
+        scratch: &mut EngineScratch,
+    ) -> Tensor {
+        match &self.int_engine {
+            Some(ie) => ie.forward_with(x, cfg, scratch),
+            None => self.engine.forward_with(x, cfg, scratch),
+        }
+    }
+
+    /// Forward pass forced onto the float fake-quant [`WinoEngine`] (the
+    /// dequantize-to-float route a server without the integer engine
+    /// would pay) — what the engine-vs-per-tile parity tests and the
+    /// `BENCH_int` baseline measure.
+    pub fn forward_float(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
+        self.engine.forward(x, cfg)
+    }
+
+    /// [`forward_float`](Self::forward_float) with caller-held scratch.
+    pub fn forward_float_with_scratch(
         &self,
         x: &Tensor,
         cfg: Conv2dCfg,
@@ -412,6 +501,50 @@ mod tests {
             s_pct < s_max / 10.0,
             "percentile scale {s_pct} should be far below outlier-driven {s_max}"
         );
+    }
+
+    #[test]
+    fn quantized_forward_dispatches_to_int_engine() {
+        // After quantize(), forward() must be the integer engine's output
+        // (bit-for-bit), with the fake-quant float route still reachable
+        // via forward_float(); a float layer has no int engine at all.
+        let x = prng_tensor(50, &[1, 3, 10, 10], 1.0);
+        let w = prng_tensor(51, &[3, 3, 3, 3], 0.4);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let mut layer = WinoConv2d::new(4, &w, Base::Legendre);
+        assert!(layer.int_engine().is_none());
+        layer.quantize(QuantConfig::w8_h9(), &x, 1);
+        let ie = layer.int_engine().expect("w8_h9 fits the i16 code panels");
+        assert_eq!(layer.forward(&x, cfg).data, ie.forward(&x, cfg).data);
+        assert_eq!(
+            layer.forward_float(&x, cfg).data,
+            layer.engine().forward(&x, cfg).data
+        );
+        let mut scratch = EngineScratch::new();
+        assert_eq!(
+            layer.forward_with_scratch(&x, cfg, &mut scratch).data,
+            layer.forward(&x, cfg).data
+        );
+        // Int and float paths are different numeric routes (the integer
+        // path accumulates exactly; the fake path rounds per term and
+        // detours the input cast through f32), so they agree only to a
+        // few quantization steps — assert same-ballpark, not identity.
+        let yi = layer.forward(&x, cfg);
+        let yf = layer.forward_float(&x, cfg);
+        let signal = yf.max_abs();
+        let mut max_diff = 0.0f32;
+        for (a, b) in yi.data.iter().zip(&yf.data) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        assert!(
+            max_diff <= 0.1 * signal,
+            "int vs float paths diverged: {max_diff} vs signal {signal}"
+        );
+        // A too-wide config falls back to the float engine.
+        let mut wide = WinoConv2d::new(4, &w, Base::Legendre);
+        wide.quantize(QuantConfig::uniform(18), &x, 1);
+        assert!(wide.int_engine().is_none());
+        assert_eq!(wide.forward(&x, cfg).data, wide.forward_float(&x, cfg).data);
     }
 
     #[test]

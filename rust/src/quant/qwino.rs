@@ -17,6 +17,12 @@
 //! A property test asserts the two agree to the dequantization scale — the
 //! guarantee that lets the coordinator serve with the integer path while
 //! training with the fake path.
+//!
+//! [`QWino::forward_int_batch_mc`] extends the integer path to
+//! multi-channel tiles (i64-exact channel accumulation before one
+//! Hadamard requantization) — the scalar oracle the batched
+//! [`IntWinoEngine`](crate::engine::int::IntWinoEngine) is pinned
+//! against bit-for-bit.
 
 use super::scheme::{QuantConfig, Quantizer};
 use crate::engine::hadamard_requant_i32;
@@ -209,6 +215,59 @@ impl QWino {
             .collect()
     }
 
+    /// True-integer correlation of a batch of **multi-channel** tiles
+    /// against one filter's transformed-weight bank — the scalar,
+    /// tile-at-a-time oracle the batched integer engine
+    /// ([`engine::int::IntWinoEngine`](crate::engine::int::IntWinoEngine))
+    /// is pinned against bit-for-bit (`rust/tests/int_parity.rs`).
+    ///
+    /// `xs[t][c]` are `N×N` input tiles (tile `t`, channel `c`); `wt[c]`
+    /// are the **transformed** (`N×N`) weights for one output filter —
+    /// already through whatever weight-side casts the layer bakes (a
+    /// [`WinoConv2d`](crate::nn::winolayer::WinoConv2d) bakes only the
+    /// `weights_t` cast, so its float bank is fed here unchanged). Per
+    /// tile: each channel's transformed-input codes multiply the weight
+    /// codes and accumulate in **i64** (exact, so channel order cannot
+    /// matter), then one Hadamard requantization per frequency point,
+    /// then dequantize → back-transform → output cast.
+    ///
+    /// With `C = 1` and `wt = [transform_weights(fake(w))]` this is
+    /// exactly [`forward_int_batch`](Self::forward_int_batch) — pinned by
+    /// the `mc_oracle_degenerates_to_single_channel` test.
+    pub fn forward_int_batch_mc(
+        &self,
+        xs: &[Vec<Mat>],
+        wt: &[Mat],
+        s: &StageScales,
+    ) -> Vec<Mat> {
+        let n = self.wf.n;
+        let nn = n * n;
+        let c = wt.len();
+        assert!(c > 0, "need at least one channel");
+        let wt_codes: Vec<Vec<i32>> =
+            wt.iter().map(|w| quant_mat(w, &s.weights_t)).collect();
+        let prod_scale = s.input_t.scale * s.weights_t.scale;
+        let mut had = Mat::zeros(n, n);
+        xs.iter()
+            .map(|tiles| {
+                assert_eq!(tiles.len(), c, "tile/filter channel mismatch");
+                let mut acc = vec![0i64; nn];
+                for (ci, x) in tiles.iter().enumerate() {
+                    let qx = fake_mat(x, &s.input);
+                    let codes = quant_mat(&self.wf.transform_input(&qx), &s.input_t);
+                    for f in 0..nn {
+                        acc[f] += codes[f] as i64 * wt_codes[ci][f] as i64;
+                    }
+                }
+                for f in 0..nn {
+                    let code = s.hadamard.quantize(acc[f] as f64 * prod_scale);
+                    had[(f / n, f % n)] = s.hadamard.dequantize(code);
+                }
+                fake_mat(&self.wf.transform_output(&had), &s.output)
+            })
+            .collect()
+    }
+
     /// Measure end-to-end error vs the f64 direct-convolution oracle over
     /// random tiles (experiment M1's quantized variant).
     pub fn measure_error(&self, trials: usize, seed: u64) -> f64 {
@@ -298,6 +357,58 @@ mod tests {
         for (x, yb) in xs.iter().zip(&batched) {
             let y1 = qw.forward_int(x, w, &s);
             assert_eq!(y1.data(), yb.data(), "batched ≠ per-tile integer path");
+        }
+    }
+
+    #[test]
+    fn mc_oracle_degenerates_to_single_channel() {
+        // C = 1 with the transformed fake-quantized weights must be
+        // exactly the classic single-channel integer batch path.
+        for cfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+            let (qw, s, xs, ws) = setup(Base::Chebyshev, cfg);
+            let w = &ws[0];
+            let wt = qw.wf.transform_weights(&fake_mat(w, &s.weights));
+            let mc_xs: Vec<Vec<Mat>> = xs.iter().map(|x| vec![x.clone()]).collect();
+            let got = qw.forward_int_batch_mc(&mc_xs, std::slice::from_ref(&wt), &s);
+            let want = qw.forward_int_batch(&xs, w, &s);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.data(), b.data(), "mc(C=1) ≠ forward_int_batch");
+            }
+        }
+    }
+
+    #[test]
+    fn mc_oracle_accumulates_channels_exactly() {
+        // The i64 channel accumulation is exact: summing per-channel code
+        // products by hand reproduces the oracle's Hadamard codes.
+        let (qw, s, xs, ws) = setup(Base::Legendre, QuantConfig::w8_h9());
+        let c = 3;
+        let tiles: Vec<Vec<Mat>> = xs.chunks(c).take(4).map(|ch| ch.to_vec()).collect();
+        let wt: Vec<Mat> = ws[..c]
+            .iter()
+            .map(|w| qw.wf.transform_weights(&fake_mat(w, &s.weights)))
+            .collect();
+        let got = qw.forward_int_batch_mc(&tiles, &wt, &s);
+        let nn = qw.wf.n * qw.wf.n;
+        let ps = s.input_t.scale * s.weights_t.scale;
+        for (t, tile_set) in tiles.iter().enumerate() {
+            let mut acc = vec![0i64; nn];
+            for (ci, x) in tile_set.iter().enumerate() {
+                let codes =
+                    quant_mat(&qw.wf.transform_input(&fake_mat(x, &s.input)), &s.input_t);
+                let wcodes = quant_mat(&wt[ci], &s.weights_t);
+                for f in 0..nn {
+                    acc[f] += codes[f] as i64 * wcodes[f] as i64;
+                }
+            }
+            let mut had = Mat::zeros(qw.wf.n, qw.wf.n);
+            for f in 0..nn {
+                had[(f / qw.wf.n, f % qw.wf.n)] =
+                    s.hadamard.dequantize(s.hadamard.quantize(acc[f] as f64 * ps));
+            }
+            let want = fake_mat(&qw.wf.transform_output(&had), &s.output);
+            assert_eq!(got[t].data(), want.data(), "tile {t}");
         }
     }
 

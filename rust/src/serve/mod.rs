@@ -16,8 +16,9 @@
 //!                    worker threads (one EngineScratch each)
 //!                          │ stack [C,H,W] items → [B,C,H,W]
 //!                          ▼
-//!            BatchModel::infer_batch (WinoEngine panel pipeline,
-//!              lowered once via registry + PlanCache)
+//!            BatchModel::infer_batch (WinoEngine / IntWinoEngine panel
+//!              pipeline, lowered once via registry + PlanCache —
+//!              quantized layers run integer end-to-end)
 //!                          │ split rows, per-request Response
 //!                          ▼
 //!                  response channels + ServeStats (p50/p95/p99)

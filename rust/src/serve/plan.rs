@@ -14,6 +14,7 @@
 //! is the **only** engine construction route: transforms are computed
 //! once, engines are lowered from cached panels.
 
+use crate::engine::int::{IntWeightBank, MAX_CODE_BITS};
 use crate::engine::transform_weight_bank;
 use crate::nn::tensor::Tensor;
 use crate::wino::basis::Base;
@@ -49,6 +50,10 @@ pub type WeightBank = Vec<Vec<Mat>>;
 
 type BankMap = HashMap<(String, PlanKey), Arc<WeightBank>>;
 
+/// Integer code banks are additionally keyed by the weight bit width —
+/// `w8` and `w8_h9` variants of one layer share a single 8-bit bank.
+type IntBankMap = HashMap<(String, PlanKey, u32), Arc<IntWeightBank>>;
+
 /// Shared cache of lowered transform plans and transformed weight banks.
 ///
 /// Interior mutability (`Mutex`) so one cache can be shared by reference
@@ -59,8 +64,10 @@ type BankMap = HashMap<(String, PlanKey), Arc<WeightBank>>;
 pub struct PlanCache {
     wfs: Mutex<HashMap<PlanKey, Arc<WinoF>>>,
     banks: Mutex<BankMap>,
+    int_banks: Mutex<IntBankMap>,
     wf_counters: Mutex<CacheCounters>,
     bank_counters: Mutex<CacheCounters>,
+    int_counters: Mutex<CacheCounters>,
 }
 
 impl PlanCache {
@@ -107,6 +114,42 @@ impl PlanCache {
         bank
     }
 
+    /// The **i16 transformed-weight code bank** for one quantized layer,
+    /// quantizing the (already-fetched) float bank on first use — how the
+    /// registry serves quantized models without dequantizing: every
+    /// lowered layer's [`IntWinoEngine`](crate::engine::int::IntWinoEngine)
+    /// reads codes straight from this shared bank. `float_bank` must be
+    /// the [`weight_bank`](Self::weight_bank) entry for the same
+    /// `(layer_id, key)` (the registry always holds it already — passing
+    /// it in keeps the float-bank telemetry an honest count of transform
+    /// lookups). Returns `None` when `weight_bits` exceeds the i16 code
+    /// range (such layers fall back to the float engine).
+    pub fn int_weight_bank(
+        &self,
+        layer_id: &str,
+        key: PlanKey,
+        weight_bits: u32,
+        float_bank: &WeightBank,
+    ) -> Option<Arc<IntWeightBank>> {
+        if weight_bits > MAX_CODE_BITS {
+            return None;
+        }
+        let map_key = (layer_id.to_string(), key, weight_bits);
+        let mut map = self.int_banks.lock().unwrap();
+        let mut counters = self.int_counters.lock().unwrap();
+        if let Some(bank) = map.get(&map_key) {
+            counters.hits += 1;
+            return Some(bank.clone());
+        }
+        counters.misses += 1;
+        let bank = Arc::new(
+            IntWeightBank::from_float_bank(float_bank, weight_bits)
+                .expect("weight_bits validated above"),
+        );
+        map.insert(map_key, bank.clone());
+        Some(bank)
+    }
+
     /// Number of distinct plans currently cached.
     pub fn plan_count(&self) -> usize {
         self.wfs.lock().unwrap().len()
@@ -117,12 +160,22 @@ impl PlanCache {
         self.banks.lock().unwrap().len()
     }
 
+    /// Number of distinct integer code banks currently cached.
+    pub fn int_bank_count(&self) -> usize {
+        self.int_banks.lock().unwrap().len()
+    }
+
     /// `(plan, bank)` hit/miss counters.
     pub fn counters(&self) -> (CacheCounters, CacheCounters) {
         (
             *self.wf_counters.lock().unwrap(),
             *self.bank_counters.lock().unwrap(),
         )
+    }
+
+    /// Integer code-bank hit/miss counters.
+    pub fn int_counters(&self) -> CacheCounters {
+        *self.int_counters.lock().unwrap()
     }
 }
 
@@ -158,6 +211,34 @@ mod tests {
         let c = cache.weight_bank("m/conv2", key, &w);
         assert!(!Arc::ptr_eq(&a, &c), "different layer ids are distinct banks");
         assert_eq!(cache.bank_count(), 2);
+    }
+
+    #[test]
+    fn int_banks_shared_across_hadamard_variants() {
+        // w8 and w8_h9 differ only in hadamard bits: one 8-bit code bank
+        // serves both. A different weight width is a distinct bank; a
+        // too-wide width yields None.
+        let cache = PlanCache::new();
+        let key = PlanKey::f(4, 3, Base::Legendre);
+        let w = prng_tensor(9, &[2, 3, 3, 3], 0.5);
+        let float_bank = cache.weight_bank("m/conv1", key, &w);
+        let fb = float_bank.as_ref();
+        let a = cache.int_weight_bank("m/conv1", key, 8, fb).unwrap();
+        let b = cache.int_weight_bank("m/conv1", key, 8, fb).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same (layer, key, bits) must share the bank");
+        let c = cache.int_weight_bank("m/conv1", key, 16, fb).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert!(cache.int_weight_bank("m/conv1", key, 17, fb).is_none());
+        assert_eq!(cache.int_bank_count(), 2);
+        let counters = cache.int_counters();
+        assert_eq!((counters.hits, counters.misses), (1, 2));
+        // And int-bank traffic never touches the float-bank telemetry.
+        let (_, bank_counters) = cache.counters();
+        assert_eq!((bank_counters.hits, bank_counters.misses), (0, 1));
+        // Codes agree with quantizing the cached float bank directly.
+        let fresh = crate::engine::int::IntWeightBank::from_float_bank(fb, 8).unwrap();
+        assert_eq!(a.weights_t, fresh.weights_t);
+        assert_eq!(a.codes(), fresh.codes());
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //! All transform lowering goes through the shared
 //! [`PlanCache`](super::plan::PlanCache): one registry hosting several
 //! variants of a model (w8 vs w8_h9, Legendre vs Chebyshev) builds each
-//! `F(m, r)` plan exactly once.
+//! `F(m, r)` plan exactly once. Quantized layers additionally receive
+//! their **i16 weight-code bank** from the cache
+//! ([`PlanCache::int_weight_bank`](super::plan::PlanCache::int_weight_bank)),
+//! so their integer engines serve from shared codes and a quantized
+//! model never dequantizes its weights on the request path.
 
 use super::plan::{PlanCache, PlanKey};
 use super::BatchModel;
@@ -180,8 +184,21 @@ impl ModelRegistry {
             plan.layer(prefix).map(|l| {
                 let key = PlanKey::f(l.m, 3, l.base);
                 let wf = plans.wf(key);
-                let bank = plans.weight_bank(&format!("{ns}/{prefix}"), key, w);
-                WinoConv2d::from_transformed(wf.as_ref().clone(), bank.as_ref().clone())
+                let layer_id = format!("{ns}/{prefix}");
+                let bank = plans.weight_bank(&layer_id, key, w);
+                let mut conv =
+                    WinoConv2d::from_transformed(wf.as_ref().clone(), bank.as_ref().clone());
+                // Per-layer quantized operating point → per-layer shared
+                // i16 code bank (None only for exotic >16-bit widths).
+                if let Some(ib) = plans.int_weight_bank(
+                    &layer_id,
+                    key,
+                    l.quant.weight_bits,
+                    bank.as_ref(),
+                ) {
+                    conv.set_int_codes(ib);
+                }
+                conv
             })
         });
         let hw = plan.image_hw;
@@ -299,7 +316,7 @@ impl ModelRegistry {
     fn build_net(&self, cfg: ResNetCfg, params: Params, bank_ns: &str) -> ResNet18 {
         use crate::nn::winolayer::WinoConv2d;
         match cfg.mode {
-            ConvMode::Winograd { m, base, .. } => {
+            ConvMode::Winograd { m, base, quant } => {
                 let key = PlanKey::f(m, 3, base);
                 let wf = self.plans.wf(key);
                 let plans = &self.plans;
@@ -308,8 +325,27 @@ impl ModelRegistry {
                     params,
                     &wf,
                     &|prefix: &str, w: &Tensor| {
-                        let bank = plans.weight_bank(&format!("{bank_ns}/{prefix}"), key, w);
-                        WinoConv2d::from_transformed(wf.as_ref().clone(), bank.as_ref().clone())
+                        let layer_id = format!("{bank_ns}/{prefix}");
+                        let bank = plans.weight_bank(&layer_id, key, w);
+                        let mut conv = WinoConv2d::from_transformed(
+                            wf.as_ref().clone(),
+                            bank.as_ref().clone(),
+                        );
+                        // Quantized serving: hand the layer the shared i16
+                        // code bank so calibration lowers its integer
+                        // engine from cached codes instead of requantizing
+                        // per registered variant.
+                        if let Some(q) = quant {
+                            if let Some(ib) = plans.int_weight_bank(
+                                &layer_id,
+                                key,
+                                q.weight_bits,
+                                bank.as_ref(),
+                            ) {
+                                conv.set_int_codes(ib);
+                            }
+                        }
+                        conv
                     },
                 )
             }
@@ -430,6 +466,39 @@ mod tests {
         assert_eq!(reg.plans().bank_count(), 14);
         assert_eq!(bank_counters.misses, 14);
         assert_eq!(bank_counters.hits, 14);
+    }
+
+    #[test]
+    fn quantized_registration_attaches_shared_int_banks() {
+        // Two quantized variants (w8, w8_h9) of one checkpoint: every
+        // lowered layer serves through an integer engine whose weight
+        // codes are one shared plan-cache bank (8-bit codes are common to
+        // both Hadamard widths).
+        let mut reg = ModelRegistry::new();
+        let a = reg
+            .register_synthetic("a", wino_cfg(Some(QuantConfig::w8())), 32, 7, 2)
+            .unwrap();
+        let b = reg
+            .register_synthetic("b", wino_cfg(Some(QuantConfig::w8_h9())), 32, 7, 2)
+            .unwrap();
+        let la = a.net.wino_layer("s0b0.conv1").unwrap();
+        let lb = b.net.wino_layer("s0b0.conv1").unwrap();
+        let ia = la.int_engine().expect("quantized layer must lower an int engine");
+        let ib = lb.int_engine().expect("quantized layer must lower an int engine");
+        assert!(
+            Arc::ptr_eq(ia.bank(), ib.bank()),
+            "variants must share one i16 code bank"
+        );
+        assert_eq!(ia.cfg.hadamard_bits, 8);
+        assert_eq!(ib.cfg.hadamard_bits, 9);
+        // 14 layers: first registration computes each bank, second hits.
+        assert_eq!(reg.plans().int_bank_count(), 14);
+        let ic = reg.plans().int_counters();
+        assert_eq!((ic.hits, ic.misses), (14, 14));
+        // And the served nets produce finite logits through the int path.
+        let x = calibration_batch(&[3, 32, 32], 5, 2);
+        let mut scratch = EngineScratch::new();
+        assert!(a.infer_batch(&x, &mut scratch).data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -146,24 +146,35 @@ impl StatsReport {
     }
 
     /// [`to_json`](Self::to_json) extended with the serving registry's
-    /// transform-plan cache telemetry — hits/misses for the lowered-plan
-    /// and weight-bank maps ([`PlanCache::counters`](super::plan::PlanCache::counters)).
+    /// transform-plan cache telemetry — hits/misses for the lowered-plan,
+    /// float weight-bank and i16 code-bank maps
+    /// ([`PlanCache::counters`](super::plan::PlanCache::counters) /
+    /// [`PlanCache::int_counters`](super::plan::PlanCache::int_counters)).
     /// Heterogeneous (NetPlan-tuned) models make this worth watching: one
-    /// model may populate several `(m, base)` plan entries, and a second
-    /// registration should hit, not re-transform.
-    pub fn to_json_with_plan_cache(&self, plans: CacheCounters, banks: CacheCounters) -> String {
+    /// model may populate several `(m, base)` plan entries, a second
+    /// registration should hit, not re-transform, and quantized variants
+    /// of one checkpoint should *share* code banks, not requantize.
+    pub fn to_json_with_plan_cache(
+        &self,
+        plans: CacheCounters,
+        banks: CacheCounters,
+        int_banks: CacheCounters,
+    ) -> String {
         let core = self.to_json();
         format!(
             concat!(
                 "{}, \"plan_cache\": {{",
                 "\"plans\": {{\"hits\": {}, \"misses\": {}}}, ",
-                "\"banks\": {{\"hits\": {}, \"misses\": {}}}}}}}"
+                "\"banks\": {{\"hits\": {}, \"misses\": {}}}, ",
+                "\"int_banks\": {{\"hits\": {}, \"misses\": {}}}}}}}"
             ),
             &core[..core.len() - 1],
             plans.hits,
             plans.misses,
             banks.hits,
             banks.misses,
+            int_banks.hits,
+            int_banks.misses,
         )
     }
 
@@ -215,10 +226,12 @@ mod tests {
         let j = r.to_json_with_plan_cache(
             CacheCounters { hits: 3, misses: 2 },
             CacheCounters { hits: 28, misses: 14 },
+            CacheCounters { hits: 14, misses: 14 },
         );
         assert!(j.contains("\"plan_cache\""), "{j}");
         assert!(j.contains("\"plans\": {\"hits\": 3, \"misses\": 2}"), "{j}");
         assert!(j.contains("\"banks\": {\"hits\": 28, \"misses\": 14}"), "{j}");
+        assert!(j.contains("\"int_banks\": {\"hits\": 14, \"misses\": 14}"), "{j}");
         // Still one well-formed object: the base keys survive and the
         // braces balance.
         assert!(j.contains("\"completed\""));

@@ -14,6 +14,13 @@
 //!   `outputs_per_sec` (output pixels × filters per second), which is
 //!   invariant to `m` and therefore the unit candidate selection
 //!   compares across tile sizes.
+//!
+//! Both measurements run `WinoConv2d::forward*`, i.e. the **serving
+//! dispatch**: every grid candidate (8-bit codes, so all of them) scores
+//! the real integer-domain engine
+//! ([`IntWinoEngine`](crate::engine::int::IntWinoEngine)) — the path a
+//! NetPlan deploys — not the fake-quant float pipeline
+//! (`int_path_is_what_gets_scored` pins this).
 
 use super::grid::Candidate;
 use crate::benchkit;
@@ -216,6 +223,24 @@ mod tests {
         assert_eq!(rel_l2(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
         let e = rel_l2(&[1.1, 2.0], &[1.0, 2.0]);
         assert!((e - (0.01f64 / 5.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_path_is_what_gets_scored() {
+        // A quantized candidate layer must carry a lowered integer engine
+        // and forward through it — the tuner's numbers describe the path
+        // the NetPlan will actually serve.
+        use crate::engine::transform_weight_bank;
+        let acts = prng_tensor(61, &[1, 3, 10, 10], 1.0);
+        let w = prng_tensor(62, &[3, 3, 3, 3], 0.4);
+        let wf = WinoF::new(&WinogradPlan::new(4, 3), Base::Canonical);
+        let bank = transform_weight_bank(&wf, &w);
+        let cand = Candidate { m: 4, base: Base::Canonical, hadamard_bits: 9 };
+        let mut layer = WinoConv2d::from_transformed(wf.clone(), bank.clone());
+        layer.quantize_pct(cand.quant(), &acts, 1, 100.0);
+        let ie = layer.int_engine().expect("8-bit candidates fit the int engine");
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        assert_eq!(layer.forward(&acts, conv).data, ie.forward(&acts, conv).data);
     }
 
     #[test]

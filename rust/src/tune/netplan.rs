@@ -189,15 +189,19 @@ impl NetPlan {
                 },
             });
         }
+        let width_mult = member(&doc, "width_mult", "NetPlan")?
+            .as_f64()
+            .context("NetPlan width_mult must be a number")?;
+        if !(width_mult > 0.0 && width_mult.is_finite()) {
+            bail!("NetPlan width_mult {width_mult} must be a positive finite number");
+        }
         Ok(NetPlan {
             version,
             model: member(&doc, "model", "NetPlan")?
                 .as_str()
                 .context("NetPlan model must be a string")?
                 .to_string(),
-            width_mult: member(&doc, "width_mult", "NetPlan")?
-                .as_f64()
-                .context("NetPlan width_mult must be a number")? as f32,
+            width_mult: width_mult as f32,
             num_classes: uint(&doc, "num_classes")? as usize,
             image_hw: uint(&doc, "image_hw")? as usize,
             seed: uint(&doc, "seed")?,

@@ -126,10 +126,13 @@ fn engine_matches_per_tile_reference_bit_for_bit_float() {
 
 #[test]
 fn engine_matches_per_tile_reference_in_8bit_path() {
-    // Quantized mode: the acceptance bar is "within quantization
-    // tolerance"; because the engine replays the per-tile cast sites
-    // exactly, the two paths actually agree bit-for-bit — assert the
-    // stronger property and separately sanity-check the tolerance bound.
+    // Quantized mode, **float fake-quant engine** vs the per-tile
+    // reference: the engine replays the per-tile cast sites exactly, so
+    // the two paths agree bit-for-bit — assert the stronger property and
+    // separately sanity-check the tolerance bound. (The serving dispatch
+    // `forward` runs the integer engine for quantized layers — a
+    // different numeric route pinned against its own scalar oracle in
+    // `rust/tests/int_parity.rs`.)
     for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
         for (si, (m, xd, wd, pad)) in shape_sweep().into_iter().enumerate() {
             let x = rand_tensor(500 + si as u64, &xd, 1.0);
@@ -138,7 +141,7 @@ fn engine_matches_per_tile_reference_in_8bit_path() {
             let mut layer = WinoConv2d::new(m, &w, Base::Legendre);
             layer.quantize(qcfg, &x, pad);
             let reference = layer.forward_reference(&x, cfg);
-            let batched = layer.forward(&x, cfg);
+            let batched = layer.forward_float(&x, cfg);
             let out_step = layer
                 .quant
                 .as_ref()

@@ -1,0 +1,137 @@
+//! Golden transform vectors (ISSUE 4): the exact Toom-Cook matrices
+//! `G / A / Bᵀ` and the base-change pair `P / P⁻¹` are pinned
+//! **bit-for-bit** (exact rational equality) against rational-exact JSON
+//! fixtures committed under `rust/tests/golden/` — one file per
+//! `{canonical, legendre, chebyshev} × m ∈ {2, 4, 6}` (kernel 3×3).
+//!
+//! The fixtures were derived independently (an exact-arithmetic mirror
+//! of the construction, cross-checked against the paper's printed 6×6
+//! `Pᵀ`, the integer F(2,3) `Bᵀ` and the monic Legendre/Chebyshev
+//! coefficients), so a regression in `wino/{toomcook,poly,basis}.rs` —
+//! a reordered point ladder, a changed Lagrange-denominator convention,
+//! a recursion slip — fails here against checked-in data that needs no
+//! toolchain-era re-derivation.
+
+use std::path::{Path, PathBuf};
+use winoq::tune::json::{parse, Json};
+use winoq::wino::basis::{Base, BaseChange};
+use winoq::wino::matrix::RatMat;
+use winoq::wino::rational::Rational;
+use winoq::wino::toomcook::WinogradPlan;
+
+const BASES: [&str; 3] = ["canonical", "legendre", "chebyshev"];
+const MS: [usize; 3] = [2, 4, 6];
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn load(base: &str, m: usize) -> Json {
+    let path = golden_dir().join(format!("{base}_m{m}.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading golden fixture {path:?}: {e}"));
+    parse(&text).unwrap_or_else(|e| panic!("golden fixture {path:?} is not valid JSON: {e}"))
+}
+
+/// Parse one `"num/den"` fixture entry into an exact rational.
+fn rat(entry: &Json) -> Rational {
+    let s = entry.as_str().expect("fixture matrix entries are strings");
+    let (num, den) = s.split_once('/').expect("fixture entries are num/den");
+    Rational::new(
+        num.parse::<i128>().expect("fixture numerator"),
+        den.parse::<i128>().expect("fixture denominator"),
+    )
+}
+
+/// Assert `got` equals the fixture matrix under `key`, entry by entry.
+fn assert_matches(doc: &Json, key: &str, got: &RatMat, what: &str) {
+    let rows = doc
+        .get(key)
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("{what}: fixture is missing matrix {key:?}"));
+    assert_eq!(rows.len(), got.rows(), "{what}: {key} row count");
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().expect("fixture rows are arrays");
+        assert_eq!(row.len(), got.cols(), "{what}: {key} column count");
+        for (j, entry) in row.iter().enumerate() {
+            let want = rat(entry);
+            assert!(
+                want == got[(i, j)],
+                "{what}: {key}[{i},{j}] = {} but the golden fixture pins {}",
+                got[(i, j)],
+                want
+            );
+        }
+    }
+}
+
+#[test]
+fn every_fixture_exists() {
+    for base in BASES {
+        for m in MS {
+            let path = golden_dir().join(format!("{base}_m{m}.json"));
+            assert!(path.exists(), "missing golden fixture {path:?}");
+        }
+    }
+}
+
+#[test]
+fn toomcook_matrices_match_golden_bit_for_bit() {
+    // G/A/Bᵀ depend only on m (the standard point ladder), but every
+    // fixture carries them — all nine files must agree with the
+    // construction, so a partial regeneration cannot go stale silently.
+    for base in BASES {
+        for m in MS {
+            let doc = load(base, m);
+            let plan = WinogradPlan::new(m, 3);
+            let what = format!("{base} F({m},3)");
+            assert_eq!(doc.get("n").and_then(Json::as_u64), Some(plan.n as u64));
+            assert_matches(&doc, "a", &plan.a, &what);
+            assert_matches(&doc, "g", &plan.g, &what);
+            assert_matches(&doc, "bt", &plan.bt, &what);
+        }
+    }
+}
+
+#[test]
+fn base_change_matrices_match_golden_bit_for_bit() {
+    for base_name in BASES {
+        let base = Base::from_name(base_name).unwrap();
+        for m in MS {
+            let doc = load(base_name, m);
+            let n = m + 2;
+            let bc = BaseChange::new(base, n);
+            let what = format!("{base_name} n={n}");
+            assert_matches(&doc, "p", &bc.p, &what);
+            assert_matches(&doc, "p_inv", &bc.p_inv, &what);
+        }
+    }
+}
+
+#[test]
+fn fixtures_are_internally_consistent() {
+    // Belt and braces on the committed data itself: P·P⁻¹ = I exactly,
+    // and the canonical base's P is the identity.
+    for base in BASES {
+        for m in MS {
+            let doc = load(base, m);
+            let n = m + 2;
+            let to_ratmat = |key: &str| -> RatMat {
+                let rows = doc.get(key).and_then(Json::as_arr).unwrap();
+                let mut out = RatMat::zeros(rows.len(), n);
+                for (i, row) in rows.iter().enumerate() {
+                    for (j, entry) in row.as_arr().unwrap().iter().enumerate() {
+                        out[(i, j)] = rat(entry);
+                    }
+                }
+                out
+            };
+            let p = to_ratmat("p");
+            let p_inv = to_ratmat("p_inv");
+            assert_eq!(p.matmul(&p_inv), RatMat::identity(n), "{base} m={m}: P·P⁻¹ ≠ I");
+            if base == "canonical" {
+                assert_eq!(p, RatMat::identity(n), "canonical P must be the identity");
+            }
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Integer-engine vs scalar-oracle parity (ISSUE 4 acceptance): the
+//! batched [`IntWinoEngine`] must be **bit-identical** to the `QWino`
+//! integer oracles —
+//!
+//! * [`QWino::forward_int_batch`] (the classic single-channel batch
+//!   path, kept untouched as the reference), and
+//! * [`QWino::forward_int_batch_mc`] (its multi-channel extension:
+//!   i64-exact channel accumulation before one Hadamard requant) —
+//!
+//! for both paper quant configs (`w8`, `w8_h9`) across the canonical,
+//! Legendre and Chebyshev bases, over shapes with edge-clamped tiles,
+//! `C ≠ K` and batch > 1.
+
+use std::sync::Arc;
+use winoq::engine::int::{IntWeightBank, IntWinoEngine};
+use winoq::engine::layout::{extract_tile, TileGrid};
+use winoq::nn::layers::{pad_hw, Conv2dCfg};
+use winoq::nn::winolayer::{LayerScales, WinoConv2d};
+use winoq::quant::{QWino, QuantConfig};
+use winoq::testkit::prng_tensor;
+use winoq::nn::tensor::Tensor;
+use winoq::wino::basis::Base;
+use winoq::wino::error::Prng;
+use winoq::wino::matrix::Mat;
+
+fn fake_mat(m: &Mat, q: &winoq::quant::Quantizer) -> Mat {
+    Mat::from_vec(m.rows(), m.cols(), q.fake_all(m.data()))
+}
+
+#[test]
+fn int_engine_bit_identical_to_single_channel_oracle() {
+    // One 6×6 tile per image (padding 0, m = 4), C = K = 1: the engine
+    // must reproduce QWino::forward_int_batch exactly, config × base.
+    for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+        for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+            let qw = QWino::new(4, 3, base, qcfg);
+            // Tiles come from an f32 tensor (the engine's input type) and
+            // are lifted to f64 exactly — both sides then see identical
+            // values, so parity is bit-for-bit, not cast-for-cast.
+            let t_total = 9;
+            let batch = prng_tensor(77, &[t_total, 1, 6, 6], 1.0);
+            let xs: Vec<Mat> = (0..t_total)
+                .map(|t| extract_tile(&batch, t, 0, 0, 0, 6))
+                .collect();
+            let mut rng = Prng::new(78);
+            let ws: Vec<Mat> = (0..9).map(|_| rng.mat(3, 3, 0.5)).collect();
+            let s = qw.calibrate(&xs, &ws);
+            let w = &ws[0];
+            let oracle = qw.forward_int_batch(&xs, w, &s);
+
+            // Engine side: the transformed fake-quantized filter becomes
+            // a 1×1 weight bank; StageScales map onto LayerScales.
+            let wt = qw.wf.transform_weights(&fake_mat(w, &s.weights));
+            let bank =
+                IntWeightBank::with_quantizer(&[vec![wt]], s.weights_t);
+            let scales = LayerScales {
+                input: s.input,
+                input_t: s.input_t,
+                weights_t: s.weights_t,
+                hadamard: s.hadamard,
+                output: s.output,
+            };
+            let engine =
+                IntWinoEngine::from_bank(qw.wf.clone(), Arc::new(bank), qcfg, scales);
+
+            // The batch already is the tiles, one per image (padding 0,
+            // m = 4 ⇒ exactly one 6×6 tile per 6×6 image).
+            let (y, dims) =
+                engine.forward_f64(&batch, Conv2dCfg { stride: 1, padding: 0 });
+            assert_eq!(dims, [t_total, 1, 4, 4]);
+            for (t, want) in oracle.iter().enumerate() {
+                for i in 0..4 {
+                    for j in 0..4 {
+                        let got = y[(t * 16) + i * 4 + j];
+                        assert_eq!(
+                            got.to_bits(),
+                            want[(i, j)].to_bits(),
+                            "tile {t} ({i},{j}): engine {got} vs oracle {} \
+                             [{base:?} {}]",
+                            want[(i, j)],
+                            qcfg.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn int_engine_bit_identical_to_multichannel_oracle() {
+    // Full layer shapes — C ≠ K, batch > 1, 9×9 output (edge-clamped
+    // tiles at m = 4): the layer's integer engine must equal the scalar
+    // per-tile oracle on every output pixel, config × base × m.
+    for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+        for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+            for m in [2usize, 4] {
+                let x = prng_tensor(500 + m as u64, &[2, 3, 9, 9], 1.0);
+                let w = prng_tensor(600 + m as u64, &[4, 3, 3, 3], 0.4);
+                let conv = Conv2dCfg { stride: 1, padding: 1 };
+                let mut layer = WinoConv2d::new(m, &w, base);
+                layer.quantize(qcfg, &x, 1);
+                let ie = layer.int_engine().expect("paper configs fit the int engine");
+                let (y, dims) = ie.forward_f64(&x, conv);
+                let [bn, k, oh, ow] = dims;
+
+                let sc = layer.quant.unwrap().1;
+                let qw = QWino::with_plan(layer.wf.clone(), qcfg);
+                // The mc oracle reads only {input, input_t, weights_t,
+                // hadamard, output}; the r×r weights slot is unused by
+                // the layer pipeline (WinoConv2d bakes no pre-transform
+                // weight cast), so any placeholder quantizer works.
+                let s = winoq::quant::StageScales {
+                    input: sc.input,
+                    weights: winoq::quant::Quantizer::with_scale(8, 1.0),
+                    input_t: sc.input_t,
+                    weights_t: sc.weights_t,
+                    hadamard: sc.hadamard,
+                    output: sc.output,
+                };
+
+                let padded = pad_hw(&x, 1);
+                let grid = TileGrid::new(&padded.dims, m, 3);
+                let n = layer.wf.n;
+                // Per-tile channel stacks, in engine tile order.
+                let mut tiles: Vec<Vec<Mat>> = Vec::with_capacity(grid.tile_count());
+                for ni in 0..grid.bn {
+                    for th in 0..grid.tiles_h {
+                        for tw in 0..grid.tiles_w {
+                            tiles.push(
+                                (0..3)
+                                    .map(|ci| {
+                                        extract_tile(&padded, ni, ci, th * m, tw * m, n)
+                                    })
+                                    .collect(),
+                            );
+                        }
+                    }
+                }
+                for ki in 0..k {
+                    let oracle = qw.forward_int_batch_mc(&tiles, &layer.wt[ki], &s);
+                    for ni in 0..bn {
+                        for th in 0..grid.tiles_h {
+                            for tw in 0..grid.tiles_w {
+                                let t = grid.tile_index(ni, th, tw);
+                                for i in 0..m {
+                                    let oi = th * m + i;
+                                    if oi >= oh {
+                                        break;
+                                    }
+                                    for j in 0..m {
+                                        let oj = tw * m + j;
+                                        if oj >= ow {
+                                            break;
+                                        }
+                                        let got = y[((ni * k + ki) * oh + oi) * ow + oj];
+                                        let want = oracle[t][(i, j)];
+                                        assert_eq!(
+                                            got.to_bits(),
+                                            want.to_bits(),
+                                            "({ni},{ki},{oi},{oj}): engine {got} vs \
+                                             oracle {want} [{base:?} m={m} {}]",
+                                            qcfg.label()
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn served_dispatch_is_the_int_engine_and_batch_invariant() {
+    // The layer's serving entry points (forward / forward_with_scratch)
+    // must be the integer engine's output, and micro-batching must not
+    // change any single item's result — the property that lets the serve
+    // queue batch quantized requests freely.
+    let x = prng_tensor(901, &[3, 4, 12, 12], 1.0);
+    let w = prng_tensor(902, &[5, 4, 3, 3], 0.4);
+    let conv = Conv2dCfg { stride: 1, padding: 1 };
+    let mut layer = WinoConv2d::new(4, &w, Base::Legendre);
+    layer.quantize(QuantConfig::w8_h9(), &x, 1);
+    let ie = layer.int_engine().unwrap();
+    let batched = layer.forward(&x, conv);
+    assert_eq!(batched.data, ie.forward(&x, conv).data);
+    let item: usize = x.dims[1..].iter().product();
+    let row = batched.data.len() / x.dims[0];
+    for ni in 0..x.dims[0] {
+        let mut dims = x.dims.clone();
+        dims[0] = 1;
+        let single =
+            Tensor::from_vec(&dims, x.data[ni * item..(ni + 1) * item].to_vec());
+        let y1 = layer.forward(&single, conv);
+        assert_eq!(
+            &y1.data[..],
+            &batched.data[ni * row..(ni + 1) * row],
+            "image {ni}: batching changed the integer result"
+        );
+    }
+}

@@ -1,0 +1,201 @@
+//! NetPlan reader robustness (ISSUE 4): adversarial mutations of a valid
+//! NetPlan document must be **rejected with `Err`, never a panic and
+//! never a misparse**. Three mutation families:
+//!
+//! * structural damage (truncation, missing required fields, corrupted
+//!   values) — guaranteed-invalid, so `from_json` must return `Err`;
+//! * random single-byte corruption — may happen to stay valid (flipping
+//!   one digit of a seed is still a plan), so the property is: no panic,
+//!   and any `Ok` result satisfies every schema invariant and survives a
+//!   lossless save/reload round trip (no silent misparse);
+//! * value-domain violations (version, `m`, bit widths, percentile,
+//!   duplicate layers, width) — each specific validation fires.
+
+use winoq::quant::QuantConfig;
+use winoq::tune::netplan::{LayerPlan, NetPlan, NETPLAN_VERSION, SUPPORTED_M};
+use winoq::wino::basis::Base;
+use winoq::wino::error::Prng;
+
+fn sample() -> NetPlan {
+    NetPlan {
+        version: NETPLAN_VERSION,
+        model: "resnet18-synthetic".into(),
+        width_mult: 0.25,
+        num_classes: 10,
+        image_hw: 32,
+        seed: 7,
+        calib_batch: 4,
+        calib_pct: 99.5,
+        layers: vec![
+            LayerPlan {
+                layer: "stem".into(),
+                m: 4,
+                base: Base::Legendre,
+                quant: QuantConfig::w8_h9(),
+            },
+            LayerPlan {
+                layer: "s0b0.conv1".into(),
+                m: 2,
+                base: Base::Canonical,
+                quant: QuantConfig::w8(),
+            },
+            LayerPlan {
+                layer: "s2b1.conv2".into(),
+                m: 6,
+                base: Base::Chebyshev,
+                quant: QuantConfig::w8(),
+            },
+        ],
+    }
+}
+
+/// Every schema invariant the reader promises its consumers. An `Ok`
+/// plan violating any of these is a misparse.
+fn assert_invariants(plan: &NetPlan) {
+    assert_eq!(plan.version, NETPLAN_VERSION);
+    assert!(plan.calib_pct > 0.0 && plan.calib_pct <= 100.0);
+    assert!(plan.width_mult > 0.0 && plan.width_mult.is_finite());
+    for (i, l) in plan.layers.iter().enumerate() {
+        assert!(SUPPORTED_M.contains(&l.m), "layer {i}: m = {}", l.m);
+        for bits in [
+            l.quant.act_bits,
+            l.quant.weight_bits,
+            l.quant.hadamard_bits,
+            l.quant.out_bits,
+        ] {
+            assert!((2..=24).contains(&bits), "layer {i}: {bits} bits");
+        }
+        assert!(
+            !plan.layers[..i].iter().any(|p| p.layer == l.layer),
+            "duplicate layer {:?} survived parsing",
+            l.layer
+        );
+    }
+}
+
+#[test]
+fn every_truncation_errs() {
+    let doc = sample().to_json();
+    let complete = doc.trim_end().len();
+    for len in 0..complete {
+        // Truncating inside a multi-byte char can't happen (the writer
+        // emits pure ASCII), but guard anyway.
+        if !doc.is_char_boundary(len) {
+            continue;
+        }
+        assert!(
+            NetPlan::from_json(&doc[..len]).is_err(),
+            "prefix of {len} bytes parsed as a complete NetPlan"
+        );
+    }
+}
+
+#[test]
+fn every_missing_required_field_errs() {
+    let doc = sample().to_json();
+    for key in [
+        "netplan_version",
+        "model",
+        "width_mult",
+        "num_classes",
+        "image_hw",
+        "seed",
+        "calib",
+        "batch",
+        "pct",
+        "layers",
+        "layer",
+        "m",
+        "base",
+        "act_bits",
+        "weight_bits",
+        "hadamard_bits",
+        "out_bits",
+    ] {
+        // Renaming the key (in every occurrence) makes it missing without
+        // breaking JSON structure — the reader must notice, not guess.
+        let mutated = doc.replace(&format!("\"{key}\":"), &format!("\"x{key}\":"));
+        assert_ne!(mutated, doc, "fixture does not contain {key:?}");
+        assert!(
+            NetPlan::from_json(&mutated).is_err(),
+            "NetPlan parsed without required field {key:?}"
+        );
+    }
+}
+
+#[test]
+fn value_domain_violations_err() {
+    let doc = sample().to_json();
+    let cases: &[(&str, &str)] = &[
+        ("\"netplan_version\": 1", "\"netplan_version\": 2"),
+        ("\"m\": 4", "\"m\": 5"),
+        ("\"m\": 4", "\"m\": -4"),
+        ("\"m\": 4", "\"m\": 4.5"),
+        ("\"legendre\"", "\"hermite\""),
+        ("\"hadamard_bits\": 9", "\"hadamard_bits\": 1"),
+        ("\"hadamard_bits\": 9", "\"hadamard_bits\": 25"),
+        ("\"pct\": 99.5", "\"pct\": 0"),
+        ("\"pct\": 99.5", "\"pct\": 100.5"),
+        ("\"width_mult\": 0.25", "\"width_mult\": 0"),
+        ("\"width_mult\": 0.25", "\"width_mult\": -0.25"),
+        ("\"seed\": 7", "\"seed\": -7"),
+        ("\"seed\": 7", "\"seed\": 9007199254740992"),
+        ("\"layer\": \"s0b0.conv1\"", "\"layer\": \"stem\""),
+    ];
+    for (from, to) in cases {
+        let mutated = doc.replace(from, to);
+        assert_ne!(&mutated, &doc, "pattern {from:?} not found in fixture");
+        assert!(
+            NetPlan::from_json(&mutated).is_err(),
+            "mutation {from:?} -> {to:?} was accepted"
+        );
+    }
+    // Trailing garbage and non-JSON documents.
+    for bad in [
+        format!("{doc} trailing"),
+        "".to_string(),
+        "not json".to_string(),
+        "[1, 2, 3]".to_string(),
+        "{\"netplan_version\": 1".to_string(),
+    ] {
+        assert!(NetPlan::from_json(&bad).is_err(), "accepted {bad:?}");
+    }
+}
+
+#[test]
+fn random_byte_mutations_never_panic_or_misparse() {
+    // 4000 single-byte corruptions at PRNG-chosen positions. The parser
+    // runs inside this test process: a panic fails the test outright; an
+    // Err is the expected outcome; an Ok must be schema-valid and
+    // round-trip losslessly through its own writer.
+    let doc = sample().to_json();
+    let bytes = doc.as_bytes();
+    let mut rng = Prng::new(0xF0220);
+    let (mut errs, mut oks, mut non_utf8) = (0u32, 0u32, 0u32);
+    for _ in 0..4000 {
+        let pos = (rng.next_u64() as usize) % bytes.len();
+        let byte = (rng.next_u64() % 256) as u8;
+        let mut mutated = bytes.to_vec();
+        mutated[pos] = byte;
+        let Ok(text) = String::from_utf8(mutated) else {
+            // from_json takes &str; invalid UTF-8 is rejected upstream.
+            non_utf8 += 1;
+            continue;
+        };
+        match NetPlan::from_json(&text) {
+            Err(_) => errs += 1,
+            Ok(plan) => {
+                assert_invariants(&plan);
+                let reloaded = NetPlan::from_json(&plan.to_json())
+                    .expect("a parsed plan must reserialize losslessly");
+                assert_eq!(reloaded, plan, "save/reload round trip drifted");
+                oks += 1;
+            }
+        }
+    }
+    // The sweep must actually exercise both outcomes (structure breaks
+    // far more often than a digit flips to another digit).
+    assert!(errs > 100, "only {errs} rejections — mutations too tame");
+    assert!(oks > 0, "no mutation stayed valid — invariant arm untested");
+    assert_eq!(errs + oks + non_utf8, 4000);
+}

@@ -1,0 +1,225 @@
+//! Serve-queue stress (ISSUE 4): many submitter threads racing workers,
+//! shape rejection, `close` and `abort` must terminate with **every
+//! request accounted for** — each submission attempt ends in exactly one
+//! of {response received, response channel dropped (abort), typed
+//! `Rejected`} and the counts add up. A hang is a test failure by
+//! construction (the scoped threads would never join).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+use winoq::engine::WinoEngine;
+use winoq::nn::layers::Conv2dCfg;
+use winoq::nn::tensor::Tensor;
+use winoq::serve::{
+    with_server, EngineModel, Rejected, Request, Response, ServeConfig, ServeQueue,
+    ServeStats,
+};
+use winoq::testkit::prng_tensor;
+use winoq::wino::basis::Base;
+
+fn good_item(v: f32) -> Tensor {
+    Tensor::from_vec(&[1, 2, 2], vec![v; 4])
+}
+
+fn bad_item() -> Tensor {
+    Tensor::from_vec(&[2, 2], vec![0.0; 4])
+}
+
+#[test]
+fn submitters_racing_close_and_shape_rejection_account_for_every_request() {
+    const SUBMITTERS: usize = 8;
+    const PER: usize = 60;
+    let q = ServeQueue::with_dims(16, vec![1, 2, 2]);
+    let completed = AtomicUsize::new(0);
+    let closed = AtomicUsize::new(0);
+    let shape = AtomicUsize::new(0);
+    let aborted = AtomicUsize::new(0);
+    let full_retries = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        // One worker echoing inputs back until close-and-drained.
+        s.spawn(|| {
+            while let Some(batch) = q.next_batch(4, Duration::from_micros(200)) {
+                let bsz = batch.len();
+                for req in batch {
+                    let Request { input, enqueued, tx } = req;
+                    let _ = tx.send(Response {
+                        output: input,
+                        latency_us: enqueued.elapsed().as_micros() as u64,
+                        batch_size: bsz,
+                    });
+                }
+            }
+        });
+        for i in 0..SUBMITTERS {
+            let (q, completed, closed, shape, aborted, full_retries) =
+                (&q, &completed, &closed, &shape, &aborted, &full_retries);
+            s.spawn(move || {
+                for j in 0..PER {
+                    let is_bad = (i + j) % 5 == 0;
+                    loop {
+                        let input = if is_bad { bad_item() } else { good_item(j as f32) };
+                        match q.submit(input) {
+                            Ok(rx) => {
+                                match rx.recv() {
+                                    Ok(resp) => {
+                                        assert_eq!(resp.output.dims, vec![1, 2, 2]);
+                                        completed.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    Err(_) => {
+                                        aborted.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                break;
+                            }
+                            Err(Rejected::Full) => {
+                                full_retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::yield_now();
+                            }
+                            Err(Rejected::Closed) => {
+                                closed.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(Rejected::Shape { expected, got }) => {
+                                assert!(is_bad, "well-formed request shape-rejected");
+                                assert_eq!(expected, vec![1, 2, 2]);
+                                assert_eq!(got, vec![2, 2]);
+                                shape.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        // Close mid-flight: later submissions bounce as Closed while
+        // already-admitted requests still drain through the worker.
+        s.spawn(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            q.close();
+        });
+    });
+    let total = completed.load(Ordering::Relaxed)
+        + closed.load(Ordering::Relaxed)
+        + shape.load(Ordering::Relaxed)
+        + aborted.load(Ordering::Relaxed);
+    assert_eq!(total, SUBMITTERS * PER, "request accounting leaked");
+    // close() (not abort) + a draining worker: no admitted request may
+    // lose its response.
+    assert_eq!(aborted.load(Ordering::Relaxed), 0, "close must drain, not drop");
+    assert!(
+        shape.load(Ordering::Relaxed) > 0,
+        "shape rejection never exercised"
+    );
+}
+
+#[test]
+fn abort_race_fails_all_pending_fast_and_strands_nobody() {
+    const SUBMITTERS: usize = 6;
+    const PER: usize = 40;
+    // No worker at all: the queue fills, submitters spin on Full until a
+    // racing abort flips everything to dropped-channel / Closed.
+    let q = ServeQueue::new(8);
+    let outcomes = AtomicUsize::new(0); // aborted-or-closed, the only legal ends
+    let completed = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..SUBMITTERS {
+            let (q, outcomes, completed) = (&q, &outcomes, &completed);
+            s.spawn(move || {
+                for j in 0..PER {
+                    loop {
+                        match q.submit(good_item(j as f32)) {
+                            Ok(rx) => {
+                                match rx.recv() {
+                                    Ok(_) => completed.fetch_add(1, Ordering::Relaxed),
+                                    Err(_) => outcomes.fetch_add(1, Ordering::Relaxed),
+                                };
+                                break;
+                            }
+                            Err(Rejected::Full) => std::thread::yield_now(),
+                            Err(Rejected::Closed) => {
+                                outcomes.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(other) => panic!("unexpected rejection: {other}"),
+                        }
+                    }
+                }
+            });
+        }
+        s.spawn(|| {
+            std::thread::sleep(Duration::from_millis(2));
+            q.abort();
+        });
+    });
+    assert_eq!(completed.load(Ordering::Relaxed), 0, "nothing can complete: no worker");
+    assert_eq!(outcomes.load(Ordering::Relaxed), SUBMITTERS * PER);
+    // "Fails fast": the whole storm (240 requests × 6 threads) must
+    // resolve promptly once aborted, not limp along on timeouts.
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "abort did not fail pending submitters fast"
+    );
+}
+
+#[test]
+fn with_server_under_mixed_load_completes_or_rejects_everything() {
+    // Full server machinery (workers + micro-batching + shape-validating
+    // queue) under concurrent mixed-shape load, shut down by the client
+    // closure returning mid-storm.
+    let w = prng_tensor(7, &[3, 2, 3, 3], 0.4);
+    let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+    let conv = Conv2dCfg { stride: 1, padding: 1 };
+    let model = EngineModel::new(&engine, conv, [2, 8, 8]);
+    let cfg = ServeConfig {
+        max_batch: 4,
+        batch_window_us: 100,
+        queue_cap: 8,
+        workers: 2,
+    };
+    let stats = ServeStats::new();
+    let completed = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    let inputs: Vec<Tensor> = (0..4).map(|i| prng_tensor(100 + i, &[2, 8, 8], 1.0)).collect();
+    with_server(&model, &cfg, &stats, |queue| {
+        std::thread::scope(|s| {
+            for ti in 0..6usize {
+                let (queue, completed, rejected, inputs) =
+                    (queue, &completed, &rejected, &inputs);
+                s.spawn(move || {
+                    for j in 0..30usize {
+                        let wrong_shape = (ti + j) % 7 == 0;
+                        loop {
+                            let input = if wrong_shape {
+                                good_item(1.0) // [1,2,2] ≠ [2,8,8]
+                            } else {
+                                inputs[j % inputs.len()].clone()
+                            };
+                            match queue.submit(input) {
+                                Ok(rx) => {
+                                    rx.recv().expect("worker died mid-session");
+                                    completed.fetch_add(1, Ordering::Relaxed);
+                                    break;
+                                }
+                                Err(Rejected::Full) => std::thread::yield_now(),
+                                Err(Rejected::Shape { .. }) => {
+                                    assert!(wrong_shape);
+                                    rejected.fetch_add(1, Ordering::Relaxed);
+                                    break;
+                                }
+                                Err(other) => panic!("unexpected rejection: {other}"),
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    });
+    assert_eq!(
+        completed.load(Ordering::Relaxed) + rejected.load(Ordering::Relaxed),
+        6 * 30,
+        "request accounting leaked under the full server machinery"
+    );
+    assert!(rejected.load(Ordering::Relaxed) > 0);
+    assert_eq!(stats.completed() as usize, completed.load(Ordering::Relaxed));
+}

@@ -16,6 +16,12 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Numeric-stack regression nets, run explicitly so a future test-filter
+# change can never silently drop them: the rational-exact golden
+# transform fixtures and the integer-engine-vs-scalar-oracle parity.
+echo "==> golden transform vectors + int-vs-oracle parity"
+cargo test -q --test golden_transforms --test int_parity
+
 # Serve smoke: the micro-batching server must complete a synthetic
 # closed-loop run and report non-zero completions in its stats JSON.
 # Also refreshes the serve bench trajectory (BENCH_serve.json).
@@ -35,6 +41,25 @@ if [ -z "$COMPLETED" ] || [ "$COMPLETED" -eq 0 ]; then
 fi
 echo "serve smoke OK ($COMPLETED requests completed)"
 rm -f "$SMOKE_JSON"
+
+# Integer-engine smoke: a 9-bit-Hadamard quantized serve run must
+# complete (the quantized serving path is the integer engine) and the
+# int-vs-float bench must emit a non-degenerate BENCH_int.json.
+echo "==> winoq serve int-engine smoke (w8_h9) + BENCH_int.json"
+INT_JSON="$SCRIPT_DIR/../BENCH_int.json"
+./target/release/winoq serve --synthetic --quant w8_h9 --requests 32 \
+  --max-batch 8 --int-bench-json "$INT_JSON"
+if [ ! -s "$INT_JSON" ] || ! grep -q '"bench": "int_engine"' "$INT_JSON"; then
+  echo "int smoke FAILED: BENCH_int.json missing or malformed" >&2
+  exit 1
+fi
+if ! grep -q '"tiles_per_sec_ratio_int_vs_float"' "$INT_JSON" \
+   || grep -q '"tiles_per_sec": 0\.0' "$INT_JSON"; then
+  echo "int smoke FAILED: BENCH_int.json is degenerate" >&2
+  cat "$INT_JSON" >&2
+  exit 1
+fi
+echo "int smoke OK"
 
 # Tune smoke: the autotuner must sweep a tiny grid (2 layers × 2
 # candidates), emit a valid BENCH_tune.json + NetPlan, and the serve path
