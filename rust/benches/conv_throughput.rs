@@ -3,7 +3,7 @@
 //! [`WinoEngine`] (canonical/Legendre, float/quantized) on realistic
 //! ResNet-stage shapes, reporting tiles/sec for the Winograd paths.
 //!
-//! Two claims are on the line:
+//! Three claims are on the line:
 //! * the paper's §1 arithmetic argument — Winograd's reduced
 //!   multiplication count (2.25 vs 9 mults/output for F(4,3)) yields real
 //!   speedups over direct convolution;
@@ -11,11 +11,21 @@
 //!   ≥ 3× faster than the per-tile reference path on the ResNet18-shaped
 //!   layer (C=K=64, 32×32, batch 8), from GEMM-shaped panels, scratch
 //!   reuse and thread parallelism (set `WINOQ_THREADS=1` to isolate the
-//!   layout win from the threading win).
+//!   layout win from the threading win);
+//! * the micro-kernel acceptance bar — the register-tiled panel GEMM
+//!   (`engine::gemm`) must be ≥ 1.5× faster than the naive stage-2 loops
+//!   on both the float and integer kernels (`BENCH_gemm.json`), while
+//!   staying bit-identical to them.
+//!
+//! Engine runs also print the per-stage wall-time breakdown
+//! (input-transform / hadamard / inverse) accumulated in the
+//! [`EngineScratch`], the same `stage_ns` view `winoq serve` exports in
+//! its stats JSON.
 //!
 //! Run: `cargo bench --bench conv_throughput`
 
 use winoq::benchkit;
+use winoq::engine::gemm;
 use winoq::engine::int::int_vs_float_bench_json;
 use winoq::engine::EngineScratch;
 use winoq::nn::layers::{conv2d, Conv2dCfg};
@@ -28,6 +38,25 @@ use winoq::wino::error::Prng;
 fn rand_tensor(rng: &mut Prng, dims: &[usize], scale: f64) -> Tensor {
     let n = dims.iter().product();
     Tensor::from_vec(dims, (0..n).map(|_| rng.uniform(scale) as f32).collect())
+}
+
+/// Render the scratch's cumulative stage breakdown (input-transform /
+/// hadamard / inverse wall-ns with percentages) and reset it — the
+/// per-stage view that tells future perf PRs *which* stage moved.
+fn print_stage_breakdown(label: &str, scratch: &mut EngineScratch) {
+    let s = scratch.take_stage_ns();
+    let total = (s[0] + s[1] + s[2]).max(1);
+    let pct = |v: u64| 100.0 * v as f64 / total as f64;
+    println!(
+        "  stages [{label}]: input-transform {} ns ({:.1}%) | hadamard {} ns ({:.1}%) \
+         | inverse {} ns ({:.1}%)",
+        s[0],
+        pct(s[0]),
+        s[1],
+        pct(s[1]),
+        s[2],
+        pct(s[2]),
+    );
 }
 
 /// Per-stage sweep: direct vs engine-backed Winograd layer on single images.
@@ -92,6 +121,7 @@ fn engine_vs_per_tile(rng: &mut Prng) {
     let mut scratch = EngineScratch::new();
     let s_eng = benchkit::bench(1, 5, || layer.forward_with_scratch(&x, cfg, &mut scratch));
     benchkit::report("batched engine (flat buffers)", &s_eng, Some((tiles, "tiles")));
+    print_stage_breakdown("float engine, warmup+samples", &mut scratch);
     benchkit::report_speedup("engine vs per-tile", &s_ref, &s_eng);
 
     let ok = benchkit::speedup(&s_ref, &s_eng) >= 3.0;
@@ -104,6 +134,31 @@ fn engine_vs_per_tile(rng: &mut Prng) {
     let yr = layer.forward_reference(&x, cfg);
     let ye = layer.forward_with_scratch(&x, cfg, &mut scratch);
     assert_eq!(yr.data, ye.data, "engine/per-tile outputs diverged");
+    println!();
+}
+
+/// Register-tiled panel GEMM vs the naive oracles on the ResNet18
+/// acceptance shape, emitting `BENCH_gemm.json` (path override:
+/// `WINOQ_BENCH_GEMM`) — the same emitter `winoq bench --gemm-json`
+/// runs, and the run asserts tiled/naive bit-parity on the measured
+/// buffers. Acceptance bar: ≥ 1.5× tiles/sec on both the float and the
+/// integer kernel.
+fn gemm_tiled_vs_naive() {
+    // C = K = 64, 32×32, batch 8, F(4,3): T = 512 tiles, N² = 36.
+    println!("── panel GEMM: tiled vs naive, C=K=64 T=512 N²=36 ──");
+    let (json, fr, ir) = gemm::gemm_bench_json(64, 64, 512, 36, 1, 5);
+    println!("{json}");
+    println!(
+        "acceptance (tiled ≥ 1.5x naive tiles/s): float {} ({fr:.2}x), int {} ({ir:.2}x)",
+        if fr >= 1.5 { "PASS" } else { "FAIL" },
+        if ir >= 1.5 { "PASS" } else { "FAIL" },
+    );
+    let path =
+        std::env::var("WINOQ_BENCH_GEMM").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    match std::fs::write(&path, json + "\n") {
+        Ok(()) => println!("BENCH_gemm.json written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
     println!();
 }
 
@@ -135,6 +190,7 @@ fn int_vs_dequantize_float(rng: &mut Prng) {
 fn main() {
     let mut rng = Prng::new(9);
     engine_vs_per_tile(&mut rng);
+    gemm_tiled_vs_naive();
     int_vs_dequantize_float(&mut rng);
     stage_shapes(&mut rng);
     println!("note: the arithmetic-count advantage is 9/2.25 = 4.0x; the measured");

@@ -81,6 +81,11 @@ pub const VALUE_FLAGS: &[FlagSpec] = &[
         metavar: "PATH",
         help: "serve: time the integer engine vs the dequantize-to-float path (BENCH_int.json)",
     },
+    FlagSpec {
+        name: "--gemm-json",
+        metavar: "PATH",
+        help: "bench: time the tiled panel GEMM vs the naive oracles (BENCH_gemm.json)",
+    },
     // tune flags (see `winoq tune`); --plan is shared with `winoq serve`
     FlagSpec {
         name: "--plan",
@@ -253,6 +258,9 @@ COMMANDS:
                     [--objective error|throughput|balanced] [--max-err E]
                     [--calib-pct P] [--calib-batch N] [--width-mult F]
                     [--plan-out netplan.json] [--out BENCH_tune.json]
+  bench           in-binary micro-benchmarks (no cargo-bench recompile)
+                    --gemm-json BENCH_gemm.json [--m 4]
+                    (tiled panel GEMM vs naive oracles, float + int)
   help            this message
 ";
 
@@ -379,6 +387,19 @@ mod tests {
     fn serve_plan_flag_registered() {
         let a = Args::parse(&sv(&["serve", "--synthetic", "--plan", "netplan.json"])).unwrap();
         assert_eq!(a.flag("--plan"), Some("netplan.json"));
+    }
+
+    #[test]
+    fn bench_gemm_json_flag_registered() {
+        // The bench subcommand's flag lives in VALUE_FLAGS like every
+        // other flag: it takes a value, is rendered by help(), and a
+        // typo'd variant is a hard error.
+        let a = Args::parse(&sv(&["bench", "--gemm-json", "BENCH_gemm.json"])).unwrap();
+        assert_eq!(a.flag("--gemm-json"), Some("BENCH_gemm.json"));
+        assert!(Args::parse(&sv(&["bench", "--gemm-json"])).is_err(), "value required");
+        assert!(Args::parse(&sv(&["bench", "--gem-json", "x"])).is_err(), "typo rejected");
+        assert!(help().contains("--gemm-json"));
+        assert!(help().contains("bench "), "help must document the bench command");
     }
 
     #[test]

@@ -1,0 +1,679 @@
+//! Register-tiled, cache-blocked panel GEMM — the shared micro-kernel
+//! layer under both execution engines' Hadamard stage.
+//!
+//! Every forward pass ([`WinoEngine`](super::WinoEngine) and
+//! [`IntWinoEngine`](super::int::IntWinoEngine) alike) bottoms out in the
+//! per-frequency `[K,C] × [C,T]` panel multiplies. The original stage-2
+//! loops walked unpacked panels one scalar row at a time, re-reading each
+//! input row `K` times from cache and re-writing each output row `C`
+//! times; the integer path additionally paid a `Quantizer::quantize` call
+//! (with its per-element `qmax` range assert) for every output code. This
+//! module restructures that work the BLIS way without leaving portable
+//! Rust (no intrinsics — the kernels are shaped so the compiler
+//! auto-vectorizes them):
+//!
+//! * **`MR`×`NR` register tiles** — the micro-kernels keep an
+//!   `MR × NR` block of accumulators in registers across the whole
+//!   channel reduction, so each output element is written exactly once
+//!   and each packed operand element is loaded once per `MR`/`NR` reuse.
+//! * **Packed operand panels** — weights are repacked **once at lowering
+//!   time** into `[N²][⌈K/MR⌉][C][MR]` ([`Packed`]), so the micro-kernel
+//!   reads them unit-stride; input panels are streamed through a
+//!   `C`×[`NC`]-blocked packing buffer ([`pack_x_block`], layout
+//!   `[⌈NC/NR⌉][C][NR]`) owned by the caller's
+//!   [`EngineScratch`](super::scratch::EngineScratch).
+//! * **Fused requantize epilogue** (integer path) — the `prod_scale`
+//!   multiply, the divide-by-step, the round and the clamp are hoisted
+//!   out of `Quantizer::quantize` into
+//!   [`Requant`](crate::quant::scheme::Requant), applied per register
+//!   tile: no per-element function call, no per-element range assert.
+//! * **Two-dimensional parallelism** — work splits over
+//!   `(frequency × T-blocks)` instead of frequency only
+//!   ([`parallel::par_for_states`]), so a small-`N²` layer with a wide
+//!   tile axis no longer leaves workers idle.
+//!
+//! **Bit-parity is a hard constraint**, not a tolerance: the float tiled
+//! path must equal [`panel_mul_f64_naive`] bit-for-bit and the integer
+//! tiled path must equal
+//! [`panel_mul_requant_i16_naive`](super::int::panel_mul_requant_i16_naive)
+//! exactly (`rust/tests/gemm_property.rs` pins both over randomized
+//! ragged shapes). Two design decisions follow from it:
+//!
+//! * **No channel (KC) blocking in the float kernel.** Splitting the
+//!   channel reduction into partial sums would reassociate the f64
+//!   accumulation chain (`((0 + p₀) + p₁) + …` per `(k, t)`) and change
+//!   low bits. The micro-kernel therefore runs the **full** `C` reduction
+//!   per register tile — i.e. `KC = C`. The hosted layer shapes keep
+//!   `C ≤ 512`, so one `[C][MR]` weight micro-panel plus one `[C][NR]`
+//!   input micro-panel is at most ~48 KB — L2-resident, which is what KC
+//!   blocking buys anyway. The integer kernel's i64 accumulation is
+//!   exact, so blocking *couldn't* perturb it, but it shares the same
+//!   loop structure for simplicity.
+//! * **The epilogue keeps `quantize`'s exact operation sequence**
+//!   (`(acc·prod_scale) / scale`, round, clamp). Folding the two scale
+//!   factors into one multiplier would introduce a second rounding (of
+//!   `prod_scale / scale` itself) and flip codes near ties — see
+//!   [`Quantizer::requant`](crate::quant::scheme::Quantizer::requant).
+//!
+//! Ragged edges (`K % MR ≠ 0`, `T % NR ≠ 0`) are handled by zero-padding
+//! the *packed* operands: padded lanes are computed and discarded at
+//! store time, so the hot loop has no tail branches. Padding cannot
+//! perturb real outputs — each `(k, t)` accumulator chain is independent.
+
+use std::time::Instant;
+
+use super::parallel;
+use crate::benchkit;
+use crate::quant::scheme::{Quantizer, Requant};
+use crate::wino::error::Prng;
+
+/// Register-tile rows (output filters per micro-kernel). With `NR = 8`,
+/// an `MR × NR` f64 accumulator block is 8 four-wide vector registers —
+/// the classic auto-vectorizable shape on AVX2-class hardware, and small
+/// enough to stay in registers on NEON too.
+pub const MR: usize = 4;
+
+/// Register-tile columns (tiles per micro-kernel). See [`MR`].
+pub const NR: usize = 8;
+
+/// `T`-axis cache-block width: one packed `[C][NC]` input block stays
+/// resident while every `K` row-block streams over it. Must be a
+/// multiple of [`NR`] so only the final block has a ragged tail.
+pub const NC: usize = 256;
+
+const _: () = assert!(NC % NR == 0, "NC must be a multiple of NR");
+
+/// Worker count for one panel-GEMM dispatch: the thread pool clamped to
+/// the `(frequency × T-block)` item grid the kernels split over. The
+/// one definition callers size their packing-buffer leases with — keep
+/// it in lockstep with the `nn * t_total.div_ceil(NC)` grid inside
+/// [`panel_gemm_f64`] / [`panel_gemm_requant_i16`].
+pub fn workers_for(nn: usize, t_total: usize) -> usize {
+    parallel::num_threads().min(nn * t_total.div_ceil(NC)).max(1)
+}
+
+/// Geometry of one panel multiply: input channels, output filters and
+/// frequency points (`N²`); the tile count `T` is inferred from the
+/// panel lengths. Shared by the float and integer raw-slice entries
+/// (re-exported as `engine::int::PanelDims` for the integer oracles).
+#[derive(Clone, Copy, Debug)]
+pub struct PanelDims {
+    pub c: usize,
+    pub k: usize,
+    pub nn: usize,
+}
+
+/// A weight bank repacked for the micro-kernel: layout
+/// `[N²][⌈K/MR⌉][C][MR]`, i.e. for one frequency point and one
+/// `MR`-row block, the `MR` weights of each channel are contiguous.
+/// Ragged `K` tails are zero-padded so the kernel never branches on row
+/// count. Packed once at lowering time (engine construction /
+/// [`IntWeightBank`](super::int::IntWeightBank) quantization) and shared
+/// across served model variants via
+/// [`PlanCache`](crate::serve::plan::PlanCache).
+pub struct Packed<T> {
+    /// Frequency points `N²`.
+    pub nn: usize,
+    /// Output filters (unpadded).
+    pub k: usize,
+    /// Input channels.
+    pub c: usize,
+    data: Vec<T>,
+}
+
+/// Packed float weight panels (the [`WinoEngine`](super::WinoEngine) bank).
+pub type PackedF64 = Packed<f64>;
+
+/// Packed i16 weight-code panels (the
+/// [`IntWeightBank`](super::int::IntWeightBank) codes).
+pub type PackedI16 = Packed<i16>;
+
+impl<T: Copy> Packed<T> {
+    /// Number of `MR`-row blocks covering `k` rows.
+    #[inline]
+    pub fn row_blocks(&self) -> usize {
+        self.k.div_ceil(MR)
+    }
+
+    /// Repack a `[N²] × [K] × [C]` weight bank (supplied through the
+    /// `at(f, k, c)` accessor so float mats and flat code slices share
+    /// one packer) into the micro-kernel layout. `zero` pads ragged `K`
+    /// tails.
+    pub fn pack(
+        nn: usize,
+        k: usize,
+        c: usize,
+        zero: T,
+        at: impl Fn(usize, usize, usize) -> T,
+    ) -> Packed<T> {
+        assert!(nn > 0 && k > 0 && c > 0, "degenerate panel shape");
+        let kb = k.div_ceil(MR);
+        let mut data = vec![zero; nn * kb * c * MR];
+        for f in 0..nn {
+            for b in 0..kb {
+                let base = (f * kb + b) * c * MR;
+                for ci in 0..c {
+                    for i in 0..MR {
+                        let ki = b * MR + i;
+                        if ki < k {
+                            data[base + ci * MR + i] = at(f, ki, ci);
+                        }
+                    }
+                }
+            }
+        }
+        Packed { nn, k, c, data }
+    }
+
+    /// The packed `[⌈K/MR⌉][C][MR]` panel for frequency point `f`.
+    #[inline]
+    pub fn panel(&self, f: usize) -> &[T] {
+        let len = self.row_blocks() * self.c * MR;
+        &self.data[f * len..][..len]
+    }
+
+    /// Reconstruct the row-major `[K][C]` panel for frequency `f` — the
+    /// pre-packing layout, for tests and introspection (the packed form
+    /// is the only one stored).
+    pub fn unpacked_panel(&self, f: usize) -> Vec<T> {
+        let pan = self.panel(f);
+        let mut out = Vec::with_capacity(self.k * self.c);
+        for ki in 0..self.k {
+            let (b, i) = (ki / MR, ki % MR);
+            for ci in 0..self.c {
+                out.push(pan[(b * self.c + ci) * MR + i]);
+            }
+        }
+        out
+    }
+
+    /// Packed element count (pad included) — memory-accounting helper.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Never empty by construction ([`pack`](Self::pack) rejects
+    /// degenerate shapes); present for `len`/`is_empty` symmetry.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Pack one `(f, T-block)` slice of a `[C][N²][T]` input panel into
+/// `buf`, layout `[⌈block.len()/NR⌉][C][NR]`: for each `NR`-wide column
+/// block, the `C` channel rows are contiguous, unit-stride for the
+/// micro-kernel. Ragged column tails are zero-padded **explicitly** (no
+/// blanket memset of a buffer whose every real lane is about to be
+/// overwritten — only the `cols < NR` tail lanes of the final column
+/// block pay a fill). The buffer only grows (capacity and stale length
+/// retained across calls — it lives in
+/// [`EngineScratch`](super::scratch::EngineScratch)); the kernels read
+/// exactly the `⌈block.len()/NR⌉ · C · NR` elements written here.
+pub fn pack_x_block<T: Copy + Default>(
+    xt: &[T],
+    nn: usize,
+    c: usize,
+    t_total: usize,
+    f: usize,
+    block: std::ops::Range<usize>,
+    buf: &mut Vec<T>,
+) {
+    let (tb, te) = (block.start, block.end);
+    let njb = (te - tb).div_ceil(NR);
+    let need = njb * c * NR;
+    if buf.len() < need {
+        buf.resize(need, T::default());
+    }
+    for jb in 0..njb {
+        let t0 = tb + jb * NR;
+        let cols = (te - t0).min(NR);
+        for ci in 0..c {
+            let src = &xt[(ci * nn + f) * t_total + t0..][..cols];
+            let dst = &mut buf[(jb * c + ci) * NR..][..NR];
+            dst[..cols].copy_from_slice(src);
+            for pad in &mut dst[cols..] {
+                *pad = T::default();
+            }
+        }
+    }
+}
+
+/// Raw output cursor handed to the 2-D parallel loop. Each `(f, T-block)`
+/// work item writes only rows `(f, k, tb..te)` of the `[N²][K][T]` output
+/// — ranges that partition the buffer — so concurrent writers never
+/// alias.
+struct OutPtr<T>(*mut T);
+
+// SAFETY: the pointer is only dereferenced through disjoint
+// `(f, k, column-range)` row slices (one work item per `(f, T-block)`,
+// see `panel_gemm_f64` / `panel_gemm_requant_i16`), and the pointee
+// outlives the scoped threads that use it.
+unsafe impl<T: Send> Send for OutPtr<T> {}
+unsafe impl<T: Send> Sync for OutPtr<T> {}
+
+/// Float per-frequency panel multiply over packed weights — stage 2 of
+/// [`WinoEngine::execute_into`](super::WinoEngine::execute_into).
+///
+/// `xt` is `[C][N²][T]`, `had` is `[N²][K][T]`; every `had` element is
+/// written exactly once (no pre-zeroing needed). When `fake` is set
+/// (Fig. 2 quantized pipeline), the Hadamard cast is applied at store
+/// time — elementwise on the fully-accumulated sums, the same values the
+/// naive path casts after its accumulation loop. `packs` supplies one
+/// input packing buffer per worker (at least one; see
+/// [`parallel::par_for_states`]).
+///
+/// Bit-for-bit equal to [`panel_mul_f64_naive`]: each `(k, f, t)`
+/// accumulator runs the identical `c = 0..C` fused chain, register-tiled
+/// but never reassociated.
+pub fn panel_gemm_f64(
+    pw: &PackedF64,
+    xt: &[f64],
+    t_total: usize,
+    fake: Option<&Quantizer>,
+    had: &mut [f64],
+    packs: &mut [Vec<f64>],
+) {
+    let (nn, k, c) = (pw.nn, pw.k, pw.c);
+    assert_eq!(xt.len(), c * nn * t_total, "xt panel not [C][N²][T]");
+    assert_eq!(had.len(), nn * k * t_total, "had panel not [N²][K][T]");
+    if t_total == 0 {
+        return;
+    }
+    let n_tb = t_total.div_ceil(NC);
+    let out = OutPtr(had.as_mut_ptr());
+    parallel::par_for_states(nn * n_tb, packs, |item, buf| {
+        let f = item / n_tb;
+        let tb = (item % n_tb) * NC;
+        let te = (tb + NC).min(t_total);
+        pack_x_block(xt, nn, c, t_total, f, tb..te, buf);
+        let wpan = pw.panel(f);
+        let njb = (te - tb).div_ceil(NR);
+        for b in 0..k.div_ceil(MR) {
+            let a = &wpan[b * c * MR..][..c * MR];
+            let rows = (k - b * MR).min(MR);
+            for jb in 0..njb {
+                let bx = &buf[jb * c * NR..][..c * NR];
+                let mut acc = [[0.0f64; NR]; MR];
+                for ci in 0..c {
+                    let av = &a[ci * MR..][..MR];
+                    let bv = &bx[ci * NR..][..NR];
+                    for (ai, av) in av.iter().enumerate() {
+                        for (bj, bv) in bv.iter().enumerate() {
+                            acc[ai][bj] += av * bv;
+                        }
+                    }
+                }
+                let t0 = tb + jb * NR;
+                let cols = (te - t0).min(NR);
+                for (i, acc_row) in acc.iter().enumerate().take(rows) {
+                    // SAFETY: rows `(f, b·MR + i, t0..t0+cols)` are
+                    // disjoint across work items and across `i`; `had`
+                    // outlives the parallel scope and is not otherwise
+                    // touched while it runs.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out.0.add((f * k + b * MR + i) * t_total + t0),
+                            cols,
+                        )
+                    };
+                    match fake {
+                        Some(q) => {
+                            for (dst, &v) in row.iter_mut().zip(acc_row) {
+                                *dst = q.fake(v);
+                            }
+                        }
+                        None => row.copy_from_slice(&acc_row[..cols]),
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Integer per-frequency panel multiply with the fused requantize
+/// epilogue — stage 2 of
+/// [`IntWinoEngine::execute_into`](super::int::IntWinoEngine::execute_into).
+///
+/// `xt_codes` is `[C][N²][T]` i16, `had_codes` is `[N²][K][T]` i32.
+/// Products are widened i16×i16→i32 and accumulated in i64 register
+/// tiles (exact for any hosted `C`, so register tiling cannot perturb
+/// the result); each finished accumulator is requantized through `rq`
+/// ([`Quantizer::requant`]) — bit-identical to
+/// `hq.quantize(acc as f64 * prod_scale)` by construction.
+pub fn panel_gemm_requant_i16(
+    pw: &PackedI16,
+    xt_codes: &[i16],
+    t_total: usize,
+    rq: &Requant,
+    had_codes: &mut [i32],
+    packs: &mut [Vec<i16>],
+) {
+    let (nn, k, c) = (pw.nn, pw.k, pw.c);
+    assert_eq!(xt_codes.len(), c * nn * t_total, "xt panel not [C][N²][T]");
+    assert_eq!(had_codes.len(), nn * k * t_total, "had panel not [N²][K][T]");
+    if t_total == 0 {
+        return;
+    }
+    let n_tb = t_total.div_ceil(NC);
+    let out = OutPtr(had_codes.as_mut_ptr());
+    parallel::par_for_states(nn * n_tb, packs, |item, buf| {
+        let f = item / n_tb;
+        let tb = (item % n_tb) * NC;
+        let te = (tb + NC).min(t_total);
+        pack_x_block(xt_codes, nn, c, t_total, f, tb..te, buf);
+        let wpan = pw.panel(f);
+        let njb = (te - tb).div_ceil(NR);
+        for b in 0..k.div_ceil(MR) {
+            let a = &wpan[b * c * MR..][..c * MR];
+            let rows = (k - b * MR).min(MR);
+            for jb in 0..njb {
+                let bx = &buf[jb * c * NR..][..c * NR];
+                let mut acc = [[0i64; NR]; MR];
+                for ci in 0..c {
+                    let av = &a[ci * MR..][..MR];
+                    let bv = &bx[ci * NR..][..NR];
+                    for (ai, &av) in av.iter().enumerate() {
+                        let aw = av as i32;
+                        for (bj, &bv) in bv.iter().enumerate() {
+                            acc[ai][bj] += (aw * bv as i32) as i64;
+                        }
+                    }
+                }
+                let t0 = tb + jb * NR;
+                let cols = (te - t0).min(NR);
+                for (i, acc_row) in acc.iter().enumerate().take(rows) {
+                    // SAFETY: see `panel_gemm_f64` — same disjoint
+                    // `(f, row, column-range)` partition.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out.0.add((f * k + b * MR + i) * t_total + t0),
+                            cols,
+                        )
+                    };
+                    for (dst, &v) in row.iter_mut().zip(acc_row) {
+                        *dst = rq.apply(v);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `T`-dimension block size of the retired in-engine float loop, kept in
+/// the oracle so [`panel_mul_f64_naive`] is the literal old stage-2 path.
+const NAIVE_T_BLOCK: usize = 512;
+
+/// The pre-tiling float stage-2 loop, verbatim — the oracle the property
+/// suite pins [`panel_gemm_f64`] against bit-for-bit, and the baseline
+/// `BENCH_gemm.json` times. `wt_panels` is the unpacked `[N²][K][C]`
+/// flat bank; `had` is fully overwritten (the old engine zero-filled it
+/// at `prepare` time and accumulated with `+=`; this oracle owns the
+/// zeroing so callers treat both paths identically). Parallel over
+/// frequency points exactly like the old stage 2, so the bench ratio
+/// isolates the tiling/packing win, not a threading difference (set
+/// `WINOQ_THREADS=1` to force both serial).
+pub fn panel_mul_f64_naive(
+    wt_panels: &[f64],
+    dims: PanelDims,
+    xt: &[f64],
+    t_total: usize,
+    fake: Option<&Quantizer>,
+    had: &mut [f64],
+) {
+    let PanelDims { c, k, nn } = dims;
+    assert_eq!(wt_panels.len(), nn * k * c, "wt panel not [N²][K][C]");
+    assert_eq!(xt.len(), c * nn * t_total, "xt panel not [C][N²][T]");
+    assert_eq!(had.len(), nn * k * t_total, "had panel not [N²][K][T]");
+    if t_total == 0 {
+        return;
+    }
+    parallel::par_chunks_mut(had, k * t_total, |f, panel| {
+        panel.fill(0.0);
+        let wpan = &wt_panels[f * k * c..][..k * c];
+        let mut tb = 0;
+        while tb < t_total {
+            let te = (tb + NAIVE_T_BLOCK).min(t_total);
+            for ki in 0..k {
+                let row = &mut panel[ki * t_total..][..t_total];
+                for ci in 0..c {
+                    let wkc = wpan[ki * c + ci];
+                    let xrow = &xt[(ci * nn + f) * t_total..][..t_total];
+                    for t in tb..te {
+                        row[t] += wkc * xrow[t];
+                    }
+                }
+            }
+            tb = te;
+        }
+        if let Some(s) = fake {
+            for v in panel.iter_mut() {
+                *v = s.fake(*v);
+            }
+        }
+    });
+}
+
+/// Time the tiled kernels against their naive oracles on one synthetic
+/// shape, returning `(BENCH_gemm JSON, float ratio, int ratio)` where
+/// each ratio is tiled-over-naive tiles/sec. Shared by
+/// `benches/conv_throughput.rs` and `winoq bench --gemm-json`; the run
+/// also *asserts* bit-parity on the measured buffers, so an emitted JSON
+/// doubles as a parity witness.
+pub fn gemm_bench_json(
+    c: usize,
+    k: usize,
+    t_total: usize,
+    nn: usize,
+    warmup: usize,
+    samples: usize,
+) -> (String, f64, f64) {
+    let mut rng = Prng::new(0x6E77);
+    let wt: Vec<f64> = (0..nn * k * c).map(|_| rng.uniform(0.5)).collect();
+    let xt: Vec<f64> = (0..c * nn * t_total).map(|_| rng.uniform(1.0)).collect();
+    let pw = Packed::pack(nn, k, c, 0.0f64, |f, ki, ci| wt[(f * k + ki) * c + ci]);
+    let samples = samples.max(1);
+    let workers = workers_for(nn, t_total);
+    let mut packs: Vec<Vec<f64>> = vec![Vec::new(); workers];
+
+    let mut had_tiled = vec![0.0f64; nn * k * t_total];
+    let s_f_tiled = benchkit::bench(warmup, samples, || {
+        panel_gemm_f64(&pw, &xt, t_total, None, &mut had_tiled, &mut packs)
+    });
+    let dims = PanelDims { c, k, nn };
+    let mut had_naive = vec![0.0f64; nn * k * t_total];
+    let s_f_naive = benchkit::bench(warmup, samples, || {
+        panel_mul_f64_naive(&wt, dims, &xt, t_total, None, &mut had_naive)
+    });
+    for (i, (a, b)) in had_tiled.iter().zip(&had_naive).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "float gemm parity broke at {i}");
+    }
+
+    let wt_i: Vec<i16> = (0..nn * k * c)
+        .map(|_| (rng.next_u64() % 255) as i16 - 127)
+        .collect();
+    let xt_i: Vec<i16> = (0..c * nn * t_total)
+        .map(|_| (rng.next_u64() % 511) as i16 - 255)
+        .collect();
+    let pwi = Packed::pack(nn, k, c, 0i16, |f, ki, ci| wt_i[(f * k + ki) * c + ci]);
+    let hq = Quantizer::with_scale(9, 3.1e-4);
+    let prod_scale = 1.7e-4;
+    let rq = hq.requant(prod_scale);
+    let mut ipacks: Vec<Vec<i16>> = vec![Vec::new(); workers];
+    let mut ihad_tiled = vec![0i32; nn * k * t_total];
+    let s_i_tiled = benchkit::bench(warmup, samples, || {
+        panel_gemm_requant_i16(&pwi, &xt_i, t_total, &rq, &mut ihad_tiled, &mut ipacks)
+    });
+    let mut ihad_naive = vec![0i32; nn * k * t_total];
+    let s_i_naive = benchkit::bench(warmup, samples, || {
+        super::int::panel_mul_requant_i16_naive(
+            &xt_i,
+            &wt_i,
+            dims,
+            prod_scale,
+            &hq,
+            &mut ihad_naive,
+        )
+    });
+    assert_eq!(ihad_tiled, ihad_naive, "int gemm parity broke");
+
+    let tps = |median: f64| t_total as f64 / median.max(1e-12);
+    let (ftt, ftn) = (tps(s_f_tiled.median), tps(s_f_naive.median));
+    let (itt, itn) = (tps(s_i_tiled.median), tps(s_i_naive.median));
+    let fr = if ftn > 0.0 { ftt / ftn } else { 0.0 };
+    let ir = if itn > 0.0 { itt / itn } else { 0.0 };
+    let json = format!(
+        concat!(
+            "{{\"bench\": \"gemm\", \"mr\": {}, \"nr\": {}, \"nc\": {}, ",
+            "\"shape\": {{\"c\": {}, \"k\": {}, \"t\": {}, \"nn\": {}}}, ",
+            "\"threads\": {}, ",
+            "\"float\": {{\"tiled_seconds\": {:e}, \"naive_seconds\": {:e}, ",
+            "\"tiled_tiles_per_sec\": {:.1}, \"naive_tiles_per_sec\": {:.1}, ",
+            "\"ratio_tiled_vs_naive\": {:.3}}}, ",
+            "\"int\": {{\"tiled_seconds\": {:e}, \"naive_seconds\": {:e}, ",
+            "\"tiled_tiles_per_sec\": {:.1}, \"naive_tiles_per_sec\": {:.1}, ",
+            "\"ratio_tiled_vs_naive\": {:.3}}}}}"
+        ),
+        MR,
+        NR,
+        NC,
+        c,
+        k,
+        t_total,
+        nn,
+        parallel::num_threads(),
+        s_f_tiled.median,
+        s_f_naive.median,
+        ftt,
+        ftn,
+        fr,
+        s_i_tiled.median,
+        s_i_naive.median,
+        itt,
+        itn,
+        ir,
+    );
+    (json, fr, ir)
+}
+
+/// Cumulative per-stage wall time of an engine pass, nanoseconds:
+/// `[input-transform, hadamard/GEMM, inverse]`. Accumulated into
+/// [`EngineScratch`](super::scratch::EngineScratch) by both engines so
+/// serving workers and benches can report **which** stage moved.
+pub type StageNs = [u64; 3];
+
+/// Elapsed nanoseconds since `t0`, saturating into the `u64` the stage
+/// counters use.
+pub(super) fn ns_since(t0: Instant) -> u64 {
+    u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_layout_and_unpack_roundtrip() {
+        // 2 freqs, K=5 (ragged over MR=4), C=3.
+        let (nn, k, c) = (2, 5, 3);
+        let src: Vec<f64> = (0..nn * k * c).map(|i| i as f64 + 1.0).collect();
+        let p = Packed::pack(nn, k, c, 0.0, |f, ki, ci| src[(f * k + ki) * c + ci]);
+        assert_eq!(p.row_blocks(), 2);
+        assert_eq!(p.len(), nn * 2 * c * MR);
+        for f in 0..nn {
+            // Unpacked reconstruction matches the source panel exactly.
+            assert_eq!(p.unpacked_panel(f), src[f * k * c..][..k * c].to_vec());
+            // Padded lanes (rows 5..8 of block 1) are zero.
+            let pan = p.panel(f);
+            for ci in 0..c {
+                for i in 1..MR {
+                    assert_eq!(pan[(c + ci) * MR + i], 0.0, "pad lane must be zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_x_block_pads_ragged_columns_even_in_dirty_buffers() {
+        let (nn, c, t) = (2, 3, 11);
+        let xt: Vec<f64> = (0..c * nn * t).map(|i| i as f64).collect();
+        // A reused buffer full of garbage (and longer than needed) must
+        // produce the identical packing: real lanes overwritten, pad
+        // lanes of the ragged tail explicitly zeroed, excess untouched.
+        let mut buf = vec![999.25; c * NR + 7];
+        // Block [8, 11): 3 real columns, 5 padded.
+        pack_x_block(&xt, nn, c, t, 1, 8..11, &mut buf);
+        assert!(buf.len() >= c * NR);
+        for ci in 0..c {
+            for j in 0..NR {
+                let want = if j < 3 { xt[(ci * nn + 1) * t + 8 + j] } else { 0.0 };
+                assert_eq!(buf[ci * NR + j], want, "({ci},{j})");
+            }
+        }
+        // A fresh buffer grows to exactly the needed length.
+        let mut fresh = Vec::new();
+        pack_x_block(&xt, nn, c, t, 1, 8..11, &mut fresh);
+        assert_eq!(fresh.len(), c * NR);
+        assert_eq!(fresh[..], buf[..c * NR]);
+    }
+
+    #[test]
+    fn tiled_float_matches_naive_bitwise_ragged() {
+        // K and T both ragged, C=1 edge, multi-T-block widths.
+        let mut rng = Prng::new(7);
+        for &(c, k, t, nn) in &[
+            (1usize, 1usize, 1usize, 4usize),
+            (3, 5, 13, 4),
+            (2, 9, NR + 1, 1),
+            (5, 4, NC + 3, 2),
+        ] {
+            let wt: Vec<f64> = (0..nn * k * c).map(|_| rng.uniform(1.0)).collect();
+            let xt: Vec<f64> = (0..c * nn * t).map(|_| rng.uniform(1.0)).collect();
+            let pw = Packed::pack(nn, k, c, 0.0, |f, ki, ci| wt[(f * k + ki) * c + ci]);
+            for fake in [None, Some(Quantizer::with_scale(9, 0.037))] {
+                let mut tiled = vec![f64::NAN; nn * k * t];
+                let mut packs = vec![Vec::new(); 3];
+                panel_gemm_f64(&pw, &xt, t, fake.as_ref(), &mut tiled, &mut packs);
+                let mut naive = vec![0.0; nn * k * t];
+                panel_mul_f64_naive(
+                    &wt,
+                    PanelDims { c, k, nn },
+                    &xt,
+                    t,
+                    fake.as_ref(),
+                    &mut naive,
+                );
+                for (i, (a, b)) in tiled.iter().zip(&naive).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "(c={c},k={k},t={t},nn={nn}) idx {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bench_emitter_reports_both_ratios_and_valid_json() {
+        let (json, fr, ir) = gemm_bench_json(4, 5, 37, 4, 0, 1);
+        assert!(json.contains("\"bench\": \"gemm\""), "{json}");
+        assert!(fr > 0.0 && ir > 0.0, "degenerate ratios: {fr} {ir}");
+        let doc = crate::tune::json::parse(&json).unwrap();
+        for path in ["float", "int"] {
+            let section = doc.get(path).unwrap();
+            assert!(section.get("ratio_tiled_vs_naive").is_some(), "{json}");
+            assert!(section.get("tiled_tiles_per_sec").is_some(), "{json}");
+        }
+    }
+
+    #[test]
+    fn zero_tiles_is_a_no_op() {
+        let pw = Packed::pack(1, 1, 1, 0.0, |_, _, _| 1.0);
+        let mut had: Vec<f64> = Vec::new();
+        panel_gemm_f64(&pw, &[], 0, None, &mut had, &mut [Vec::new()]);
+        let pwi = Packed::pack(1, 1, 1, 0i16, |_, _, _| 1);
+        let rq = Quantizer::with_scale(8, 1.0).requant(1.0);
+        let mut ihad: Vec<i32> = Vec::new();
+        panel_gemm_requant_i16(&pwi, &[], 0, &rq, &mut ihad, &mut [Vec::new()]);
+    }
+}

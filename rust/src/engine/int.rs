@@ -14,10 +14,13 @@
 //!    and immediately quantized into a flat `[C][N²][T]` **i16** code
 //!    panel; no f64 activation panel is ever materialized.
 //! 2. **Integer channel reduction** — one `[K,C] × [C,T]` panel multiply
-//!    per frequency point ([`panel_mul_requant_i16`]): i16×i16 products
-//!    widened to i32, accumulated over channels in i64 (exact, so
+//!    per frequency point ([`panel_mul_requant_i16`], executed through
+//!    the register-tiled kernels of [`gemm`](super::gemm) over the
+//!    bank's pre-packed codes): i16×i16 products widened to i32,
+//!    accumulated over channels in i64 register tiles (exact, so
 //!    accumulation order cannot matter), then requantized once per
-//!    `(k, f, t)` into the Hadamard code grid — 8 or 9 bits per
+//!    `(k, f, t)` through the fused [`Requant`] epilogue into the
+//!    Hadamard code grid — 8 or 9 bits per
 //!    [`QuantConfig::hadamard_bits`], the paper's headline knob.
 //! 3. **Requantize-on-inverse** — Hadamard codes are dequantized, the
 //!    output transform runs in f64 (its constants are rationals; a
@@ -31,13 +34,16 @@
 //! (multi-channel) — the scalar oracles `rust/tests/int_parity.rs` pins
 //! this engine against for both paper quant configs across all bases.
 //!
-//! Weight codes live in an [`IntWeightBank`] (`[N²][K][C]` i16), computed
-//! once per layer and shared across served model variants by
+//! Weight codes live in an [`IntWeightBank`] (i16, stored in the
+//! panel-GEMM register-tile packing), computed once per layer and shared
+//! across served model variants by
 //! [`PlanCache`](crate::serve::plan::PlanCache), so quantized models are
 //! served without ever dequantizing their weights.
 
 use std::sync::Arc;
+use std::time::Instant;
 
+use super::gemm::{self, PackedI16};
 use super::layout::{self, TileGrid};
 use super::parallel;
 use super::scratch::EngineScratch;
@@ -45,7 +51,7 @@ use crate::benchkit;
 use crate::nn::layers::{pad_hw, Conv2dCfg};
 use crate::nn::tensor::Tensor;
 use crate::nn::winolayer::{LayerScales, WinoConv2d};
-use crate::quant::scheme::{QuantConfig, Quantizer};
+use crate::quant::scheme::{QuantConfig, Quantizer, Requant};
 use crate::wino::matrix::Mat;
 use crate::wino::transform::WinoF;
 
@@ -54,15 +60,20 @@ use crate::wino::transform::WinoF;
 /// back to the float fake-quant engine.
 pub const MAX_CODE_BITS: u32 = 16;
 
-/// `T`-dimension block size for the integer panel multiply — same
-/// cache-blocking idea as the float engine's stage 2. Blocking cannot
-/// perturb results: the i64 channel accumulation is exact.
-const T_BLOCK: usize = 1024;
+/// `T`-dimension block size of the retired in-engine integer loop, kept
+/// in [`panel_mul_requant_i16_naive`] so the oracle is the literal old
+/// stage-2 path.
+const NAIVE_T_BLOCK: usize = 1024;
 
-/// A layer's transformed-weight **codes**: `[N²][K][C]` i16 plus the
-/// quantizer that produced them. Computed once from the float
-/// transformed-weight bank and shared (`Arc`) across engines and served
-/// model variants.
+/// A layer's transformed-weight **codes**, stored only in the
+/// micro-kernel packing (`[N²][⌈K/MR⌉][C][MR]` i16, see
+/// [`gemm`](super::gemm)) plus the quantizer that produced them.
+/// Computed once from the float transformed-weight bank and shared
+/// (`Arc`) across engines and served model variants — caching the bank
+/// caches the packing with it, and like the float engine's bank the
+/// row-major `[N²][K][C]` view is reconstructed on demand
+/// ([`panel`](Self::panel)/[`codes`](Self::codes)) rather than kept as
+/// a duplicate copy of possibly-megabytes of codes.
 pub struct IntWeightBank {
     /// Frequency points `N²`.
     pub nn: usize,
@@ -70,8 +81,8 @@ pub struct IntWeightBank {
     pub k: usize,
     /// Input channels.
     pub c: usize,
-    /// Codes, layout `[N²][K][C]` (frequency-major panels).
-    codes: Vec<i16>,
+    /// The codes in the panel-GEMM packing (the only stored form).
+    packed: PackedI16,
     /// The symmetric quantizer the codes were taken with — identical (by
     /// construction: same calibration over the same float bank) to the
     /// `weights_t` scale `WinoConv2d::quantize_pct` computes.
@@ -121,40 +132,44 @@ impl IntWeightBank {
         let c = wt[0].len();
         assert!(c > 0, "need at least one input channel");
         let nn = wt[0][0].rows() * wt[0][0].cols();
-        let mut codes = vec![0i16; nn * k * c];
-        for (ki, per_c) in wt.iter().enumerate() {
+        for per_c in wt {
             assert_eq!(per_c.len(), c, "ragged filter bank");
-            for (ci, mat) in per_c.iter().enumerate() {
-                let d = mat.data();
-                assert_eq!(d.len(), nn, "bank tile size mismatch");
-                for f in 0..nn {
-                    codes[(f * k + ki) * c + ci] = weights_t.quantize(d[f]) as i16;
-                }
+            for mat in per_c {
+                assert_eq!(mat.data().len(), nn, "bank tile size mismatch");
             }
         }
-        IntWeightBank { nn, k, c, codes, weights_t }
+        // Quantize straight into the packed layout — each real lane is
+        // quantized exactly once, pad lanes never touch the quantizer.
+        let packed = PackedI16::pack(nn, k, c, 0, |f, ki, ci| {
+            weights_t.quantize(wt[ki][ci].data()[f]) as i16
+        });
+        IntWeightBank { nn, k, c, packed, weights_t }
     }
 
-    /// The `[K][C]` code panel for frequency point `f` (row-major).
-    pub fn panel(&self, f: usize) -> &[i16] {
-        &self.codes[f * self.k * self.c..][..self.k * self.c]
+    /// The `[K][C]` code panel for frequency point `f`, reconstructed
+    /// row-major from the packed storage — for oracles and tests (the
+    /// engine reads the packed form directly).
+    pub fn panel(&self, f: usize) -> Vec<i16> {
+        self.packed.unpacked_panel(f)
     }
 
-    /// All codes, layout `[N²][K][C]`.
-    pub fn codes(&self) -> &[i16] {
-        &self.codes
+    /// All codes, reconstructed in `[N²][K][C]` layout.
+    pub fn codes(&self) -> Vec<i16> {
+        let mut out = Vec::with_capacity(self.nn * self.k * self.c);
+        for f in 0..self.nn {
+            out.extend(self.packed.unpacked_panel(f));
+        }
+        out
+    }
+
+    /// The codes in the micro-kernel packing (what the engine executes
+    /// from).
+    pub fn packed(&self) -> &PackedI16 {
+        &self.packed
     }
 }
 
-/// Geometry of one integer panel multiply: input channels, output
-/// filters and frequency points (`N²`); the tile count `T` is inferred
-/// from the panel lengths.
-#[derive(Clone, Copy, Debug)]
-pub struct PanelDims {
-    pub c: usize,
-    pub k: usize,
-    pub nn: usize,
-}
+pub use super::gemm::PanelDims;
 
 /// Per-frequency integer panel multiply with fused requantization — the
 /// integer engine's stage 2, exposed standalone for the property tests.
@@ -165,9 +180,50 @@ pub struct PanelDims {
 /// are widened to i32 and accumulated in i64 — exact for any `C` up to
 /// 2³³ even at 16-bit codes — then the real value
 /// `acc · prod_scale` (`prod_scale` = input-code scale × weight-code
-/// scale) is requantized through `hq`, clamping to `±qmax` (saturation,
-/// never wraparound). Parallel over frequency points.
+/// scale) is requantized, clamping to `±qmax` (saturation, never
+/// wraparound).
+///
+/// This raw-slice entry packs `wt_codes` and runs the register-tiled
+/// kernel ([`gemm::panel_gemm_requant_i16`]) — the production path, so
+/// the property suites exercise exactly what serving executes. The
+/// engine itself skips the packing step: its [`IntWeightBank`] holds the
+/// codes pre-packed. The pre-tiling loop survives as
+/// [`panel_mul_requant_i16_naive`], the oracle both are pinned against.
 pub fn panel_mul_requant_i16(
+    xt_codes: &[i16],
+    wt_codes: &[i16],
+    dims: PanelDims,
+    prod_scale: f64,
+    hq: &Quantizer,
+    had_codes: &mut [i32],
+) {
+    let PanelDims { c, k, nn } = dims;
+    assert!(c > 0 && k > 0 && nn > 0, "degenerate panel shape");
+    assert_eq!(xt_codes.len() % (c * nn), 0, "xt panel not [C][N²][T]");
+    let t_total = xt_codes.len() / (c * nn);
+    assert_eq!(wt_codes.len(), nn * k * c, "wt panel not [N²][K][C]");
+    assert_eq!(had_codes.len(), nn * k * t_total, "had panel not [N²][K][T]");
+    if t_total == 0 {
+        return;
+    }
+    let packed = PackedI16::pack(nn, k, c, 0, |f, ki, ci| wt_codes[(f * k + ki) * c + ci]);
+    let mut packs = vec![Vec::new(); gemm::workers_for(nn, t_total)];
+    gemm::panel_gemm_requant_i16(
+        &packed,
+        xt_codes,
+        t_total,
+        &hq.requant(prod_scale),
+        had_codes,
+        &mut packs,
+    );
+}
+
+/// The pre-tiling integer stage-2 loop, verbatim — the oracle
+/// [`panel_mul_requant_i16`] and the engine are pinned against
+/// (`rust/tests/gemm_property.rs`). Same contract as the tiled entry;
+/// per-element requantization goes through [`Quantizer::quantize`]
+/// directly.
+pub fn panel_mul_requant_i16_naive(
     xt_codes: &[i16],
     wt_codes: &[i16],
     dims: PanelDims,
@@ -192,7 +248,7 @@ pub fn panel_mul_requant_i16(
             acc.fill(0);
             let mut tb = 0;
             while tb < t_total {
-                let te = (tb + T_BLOCK).min(t_total);
+                let te = (tb + NAIVE_T_BLOCK).min(t_total);
                 for ci in 0..c {
                     let wkc = wpan[ki * c + ci] as i32;
                     if wkc == 0 {
@@ -235,9 +291,12 @@ pub struct IntWinoEngine {
     /// Calibrated per-stage quantizers (Fig. 2 cast sites).
     pub scales: LayerScales,
     bank: Arc<IntWeightBank>,
-    /// `input_t.scale × weights_t.scale` — the exact real value of one
-    /// integer Hadamard product unit.
-    prod_scale: f64,
+    /// The fused stage-2 requantization epilogue —
+    /// `hadamard.requant(prod_scale)` with
+    /// `prod_scale = input_t.scale × weights_t.scale` (the exact real
+    /// value of one integer Hadamard product unit) — hoisted once at
+    /// lowering time.
+    rq: Requant,
 }
 
 impl IntWinoEngine {
@@ -263,7 +322,8 @@ impl IntWinoEngine {
             "weight-code bank quantizer differs from the layer's weights_t scale"
         );
         let prod_scale = scales.input_t.scale * scales.weights_t.scale;
-        IntWinoEngine { k: bank.k, c: bank.c, wf, cfg, scales, bank, prod_scale }
+        let rq = scales.hadamard.requant(prod_scale);
+        IntWinoEngine { k: bank.k, c: bank.c, wf, cfg, scales, bank, rq }
     }
 
     /// The shared weight-code bank (for cache-sharing assertions).
@@ -331,7 +391,9 @@ impl IntWinoEngine {
             nn * self.k * t_total,
             grid.bn * self.k * grid.oh * grid.ow,
         );
-        let EngineScratch { xt_codes, had_codes, out, .. } = scratch;
+        let workers = gemm::workers_for(nn, t_total);
+        scratch.ensure_pack_i16(workers);
+        let EngineScratch { xt_codes, had_codes, out, pack_i16, .. } = scratch;
         let wf = &self.wf;
         let sc = &self.scales;
 
@@ -339,6 +401,7 @@ impl IntWinoEngine {
         // input cast runs in f64 (the integer path's oracle is QWino's
         // f64 pipeline; no f32 detour as in the fake-quant engine), then
         // the transformed tile is quantized straight into the i16 panel.
+        let t0 = Instant::now();
         parallel::par_chunks_mut(&mut xt_codes[..], nn * t_total, |ci, chunk| {
             for ni in 0..grid.bn {
                 for th in 0..grid.tiles_h {
@@ -358,18 +421,26 @@ impl IntWinoEngine {
             }
         });
 
-        // Stage 2 — the integer channel reduction + Hadamard requant.
-        panel_mul_requant_i16(
+        let t_transform = gemm::ns_since(t0);
+
+        // Stage 2 — the integer channel reduction + fused Hadamard
+        // requant, register-tiled over the bank's pre-packed codes
+        // ([`gemm::panel_gemm_requant_i16`]); i64 accumulation is exact,
+        // so tiling cannot perturb the codes.
+        let t0 = Instant::now();
+        gemm::panel_gemm_requant_i16(
+            &self.bank.packed,
             &xt_codes[..],
-            &self.bank.codes,
-            PanelDims { c: self.c, k: self.k, nn },
-            self.prod_scale,
-            &sc.hadamard,
+            t_total,
+            &self.rq,
             &mut had_codes[..],
+            &mut pack_i16[..workers],
         );
+        let t_hadamard = gemm::ns_since(t0);
 
         // Stage 3 — dequantize, back-transform in bulk, output cast;
         // parallel over (image, filter) planes, edge tiles clamped.
+        let t0 = Instant::now();
         let had_ro: &[i32] = had_codes.as_slice();
         parallel::par_chunks_mut(&mut out[..], grid.oh * grid.ow, |plane, ochunk| {
             let ni = plane / self.k;
@@ -400,6 +471,7 @@ impl IntWinoEngine {
                 }
             }
         });
+        scratch.add_stage_ns([t_transform, t_hadamard, gemm::ns_since(t0)]);
         grid
     }
 }

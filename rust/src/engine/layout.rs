@@ -30,6 +30,16 @@
 //!
 //! Geometry ([`TileGrid`], [`extract_tile`]) is shared verbatim between
 //! the two pipelines: the integer path changes arithmetic, not tiling.
+//!
+//! The weight operand of the per-frequency GEMM is **not** stored in the
+//! row-major `[N²][K][C]` shape above: both engines keep it
+//! register-tile packed as `[N²][⌈K/MR⌉][C][MR]`
+//! ([`gemm::Packed`](super::gemm::Packed)), and the input panel is
+//! streamed through a `[⌈NC/NR⌉][C][NR]` packing buffer per
+//! `(frequency, T-block)` work item
+//! ([`gemm::pack_x_block`](super::gemm::pack_x_block)) — see
+//! [`gemm`](super::gemm) for the micro-kernel layouts and why the float
+//! kernel never splits the `C` reduction.
 
 use crate::nn::tensor::Tensor;
 use crate::wino::matrix::Mat;

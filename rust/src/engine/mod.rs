@@ -13,9 +13,12 @@
 //!    input transform (and the Fig. 2 input casts when quantized) on the
 //!    way in — parallel over channels.
 //! 2. **Hadamard-with-channel-accumulation** as one `[K,C] × [C,T]`
-//!    panel multiply per frequency point `f ∈ N²`, blocked over `T` for
-//!    cache locality — parallel over frequency points. This is where the
-//!    `2.25×` multiplication advantage of `F(4×4, 3×3)` lives.
+//!    panel multiply per frequency point `f ∈ N²`, run through the
+//!    register-tiled, cache-blocked micro-kernels of [`gemm`] (packed
+//!    weight panels, `MR×NR` register accumulators, `NC`-blocked input
+//!    packing) — parallel over `(frequency × T-block)` work items. This
+//!    is where the `2.25×` multiplication advantage of `F(4×4, 3×3)`
+//!    lives.
 //! 3. **Back-transform** each `(image, filter)` plane in bulk, clamping
 //!    edge tiles — parallel over output planes.
 //!
@@ -57,14 +60,19 @@
 //! }
 //! ```
 
+pub mod gemm;
 pub mod int;
 pub mod layout;
 pub mod parallel;
 pub mod scratch;
 
+pub use gemm::{PackedF64, PackedI16};
 pub use int::{IntWeightBank, IntWinoEngine};
 pub use layout::TileGrid;
 pub use scratch::EngineScratch;
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::nn::layers::{pad_hw, Conv2dCfg};
 use crate::nn::tensor::Tensor;
@@ -75,20 +83,17 @@ use crate::wino::matrix::Mat;
 use crate::wino::toomcook::WinogradPlan;
 use crate::wino::transform::WinoF;
 
-/// `T`-dimension block size for the per-frequency panel multiply: keeps
-/// one `[tile-block]` stripe of the input panel resident in cache across
-/// the `K` output filters. Blocking never reorders the per-`(k, f, t)`
-/// accumulation chain, so it cannot perturb parity with the per-tile path.
-const T_BLOCK: usize = 512;
-
 /// A lowered Winograd conv layer: pre-transformed weights stored as
-/// per-frequency `[K][C]` panels plus the float transform pipeline,
-/// executing over flat batch-wide tile buffers.
+/// register-tile-packed per-frequency panels ([`gemm::Packed`],
+/// `[N²][⌈K/MR⌉][C][MR]`) plus the float transform pipeline, executing
+/// over flat batch-wide tile buffers.
 ///
 /// Build one with [`WinoEngine::from_weights`] (from raw `[K,C,r,r]`
-/// weights) or [`WinoEngine::from_transformed_weights`] (from the
+/// weights), [`WinoEngine::from_transformed_weights`] (from the
 /// already-transformed per-tile matrices a
-/// [`WinoConv2d`](crate::nn::winolayer::WinoConv2d) holds).
+/// [`WinoConv2d`](crate::nn::winolayer::WinoConv2d) holds — packs them
+/// once), or [`WinoEngine::from_packed`] (from an already-packed bank
+/// shared through [`PlanCache`](crate::serve::plan::PlanCache)).
 pub struct WinoEngine {
     /// Float transform pipeline (plan + polynomial base).
     pub wf: WinoF,
@@ -96,8 +101,10 @@ pub struct WinoEngine {
     pub k: usize,
     /// Input channels.
     pub c: usize,
-    /// Transformed weights, layout `[N²][K][C]` (frequency-major panels).
-    wt_panels: Vec<f64>,
+    /// Transformed weights in the micro-kernel packing (the only stored
+    /// form; [`weight_panel`](Self::weight_panel) reconstructs the
+    /// row-major view). Shared (`Arc`) across served model variants.
+    packed: Arc<PackedF64>,
     /// Fig. 2 quantized-pipeline state, if enabled.
     pub quant: Option<(QuantConfig, LayerScales)>,
 }
@@ -148,7 +155,8 @@ impl WinoEngine {
 
     /// Build from already-transformed `[K][C]` tile matrices (each
     /// `N×N`), e.g. the `wt` a `WinoConv2d` computed — including any
-    /// fake-quantisation already baked into them.
+    /// fake-quantisation already baked into them. Packs the bank into
+    /// the micro-kernel layout once, here.
     pub fn from_transformed_weights(
         wf: WinoF,
         wt: &[Vec<Mat>],
@@ -158,24 +166,41 @@ impl WinoEngine {
         assert!(k > 0, "need at least one output filter");
         let c = wt[0].len();
         let nn = wf.n * wf.n;
-        let mut wt_panels = vec![0.0; nn * k * c];
-        for (ki, per_c) in wt.iter().enumerate() {
+        for per_c in wt {
             assert_eq!(per_c.len(), c, "ragged filter bank");
-            for (ci, mat) in per_c.iter().enumerate() {
+            for mat in per_c {
                 assert_eq!((mat.rows(), mat.cols()), (wf.n, wf.n));
-                let d = mat.data();
-                for f in 0..nn {
-                    wt_panels[(f * k + ki) * c + ci] = d[f];
-                }
             }
         }
-        WinoEngine { wf, k, c, wt_panels, quant }
+        let packed = Arc::new(PackedF64::pack(nn, k, c, 0.0, |f, ki, ci| {
+            wt[ki][ci].data()[f]
+        }));
+        Self::from_packed(wf, packed, quant)
     }
 
-    /// The `[K][C]` weight panel for frequency point `f` (row-major), as
-    /// stored — mainly for tests and introspection.
-    pub fn weight_panel(&self, f: usize) -> &[f64] {
-        &self.wt_panels[f * self.k * self.c..(f + 1) * self.k * self.c]
+    /// Build from an **already-packed** weight bank (the
+    /// [`PlanCache`](crate::serve::plan::PlanCache) caches these per
+    /// layer, so served model variants share one packing instead of
+    /// repacking per registration).
+    pub fn from_packed(
+        wf: WinoF,
+        packed: Arc<PackedF64>,
+        quant: Option<(QuantConfig, LayerScales)>,
+    ) -> WinoEngine {
+        assert_eq!(packed.nn, wf.n * wf.n, "packed bank/plan tile size mismatch");
+        WinoEngine { k: packed.k, c: packed.c, wf, packed, quant }
+    }
+
+    /// The `[K][C]` weight panel for frequency point `f` (row-major),
+    /// reconstructed from the packed storage — for tests and
+    /// introspection (the hot path reads the packed form directly).
+    pub fn weight_panel(&self, f: usize) -> Vec<f64> {
+        self.packed.unpacked_panel(f)
+    }
+
+    /// The packed weight bank (for cache-sharing assertions).
+    pub fn packed_weights(&self) -> &Arc<PackedF64> {
+        &self.packed
     }
 
     /// Forward pass allocating a fresh workspace. Prefer
@@ -249,12 +274,15 @@ impl WinoEngine {
             nn * self.k * t_total,
             grid.bn * self.k * grid.oh * grid.ow,
         );
-        let EngineScratch { xt, had, out, .. } = scratch;
+        let workers = gemm::workers_for(nn, t_total);
+        scratch.ensure_pack_f64(workers);
+        let EngineScratch { xt, had, out, pack_f64, .. } = scratch;
         let wf = &self.wf;
         let quant = &self.quant;
 
         // Stage 1 — scatter/transform, parallel over channels. Each
         // channel owns the contiguous `[N²][T]` block `xt[c]`.
+        let t0 = Instant::now();
         parallel::par_chunks_mut(&mut xt[..], nn * t_total, |ci, chunk| {
             for ni in 0..grid.bn {
                 for th in 0..grid.tiles_h {
@@ -281,39 +309,30 @@ impl WinoEngine {
             }
         });
 
-        // Stage 2 — per-frequency panel multiply `[K,C] × [C,T]`,
-        // parallel over the N² frequency points; `T`-blocked. The inner
-        // axpy accumulates channels in order `c = 0..C`, matching the
-        // per-tile path's Hadamard accumulation exactly.
-        let xt_ro: &[f64] = xt.as_slice();
-        parallel::par_chunks_mut(&mut had[..], self.k * t_total, |f, panel| {
-            let wpan = &self.wt_panels[f * self.k * self.c..][..self.k * self.c];
-            let mut tb = 0;
-            while tb < t_total {
-                let te = (tb + T_BLOCK).min(t_total);
-                for ki in 0..self.k {
-                    let row = &mut panel[ki * t_total..][..t_total];
-                    for ci in 0..self.c {
-                        let wkc = wpan[ki * self.c + ci];
-                        let xrow = &xt_ro[(ci * nn + f) * t_total..][..t_total];
-                        for t in tb..te {
-                            row[t] += wkc * xrow[t];
-                        }
-                    }
-                }
-                tb = te;
-            }
-            // Fig. 2 Hadamard cast, after full channel accumulation —
-            // same site as the per-tile path.
-            if let Some((_, s)) = quant {
-                for v in panel.iter_mut() {
-                    *v = s.hadamard.fake(*v);
-                }
-            }
-        });
+        let t_transform = gemm::ns_since(t0);
+
+        // Stage 2 — register-tiled per-frequency panel GEMM
+        // `[K,C] × [C,T]` over the packed weight bank, parallel over
+        // `(frequency × T-block)` work items ([`gemm::panel_gemm_f64`]).
+        // Each `(k, f, t)` accumulator runs the identical `c = 0..C`
+        // chain as the per-tile path, so parity is bit-for-bit; the
+        // Fig. 2 Hadamard cast is fused into the store (elementwise on
+        // the fully-accumulated sums — same values, same site).
+        let t0 = Instant::now();
+        let fake = quant.as_ref().map(|(_, s)| &s.hadamard);
+        gemm::panel_gemm_f64(
+            &self.packed,
+            &xt[..],
+            t_total,
+            fake,
+            &mut had[..],
+            &mut pack_f64[..workers],
+        );
+        let t_hadamard = gemm::ns_since(t0);
 
         // Stage 3 — back-transform in bulk, parallel over `(image,
         // filter)` output planes; edge tiles write clamped.
+        let t0 = Instant::now();
         let had_ro: &[f64] = had.as_slice();
         parallel::par_chunks_mut(&mut out[..], grid.oh * grid.ow, |plane, ochunk| {
             let ni = plane / self.k;
@@ -345,6 +364,7 @@ impl WinoEngine {
                 }
             }
         });
+        scratch.add_stage_ns([t_transform, t_hadamard, gemm::ns_since(t0)]);
         grid
     }
 }

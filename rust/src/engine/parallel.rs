@@ -1,12 +1,20 @@
 //! Scoped-thread data parallelism for the batched engine.
 //!
 //! The vendored build has no crates.io access, so `rayon` itself cannot be
-//! a dependency; this module provides the one primitive the engine needs —
-//! a rayon-style *indexed parallel iteration over disjoint mutable chunks*
-//! — on top of [`std::thread::scope`]. Every engine stage is expressed as
-//! "each worker owns a contiguous run of equally-sized chunks", which is
-//! exactly `rayon`'s `par_chunks_mut().enumerate()` shape, so swapping the
-//! real crate in later is a one-line change per call site.
+//! a dependency; this module provides the primitives the engine needs —
+//! rayon-style *indexed parallel iteration over disjoint mutable chunks*
+//! ([`par_chunks_mut`]), plain index ranges ([`par_for`]), and index
+//! ranges with one exclusive worker state each ([`par_for_states`], the
+//! panel GEMM's packing-buffer lease) — on top of
+//! [`std::thread::scope`]. Every engine stage is expressed as "each
+//! worker owns a contiguous run of work items", which is exactly
+//! `rayon`'s `par_chunks_mut().enumerate()` shape, so swapping the real
+//! crate in later is a one-line change per call site.
+//!
+//! Dispatch is frugal: the worker count is clamped to the item count and
+//! the calling thread always works the first run itself, so a stage with
+//! `W` runs spawns exactly `W − 1` threads and a single-run stage spawns
+//! none.
 //!
 //! Thread count defaults to [`std::thread::available_parallelism`] and can
 //! be pinned with the `WINOQ_THREADS` environment variable (`1` forces the
@@ -58,12 +66,17 @@ where
         return;
     }
     // Split the chunk range into `workers` contiguous runs (first
-    // `rem` runs get one extra chunk), and the data slice with it.
+    // `rem` runs get one extra chunk), and the data slice with it. The
+    // worker count is clamped to the chunk count and the **calling
+    // thread works the first run itself**, so a stage dispatch spawns
+    // exactly `workers − 1` threads — never idle pool members created
+    // just to exit (see `caller_participates_and_spawns_are_bounded`).
     let per = n_chunks / workers;
     let rem = n_chunks % workers;
     std::thread::scope(|scope| {
         let mut rest = data;
         let mut first_chunk = 0usize;
+        let mut own = None;
         for w in 0..workers {
             let my_chunks = per + usize::from(w < rem);
             let my_len = (my_chunks * chunk_len).min(rest.len());
@@ -71,12 +84,20 @@ where
             rest = tail;
             let base = first_chunk;
             first_chunk += my_chunks;
+            if w == 0 {
+                own = Some((base, mine));
+                continue;
+            }
             let f = &f;
             scope.spawn(move || {
                 for (ci, chunk) in mine.chunks_mut(chunk_len).enumerate() {
                     f(base + ci, chunk);
                 }
             });
+        }
+        let (base, mine) = own.expect("workers >= 2 always assigns run 0");
+        for (ci, chunk) in mine.chunks_mut(chunk_len).enumerate() {
+            f(base + ci, chunk);
         }
     });
 }
@@ -100,16 +121,85 @@ where
     let rem = n % workers;
     std::thread::scope(|scope| {
         let mut start = 0usize;
+        let mut own = None;
         for w in 0..workers {
             let len = per + usize::from(w < rem);
             let range = start..start + len;
             start += len;
+            if w == 0 {
+                // The caller works the first range itself (one fewer
+                // spawn per dispatch; see `par_chunks_mut`).
+                own = Some(range);
+                continue;
+            }
             let f = &f;
             scope.spawn(move || {
                 for i in range {
                     f(i);
                 }
             });
+        }
+        for i in own.expect("workers >= 2 always assigns range 0") {
+            f(i);
+        }
+    });
+}
+
+/// Run `f(i, state)` for every `i in 0..n`, handing each worker a
+/// contiguous index range **and exclusive `&mut` access to one entry of
+/// `states`** — the shape the panel GEMM's two-dimensional
+/// `(frequency × T-block)` dispatch needs, where every worker streams
+/// input panels through its own packing buffer
+/// ([`EngineScratch`](super::scratch::EngineScratch) owns the buffers,
+/// this primitive leases them out). At most
+/// `min(num_threads(), n, states.len())` workers run; like the other
+/// primitives the calling thread works the first range itself, so
+/// `workers − 1` threads are spawned.
+pub fn par_for_states<S, F>(n: usize, states: &mut [S], f: F)
+where
+    S: Send,
+    F: Fn(usize, &mut S) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    assert!(!states.is_empty(), "need at least one worker state");
+    let workers = num_threads().min(n).min(states.len());
+    if workers <= 1 {
+        let s = &mut states[0];
+        for i in 0..n {
+            f(i, s);
+        }
+        return;
+    }
+    let per = n / workers;
+    let rem = n % workers;
+    std::thread::scope(|scope| {
+        let mut rest = &mut states[..workers];
+        let mut start = 0usize;
+        let mut own = None;
+        for w in 0..workers {
+            let len = per + usize::from(w < rem);
+            let range = start..start + len;
+            start += len;
+            let (s, tail) = std::mem::take(&mut rest)
+                .split_first_mut()
+                .expect("workers <= states.len()");
+            rest = tail;
+            if w == 0 {
+                own = Some((range, s));
+                continue;
+            }
+            let f = &f;
+            scope.spawn(move || {
+                for i in range {
+                    f(i, s);
+                }
+            });
+        }
+        let (range, s) = own.expect("workers >= 2 always assigns range 0");
+        for i in range {
+            f(i, s);
         }
     });
 }
@@ -178,5 +268,73 @@ mod tests {
         let mut v = vec![0u32; 3];
         par_chunks_mut(&mut v, 2, |_, chunk| chunk.fill(5));
         assert_eq!(v, [5, 5, 5]);
+    }
+
+    #[test]
+    fn caller_participates_and_spawns_are_bounded() {
+        // A 3-chunk dispatch must involve at most 3 distinct threads, one
+        // of which is the caller (the first run is worked in place, so a
+        // machine with a big pool never creates threads just to exit).
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let ids = Mutex::new(HashSet::new());
+        let mut v = vec![0u8; 3];
+        par_chunks_mut(&mut v, 1, |_, chunk| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            chunk.fill(1);
+        });
+        let ids = ids.into_inner().unwrap();
+        assert!(ids.len() <= 3, "3 chunks must use at most 3 threads");
+        assert!(
+            ids.contains(&std::thread::current().id()),
+            "the calling thread must work a run itself"
+        );
+        assert_eq!(v, [1, 1, 1]);
+
+        let ids = Mutex::new(HashSet::new());
+        par_for(3, |_| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        let ids = ids.into_inner().unwrap();
+        assert!(ids.len() <= 3);
+        assert!(ids.contains(&std::thread::current().id()));
+    }
+
+    #[test]
+    fn par_for_states_visits_every_index_once_with_exclusive_state() {
+        // Each worker counts into its own state; the per-state sums must
+        // total n with no index visited twice (tracked via an atomic
+        // bitmapish counter per index).
+        let hits: Vec<AtomicUsize> = (0..137).map(|_| AtomicUsize::new(0)).collect();
+        let mut states = vec![0usize; 4];
+        par_for_states(137, &mut states, |i, s| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            *s += 1;
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(states.iter().sum::<usize>(), 137);
+    }
+
+    #[test]
+    fn par_for_states_respects_state_count_and_serial_path() {
+        // One state forces the serial path; zero items is a no-op that
+        // must not touch states.
+        let mut one = vec![0usize; 1];
+        par_for_states(9, &mut one, |_, s| *s += 1);
+        assert_eq!(one[0], 9);
+        let mut none = vec![7usize; 2];
+        par_for_states(0, &mut none, |_, _| panic!("no items expected"));
+        assert_eq!(none, [7, 7]);
+        // More states than items: workers clamp to the item count.
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let ids = Mutex::new(HashSet::new());
+        let mut many = vec![0usize; 16];
+        par_for_states(2, &mut many, |_, s| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            *s += 1;
+        });
+        assert!(ids.into_inner().unwrap().len() <= 2);
+        assert_eq!(many.iter().sum::<usize>(), 2);
     }
 }

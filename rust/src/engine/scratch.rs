@@ -1,20 +1,25 @@
 //! Reusable workspace buffers for [`WinoEngine`](super::WinoEngine).
 //!
 //! One engine forward pass needs three large flat buffers (transformed
-//! input panels, Hadamard accumulators, f64 output staging). Allocating
-//! them per call would dominate small-batch latency, so callers that run
-//! many forwards (the ResNet serving path, the throughput bench) hold an
+//! input panels, Hadamard accumulators, f64 output staging) plus the
+//! panel GEMM's per-worker input packing buffers. Allocating them per
+//! call would dominate small-batch latency, so callers that run many
+//! forwards (the ResNet serving path, the throughput bench) hold an
 //! [`EngineScratch`] and pass it to
 //! [`WinoEngine::forward_with`](super::WinoEngine::forward_with); buffers
 //! grow to the high-water mark of the layer shapes seen and are then
 //! reused allocation-free.
+
+use super::gemm::StageNs;
 
 /// Scratch buffers for one in-flight engine forward pass.
 ///
 /// Holds both the float pipeline's f64 panels and the integer pipeline's
 /// code panels ([`IntWinoEngine`](super::int::IntWinoEngine)); a serving
 /// worker threads one scratch through heterogeneous float/int layers and
-/// each buffer grows to its own high-water mark.
+/// each buffer grows to its own high-water mark. The scratch also
+/// accumulates the per-stage wall-clock breakdown
+/// ([`stage_ns`](Self::stage_ns)) of every pass run through it.
 ///
 /// Not `Clone` on purpose: the point is to share one allocation across
 /// calls, not to copy multi-megabyte workspaces around.
@@ -32,6 +37,16 @@ pub struct EngineScratch {
     pub(super) xt_codes: Vec<i16>,
     /// Integer pipeline: requantized Hadamard codes, layout `[N²][K][T]`.
     pub(super) had_codes: Vec<i32>,
+    /// Per-worker `C`×`NC` input packing buffers for the float panel
+    /// GEMM (layout per buffer: `[⌈NC/NR⌉][C][NR]`, sized inside
+    /// [`gemm::pack_x_block`](super::gemm::pack_x_block)).
+    pub(super) pack_f64: Vec<Vec<f64>>,
+    /// Per-worker packing buffers for the integer panel GEMM.
+    pub(super) pack_i16: Vec<Vec<i16>>,
+    /// Cumulative stage wall time `[input-transform, hadamard, inverse]`
+    /// in nanoseconds across every pass since the last
+    /// [`take_stage_ns`](Self::take_stage_ns).
+    stage_ns: StageNs,
 }
 
 impl EngineScratch {
@@ -39,13 +54,13 @@ impl EngineScratch {
         EngineScratch::default()
     }
 
-    /// Size the three buffers for a pass. Only `had` is zero-filled —
-    /// it accumulates with `+=` in stage 2; `xt` and `out` have every
-    /// element overwritten (stage 1 / stage 3), so they are resized
-    /// without the redundant memset. Capacity is retained across calls.
+    /// Size the three buffers for a pass. Nothing is zero-filled: stage 1
+    /// overwrites every `xt` element, the tiled panel GEMM writes every
+    /// `had` element exactly once (its accumulators live in registers,
+    /// not in this buffer), and stage 3 overwrites every `out` element.
+    /// Capacity is retained across calls.
     pub(super) fn prepare(&mut self, xt_len: usize, had_len: usize, out_len: usize) {
         self.xt.resize(xt_len, 0.0);
-        self.had.clear();
         self.had.resize(had_len, 0.0);
         self.out.resize(out_len, 0.0);
     }
@@ -53,7 +68,7 @@ impl EngineScratch {
     /// Size the integer pipeline's buffers for a pass. Nothing is
     /// zero-filled: stage 1 overwrites every `xt_codes` element, the panel
     /// kernel's requantization overwrites every `had_codes` element (its
-    /// i64 channel accumulation happens in a kernel-local row, not here),
+    /// i64 channel accumulation happens in register tiles, not here),
     /// and stage 3 overwrites every `out` element.
     pub(super) fn prepare_int(&mut self, xt_len: usize, had_len: usize, out_len: usize) {
         self.xt_codes.resize(xt_len, 0);
@@ -61,14 +76,53 @@ impl EngineScratch {
         self.out.resize(out_len, 0.0);
     }
 
+    /// Ensure at least `workers` float packing buffers exist (the
+    /// buffers themselves are sized lazily by the GEMM's packer and keep
+    /// their capacity across passes).
+    pub(super) fn ensure_pack_f64(&mut self, workers: usize) {
+        if self.pack_f64.len() < workers {
+            self.pack_f64.resize_with(workers, Vec::new);
+        }
+    }
+
+    /// Integer-path counterpart of [`ensure_pack_f64`](Self::ensure_pack_f64).
+    pub(super) fn ensure_pack_i16(&mut self, workers: usize) {
+        if self.pack_i16.len() < workers {
+            self.pack_i16.resize_with(workers, Vec::new);
+        }
+    }
+
+    /// Add one pass's stage breakdown to the cumulative counters.
+    pub(super) fn add_stage_ns(&mut self, add: StageNs) {
+        for (acc, v) in self.stage_ns.iter_mut().zip(add) {
+            *acc = acc.saturating_add(v);
+        }
+    }
+
+    /// Cumulative per-stage wall time since construction or the last
+    /// [`take_stage_ns`](Self::take_stage_ns):
+    /// `[input-transform, hadamard/GEMM, inverse]` nanoseconds.
+    pub fn stage_ns(&self) -> StageNs {
+        self.stage_ns
+    }
+
+    /// Return the cumulative stage breakdown and reset it — what a
+    /// serving worker records per micro-batch.
+    pub fn take_stage_ns(&mut self) -> StageNs {
+        std::mem::take(&mut self.stage_ns)
+    }
+
     /// Total buffer capacity currently held, in **bytes**, across the
-    /// float (f64) and integer (i16/i32) workspaces — a worker serving a
-    /// quantized model grows the code panels while the f64 panels stay
-    /// empty, and memory accounting must see both.
+    /// float (f64) and integer (i16/i32) workspaces and the per-worker
+    /// packing buffers — a worker serving a quantized model grows the
+    /// code panels while the f64 panels stay empty, and memory accounting
+    /// must see both.
     pub fn capacity(&self) -> usize {
-        (self.xt.capacity() + self.had.capacity() + self.out.capacity())
+        let pack_f64: usize = self.pack_f64.iter().map(Vec::capacity).sum();
+        let pack_i16: usize = self.pack_i16.iter().map(Vec::capacity).sum();
+        (self.xt.capacity() + self.had.capacity() + self.out.capacity() + pack_f64)
             * std::mem::size_of::<f64>()
-            + self.xt_codes.capacity() * std::mem::size_of::<i16>()
+            + (self.xt_codes.capacity() + pack_i16) * std::mem::size_of::<i16>()
             + self.had_codes.capacity() * std::mem::size_of::<i32>()
     }
 
@@ -99,17 +153,39 @@ mod tests {
     }
 
     #[test]
-    fn prepare_zeroes_accumulator_and_keeps_capacity() {
+    fn prepare_sizes_buffers_and_keeps_capacity() {
         let mut s = EngineScratch::new();
         s.prepare(100, 200, 50);
-        s.had[3] = 7.0;
         let cap = s.capacity();
         s.prepare(80, 150, 50);
-        assert!(
-            s.had.iter().all(|&v| v == 0.0),
-            "the += accumulator must be zeroed between passes"
-        );
         assert_eq!((s.xt.len(), s.had.len(), s.out.len()), (80, 150, 50));
         assert!(s.capacity() >= cap.min(280), "capacity should be retained");
+    }
+
+    #[test]
+    fn pack_buffers_grow_and_are_counted() {
+        let mut s = EngineScratch::new();
+        s.ensure_pack_f64(3);
+        s.ensure_pack_i16(2);
+        assert_eq!((s.pack_f64.len(), s.pack_i16.len()), (3, 2));
+        s.ensure_pack_f64(2); // never shrinks
+        assert_eq!(s.pack_f64.len(), 3);
+        s.pack_f64[0].resize(128, 0.0);
+        s.pack_i16[1].resize(64, 0);
+        assert!(s.capacity() >= 128 * 8 + 64 * 2);
+    }
+
+    #[test]
+    fn stage_counters_accumulate_and_reset() {
+        let mut s = EngineScratch::new();
+        s.add_stage_ns([1, 2, 3]);
+        s.add_stage_ns([10, 20, 30]);
+        assert_eq!(s.stage_ns(), [11, 22, 33]);
+        assert_eq!(s.take_stage_ns(), [11, 22, 33]);
+        assert_eq!(s.stage_ns(), [0, 0, 0]);
+        // Saturating, never wrapping.
+        s.add_stage_ns([u64::MAX, 0, 0]);
+        s.add_stage_ns([5, 0, 0]);
+        assert_eq!(s.stage_ns()[0], u64::MAX);
     }
 }

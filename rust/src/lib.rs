@@ -8,7 +8,9 @@
 //! * [`nn`] — pure-rust NCHW inference: layers, Winograd conv layer,
 //!   ResNet18 (the serving path).
 //! * [`engine`] — the batched Winograd execution engines: flat tile
-//!   buffers, per-frequency GEMM panels, scoped-thread parallelism and
+//!   buffers, per-frequency GEMM panels run through the register-tiled,
+//!   cache-blocked micro-kernels of [`engine::gemm`] (packed weight
+//!   panels, fused requantize epilogue), scoped-thread parallelism and
 //!   reusable scratch (the serving hot loop; see `docs/ARCHITECTURE.md`).
 //!   [`engine::int`] is the fully integer-domain variant (i16 code
 //!   panels, i64-widened channel reduction) quantized layers serve on.

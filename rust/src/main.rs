@@ -39,6 +39,7 @@ fn main() {
         "error-analysis" => cmd_error_analysis(&args),
         "serve" => cmd_serve(&args),
         "tune" => cmd_tune(&args),
+        "bench" => cmd_bench(&args),
         "serve-demo" => {
             eprintln!("serve-demo was retired; use `winoq serve --synthetic` (see `winoq help`)");
             std::process::exit(2);
@@ -331,10 +332,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let (plan_counters, bank_counters) = registry.plans().counters();
     let int_counters = registry.plans().int_counters();
+    let packed_counters = registry.plans().packed_counters();
     eprintln!(
         "model {name:?}: width x{:.2}, {} | {} wino tiles/request | plan cache: {} plans \
          ({} hits / {} misses), {} weight banks ({} hits / {} misses), \
-         {} int code banks ({} hits / {} misses)",
+         {} int code banks ({} hits / {} misses), {} packed banks \
+         ({} hits / {} packs)",
         served.net.cfg.width_mult,
         mode_str,
         served.tiles_per_item(),
@@ -347,6 +350,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         registry.plans().int_bank_count(),
         int_counters.hits,
         int_counters.misses,
+        registry.plans().packed_bank_count(),
+        packed_counters.hits,
+        packed_counters.misses,
     );
 
     // Request pool: distinct synthetic images, round-robined by clients.
@@ -376,7 +382,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // flow should not silently report stale telemetry.
         let (pc, bc) = registry.plans().counters();
         let ic = registry.plans().int_counters();
-        std::fs::write(path, report.to_json_with_plan_cache(pc, bc, ic) + "\n")
+        let pk = registry.plans().packed_counters();
+        std::fs::write(path, report.to_json_with_plan_cache(pc, bc, ic, pk) + "\n")
             .with_context(|| format!("writing {path}"))?;
         eprintln!("stats JSON written to {path}");
     }
@@ -457,6 +464,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::write(path, json + "\n").with_context(|| format!("writing {path}"))?;
         eprintln!("int bench JSON written to {path}");
     }
+    Ok(())
+}
+
+/// `winoq bench`: in-binary micro-benchmarks that CI can run without a
+/// `cargo bench` recompile. Currently one suite: the register-tiled
+/// panel GEMM vs its naive oracles (float and integer), at a
+/// ResNet18-shaped layer, written as `BENCH_gemm.json` — the same
+/// emitter `cargo bench --bench conv_throughput` runs
+/// ([`gemm_bench_json`](winoq::engine::gemm::gemm_bench_json)), which
+/// also asserts tiled/naive bit-parity on the measured buffers.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let Some(path) = args.flag("--gemm-json") else {
+        bail!("nothing to bench: pass --gemm-json <path> (see `winoq help`)");
+    };
+    let m = args.flag_u64("--m", 4)? as usize;
+    if !(1..=8).contains(&m) {
+        bail!("--m {m} is outside the supported tile range 1..=8");
+    }
+    // ResNet18 acceptance shape: C = K = 64, 32×32 images, batch 8 →
+    // T = 8 · ⌈32/m⌉² tiles per pass, N² = (m + 2)² frequencies.
+    let (c, k, hw, batch) = (64, 64, 32usize, 8);
+    let t_total = batch * hw.div_ceil(m) * hw.div_ceil(m);
+    let nn = (m + 2) * (m + 2);
+    eprintln!(
+        "panel GEMM bench: C={c} K={k} T={t_total} N²={nn} (m={m}), tiled vs naive…"
+    );
+    let (json, float_ratio, int_ratio) =
+        winoq::engine::gemm::gemm_bench_json(c, k, t_total, nn, 1, 5);
+    println!(
+        "float: {float_ratio:.2}x tiles/s tiled vs naive {}",
+        if float_ratio >= 1.5 { "(PASS ≥1.5x)" } else { "(below 1.5x bar)" }
+    );
+    println!(
+        "int:   {int_ratio:.2}x tiles/s tiled vs naive {}",
+        if int_ratio >= 1.5 { "(PASS ≥1.5x)" } else { "(below 1.5x bar)" }
+    );
+    std::fs::write(path, json + "\n").with_context(|| format!("writing {path}"))?;
+    eprintln!("gemm bench JSON written to {path}");
     Ok(())
 }
 

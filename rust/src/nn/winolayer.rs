@@ -30,7 +30,7 @@ use super::layers::{pad_hw, Conv2dCfg};
 use super::tensor::Tensor;
 use crate::engine::int::{IntWeightBank, IntWinoEngine};
 use crate::engine::layout::extract_tile;
-use crate::engine::{transform_weight_bank, EngineScratch, WinoEngine};
+use crate::engine::{transform_weight_bank, EngineScratch, PackedF64, WinoEngine};
 use crate::quant::scheme::{QuantConfig, Quantizer};
 use crate::wino::basis::Base;
 use crate::wino::matrix::Mat;
@@ -111,6 +111,51 @@ impl WinoConv2d {
             }
         }
         let engine = WinoEngine::from_transformed_weights(wf.clone(), &wt, None);
+        WinoConv2d { wf, wt, k, c, quant: None, engine, int_engine: None, int_codes: None }
+    }
+
+    /// [`from_transformed`](Self::from_transformed) with an
+    /// **already-packed** engine weight bank (the
+    /// `serve::plan::PlanCache` caches one per layer): the float engine
+    /// is lowered through [`WinoEngine::from_packed`] and no packing
+    /// runs at all — served model variants share one packed bank the way
+    /// quantized variants share an i16 code bank. `packed` must be the
+    /// packing of exactly this `wt` (the cache keys both by the same
+    /// `(layer, plan)` identity; debug builds verify element-for-element).
+    pub fn from_transformed_packed(
+        wf: WinoF,
+        wt: Vec<Vec<Mat>>,
+        packed: Arc<PackedF64>,
+    ) -> WinoConv2d {
+        let k = wt.len();
+        assert!(k > 0, "need at least one output filter");
+        let c = wt[0].len();
+        assert_eq!(
+            (packed.k, packed.c, packed.nn),
+            (k, c, wf.n * wf.n),
+            "packed bank shape does not match the transformed bank"
+        );
+        for per_c in &wt {
+            assert_eq!(per_c.len(), c, "ragged filter bank");
+            for m in per_c {
+                assert_eq!((m.rows(), m.cols()), (wf.n, wf.n), "bank/plan tile mismatch");
+            }
+        }
+        #[cfg(debug_assertions)]
+        for f in 0..packed.nn {
+            let panel = packed.unpacked_panel(f);
+            for (ki, per_c) in wt.iter().enumerate() {
+                for (ci, mat) in per_c.iter().enumerate() {
+                    debug_assert_eq!(
+                        panel[ki * c + ci].to_bits(),
+                        mat.data()[f].to_bits(),
+                        "cached packed bank diverges from the transformed bank at \
+                         (f={f}, k={ki}, c={ci})"
+                    );
+                }
+            }
+        }
+        let engine = WinoEngine::from_packed(wf.clone(), packed, None);
         WinoConv2d { wf, wt, k, c, quant: None, engine, int_engine: None, int_codes: None }
     }
 

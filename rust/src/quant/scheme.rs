@@ -128,6 +128,43 @@ impl Quantizer {
     pub fn step_error(&self) -> f64 {
         self.scale * 0.5
     }
+
+    /// Precompute the fused requantization epilogue for an integer
+    /// accumulator: [`Requant::apply`]`(acc)` is **bit-identical** to
+    /// `self.quantize(acc as f64 * prod_scale)` — the same multiply,
+    /// divide, round and clamp in the same order — with the per-call
+    /// `qmax` bit-range assert and the step load hoisted out of the hot
+    /// loop. This is the epilogue the tiled integer panel GEMM
+    /// ([`engine::gemm`](crate::engine::gemm)) applies per register tile.
+    ///
+    /// Deliberately **not** folded into a single multiplier
+    /// `prod_scale / scale`: that quotient would round once when formed
+    /// and again when applied, and the double rounding flips codes next
+    /// to ties — `requant_is_bit_identical_to_quantize` would catch it.
+    pub fn requant(&self, prod_scale: f64) -> Requant {
+        Requant { prod_scale, scale: self.scale, qmax: Self::qmax(self.bits) }
+    }
+}
+
+/// Hoisted requantization state (see [`Quantizer::requant`]): the
+/// accumulator→real scale, the quantizer step and the precomputed clamp
+/// bound, applied branch-light per output element.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Requant {
+    prod_scale: f64,
+    scale: f64,
+    qmax: i32,
+}
+
+impl Requant {
+    /// Requantize one integer accumulator: exactly
+    /// `quantize(acc as f64 * prod_scale)` — saturating at `±qmax`,
+    /// never wrapping.
+    #[inline]
+    pub fn apply(&self, acc: i64) -> i32 {
+        let q = ((acc as f64 * self.prod_scale) / self.scale).round();
+        (q as i32).clamp(-self.qmax, self.qmax)
+    }
 }
 
 /// Bit-width configuration of the quantized Winograd pipeline — which stage
@@ -327,6 +364,45 @@ mod tests {
         assert_eq!(QuantConfig::from_name("u1"), None);
         assert_eq!(QuantConfig::from_name("none"), None);
         assert_eq!(QuantConfig::from_name("w9"), None);
+    }
+
+    #[test]
+    fn requant_is_bit_identical_to_quantize() {
+        // The hoisted epilogue must reproduce quantize(acc · prod_scale)
+        // for every code path: interior values, exact ties, clamp on
+        // both sides, huge/tiny scales. Deterministic sweep plus a
+        // seeded random sweep over several orders of magnitude.
+        use crate::wino::error::Prng;
+        let cases = [
+            (9u32, 3.7e-4, 1.9e-4),
+            (8, 1.0, 1.0),
+            (8, 1e-9, 1e6),
+            (16, 2.5e-2, 5.0e-7),
+        ];
+        for &(bits, scale, ps) in &cases {
+            let hq = Quantizer::with_scale(bits, scale);
+            let rq = hq.requant(ps);
+            for acc in (-2000i64..=2000).chain([i64::MIN / 4, i64::MAX / 4]) {
+                assert_eq!(
+                    rq.apply(acc),
+                    hq.quantize(acc as f64 * ps),
+                    "bits={bits} scale={scale} ps={ps} acc={acc}"
+                );
+            }
+        }
+        let mut rng = Prng::new(0xEE);
+        for _ in 0..4000 {
+            let bits = 2 + (rng.next_u64() % 15) as u32;
+            let hq = Quantizer::with_scale(bits, 10f64.powf(rng.uniform(6.0)));
+            let ps = 10f64.powf(rng.uniform(6.0));
+            let rq = hq.requant(ps);
+            let acc = rng.next_u64() as i64 >> (rng.next_u64() % 40);
+            assert_eq!(rq.apply(acc), hq.quantize(acc as f64 * ps));
+        }
+        // A tie case the folded-multiplier shortcut would get wrong is
+        // hard to construct deterministically across platforms, but the
+        // exact-ops invariant above subsumes it: apply() *is* quantize()
+        // on the same f64 intermediate.
     }
 
     #[test]

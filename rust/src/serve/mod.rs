@@ -220,6 +220,10 @@ fn worker_loop(
             depth_after_drain,
             &lat_us,
         );
+        // Per-stage engine breakdown for this batch (accumulated in the
+        // worker's scratch across every layer of the pass) — the stats
+        // JSON's `stage_ns` view of *where* serving time goes.
+        stats.record_stage_ns(scratch.take_stage_ns());
     }
 }
 

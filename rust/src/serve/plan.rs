@@ -15,7 +15,7 @@
 //! once, engines are lowered from cached panels.
 
 use crate::engine::int::{IntWeightBank, MAX_CODE_BITS};
-use crate::engine::transform_weight_bank;
+use crate::engine::{transform_weight_bank, PackedF64};
 use crate::nn::tensor::Tensor;
 use crate::wino::basis::Base;
 use crate::wino::matrix::Mat;
@@ -54,6 +54,10 @@ type BankMap = HashMap<(String, PlanKey), Arc<WeightBank>>;
 /// `w8` and `w8_h9` variants of one layer share a single 8-bit bank.
 type IntBankMap = HashMap<(String, PlanKey, u32), Arc<IntWeightBank>>;
 
+/// Register-tile-packed float weight banks (`engine::gemm` layout),
+/// keyed like the float banks they are packed from.
+type PackedMap = HashMap<(String, PlanKey), Arc<PackedF64>>;
+
 /// Shared cache of lowered transform plans and transformed weight banks.
 ///
 /// Interior mutability (`Mutex`) so one cache can be shared by reference
@@ -65,9 +69,11 @@ pub struct PlanCache {
     wfs: Mutex<HashMap<PlanKey, Arc<WinoF>>>,
     banks: Mutex<BankMap>,
     int_banks: Mutex<IntBankMap>,
+    packed_banks: Mutex<PackedMap>,
     wf_counters: Mutex<CacheCounters>,
     bank_counters: Mutex<CacheCounters>,
     int_counters: Mutex<CacheCounters>,
+    packed_counters: Mutex<CacheCounters>,
 }
 
 impl PlanCache {
@@ -150,6 +156,44 @@ impl PlanCache {
         Some(bank)
     }
 
+    /// The **register-tile-packed** float weight bank for one layer
+    /// (`engine::gemm` `[N²][⌈K/MR⌉][C][MR]` layout), packing the
+    /// (already-fetched) float bank on first use. Serving lowers
+    /// unquantized layers through
+    /// [`from_transformed_packed`](crate::nn::winolayer::WinoConv2d::from_transformed_packed)
+    /// with this shared bank, so registering several variants of one
+    /// checkpoint packs each layer **once** — the `packed_banks`
+    /// hit/miss telemetry in the stats JSON counts exactly those packs.
+    /// `float_bank` must be the [`weight_bank`](Self::weight_bank) entry
+    /// for the same `(layer_id, key)`. (Quantized layers bake fake-quant
+    /// into their float panels per config and repack privately; their
+    /// *integer* engines share packings through the
+    /// [`int_weight_bank`](Self::int_weight_bank) cache instead, which
+    /// stores codes pre-packed.)
+    pub fn packed_bank(
+        &self,
+        layer_id: &str,
+        key: PlanKey,
+        float_bank: &WeightBank,
+    ) -> Arc<PackedF64> {
+        let map_key = (layer_id.to_string(), key);
+        let mut map = self.packed_banks.lock().unwrap();
+        let mut counters = self.packed_counters.lock().unwrap();
+        if let Some(packed) = map.get(&map_key) {
+            counters.hits += 1;
+            return packed.clone();
+        }
+        counters.misses += 1;
+        let k = float_bank.len();
+        let c = float_bank[0].len();
+        let nn = float_bank[0][0].rows() * float_bank[0][0].cols();
+        let packed = Arc::new(PackedF64::pack(nn, k, c, 0.0, |f, ki, ci| {
+            float_bank[ki][ci].data()[f]
+        }));
+        map.insert(map_key, packed.clone());
+        packed
+    }
+
     /// Number of distinct plans currently cached.
     pub fn plan_count(&self) -> usize {
         self.wfs.lock().unwrap().len()
@@ -165,6 +209,11 @@ impl PlanCache {
         self.int_banks.lock().unwrap().len()
     }
 
+    /// Number of distinct packed float banks currently cached.
+    pub fn packed_bank_count(&self) -> usize {
+        self.packed_banks.lock().unwrap().len()
+    }
+
     /// `(plan, bank)` hit/miss counters.
     pub fn counters(&self) -> (CacheCounters, CacheCounters) {
         (
@@ -176,6 +225,11 @@ impl PlanCache {
     /// Integer code-bank hit/miss counters.
     pub fn int_counters(&self) -> CacheCounters {
         *self.int_counters.lock().unwrap()
+    }
+
+    /// Packed-float-bank hit/miss counters (misses = packs performed).
+    pub fn packed_counters(&self) -> CacheCounters {
+        *self.packed_counters.lock().unwrap()
     }
 }
 
@@ -239,6 +293,37 @@ mod tests {
         let fresh = crate::engine::int::IntWeightBank::from_float_bank(fb, 8).unwrap();
         assert_eq!(a.weights_t, fresh.weights_t);
         assert_eq!(a.codes(), fresh.codes());
+    }
+
+    #[test]
+    fn packed_banks_shared_and_match_fresh_packing() {
+        // Two fetches share one packing (telemetry counts the single
+        // pack); lowering through the cached packed bank is bit-identical
+        // to a fresh layer.
+        let cache = PlanCache::new();
+        let key = PlanKey::f(4, 3, Base::Legendre);
+        let w = prng_tensor(12, &[3, 2, 3, 3], 0.5);
+        let x = prng_tensor(13, &[1, 2, 9, 9], 1.0);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let bank = cache.weight_bank("m/l0", key, &w);
+        let a = cache.packed_bank("m/l0", key, bank.as_ref());
+        let b = cache.packed_bank("m/l0", key, bank.as_ref());
+        assert!(Arc::ptr_eq(&a, &b), "same (layer, key) must share the packing");
+        assert_eq!(cache.packed_bank_count(), 1);
+        let pc = cache.packed_counters();
+        assert_eq!((pc.hits, pc.misses), (1, 1));
+        let wf = cache.wf(key);
+        let cached = crate::nn::winolayer::WinoConv2d::from_transformed_packed(
+            wf.as_ref().clone(),
+            bank.as_ref().clone(),
+            a.clone(),
+        );
+        assert!(
+            Arc::ptr_eq(cached.engine().packed_weights(), &a),
+            "the lowered engine must execute from the cached packing"
+        );
+        let fresh = WinoConv2d::new(4, &w, Base::Legendre);
+        assert_eq!(cached.forward(&x, cfg).data, fresh.forward(&x, cfg).data);
     }
 
     #[test]

@@ -19,7 +19,12 @@
 //! All transform lowering goes through the shared
 //! [`PlanCache`](super::plan::PlanCache): one registry hosting several
 //! variants of a model (w8 vs w8_h9, Legendre vs Chebyshev) builds each
-//! `F(m, r)` plan exactly once. Quantized layers additionally receive
+//! `F(m, r)` plan exactly once and transforms each weight bank once;
+//! float-mode layers additionally share one panel-GEMM register-tile
+//! **packing** per bank
+//! ([`PlanCache::packed_bank`](super::plan::PlanCache::packed_bank) —
+//! quantized layers skip it, since calibration repacks their fake-quant
+//! panels privately). Quantized layers instead receive
 //! their **i16 weight-code bank** from the cache
 //! ([`PlanCache::int_weight_bank`](super::plan::PlanCache::int_weight_bank)),
 //! so their integer engines serve from shared codes and a quantized
@@ -186,6 +191,11 @@ impl ModelRegistry {
                 let wf = plans.wf(key);
                 let layer_id = format!("{ns}/{prefix}");
                 let bank = plans.weight_bank(&layer_id, key, w);
+                // NetPlan layers are always quantized: calibration will
+                // replace this construction-time float engine with a
+                // fake-quant repack, so no shared packed bank is cached
+                // for it (the *integer* engine shares through the i16
+                // code-bank cache instead).
                 let mut conv =
                     WinoConv2d::from_transformed(wf.as_ref().clone(), bank.as_ref().clone());
                 // Per-layer quantized operating point → per-layer shared
@@ -327,10 +337,26 @@ impl ModelRegistry {
                     &|prefix: &str, w: &Tensor| {
                         let layer_id = format!("{bank_ns}/{prefix}");
                         let bank = plans.weight_bank(&layer_id, key, w);
-                        let mut conv = WinoConv2d::from_transformed(
-                            wf.as_ref().clone(),
-                            bank.as_ref().clone(),
-                        );
+                        // Float-mode layers serve from the shared packed
+                        // bank. Quantized layers skip it: calibration
+                        // replaces their float engine with a private
+                        // fake-quant repack anyway, and caching a pack
+                        // nothing will ever execute from would just pin
+                        // dead f64 panels for the registry's lifetime.
+                        let mut conv = if quant.is_none() {
+                            let packed =
+                                plans.packed_bank(&layer_id, key, bank.as_ref());
+                            WinoConv2d::from_transformed_packed(
+                                wf.as_ref().clone(),
+                                bank.as_ref().clone(),
+                                packed,
+                            )
+                        } else {
+                            WinoConv2d::from_transformed(
+                                wf.as_ref().clone(),
+                                bank.as_ref().clone(),
+                            )
+                        };
                         // Quantized serving: hand the layer the shared i16
                         // code bank so calibration lowers its integer
                         // engine from cached codes instead of requantizing
@@ -466,6 +492,32 @@ mod tests {
         assert_eq!(reg.plans().bank_count(), 14);
         assert_eq!(bank_counters.misses, 14);
         assert_eq!(bank_counters.hits, 14);
+        // Quantized registrations never touch the packed-float-bank
+        // cache: calibration replaces their float engines with private
+        // fake-quant repacks, so caching a shared pack would only pin
+        // dead panels (sharing happens at the i16 code-bank level).
+        assert_eq!(reg.plans().packed_bank_count(), 0);
+        let pc = reg.plans().packed_counters();
+        assert_eq!((pc.hits, pc.misses), (0, 0));
+    }
+
+    #[test]
+    fn float_variants_share_packed_engine_banks() {
+        // Two *unquantized* registrations of one synthetic model: their
+        // float engines must execute from the very same packed weight
+        // bank (quantized layers re-bake and repack privately — their
+        // sharing happens at the i16 code-bank level instead).
+        let mut reg = ModelRegistry::new();
+        let a = reg.register_synthetic("a", wino_cfg(None), 32, 7, 1).unwrap();
+        let b = reg.register_synthetic("b", wino_cfg(None), 32, 7, 1).unwrap();
+        let la = a.net.wino_layer("s0b0.conv1").unwrap();
+        let lb = b.net.wino_layer("s0b0.conv1").unwrap();
+        assert!(
+            Arc::ptr_eq(la.engine().packed_weights(), lb.engine().packed_weights()),
+            "float variants must share one packed bank"
+        );
+        let pc = reg.plans().packed_counters();
+        assert_eq!((pc.hits, pc.misses), (14, 14));
     }
 
     #[test]

@@ -27,6 +27,11 @@ struct StatsState {
     tiles: u64,
     /// High-water mark of the queue depth observed at drain time.
     max_queue_depth: usize,
+    /// Cumulative engine stage breakdown across all workers:
+    /// `[input-transform, hadamard/GEMM, inverse]` wall-nanoseconds
+    /// (each worker's scratch accumulates a pass, the worker drains it
+    /// here per micro-batch).
+    stage_ns: [u64; 3],
 }
 
 /// Shared, thread-safe stats sink for one serving run.
@@ -54,6 +59,15 @@ impl ServeStats {
     /// Record one admission rejection (backpressure).
     pub fn record_reject(&self) {
         self.state.lock().unwrap().rejected += 1;
+    }
+
+    /// Fold one engine-pass stage breakdown (`EngineScratch::take_stage_ns`)
+    /// into the run totals.
+    pub fn record_stage_ns(&self, stage_ns: [u64; 3]) {
+        let mut st = self.state.lock().unwrap();
+        for (acc, v) in st.stage_ns.iter_mut().zip(stage_ns) {
+            *acc = acc.saturating_add(v);
+        }
     }
 
     /// Completed-request count so far.
@@ -97,6 +111,7 @@ impl ServeStats {
             tiles_per_sec: st.tiles as f64 / wall,
             max_queue_depth: st.max_queue_depth,
             wall_seconds,
+            stage_ns: st.stage_ns,
         }
     }
 }
@@ -116,6 +131,11 @@ pub struct StatsReport {
     pub tiles_per_sec: f64,
     pub max_queue_depth: usize,
     pub wall_seconds: f64,
+    /// Engine stage breakdown summed over every pass of the run:
+    /// `[input-transform, hadamard/GEMM, inverse]` wall-nanoseconds —
+    /// the per-stage view future perf work reads to see *which* stage
+    /// moved.
+    pub stage_ns: [u64; 3],
 }
 
 impl StatsReport {
@@ -128,7 +148,9 @@ impl StatsReport {
                 "\"mean_batch\": {:.3}, ",
                 "\"latency_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}}, ",
                 "\"requests_per_sec\": {:.2}, \"tiles_per_sec\": {:.1}, ",
-                "\"max_queue_depth\": {}, \"wall_seconds\": {:.4}}}"
+                "\"max_queue_depth\": {}, \"wall_seconds\": {:.4}, ",
+                "\"stage_ns\": {{\"input_transform\": {}, \"hadamard\": {}, ",
+                "\"inverse\": {}}}}}"
             ),
             self.completed,
             self.rejected,
@@ -142,23 +164,30 @@ impl StatsReport {
             self.tiles_per_sec,
             self.max_queue_depth,
             self.wall_seconds,
+            self.stage_ns[0],
+            self.stage_ns[1],
+            self.stage_ns[2],
         )
     }
 
     /// [`to_json`](Self::to_json) extended with the serving registry's
     /// transform-plan cache telemetry — hits/misses for the lowered-plan,
-    /// float weight-bank and i16 code-bank maps
-    /// ([`PlanCache::counters`](super::plan::PlanCache::counters) /
-    /// [`PlanCache::int_counters`](super::plan::PlanCache::int_counters)).
+    /// float weight-bank, i16 code-bank and register-tile-packed-bank
+    /// maps ([`PlanCache::counters`](super::plan::PlanCache::counters) /
+    /// [`PlanCache::int_counters`](super::plan::PlanCache::int_counters) /
+    /// [`PlanCache::packed_counters`](super::plan::PlanCache::packed_counters)).
     /// Heterogeneous (NetPlan-tuned) models make this worth watching: one
     /// model may populate several `(m, base)` plan entries, a second
-    /// registration should hit, not re-transform, and quantized variants
-    /// of one checkpoint should *share* code banks, not requantize.
+    /// registration should hit, not re-transform, quantized variants
+    /// of one checkpoint should *share* code banks, not requantize, and
+    /// `packed_banks.misses` counts the weight packings actually
+    /// performed.
     pub fn to_json_with_plan_cache(
         &self,
         plans: CacheCounters,
         banks: CacheCounters,
         int_banks: CacheCounters,
+        packed_banks: CacheCounters,
     ) -> String {
         let core = self.to_json();
         format!(
@@ -166,7 +195,8 @@ impl StatsReport {
                 "{}, \"plan_cache\": {{",
                 "\"plans\": {{\"hits\": {}, \"misses\": {}}}, ",
                 "\"banks\": {{\"hits\": {}, \"misses\": {}}}, ",
-                "\"int_banks\": {{\"hits\": {}, \"misses\": {}}}}}}}"
+                "\"int_banks\": {{\"hits\": {}, \"misses\": {}}}, ",
+                "\"packed_banks\": {{\"hits\": {}, \"misses\": {}}}}}}}"
             ),
             &core[..core.len() - 1],
             plans.hits,
@@ -175,6 +205,8 @@ impl StatsReport {
             banks.misses,
             int_banks.hits,
             int_banks.misses,
+            packed_banks.hits,
+            packed_banks.misses,
         )
     }
 
@@ -221,17 +253,36 @@ mod tests {
     }
 
     #[test]
+    fn stage_breakdown_accumulates_and_is_emitted() {
+        let s = ServeStats::new();
+        s.record_stage_ns([100, 2000, 30]);
+        s.record_stage_ns([1, 2, 3]);
+        let r = s.report(1.0);
+        assert_eq!(r.stage_ns, [101, 2002, 33]);
+        let j = r.to_json();
+        assert!(
+            j.contains(
+                "\"stage_ns\": {\"input_transform\": 101, \"hadamard\": 2002, \
+                 \"inverse\": 33}"
+            ),
+            "{j}"
+        );
+    }
+
+    #[test]
     fn json_with_plan_cache_appends_counters() {
         let r = ServeStats::new().report(1.0);
         let j = r.to_json_with_plan_cache(
             CacheCounters { hits: 3, misses: 2 },
             CacheCounters { hits: 28, misses: 14 },
             CacheCounters { hits: 14, misses: 14 },
+            CacheCounters { hits: 9, misses: 5 },
         );
         assert!(j.contains("\"plan_cache\""), "{j}");
         assert!(j.contains("\"plans\": {\"hits\": 3, \"misses\": 2}"), "{j}");
         assert!(j.contains("\"banks\": {\"hits\": 28, \"misses\": 14}"), "{j}");
         assert!(j.contains("\"int_banks\": {\"hits\": 14, \"misses\": 14}"), "{j}");
+        assert!(j.contains("\"packed_banks\": {\"hits\": 9, \"misses\": 5}"), "{j}");
         // Still one well-formed object: the base keys survive and the
         // braces balance.
         assert!(j.contains("\"completed\""));
@@ -255,6 +306,7 @@ mod tests {
             "\"p99\"",
             "\"tiles_per_sec\"",
             "\"max_queue_depth\"",
+            "\"stage_ns\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -20,7 +20,12 @@
 //! the real integer-domain engine
 //! ([`IntWinoEngine`](crate::engine::int::IntWinoEngine)) — the path a
 //! NetPlan deploys — not the fake-quant float pipeline
-//! (`int_path_is_what_gets_scored` pins this).
+//! (`int_path_is_what_gets_scored` pins this). That dispatch executes
+//! the register-tiled panel GEMM ([`engine::gemm`](crate::engine::gemm))
+//! over pre-packed weight codes, so the throughput the tuner trades off
+//! against error is the micro-kernel path serving actually runs — a
+//! candidate's tile-size cost reflects the tiled kernel's behaviour at
+//! that layer's `(C, K, T, N²)`, not a naive loop's.
 
 use super::grid::Candidate;
 use crate::benchkit;

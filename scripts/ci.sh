@@ -22,6 +22,32 @@ cargo test -q
 echo "==> golden transform vectors + int-vs-oracle parity"
 cargo test -q --test golden_transforms --test int_parity
 
+# Panel-GEMM bench: the register-tiled kernels must beat the naive
+# stage-2 oracles on both the float and integer paths at the
+# ResNet18-shaped layer, and the emitter itself asserts tiled/naive
+# bit-parity on the measured buffers. The acceptance target is 1.5x;
+# CI fails below 1.0 (a loaded runner gets slack, a regression to
+# parity-or-worse does not). Seeds the bench trajectory BENCH_gemm.json.
+echo "==> winoq bench (tiled vs naive panel GEMM) + BENCH_gemm.json"
+GEMM_JSON="$SCRIPT_DIR/../BENCH_gemm.json"
+./target/release/winoq bench --gemm-json "$GEMM_JSON"
+if [ ! -s "$GEMM_JSON" ] || ! grep -q '"bench": "gemm"' "$GEMM_JSON"; then
+  echo "gemm bench FAILED: BENCH_gemm.json missing or malformed" >&2
+  exit 1
+fi
+RATIOS="$(sed -n 's/.*"ratio_tiled_vs_naive": \([0-9.][0-9.]*\).*"ratio_tiled_vs_naive": \([0-9.][0-9.]*\).*/\1 \2/p' "$GEMM_JSON")"
+if [ -z "$RATIOS" ]; then
+  echo "gemm bench FAILED: BENCH_gemm.json has no float+int ratios" >&2
+  cat "$GEMM_JSON" >&2
+  exit 1
+fi
+if ! echo "$RATIOS" | awk '{ exit !($1 >= 1.0 && $2 >= 1.0) }'; then
+  echo "gemm bench FAILED: tiled/naive ratio < 1 (float int: $RATIOS)" >&2
+  cat "$GEMM_JSON" >&2
+  exit 1
+fi
+echo "gemm bench OK (float/int tiled-vs-naive ratios: $RATIOS)"
+
 # Serve smoke: the micro-batching server must complete a synthetic
 # closed-loop run and report non-zero completions in its stats JSON.
 # Also refreshes the serve bench trajectory (BENCH_serve.json).
@@ -36,6 +62,11 @@ fi
 COMPLETED="$(sed -n 's/.*"completed": *\([0-9][0-9]*\).*/\1/p' "$SMOKE_JSON")"
 if [ -z "$COMPLETED" ] || [ "$COMPLETED" -eq 0 ]; then
   echo "serve smoke FAILED: stats JSON reports zero completed requests" >&2
+  cat "$SMOKE_JSON" >&2
+  exit 1
+fi
+if ! grep -q '"stage_ns"' "$SMOKE_JSON"; then
+  echo "serve smoke FAILED: stats JSON lacks the per-stage breakdown" >&2
   cat "$SMOKE_JSON" >&2
   exit 1
 fi
