@@ -127,6 +127,23 @@ pub const VALUE_FLAGS: &[FlagSpec] = &[
         metavar: "N",
         help: "tune: tune only the first N eligible layers (0 = all)",
     },
+    // soak flags (see `winoq serve --soak`)
+    FlagSpec {
+        name: "--models",
+        metavar: "N",
+        help: "soak: simulated model shards (default 2)",
+    },
+    FlagSpec {
+        name: "--deadline-us",
+        metavar: "US",
+        help: "soak: base relative request deadline in microseconds",
+    },
+    FlagSpec {
+        name: "--soak-json",
+        metavar: "PATH",
+        help: "soak: write the soak report JSON here (default BENCH_serve_soak.json)",
+    },
+    FlagSpec { name: "--seed", metavar: "S", help: "soak: PRNG seed for the request trace" },
 ];
 
 /// Bare switches (no value).
@@ -135,6 +152,11 @@ pub const SWITCH_FLAGS: &[FlagSpec] = &[
         name: "--synthetic",
         metavar: "",
         help: "serve: run the built-in closed-loop client",
+    },
+    FlagSpec {
+        name: "--soak",
+        metavar: "",
+        help: "serve: run the deterministic multi-model soak simulation",
     },
     FlagSpec { name: "--verbose", metavar: "", help: "more logging where supported" },
     FlagSpec { name: "--help", metavar: "", help: "show this help (also -h)" },
@@ -253,6 +275,10 @@ COMMANDS:
                     [--quant w8|w8_h9|none] [--artifact TAG] [--checkpoint P]
                     [--plan NETPLAN.json] [--stats-json PATH] [--bench-json PATH]
                     [--int-bench-json PATH]
+                  deterministic multi-model stress/soak simulation
+                    --soak [--requests N] [--models N] [--deadline-us US]
+                    [--seed S] [--queue-cap N] [--max-batch B]
+                    [--batch-window-us US] [--workers W] [--soak-json PATH]
   tune            per-layer base/tile/bit-width autotuner → NetPlan JSON
                     --synthetic [--grid full|tiny] [--layers N]
                     [--objective error|throughput|balanced] [--max-err E]

@@ -177,6 +177,27 @@ mod tests {
     }
 
     #[test]
+    fn grid_handles_non_square_and_one_pixel_edges() {
+        // Non-square 11×35 padded input, F(4,3): 9×33 output. Height
+        // needs ⌈9/4⌉ = 3 tile rows — the last one covers a single
+        // output row — width needs ⌈33/4⌉ = 9 columns, the last one
+        // covering a single output column (the 1-pixel-edge-tile case
+        // the arbitrary-H×W serving path leans on).
+        let g = TileGrid::new(&[1, 3, 11, 35], 4, 3);
+        assert_eq!((g.oh, g.ow), (9, 33));
+        assert_eq!((g.tiles_h, g.tiles_w), (3, 9));
+        assert_eq!(g.oh - (g.tiles_h - 1) * g.m, 1, "last tile row is 1 px");
+        assert_eq!(g.ow - (g.tiles_w - 1) * g.m, 1, "last tile col is 1 px");
+        // tile_count_for applies padding to the raw dims first:
+        // 9×33 + pad 1 → the same padded 11×35 grid.
+        assert_eq!(tile_count_for(&[1, 3, 9, 33], 1, 4, 3), 27);
+        // Transposing the image transposes the grid, nothing else.
+        let t = TileGrid::new(&[1, 3, 35, 11], 4, 3);
+        assert_eq!((t.tiles_h, t.tiles_w), (9, 3));
+        assert_eq!(t.tile_count(), g.tile_count());
+    }
+
+    #[test]
     fn tile_index_is_batch_major() {
         let g = TileGrid::new(&[2, 1, 9, 9], 4, 3);
         assert_eq!(g.tile_index(0, 0, 0), 0);

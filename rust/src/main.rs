@@ -254,10 +254,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use winoq::nn::{ConvMode, ResNetCfg, Tensor};
     use winoq::serve::{run_closed_loop, BatchModel, ModelRegistry, ServeConfig};
 
+    if args.has_switch("--soak") {
+        return cmd_serve_soak(args);
+    }
     if !args.has_switch("--synthetic") {
         bail!(
             "no network frontend exists in this vendored build; run the built-in \
-             closed-loop client with `winoq serve --synthetic` (see `winoq help`)"
+             closed-loop client with `winoq serve --synthetic`, or the deterministic \
+             soak simulation with `winoq serve --soak` (see `winoq help`)"
         );
     }
     let requests = args.flag_u64("--requests", 256)? as usize;
@@ -269,6 +273,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_window_us: args.flag_u64("--batch-window-us", 2000)?,
         queue_cap: (args.flag_u64("--queue-cap", 256)? as usize).max(1),
         workers: (args.flag_u64("--workers", 1)? as usize).max(1),
+        cost: None,
     };
     let m = args.flag_u64("--m", 4)? as usize;
     let base_name = args.flag_or("--base", "legendre");
@@ -502,6 +507,73 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
     std::fs::write(path, json + "\n").with_context(|| format!("writing {path}"))?;
     eprintln!("gemm bench JSON written to {path}");
+    Ok(())
+}
+
+/// `winoq serve --soak`: the deterministic multi-model stress/soak
+/// simulation — seeded arrivals over N weighted model shards, per-request
+/// deadlines and priorities, shed/miss accounting, all on a virtual
+/// clock (milliseconds of real time for millions of virtual µs). Writes
+/// the `BENCH_serve_soak.json` report `scripts/ci.sh` validates.
+fn cmd_serve_soak(args: &Args) -> Result<()> {
+    use winoq::engine::layout::tile_count_for;
+    use winoq::testkit::soak::{run_soak, SoakConfig, SoakModel};
+    use winoq::tune::cost::TileCostModel;
+
+    let requests = (args.flag_u64("--requests", 256)? as usize).max(1);
+    let models = (args.flag_u64("--models", 2)? as usize).clamp(1, 16);
+    let deadline_us = args.flag_u64("--deadline-us", 20_000)?.max(1);
+    let seed = args.flag_u64("--seed", 0x50AB)?;
+    // Mixed request geometries, including non-square and transposed
+    // shapes; tile weights come from the real F(4,3) grid over a
+    // 14-layer stride-1 stack (the ResNet18 wino-layer count).
+    let shapes: Vec<(usize, usize, u64)> = [(32, 32), (24, 48), (48, 24), (16, 16)]
+        .iter()
+        .map(|&(h, w)| (h, w, (tile_count_for(&[1, 3, h, w], 1, 4, 3) * 14) as u64))
+        .collect();
+    let workers = (args.flag_u64("--workers", 2)? as usize).max(1);
+    let tenants: Vec<SoakModel> = (0..models)
+        .map(|i| SoakModel {
+            name: format!("model-{i}"),
+            weight: i as u64 + 1,
+            workers,
+            cost: TileCostModel::new(40.0 + 15.0 * i as f64, 0.02 + 0.01 * i as f64),
+        })
+        .collect();
+    let cfg = SoakConfig {
+        seed,
+        requests,
+        budget: (args.flag_u64("--queue-cap", 64)? as usize).max(1),
+        max_batch: (args.flag_u64("--max-batch", 8)? as usize).max(1),
+        window_us: args.flag_u64("--batch-window-us", 1000)?,
+        mean_gap_us: 30,
+        deadline_us,
+        tight_pct: 5,
+        no_deadline_pct: 15,
+        shapes,
+        models: tenants,
+        service_jitter_div: 16,
+    };
+    let report = run_soak(&cfg);
+    println!("{}", report.summary_line());
+    for m in &report.per_model {
+        println!(
+            "  {}: {} ok / {} rejected / {} shed, p99 {:.0} µs, {:.0} req/s",
+            m.name, m.completed, m.rejected, m.shed, m.p99_us, m.requests_per_sec
+        );
+    }
+    if !report.accounting_exact() {
+        bail!(
+            "soak accounting does not reconcile: {} submitted vs {} + {} + {}",
+            report.submitted,
+            report.completed,
+            report.rejected,
+            report.shed
+        );
+    }
+    let path = args.flag_or("--soak-json", "BENCH_serve_soak.json");
+    std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
+    eprintln!("soak report written to {path}");
     Ok(())
 }
 

@@ -326,24 +326,37 @@ impl ResNet18 {
     /// tile grid, so heterogeneous (per-layer-tuned) networks are counted
     /// correctly.
     pub fn wino_tiles_per_item(&self, input_hw: usize) -> usize {
+        self.wino_tiles_per_shape(input_hw, input_hw)
+    }
+
+    /// [`wino_tiles_per_item`](Self::wino_tiles_per_item) for an
+    /// arbitrary (possibly non-square) `h`×`w` image. The stage walk uses
+    /// the exact conv output arithmetic `out = (in − 1)/stride + 1`,
+    /// which holds for both unit kinds that advance the spatial size here
+    /// — stride-1/stride-2 3×3 `same` convs (`(in + 2 − 3)/s + 1`) and
+    /// the skipped parallel 1×1-pad-0 stride-2 `down` path — so odd
+    /// sizes (where `hw /= stride` would round the wrong way) and
+    /// 1-pixel edge tiles are counted exactly.
+    pub fn wino_tiles_per_shape(&self, input_h: usize, input_w: usize) -> usize {
         let pad = 1; // all wino units are 3×3 `same` convs
         let mut tiles = 0;
-        let mut hw = input_hw;
+        let (mut h, mut w) = (input_h, input_w);
         for (prefix, stride, _cin, _cout) in Self::conv_units(&self.cfg) {
             if prefix.ends_with("down") {
-                continue; // parallel 1×1 path; conv1 already advanced `hw`
+                continue; // parallel 1×1 path; conv1 already advanced h/w
             }
             if stride == 1 {
                 if let Some(layer) = self.wino.get(&prefix) {
                     let g = TileGrid::new(
-                        &[1, 1, hw + 2 * pad, hw + 2 * pad],
+                        &[1, 1, h + 2 * pad, w + 2 * pad],
                         layer.wf.m,
                         layer.wf.r,
                     );
                     tiles += g.tile_count();
                 }
             }
-            hw /= stride;
+            h = (h - 1) / stride + 1;
+            w = (w - 1) / stride + 1;
         }
         tiles
     }

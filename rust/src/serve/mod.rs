@@ -38,20 +38,45 @@
 //! across bases). Workers hand the actual parallelism to the engine's
 //! scoped pool ([`engine::parallel`](crate::engine::parallel)); keep
 //! `workers × WINOQ_THREADS` at or below the core count.
+//!
+//! **Serving at scale** adds three layers on top of that core loop (see
+//! `docs/ARCHITECTURE.md`, "Serve at scale"):
+//!
+//! * [`sched`] — the pure, clock-free scheduling policy every front-end
+//!   shares: EDF inside priority lanes, shape-homogeneous batches,
+//!   deadline-based batch closing against a
+//!   [`TileCostModel`](crate::tune::cost::TileCostModel), and justified
+//!   load shedding. The deterministic soak harness
+//!   ([`testkit::soak`](crate::testkit::soak)) drives the same struct on
+//!   a virtual clock.
+//! * [`shard`] — multi-model routing: one queue + worker pool per served
+//!   model, a shared admission budget split by per-model weights
+//!   ([`admission_caps`]), and a [`ShardRouter`] clients submit to by
+//!   model name.
+//! * arbitrary image H×W — admission validates a [`ShapePolicy`] rather
+//!   than one exact shape, and per-shape tile geometry is cached in the
+//!   [`PlanCache`] keyed `(model, h, w)`.
 
 pub mod plan;
 pub mod queue;
 pub mod registry;
+pub mod sched;
+pub mod shard;
 pub mod stats;
 
 pub use plan::{PlanCache, PlanKey};
-pub use queue::{Rejected, Request, Response, ServeQueue};
+pub use queue::{
+    DrainedBatch, Rejected, Request, Response, ServeQueue, ServeResult, ShapePolicy,
+};
 pub use registry::{ModelRegistry, ServedModel};
+pub use sched::{admission_caps, Poll, Priority, SchedItem, Scheduler, Shed, SubmitOpts};
+pub use shard::{with_shards, ShardRouter, ShardSpec};
 pub use stats::{ServeStats, StatsReport};
 
 use crate::engine::{EngineScratch, WinoEngine};
 use crate::nn::layers::Conv2dCfg;
 use crate::nn::tensor::Tensor;
+use crate::tune::cost::TileCostModel;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
@@ -70,6 +95,21 @@ pub trait BatchModel: Sync {
     /// Winograd tiles one item pushes through the engine (the stats
     /// throughput unit; 0 when unknown).
     fn tiles_per_item(&self) -> usize;
+
+    /// Admission shape policy. Defaults to requiring
+    /// [`input_dims`](BatchModel::input_dims) exactly; arbitrary-H×W
+    /// models override with [`ShapePolicy::Channels`].
+    fn shape_policy(&self) -> ShapePolicy {
+        ShapePolicy::Exact(self.input_dims().to_vec())
+    }
+
+    /// Tile weight of one item at spatial shape `(h, w)` — the scheduler's
+    /// cost unit. Defaults to the nominal-shape
+    /// [`tiles_per_item`](BatchModel::tiles_per_item) (correct for
+    /// exact-shape models, where only one shape is admitted).
+    fn tiles_for(&self, _h: usize, _w: usize) -> u64 {
+        self.tiles_per_item().max(1) as u64
+    }
 }
 
 /// Serving loop knobs.
@@ -83,11 +123,21 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Worker threads (each owns one [`EngineScratch`]).
     pub workers: usize,
+    /// Batch-cost predictor enabling the SLO machinery: deadline-based
+    /// batch closing and load shedding (see [`sched`]). `None` keeps the
+    /// legacy window-only micro-batching (nothing is ever shed).
+    pub cost: Option<TileCostModel>,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { max_batch: 8, batch_window_us: 2000, queue_cap: 256, workers: 1 }
+        ServeConfig {
+            max_batch: 8,
+            batch_window_us: 2000,
+            queue_cap: 256,
+            workers: 1,
+            cost: None,
+        }
     }
 }
 
@@ -164,8 +214,11 @@ pub fn with_server<R>(
     client: impl FnOnce(&ServeQueue) -> R,
 ) -> R {
     // Shape-validating queue: malformed submissions are rejected at
-    // admission instead of reaching (and panicking) a worker.
-    let queue = ServeQueue::with_dims(cfg.queue_cap, model.input_dims().to_vec());
+    // admission instead of reaching (and panicking) a worker. Plain
+    // `submit` calls carry the model's nominal tile weight into the
+    // scheduler's cost model.
+    let queue = ServeQueue::with_policy(cfg.queue_cap, model.shape_policy())
+        .with_default_tiles(model.tiles_per_item().max(1) as u64);
     std::thread::scope(|scope| {
         for _ in 0..cfg.workers.max(1) {
             scope.spawn(|| {
@@ -178,8 +231,9 @@ pub fn with_server<R>(
     })
 }
 
-/// One worker: drain micro-batches, stack them, run the engine pass,
-/// split and answer. Owns its [`EngineScratch`] for the whole session.
+/// One worker: drain micro-batches per the scheduler's policy, deliver
+/// shed notices, stack the batch, run the engine pass, split and answer.
+/// Owns its [`EngineScratch`] for the whole session.
 fn worker_loop(
     model: &dyn BatchModel,
     queue: &ServeQueue,
@@ -188,15 +242,30 @@ fn worker_loop(
 ) {
     let mut scratch = EngineScratch::new();
     let window = Duration::from_micros(cfg.batch_window_us);
-    let item_dims = model.input_dims().to_vec();
-    let item_len: usize = item_dims.iter().product();
-    while let Some(batch) = queue.next_batch(cfg.max_batch, window) {
+    while let Some(drained) = queue.next_batch_sla(cfg.max_batch, window, cfg.cost.as_ref()) {
+        // Shed requests get their predicted-cost justification instead of
+        // burning an engine pass they could never ride in time.
+        for (req, why) in drained.shed {
+            stats.record_shed();
+            let _ = req.tx.send(Err(why));
+        }
+        let batch = drained.batch;
+        if batch.is_empty() {
+            continue;
+        }
         let depth_after_drain = queue.depth();
         let bsz = batch.len();
+        // Admission validated each shape against the model's policy, and
+        // the scheduler only assembles shape-homogeneous batches, so the
+        // head request defines the batch geometry.
+        let item_dims = batch[0].input.dims.clone();
+        let item_len: usize = item_dims.iter().product();
         let mut data = Vec::with_capacity(bsz * item_len);
         for req in &batch {
-            // Admission already validated shapes (ServeQueue::with_dims).
-            debug_assert_eq!(req.input.dims, item_dims, "request shape mismatch");
+            debug_assert_eq!(
+                req.input.dims, item_dims,
+                "scheduler batches must be shape-homogeneous"
+            );
             data.extend_from_slice(&req.input.data);
         }
         let mut dims = Vec::with_capacity(item_dims.len() + 1);
@@ -207,19 +276,30 @@ fn worker_loop(
         let row = y.data.len() / bsz;
         let out_dims: Vec<usize> = y.dims[1..].to_vec();
         let mut lat_us = Vec::with_capacity(bsz);
+        let mut missed = 0u64;
         for (i, req) in batch.into_iter().enumerate() {
             let output = Tensor::from_vec(&out_dims, y.data[i * row..(i + 1) * row].to_vec());
             let latency_us = req.enqueued.elapsed().as_micros() as u64;
             lat_us.push(latency_us);
+            if req.deadline_us.is_some_and(|d| queue.now_us() > d) {
+                missed += 1;
+            }
             // A gone client (dropped receiver) is not a server error.
-            let _ = req.tx.send(Response { output, latency_us, batch_size: bsz });
+            let _ = req.tx.send(Ok(Response { output, latency_us, batch_size: bsz }));
         }
+        let (h, w) = match item_dims.as_slice() {
+            [.., h, w] => (*h, *w),
+            _ => (1, 1),
+        };
         stats.record_batch(
             bsz,
-            (model.tiles_per_item() * bsz) as u64,
+            model.tiles_for(h, w) * bsz as u64,
             depth_after_drain,
             &lat_us,
         );
+        if missed > 0 {
+            stats.record_deadline_miss(missed);
+        }
         // Per-stage engine breakdown for this batch (accumulated in the
         // worker's scratch across every layer of the pass) — the stats
         // JSON's `stage_ns` view of *where* serving time goes.
@@ -303,7 +383,7 @@ mod tests {
                 .map(|x| queue.submit(x.clone()).unwrap())
                 .collect();
             rxs.into_iter()
-                .map(|rx| rx.recv().expect("worker died"))
+                .map(|rx| rx.recv().expect("worker died").expect("nothing sheds"))
                 .collect::<Vec<Response>>()
         });
         assert_eq!(responses.len(), inputs.len());
@@ -333,6 +413,7 @@ mod tests {
             batch_window_us: 200,
             queue_cap: 8,
             workers: 2,
+            cost: None,
         };
         let report = run_closed_loop(&model, &cfg, &inputs, 23, 6);
         assert_eq!(report.completed, 23);
@@ -359,7 +440,8 @@ mod tests {
     #[test]
     fn dead_worker_fails_fast_instead_of_hanging() {
         let stats = ServeStats::new();
-        let cfg = ServeConfig { max_batch: 2, batch_window_us: 100, queue_cap: 4, workers: 1 };
+        let cfg =
+            ServeConfig { max_batch: 2, batch_window_us: 100, queue_cap: 4, ..Default::default() };
         let item = || Tensor::from_vec(&[1, 2, 2], vec![0.0; 4]);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             with_server(&PanickingModel, &cfg, &stats, |queue| {
@@ -395,6 +477,7 @@ mod tests {
             batch_window_us: 0,
             queue_cap: 1,
             workers: 1,
+            cost: None,
         };
         let report = run_closed_loop(&model, &cfg, &inputs, 12, 4);
         assert_eq!(report.completed, 12, "retries must finish the closed loop");

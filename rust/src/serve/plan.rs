@@ -70,10 +70,18 @@ pub struct PlanCache {
     banks: Mutex<BankMap>,
     int_banks: Mutex<IntBankMap>,
     packed_banks: Mutex<PackedMap>,
+    /// Per-shape tile geometry, keyed `(model namespace, h, w)` — the
+    /// arbitrary-H×W serving path's cache: walking a whole net's conv
+    /// stack for its tile count is cheap but not free, and the scheduler
+    /// asks on every admission. Namespacing by model makes cross-shard
+    /// collisions structurally impossible (two shards of the same
+    /// geometry still get distinct keys).
+    shape_tiles: Mutex<HashMap<(String, usize, usize), u64>>,
     wf_counters: Mutex<CacheCounters>,
     bank_counters: Mutex<CacheCounters>,
     int_counters: Mutex<CacheCounters>,
     packed_counters: Mutex<CacheCounters>,
+    shape_counters: Mutex<CacheCounters>,
 }
 
 impl PlanCache {
@@ -194,6 +202,48 @@ impl PlanCache {
         packed
     }
 
+    /// The Winograd tile count of `model` at input shape `(h, w)`,
+    /// computing it via `compute` on first use. Keys are namespaced by
+    /// model, so distinct shards can never collide even at identical
+    /// shapes.
+    pub fn tiles_for_shape(
+        &self,
+        model: &str,
+        h: usize,
+        w: usize,
+        compute: impl FnOnce() -> u64,
+    ) -> u64 {
+        let key = (model.to_string(), h, w);
+        let mut map = self.shape_tiles.lock().unwrap();
+        let mut counters = self.shape_counters.lock().unwrap();
+        if let Some(&tiles) = map.get(&key) {
+            counters.hits += 1;
+            return tiles;
+        }
+        counters.misses += 1;
+        let tiles = compute();
+        map.insert(key, tiles);
+        tiles
+    }
+
+    /// Number of distinct `(model, h, w)` geometry entries cached.
+    pub fn shape_count(&self) -> usize {
+        self.shape_tiles.lock().unwrap().len()
+    }
+
+    /// The cached `(model, h, w)` geometry keys, sorted — lets tests
+    /// assert shards never collide in the cache.
+    pub fn shape_keys(&self) -> Vec<(String, usize, usize)> {
+        let mut keys: Vec<_> = self.shape_tiles.lock().unwrap().keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Shape-geometry hit/miss counters.
+    pub fn shape_counters(&self) -> CacheCounters {
+        *self.shape_counters.lock().unwrap()
+    }
+
     /// Number of distinct plans currently cached.
     pub fn plan_count(&self) -> usize {
         self.wfs.lock().unwrap().len()
@@ -252,6 +302,34 @@ mod tests {
         assert_eq!((wf_c.hits, wf_c.misses), (1, 1));
         cache.wf(PlanKey::f(2, 3, Base::Canonical));
         assert_eq!(cache.plan_count(), 2);
+    }
+
+    #[test]
+    fn shape_geometry_is_cached_per_model_and_shape() {
+        let cache = PlanCache::new();
+        let mut computes = 0;
+        let mut tiles = |t| {
+            computes += 1;
+            t
+        };
+        assert_eq!(cache.tiles_for_shape("a", 32, 32, || tiles(383)), 383);
+        assert_eq!(cache.tiles_for_shape("a", 32, 32, || tiles(999)), 383, "hit, not recompute");
+        assert_eq!(computes, 1);
+        // Different shape and different model namespace are distinct keys
+        // — identical geometry across shards can never collide.
+        assert_eq!(cache.tiles_for_shape("a", 24, 48, || 250), 250);
+        assert_eq!(cache.tiles_for_shape("b", 32, 32, || 383), 383);
+        assert_eq!(cache.shape_count(), 3);
+        assert_eq!(
+            cache.shape_keys(),
+            vec![
+                ("a".to_string(), 24, 48),
+                ("a".to_string(), 32, 32),
+                ("b".to_string(), 32, 32),
+            ]
+        );
+        let c = cache.shape_counters();
+        assert_eq!((c.hits, c.misses), (1, 3));
     }
 
     #[test]

@@ -4,18 +4,28 @@
 //! per-request response channel back; admission fails immediately
 //! (`Err(Rejected)`) when the queue is at capacity, so overload turns
 //! into fast rejections instead of unbounded memory growth and latency
-//! collapse. Workers call [`next_batch`](ServeQueue::next_batch), which
-//! blocks for the first request and then keeps draining until either
-//! `max_batch` requests are assembled or the `batch_window` deadline
-//! expires — the standard micro-batching trade: a bounded wait buys a
-//! wider `T` panel for the engine pass.
+//! collapse. Workers call [`next_batch`](ServeQueue::next_batch) /
+//! [`next_batch_sla`](ServeQueue::next_batch_sla), which block for the
+//! first request and then drain according to the shared scheduling
+//! policy in [`sched`](super::sched): earliest-deadline-first inside
+//! priority lanes, shape-homogeneous batches, and — when a
+//! [`TileCostModel`] is supplied — deadline-based batch closing plus
+//! load-shedding of requests that can no longer meet their SLO.
+//!
+//! The queue itself holds only payloads (a `seq → Request` map); every
+//! ordering/closing decision is delegated to the embedded pure
+//! [`Scheduler`], the same code the deterministic soak harness drives.
+//! That is deliberate: it is what lets `tests/serve_deadline.rs` pin the
+//! production scheduling path on a virtual clock.
 //!
 //! Everything is `std::sync` (`Mutex` + `Condvar` + `mpsc`): no async
 //! runtime exists in the vendored crate set, and none is needed — the
 //! engine pass dwarfs wakeup latency at serving batch sizes.
 
+use super::sched::{Poll, Priority, SchedItem, Scheduler, Shed, SubmitOpts};
 use crate::nn::tensor::Tensor;
-use std::collections::VecDeque;
+use crate::tune::cost::TileCostModel;
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -29,10 +39,22 @@ pub enum Rejected {
     Full,
     /// The server is shutting down.
     Closed,
-    /// The input's dims don't match the served model's per-item dims.
+    /// The input's dims don't match the served model's admission policy.
     /// Validated at admission so a malformed request cannot reach (and
     /// kill) a worker thread.
-    Shape { expected: Vec<usize>, got: Vec<usize> },
+    Shape {
+        /// The dims (exact, or `[c, min_h, min_w]` minimum for a
+        /// channels-only policy) the model would accept.
+        expected: Vec<usize>,
+        /// The offending input dims.
+        got: Vec<usize>,
+    },
+    /// No shard serves a model by the requested name (multi-model
+    /// routing, see [`ShardRouter`](super::ShardRouter)).
+    UnknownModel {
+        /// The name no shard answered to.
+        name: String,
+    },
 }
 
 impl std::fmt::Display for Rejected {
@@ -44,11 +66,54 @@ impl std::fmt::Display for Rejected {
                 f,
                 "request rejected: input dims {got:?} do not match the model's {expected:?}"
             ),
+            Rejected::UnknownModel { name } => {
+                write!(f, "request rejected: no shard serves model {name:?}")
+            }
         }
     }
 }
 
 impl std::error::Error for Rejected {}
+
+/// What a response channel yields: the inference result, or the
+/// scheduler's justified decision to shed the request because its
+/// predicted cost could not meet its deadline.
+pub type ServeResult = Result<Response, Shed>;
+
+/// Admission-time shape validation policy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShapePolicy {
+    /// Input dims must match exactly (fixed-shape models).
+    Exact(Vec<usize>),
+    /// Arbitrary-H×W models: rank-3 `[c, h, w]` with the given channel
+    /// count and both spatial dims at least `min_hw`.
+    Channels {
+        /// Required channel count (`dims[0]`).
+        c: usize,
+        /// Minimum spatial extent for each of `h`, `w`.
+        min_hw: usize,
+    },
+}
+
+impl ShapePolicy {
+    /// Validate an input's dims against the policy.
+    pub fn validate(&self, dims: &[usize]) -> Result<(), Rejected> {
+        let ok = match self {
+            ShapePolicy::Exact(expected) => dims == expected.as_slice(),
+            ShapePolicy::Channels { c, min_hw } => {
+                dims.len() == 3 && dims[0] == *c && dims[1] >= *min_hw && dims[2] >= *min_hw
+            }
+        };
+        if ok {
+            return Ok(());
+        }
+        let expected = match self {
+            ShapePolicy::Exact(expected) => expected.clone(),
+            ShapePolicy::Channels { c, min_hw } => vec![*c, *min_hw, *min_hw],
+        };
+        Err(Rejected::Shape { expected, got: dims.to_vec() })
+    }
+}
 
 /// One queued inference request.
 pub struct Request {
@@ -56,8 +121,13 @@ pub struct Request {
     pub input: Tensor,
     /// Admission timestamp — latency is measured from here.
     pub enqueued: Instant,
-    /// Where the worker sends the response.
-    pub tx: Sender<Response>,
+    /// Absolute deadline on the queue clock (µs since queue creation),
+    /// `None` for best-effort requests.
+    pub deadline_us: Option<u64>,
+    /// Priority lane the request was admitted into.
+    pub priority: Priority,
+    /// Where the worker sends the response (or shed notice).
+    pub tx: Sender<ServeResult>,
 }
 
 /// One inference response.
@@ -71,8 +141,22 @@ pub struct Response {
     pub batch_size: usize,
 }
 
+/// One worker drain: the batch to run plus any requests the scheduler
+/// shed on this poll (the worker delivers their shed notices).
+pub struct DrainedBatch {
+    /// Shape-homogeneous batch in service order. May be empty when the
+    /// poll only shed.
+    pub batch: Vec<Request>,
+    /// Requests shed this poll, each with its predicted-cost
+    /// justification.
+    pub shed: Vec<(Request, Shed)>,
+}
+
 struct QueueState {
-    items: VecDeque<Request>,
+    /// Payloads keyed by the scheduler's admission ticket.
+    reqs: HashMap<u64, Request>,
+    /// The pure scheduling policy (ordering, closing, shedding).
+    sched: Scheduler,
     closed: bool,
 }
 
@@ -80,9 +164,29 @@ struct QueueState {
 pub struct ServeQueue {
     state: Mutex<QueueState>,
     cv: Condvar,
-    cap: usize,
-    /// When set, `submit` rejects inputs whose dims differ.
-    expected_dims: Option<Vec<usize>>,
+    /// Origin of the queue's µs clock (deadlines are absolute µs since
+    /// this instant).
+    epoch: Instant,
+    /// When set, `submit` rejects inputs the policy refuses.
+    policy: Option<ShapePolicy>,
+    /// Tile weight assigned to plain [`submit`](ServeQueue::submit)
+    /// requests (cost-aware callers use
+    /// [`submit_with_tiles`](ServeQueue::submit_with_tiles)).
+    default_tiles: u64,
+}
+
+/// Pop the payload a dispatched [`SchedItem`] refers to.
+fn take_payload(reqs: &mut HashMap<u64, Request>, it: &SchedItem) -> Request {
+    reqs.remove(&it.seq).expect("payload exists for every scheduled seq")
+}
+
+/// Spatial `(h, w)` of a per-item tensor: its two trailing dims.
+fn spatial(dims: &[usize]) -> (usize, usize) {
+    match dims {
+        [.., h, w] => (*h, *w),
+        [n] => (*n, 1),
+        [] => (1, 1),
+    }
 }
 
 impl ServeQueue {
@@ -93,44 +197,99 @@ impl ServeQueue {
     }
 
     /// A queue that additionally validates every submission against the
-    /// served model's per-item dims — what [`with_server`](super::with_server)
-    /// constructs, so a malformed request is rejected at admission
-    /// instead of panicking a worker.
+    /// served model's exact per-item dims.
     pub fn with_dims(cap: usize, expected_dims: Vec<usize>) -> ServeQueue {
-        Self::build(cap, Some(expected_dims))
+        Self::build(cap, Some(ShapePolicy::Exact(expected_dims)))
     }
 
-    fn build(cap: usize, expected_dims: Option<Vec<usize>>) -> ServeQueue {
+    /// A queue validating submissions against an arbitrary
+    /// [`ShapePolicy`] — what [`with_server`](super::with_server)
+    /// constructs from the model's own policy, so a malformed request is
+    /// rejected at admission instead of panicking a worker.
+    pub fn with_policy(cap: usize, policy: ShapePolicy) -> ServeQueue {
+        Self::build(cap, Some(policy))
+    }
+
+    fn build(cap: usize, policy: Option<ShapePolicy>) -> ServeQueue {
         assert!(cap > 0, "queue capacity must be positive");
         ServeQueue {
-            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState {
+                reqs: HashMap::new(),
+                sched: Scheduler::new(cap),
+                closed: false,
+            }),
             cv: Condvar::new(),
-            cap,
-            expected_dims,
+            epoch: Instant::now(),
+            policy,
+            default_tiles: 1,
         }
     }
 
-    /// Submit one item; returns the response channel, or [`Rejected`]
-    /// when the input shape is wrong, the queue is at capacity, or the
-    /// server is shutting down.
-    pub fn submit(&self, input: Tensor) -> Result<Receiver<Response>, Rejected> {
-        if let Some(expected) = &self.expected_dims {
-            if &input.dims != expected {
-                return Err(Rejected::Shape {
-                    expected: expected.clone(),
-                    got: input.dims.clone(),
-                });
-            }
+    /// Set the tile weight plain [`submit`](ServeQueue::submit) requests
+    /// carry into the cost model (typically the served model's
+    /// nominal-shape tile count).
+    pub fn with_default_tiles(mut self, tiles: u64) -> ServeQueue {
+        self.default_tiles = tiles.max(1);
+        self
+    }
+
+    /// Microseconds elapsed on this queue's clock (the timeline request
+    /// deadlines live on).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Submit one best-effort item; returns the response channel, or
+    /// [`Rejected`] when the input shape is wrong, the queue is at
+    /// capacity, or the server is shutting down.
+    pub fn submit(&self, input: Tensor) -> Result<Receiver<ServeResult>, Rejected> {
+        self.submit_with(input, SubmitOpts::default())
+    }
+
+    /// Submit with explicit priority and (relative) deadline, carrying
+    /// the queue's default tile weight.
+    pub fn submit_with(
+        &self,
+        input: Tensor,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<ServeResult>, Rejected> {
+        self.submit_with_tiles(input, opts, self.default_tiles)
+    }
+
+    /// Submit with explicit options **and** per-request tile weight (the
+    /// model's predicted tile cost at this input's shape) — the routing
+    /// layer's entry point.
+    pub fn submit_with_tiles(
+        &self,
+        input: Tensor,
+        opts: SubmitOpts,
+        tiles: u64,
+    ) -> Result<Receiver<ServeResult>, Rejected> {
+        if let Some(policy) = &self.policy {
+            policy.validate(&input.dims)?;
         }
+        let shape = spatial(&input.dims);
         let mut st = self.state.lock().unwrap();
         if st.closed {
             return Err(Rejected::Closed);
         }
-        if st.items.len() >= self.cap {
+        let now = self.now_us();
+        let deadline = opts.deadline_us.map(|d| now.saturating_add(d));
+        let Some(seq) = st.sched.submit(now, opts.priority, deadline, tiles.max(1), shape)
+        else {
             return Err(Rejected::Full);
-        }
+        };
         let (tx, rx) = channel();
-        st.items.push_back(Request { input, enqueued: Instant::now(), tx });
+        st.reqs.insert(
+            seq,
+            Request {
+                input,
+                enqueued: Instant::now(),
+                deadline_us: deadline,
+                priority: opts.priority,
+                tx,
+            },
+        );
         drop(st);
         self.cv.notify_one();
         Ok(rx)
@@ -138,7 +297,7 @@ impl ServeQueue {
 
     /// Current queue depth (queued, not yet drained).
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.state.lock().unwrap().sched.depth()
     }
 
     /// Close the queue: pending requests still drain, new submissions are
@@ -156,43 +315,70 @@ impl ServeQueue {
         let pending: Vec<Request> = {
             let mut st = self.state.lock().unwrap();
             st.closed = true;
-            st.items.drain(..).collect()
+            let items = st.sched.clear();
+            items.iter().filter_map(|it| st.reqs.remove(&it.seq)).collect()
         };
         self.cv.notify_all();
         drop(pending);
     }
 
-    /// Worker side: block until at least one request is queued, then keep
-    /// waiting up to `batch_window` (from the moment the first request is
-    /// seen) for more, returning as soon as `max_batch` are available.
-    /// Returns `None` when the queue is closed and drained. Never returns
-    /// an empty batch: if a racing worker drains the queue during this
-    /// worker's batch window, it goes back to waiting.
+    /// Worker side, legacy window-only form: block until at least one
+    /// request is queued, then drain per the scheduler's policy with the
+    /// global `batch_window` and no cost model (so nothing is ever shed
+    /// and deadline-free load is plain FIFO). Returns `None` when the
+    /// queue is closed and drained. Never returns an empty batch.
     pub fn next_batch(&self, max_batch: usize, batch_window: Duration) -> Option<Vec<Request>> {
-        let max_batch = max_batch.max(1);
+        loop {
+            let drained = self.next_batch_sla(max_batch, batch_window, None)?;
+            debug_assert!(drained.shed.is_empty(), "no cost model, nothing can shed");
+            if !drained.batch.is_empty() {
+                return Some(drained.batch);
+            }
+        }
+    }
+
+    /// Worker side, SLO-aware form: block until the scheduler dispatches,
+    /// honouring per-request deadlines against `cost` (deadline-based
+    /// batch closing, load shedding — see [`sched`](super::sched)).
+    /// Returns `None` when the queue is closed and drained; otherwise the
+    /// batch and/or the sheds of one scheduler dispatch.
+    pub fn next_batch_sla(
+        &self,
+        max_batch: usize,
+        batch_window: Duration,
+        cost: Option<&TileCostModel>,
+    ) -> Option<DrainedBatch> {
+        let window_us = batch_window.as_micros().min(u64::MAX as u128) as u64;
         let mut st = self.state.lock().unwrap();
         loop {
-            while st.items.is_empty() {
+            while st.sched.depth() == 0 {
                 if st.closed {
                     return None;
                 }
                 st = self.cv.wait(st).unwrap();
             }
-            let deadline = Instant::now() + batch_window;
-            while st.items.len() < max_batch && !st.closed {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
+            let now = self.now_us();
+            let flush = st.closed;
+            match st.sched.poll(now, max_batch, window_us, cost, flush) {
+                // A racing worker drained everything between our wait and
+                // poll; go back to waiting.
+                Poll::Idle => continue,
+                Poll::WaitUntil(t) => {
+                    let wait = Duration::from_micros(t.saturating_sub(now).max(1));
+                    let (guard, _timeout) = self.cv.wait_timeout(st, wait).unwrap();
+                    st = guard;
                 }
-                let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
-                st = guard;
-                if timeout.timed_out() {
-                    break;
+                Poll::Dispatch { batch, shed } => {
+                    let out_batch: Vec<Request> = batch
+                        .iter()
+                        .map(|it| take_payload(&mut st.reqs, it))
+                        .collect();
+                    let out_shed: Vec<(Request, Shed)> = shed
+                        .iter()
+                        .map(|(it, why)| (take_payload(&mut st.reqs, it), *why))
+                        .collect();
+                    return Some(DrainedBatch { batch: out_batch, shed: out_shed });
                 }
-            }
-            let take = st.items.len().min(max_batch);
-            if take > 0 {
-                return Some(st.items.drain(..take).collect());
             }
         }
     }
@@ -236,6 +422,22 @@ mod tests {
     }
 
     #[test]
+    fn channels_policy_admits_any_large_enough_hw() {
+        let q = ServeQueue::with_policy(4, ShapePolicy::Channels { c: 3, min_hw: 8 });
+        assert!(q.submit(Tensor::from_vec(&[3, 9, 13], vec![0.0; 3 * 9 * 13])).is_ok());
+        assert!(q.submit(Tensor::from_vec(&[3, 32, 32], vec![0.0; 3 * 32 * 32])).is_ok());
+        // Wrong channel count and too-small spatial extents both bounce.
+        assert!(matches!(
+            q.submit(Tensor::from_vec(&[2, 9, 9], vec![0.0; 2 * 81])).unwrap_err(),
+            Rejected::Shape { .. }
+        ));
+        assert!(matches!(
+            q.submit(Tensor::from_vec(&[3, 4, 9], vec![0.0; 3 * 36])).unwrap_err(),
+            Rejected::Shape { .. }
+        ));
+    }
+
+    #[test]
     fn batch_respects_max_batch_and_fifo() {
         let q = ServeQueue::new(16);
         for i in 0..5 {
@@ -248,6 +450,59 @@ mod tests {
         let rest = q.next_batch(3, Duration::ZERO).unwrap();
         assert_eq!(rest.len(), 2);
         assert_eq!(rest[0].input.data[0], 3.0);
+    }
+
+    #[test]
+    fn drains_earliest_deadline_first_even_when_submitted_later() {
+        // The satellite bugfix this PR pins: before the scheduler-backed
+        // queue, workers drained strictly in submit order, so a tight
+        // deadline submitted behind a lax one was starved. Deadline order
+        // (within a lane) must win over submit order.
+        let q = ServeQueue::new(16);
+        let _lax = q
+            .submit_with(item(1.0), SubmitOpts { deadline_us: Some(500_000), ..Default::default() })
+            .unwrap();
+        let _tight = q
+            .submit_with(item(2.0), SubmitOpts { deadline_us: Some(1_000), ..Default::default() })
+            .unwrap();
+        let _fifo = q.submit(item(3.0)).unwrap();
+        let first = q.next_batch(1, Duration::ZERO).unwrap();
+        assert_eq!(first[0].input.data[0], 2.0, "earliest deadline must drain first");
+        let second = q.next_batch(1, Duration::ZERO).unwrap();
+        assert_eq!(second[0].input.data[0], 1.0);
+        // Deadline-free requests rank after deadlined ones in the lane.
+        let third = q.next_batch(1, Duration::ZERO).unwrap();
+        assert_eq!(third[0].input.data[0], 3.0);
+    }
+
+    #[test]
+    fn high_priority_lane_preempts_normal() {
+        let q = ServeQueue::new(16);
+        q.submit(item(1.0)).unwrap();
+        q.submit_with(
+            item(2.0),
+            SubmitOpts { priority: Priority::High, ..Default::default() },
+        )
+        .unwrap();
+        let first = q.next_batch(1, Duration::ZERO).unwrap();
+        assert_eq!(first[0].input.data[0], 2.0, "High lane drains before Normal");
+    }
+
+    #[test]
+    fn hopeless_deadline_is_shed_with_justification() {
+        let cost = TileCostModel::new(10_000.0, 0.0); // every batch "costs" 10ms
+        let q = ServeQueue::new(16);
+        let rx = q
+            .submit_with(item(1.0), SubmitOpts { deadline_us: Some(10), ..Default::default() })
+            .unwrap();
+        let drained = q.next_batch_sla(4, Duration::ZERO, Some(&cost)).unwrap();
+        assert!(drained.batch.is_empty());
+        assert_eq!(drained.shed.len(), 1);
+        let (req, why) = &drained.shed[0];
+        assert!(why.decided_us + why.predicted_us > why.deadline_us);
+        // The worker (here: us) delivers the shed notice to the client.
+        req.tx.send(Err(*why)).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err(), *why);
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! model never dequantizes its weights on the request path.
 
 use super::plan::{PlanCache, PlanKey};
-use super::BatchModel;
+use super::{BatchModel, ShapePolicy};
 use crate::data::synthcifar;
 use crate::engine::EngineScratch;
 use crate::nn::tensor::Tensor;
@@ -44,14 +44,29 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
+/// Registered models admit any spatial size of at least this many pixels
+/// per side: smaller inputs would shrink below the stage-4 stride chain
+/// (three stride-2 downsamples plus the 3×3 receptive field) and the
+/// forward pass could not produce a well-formed feature map.
+pub const MIN_SERVE_HW: usize = 8;
+
 /// A registered model: the network plus serving metadata.
 pub struct ServedModel {
     pub name: String,
     pub net: ResNet18,
-    /// Per-item input dims (no batch axis), `[C, H, W]`.
+    /// Per-item input dims (no batch axis), `[C, H, W]` — the *nominal*
+    /// (calibration) geometry. Serving admits any H×W ≥
+    /// [`MIN_SERVE_HW`] with the same channel count.
     input_dims: Vec<usize>,
-    /// Winograd tiles one item pushes through the engine (stats unit).
+    /// Winograd tiles one item of the nominal shape pushes through the
+    /// engine (stats unit; per-shape weights come from
+    /// [`BatchModel::tiles_for`]).
     tiles_per_item: usize,
+    /// The registry's shared plan cache — also hosts the per-model
+    /// shape→tile-count geometry cache
+    /// ([`PlanCache::tiles_for_shape`]), keyed by this model's name so
+    /// two shards can never collide on a shape entry.
+    plans: Arc<PlanCache>,
 }
 
 impl BatchModel for ServedModel {
@@ -65,6 +80,18 @@ impl BatchModel for ServedModel {
 
     fn tiles_per_item(&self) -> usize {
         self.tiles_per_item
+    }
+
+    fn shape_policy(&self) -> ShapePolicy {
+        ShapePolicy::Channels { c: self.input_dims[0], min_hw: MIN_SERVE_HW }
+    }
+
+    fn tiles_for(&self, h: usize, w: usize) -> u64 {
+        self.plans
+            .tiles_for_shape(&self.name, h, w, || {
+                (self.net.wino_tiles_per_shape(h, w) as u64).max(1)
+            })
+            .max(1)
     }
 }
 
@@ -146,15 +173,15 @@ impl ModelRegistry {
                 plan.model
             );
         }
-        // The synthetic source (and the tuner's own calibration pass) is
-        // pinned to the synthetic-CIFAR geometry; any other image size
-        // would silently calibrate on different data than the tuner
-        // measured, breaking the bit-identical tune→serve invariant.
-        if plan.image_hw != synthcifar::IMAGE_HW {
+        // Any geometry the stride chain supports is servable — the
+        // calibration batch generator handles 32×32 (synthetic-CIFAR)
+        // and arbitrary sizes alike. Only degenerate sizes that cannot
+        // survive three stride-2 downsamples are rejected.
+        if plan.image_hw < MIN_SERVE_HW {
             bail!(
-                "NetPlan image_hw {} is not the synthetic-CIFAR size {}",
+                "NetPlan image_hw {} is below the minimum servable size {}",
                 plan.image_hw,
-                synthcifar::IMAGE_HW
+                MIN_SERVE_HW
             );
         }
         let (nm, nb, nq) = plan
@@ -390,7 +417,7 @@ impl ModelRegistry {
 
     /// Wrap and insert an already-calibrated model. Tile accounting walks
     /// the network's own lowered layers
-    /// ([`ResNet18::wino_tiles_per_item`]), so heterogeneous NetPlan
+    /// ([`ResNet18::wino_tiles_per_shape`]), so heterogeneous NetPlan
     /// models are counted per their actual per-layer grids.
     fn finish(
         &mut self,
@@ -401,12 +428,13 @@ impl ModelRegistry {
         if self.models.contains_key(name) {
             bail!("model {name:?} is already registered");
         }
-        let tiles_per_item = net.wino_tiles_per_item(input_dims[1]);
+        let tiles_per_item = net.wino_tiles_per_shape(input_dims[1], input_dims[2]);
         let model = Arc::new(ServedModel {
             name: name.to_string(),
             net,
             input_dims: input_dims.to_vec(),
             tiles_per_item,
+            plans: self.plans.clone(),
         });
         self.models.insert(name.to_string(), model.clone());
         Ok(model)
@@ -618,12 +646,51 @@ mod tests {
         bad.layers[0].layer = "s0b0.down".into();
         let err = reg.register_netplan("bad", &bad).unwrap_err();
         assert!(err.to_string().contains("s0b0.down"), "{err}");
-        // A non-synthetic-CIFAR geometry would calibrate on different
-        // data than the tuner measured — rejected, not served.
+        // A geometry too small to survive the stride chain is rejected,
+        // not served.
         let mut bad_hw = plan.clone();
-        bad_hw.image_hw = 64;
+        bad_hw.image_hw = 4;
         let err = reg.register_netplan("bad-hw", &bad_hw).unwrap_err();
         assert!(err.to_string().contains("image_hw"), "{err}");
+        // Any servable geometry registers: tiles follow the actual grid.
+        // 40×40: stem m=4 → ⌈40/4⌉² = 100, s0b0.conv1 m=2 → ⌈40/2⌉² = 400.
+        let mut wide = plan.clone();
+        wide.image_hw = 40;
+        let served40 = reg.register_netplan("tuned-40", &wide).unwrap();
+        assert_eq!(served40.input_dims(), &[3, 40, 40]);
+        assert_eq!(served40.tiles_per_item(), 100 + 400);
+    }
+
+    #[test]
+    fn served_models_admit_any_large_enough_hw() {
+        // The registry policy is Channels { c: 3, min_hw: 8 }: a model
+        // calibrated at 32×32 still admits a 24×48 image, and its
+        // per-shape tile weight comes from the real grid through the
+        // shared geometry cache (keyed by model name).
+        let mut reg = ModelRegistry::new();
+        let served = reg.register_synthetic("rn", wino_cfg(None), 32, 7, 1).unwrap();
+        match served.shape_policy() {
+            ShapePolicy::Channels { c, min_hw } => {
+                assert_eq!((c, min_hw), (3, MIN_SERVE_HW));
+            }
+            other => panic!("expected Channels policy, got {other:?}"),
+        }
+        // Nominal shape matches the per-item accounting.
+        assert_eq!(served.tiles_for(32, 32), 383);
+        // A non-square shape hits the real per-layer grids.
+        let want = served.net.wino_tiles_per_shape(24, 48) as u64;
+        assert_eq!(served.tiles_for(24, 48), want);
+        // Both shapes are now cached under this model's namespace.
+        let mut keys = reg.plans().shape_keys();
+        keys.sort();
+        assert_eq!(
+            keys,
+            vec![("rn".to_string(), 24, 48), ("rn".to_string(), 32, 32)]
+        );
+        // A second lookup is a cache hit, not a recount.
+        let before = reg.plans().shape_counters().hits;
+        assert_eq!(served.tiles_for(24, 48), want);
+        assert_eq!(reg.plans().shape_counters().hits, before + 1);
     }
 
     #[test]

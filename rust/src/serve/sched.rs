@@ -1,0 +1,455 @@
+//! The pure, clock-free batch scheduler behind both serving front-ends.
+//!
+//! [`Scheduler`] owns the admission/ordering/closing *policy* and nothing
+//! else: no threads, no channels, no `Instant` — every decision is a
+//! function of an explicit `now_us` timestamp. Two drivers share it:
+//!
+//! * the threaded [`ServeQueue`](super::ServeQueue) feeds it real wall
+//!   time and real requests, and
+//! * the deterministic soak harness
+//!   ([`testkit::soak`](crate::testkit::soak)) feeds it a virtual clock,
+//!   so the property suites in `tests/serve_deadline.rs` pin the *same*
+//!   scheduling code production workers run.
+//!
+//! Policy, in order of application on each [`Scheduler::poll`]:
+//!
+//! 1. **Shed** — with a [`TileCostModel`], any pending request whose
+//!    *solo* predicted cost already overruns its deadline is removed and
+//!    reported with its justification ([`Shed`]): it cannot be served in
+//!    time, so burning engine cycles on it would only hurt its neighbors.
+//! 2. **Order** — earliest-deadline-first inside priority lanes
+//!    ([`Priority`]); deadline-free requests rank after deadlined ones in
+//!    their lane and FIFO among themselves (submit `seq` breaks ties), so
+//!    a deadline-free workload degrades to plain FIFO micro-batching.
+//! 3. **Close** — the candidate batch is the most urgent run of
+//!    shape-identical requests (mixed shapes never share a batch). It
+//!    closes when full, on `flush`, or at
+//!    `min(oldest_submit + window_us, earliest_deadline − predicted_cost)`
+//!    — the deadline term is what turns the global batching window into a
+//!    per-request SLO. A closing batch additionally *shrinks* from the
+//!    least-urgent tail until its predicted cost fits the earliest member
+//!    deadline, which is the invariant the property suite pins: **no
+//!    batch ever closes later than `earliest deadline − predicted cost`**.
+
+use crate::tune::cost::TileCostModel;
+
+/// Request priority lane. Lanes are strict: any `High` request batches
+/// before any `Normal` one regardless of deadlines (derived `Ord` is the
+/// declaration order).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-critical lane, always drained first.
+    High,
+    /// The default lane.
+    #[default]
+    Normal,
+    /// Background lane, only drained when nothing above is pending.
+    Low,
+}
+
+/// Per-submit scheduling options, shared by every front-end
+/// (`ServeQueue::submit_with`, the shard router, the soak harness).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SubmitOpts {
+    /// Deadline **relative to submission**, in µs. `None` = best-effort:
+    /// never shed, ranked after deadlined work in its lane.
+    pub deadline_us: Option<u64>,
+    /// Priority lane.
+    pub priority: Priority,
+}
+
+/// One scheduled request as the scheduler sees it: pure metadata, no
+/// payload (drivers key their payloads by `seq`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedItem {
+    /// Admission ticket, unique per scheduler, monotonically increasing
+    /// in submit order (the FIFO tie-break).
+    pub seq: u64,
+    /// Absolute submission time, µs on the driver's clock.
+    pub submitted_us: u64,
+    /// Absolute deadline, µs on the driver's clock (`None` = best-effort).
+    pub deadline_us: Option<u64>,
+    /// Priority lane.
+    pub priority: Priority,
+    /// Predicted-cost weight: Winograd tiles one forward of this request
+    /// costs (per-shape, via `BatchModel::tiles_for`).
+    pub tiles: u64,
+    /// Spatial shape `(h, w)` — batches are shape-homogeneous.
+    pub shape: (usize, usize),
+}
+
+/// Why a request was shed: the predicted-cost justification the
+/// accounting invariants require (`decided_us + predicted_us >
+/// deadline_us` always holds — a shed is never speculative).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shed {
+    /// Predicted solo service cost at decision time, µs.
+    pub predicted_us: u64,
+    /// The deadline that could not be met (absolute µs).
+    pub deadline_us: u64,
+    /// When the scheduler decided (absolute µs).
+    pub decided_us: u64,
+}
+
+/// Outcome of one [`Scheduler::poll`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Poll {
+    /// Nothing pending; wait for a submit.
+    Idle,
+    /// Work is pending but its batch should not close before the given
+    /// absolute µs timestamp (always `> now`); poll again then or on the
+    /// next submit.
+    WaitUntil(u64),
+    /// Work to do now.
+    Dispatch {
+        /// Shape-homogeneous batch in service order (possibly empty when
+        /// the poll only shed).
+        batch: Vec<SchedItem>,
+        /// Requests shed this poll, each with its justification.
+        shed: Vec<(SchedItem, Shed)>,
+    },
+}
+
+/// Lane → deadline → FIFO ordering key (smaller = more urgent).
+fn order_key(it: &SchedItem) -> (Priority, u64, u64) {
+    (it.priority, it.deadline_us.unwrap_or(u64::MAX), it.seq)
+}
+
+/// Split a shared admission budget across shards proportionally to their
+/// weights: shard `i` gets `max(1, ⌈budget · wᵢ / Σw⌉)` queue slots (so
+/// every shard can always admit *something*, and rounding never starves
+/// a low-weight tenant). Zero total weight degrades to one slot each.
+pub fn admission_caps(budget: usize, weights: &[u64]) -> Vec<usize> {
+    let total: u64 = weights.iter().sum();
+    weights
+        .iter()
+        .map(|&w| {
+            if total == 0 {
+                return 1;
+            }
+            let cap = (budget as u64 * w).div_ceil(total) as usize;
+            cap.clamp(1, budget.max(1))
+        })
+        .collect()
+}
+
+/// Deadline-aware admission + batching policy over pending requests.
+/// See the [module docs](self) for the decision procedure.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    /// Admission cap: `submit` returns `None` at this depth.
+    cap: usize,
+    /// Next admission ticket.
+    next_seq: u64,
+    /// Admitted, not-yet-dispatched requests (unordered between polls).
+    pending: Vec<SchedItem>,
+}
+
+impl Scheduler {
+    /// New scheduler admitting at most `cap` pending requests.
+    pub fn new(cap: usize) -> Scheduler {
+        assert!(cap > 0, "admission cap must be positive");
+        Scheduler { cap, next_seq: 0, pending: Vec::new() }
+    }
+
+    /// Pending (admitted, undispatched) request count.
+    pub fn depth(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Admission cap this scheduler was built with.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Admit a request at `now_us`. `deadline_us` is **absolute** (the
+    /// driver resolves relative deadlines against its own clock). Returns
+    /// the admission ticket, or `None` when the queue is at capacity.
+    pub fn submit(
+        &mut self,
+        now_us: u64,
+        priority: Priority,
+        deadline_us: Option<u64>,
+        tiles: u64,
+        shape: (usize, usize),
+    ) -> Option<u64> {
+        if self.pending.len() >= self.cap {
+            return None;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push(SchedItem {
+            seq,
+            submitted_us: now_us,
+            deadline_us,
+            priority,
+            tiles,
+            shape,
+        });
+        Some(seq)
+    }
+
+    /// Drop every pending request (abort path), returning them so the
+    /// driver can fail their response channels.
+    pub fn clear(&mut self) -> Vec<SchedItem> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Run the shed → order → close decision at `now_us`. `flush` forces
+    /// pending work out (drain-on-close path) regardless of the window;
+    /// the deadline-shrink invariant still applies.
+    pub fn poll(
+        &mut self,
+        now_us: u64,
+        max_batch: usize,
+        window_us: u64,
+        cost: Option<&TileCostModel>,
+        flush: bool,
+    ) -> Poll {
+        let max_batch = max_batch.max(1);
+        // 1. Shed pass: solo-infeasible requests leave with justification.
+        let mut shed = Vec::new();
+        if let Some(cost) = cost {
+            let mut i = 0;
+            while i < self.pending.len() {
+                let it = self.pending[i];
+                let hopeless = it.deadline_us.is_some_and(|d| {
+                    now_us.saturating_add(cost.predict_us(it.tiles)) > d
+                });
+                if hopeless {
+                    let d = it.deadline_us.expect("hopeless implies a deadline");
+                    self.pending.swap_remove(i);
+                    shed.push((
+                        it,
+                        Shed {
+                            predicted_us: cost.predict_us(it.tiles),
+                            deadline_us: d,
+                            decided_us: now_us,
+                        },
+                    ));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if self.pending.is_empty() {
+            return if shed.is_empty() {
+                Poll::Idle
+            } else {
+                Poll::Dispatch { batch: Vec::new(), shed }
+            };
+        }
+        // 2. Order: EDF within lanes, FIFO tie-break.
+        self.pending.sort_by_key(order_key);
+        // 3. Candidate batch: the most urgent request plus every other
+        // pending request of the same shape, in urgency order.
+        let head_shape = self.pending[0].shape;
+        let sel: Vec<usize> = self
+            .pending
+            .iter()
+            .enumerate()
+            .filter(|(_, it)| it.shape == head_shape)
+            .map(|(i, _)| i)
+            .take(max_batch)
+            .collect();
+        let oldest_submit = sel
+            .iter()
+            .map(|&i| self.pending[i].submitted_us)
+            .min()
+            .expect("candidate batch is non-empty");
+        let mut close_at = oldest_submit.saturating_add(window_us);
+        if let Some(cost) = cost {
+            let tiles: u64 = sel.iter().map(|&i| self.pending[i].tiles).sum();
+            if let Some(min_d) =
+                sel.iter().filter_map(|&i| self.pending[i].deadline_us).min()
+            {
+                close_at = close_at.min(min_d.saturating_sub(cost.predict_us(tiles)));
+            }
+        }
+        let full = sel.len() == max_batch;
+        if !(full || flush || now_us >= close_at) {
+            return if shed.is_empty() {
+                Poll::WaitUntil(close_at.max(now_us + 1))
+            } else {
+                Poll::Dispatch { batch: Vec::new(), shed }
+            };
+        }
+        // 4. Close: split off the selection, then shrink from the
+        // least-urgent tail until predicted cost meets the earliest
+        // member deadline (a singleton always fits — the shed pass
+        // guaranteed solo feasibility at this `now`).
+        let mut batch = Vec::with_capacity(sel.len());
+        let mut keep = Vec::with_capacity(self.pending.len() - sel.len());
+        for (i, it) in std::mem::take(&mut self.pending).into_iter().enumerate() {
+            if batch.len() < max_batch && it.shape == head_shape && sel.contains(&i) {
+                batch.push(it);
+            } else {
+                keep.push(it);
+            }
+        }
+        self.pending = keep;
+        if let Some(cost) = cost {
+            while batch.len() > 1 {
+                let tiles: u64 = batch.iter().map(|it| it.tiles).sum();
+                let overruns = batch
+                    .iter()
+                    .filter_map(|it| it.deadline_us)
+                    .min()
+                    .is_some_and(|d| now_us.saturating_add(cost.predict_us(tiles)) > d);
+                if !overruns {
+                    break;
+                }
+                let popped = batch.pop().expect("len > 1");
+                self.pending.push(popped);
+            }
+        }
+        Poll::Dispatch { batch, shed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item_at(s: &mut Scheduler, now: u64, pri: Priority, d: Option<u64>, tiles: u64) -> u64 {
+        s.submit(now, pri, d, tiles, (8, 8)).expect("under cap")
+    }
+
+    #[test]
+    fn submit_respects_cap_and_tickets_are_fifo() {
+        let mut s = Scheduler::new(2);
+        assert_eq!(item_at(&mut s, 0, Priority::Normal, None, 1), 0);
+        assert_eq!(item_at(&mut s, 1, Priority::Normal, None, 1), 1);
+        assert_eq!(s.submit(2, Priority::Normal, None, 1, (8, 8)), None);
+        assert_eq!(s.depth(), 2);
+        assert_eq!(s.clear().len(), 2);
+        assert_eq!(s.depth(), 0);
+        // Tickets keep increasing across a clear.
+        assert_eq!(item_at(&mut s, 3, Priority::Normal, None, 1), 2);
+    }
+
+    #[test]
+    fn poll_orders_edf_within_priority_lanes() {
+        let mut s = Scheduler::new(16);
+        let a = item_at(&mut s, 0, Priority::Low, Some(50), 1);
+        let b = item_at(&mut s, 0, Priority::Normal, Some(900), 1);
+        let c = item_at(&mut s, 0, Priority::Normal, Some(100), 1);
+        let d = item_at(&mut s, 0, Priority::High, None, 1);
+        let e = item_at(&mut s, 0, Priority::Normal, None, 1);
+        match s.poll(0, 16, 0, None, false) {
+            Poll::Dispatch { batch, shed } => {
+                assert!(shed.is_empty());
+                let seqs: Vec<u64> = batch.iter().map(|it| it.seq).collect();
+                // High first; Normal lane EDF then FIFO; Low last.
+                assert_eq!(seqs, vec![d, c, b, e, a]);
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_free_load_is_plain_fifo() {
+        let mut s = Scheduler::new(8);
+        for t in 0..4 {
+            item_at(&mut s, t, Priority::Normal, None, 1);
+        }
+        match s.poll(10, 3, 0, None, false) {
+            Poll::Dispatch { batch, .. } => {
+                assert_eq!(batch.iter().map(|it| it.seq).collect::<Vec<_>>(), vec![0, 1, 2]);
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn window_holds_partial_batches_until_close() {
+        let mut s = Scheduler::new(8);
+        item_at(&mut s, 100, Priority::Normal, None, 1);
+        assert_eq!(s.poll(100, 4, 500, None, false), Poll::WaitUntil(600));
+        assert_eq!(s.poll(400, 4, 500, None, false), Poll::WaitUntil(600));
+        match s.poll(600, 4, 500, None, false) {
+            Poll::Dispatch { batch, .. } => assert_eq!(batch.len(), 1),
+            other => panic!("expected dispatch at window close, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_minus_predicted_cost_beats_the_window() {
+        let cost = TileCostModel::new(0.0, 1.0);
+        let mut s = Scheduler::new(8);
+        // Solo predicted cost 50µs, deadline 100µs: must close by 50.
+        item_at(&mut s, 0, Priority::Normal, Some(100), 50);
+        assert_eq!(s.poll(10, 4, 100_000, Some(&cost), false), Poll::WaitUntil(50));
+        match s.poll(50, 4, 100_000, Some(&cost), false) {
+            Poll::Dispatch { batch, shed } => {
+                assert_eq!(batch.len(), 1);
+                assert!(shed.is_empty());
+            }
+            other => panic!("expected SLA close, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hopeless_request_sheds_with_predicted_cost_justification() {
+        let cost = TileCostModel::new(0.0, 1.0);
+        let mut s = Scheduler::new(8);
+        item_at(&mut s, 0, Priority::Normal, Some(30), 50); // needs 50µs, has 30
+        match s.poll(5, 4, 1000, Some(&cost), false) {
+            Poll::Dispatch { batch, shed } => {
+                assert!(batch.is_empty());
+                assert_eq!(shed.len(), 1);
+                let (_, why) = shed[0];
+                assert_eq!(why, Shed { predicted_us: 50, deadline_us: 30, decided_us: 5 });
+                assert!(why.decided_us + why.predicted_us > why.deadline_us);
+            }
+            other => panic!("expected shed-only dispatch, got {other:?}"),
+        }
+        assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
+    fn closing_batch_shrinks_to_meet_earliest_deadline() {
+        let cost = TileCostModel::new(0.0, 1.0);
+        let mut s = Scheduler::new(8);
+        let a = item_at(&mut s, 0, Priority::Normal, Some(12), 10);
+        item_at(&mut s, 0, Priority::Normal, None, 10);
+        item_at(&mut s, 0, Priority::Normal, None, 10);
+        // Full 3-batch predicts 30µs > A's 12µs slack; it must shrink to
+        // [A] alone (10µs ≤ 12µs) and keep the rest pending.
+        match s.poll(0, 3, 0, Some(&cost), false) {
+            Poll::Dispatch { batch, shed } => {
+                assert!(shed.is_empty());
+                assert_eq!(batch.iter().map(|it| it.seq).collect::<Vec<_>>(), vec![a]);
+            }
+            other => panic!("expected shrunk dispatch, got {other:?}"),
+        }
+        assert_eq!(s.depth(), 2);
+    }
+
+    #[test]
+    fn batches_are_shape_homogeneous_and_led_by_the_most_urgent() {
+        let mut s = Scheduler::new(8);
+        s.submit(0, Priority::Normal, Some(500), 4, (32, 32)).unwrap();
+        s.submit(0, Priority::Normal, Some(100), 4, (16, 16)).unwrap();
+        s.submit(0, Priority::Normal, Some(600), 4, (16, 16)).unwrap();
+        match s.poll(0, 4, 0, None, true) {
+            Poll::Dispatch { batch, .. } => {
+                // (16,16) has the most urgent member; both (16,16) items
+                // ride together past the interleaved (32,32) one.
+                assert_eq!(batch.len(), 2);
+                assert!(batch.iter().all(|it| it.shape == (16, 16)));
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+        assert_eq!(s.depth(), 1);
+    }
+
+    #[test]
+    fn admission_caps_split_the_budget_by_weight() {
+        assert_eq!(admission_caps(8, &[3, 1]), vec![6, 2]);
+        assert_eq!(admission_caps(64, &[1, 2]), vec![22, 43]);
+        // Rounding never starves, never exceeds the budget per shard.
+        assert_eq!(admission_caps(4, &[1000, 1]), vec![4, 1]);
+        assert_eq!(admission_caps(5, &[0, 0]), vec![1, 1]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Multi-model serving: per-model worker shards behind one router.
+//!
+//! Each served model gets its own **shard** — a bounded [`ServeQueue`]
+//! plus a private worker pool running the shared
+//! [`worker_loop`](super::with_server) machinery — so one model's load
+//! (or one model's panic) never blocks another's batches, and batches
+//! are trivially model-homogeneous. The shards share one **admission
+//! budget**: [`with_shards`] splits `budget` queue slots across shards
+//! proportionally to their weights via
+//! [`admission_caps`](super::admission_caps), so a heavy tenant buys
+//! deeper queues without starving light ones (every shard keeps ≥ 1
+//! slot).
+//!
+//! Clients see only the [`ShardRouter`]: submit by model name with
+//! per-request [`SubmitOpts`] (priority lane + deadline), get back the
+//! same per-request [`ServeResult`] channel single-model serving uses.
+//! Routing failures are typed ([`Rejected::UnknownModel`]); everything
+//! downstream — shape validation, weighted admission, deadline-based
+//! closing, shedding — is the per-shard queue's ordinary behaviour.
+
+use super::queue::{Rejected, ServeQueue, ServeResult};
+use super::sched::{admission_caps, SubmitOpts};
+use super::stats::ServeStats;
+use super::{worker_loop, AbortOnPanic, BatchModel, CloseOnDrop, ServeConfig};
+use crate::nn::tensor::Tensor;
+use std::sync::mpsc::Receiver;
+
+/// One shard's static description: the model it serves, its share of the
+/// admission budget, and its serving knobs.
+pub struct ShardSpec<'a> {
+    /// Routing name clients submit against (unique across the fleet).
+    pub name: &'a str,
+    /// The model this shard's workers run.
+    pub model: &'a dyn BatchModel,
+    /// Admission weight: this shard's queue capacity is
+    /// `max(1, ⌈budget · weight / Σweights⌉)`.
+    pub weight: u64,
+    /// Per-shard serving knobs (batch size, window, workers, cost model).
+    /// `queue_cap` is ignored — the shared budget decides capacity.
+    pub cfg: ServeConfig,
+}
+
+/// One live shard: name + model + its bounded queue.
+struct Shard<'a> {
+    name: &'a str,
+    model: &'a dyn BatchModel,
+    queue: ServeQueue,
+}
+
+/// The client-facing handle of a multi-shard session: routes submissions
+/// to the named model's shard.
+pub struct ShardRouter<'a> {
+    shards: Vec<Shard<'a>>,
+}
+
+impl ShardRouter<'_> {
+    /// Submit one item to the named model with explicit scheduling
+    /// options. The request's tile weight is computed from its own
+    /// spatial shape via [`BatchModel::tiles_for`], so the cost model
+    /// prices mixed-shape traffic correctly.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Tensor,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<ServeResult>, Rejected> {
+        let Some(shard) = self.shards.iter().find(|s| s.name == model) else {
+            return Err(Rejected::UnknownModel { name: model.to_string() });
+        };
+        let (h, w) = match input.dims.as_slice() {
+            [.., h, w] => (*h, *w),
+            _ => (1, 1),
+        };
+        let tiles = shard.model.tiles_for(h, w);
+        shard.queue.submit_with_tiles(input, opts, tiles)
+    }
+
+    /// Registered shard names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.shards.iter().map(|s| s.name).collect()
+    }
+
+    /// The named shard's queue (observability: depth, manual close).
+    pub fn queue(&self, model: &str) -> Option<&ServeQueue> {
+        self.shards.iter().find(|s| s.name == model).map(|s| &s.queue)
+    }
+}
+
+/// Run a multi-model serving session: one queue + worker pool per shard,
+/// admission capacity split across shards by weight from the shared
+/// `budget`, per-shard stats in `stats` (one entry per shard, same
+/// order). The client closure runs on the calling thread with the
+/// router; when it returns, every queue closes and drains. Panic-safe
+/// exactly like [`with_server`](super::with_server), per shard: a dying
+/// worker aborts only its own shard's queue.
+pub fn with_shards<'a, R>(
+    shards: &[ShardSpec<'a>],
+    budget: usize,
+    stats: &[ServeStats],
+    client: impl FnOnce(&ShardRouter<'a>) -> R,
+) -> R {
+    assert!(!shards.is_empty(), "need at least one shard");
+    assert_eq!(shards.len(), stats.len(), "one ServeStats per shard");
+    let weights: Vec<u64> = shards.iter().map(|s| s.weight).collect();
+    let caps = admission_caps(budget, &weights);
+    let router = ShardRouter {
+        shards: shards
+            .iter()
+            .zip(&caps)
+            .map(|(spec, &cap)| Shard {
+                name: spec.name,
+                model: spec.model,
+                queue: ServeQueue::with_policy(cap, spec.model.shape_policy())
+                    .with_default_tiles(spec.model.tiles_per_item().max(1) as u64),
+            })
+            .collect(),
+    };
+    std::thread::scope(|scope| {
+        for (i, spec) in shards.iter().enumerate() {
+            let queue = &router.shards[i].queue;
+            let model = router.shards[i].model;
+            let shard_stats = &stats[i];
+            for _ in 0..spec.cfg.workers.max(1) {
+                let cfg = &spec.cfg;
+                scope.spawn(move || {
+                    let _guard = AbortOnPanic(queue);
+                    worker_loop(model, queue, cfg, shard_stats);
+                });
+            }
+        }
+        // Dropped when the client returns (or unwinds): closes every
+        // shard queue so the scoped workers drain and join.
+        let _close: Vec<CloseOnDrop<'_>> =
+            router.shards.iter().map(|s| CloseOnDrop(&s.queue)).collect();
+        client(&router)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{EngineModel, Priority};
+    use super::*;
+    use crate::engine::WinoEngine;
+    use crate::nn::layers::Conv2dCfg;
+    use crate::testkit::prng_tensor;
+    use crate::wino::basis::Base;
+
+    #[test]
+    fn routes_by_name_and_rejects_unknown_models() {
+        let w = prng_tensor(91, &[3, 2, 3, 3], 0.4);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let model_a = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let model_b = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let specs = [
+            ShardSpec { name: "a", model: &model_a, weight: 3, cfg: ServeConfig::default() },
+            ShardSpec { name: "b", model: &model_b, weight: 1, cfg: ServeConfig::default() },
+        ];
+        let stats = [ServeStats::new(), ServeStats::new()];
+        with_shards(&specs, 8, &stats, |router| {
+            assert_eq!(router.names(), vec!["a", "b"]);
+            let x = prng_tensor(17, &[2, 8, 8], 1.0);
+            let opts = SubmitOpts { priority: Priority::High, ..Default::default() };
+            let rx = router.submit("a", x.clone(), opts).expect("shard a admits");
+            let resp = rx.recv().expect("worker alive").expect("not shed");
+            assert_eq!(resp.batch_size, 1);
+            match router.submit("nope", x, SubmitOpts::default()).unwrap_err() {
+                Rejected::UnknownModel { name } => assert_eq!(name, "nope"),
+                other => panic!("expected UnknownModel, got {other}"),
+            }
+        });
+        // Per-shard stats separation: only shard a served anything.
+        assert_eq!(stats[0].completed(), 1);
+        assert_eq!(stats[1].completed(), 0);
+    }
+
+    #[test]
+    fn admission_budget_splits_by_weight() {
+        let w = prng_tensor(92, &[3, 2, 3, 3], 0.4);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let model = EngineModel::new(&engine, conv, [2, 8, 8]);
+        // Zero workers is not possible (max(1)), so park the workers with
+        // an enormous window and max_batch to keep requests queued while
+        // we probe the admission caps.
+        let slow = ServeConfig { batch_window_us: 60_000_000, max_batch: 64, ..Default::default() };
+        let specs = [
+            ShardSpec { name: "heavy", model: &model, weight: 3, cfg: slow },
+            ShardSpec { name: "light", model: &model, weight: 1, cfg: slow },
+        ];
+        let stats = [ServeStats::new(), ServeStats::new()];
+        with_shards(&specs, 8, &stats, |router| {
+            // Caps from admission_caps(8, [3,1]) = [6, 2].
+            let x = || prng_tensor(18, &[2, 8, 8], 1.0);
+            let mut heavy = Vec::new();
+            for _ in 0..6 {
+                heavy.push(router.submit("heavy", x(), SubmitOpts::default()).expect("cap 6"));
+            }
+            assert_eq!(
+                router.submit("heavy", x(), SubmitOpts::default()).unwrap_err(),
+                Rejected::Full
+            );
+            let _l0 = router.submit("light", x(), SubmitOpts::default()).expect("cap 2");
+            let _l1 = router.submit("light", x(), SubmitOpts::default()).expect("cap 2");
+            assert_eq!(
+                router.submit("light", x(), SubmitOpts::default()).unwrap_err(),
+                Rejected::Full
+            );
+            // Release the parked workers so the session can drain: closing
+            // the queues flushes pending batches immediately.
+            router.queue("heavy").unwrap().close();
+            router.queue("light").unwrap().close();
+            for rx in heavy {
+                rx.recv().expect("drained on close").expect("not shed");
+            }
+        });
+        assert_eq!(stats[0].completed(), 6);
+        assert_eq!(stats[1].completed(), 2);
+    }
+}

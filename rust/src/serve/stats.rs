@@ -23,6 +23,11 @@ struct StatsState {
     batch_sizes: Vec<usize>,
     /// Admission rejections (queue full).
     rejected: u64,
+    /// Requests shed by the scheduler (predicted cost could not meet the
+    /// deadline).
+    shed: u64,
+    /// Completed requests whose response landed after their deadline.
+    deadline_missed: u64,
     /// Winograd tiles processed (batch size × tiles per item).
     tiles: u64,
     /// High-water mark of the queue depth observed at drain time.
@@ -61,6 +66,16 @@ impl ServeStats {
         self.state.lock().unwrap().rejected += 1;
     }
 
+    /// Record one shed request (the scheduler's predicted-cost decision).
+    pub fn record_shed(&self) {
+        self.state.lock().unwrap().shed += 1;
+    }
+
+    /// Record `n` completed-but-late requests from one batch.
+    pub fn record_deadline_miss(&self, n: u64) {
+        self.state.lock().unwrap().deadline_missed += n;
+    }
+
     /// Fold one engine-pass stage breakdown (`EngineScratch::take_stage_ns`)
     /// into the run totals.
     pub fn record_stage_ns(&self, stage_ns: [u64; 3]) {
@@ -95,8 +110,11 @@ impl ServeStats {
         let batches = st.batch_sizes.len() as u64;
         let wall = wall_seconds.max(1e-9);
         StatsReport {
+            submitted: completed + st.rejected + st.shed,
             completed,
             rejected: st.rejected,
+            shed: st.shed,
+            deadline_missed: st.deadline_missed,
             batches,
             mean_batch: if batches == 0 {
                 0.0
@@ -106,6 +124,7 @@ impl ServeStats {
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
+            p999_ms: pct(0.999),
             max_ms: lat_ms.last().copied().unwrap_or(0.0),
             requests_per_sec: completed as f64 / wall,
             tiles_per_sec: st.tiles as f64 / wall,
@@ -119,13 +138,23 @@ impl ServeStats {
 /// Folded summary of one serving run.
 #[derive(Clone, Copy, Debug)]
 pub struct StatsReport {
+    /// Every request this run accounted for: exactly
+    /// `completed + rejected + shed` (the accounting invariant the
+    /// deadline property suite pins).
+    pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Requests shed by the scheduler with a predicted-cost justification.
+    pub shed: u64,
+    /// Completed requests that landed after their deadline.
+    pub deadline_missed: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// p99.9 latency — the soak harness's tail-SLO headline number.
+    pub p999_ms: f64,
     pub max_ms: f64,
     pub requests_per_sec: f64,
     pub tiles_per_sec: f64,
@@ -144,21 +173,27 @@ impl StatsReport {
     pub fn to_json(&self) -> String {
         format!(
             concat!(
-                "{{\"completed\": {}, \"rejected\": {}, \"batches\": {}, ",
+                "{{\"submitted\": {}, \"completed\": {}, \"rejected\": {}, ",
+                "\"shed\": {}, \"deadline_missed\": {}, \"batches\": {}, ",
                 "\"mean_batch\": {:.3}, ",
-                "\"latency_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}}, ",
+                "\"latency_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, ",
+                "\"p999\": {:.3}, \"max\": {:.3}}}, ",
                 "\"requests_per_sec\": {:.2}, \"tiles_per_sec\": {:.1}, ",
                 "\"max_queue_depth\": {}, \"wall_seconds\": {:.4}, ",
                 "\"stage_ns\": {{\"input_transform\": {}, \"hadamard\": {}, ",
                 "\"inverse\": {}}}}}"
             ),
+            self.submitted,
             self.completed,
             self.rejected,
+            self.shed,
+            self.deadline_missed,
             self.batches,
             self.mean_batch,
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
+            self.p999_ms,
             self.max_ms,
             self.requests_per_sec,
             self.tiles_per_sec,
@@ -213,10 +248,13 @@ impl StatsReport {
     /// One-line human summary for the CLI.
     pub fn summary_line(&self) -> String {
         format!(
-            "{} ok / {} rejected in {:.2}s | {:.1} req/s, {:.0} tiles/s | \
+            "{} ok / {} rejected / {} shed ({} missed deadline) in {:.2}s | \
+             {:.1} req/s, {:.0} tiles/s | \
              batch mean {:.2} over {} passes | p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
             self.completed,
             self.rejected,
+            self.shed,
+            self.deadline_missed,
             self.wall_seconds,
             self.requests_per_sec,
             self.tiles_per_sec,
@@ -250,6 +288,29 @@ mod tests {
         assert!((r.requests_per_sec - 3.0).abs() < 1e-9);
         assert!((r.tiles_per_sec - 300.0).abs() < 1e-9);
         assert_eq!(r.max_queue_depth, 7);
+        assert_eq!(r.submitted, 7, "submitted = completed + rejected + shed");
+    }
+
+    #[test]
+    fn shed_and_deadline_miss_accounting() {
+        let s = ServeStats::new();
+        s.record_batch(2, 20, 0, &[1000, 9000]);
+        s.record_reject();
+        s.record_shed();
+        s.record_shed();
+        s.record_deadline_miss(1);
+        let r = s.report(1.0);
+        assert_eq!((r.completed, r.rejected, r.shed), (2, 1, 2));
+        assert_eq!(r.submitted, r.completed + r.rejected + r.shed);
+        assert_eq!(r.deadline_missed, 1);
+        // p99.9 of a tiny sample is the max (nearest-rank).
+        assert!((r.p999_ms - 9.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert!(j.contains("\"submitted\": 5"), "{j}");
+        assert!(j.contains("\"shed\": 2"), "{j}");
+        assert!(j.contains("\"deadline_missed\": 1"), "{j}");
+        assert!(j.contains("\"p999\": 9.000"), "{j}");
+        assert!(s.report(1.0).to_json().contains("\"p999\""));
     }
 
     #[test]
@@ -299,11 +360,15 @@ mod tests {
         let r = ServeStats::new().report(1.0);
         let j = r.to_json();
         for key in [
+            "\"submitted\"",
             "\"completed\"",
             "\"rejected\"",
+            "\"shed\"",
+            "\"deadline_missed\"",
             "\"batches\"",
             "\"latency_ms\"",
             "\"p99\"",
+            "\"p999\"",
             "\"tiles_per_sec\"",
             "\"max_queue_depth\"",
             "\"stage_ns\"",

@@ -4,6 +4,8 @@
 
 use crate::wino::error::Prng;
 
+pub mod soak;
+
 /// A generator of values of `T` from the PRNG.
 pub trait Gen<T> {
     fn generate(&self, rng: &mut Prng) -> T;

@@ -1,0 +1,618 @@
+//! Deterministic multi-tenant serve soak harness.
+//!
+//! Drives the *production* scheduling policy
+//! ([`Scheduler`](crate::serve::Scheduler) — the same struct the threaded
+//! [`ServeQueue`](crate::serve::ServeQueue) embeds) under a **virtual
+//! microsecond clock**: no threads, no `Instant`, no sleeps. Arrivals,
+//! model routing, priorities, deadlines and service jitter all come from
+//! one seeded [`Prng`], and every event is processed in deterministic
+//! order, so the same [`SoakConfig`] always produces the same
+//! [`SoakReport`] — byte-identical JSON — which is what lets
+//! `tests/serve_deadline.rs` assert scheduler invariants over thousands
+//! of simulated requests in milliseconds of test time.
+//!
+//! The simulation models the sharded server one-to-one:
+//!
+//! * each [`SoakModel`] is a tenant with its own [`Scheduler`] (capacity
+//!   from [`admission_caps`] over the shared budget, exactly like
+//!   [`with_shards`](crate::serve::with_shards)) and a pool of virtual
+//!   workers;
+//! * a worker's service time for a batch is the tenant cost model's
+//!   prediction plus bounded seeded jitter, so latency distributions
+//!   show realistic queueing/batching structure;
+//! * a slice of the traffic is generated *hopeless* (deadline below the
+//!   solo predicted cost) to exercise the shed path, and a slice is
+//!   deadline-free to exercise FIFO degradation.
+//!
+//! `winoq serve --soak` runs this harness and writes the report to
+//! `BENCH_serve_soak.json` (schema in the README); `scripts/ci.sh`
+//! smoke-runs it and checks the totals reconcile exactly.
+
+use crate::benchkit::percentile_sorted;
+use crate::serve::{admission_caps, Poll, Priority, SchedItem, Scheduler, Shed};
+use crate::tune::cost::TileCostModel;
+use crate::wino::error::Prng;
+
+/// One simulated tenant (model shard) of the soak run.
+#[derive(Clone, Debug)]
+pub struct SoakModel {
+    /// Model name (report key).
+    pub name: String,
+    /// Admission weight — shares the budget via [`admission_caps`].
+    pub weight: u64,
+    /// Virtual worker count for this tenant.
+    pub workers: usize,
+    /// Cost model pricing this tenant's batches (prediction = service).
+    pub cost: TileCostModel,
+}
+
+/// Full description of a soak run. Every field feeds the seeded
+/// generator or the virtual event loop; two equal configs produce
+/// byte-identical reports.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// PRNG seed for arrivals, routing, deadlines and service jitter.
+    pub seed: u64,
+    /// Total requests to generate across all tenants.
+    pub requests: usize,
+    /// Shared admission budget split across tenants by weight.
+    pub budget: usize,
+    /// Maximum micro-batch size.
+    pub max_batch: usize,
+    /// Batching window, µs (per-request deadlines can close earlier).
+    pub window_us: u64,
+    /// Mean inter-arrival gap, µs (gaps are uniform in `[1, 2·mean]`).
+    pub mean_gap_us: u64,
+    /// Base relative deadline, µs: normal requests get
+    /// `deadline_us + U[0, deadline_us)` of slack.
+    pub deadline_us: u64,
+    /// Percent of requests generated *hopeless* (deadline below the solo
+    /// predicted cost — must shed).
+    pub tight_pct: u32,
+    /// Percent of requests generated deadline-free (best-effort lane).
+    pub no_deadline_pct: u32,
+    /// Request shapes as `(h, w, tiles)` — tile weights are the caller's
+    /// (the CLI derives them from the real
+    /// [`tile_count_for`](crate::engine::layout::tile_count_for) grids).
+    pub shapes: Vec<(usize, usize, u64)>,
+    /// The tenants.
+    pub models: Vec<SoakModel>,
+    /// Service jitter bound as a divisor: each batch adds
+    /// `U[0, predicted/div]` µs. `0` disables jitter.
+    pub service_jitter_div: u64,
+}
+
+/// One generated request (pre-computed before the event loop runs).
+#[derive(Clone, Copy, Debug)]
+struct Arrival {
+    at_us: u64,
+    model: usize,
+    priority: Priority,
+    deadline_us: Option<u64>,
+    shape: (usize, usize),
+    tiles: u64,
+}
+
+/// One dispatched batch, as the invariant suite sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchTrace {
+    /// Tenant index into [`SoakConfig::models`].
+    pub model: usize,
+    /// Virtual time the batch closed (dispatch decision).
+    pub closed_us: u64,
+    /// Predicted batch cost at close time, µs.
+    pub predicted_us: u64,
+    /// Earliest member deadline, if any member had one. The pinned
+    /// invariant: `closed_us + predicted_us ≤ earliest_deadline_us`.
+    pub earliest_deadline_us: Option<u64>,
+    /// Batch size (≥ 1, ≤ configured `max_batch`).
+    pub size: usize,
+}
+
+/// One shed decision, with the scheduler's justification.
+#[derive(Clone, Copy, Debug)]
+pub struct ShedTrace {
+    /// Tenant index into [`SoakConfig::models`].
+    pub model: usize,
+    /// The request that was shed.
+    pub item: SchedItem,
+    /// Why (`decided_us + predicted_us > deadline_us` always holds).
+    pub why: Shed,
+}
+
+/// Per-tenant outcome totals and latency percentiles.
+#[derive(Clone, Debug)]
+pub struct ModelSoak {
+    /// Tenant name.
+    pub name: String,
+    /// Requests routed to this tenant.
+    pub submitted: u64,
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests refused at admission (shard queue full).
+    pub rejected: u64,
+    /// Requests shed by the deadline policy.
+    pub shed: u64,
+    /// Completed requests that finished past their deadline.
+    pub deadline_missed: u64,
+    /// Latency percentiles over completed requests, µs (0 when none).
+    pub p50_us: f64,
+    /// 99th percentile latency, µs.
+    pub p99_us: f64,
+    /// 99.9th percentile latency, µs.
+    pub p999_us: f64,
+    /// Completed requests per virtual second.
+    pub requests_per_sec: f64,
+}
+
+/// The soak run's full result: exact accounting totals, latency
+/// percentiles, per-tenant breakdown, and the raw batch/shed traces the
+/// property suites walk.
+#[derive(Clone, Debug)]
+pub struct SoakReport {
+    /// Config echo: PRNG seed.
+    pub seed: u64,
+    /// Config echo: generated request count.
+    pub requests: u64,
+    /// Config echo: maximum batch size (trace invariant bound).
+    pub max_batch: usize,
+    /// Virtual time the last worker went idle, µs.
+    pub virtual_wall_us: u64,
+    /// Requests generated (= `requests`).
+    pub submitted: u64,
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests refused at admission.
+    pub rejected: u64,
+    /// Requests shed with predicted-cost justification.
+    pub shed: u64,
+    /// Completed requests that finished past their deadline.
+    pub deadline_missed: u64,
+    /// Overall completed-latency percentiles, µs (0 when none completed).
+    pub p50_us: f64,
+    /// 95th percentile latency, µs.
+    pub p95_us: f64,
+    /// 99th percentile latency, µs.
+    pub p99_us: f64,
+    /// 99.9th percentile latency, µs.
+    pub p999_us: f64,
+    /// Maximum completed latency, µs.
+    pub max_us: f64,
+    /// `deadline_missed / completed` (0 when nothing completed).
+    pub deadline_miss_rate: f64,
+    /// Per-tenant breakdown, in [`SoakConfig::models`] order.
+    pub per_model: Vec<ModelSoak>,
+    /// Every dispatched batch (not serialized to JSON).
+    pub batches: Vec<BatchTrace>,
+    /// Every shed decision (not serialized to JSON).
+    pub sheds: Vec<ShedTrace>,
+}
+
+impl SoakReport {
+    /// The full-accounting invariant: every generated request is exactly
+    /// one of completed / rejected / shed.
+    pub fn accounting_exact(&self) -> bool {
+        let per_model_ok = self.per_model.iter().all(|m| {
+            m.submitted == m.completed + m.rejected + m.shed
+        });
+        self.submitted == self.requests
+            && self.submitted == self.completed + self.rejected + self.shed
+            && per_model_ok
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "soak: {} submitted = {} ok + {} rejected + {} shed | {} missed deadline \
+             (rate {:.4}) | p50/p99/p99.9 {:.0}/{:.0}/{:.0} µs over {:.3}s virtual",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.shed,
+            self.deadline_missed,
+            self.deadline_miss_rate,
+            self.p50_us,
+            self.p99_us,
+            self.p999_us,
+            self.virtual_wall_us as f64 / 1e6,
+        )
+    }
+
+    /// Serialize to the `BENCH_serve_soak.json` schema (documented in the
+    /// README; `scripts/ci.sh` parses the `totals` object with `sed`, so
+    /// key order is load-bearing).
+    pub fn to_json(&self) -> String {
+        let per_model: Vec<String> = self
+            .per_model
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"name\": \"{}\", \"submitted\": {}, \"completed\": {}, \
+                     \"rejected\": {}, \"shed\": {}, \"deadline_missed\": {}, \
+                     \"latency_us\": {{\"p50\": {:.3}, \"p99\": {:.3}, \"p999\": {:.3}}}, \
+                     \"requests_per_sec\": {:.3}}}",
+                    m.name,
+                    m.submitted,
+                    m.completed,
+                    m.rejected,
+                    m.shed,
+                    m.deadline_missed,
+                    m.p50_us,
+                    m.p99_us,
+                    m.p999_us,
+                    m.requests_per_sec,
+                )
+            })
+            .collect();
+        format!(
+            "{{\"bench\": \"serve_soak\", \"seed\": {}, \"requests\": {}, \
+             \"virtual_wall_us\": {}, \
+             \"totals\": {{\"submitted\": {}, \"completed\": {}, \"rejected\": {}, \
+             \"shed\": {}, \"deadline_missed\": {}}}, \
+             \"deadline_miss_rate\": {:.6}, \
+             \"latency_us\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, \
+             \"p999\": {:.3}, \"max\": {:.3}}}, \
+             \"per_model\": [{}]}}\n",
+            self.seed,
+            self.requests,
+            self.virtual_wall_us,
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.shed,
+            self.deadline_missed,
+            self.deadline_miss_rate,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.p999_us,
+            self.max_us,
+            per_model.join(", "),
+        )
+    }
+}
+
+/// Live per-tenant state of the event loop.
+struct Tenant {
+    sched: Scheduler,
+    /// Per-worker busy-until timestamps (virtual µs).
+    workers: Vec<u64>,
+    lat_us: Vec<f64>,
+    submitted: u64,
+    rejected: u64,
+    shed: u64,
+    missed: u64,
+}
+
+/// Generate the full arrival trace up front (deterministic in the seed).
+fn generate_arrivals(cfg: &SoakConfig, rng: &mut Prng) -> Vec<Arrival> {
+    assert!(!cfg.models.is_empty(), "soak needs at least one model");
+    assert!(!cfg.shapes.is_empty(), "soak needs at least one shape");
+    let total_w: u64 = cfg.models.iter().map(|m| m.weight).sum::<u64>().max(1);
+    let mut t = 0u64;
+    let mut arrivals = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        t += 1 + rng.next_u64() % (2 * cfg.mean_gap_us.max(1));
+        let mut pick = rng.next_u64() % total_w;
+        let mut model = cfg.models.len() - 1;
+        for (i, m) in cfg.models.iter().enumerate() {
+            if pick < m.weight {
+                model = i;
+                break;
+            }
+            pick -= m.weight;
+        }
+        let (h, w, tiles) = cfg.shapes[(rng.next_u64() as usize) % cfg.shapes.len()];
+        let priority = match rng.next_u64() % 10 {
+            0..=1 => Priority::High,
+            2..=8 => Priority::Normal,
+            _ => Priority::Low,
+        };
+        let solo = cfg.models[model].cost.predict_us(tiles).max(1);
+        let roll = (rng.next_u64() % 100) as u32;
+        let deadline_us = if roll < cfg.no_deadline_pct {
+            None
+        } else if roll < cfg.no_deadline_pct + cfg.tight_pct {
+            // Hopeless by construction: the solo predicted cost already
+            // overruns this deadline, so the shed path must fire.
+            Some(t + solo / 2)
+        } else {
+            let base = cfg.deadline_us.max(1);
+            Some(t + base + rng.next_u64() % base)
+        };
+        arrivals.push(Arrival { at_us: t, model, priority, deadline_us, shape: (h, w), tiles });
+    }
+    arrivals
+}
+
+/// Run the soak simulation to completion and fold the report.
+pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
+    let mut rng = Prng::new(cfg.seed);
+    let arrivals = generate_arrivals(cfg, &mut rng);
+    let weights: Vec<u64> = cfg.models.iter().map(|m| m.weight).collect();
+    let caps = admission_caps(cfg.budget, &weights);
+    let mut tenants: Vec<Tenant> = cfg
+        .models
+        .iter()
+        .zip(&caps)
+        .map(|(m, &cap)| Tenant {
+            sched: Scheduler::new(cap),
+            workers: vec![0u64; m.workers.max(1)],
+            lat_us: Vec::new(),
+            submitted: 0,
+            rejected: 0,
+            shed: 0,
+            missed: 0,
+        })
+        .collect();
+
+    let mut batches: Vec<BatchTrace> = Vec::new();
+    let mut sheds: Vec<ShedTrace> = Vec::new();
+    let mut now = 0u64;
+    let mut idx = 0usize;
+    loop {
+        // 1. Admit every arrival due by now (gaps are ≥ 1 µs, so the
+        // event loop lands exactly on each arrival timestamp).
+        while idx < arrivals.len() && arrivals[idx].at_us <= now {
+            let a = arrivals[idx];
+            let tnt = &mut tenants[a.model];
+            tnt.submitted += 1;
+            if tnt
+                .sched
+                .submit(a.at_us, a.priority, a.deadline_us, a.tiles, a.shape)
+                .is_none()
+            {
+                tnt.rejected += 1;
+            }
+            idx += 1;
+        }
+        // 2. Dispatch: each tenant drains onto free virtual workers. Once
+        // the arrival trace is exhausted the remaining work is flushed
+        // (the drain-on-close path), so the run terminates without
+        // waiting out batching windows.
+        let flush = idx >= arrivals.len();
+        let mut wait_hints: Vec<u64> = Vec::new();
+        for (mi, tnt) in tenants.iter_mut().enumerate() {
+            loop {
+                let Some(wi) = tnt.workers.iter().position(|&b| b <= now) else {
+                    break;
+                };
+                let cost = &cfg.models[mi].cost;
+                match tnt.sched.poll(now, cfg.max_batch, cfg.window_us, Some(cost), flush) {
+                    Poll::Idle => break,
+                    Poll::WaitUntil(t) => {
+                        wait_hints.push(t);
+                        break;
+                    }
+                    Poll::Dispatch { batch, shed } => {
+                        for (item, why) in shed {
+                            tnt.shed += 1;
+                            sheds.push(ShedTrace { model: mi, item, why });
+                        }
+                        if batch.is_empty() {
+                            // Shed-only poll: go around again.
+                            continue;
+                        }
+                        assert!(
+                            batch.iter().all(|it| it.shape == batch[0].shape),
+                            "scheduler dispatched a shape-mixed batch"
+                        );
+                        let tiles: u64 = batch.iter().map(|it| it.tiles).sum();
+                        let predicted = cost.predict_us(tiles).max(1);
+                        let jitter = if cfg.service_jitter_div == 0 {
+                            0
+                        } else {
+                            rng.next_u64() % (predicted / cfg.service_jitter_div + 1)
+                        };
+                        let done = now + predicted + jitter;
+                        tnt.workers[wi] = done;
+                        batches.push(BatchTrace {
+                            model: mi,
+                            closed_us: now,
+                            predicted_us: predicted,
+                            earliest_deadline_us: batch
+                                .iter()
+                                .filter_map(|it| it.deadline_us)
+                                .min(),
+                            size: batch.len(),
+                        });
+                        for it in &batch {
+                            tnt.lat_us.push((done - it.submitted_us) as f64);
+                            if it.deadline_us.is_some_and(|d| done > d) {
+                                tnt.missed += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // 3. Advance the clock to the next event: the next arrival, a
+        // worker freeing up (only relevant while that tenant has pending
+        // work), or a scheduler-requested re-poll time.
+        let mut next = u64::MAX;
+        if idx < arrivals.len() {
+            next = next.min(arrivals[idx].at_us);
+        }
+        for &t in &wait_hints {
+            if t > now {
+                next = next.min(t);
+            }
+        }
+        for tnt in &tenants {
+            if tnt.sched.depth() > 0 {
+                for &b in &tnt.workers {
+                    if b > now {
+                        next = next.min(b);
+                    }
+                }
+            }
+        }
+        if next == u64::MAX {
+            break;
+        }
+        now = next.max(now + 1);
+    }
+
+    // Fold the report.
+    let wall = tenants
+        .iter()
+        .flat_map(|t| t.workers.iter().copied())
+        .max()
+        .unwrap_or(0)
+        .max(now);
+    let wall_secs = (wall as f64 / 1e6).max(1e-9);
+    let pct = |sorted: &[f64], q: f64| {
+        if sorted.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(sorted, q)
+        }
+    };
+    let mut all_lat: Vec<f64> = tenants.iter().flat_map(|t| t.lat_us.iter().copied()).collect();
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let per_model: Vec<ModelSoak> = cfg
+        .models
+        .iter()
+        .zip(&mut tenants)
+        .map(|(m, t)| {
+            t.lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ModelSoak {
+                name: m.name.clone(),
+                submitted: t.submitted,
+                completed: t.lat_us.len() as u64,
+                rejected: t.rejected,
+                shed: t.shed,
+                deadline_missed: t.missed,
+                p50_us: pct(&t.lat_us, 0.50),
+                p99_us: pct(&t.lat_us, 0.99),
+                p999_us: pct(&t.lat_us, 0.999),
+                requests_per_sec: t.lat_us.len() as f64 / wall_secs,
+            }
+        })
+        .collect();
+    let completed = all_lat.len() as u64;
+    let missed: u64 = per_model.iter().map(|m| m.deadline_missed).sum();
+    SoakReport {
+        seed: cfg.seed,
+        requests: cfg.requests as u64,
+        max_batch: cfg.max_batch.max(1),
+        virtual_wall_us: wall,
+        submitted: per_model.iter().map(|m| m.submitted).sum(),
+        completed,
+        rejected: per_model.iter().map(|m| m.rejected).sum(),
+        shed: per_model.iter().map(|m| m.shed).sum(),
+        deadline_missed: missed,
+        p50_us: pct(&all_lat, 0.50),
+        p95_us: pct(&all_lat, 0.95),
+        p99_us: pct(&all_lat, 0.99),
+        p999_us: pct(&all_lat, 0.999),
+        max_us: all_lat.last().copied().unwrap_or(0.0),
+        deadline_miss_rate: missed as f64 / (completed.max(1)) as f64,
+        per_model,
+        batches,
+        sheds,
+    }
+}
+
+/// A representative two-tenant mixed-shape config — the CLI default and
+/// the fixture the invariant suites perturb.
+pub fn two_tenant_config(seed: u64, requests: usize) -> SoakConfig {
+    SoakConfig {
+        seed,
+        requests,
+        budget: 64,
+        max_batch: 8,
+        window_us: 1_000,
+        mean_gap_us: 30,
+        deadline_us: 20_000,
+        tight_pct: 5,
+        no_deadline_pct: 15,
+        shapes: vec![
+            (32, 32, 896),
+            (24, 48, 1008),
+            (48, 24, 1008),
+            (16, 16, 224),
+        ],
+        models: vec![
+            SoakModel {
+                name: "model-a".into(),
+                weight: 1,
+                workers: 2,
+                cost: TileCostModel::new(40.0, 0.02),
+            },
+            SoakModel {
+                name: "model-b".into(),
+                weight: 2,
+                workers: 2,
+                cost: TileCostModel::new(55.0, 0.03),
+            },
+        ],
+        service_jitter_div: 16,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soak_accounting_is_exact_and_deterministic() {
+        let cfg = two_tenant_config(0x50AB, 512);
+        let a = run_soak(&cfg);
+        let b = run_soak(&cfg);
+        assert!(a.accounting_exact(), "{}", a.summary_line());
+        assert_eq!(a.to_json(), b.to_json(), "same seed must replay byte-identically");
+        assert_eq!(a.submitted, 512);
+        // The hopeless slice forces sheds; the rest mostly completes.
+        assert!(a.shed > 0, "tight_pct traffic must shed");
+        assert!(a.completed > 400, "most traffic completes: {}", a.summary_line());
+        assert!(a.p999_us >= a.p50_us && a.p50_us > 0.0);
+    }
+
+    #[test]
+    fn different_seeds_differ_but_both_account() {
+        let a = run_soak(&two_tenant_config(1, 256));
+        let b = run_soak(&two_tenant_config(2, 256));
+        assert!(a.accounting_exact() && b.accounting_exact());
+        assert_ne!(a.to_json(), b.to_json(), "seeds must actually steer the trace");
+    }
+
+    #[test]
+    fn batch_traces_respect_deadline_and_size_invariants() {
+        let r = run_soak(&two_tenant_config(7, 1024));
+        assert!(!r.batches.is_empty());
+        for b in &r.batches {
+            assert!(b.size >= 1 && b.size <= r.max_batch);
+            if let Some(d) = b.earliest_deadline_us {
+                assert!(
+                    b.closed_us + b.predicted_us <= d,
+                    "batch closed past its earliest member deadline: {b:?}"
+                );
+            }
+        }
+        for s in &r.sheds {
+            assert!(
+                s.why.decided_us + s.why.predicted_us > s.why.deadline_us,
+                "shed without predicted-cost justification: {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_schema_is_stable() {
+        let j = run_soak(&two_tenant_config(3, 128)).to_json();
+        for key in [
+            "\"bench\": \"serve_soak\"",
+            "\"totals\": {\"submitted\": ",
+            ", \"completed\": ",
+            ", \"rejected\": ",
+            ", \"shed\": ",
+            ", \"deadline_missed\": ",
+            "\"deadline_miss_rate\": ",
+            "\"p999\": ",
+            "\"per_model\": [{\"name\": \"model-a\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

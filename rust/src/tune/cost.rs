@@ -36,6 +36,68 @@ use crate::nn::winolayer::WinoConv2d;
 use crate::wino::matrix::Mat;
 use crate::wino::transform::WinoF;
 
+/// Affine batch-cost predictor the SLO scheduler consults: a dispatched
+/// batch of `t` tiles is predicted to take `fixed_us + per_tile_us · t`
+/// microseconds. `fixed_us` absorbs per-batch overhead (stacking,
+/// dispatch, response fan-out); `per_tile_us` is the marginal tile cost,
+/// the inverse of the `tiles_per_sec` the tuner measures per candidate.
+///
+/// The serving layer treats this as a *deadline oracle*: a batch may
+/// only close at time `t` if `t + predict_us(batch tiles)` is at or
+/// before every member's deadline, and a request whose **solo** predicted
+/// cost already overruns its deadline is shed instead of admitted to a
+/// batch (see [`serve::sched`](crate::serve::sched)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileCostModel {
+    /// Per-batch fixed overhead in microseconds.
+    pub fixed_us: f64,
+    /// Marginal cost per Winograd tile in microseconds.
+    pub per_tile_us: f64,
+}
+
+impl TileCostModel {
+    /// Build a predictor from its two coefficients (clamped to ≥ 0).
+    pub fn new(fixed_us: f64, per_tile_us: f64) -> TileCostModel {
+        TileCostModel {
+            fixed_us: fixed_us.max(0.0),
+            per_tile_us: per_tile_us.max(0.0),
+        }
+    }
+
+    /// Predicted wall-µs for a batch totalling `tiles` Winograd tiles,
+    /// rounded up so a nonzero prediction is never flattened to 0 by
+    /// integer truncation (the scheduler compares µs timestamps).
+    pub fn predict_us(&self, tiles: u64) -> u64 {
+        (self.fixed_us + self.per_tile_us * tiles as f64).ceil() as u64
+    }
+
+    /// Least-squares fit of `(tiles, measured_us)` samples — how a
+    /// deployment turns tuner bench output into a serving cost model.
+    /// Coefficients are clamped to ≥ 0 (a negative marginal tile cost is
+    /// measurement noise, not physics). Needs ≥ 2 distinct tile counts;
+    /// degenerate inputs fall back to a flat mean-cost model.
+    pub fn fit(samples: &[(u64, f64)]) -> TileCostModel {
+        let n = samples.len() as f64;
+        if samples.is_empty() {
+            return TileCostModel::new(0.0, 0.0);
+        }
+        let mean_x = samples.iter().map(|&(t, _)| t as f64).sum::<f64>() / n;
+        let mean_y = samples.iter().map(|&(_, us)| us).sum::<f64>() / n;
+        let mut sxx = 0.0;
+        let mut sxy = 0.0;
+        for &(t, us) in samples {
+            let dx = t as f64 - mean_x;
+            sxx += dx * dx;
+            sxy += dx * (us - mean_y);
+        }
+        if sxx <= 0.0 {
+            return TileCostModel::new(mean_y, 0.0);
+        }
+        let slope = (sxy / sxx).max(0.0);
+        TileCostModel::new(mean_y - slope * mean_x, slope)
+    }
+}
+
 /// Measurement knobs (small by default — tuning is offline but should
 /// not take minutes per layer).
 #[derive(Clone, Copy, Debug)]
@@ -246,6 +308,30 @@ mod tests {
         let ie = layer.int_engine().expect("8-bit candidates fit the int engine");
         let conv = Conv2dCfg { stride: 1, padding: 1 };
         assert_eq!(layer.forward(&acts, conv).data, ie.forward(&acts, conv).data);
+    }
+
+    #[test]
+    fn tile_cost_model_predicts_and_fits() {
+        let m = TileCostModel::new(40.0, 0.5);
+        assert_eq!(m.predict_us(0), 40);
+        assert_eq!(m.predict_us(100), 90);
+        // ceil: 40 + 0.5·3 = 41.5 → 42.
+        assert_eq!(m.predict_us(3), 42);
+        // Exact affine samples recover the coefficients.
+        let samples: Vec<(u64, f64)> =
+            [10u64, 50, 200, 800].iter().map(|&t| (t, 40.0 + 0.5 * t as f64)).collect();
+        let fit = TileCostModel::fit(&samples);
+        assert!((fit.fixed_us - 40.0).abs() < 1e-9, "fixed {}", fit.fixed_us);
+        assert!((fit.per_tile_us - 0.5).abs() < 1e-12, "slope {}", fit.per_tile_us);
+        // Degenerate: one distinct tile count falls back to the mean.
+        let flat = TileCostModel::fit(&[(64, 100.0), (64, 120.0)]);
+        assert_eq!(flat.per_tile_us, 0.0);
+        assert!((flat.fixed_us - 110.0).abs() < 1e-9);
+        // Negative measured slope clamps to 0, never predicts negative.
+        let noisy = TileCostModel::fit(&[(10, 200.0), (1000, 50.0)]);
+        assert_eq!(noisy.per_tile_us, 0.0);
+        assert!(noisy.fixed_us >= 0.0);
+        assert_eq!(TileCostModel::fit(&[]).predict_us(999), 0);
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Deadline-scheduler property suite (ISSUE 6): forall seeded request
+//! streams — mixed priorities, deadlines, shapes, tenant weights — the
+//! scheduler invariants hold and the accounting is exact, on a virtual
+//! clock, deterministically, fast enough for CI.
+//!
+//! Invariants pinned here (over the *production* scheduler — the soak
+//! harness drives the same [`Scheduler`](winoq::serve::Scheduler) the
+//! threaded `ServeQueue` embeds):
+//!
+//! 1. **No late close**: no batch closes later than its earliest
+//!    member's deadline minus the predicted batch cost.
+//! 2. **Justified shedding**: every shed carries a predicted-cost
+//!    justification with `decided + predicted > deadline`.
+//! 3. **Exact accounting**: every submitted request ends as exactly one
+//!    of completed / rejected / shed, globally and per tenant.
+//! 4. **Bounded, homogeneous batches**: `1 ≤ size ≤ max_batch`, one
+//!    shape per batch.
+//! 5. **Determinism**: one seed, one byte-identical report.
+
+use std::time::Duration;
+use winoq::serve::{Poll, Priority, Scheduler, ServeQueue, SubmitOpts};
+use winoq::testkit::soak::{run_soak, two_tenant_config, SoakConfig};
+use winoq::testkit::{forall, prng_tensor};
+use winoq::tune::cost::TileCostModel;
+use winoq::wino::error::Prng;
+
+/// Randomized soak configs around the two-tenant fixture: load, deadline
+/// tightness, budget, batching and window all vary per case.
+fn gen_cfg(rng: &mut Prng) -> SoakConfig {
+    let mut cfg = two_tenant_config(rng.next_u64(), 96 + (rng.next_u64() % 320) as usize);
+    cfg.mean_gap_us = 5 + rng.next_u64() % 60;
+    cfg.deadline_us = 500 + rng.next_u64() % 30_000;
+    cfg.tight_pct = (rng.next_u64() % 20) as u32;
+    cfg.no_deadline_pct = (rng.next_u64() % 40) as u32;
+    cfg.budget = 8 + (rng.next_u64() % 120) as usize;
+    cfg.max_batch = 1 + (rng.next_u64() % 12) as usize;
+    cfg.window_us = 200 + rng.next_u64() % 4_000;
+    cfg.service_jitter_div = 8 + rng.next_u64() % 16;
+    cfg
+}
+
+#[test]
+fn soak_invariants_hold_for_all_seeded_streams() {
+    forall(0x5EED_D1CE, 25, gen_cfg, |cfg| {
+        let r = run_soak(cfg);
+        assert!(r.accounting_exact(), "accounting leaked: {}", r.summary_line());
+        for b in &r.batches {
+            assert!(b.size >= 1 && b.size <= r.max_batch, "batch size {} out of bounds", b.size);
+            if let Some(d) = b.earliest_deadline_us {
+                assert!(
+                    b.closed_us + b.predicted_us <= d,
+                    "batch closed past earliest deadline − predicted cost: {b:?}"
+                );
+            }
+        }
+        for s in &r.sheds {
+            assert!(
+                s.why.decided_us + s.why.predicted_us > s.why.deadline_us,
+                "unjustified shed: {s:?}"
+            );
+            assert_eq!(
+                s.item.deadline_us,
+                Some(s.why.deadline_us),
+                "shed justification must quote the request's own deadline"
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn soak_reports_are_deterministic_per_seed() {
+    let cfg = two_tenant_config(0xD00D, 384);
+    let a = run_soak(&cfg);
+    let b = run_soak(&cfg);
+    assert_eq!(a.to_json(), b.to_json(), "same seed must replay byte-identically");
+    let other = run_soak(&two_tenant_config(0xD00E, 384));
+    assert_ne!(a.to_json(), other.to_json(), "the seed must steer the trace");
+}
+
+/// One randomized direct-scheduler case: submits with random priorities,
+/// deadlines and shapes, then drains with advancing virtual time.
+#[derive(Debug)]
+struct StreamCase {
+    seed: u64,
+    n: usize,
+    cap: usize,
+    max_batch: usize,
+}
+
+fn gen_stream(rng: &mut Prng) -> StreamCase {
+    StreamCase {
+        seed: rng.next_u64(),
+        n: 16 + (rng.next_u64() % 96) as usize,
+        cap: 4 + (rng.next_u64() % 28) as usize,
+        max_batch: 1 + (rng.next_u64() % 8) as usize,
+    }
+}
+
+#[test]
+fn scheduler_accounts_for_every_ticket_under_random_streams() {
+    let cost = TileCostModel::new(20.0, 1.0);
+    forall(0xACC0, 40, gen_stream, |case| {
+        let mut rng = Prng::new(case.seed);
+        let mut s = Scheduler::new(case.cap);
+        let (mut admitted, mut rejected) = (0u64, 0u64);
+        let (mut dispatched, mut shed) = (0u64, 0u64);
+        let mut now = 0u64;
+        let drain = |s: &mut Scheduler, now: u64, flush: bool| {
+            let mut served = 0u64;
+            let mut dropped = 0u64;
+            loop {
+                match s.poll(now, case.max_batch, 500, Some(&cost), flush) {
+                    Poll::Idle | Poll::WaitUntil(_) => break,
+                    Poll::Dispatch { batch, shed } => {
+                        assert!(batch.len() <= case.max_batch);
+                        assert!(
+                            batch.windows(2).all(|p| p[0].shape == p[1].shape),
+                            "shape-mixed batch"
+                        );
+                        served += batch.len() as u64;
+                        dropped += shed.len() as u64;
+                        if batch.is_empty() && shed.is_empty() {
+                            break;
+                        }
+                    }
+                }
+            }
+            (served, dropped)
+        };
+        for _ in 0..case.n {
+            now += 1 + rng.next_u64() % 40;
+            let pri = match rng.next_u64() % 3 {
+                0 => Priority::High,
+                1 => Priority::Normal,
+                _ => Priority::Low,
+            };
+            let deadline = match rng.next_u64() % 3 {
+                0 => None,
+                // Sometimes hopeless (below the 20 µs fixed cost floor).
+                1 => Some(now + rng.next_u64() % 15),
+                _ => Some(now + 100 + rng.next_u64() % 2_000),
+            };
+            let tiles = 1 + rng.next_u64() % 60;
+            let shape = if rng.next_u64() % 2 == 0 { (16, 16) } else { (24, 48) };
+            if s.submit(now, pri, deadline, tiles, shape).is_some() {
+                admitted += 1;
+            } else {
+                rejected += 1;
+            }
+            if rng.next_u64() % 4 == 0 {
+                let (d, x) = drain(&mut s, now, false);
+                dispatched += d;
+                shed += x;
+            }
+        }
+        // Final flush drains everything that remains.
+        now += 1_000_000;
+        let (d, x) = drain(&mut s, now, true);
+        dispatched += d;
+        shed += x;
+        assert_eq!(s.depth(), 0, "flush must leave nothing pending");
+        assert_eq!(admitted + rejected, case.n as u64);
+        assert_eq!(
+            dispatched + shed,
+            admitted,
+            "every admitted ticket must dispatch or shed exactly once"
+        );
+        true
+    });
+}
+
+#[test]
+fn threaded_queue_drains_edf_within_priority_lanes() {
+    // The threaded front-end enforces the same policy the pure scheduler
+    // proves: priority lanes strictly dominate, EDF inside a lane, FIFO
+    // for deadline-free requests — regardless of submit order.
+    let q = ServeQueue::with_dims(16, vec![1, 2, 2]);
+    let item = |v: f32| prng_tensor(v as u64 + 40, &[1, 2, 2], 1.0);
+    let d = |us| SubmitOpts { deadline_us: Some(us), ..Default::default() };
+    let _r1 = q.submit_with(item(1.0), d(800_000)).unwrap();
+    let _r2 = q
+        .submit_with(
+            item(2.0),
+            SubmitOpts { deadline_us: Some(900_000), priority: Priority::Low },
+        )
+        .unwrap();
+    let _r3 = q.submit_with(item(3.0), d(1_000)).unwrap(); // tightest, Normal
+    let _r4 = q.submit_with(item(4.0), SubmitOpts::default()).unwrap(); // deadline-free
+    let _r5 = q
+        .submit_with(
+            item(5.0),
+            SubmitOpts { deadline_us: Some(700_000), priority: Priority::High },
+        )
+        .unwrap();
+    let mut order = Vec::new();
+    for _ in 0..5 {
+        let batch = q.next_batch(1, Duration::ZERO).expect("queue open");
+        assert_eq!(batch.len(), 1);
+        order.push(batch[0].deadline_us);
+    }
+    // High lane first (700ms), then Normal EDF (1ms, 800ms), then
+    // deadline-free Normal, then the Low lane.
+    let got: Vec<bool> = order.iter().map(|d| d.is_some()).collect();
+    assert_eq!(got, vec![true, true, true, false, true]);
+    // Exact EDF inside the Normal lane: the 1 ms deadline (submitted
+    // *after* the 800 ms one) drains first.
+    assert!(order[1] < order[2], "EDF violated inside the Normal lane: {order:?}");
+}

@@ -31,7 +31,11 @@ fn serve_all(model: &dyn BatchModel, cfg: &ServeConfig, inputs: &[Tensor]) -> Ve
             .map(|x| queue.submit(x.clone()).expect("queue sized for the test"))
             .collect();
         rxs.into_iter()
-            .map(|rx| rx.recv().expect("worker died"))
+            .map(|rx| {
+                rx.recv()
+                    .expect("worker died")
+                    .expect("no cost model: nothing sheds")
+            })
             .collect::<Vec<Response>>()
     });
     let report = stats.report(1.0);
@@ -65,6 +69,7 @@ fn quantized_engine_responses_bit_identical_across_bases_and_configs() {
                 batch_window_us: 200_000,
                 queue_cap: 32,
                 workers: 1,
+                cost: None,
             };
             let responses = serve_all(&model, &serve_cfg, &inputs);
             for (x, resp) in inputs.iter().zip(&responses) {
@@ -101,13 +106,14 @@ fn float_engine_parity_with_concurrent_workers() {
         batch_window_us: 500,
         queue_cap: 16,
         workers: 2,
+        cost: None,
     };
     let report = run_closed_loop(&model, &serve_cfg, &inputs, 20, 5);
     assert_eq!(report.completed, 20);
     // Deterministic spot check through the full session machinery.
     let stats = ServeStats::new();
     let resp = winoq::serve::with_server(&model, &serve_cfg, &stats, |queue| {
-        queue.submit(inputs[0].clone()).unwrap().recv().unwrap()
+        queue.submit(inputs[0].clone()).unwrap().recv().unwrap().unwrap()
     });
     let want = engine.forward(&inputs[0].clone().reshape(&[1, 2, 9, 9]), cfg);
     assert_eq!(resp.output.data, want.data);
@@ -137,6 +143,7 @@ fn registry_resnet_serving_matches_direct_forward() {
         batch_window_us: 200_000,
         queue_cap: 16,
         workers: 1,
+        cost: None,
     };
     let responses = serve_all(served.as_ref(), &serve_cfg, &inputs);
     let mut scratch = EngineScratch::new();

@@ -11,10 +11,11 @@ use winoq::engine::WinoEngine;
 use winoq::nn::layers::Conv2dCfg;
 use winoq::nn::tensor::Tensor;
 use winoq::serve::{
-    with_server, EngineModel, Rejected, Request, Response, ServeConfig, ServeQueue,
-    ServeStats,
+    with_server, with_shards, EngineModel, ModelRegistry, Rejected, Request, Response,
+    ServeConfig, ServeQueue, ServeStats, ShardSpec, SubmitOpts,
 };
 use winoq::testkit::prng_tensor;
+use winoq::tune::cost::TileCostModel;
 use winoq::wino::basis::Base;
 
 fn good_item(v: f32) -> Tensor {
@@ -41,12 +42,12 @@ fn submitters_racing_close_and_shape_rejection_account_for_every_request() {
             while let Some(batch) = q.next_batch(4, Duration::from_micros(200)) {
                 let bsz = batch.len();
                 for req in batch {
-                    let Request { input, enqueued, tx } = req;
-                    let _ = tx.send(Response {
+                    let Request { input, enqueued, tx, .. } = req;
+                    let _ = tx.send(Ok(Response {
                         output: input,
                         latency_us: enqueued.elapsed().as_micros() as u64,
                         batch_size: bsz,
-                    });
+                    }));
                 }
             }
         });
@@ -61,7 +62,8 @@ fn submitters_racing_close_and_shape_rejection_account_for_every_request() {
                         match q.submit(input) {
                             Ok(rx) => {
                                 match rx.recv() {
-                                    Ok(resp) => {
+                                    Ok(res) => {
+                                        let resp = res.expect("no cost model: nothing sheds");
                                         assert_eq!(resp.output.dims, vec![1, 2, 2]);
                                         completed.fetch_add(1, Ordering::Relaxed);
                                     }
@@ -176,6 +178,7 @@ fn with_server_under_mixed_load_completes_or_rejects_everything() {
         batch_window_us: 100,
         queue_cap: 8,
         workers: 2,
+        cost: None,
     };
     let stats = ServeStats::new();
     let completed = AtomicUsize::new(0);
@@ -197,7 +200,9 @@ fn with_server_under_mixed_load_completes_or_rejects_everything() {
                             };
                             match queue.submit(input) {
                                 Ok(rx) => {
-                                    rx.recv().expect("worker died mid-session");
+                                    rx.recv()
+                                        .expect("worker died mid-session")
+                                        .expect("no cost model: nothing sheds");
                                     completed.fetch_add(1, Ordering::Relaxed);
                                     break;
                                 }
@@ -222,4 +227,107 @@ fn with_server_under_mixed_load_completes_or_rejects_everything() {
     );
     assert!(rejected.load(Ordering::Relaxed) > 0);
     assert_eq!(stats.completed() as usize, completed.load(Ordering::Relaxed));
+}
+
+#[test]
+fn two_shard_weighted_admission_mixed_shapes_and_forced_shed() {
+    // The multi-model soak case: two registry-backed shards behind one
+    // weighted admission budget, mixed request geometries (the registry
+    // policy admits any 3×H×W ≥ 8), and a slice of hopeless deadlines
+    // that must shed with justification. Asserts per-model stats
+    // separation, exact accounting, and that the shape-geometry cache
+    // keys are namespaced per model (no cross-shard collisions).
+    use winoq::nn::{ConvMode, ResNetCfg};
+
+    let cfg_for = |base| ResNetCfg {
+        width_mult: 0.25,
+        num_classes: 10,
+        mode: ConvMode::Winograd { m: 4, base, quant: None },
+    };
+    let mut reg = ModelRegistry::new();
+    let model_a = reg.register_synthetic("a", cfg_for(Base::Legendre), 32, 7, 1).unwrap();
+    let model_b = reg.register_synthetic("b", cfg_for(Base::Chebyshev), 32, 9, 1).unwrap();
+    // A cost model expensive enough that a 1 µs deadline is always
+    // hopeless (fixed 50 µs ≫ 1 µs) while sane deadlines never shed.
+    let cost = Some(TileCostModel::new(50.0, 0.05));
+    let shard_cfg = ServeConfig {
+        max_batch: 4,
+        batch_window_us: 200,
+        queue_cap: 0, // ignored: the budget decides
+        workers: 1,
+        cost,
+    };
+    let specs = [
+        ShardSpec { name: "a", model: model_a.as_ref(), weight: 3, cfg: shard_cfg },
+        ShardSpec { name: "b", model: model_b.as_ref(), weight: 1, cfg: shard_cfg },
+    ];
+    let stats = [ServeStats::new(), ServeStats::new()];
+    let (mut ok_a, mut shed_a, mut ok_b, mut shed_b, mut rejected) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    with_shards(&specs, 8, &stats, |router| {
+        let shapes: [&[usize]; 2] = [&[3, 32, 32], &[3, 24, 48]];
+        let mut pending = Vec::new();
+        for j in 0..24usize {
+            let name = if j % 3 == 0 { "b" } else { "a" };
+            let hopeless = j % 6 == 5;
+            let opts = SubmitOpts {
+                deadline_us: if hopeless { Some(1) } else { Some(10_000_000) },
+                ..Default::default()
+            };
+            let x = prng_tensor(200 + j as u64, shapes[j % 2], 1.0);
+            match router.submit(name, x, opts) {
+                Ok(rx) => pending.push((name, hopeless, rx)),
+                Err(Rejected::Full) => rejected += 1,
+                Err(other) => panic!("unexpected rejection: {other}"),
+            }
+        }
+        for (name, hopeless, rx) in pending {
+            match rx.recv().expect("worker died") {
+                Ok(resp) => {
+                    assert!(!hopeless, "a 1 µs deadline can never be served in time");
+                    assert!(resp.output.data.iter().all(|v| v.is_finite()));
+                    if name == "a" {
+                        ok_a += 1;
+                    } else {
+                        ok_b += 1;
+                    }
+                }
+                Err(why) => {
+                    assert!(hopeless, "sane deadlines must not shed");
+                    assert!(
+                        why.decided_us + why.predicted_us > why.deadline_us,
+                        "shed without predicted-cost justification: {why:?}"
+                    );
+                    if name == "a" {
+                        shed_a += 1;
+                    } else {
+                        shed_b += 1;
+                    }
+                }
+            }
+        }
+    });
+    // Full accounting: every submission is exactly one of
+    // completed / rejected / shed, and the per-shard stats agree.
+    assert_eq!(ok_a + ok_b + shed_a + shed_b + rejected, 24);
+    assert!(shed_a + shed_b > 0, "the hopeless slice must shed");
+    assert_eq!(stats[0].completed(), ok_a, "shard a stats are isolated");
+    assert_eq!(stats[1].completed(), ok_b, "shard b stats are isolated");
+    assert_eq!(stats[0].report(1.0).shed, shed_a);
+    assert_eq!(stats[1].report(1.0).shed, shed_b);
+    // The shape-geometry cache is namespaced by model: both shards saw
+    // the same two H×W shapes, yet no key collides across shards.
+    let keys = reg.plans().shape_keys();
+    assert_eq!(keys.len(), 4, "two models × two shapes: {keys:?}");
+    for shape in [(32usize, 32usize), (24, 48)] {
+        let owners: Vec<&str> = keys
+            .iter()
+            .filter(|(_, h, w)| (*h, *w) == shape)
+            .map(|(m, _, _)| m.as_str())
+            .collect();
+        assert_eq!(
+            owners,
+            vec!["a", "b"],
+            "shape {shape:?} must have one namespaced key per shard"
+        );
+    }
 }

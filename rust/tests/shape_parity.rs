@@ -1,0 +1,143 @@
+//! Arbitrary-H×W parity (ISSUE 6): the serving stack no longer assumes
+//! square power-of-two images, so this suite pins the generalized tile
+//! geometry against the f64 direct-convolution oracle on non-square,
+//! non-divisible-by-`m` shapes — including shapes whose last tile row or
+//! column covers a single output pixel.
+//!
+//! * **Float engines**: `WinoConv2d::forward` must match
+//!   [`direct_conv_f64`](winoq::tune::cost::direct_conv_f64) at the
+//!   existing float tolerance (`rel_l2 < 1e-3`, in practice ~1e-6) for
+//!   every base × `F(2,3)`/`F(4,3)`.
+//! * **Integer engines**: the lowered `IntWinoEngine` must stay within
+//!   quantization error of the same oracle on the same shapes, and the
+//!   serving dispatch (`forward`) must be the integer engine bit-for-bit.
+//! * **Tile-grid walk**: `ResNet18::wino_tiles_per_shape` counts the
+//!   exact per-stage grids for odd and non-square inputs, and agrees
+//!   with the square `wino_tiles_per_item` on the legacy 32×32 path.
+//!
+//! The 32×32 serving path itself stays bit-identical to pre-PR behavior
+//! — that contract is pinned separately in `serve_parity.rs`, which this
+//! PR leaves asserting the same bits.
+
+use winoq::nn::layers::Conv2dCfg;
+use winoq::nn::winolayer::WinoConv2d;
+use winoq::nn::{ConvMode, ResNetCfg};
+use winoq::quant::QuantConfig;
+use winoq::serve::ModelRegistry;
+use winoq::testkit::prng_tensor;
+use winoq::tune::cost::{direct_conv_f64, rel_l2};
+use winoq::wino::basis::Base;
+
+/// Non-square / non-divisible-by-`m` shape sweep. With `m = 4`, 9 and 13
+/// leave a 1-pixel edge tile (9 = 2·4 + 1, 13 = 3·4 + 1); 5×7 is smaller
+/// than two tiles in one axis; 12×20 is a clean multiple on both axes to
+/// keep one full-grid case in the mix.
+const SHAPES: [(usize, usize); 5] = [(9, 13), (13, 9), (10, 10), (5, 7), (12, 20)];
+
+#[test]
+fn float_forward_matches_oracle_on_arbitrary_hw() {
+    let conv = Conv2dCfg { stride: 1, padding: 1 };
+    for (si, &(h, w)) in SHAPES.iter().enumerate() {
+        let x = prng_tensor(900 + si as u64, &[2, 3, h, w], 1.0);
+        let wt = prng_tensor(950 + si as u64, &[4, 3, 3, 3], 0.4);
+        let oracle = direct_conv_f64(&x, &wt, 1);
+        for m in [2usize, 4] {
+            for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+                let layer = WinoConv2d::new(m, &wt, base);
+                let got = layer.forward(&x, conv);
+                assert_eq!(
+                    got.dims,
+                    vec![2, 4, h, w],
+                    "{h}x{w} m={m} {base:?}: same-padding shape broke"
+                );
+                let err = rel_l2(&got.data, &oracle);
+                assert!(
+                    err < 1e-3,
+                    "{h}x{w} m={m} {base:?}: float rel_l2 {err:e} vs f64 oracle"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn int_engine_matches_oracle_on_arbitrary_hw_within_quant_error() {
+    let conv = Conv2dCfg { stride: 1, padding: 1 };
+    for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+        for (si, &(h, w)) in SHAPES.iter().enumerate() {
+            let x = prng_tensor(700 + si as u64, &[2, 3, h, w], 1.0);
+            let wt = prng_tensor(750 + si as u64, &[4, 3, 3, 3], 0.4);
+            let oracle = direct_conv_f64(&x, &wt, 1);
+            for base in [Base::Canonical, Base::Legendre, Base::Chebyshev] {
+                let mut layer = WinoConv2d::new(4, &wt, base);
+                layer.quantize(qcfg, &x, 1);
+                let ie = layer
+                    .int_engine()
+                    .expect("paper configs fit the i16 code panels");
+                // Serving dispatch IS the integer engine, on any shape.
+                let got = layer.forward(&x, conv);
+                assert_eq!(got.dims, vec![2, 4, h, w]);
+                assert_eq!(
+                    got.data,
+                    ie.forward(&x, conv).data,
+                    "{h}x{w} {base:?} {}: forward did not dispatch to the int engine",
+                    qcfg.label()
+                );
+                // Quantization error bound vs the f64 oracle. The bound is
+                // a sanity cap, not a precision claim: canonical F(4,3)
+                // amplifies transform-domain quantization noise (the
+                // paper's motivation), so it gets the loose cap; the
+                // orthogonal bases must stay well-conditioned.
+                let err = rel_l2(&got.data, &oracle);
+                let cap = match base {
+                    Base::Canonical => 4.0,
+                    _ => 1.0,
+                };
+                assert!(
+                    err < cap,
+                    "{h}x{w} {base:?} {}: int rel_l2 {err:e} beyond quant cap {cap}",
+                    qcfg.label()
+                );
+                assert!(
+                    err > 0.0,
+                    "{h}x{w} {base:?} {}: 8-bit path suspiciously exact",
+                    qcfg.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn resnet_tile_walk_counts_arbitrary_shapes_exactly() {
+    // A uniform F(4,3) synthetic ResNet18 has 14 stride-1 wino layers:
+    // 5 at full resolution (stem + stage0), then 3 per downsampled stage.
+    let mut reg = ModelRegistry::new();
+    let cfg = ResNetCfg {
+        width_mult: 0.25,
+        num_classes: 10,
+        mode: ConvMode::Winograd { m: 4, base: Base::Legendre, quant: None },
+    };
+    let served = reg.register_synthetic("rn", cfg, 32, 7, 4).unwrap();
+    let net = &served.net;
+    // Legacy square path unchanged: per-item == per-shape on 32×32.
+    assert_eq!(net.wino_tiles_per_item(32), 383);
+    assert_eq!(net.wino_tiles_per_shape(32, 32), 383);
+    // Odd square: 33 → ⌈33/4⌉² = 81 tiles/layer at full res, then the
+    // stride-2 chain 33 → 17 → 9 → 5 gives 25, 9, 4 tiles/layer:
+    // 5·81 + 3·25 + 3·9 + 3·4 = 519 (every stage ends in 1-px edge tiles).
+    assert_eq!(net.wino_tiles_per_shape(33, 33), 519);
+    // Non-square: the walk tracks h and w independently —
+    // 5·(9·5) + 3·(5·3) + 3·(3·2) + 3·(2·1) = 294.
+    assert_eq!(net.wino_tiles_per_shape(33, 17), 294);
+    // Transpose symmetry: every unit is square, so swapping h/w cannot
+    // change the tile count.
+    assert_eq!(
+        net.wino_tiles_per_shape(24, 48),
+        net.wino_tiles_per_shape(48, 24)
+    );
+    assert_eq!(
+        net.wino_tiles_per_shape(9, 13),
+        net.wino_tiles_per_shape(13, 9)
+    );
+}

@@ -132,6 +132,45 @@ echo "tune smoke OK ($PLAN_COMPLETED requests served from the NetPlan)"
 rm -f "$PLAN_JSON"
 rm -rf "$TUNE_DIR"
 
+# Soak smoke: the deterministic multi-model stress/soak simulation must
+# complete, and its BENCH_serve_soak.json must be non-degenerate
+# (p99.9 > 0), meet the SLO at the default operating point
+# (deadline-miss-rate < 5%), and reconcile exactly
+# (submitted = completed + rejected + shed).
+echo "==> winoq serve --soak (multi-model deadline soak) + BENCH_serve_soak.json"
+SOAK_JSON="$SCRIPT_DIR/../BENCH_serve_soak.json"
+./target/release/winoq serve --soak --requests 256 --models 2 \
+  --deadline-us 20000 --soak-json "$SOAK_JSON"
+if [ ! -s "$SOAK_JSON" ] || ! grep -q '"bench": "serve_soak"' "$SOAK_JSON"; then
+  echo "soak smoke FAILED: BENCH_serve_soak.json missing or malformed" >&2
+  exit 1
+fi
+P999="$(sed -n 's/.*"p999": \([0-9.][0-9.]*\).*/\1/p' "$SOAK_JSON" | head -n 1)"
+if [ -z "$P999" ] || ! echo "$P999" | awk '{ exit !($1 > 0) }'; then
+  echo "soak smoke FAILED: degenerate p99.9 latency ($P999)" >&2
+  cat "$SOAK_JSON" >&2
+  exit 1
+fi
+MISS="$(sed -n 's/.*"deadline_miss_rate": \([0-9.][0-9.]*\).*/\1/p' "$SOAK_JSON")"
+if [ -z "$MISS" ] || ! echo "$MISS" | awk '{ exit !($1 < 0.05) }'; then
+  echo "soak smoke FAILED: deadline miss rate $MISS >= 5%" >&2
+  cat "$SOAK_JSON" >&2
+  exit 1
+fi
+TOTALS="$(sed -n 's/.*"totals": {"submitted": \([0-9]*\), "completed": \([0-9]*\), "rejected": \([0-9]*\), "shed": \([0-9]*\).*/\1 \2 \3 \4/p' "$SOAK_JSON")"
+if [ -z "$TOTALS" ] || ! echo "$TOTALS" | awk '{ exit !($1 == $2 + $3 + $4 && $1 == 256) }'; then
+  echo "soak smoke FAILED: totals do not reconcile ($TOTALS)" >&2
+  cat "$SOAK_JSON" >&2
+  exit 1
+fi
+echo "soak smoke OK (totals: $TOTALS, miss rate: $MISS, p99.9: ${P999}us)"
+
+# Scale-out serving regression nets, run explicitly like the numeric
+# ones: the deadline-scheduler property suite, the arbitrary-H×W parity
+# suite, and the multi-shard stress tests.
+echo "==> serve_deadline + shape_parity + serve_stress"
+cargo test -q --test serve_deadline --test shape_parity --test serve_stress
+
 "$SCRIPT_DIR/lint.sh"
 
 echo "CI OK"
