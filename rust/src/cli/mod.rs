@@ -86,6 +86,22 @@ pub const VALUE_FLAGS: &[FlagSpec] = &[
         metavar: "PATH",
         help: "bench: time the tiled panel GEMM vs the naive oracles (BENCH_gemm.json)",
     },
+    // observability flags (see `winoq serve` / `winoq bench`)
+    FlagSpec {
+        name: "--trace-json",
+        metavar: "PATH",
+        help: "serve/soak: write per-request trace events as JSON lines here",
+    },
+    FlagSpec {
+        name: "--metrics-json",
+        metavar: "PATH",
+        help: "serve: write the metrics-registry snapshot as JSON lines here",
+    },
+    FlagSpec {
+        name: "--health-json",
+        metavar: "PATH",
+        help: "bench: write the numeric-health saturation report (BENCH_health.json)",
+    },
     // tune flags (see `winoq tune`); --plan is shared with `winoq serve`
     FlagSpec {
         name: "--plan",
@@ -274,11 +290,13 @@ COMMANDS:
                     [--workers W] [--width-mult F] [--m 4] [--base legendre]
                     [--quant w8|w8_h9|none] [--artifact TAG] [--checkpoint P]
                     [--plan NETPLAN.json] [--stats-json PATH] [--bench-json PATH]
-                    [--int-bench-json PATH]
+                    [--int-bench-json PATH] [--trace-json PATH]
+                    [--metrics-json PATH]
                   deterministic multi-model stress/soak simulation
                     --soak [--requests N] [--models N] [--deadline-us US]
                     [--seed S] [--queue-cap N] [--max-batch B]
                     [--batch-window-us US] [--workers W] [--soak-json PATH]
+                    [--trace-json PATH]
   tune            per-layer base/tile/bit-width autotuner → NetPlan JSON
                     --synthetic [--grid full|tiny] [--layers N]
                     [--objective error|throughput|balanced] [--max-err E]
@@ -287,6 +305,8 @@ COMMANDS:
   bench           in-binary micro-benchmarks (no cargo-bench recompile)
                     --gemm-json BENCH_gemm.json [--m 4]
                     (tiled panel GEMM vs naive oracles, float + int)
+                    --health-json BENCH_health.json
+                    (numeric-health saturation counters on adversarial input)
   help            this message
 ";
 
@@ -426,6 +446,27 @@ mod tests {
         assert!(Args::parse(&sv(&["bench", "--gem-json", "x"])).is_err(), "typo rejected");
         assert!(help().contains("--gemm-json"));
         assert!(help().contains("bench "), "help must document the bench command");
+    }
+
+    #[test]
+    fn observability_flags_registered() {
+        let a = Args::parse(&sv(&[
+            "serve",
+            "--synthetic",
+            "--trace-json",
+            "trace.jsonl",
+            "--metrics-json",
+            "metrics.jsonl",
+        ]))
+        .unwrap();
+        assert_eq!(a.flag("--trace-json"), Some("trace.jsonl"));
+        assert_eq!(a.flag("--metrics-json"), Some("metrics.jsonl"));
+        let b = Args::parse(&sv(&["bench", "--health-json", "BENCH_health.json"])).unwrap();
+        assert_eq!(b.flag("--health-json"), Some("BENCH_health.json"));
+        assert!(Args::parse(&sv(&["serve", "--trace-json"])).is_err(), "value required");
+        for f in ["--trace-json", "--metrics-json", "--health-json"] {
+            assert!(help().contains(f), "help must document {f}");
+        }
     }
 
     #[test]

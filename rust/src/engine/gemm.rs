@@ -348,6 +348,26 @@ pub fn panel_gemm_requant_i16(
     had_codes: &mut [i32],
     packs: &mut [Vec<i16>],
 ) {
+    let sat = std::sync::atomic::AtomicU64::new(0);
+    panel_gemm_requant_i16_counted(pw, xt_codes, t_total, rq, had_codes, packs, &sat);
+}
+
+/// [`panel_gemm_requant_i16`] with numeric-health accounting: `sat`
+/// accumulates how many output codes the requant epilogue clamped
+/// (via [`Requant::apply_sat`] — value path bit-identical to
+/// [`Requant::apply`]). Each `(f, T-block)` work item counts locally
+/// and folds in with **one** relaxed `fetch_add`, so the counter costs
+/// one add per output element plus one atomic per work item — invisible
+/// next to the `C`-deep reduction it rides on.
+pub fn panel_gemm_requant_i16_counted(
+    pw: &PackedI16,
+    xt_codes: &[i16],
+    t_total: usize,
+    rq: &Requant,
+    had_codes: &mut [i32],
+    packs: &mut [Vec<i16>],
+    sat: &std::sync::atomic::AtomicU64,
+) {
     let (nn, k, c) = (pw.nn, pw.k, pw.c);
     assert_eq!(xt_codes.len(), c * nn * t_total, "xt panel not [C][N²][T]");
     assert_eq!(had_codes.len(), nn * k * t_total, "had panel not [N²][K][T]");
@@ -363,6 +383,7 @@ pub fn panel_gemm_requant_i16(
         pack_x_block(xt_codes, nn, c, t_total, f, tb..te, buf);
         let wpan = pw.panel(f);
         let njb = (te - tb).div_ceil(NR);
+        let mut local_sat = 0u64;
         for b in 0..k.div_ceil(MR) {
             let a = &wpan[b * c * MR..][..c * MR];
             let rows = (k - b * MR).min(MR);
@@ -391,10 +412,15 @@ pub fn panel_gemm_requant_i16(
                         )
                     };
                     for (dst, &v) in row.iter_mut().zip(acc_row) {
-                        *dst = rq.apply(v);
+                        let (code, clipped) = rq.apply_sat(v);
+                        *dst = code;
+                        local_sat += u64::from(clipped);
                     }
                 }
             }
+        }
+        if local_sat > 0 {
+            sat.fetch_add(local_sat, std::sync::atomic::Ordering::Relaxed);
         }
     });
 }
@@ -664,6 +690,52 @@ mod tests {
             assert!(section.get("ratio_tiled_vs_naive").is_some(), "{json}");
             assert!(section.get("tiled_tiles_per_sec").is_some(), "{json}");
         }
+    }
+
+    #[test]
+    fn counted_kernel_matches_and_counts_exact_clips() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let mut rng = Prng::new(0x5A7);
+        let (c, k, t, nn) = (3usize, 5usize, 13usize, 4usize);
+        let wt: Vec<i16> =
+            (0..nn * k * c).map(|_| (rng.next_u64() % 255) as i16 - 127).collect();
+        let xt: Vec<i16> =
+            (0..c * nn * t).map(|_| (rng.next_u64() % 511) as i16 - 255).collect();
+        let pw = Packed::pack(nn, k, c, 0i16, |f, ki, ci| wt[(f * k + ki) * c + ci]);
+        // A coarse requant scale so a good fraction of accumulators clip.
+        let hq = Quantizer::with_scale(8, 1.0);
+        let rq = hq.requant(0.01);
+        let mut plain = vec![0i32; nn * k * t];
+        panel_gemm_requant_i16(&pw, &xt, t, &rq, &mut plain, &mut [Vec::new()]);
+        let sat = AtomicU64::new(0);
+        let mut counted = vec![0i32; nn * k * t];
+        panel_gemm_requant_i16_counted(
+            &pw,
+            &xt,
+            t,
+            &rq,
+            &mut counted,
+            &mut [Vec::new()],
+            &sat,
+        );
+        assert_eq!(plain, counted, "counting must not perturb output codes");
+        // Oracle count straight from a scalar re-accumulation.
+        let mut want = 0u64;
+        for f in 0..nn {
+            for ki in 0..k {
+                for ti in 0..t {
+                    let mut acc = 0i64;
+                    for ci in 0..c {
+                        let a = wt[(f * k + ki) * c + ci] as i32;
+                        let b = xt[(ci * nn + f) * t + ti] as i32;
+                        acc += (a * b) as i64;
+                    }
+                    want += u64::from(rq.apply_sat(acc).1);
+                }
+            }
+        }
+        assert!(want > 0, "fixture must actually clip");
+        assert_eq!(sat.load(Ordering::Relaxed), want);
     }
 
     #[test]

@@ -40,6 +40,7 @@
 //! [`PlanCache`](crate::serve::plan::PlanCache), so quantized models are
 //! served without ever dequantizing their weights.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -52,6 +53,7 @@ use crate::nn::layers::{pad_hw, Conv2dCfg};
 use crate::nn::tensor::Tensor;
 use crate::nn::winolayer::{LayerScales, WinoConv2d};
 use crate::quant::scheme::{QuantConfig, Quantizer, Requant};
+use crate::wino::basis::Base;
 use crate::wino::matrix::Mat;
 use crate::wino::transform::WinoF;
 
@@ -170,6 +172,68 @@ impl IntWeightBank {
 }
 
 pub use super::gemm::PanelDims;
+
+/// Cumulative saturation counters for one engine's quantize/clamp sites
+/// — the numeric-health telemetry of the observability layer. All
+/// counts are of **clamp hits**: the rounded code fell outside the
+/// stage quantizer's `[−qmax, qmax]` and was clipped (the value paths
+/// are bit-identical to the unflagged quantizers — see
+/// [`Quantizer::quantize_sat`] / [`Requant::apply_sat`]). Counters are
+/// relaxed atomics folded once per parallel work item, so the hot loops
+/// pay one local `u64` add per element and one `fetch_add` per chunk.
+#[derive(Default, Debug)]
+pub struct EngineHealth {
+    /// Stage 1: input activation cast clips (`input` fake-quant) —
+    /// activations outside the calibrated input range.
+    pub input_sat: AtomicU64,
+    /// Stage 1: transformed-input i16 code clips (`input_t` quantize) —
+    /// transformed tiles outside the calibrated transform range.
+    pub input_t_sat: AtomicU64,
+    /// Stage 2: fused requant epilogue clips — the 8/9-bit Hadamard
+    /// clamp hit-rate numerator (the paper's headline knob).
+    pub hadamard_sat: AtomicU64,
+    /// Stage 3: output cast clips (`output` fake-quant), counted over
+    /// every computed tile value (edge-clamped positions included).
+    pub output_sat: AtomicU64,
+}
+
+/// A plain-integer copy of [`EngineHealth`] at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthSnapshot {
+    pub input_sat: u64,
+    pub input_t_sat: u64,
+    pub hadamard_sat: u64,
+    pub output_sat: u64,
+}
+
+impl HealthSnapshot {
+    /// Total clips across all sites.
+    pub fn total(&self) -> u64 {
+        self.input_sat + self.input_t_sat + self.hadamard_sat + self.output_sat
+    }
+}
+
+impl EngineHealth {
+    /// Read the counters without resetting.
+    pub fn snapshot(&self) -> HealthSnapshot {
+        HealthSnapshot {
+            input_sat: self.input_sat.load(Ordering::Relaxed),
+            input_t_sat: self.input_t_sat.load(Ordering::Relaxed),
+            hadamard_sat: self.hadamard_sat.load(Ordering::Relaxed),
+            output_sat: self.output_sat.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Read and reset — what a serving worker drains per stats window.
+    pub fn take(&self) -> HealthSnapshot {
+        HealthSnapshot {
+            input_sat: self.input_sat.swap(0, Ordering::Relaxed),
+            input_t_sat: self.input_t_sat.swap(0, Ordering::Relaxed),
+            hadamard_sat: self.hadamard_sat.swap(0, Ordering::Relaxed),
+            output_sat: self.output_sat.swap(0, Ordering::Relaxed),
+        }
+    }
+}
 
 /// Per-frequency integer panel multiply with fused requantization — the
 /// integer engine's stage 2, exposed standalone for the property tests.
@@ -297,6 +361,10 @@ pub struct IntWinoEngine {
     /// value of one integer Hadamard product unit) — hoisted once at
     /// lowering time.
     rq: Requant,
+    /// Numeric-health saturation counters, accumulated across every
+    /// pass (see [`EngineHealth`]; drain with
+    /// [`take_health`](Self::take_health)).
+    health: EngineHealth,
 }
 
 impl IntWinoEngine {
@@ -323,12 +391,33 @@ impl IntWinoEngine {
         );
         let prod_scale = scales.input_t.scale * scales.weights_t.scale;
         let rq = scales.hadamard.requant(prod_scale);
-        IntWinoEngine { k: bank.k, c: bank.c, wf, cfg, scales, bank, rq }
+        IntWinoEngine {
+            k: bank.k,
+            c: bank.c,
+            wf,
+            cfg,
+            scales,
+            bank,
+            rq,
+            health: EngineHealth::default(),
+        }
     }
 
     /// The shared weight-code bank (for cache-sharing assertions).
     pub fn bank(&self) -> &Arc<IntWeightBank> {
         &self.bank
+    }
+
+    /// Cumulative saturation counters since construction or the last
+    /// [`take_health`](Self::take_health).
+    pub fn health(&self) -> HealthSnapshot {
+        self.health.snapshot()
+    }
+
+    /// Drain the saturation counters (read + reset) — the per-window
+    /// numeric-health export for serving metrics.
+    pub fn take_health(&self) -> HealthSnapshot {
+        self.health.take()
     }
 
     /// Tiles one forward over `x_dims` processes (same grid as the float
@@ -396,28 +485,49 @@ impl IntWinoEngine {
         let EngineScratch { xt_codes, had_codes, out, pack_i16, .. } = scratch;
         let wf = &self.wf;
         let sc = &self.scales;
+        let health = &self.health;
 
         // Stage 1 — quantize-on-transform, parallel over channels. The
         // input cast runs in f64 (the integer path's oracle is QWino's
         // f64 pipeline; no f32 detour as in the fake-quant engine), then
         // the transformed tile is quantized straight into the i16 panel.
+        // Both cast sites count their clamp hits (values bit-identical
+        // to the unflagged quantizers), folded per channel chunk.
         let t0 = Instant::now();
         parallel::par_chunks_mut(&mut xt_codes[..], nn * t_total, |ci, chunk| {
+            let mut in_sat = 0u64;
+            let mut int_sat = 0u64;
             for ni in 0..grid.bn {
                 for th in 0..grid.tiles_h {
                     for tw in 0..grid.tiles_w {
                         let t = grid.tile_index(ni, th, tw);
                         let (h0, w0) = grid.tile_origin(th, tw);
                         let tile = layout::extract_tile(&x, ni, ci, h0, w0, n);
-                        let faked =
-                            Mat::from_vec(n, n, sc.input.fake_all(tile.data()));
+                        let faked_vals: Vec<f64> = tile
+                            .data()
+                            .iter()
+                            .map(|&v| {
+                                let (code, clipped) = sc.input.quantize_sat(v);
+                                in_sat += u64::from(clipped);
+                                sc.input.dequantize(code)
+                            })
+                            .collect();
+                        let faked = Mat::from_vec(n, n, faked_vals);
                         let xt_m = wf.transform_input(&faked);
                         let d = xt_m.data();
                         for f in 0..nn {
-                            chunk[f * t_total + t] = sc.input_t.quantize(d[f]) as i16;
+                            let (code, clipped) = sc.input_t.quantize_sat(d[f]);
+                            int_sat += u64::from(clipped);
+                            chunk[f * t_total + t] = code as i16;
                         }
                     }
                 }
+            }
+            if in_sat > 0 {
+                health.input_sat.fetch_add(in_sat, Ordering::Relaxed);
+            }
+            if int_sat > 0 {
+                health.input_t_sat.fetch_add(int_sat, Ordering::Relaxed);
             }
         });
 
@@ -428,13 +538,14 @@ impl IntWinoEngine {
         // ([`gemm::panel_gemm_requant_i16`]); i64 accumulation is exact,
         // so tiling cannot perturb the codes.
         let t0 = Instant::now();
-        gemm::panel_gemm_requant_i16(
+        gemm::panel_gemm_requant_i16_counted(
             &self.bank.packed,
             &xt_codes[..],
             t_total,
             &self.rq,
             &mut had_codes[..],
             &mut pack_i16[..workers],
+            &health.hadamard_sat,
         );
         let t_hadamard = gemm::ns_since(t0);
 
@@ -446,6 +557,7 @@ impl IntWinoEngine {
             let ni = plane / self.k;
             let ki = plane % self.k;
             let mut acc = Mat::zeros(n, n);
+            let mut out_sat = 0u64;
             for th in 0..grid.tiles_h {
                 for tw in 0..grid.tiles_w {
                     let t = grid.tile_index(ni, th, tw);
@@ -454,7 +566,16 @@ impl IntWinoEngine {
                             sc.hadamard.dequantize(had_ro[(f * self.k + ki) * t_total + t]);
                     }
                     let o = wf.transform_output(&acc);
-                    let o = Mat::from_vec(m, m, sc.output.fake_all(o.data()));
+                    let faked_out: Vec<f64> = o
+                        .data()
+                        .iter()
+                        .map(|&v| {
+                            let (code, clipped) = sc.output.quantize_sat(v);
+                            out_sat += u64::from(clipped);
+                            sc.output.dequantize(code)
+                        })
+                        .collect();
+                    let o = Mat::from_vec(m, m, faked_out);
                     for i in 0..m {
                         let oi = th * m + i;
                         if oi >= grid.oh {
@@ -469,6 +590,9 @@ impl IntWinoEngine {
                         }
                     }
                 }
+            }
+            if out_sat > 0 {
+                health.output_sat.fetch_add(out_sat, Ordering::Relaxed);
             }
         });
         scratch.add_stage_ns([t_transform, t_hadamard, gemm::ns_since(t0)]);
@@ -541,12 +665,92 @@ pub fn int_vs_float_bench_json(
     (json, ratio)
 }
 
+/// One numeric-health fixture layer: filter 0 carries tiny constant
+/// weights (`1e-3`), filter 1 large ones (`1.0`), so the dry-run
+/// calibration — which ranges the Hadamard/output quantizers on
+/// **filter 0 only** — produces scales that filter 1's serving-time
+/// accumulators exceed by ~1000×: clipping is certain, not
+/// distribution-dependent. Calibration input is a constant `0.5`
+/// tensor; the adversarial input is constant `1.0` — exactly 2× the
+/// calibrated input range, so **every** activation clips at the input
+/// cast (and clamps back to the calibrated max, keeping the rest of the
+/// pipeline well-defined).
+fn health_fixture(
+    base: Base,
+    m: usize,
+    qcfg: QuantConfig,
+) -> (WinoConv2d, Tensor, Tensor) {
+    let (k, c, h) = (2usize, 3usize, 10usize);
+    let mut wdata = vec![1.0f32; k * c * 9];
+    for v in &mut wdata[..c * 9] {
+        *v = 1e-3;
+    }
+    let w = Tensor::from_vec(&[k, c, 3, 3], wdata);
+    let x_cal = Tensor::from_vec(&[1, c, h, h], vec![0.5; c * h * h]);
+    let x_adv = Tensor::from_vec(&[1, c, h, h], vec![1.0; c * h * h]);
+    let mut layer = WinoConv2d::new(m, &w, base);
+    layer.quantize(qcfg, &x_cal, 0);
+    (layer, x_cal, x_adv)
+}
+
+/// The `winoq bench --health-json` emitter: run the near-clamp fixture
+/// ([`health_fixture`]) for both paper quant configs over two layer
+/// shapes and report every saturation counter per
+/// `(layer, base, m, bits)` — a calibration-input baseline next to the
+/// adversarial run, with the config's Hadamard clamp bound
+/// (`hadamard_qmax`: 127 for `w8`, 255 for `w8_h9`) so the two clip
+/// profiles are distinguishable in the emitted document. Deterministic:
+/// the fixture is constant tensors and the integer pipeline is exact,
+/// so counts are reproducible bit-for-bit.
+pub fn numeric_health_json() -> String {
+    use crate::obs::json::{JsonArr, JsonObj};
+    let mut cases = JsonArr::new();
+    for (lname, base, m) in
+        [("conv_a", Base::Legendre, 4usize), ("conv_b", Base::Chebyshev, 2)]
+    {
+        for (qname, qcfg) in
+            [("w8", QuantConfig::w8()), ("w8_h9", QuantConfig::w8_h9())]
+        {
+            let (layer, x_cal, x_adv) = health_fixture(base, m, qcfg);
+            let ie = layer.int_engine().expect("8-bit configs fit the int engine");
+            let conv = Conv2dCfg { stride: 1, padding: 0 };
+            let tiles = ie.tile_count_for(&x_cal.dims, 0);
+            let _ = ie.forward(&x_cal, conv);
+            let calib = ie.take_health();
+            let _ = ie.forward(&x_adv, conv);
+            let adv = ie.take_health();
+            cases = cases.item(
+                &JsonObj::new()
+                    .str("layer", lname)
+                    .str("base", base.name())
+                    .u64("m", m as u64)
+                    .str("quant", qname)
+                    .u64("hadamard_bits", qcfg.hadamard_bits as u64)
+                    .u64("hadamard_qmax", Quantizer::qmax(qcfg.hadamard_bits) as u64)
+                    .u64("tiles", tiles as u64)
+                    .u64("calib_input_sat", calib.input_sat)
+                    .u64("calib_input_t_sat", calib.input_t_sat)
+                    .u64("calib_hadamard_sat", calib.hadamard_sat)
+                    .u64("calib_output_sat", calib.output_sat)
+                    .u64("adv_input_sat", adv.input_sat)
+                    .u64("adv_input_t_sat", adv.input_t_sat)
+                    .u64("adv_hadamard_sat", adv.hadamard_sat)
+                    .u64("adv_output_sat", adv.output_sat)
+                    .finish(),
+            );
+        }
+    }
+    JsonObj::new()
+        .str("bench", "numeric_health")
+        .raw("cases", &cases.finish())
+        .finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::scheme::QuantConfig;
     use crate::testkit::{forall, prng_tensor};
-    use crate::wino::basis::Base;
     use crate::wino::error::Prng;
 
     fn quantized_layer(seed: u64, qcfg: QuantConfig, base: Base, m: usize) -> (WinoConv2d, Tensor) {
@@ -867,5 +1071,93 @@ mod tests {
         // The emitted document is valid JSON for the in-crate reader.
         let doc = crate::tune::json::parse(&json).unwrap();
         assert!(doc.get("int").unwrap().get("tiles_per_sec").is_some());
+    }
+
+    /// The numeric-health fixture clips where the construction says it
+    /// must — and *only* there on the calibration input.
+    ///
+    /// * Calibration pass: the input quantizer was ranged on exactly
+    ///   this tensor (100th percentile), so `|x| = maxabs` round-trips
+    ///   to `qmax` without exceeding it — zero input clips.
+    /// * Adversarial pass (constant `2·maxabs`): every element
+    ///   quantizes to `round(2·qmax) > qmax`, so the input-saturation
+    ///   count equals the full panel volume `tiles · C · n²` exactly.
+    /// * Filter 1's weights are 1000× the filter-0 range the Hadamard
+    ///   requantizer was calibrated on, so its integer accumulators
+    ///   clip with certainty in every config.
+    #[test]
+    fn health_counters_fire_exactly_where_the_fixture_guarantees() {
+        for (base, m) in [(Base::Legendre, 4usize), (Base::Chebyshev, 2)] {
+            for qcfg in [QuantConfig::w8(), QuantConfig::w8_h9()] {
+                let (layer, x_cal, x_adv) = health_fixture(base, m, qcfg);
+                let ie = layer.int_engine().unwrap();
+                let conv = Conv2dCfg { stride: 1, padding: 0 };
+                let n = m + 2; // r = 3 throughout the fixture
+                let tiles = ie.tile_count_for(&x_cal.dims, 0);
+
+                let _ = ie.forward(&x_cal, conv);
+                let calib = ie.take_health();
+                assert_eq!(
+                    calib.input_sat, 0,
+                    "input quantizer was calibrated on this exact tensor (m={m})"
+                );
+
+                let _ = ie.forward(&x_adv, conv);
+                let adv = ie.take_health();
+                let panel = (tiles * 3 * n * n) as u64;
+                assert_eq!(
+                    adv.input_sat, panel,
+                    "2x-range input must clip every panel element (m={m})"
+                );
+                assert!(
+                    adv.hadamard_sat > 0,
+                    "filter 1 is 1000x the calibrated Hadamard range \
+                     (m={m}, h_bits={})",
+                    qcfg.hadamard_bits
+                );
+            }
+        }
+    }
+
+    /// `take_health` drains: a second read is all-zero, and a clean
+    /// (calibration-input) pass after an adversarial one stays clean.
+    #[test]
+    fn take_health_drains_counters() {
+        let (layer, x_cal, x_adv) = health_fixture(Base::Legendre, 4, QuantConfig::w8());
+        let ie = layer.int_engine().unwrap();
+        let conv = Conv2dCfg { stride: 1, padding: 0 };
+        let _ = ie.forward(&x_adv, conv);
+        assert!(ie.health().total() > 0);
+        assert!(ie.take_health().total() > 0);
+        assert_eq!(ie.take_health(), HealthSnapshot::default());
+        let _ = ie.forward(&x_cal, conv);
+        assert_eq!(ie.take_health().input_sat, 0);
+    }
+
+    /// The `--health-json` document parses, covers every
+    /// `(layer, quant)` case, reports nonzero adversarial Hadamard
+    /// saturation in all of them, and distinguishes the `w8` vs `w8_h9`
+    /// clip profiles by their clamp bound (`hadamard_qmax` 127 vs 255).
+    #[test]
+    fn numeric_health_json_is_complete_and_parses() {
+        let json = numeric_health_json();
+        let doc = crate::tune::json::parse(&json).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "numeric_health");
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 4);
+        let mut qmaxes = std::collections::BTreeSet::new();
+        for case in cases {
+            let quant = case.get("quant").unwrap().as_str().unwrap().to_string();
+            let qmax = case.get("hadamard_qmax").unwrap().as_u64().unwrap();
+            assert_eq!(qmax, if quant == "w8_h9" { 255 } else { 127 });
+            qmaxes.insert(qmax);
+            assert!(
+                case.get("adv_hadamard_sat").unwrap().as_u64().unwrap() > 0,
+                "case {quant} reported no Hadamard clipping"
+            );
+            assert_eq!(case.get("calib_input_sat").unwrap().as_u64().unwrap(), 0);
+            assert!(case.get("adv_input_sat").unwrap().as_u64().unwrap() > 0);
+        }
+        assert_eq!(qmaxes.len(), 2, "w8 and w8_h9 profiles must differ");
     }
 }

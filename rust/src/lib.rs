@@ -17,6 +17,11 @@
 //! * [`serve`] — micro-batching inference serving: bounded request
 //!   queue, model registry, transform-plan cache, latency stats (the
 //!   `winoq serve` subsystem).
+//! * [`obs`] — the unified observability layer: process-wide metrics
+//!   registry (counters/gauges/log-bucketed histograms), request-span
+//!   tracing with exact accounting, numeric-health surfacing, and the
+//!   one shared JSON writer every `BENCH_*.json` emitter goes through.
+//!   (Distinct from [`metrics`], the training-step CSV logger.)
 //! * [`tune`] — the per-layer autotuner: sweeps base × tile size ×
 //!   Hadamard bit width per conv layer, selects winners under an
 //!   accuracy budget, and emits deployable [`tune::NetPlan`] JSON
@@ -40,6 +45,7 @@ pub mod data;
 pub mod engine;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -250,9 +250,13 @@ fn cmd_error_analysis(args: &Args) -> Result<()> {
 /// build — there is no socket listener; embedders drive
 /// `serve::ServeQueue` directly).
 fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::Arc;
     use winoq::data::synthcifar;
-    use winoq::nn::{ConvMode, ResNetCfg, Tensor};
-    use winoq::serve::{run_closed_loop, BatchModel, ModelRegistry, ServeConfig};
+    use winoq::nn::{ConvMode, ResNet18, ResNetCfg, Tensor};
+    use winoq::obs::{MetricsRegistry, TraceSink, Tracer};
+    use winoq::serve::{
+        run_closed_loop, run_closed_loop_with, BatchModel, ModelRegistry, ServeConfig, ServeStats,
+    };
 
     if args.has_switch("--soak") {
         return cmd_serve_soak(args);
@@ -375,10 +379,73 @@ fn cmd_serve(args: &Args) -> Result<()> {
          window {} µs, queue cap {}, {} worker(s)",
         serve_cfg.max_batch, serve_cfg.batch_window_us, serve_cfg.queue_cap, serve_cfg.workers
     );
-    let report = run_closed_loop(served.as_ref(), &serve_cfg, &inputs, requests, concurrency);
+    let tracer = args.flag("--trace-json").map(|_| Arc::new(Tracer::default()));
+    let stats = ServeStats::new();
+    let report = run_closed_loop_with(
+        served.as_ref(),
+        &serve_cfg,
+        &stats,
+        &inputs,
+        requests,
+        concurrency,
+        tracer.clone(),
+    );
     println!("{}", report.summary_line());
     if report.completed as usize != requests {
         bail!("served {} of {requests} requests", report.completed);
+    }
+
+    // Request tracing: drain every span's lifecycle as JSON lines, after
+    // checking the accounting invariant (every submitted span ended in
+    // exactly one of complete/reject/shed).
+    if let Some(path) = args.flag("--trace-json") {
+        let tracer = tracer.as_ref().expect("tracer exists when --trace-json is set");
+        let acc = tracer.accounting();
+        if !acc.exact {
+            bail!(
+                "trace accounting does not reconcile: {} submitted vs {} + {} + {}",
+                acc.submitted,
+                acc.completed,
+                acc.rejected,
+                acc.shed
+            );
+        }
+        if tracer.dropped() > 0 {
+            eprintln!("warning: {} trace events dropped at capacity", tracer.dropped());
+        }
+        std::fs::write(path, tracer.to_json_lines())
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!(
+            "trace JSON lines written to {path} ({} spans: {} completed, {} rejected, {} shed)",
+            acc.submitted, acc.completed, acc.rejected, acc.shed
+        );
+    }
+
+    // Metrics registry: one snapshot of the whole stack — request
+    // outcomes and latency histogram, engine stage totals, plan-cache
+    // counters, and per-layer numeric-health saturation counters.
+    if let Some(path) = args.flag("--metrics-json") {
+        let reg = MetricsRegistry::new();
+        stats.export_metrics(&reg);
+        registry.plans().export_metrics(&reg);
+        for (prefix, _cin, _cout) in ResNet18::wino_eligible_units(&served.net.cfg) {
+            let Some(engine) = served.net.wino_layer(&prefix).and_then(|la| la.int_engine())
+            else {
+                continue;
+            };
+            let h = engine.health();
+            for (stage, n) in [
+                ("input_sat", h.input_sat),
+                ("input_t_sat", h.input_t_sat),
+                ("hadamard_sat", h.hadamard_sat),
+                ("output_sat", h.output_sat),
+            ] {
+                reg.inc(&format!("health.{prefix}.{stage}"), n);
+            }
+        }
+        std::fs::write(path, reg.snapshot_json_lines())
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("metrics snapshot written to {path} ({} metrics)", reg.len());
     }
 
     if let Some(path) = args.flag("--stats-json") {
@@ -473,15 +540,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `winoq bench`: in-binary micro-benchmarks that CI can run without a
-/// `cargo bench` recompile. Currently one suite: the register-tiled
-/// panel GEMM vs its naive oracles (float and integer), at a
-/// ResNet18-shaped layer, written as `BENCH_gemm.json` — the same
-/// emitter `cargo bench --bench conv_throughput` runs
+/// `cargo bench` recompile. Two suites: the register-tiled panel GEMM vs
+/// its naive oracles (float and integer) at a ResNet18-shaped layer,
+/// written as `BENCH_gemm.json` — the same emitter `cargo bench --bench
+/// conv_throughput` runs
 /// ([`gemm_bench_json`](winoq::engine::gemm::gemm_bench_json)), which
-/// also asserts tiled/naive bit-parity on the measured buffers.
+/// also asserts tiled/naive bit-parity on the measured buffers — and the
+/// numeric-health saturation report (`--health-json`).
 fn cmd_bench(args: &Args) -> Result<()> {
+    // Numeric-health suite: run the integer engine over calibration-range
+    // and adversarial (2× calibration) inputs at representative operating
+    // points, and report the saturation/clip counters per
+    // (layer, base, m, quant) — the telemetry `scripts/ci.sh` gates on
+    // (the w8_h9 profile must show Hadamard-stage saturation).
+    if let Some(path) = args.flag("--health-json") {
+        let json = winoq::engine::int::numeric_health_json();
+        std::fs::write(path, json + "\n").with_context(|| format!("writing {path}"))?;
+        eprintln!("numeric-health JSON written to {path}");
+    }
     let Some(path) = args.flag("--gemm-json") else {
-        bail!("nothing to bench: pass --gemm-json <path> (see `winoq help`)");
+        if args.flag("--health-json").is_some() {
+            return Ok(());
+        }
+        bail!(
+            "nothing to bench: pass --gemm-json <path> and/or --health-json <path> \
+             (see `winoq help`)"
+        );
     };
     let m = args.flag_u64("--m", 4)? as usize;
     if !(1..=8).contains(&m) {
@@ -517,7 +601,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
 /// the `BENCH_serve_soak.json` report `scripts/ci.sh` validates.
 fn cmd_serve_soak(args: &Args) -> Result<()> {
     use winoq::engine::layout::tile_count_for;
-    use winoq::testkit::soak::{run_soak, SoakConfig, SoakModel};
+    use winoq::obs::TraceSink;
+    use winoq::testkit::soak::{run_soak, run_soak_traced, SoakConfig, SoakModel};
     use winoq::tune::cost::TileCostModel;
 
     let requests = (args.flag_u64("--requests", 256)? as usize).max(1);
@@ -554,7 +639,13 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
         models: tenants,
         service_jitter_div: 16,
     };
-    let report = run_soak(&cfg);
+    let trace_path = args.flag("--trace-json");
+    let (report, trace) = if trace_path.is_some() {
+        let (r, t) = run_soak_traced(&cfg);
+        (r, Some(t))
+    } else {
+        (run_soak(&cfg), None)
+    };
     println!("{}", report.summary_line());
     for m in &report.per_model {
         println!(
@@ -574,6 +665,30 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
     let path = args.flag_or("--soak-json", "BENCH_serve_soak.json");
     std::fs::write(path, report.to_json()).with_context(|| format!("writing {path}"))?;
     eprintln!("soak report written to {path}");
+    if let (Some(tp), Some(trace)) = (trace_path, trace) {
+        let acc = trace.accounting();
+        if !acc.exact
+            || acc.submitted != report.submitted
+            || acc.completed != report.completed
+            || acc.rejected != report.rejected
+            || acc.shed != report.shed
+        {
+            bail!(
+                "soak trace accounting does not reconcile with the report: \
+                 trace {acc:?} vs report {}/{}/{}/{}",
+                report.submitted,
+                report.completed,
+                report.rejected,
+                report.shed
+            );
+        }
+        std::fs::write(tp, trace.to_json_lines()).with_context(|| format!("writing {tp}"))?;
+        eprintln!(
+            "soak trace JSON lines written to {tp} ({} spans, {} events)",
+            acc.submitted,
+            trace.len()
+        );
+    }
     Ok(())
 }
 

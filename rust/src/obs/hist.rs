@@ -1,0 +1,302 @@
+//! Log-bucketed histogram — the bounded-memory distribution primitive
+//! under every latency/size metric in the observability layer.
+//!
+//! [`ServeStats`](crate::serve::ServeStats) used to push every request's
+//! latency into a raw `Vec<u64>` for the lifetime of the run — unbounded
+//! growth under a soak. [`LogHistogram`] replaces that with a **fixed**
+//! 128-bucket layout at ~2 buckets per octave: bucket `0` holds the
+//! value `0`, bucket `1` holds `1`, and from there every octave
+//! `[2^e, 2^{e+1})` splits into two half-octave buckets at `3·2^{e-1}`.
+//! The indexing is *compact* — every bucket index in `0..=127` is
+//! reachable and the lower bounds are strictly monotone with no gaps —
+//! so `u64::MAX` lands safely in bucket 127 (`e = 63`, upper half).
+//!
+//! Percentiles come out nearest-rank over the cumulative bucket counts
+//! (the same rank rule as
+//! [`benchkit::percentile_sorted`](crate::benchkit::percentile_sorted)),
+//! reporting the selected bucket's lower bound clamped into the exact
+//! `[min, max]` the histogram tracked — so the max percentile is exact,
+//! and small sample counts whose values sit on bucket boundaries agree
+//! with the sorted nearest-rank answer exactly (pinned in
+//! `serve::stats` and the property suite below). Resolution inside a
+//! bucket is a half octave (≤ 50% relative), the classic
+//! latency-histogram trade: fixed memory, mergeable, O(1) record.
+
+/// Number of buckets: indices `0` and `1` for the exact values 0 and 1,
+/// then two half-octave buckets per exponent `e ∈ 1..=63`.
+pub const BUCKETS: usize = 128;
+
+/// Fixed-memory log-bucketed histogram over `u64` samples with exact
+/// min/max tracking. `Default`-constructible, mergeable, clonable.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    /// Saturating sum of all recorded values (mean reporting).
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram { counts: [0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Bucket index of a value: `0 → 0`, `1 → 1`, else with
+    /// `e = floor(log2 v)` the index is `2e` for the lower half-octave
+    /// (`v < 3·2^{e-1}`) and `2e + 1` for the upper. Compact: every
+    /// index in `0..BUCKETS` is hit by some value, and
+    /// `idx(u64::MAX) = 127`.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        match v {
+            0 => 0,
+            1 => 1,
+            _ => {
+                let e = 63 - v.leading_zeros() as usize;
+                2 * e + usize::from(v >= 3u64 << (e - 1))
+            }
+        }
+    }
+
+    /// Inclusive lower bound of bucket `i` — the value a percentile
+    /// query reports for that bucket (before min/max clamping). Strictly
+    /// monotone in `i`; `bucket_lo(bucket_index(v)) <= v` always holds.
+    #[inline]
+    pub fn bucket_lo(i: usize) -> u64 {
+        assert!(i < BUCKETS, "bucket index out of range");
+        match i {
+            0 => 0,
+            1 => 1,
+            _ => {
+                let e = i / 2;
+                (1u64 << e) + (i as u64 % 2) * (1u64 << (e - 1))
+            }
+        }
+    }
+
+    /// Record one sample. O(1); the sum saturates rather than wraps.
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram in (bucket-wise add; min/max widen; sum
+    /// saturates). Associative and commutative — the property suite
+    /// pins both — so per-worker histograms can merge in any order.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Saturating sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact smallest recorded value (`None` when empty).
+    pub fn min(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    /// Exact largest recorded value (`None` when empty).
+    pub fn max(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile `q ∈ [0, 1]`: rank `⌈q·n⌉` clamped to
+    /// `[1, n]` over the cumulative bucket counts, reporting the
+    /// selected bucket's lower bound clamped into the exact tracked
+    /// `[min, max]` (so `q = 1.0` returns the exact max). Returns 0 on
+    /// an empty histogram.
+    pub fn value_at_quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if q >= 1.0 {
+            // Rank alone cannot distinguish q = 1.0 from e.g. q = 0.999
+            // at small counts (both select the last sample), but only
+            // the true max quantile is promised exact.
+            return self.max;
+        }
+        let rank = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_lo(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn bucket_lo_is_strictly_monotone_and_compact() {
+        for i in 1..BUCKETS {
+            assert!(
+                LogHistogram::bucket_lo(i) > LogHistogram::bucket_lo(i - 1),
+                "lo({i}) must exceed lo({})",
+                i - 1
+            );
+            // Compactness: every bucket's lower bound maps back to it —
+            // no index is unreachable.
+            assert_eq!(LogHistogram::bucket_index(LogHistogram::bucket_lo(i)), i);
+        }
+        assert_eq!(LogHistogram::bucket_index(LogHistogram::bucket_lo(0)), 0);
+    }
+
+    #[test]
+    fn forall_bucket_boundaries_bracket_every_value() {
+        // Monotone, no gaps: lo(idx(v)) <= v < lo(idx(v) + 1), over the
+        // full u64 range including u64::MAX (safe, bucket 127).
+        forall(
+            0x0B5,
+            4000,
+            |rng: &mut crate::wino::error::Prng| {
+                // Mix small values and full-range values so every octave
+                // band gets traffic.
+                let raw = rng.next_u64();
+                match raw % 4 {
+                    0 => raw % 64,
+                    1 => raw % 65_536,
+                    2 => raw >> (raw % 40),
+                    _ => raw,
+                }
+            },
+            |&v| {
+                let i = LogHistogram::bucket_index(v);
+                i < BUCKETS
+                    && LogHistogram::bucket_lo(i) <= v
+                    && (i + 1 >= BUCKETS || v < LogHistogram::bucket_lo(i + 1))
+            },
+        );
+        assert_eq!(LogHistogram::bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(LogHistogram::bucket_index(0), 0);
+        assert_eq!(LogHistogram::bucket_index(1), 1);
+        assert_eq!(LogHistogram::bucket_index(2), 2);
+        assert_eq!(LogHistogram::bucket_index(3), 3);
+    }
+
+    #[test]
+    fn forall_merge_is_associative_and_commutative() {
+        forall(
+            0x0B6,
+            200,
+            |rng: &mut crate::wino::error::Prng| {
+                let gen_set =
+                    |rng: &mut crate::wino::error::Prng| -> Vec<u64> {
+                        (0..(rng.next_u64() % 20)).map(|_| rng.next_u64() >> (rng.next_u64() % 50)).collect()
+                    };
+                (gen_set(rng), gen_set(rng), gen_set(rng))
+            },
+            |(a, b, c)| {
+                let h = |vs: &[u64]| {
+                    let mut h = LogHistogram::new();
+                    for &v in vs {
+                        h.record(v);
+                    }
+                    h
+                };
+                let (ha, hb, hc) = (h(a), h(b), h(c));
+                // (A ∪ B) ∪ C == A ∪ (B ∪ C) and A ∪ B == B ∪ A.
+                let mut ab_c = ha.clone();
+                ab_c.merge(&hb);
+                ab_c.merge(&hc);
+                let mut bc = hb.clone();
+                bc.merge(&hc);
+                let mut a_bc = ha.clone();
+                a_bc.merge(&bc);
+                let mut ba = hb.clone();
+                ba.merge(&ha);
+                let mut ab = ha.clone();
+                ab.merge(&hb);
+                ab_c.counts == a_bc.counts
+                    && ab_c.count == a_bc.count
+                    && ab_c.min == a_bc.min
+                    && ab_c.max == a_bc.max
+                    && ab.counts == ba.counts
+            },
+        );
+    }
+
+    #[test]
+    fn quantiles_agree_with_nearest_rank_on_boundary_samples() {
+        // Samples sitting exactly on bucket lower bounds: the histogram
+        // quantile must equal benchkit's sorted nearest-rank answer for
+        // every q — small-sample agreement, pinned.
+        let samples: Vec<u64> = vec![1, 2, 4, 8, 16, 24, 32, 64, 96];
+        let mut h = LogHistogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let sorted: Vec<f64> = samples.iter().map(|&v| v as f64).collect();
+        for q in [0.01, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let want = crate::benchkit::percentile_sorted(&sorted, q) as u64;
+            assert_eq!(h.value_at_quantile(q), want, "q = {q}");
+        }
+    }
+
+    #[test]
+    fn min_max_are_exact_and_clamp_quantiles() {
+        let mut h = LogHistogram::new();
+        h.record(1000);
+        h.record(9000);
+        assert_eq!(h.min(), Some(1000));
+        assert_eq!(h.max(), Some(9000));
+        // Rank 1 selects the bucket holding 1000 (lo = 768) but the
+        // exact min clamps it back up; rank 2 reports 9000's bucket lo.
+        assert_eq!(h.value_at_quantile(0.5), 1000);
+        assert_eq!(h.value_at_quantile(0.999), 8192);
+        assert_eq!(h.value_at_quantile(1.0), 9000, "max quantile is exact");
+    }
+
+    #[test]
+    fn empty_and_extreme_histograms_are_safe() {
+        let h = LogHistogram::new();
+        assert_eq!(h.value_at_quantile(0.5), 0);
+        assert_eq!(h.min(), None);
+        assert_eq!(h.max(), None);
+        assert_eq!(h.mean(), 0.0);
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), u64::MAX, "sum saturates, never wraps");
+        assert_eq!(h.value_at_quantile(1.0), u64::MAX);
+    }
+}

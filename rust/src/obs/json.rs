@@ -1,0 +1,198 @@
+//! The one JSON writer every emitter goes through.
+//!
+//! Before this module each `BENCH_*.json` producer (`serve/stats.rs`,
+//! `testkit/soak.rs`, `tune/netplan.rs`, the bench emitters) hand-rolled
+//! its own `format!` string — same house style, zero shared escaping,
+//! and a key-order typo away from breaking the `scripts/ci.sh` `sed`
+//! gates. [`JsonObj`]/[`JsonArr`] are push-based builders that preserve
+//! insertion order and produce exactly the repo's compact one-line
+//! style: `{"key": value, "key2": value2}` — byte-compatible with what
+//! the `format!` emitters produced, so migrating an emitter changes no
+//! output bytes.
+//!
+//! String values are escaped through the one tested escaper
+//! ([`escape`], re-exported from [`tune::json`](crate::tune::json) so
+//! the writer and the reader agree on the dialect). Numeric formatting
+//! is explicit at the call site — [`JsonObj::f64`] takes the precision
+//! (`{:.3}` etc. in the old emitters) and [`JsonObj::raw`] accepts any
+//! pre-serialized value (scientific notation, nested objects, arrays) —
+//! because the byte-exact output *is* the contract: CI parses these
+//! files with `sed`, and the soak emitter is pinned byte-identical per
+//! seed.
+
+pub use crate::tune::json::escape;
+
+/// Order-preserving JSON object builder (consuming, chainable).
+#[derive(Debug)]
+pub struct JsonObj {
+    buf: String,
+    empty: bool,
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonObj {
+    pub fn new() -> JsonObj {
+        JsonObj { buf: String::from("{"), empty: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.empty {
+            self.buf.push_str(", ");
+        }
+        self.empty = false;
+        self.buf.push('"');
+        self.buf.push_str(&escape(k));
+        self.buf.push_str("\": ");
+    }
+
+    /// Unsigned integer field.
+    pub fn u64(mut self, k: &str, v: u64) -> Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Signed integer field.
+    pub fn i64(mut self, k: &str, v: i64) -> Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Float field with an explicit decimal precision — `f64("p", v, 3)`
+    /// emits exactly what `format!("{:.3}", v)` did.
+    pub fn f64(mut self, k: &str, v: f64, prec: usize) -> Self {
+        self.key(k);
+        self.buf.push_str(&format!("{v:.prec$}"));
+        self
+    }
+
+    /// Escaped string field.
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    /// Boolean field.
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Pre-serialized value (nested object/array, scientific-notation
+    /// float, …) — spliced verbatim, caller owns its validity.
+    pub fn raw(mut self, k: &str, raw: &str) -> Self {
+        self.key(k);
+        self.buf.push_str(raw);
+        self
+    }
+
+    /// Close the object and return the JSON string.
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Order-preserving JSON array builder over pre-serialized items.
+#[derive(Debug)]
+pub struct JsonArr {
+    buf: String,
+    empty: bool,
+}
+
+impl Default for JsonArr {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonArr {
+    pub fn new() -> JsonArr {
+        JsonArr { buf: String::from("["), empty: true }
+    }
+
+    /// Append one pre-serialized element (e.g. a [`JsonObj::finish`]
+    /// result).
+    pub fn item(mut self, raw: &str) -> Self {
+        if !self.empty {
+            self.buf.push_str(", ");
+        }
+        self.empty = false;
+        self.buf.push_str(raw);
+        self
+    }
+
+    /// Close the array and return the JSON string.
+    pub fn finish(mut self) -> String {
+        self.buf.push(']');
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_matches_the_house_format_byte_for_byte() {
+        let got = JsonObj::new()
+            .u64("submitted", 5)
+            .f64("mean_batch", 2.5, 3)
+            .str("model", "model-a")
+            .bool("hit", true)
+            .i64("delta", -3)
+            .finish();
+        let want = format!(
+            "{{\"submitted\": {}, \"mean_batch\": {:.3}, \"model\": \"{}\", \
+             \"hit\": {}, \"delta\": {}}}",
+            5, 2.5, "model-a", true, -3
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn nesting_and_arrays_compose() {
+        let inner = JsonObj::new().f64("p50", 1.5, 3).finish();
+        let arr = JsonArr::new()
+            .item(&JsonObj::new().u64("a", 1).finish())
+            .item(&JsonObj::new().u64("a", 2).finish())
+            .finish();
+        let got = JsonObj::new()
+            .raw("latency_ms", &inner)
+            .raw("per_model", &arr)
+            .finish();
+        assert_eq!(
+            got,
+            "{\"latency_ms\": {\"p50\": 1.500}, \
+             \"per_model\": [{\"a\": 1}, {\"a\": 2}]}"
+        );
+    }
+
+    #[test]
+    fn strings_are_escaped_and_parseable() {
+        let got = JsonObj::new().str("why", "a \"quoted\"\nline\\").finish();
+        let doc = crate::tune::json::parse(&got).unwrap();
+        assert_eq!(
+            doc.get("why").and_then(crate::tune::json::Json::as_str),
+            Some("a \"quoted\"\nline\\")
+        );
+    }
+
+    #[test]
+    fn empty_containers_are_valid() {
+        assert_eq!(JsonObj::new().finish(), "{}");
+        assert_eq!(JsonArr::new().finish(), "[]");
+        let doc = crate::tune::json::parse(&JsonObj::new().finish()).unwrap();
+        assert!(doc.get("anything").is_none());
+    }
+}

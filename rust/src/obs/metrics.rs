@@ -1,0 +1,247 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! log-bucketed histograms behind one mutex, snapshotted as JSON lines.
+//!
+//! Every subsystem that used to keep private aggregation state —
+//! [`ServeStats`](crate::serve::ServeStats)' counters,
+//! [`PlanCache`](crate::serve::PlanCache)'s
+//! `packed_banks/int_banks/shape_keys` plumbing, the engine's
+//! `stage_ns` drain — can export into a [`MetricsRegistry`] and the
+//! single [`snapshot_json_lines`](MetricsRegistry::snapshot_json_lines)
+//! emitter renders all of it. Memory is fixed per metric name: counters
+//! and gauges are one word, histograms are the 128-bucket
+//! [`LogHistogram`] — nothing grows with request count.
+//!
+//! # Naming scheme
+//!
+//! Dotted lowercase paths, most-general component first:
+//!
+//! - `serve.requests.{submitted,completed,rejected,shed}`
+//! - `serve.latency_us` (histogram), `serve.batches`, `serve.queue_depth.max`
+//! - `plan_cache.{packed_banks,int_banks,shape_keys,hits,misses}`
+//! - `engine.stage_ns.{input_transform,hadamard,inverse}`
+//! - `health.<layer>.{input_sat,hadamard_sat,output_sat}`
+//!
+//! Names are registered implicitly on first touch; the snapshot is
+//! sorted by name (`BTreeMap`), so output order is deterministic.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::hist::LogHistogram;
+use super::json::JsonObj;
+
+/// One named metric's current value.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Hist(LogHistogram),
+}
+
+/// Thread-safe registry of named metrics. Cheap to share behind an
+/// `Arc`; all mutation is through `&self`.
+#[derive(Default, Debug)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, MetricValue>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Add `delta` to the named counter (created at 0 on first touch).
+    ///
+    /// # Panics
+    /// If the name is already registered as a different metric kind.
+    pub fn inc(&self, name: &str, delta: u64) {
+        let mut m = self.inner.lock().unwrap();
+        match m.entry(name.to_string()).or_insert(MetricValue::Counter(0)) {
+            MetricValue::Counter(c) => *c += delta,
+            other => panic!("metric {name:?} is not a counter: {other:?}"),
+        }
+    }
+
+    /// Set the named gauge to `v` (last write wins).
+    ///
+    /// # Panics
+    /// If the name is already registered as a different metric kind.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut m = self.inner.lock().unwrap();
+        match m.entry(name.to_string()).or_insert(MetricValue::Gauge(0.0)) {
+            MetricValue::Gauge(g) => *g = v,
+            other => panic!("metric {name:?} is not a gauge: {other:?}"),
+        }
+    }
+
+    /// Record one sample into the named histogram.
+    ///
+    /// # Panics
+    /// If the name is already registered as a different metric kind.
+    pub fn observe(&self, name: &str, v: u64) {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| MetricValue::Hist(LogHistogram::new()))
+        {
+            MetricValue::Hist(h) => h.record(v),
+            other => panic!("metric {name:?} is not a histogram: {other:?}"),
+        }
+    }
+
+    /// Merge a pre-aggregated histogram into the named histogram —
+    /// the bulk path for per-worker [`LogHistogram`]s.
+    ///
+    /// # Panics
+    /// If the name is already registered as a different metric kind.
+    pub fn merge_hist(&self, name: &str, other: &LogHistogram) {
+        let mut m = self.inner.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| MetricValue::Hist(LogHistogram::new()))
+        {
+            MetricValue::Hist(h) => h.merge(other),
+            v => panic!("metric {name:?} is not a histogram: {v:?}"),
+        }
+    }
+
+    /// Current value of a counter (0 if absent or not a counter).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.inner.lock().unwrap().get(name) {
+            Some(MetricValue::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Current value of a gauge (`None` if absent or not a gauge).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.inner.lock().unwrap().get(name) {
+            Some(MetricValue::Gauge(g)) => Some(*g),
+            _ => None,
+        }
+    }
+
+    /// Clone of a histogram (`None` if absent or not a histogram).
+    pub fn histogram(&self, name: &str) -> Option<LogHistogram> {
+        match self.inner.lock().unwrap().get(name) {
+            Some(MetricValue::Hist(h)) => Some(h.clone()),
+            _ => None,
+        }
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when no metric has been touched yet.
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// Snapshot every metric as one JSON object per line (trailing
+    /// newline included), sorted by metric name. Counters/gauges emit
+    /// `value`; histograms emit `count/min/max/mean` plus the standard
+    /// percentile ladder.
+    pub fn snapshot_json_lines(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, v) in m.iter() {
+            let line = match v {
+                MetricValue::Counter(c) => JsonObj::new()
+                    .str("metric", name)
+                    .str("type", "counter")
+                    .u64("value", *c)
+                    .finish(),
+                MetricValue::Gauge(g) => JsonObj::new()
+                    .str("metric", name)
+                    .str("type", "gauge")
+                    .f64("value", *g, 6)
+                    .finish(),
+                MetricValue::Hist(h) => JsonObj::new()
+                    .str("metric", name)
+                    .str("type", "hist")
+                    .u64("count", h.count())
+                    .u64("min", h.min().unwrap_or(0))
+                    .u64("max", h.max().unwrap_or(0))
+                    .f64("mean", h.mean(), 3)
+                    .u64("p50", h.value_at_quantile(0.50))
+                    .u64("p95", h.value_at_quantile(0.95))
+                    .u64("p99", h.value_at_quantile(0.99))
+                    .u64("p999", h.value_at_quantile(0.999))
+                    .finish(),
+            };
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_round_trip() {
+        let reg = MetricsRegistry::new();
+        reg.inc("serve.requests.submitted", 3);
+        reg.inc("serve.requests.submitted", 2);
+        reg.set_gauge("serve.queue_depth.max", 7.0);
+        for v in [1000u64, 9000] {
+            reg.observe("serve.latency_us", v);
+        }
+        assert_eq!(reg.counter("serve.requests.submitted"), 5);
+        assert_eq!(reg.gauge("serve.queue_depth.max"), Some(7.0));
+        let h = reg.histogram("serve.latency_us").unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), Some(9000));
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_json_lines_and_parseable() {
+        let reg = MetricsRegistry::new();
+        reg.inc("b.counter", 1);
+        reg.set_gauge("a.gauge", 0.5);
+        reg.observe("c.hist", 1000);
+        reg.observe("c.hist", 9000);
+        let snap = reg.snapshot_json_lines();
+        let lines: Vec<&str> = snap.lines().collect();
+        assert_eq!(lines.len(), 3);
+        // BTreeMap order: a.gauge, b.counter, c.hist.
+        assert!(lines[0].contains("\"a.gauge\""));
+        assert!(lines[1].contains("\"b.counter\""));
+        assert!(lines[2].contains("\"c.hist\""));
+        for line in &lines {
+            let doc = crate::tune::json::parse(line).unwrap();
+            assert!(doc.get("metric").is_some(), "line missing metric: {line}");
+        }
+        let hist = crate::tune::json::parse(lines[2]).unwrap();
+        assert_eq!(hist.get("count").and_then(|j| j.as_u64()), Some(2));
+        assert_eq!(hist.get("max").and_then(|j| j.as_u64()), Some(9000));
+        // Nearest-rank over 2 samples: p50 = min-clamped first bucket.
+        assert_eq!(hist.get("p50").and_then(|j| j.as_u64()), Some(1000));
+        assert_eq!(hist.get("p999").and_then(|j| j.as_u64()), Some(8192));
+        assert!(snap.ends_with('\n'));
+    }
+
+    #[test]
+    fn merge_hist_folds_worker_local_aggregates() {
+        let reg = MetricsRegistry::new();
+        let mut local = LogHistogram::new();
+        local.record(10);
+        local.record(20);
+        reg.merge_hist("w.lat", &local);
+        reg.merge_hist("w.lat", &local);
+        assert_eq!(reg.histogram("w.lat").unwrap().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a counter")]
+    fn kind_mismatch_panics() {
+        let reg = MetricsRegistry::new();
+        reg.set_gauge("x", 1.0);
+        reg.inc("x", 1);
+    }
+}

@@ -1,0 +1,34 @@
+//! Unified observability layer: metrics registry, request tracing, and
+//! the shared JSON writer every `BENCH_*.json` emitter goes through.
+//!
+//! Three pillars, all zero-dependency and bounded-memory:
+//!
+//! 1. **Metrics** ([`metrics`]) — a process-wide [`MetricsRegistry`] of
+//!    named counters, gauges, and log-bucketed [`LogHistogram`]s with a
+//!    deterministic JSON-lines snapshot. Serving stats
+//!    ([`ServeStats`](crate::serve::ServeStats)), plan-cache counters
+//!    ([`PlanCache`](crate::serve::PlanCache)), and engine stage
+//!    timings all export here.
+//! 2. **Tracing** ([`trace`]) — span IDs minted at admission and
+//!    stamped through scheduling, shard routing, plan-cache lookups,
+//!    the three engine stages, and completion; drained as JSON lines
+//!    (`winoq serve --trace-json`, `--soak --trace-json`) with an exact
+//!    accounting invariant: submitted = completed + rejected + shed.
+//! 3. **Numeric health** — saturation counters inside
+//!    [`engine::int`](crate::engine) (input-quantize clips, 9-bit
+//!    Hadamard clamp hits, requant epilogue clips), surfaced per layer
+//!    through the registry and `winoq bench --health-json`.
+//!
+//! See the "Observability" section of `docs/ARCHITECTURE.md` for the
+//! naming scheme, span lifecycle, and metric catalog.
+
+pub mod hist;
+pub mod json;
+pub mod metrics;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use metrics::{MetricValue, MetricsRegistry};
+pub use trace::{
+    mint_span, SpanAccounting, TraceEvent, TraceKind, TraceLog, TraceSink, Tracer,
+};

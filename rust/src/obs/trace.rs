@@ -1,0 +1,463 @@
+//! Request tracing: span IDs, structured trace events, and the two
+//! recorders (deterministic log, lock-cheap threaded ring).
+//!
+//! A **span** is one request's identity from admission to terminal
+//! state. IDs are minted process-wide by [`mint_span`] so every layer —
+//! [`ShardRouter`](crate::serve::ShardRouter) routing,
+//! [`ServeQueue`](crate::serve::ServeQueue) admission, scheduler
+//! shed/batch decisions, engine stages — can stamp events for the same
+//! request without threading a generator through the call graph.
+//!
+//! # Span lifecycle
+//!
+//! ```text
+//! submit ──→ (plan_cache hit/miss) ──→ batch ──→ stage ──→ complete
+//!    │
+//!    ├──→ reject   (admission refuses: queue_full, unknown_model, …)
+//!    └──→ shed     (scheduler drops a hopeless deadline, with the
+//!                   predicted/deadline/decided numbers that justify it)
+//! ```
+//!
+//! Every submitted span ends in **exactly one** of
+//! `complete`/`reject`/`shed` — the accounting invariant
+//! ([`TraceSink::accounting`]) that `scripts/ci.sh` gates on and the
+//! property suite in `testkit::soak` pins against the soak report.
+//!
+//! Events serialize as JSON lines via [`obs::json`](crate::obs::json):
+//! `{"span": 3, "at_us": 120, "event": "submit", ...}` — one object per
+//! line, reconstructable per span by grouping on `span`.
+//!
+//! Two recorders share the [`TraceSink`] event store:
+//! [`TraceLog`] is single-threaded and unbounded with insertion order
+//! preserved (the soak harness needs byte-identical output per seed);
+//! [`Tracer`] is the serving-path recorder — sharded mutex rings with a
+//! bounded capacity and a global sequence number so a drain yields one
+//! deterministic total order, dropping (and counting) events past the
+//! cap instead of growing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::json::JsonObj;
+
+/// Process-wide span ID source. First minted span is 1; 0 is reserved
+/// as "untraced".
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a fresh, process-unique span ID.
+pub fn mint_span() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// What happened to a span at one point in its life.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceKind {
+    /// Request admitted into a queue (terminal events must follow).
+    Submit {
+        model: String,
+        priority: String,
+        deadline_us: u64,
+        tiles: u64,
+        h: u64,
+        w: u64,
+    },
+    /// Admission refused the request outright. Terminal.
+    Reject { why: String },
+    /// Scheduler dropped a hopeless request, with the numbers that
+    /// justify it: it would have finished at `predicted_us` past
+    /// `deadline_us`, decided at `decided_us`. Terminal.
+    Shed {
+        why: String,
+        predicted_us: u64,
+        deadline_us: u64,
+        decided_us: u64,
+    },
+    /// Span was placed into a closed batch of `size` requests.
+    Batch { size: u64, predicted_us: u64 },
+    /// Plan-cache interaction while routing/lowering for `model`.
+    PlanCache { model: String, hit: bool },
+    /// Per-stage engine nanoseconds attributed to this span's batch.
+    Stage {
+        input_transform_ns: u64,
+        hadamard_ns: u64,
+        inverse_ns: u64,
+        tiles: u64,
+    },
+    /// Response delivered. Terminal.
+    Complete { latency_us: u64, batch_size: u64 },
+}
+
+/// One timestamped event on one span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub span: u64,
+    pub at_us: u64,
+    pub kind: TraceKind,
+}
+
+impl TraceEvent {
+    /// House-style JSON line (no trailing newline): common fields
+    /// first, then the kind's payload.
+    pub fn to_json_line(&self) -> String {
+        let head = JsonObj::new().u64("span", self.span).u64("at_us", self.at_us);
+        match &self.kind {
+            TraceKind::Submit { model, priority, deadline_us, tiles, h, w } => head
+                .str("event", "submit")
+                .str("model", model)
+                .str("priority", priority)
+                .u64("deadline_us", *deadline_us)
+                .u64("tiles", *tiles)
+                .u64("h", *h)
+                .u64("w", *w)
+                .finish(),
+            TraceKind::Reject { why } => {
+                head.str("event", "reject").str("why", why).finish()
+            }
+            TraceKind::Shed { why, predicted_us, deadline_us, decided_us } => head
+                .str("event", "shed")
+                .str("why", why)
+                .u64("predicted_us", *predicted_us)
+                .u64("deadline_us", *deadline_us)
+                .u64("decided_us", *decided_us)
+                .finish(),
+            TraceKind::Batch { size, predicted_us } => head
+                .str("event", "batch")
+                .u64("size", *size)
+                .u64("predicted_us", *predicted_us)
+                .finish(),
+            TraceKind::PlanCache { model, hit } => head
+                .str("event", "plan_cache")
+                .str("model", model)
+                .bool("hit", *hit)
+                .finish(),
+            TraceKind::Stage { input_transform_ns, hadamard_ns, inverse_ns, tiles } => {
+                head.str("event", "stage")
+                    .u64("input_transform_ns", *input_transform_ns)
+                    .u64("hadamard_ns", *hadamard_ns)
+                    .u64("inverse_ns", *inverse_ns)
+                    .u64("tiles", *tiles)
+                    .finish()
+            }
+            TraceKind::Complete { latency_us, batch_size } => head
+                .str("event", "complete")
+                .u64("latency_us", *latency_us)
+                .u64("batch_size", *batch_size)
+                .finish(),
+        }
+    }
+
+    /// True for the three lifecycle-ending kinds.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self.kind,
+            TraceKind::Reject { .. } | TraceKind::Shed { .. } | TraceKind::Complete { .. }
+        )
+    }
+}
+
+/// Span-accounting summary over a set of events.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanAccounting {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    /// Every submitted span has exactly one terminal event, and no
+    /// terminal event names an unsubmitted span.
+    pub exact: bool,
+}
+
+/// Common read-side over an ordered slice of trace events.
+pub trait TraceSink {
+    /// The recorded events in their deterministic order.
+    fn events(&self) -> Vec<TraceEvent>;
+
+    /// JSON-lines rendering (one event per line, trailing newline when
+    /// nonempty).
+    fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            out.push_str(&ev.to_json_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Check the span-accounting invariant over all recorded events.
+    fn accounting(&self) -> SpanAccounting {
+        use std::collections::BTreeMap;
+        let mut submitted: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut terminals: BTreeMap<u64, Vec<&'static str>> = BTreeMap::new();
+        for ev in self.events() {
+            match ev.kind {
+                TraceKind::Submit { .. } => {
+                    *submitted.entry(ev.span).or_insert(0) += 1
+                }
+                TraceKind::Reject { .. } => {
+                    terminals.entry(ev.span).or_default().push("reject")
+                }
+                TraceKind::Shed { .. } => {
+                    terminals.entry(ev.span).or_default().push("shed")
+                }
+                TraceKind::Complete { .. } => {
+                    terminals.entry(ev.span).or_default().push("complete")
+                }
+                _ => {}
+            }
+        }
+        let mut acc = SpanAccounting {
+            submitted: submitted.len() as u64,
+            exact: true,
+            ..Default::default()
+        };
+        // Single submit per span, and every terminal span was submitted.
+        acc.exact &= submitted.values().all(|&n| n == 1);
+        acc.exact &= terminals.keys().all(|s| submitted.contains_key(s));
+        for span in submitted.keys() {
+            match terminals.get(span).map(Vec::as_slice) {
+                Some(["reject"]) => acc.rejected += 1,
+                Some(["shed"]) => acc.shed += 1,
+                Some(["complete"]) => acc.completed += 1,
+                _ => acc.exact = false,
+            }
+        }
+        acc.exact &=
+            acc.submitted == acc.completed + acc.rejected + acc.shed;
+        acc
+    }
+}
+
+/// Deterministic, unbounded, single-threaded recorder — insertion order
+/// is the output order (the soak harness depends on byte-identical
+/// output per seed).
+#[derive(Default, Debug)]
+pub struct TraceLog {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceLog {
+    pub fn new() -> TraceLog {
+        TraceLog::default()
+    }
+
+    pub fn record(&mut self, span: u64, at_us: u64, kind: TraceKind) {
+        self.events.push(TraceEvent { span, at_us, kind });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl TraceSink for TraceLog {
+    fn events(&self) -> Vec<TraceEvent> {
+        self.events.clone()
+    }
+}
+
+const TRACER_SHARDS: usize = 8;
+
+/// Serving-path recorder: events land in one of [`TRACER_SHARDS`]
+/// mutex-guarded rings keyed by span (same span → same shard → one
+/// short lock among `1/TRACER_SHARDS` of the traffic). A global
+/// sequence number gives drains a deterministic total order; past
+/// `capacity` events per shard, new events are counted as dropped
+/// instead of growing memory.
+#[derive(Debug)]
+pub struct Tracer {
+    shards: [Mutex<Vec<(u64, TraceEvent)>>; TRACER_SHARDS],
+    seq: AtomicU64,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(1 << 16)
+    }
+}
+
+impl Tracer {
+    /// `capacity` bounds each shard's event count.
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            shards: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            seq: AtomicU64::new(0),
+            capacity,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, span: u64, at_us: u64, kind: TraceKind) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut shard =
+            self.shards[(span as usize) % TRACER_SHARDS].lock().unwrap();
+        if shard.len() >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        shard.push((seq, TraceEvent { span, at_us, kind }));
+    }
+
+    /// Events dropped because a shard hit capacity.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Remove and return all recorded events in global sequence order.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<(u64, TraceEvent)> = Vec::new();
+        for shard in &self.shards {
+            all.append(&mut shard.lock().unwrap());
+        }
+        all.sort_by_key(|&(seq, _)| seq);
+        all.into_iter().map(|(_, ev)| ev).collect()
+    }
+}
+
+impl TraceSink for Tracer {
+    /// Non-destructive snapshot in global sequence order.
+    fn events(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<(u64, TraceEvent)> = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().iter().cloned());
+        }
+        all.sort_by_key(|&(seq, _)| seq);
+        all.into_iter().map(|(_, ev)| ev).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn submit() -> TraceKind {
+        TraceKind::Submit {
+            model: "m".into(),
+            priority: "normal".into(),
+            deadline_us: 1000,
+            tiles: 4,
+            h: 8,
+            w: 8,
+        }
+    }
+
+    #[test]
+    fn span_ids_are_unique_and_nonzero() {
+        let a = mint_span();
+        let b = mint_span();
+        assert!(a > 0 && b > 0 && a != b);
+    }
+
+    #[test]
+    fn event_lines_are_house_style_and_parseable() {
+        let ev = TraceEvent {
+            span: 3,
+            at_us: 120,
+            kind: TraceKind::Shed {
+                why: "predicted past deadline".into(),
+                predicted_us: 900,
+                deadline_us: 800,
+                decided_us: 100,
+            },
+        };
+        let line = ev.to_json_line();
+        assert!(line.starts_with("{\"span\": 3, \"at_us\": 120, \"event\": \"shed\""));
+        let doc = crate::tune::json::parse(&line).unwrap();
+        assert_eq!(doc.get("predicted_us").and_then(|j| j.as_u64()), Some(900));
+        assert_eq!(
+            doc.get("why").and_then(crate::tune::json::Json::as_str),
+            Some("predicted past deadline")
+        );
+    }
+
+    #[test]
+    fn accounting_is_exact_for_a_clean_lifecycle() {
+        let mut log = TraceLog::new();
+        log.record(1, 0, submit());
+        log.record(2, 1, submit());
+        log.record(3, 2, submit());
+        log.record(1, 5, TraceKind::Batch { size: 1, predicted_us: 40 });
+        log.record(1, 9, TraceKind::Complete { latency_us: 9, batch_size: 1 });
+        log.record(2, 3, TraceKind::Reject { why: "queue_full".into() });
+        log.record(
+            3,
+            4,
+            TraceKind::Shed {
+                why: "hopeless".into(),
+                predicted_us: 99,
+                deadline_us: 50,
+                decided_us: 4,
+            },
+        );
+        let acc = log.accounting();
+        assert_eq!(
+            acc,
+            SpanAccounting {
+                submitted: 3,
+                completed: 1,
+                rejected: 1,
+                shed: 1,
+                exact: true
+            }
+        );
+    }
+
+    #[test]
+    fn accounting_flags_double_terminal_and_orphans() {
+        let mut log = TraceLog::new();
+        log.record(1, 0, submit());
+        log.record(1, 1, TraceKind::Complete { latency_us: 1, batch_size: 1 });
+        log.record(1, 2, TraceKind::Reject { why: "again".into() });
+        assert!(!log.accounting().exact, "double terminal must not be exact");
+
+        let mut log = TraceLog::new();
+        log.record(7, 0, TraceKind::Complete { latency_us: 1, batch_size: 1 });
+        assert!(!log.accounting().exact, "orphan terminal must not be exact");
+
+        let mut log = TraceLog::new();
+        log.record(1, 0, submit());
+        assert!(!log.accounting().exact, "dangling span must not be exact");
+    }
+
+    #[test]
+    fn tracer_drains_in_sequence_order_across_threads() {
+        let tracer = std::sync::Arc::new(Tracer::new(1 << 10));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let tr = tracer.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    tr.record(
+                        t * 100 + i,
+                        i,
+                        TraceKind::Batch { size: 1, predicted_us: i },
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let events = tracer.drain();
+        assert_eq!(events.len(), 200);
+        assert_eq!(tracer.dropped(), 0);
+        // Second drain is empty: drain is destructive.
+        assert!(tracer.drain().is_empty());
+    }
+
+    #[test]
+    fn tracer_bounds_memory_and_counts_drops() {
+        let tracer = Tracer::new(2);
+        // All events on one span → one shard → cap bites at 2.
+        for i in 0..5u64 {
+            tracer.record(8, i, TraceKind::Batch { size: 1, predicted_us: 0 });
+        }
+        assert_eq!(tracer.drain().len(), 2);
+        assert_eq!(tracer.dropped(), 3);
+    }
+}

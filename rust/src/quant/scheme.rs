@@ -102,6 +102,20 @@ impl Quantizer {
         (q as i32).clamp(-qmax, qmax)
     }
 
+    /// Quantize with a saturation flag for numeric-health telemetry:
+    /// the value is **bit-identical** to [`quantize`](Self::quantize)
+    /// (same divide, round, cast, clamp), and the flag reports whether
+    /// the rounded code fell outside `[−qmax, qmax]` — i.e. the clamp
+    /// actually clipped. NaN inputs quantize to 0 and do not count as
+    /// saturated (matching the cast semantics of the value path).
+    #[inline]
+    pub fn quantize_sat(&self, x: f64) -> (i32, bool) {
+        let qmax = Self::qmax(self.bits);
+        let q = (x / self.scale).round();
+        let sat = q > qmax as f64 || q < -(qmax as f64);
+        ((q as i32).clamp(-qmax, qmax), sat)
+    }
+
     /// Integer code back to real.
     pub fn dequantize(&self, q: i32) -> f64 {
         q as f64 * self.scale
@@ -164,6 +178,18 @@ impl Requant {
     pub fn apply(&self, acc: i64) -> i32 {
         let q = ((acc as f64 * self.prod_scale) / self.scale).round();
         (q as i32).clamp(-self.qmax, self.qmax)
+    }
+
+    /// [`apply`](Self::apply) with a saturation flag: the value takes
+    /// the exact same multiply/divide/round/cast/clamp path (the
+    /// bit-parity invariant is untouched), and the flag reports whether
+    /// the clamp clipped — the per-layer requant-clipping signal of the
+    /// numeric-health telemetry.
+    #[inline]
+    pub fn apply_sat(&self, acc: i64) -> (i32, bool) {
+        let q = ((acc as f64 * self.prod_scale) / self.scale).round();
+        let sat = q > self.qmax as f64 || q < -(self.qmax as f64);
+        ((q as i32).clamp(-self.qmax, self.qmax), sat)
     }
 }
 
@@ -403,6 +429,38 @@ mod tests {
         // hard to construct deterministically across platforms, but the
         // exact-ops invariant above subsumes it: apply() *is* quantize()
         // on the same f64 intermediate.
+    }
+
+    #[test]
+    fn sat_variants_match_values_and_flag_only_real_clips() {
+        use crate::wino::error::Prng;
+        let q = Quantizer::with_scale(8, 1.0);
+        assert_eq!(q.quantize_sat(126.4), (126, false));
+        assert_eq!(q.quantize_sat(127.4), (127, false), "rounds inside range");
+        assert_eq!(q.quantize_sat(127.6), (127, true), "rounds past qmax");
+        assert_eq!(q.quantize_sat(-1e9), (-127, true));
+        assert_eq!(q.quantize_sat(f64::NAN), (0, false), "NaN is not a clip");
+        let rq = q.requant(1.0);
+        assert_eq!(rq.apply_sat(127), (127, false));
+        assert_eq!(rq.apply_sat(128), (127, true));
+        assert_eq!(rq.apply_sat(-4000), (-127, true));
+        // Values always agree with the unflagged paths, and the flag is
+        // exactly "the unclamped rounded code left [-qmax, qmax]".
+        let mut rng = Prng::new(0xA7);
+        for _ in 0..4000 {
+            let bits = 2 + (rng.next_u64() % 15) as u32;
+            let hq = Quantizer::with_scale(bits, 10f64.powf(rng.uniform(4.0)));
+            let x = rng.uniform(1.0) * 10f64.powf(rng.uniform(5.0));
+            let (code, sat) = hq.quantize_sat(x);
+            assert_eq!(code, hq.quantize(x));
+            let unclamped = (x / hq.scale).round();
+            assert_eq!(sat, unclamped.abs() > Quantizer::qmax(bits) as f64);
+            let ps = 10f64.powf(rng.uniform(4.0));
+            let rq = hq.requant(ps);
+            let acc = rng.next_u64() as i64 >> (rng.next_u64() % 40);
+            let (rc, _) = rq.apply_sat(acc);
+            assert_eq!(rc, rq.apply(acc));
+        }
     }
 
     #[test]

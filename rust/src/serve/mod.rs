@@ -70,14 +70,16 @@ pub use queue::{
 };
 pub use registry::{ModelRegistry, ServedModel};
 pub use sched::{admission_caps, Poll, Priority, SchedItem, Scheduler, Shed, SubmitOpts};
-pub use shard::{with_shards, ShardRouter, ShardSpec};
+pub use shard::{with_shards, with_shards_traced, ShardRouter, ShardSpec};
 pub use stats::{ServeStats, StatsReport};
 
 use crate::engine::{EngineScratch, WinoEngine};
 use crate::nn::layers::Conv2dCfg;
 use crate::nn::tensor::Tensor;
+use crate::obs::{TraceKind, Tracer};
 use crate::tune::cost::TileCostModel;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Anything the serve loop can host: a batched forward pass over stacked
@@ -109,6 +111,14 @@ pub trait BatchModel: Sync {
     /// exact-shape models, where only one shape is admitted).
     fn tiles_for(&self, _h: usize, _w: usize) -> u64 {
         self.tiles_per_item().max(1) as u64
+    }
+
+    /// Side-effect-free probe: would a [`tiles_for`](BatchModel::tiles_for)
+    /// call at `(h, w)` hit a plan/geometry cache? `Some(hit)` lets the
+    /// tracing layer stamp a `plan_cache` event on the request's span;
+    /// `None` (the default) means the model keeps no such cache.
+    fn plan_cache_probe(&self, _h: usize, _w: usize) -> Option<bool> {
+        None
     }
 }
 
@@ -213,12 +223,29 @@ pub fn with_server<R>(
     stats: &ServeStats,
     client: impl FnOnce(&ServeQueue) -> R,
 ) -> R {
+    with_server_traced(model, cfg, stats, None, client)
+}
+
+/// [`with_server`] with an optional [`Tracer`]: admission records
+/// submit/reject events and the worker loop records
+/// shed/batch/stage/complete, so draining the tracer afterwards yields
+/// every request's full lifecycle (`winoq serve --trace-json`).
+pub fn with_server_traced<R>(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    tracer: Option<Arc<Tracer>>,
+    client: impl FnOnce(&ServeQueue) -> R,
+) -> R {
     // Shape-validating queue: malformed submissions are rejected at
     // admission instead of reaching (and panicking) a worker. Plain
     // `submit` calls carry the model's nominal tile weight into the
     // scheduler's cost model.
-    let queue = ServeQueue::with_policy(cfg.queue_cap, model.shape_policy())
+    let mut queue = ServeQueue::with_policy(cfg.queue_cap, model.shape_policy())
         .with_default_tiles(model.tiles_per_item().max(1) as u64);
+    if let Some(tr) = tracer {
+        queue = queue.with_tracer(tr);
+    }
     std::thread::scope(|scope| {
         for _ in 0..cfg.workers.max(1) {
             scope.spawn(|| {
@@ -247,6 +274,9 @@ fn worker_loop(
         // burning an engine pass they could never ride in time.
         for (req, why) in drained.shed {
             stats.record_shed();
+            if let Some(tr) = queue.tracer() {
+                tr.record(req.span, queue.now_us(), why.trace_event());
+            }
             let _ = req.tx.send(Err(why));
         }
         let batch = drained.batch;
@@ -271,8 +301,45 @@ fn worker_loop(
         let mut dims = Vec::with_capacity(item_dims.len() + 1);
         dims.push(bsz);
         dims.extend_from_slice(&item_dims);
+        let (h, w) = match item_dims.as_slice() {
+            [.., h, w] => (*h, *w),
+            _ => (1, 1),
+        };
+        let batch_tiles = model.tiles_for(h, w) * bsz as u64;
+        if let Some(tr) = queue.tracer() {
+            let predicted_us =
+                cfg.cost.as_ref().map_or(0, |c| c.predict_us(batch_tiles));
+            let at = queue.now_us();
+            for req in &batch {
+                tr.record(
+                    req.span,
+                    at,
+                    TraceKind::Batch { size: bsz as u64, predicted_us },
+                );
+            }
+        }
         let y = model.infer_batch(&Tensor::from_vec(&dims, data), &mut scratch);
         assert_eq!(y.dims[0], bsz, "model must preserve the batch axis");
+        // Per-stage engine breakdown for this batch (accumulated in the
+        // worker's scratch across every layer of the pass) — the stats
+        // JSON's `stage_ns` view of *where* serving time goes, and each
+        // member span's `stage` trace event.
+        let stage_ns = scratch.take_stage_ns();
+        if let Some(tr) = queue.tracer() {
+            let at = queue.now_us();
+            for req in &batch {
+                tr.record(
+                    req.span,
+                    at,
+                    TraceKind::Stage {
+                        input_transform_ns: stage_ns[0],
+                        hadamard_ns: stage_ns[1],
+                        inverse_ns: stage_ns[2],
+                        tiles: batch_tiles,
+                    },
+                );
+            }
+        }
         let row = y.data.len() / bsz;
         let out_dims: Vec<usize> = y.dims[1..].to_vec();
         let mut lat_us = Vec::with_capacity(bsz);
@@ -284,26 +351,21 @@ fn worker_loop(
             if req.deadline_us.is_some_and(|d| queue.now_us() > d) {
                 missed += 1;
             }
+            if let Some(tr) = queue.tracer() {
+                tr.record(
+                    req.span,
+                    queue.now_us(),
+                    TraceKind::Complete { latency_us, batch_size: bsz as u64 },
+                );
+            }
             // A gone client (dropped receiver) is not a server error.
             let _ = req.tx.send(Ok(Response { output, latency_us, batch_size: bsz }));
         }
-        let (h, w) = match item_dims.as_slice() {
-            [.., h, w] => (*h, *w),
-            _ => (1, 1),
-        };
-        stats.record_batch(
-            bsz,
-            model.tiles_for(h, w) * bsz as u64,
-            depth_after_drain,
-            &lat_us,
-        );
+        stats.record_batch(bsz, batch_tiles, depth_after_drain, &lat_us);
         if missed > 0 {
             stats.record_deadline_miss(missed);
         }
-        // Per-stage engine breakdown for this batch (accumulated in the
-        // worker's scratch across every layer of the pass) — the stats
-        // JSON's `stage_ns` view of *where* serving time goes.
-        stats.record_stage_ns(scratch.take_stage_ns());
+        stats.record_stage_ns(stage_ns);
     }
 }
 
@@ -320,11 +382,48 @@ pub fn run_closed_loop(
     total_requests: usize,
     concurrency: usize,
 ) -> StatsReport {
+    run_closed_loop_with(model, cfg, &ServeStats::new(), inputs, total_requests, concurrency, None)
+}
+
+/// [`run_closed_loop`] with a [`Tracer`] attached to the session's
+/// queue: every request's lifecycle lands in `tracer` (admission
+/// rejections that the closed loop retries each mint their own span
+/// and terminate it with a `reject`, so accounting stays exact).
+pub fn run_closed_loop_traced(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    inputs: &[Tensor],
+    total_requests: usize,
+    concurrency: usize,
+    tracer: &Arc<Tracer>,
+) -> StatsReport {
+    run_closed_loop_with(
+        model,
+        cfg,
+        &ServeStats::new(),
+        inputs,
+        total_requests,
+        concurrency,
+        Some(tracer.clone()),
+    )
+}
+
+/// The shared closed-loop body: caller-supplied [`ServeStats`] (so the
+/// CLI can [`export_metrics`](ServeStats::export_metrics) from the same
+/// sink afterwards) and an optional tracer.
+pub fn run_closed_loop_with(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    inputs: &[Tensor],
+    total_requests: usize,
+    concurrency: usize,
+    tracer: Option<Arc<Tracer>>,
+) -> StatsReport {
     assert!(!inputs.is_empty(), "need at least one input to serve");
-    let stats = ServeStats::new();
     let started = Instant::now();
     let next = AtomicUsize::new(0);
-    with_server(model, cfg, &stats, |queue| {
+    with_server_traced(model, cfg, stats, tracer, |queue| {
         std::thread::scope(|s| {
             for _ in 0..concurrency.max(1) {
                 s.spawn(|| loop {
@@ -463,6 +562,59 @@ mod tests {
             });
         }));
         assert!(result.is_err(), "the worker's panic must propagate, not vanish");
+    }
+
+    #[test]
+    fn traced_session_reconstructs_every_span_exactly() {
+        use crate::obs::TraceSink;
+        let (engine, inputs) = engine_and_inputs();
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let model = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let cfg = ServeConfig {
+            max_batch: 4,
+            batch_window_us: 200,
+            queue_cap: 8,
+            workers: 2,
+            cost: None,
+        };
+        let tracer = Arc::new(Tracer::default());
+        let report = run_closed_loop_traced(&model, &cfg, &inputs, 17, 4, &tracer);
+        assert_eq!(report.completed, 17);
+        let acc = tracer.accounting();
+        assert!(acc.exact, "every span must end in exactly one terminal: {acc:?}");
+        assert_eq!(acc.completed, report.completed);
+        assert_eq!(acc.rejected, report.rejected);
+        assert_eq!(acc.shed, report.shed);
+        // Completed spans carry the full lifecycle: batch + stage
+        // between submit and complete.
+        let events = tracer.events();
+        let done: Vec<u64> = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::Complete { .. }))
+            .map(|e| e.span)
+            .collect();
+        for span in done {
+            let kinds: Vec<&str> = events
+                .iter()
+                .filter(|e| e.span == span)
+                .map(|e| match &e.kind {
+                    TraceKind::Submit { .. } => "submit",
+                    TraceKind::Batch { .. } => "batch",
+                    TraceKind::Stage { .. } => "stage",
+                    TraceKind::Complete { .. } => "complete",
+                    _ => "other",
+                })
+                .collect();
+            assert_eq!(
+                kinds,
+                ["submit", "batch", "stage", "complete"],
+                "span {span} lifecycle out of order"
+            );
+        }
+        // Every line renders as parseable JSON.
+        for line in tracer.to_json_lines().lines() {
+            crate::tune::json::parse(line).unwrap();
+        }
     }
 
     #[test]

@@ -226,6 +226,17 @@ impl PlanCache {
         tiles
     }
 
+    /// Whether `(model, h, w)` geometry is already cached — a
+    /// side-effect-free probe (no counter movement, no insertion) the
+    /// tracing layer uses to stamp each request's `plan_cache` event
+    /// before [`tiles_for_shape`](Self::tiles_for_shape) resolves it.
+    pub fn has_shape(&self, model: &str, h: usize, w: usize) -> bool {
+        self.shape_tiles
+            .lock()
+            .unwrap()
+            .contains_key(&(model.to_string(), h, w))
+    }
+
     /// Number of distinct `(model, h, w)` geometry entries cached.
     pub fn shape_count(&self) -> usize {
         self.shape_tiles.lock().unwrap().len()
@@ -281,6 +292,32 @@ impl PlanCache {
     pub fn packed_counters(&self) -> CacheCounters {
         *self.packed_counters.lock().unwrap()
     }
+
+    /// Publish every cache's hit/miss counters and entry counts into a
+    /// [`MetricsRegistry`](crate::obs::MetricsRegistry) under the
+    /// `plan_cache.*` names — the registry-snapshot view of the same
+    /// telemetry `to_json_with_plan_cache` embeds in the stats JSON.
+    pub fn export_metrics(&self, reg: &crate::obs::MetricsRegistry) {
+        let (plans, banks) = self.counters();
+        for (name, c) in [
+            ("plans", plans),
+            ("banks", banks),
+            ("int_banks", self.int_counters()),
+            ("packed_banks", self.packed_counters()),
+            ("shape_keys", self.shape_counters()),
+        ] {
+            reg.inc(&format!("plan_cache.{name}.hits"), c.hits);
+            reg.inc(&format!("plan_cache.{name}.misses"), c.misses);
+        }
+        reg.set_gauge("plan_cache.plans.entries", self.plan_count() as f64);
+        reg.set_gauge("plan_cache.banks.entries", self.bank_count() as f64);
+        reg.set_gauge("plan_cache.int_banks.entries", self.int_bank_count() as f64);
+        reg.set_gauge(
+            "plan_cache.packed_banks.entries",
+            self.packed_bank_count() as f64,
+        );
+        reg.set_gauge("plan_cache.shape_keys.entries", self.shape_count() as f64);
+    }
 }
 
 #[cfg(test)]
@@ -330,6 +367,35 @@ mod tests {
         );
         let c = cache.shape_counters();
         assert_eq!((c.hits, c.misses), (1, 3));
+    }
+
+    #[test]
+    fn has_shape_probe_moves_no_counters() {
+        let cache = PlanCache::new();
+        assert!(!cache.has_shape("a", 32, 32));
+        assert_eq!(cache.shape_counters(), CacheCounters::default());
+        cache.tiles_for_shape("a", 32, 32, || 383);
+        assert!(cache.has_shape("a", 32, 32));
+        assert!(!cache.has_shape("b", 32, 32));
+        let c = cache.shape_counters();
+        assert_eq!((c.hits, c.misses), (0, 1), "probes must not count");
+    }
+
+    #[test]
+    fn export_metrics_publishes_counters_and_entry_counts() {
+        let cache = PlanCache::new();
+        let key = PlanKey::f(4, 3, Base::Legendre);
+        cache.wf(key);
+        cache.wf(key);
+        cache.tiles_for_shape("a", 32, 32, || 383);
+        let reg = crate::obs::MetricsRegistry::new();
+        cache.export_metrics(&reg);
+        assert_eq!(reg.counter("plan_cache.plans.hits"), 1);
+        assert_eq!(reg.counter("plan_cache.plans.misses"), 1);
+        assert_eq!(reg.gauge("plan_cache.plans.entries"), Some(1.0));
+        assert_eq!(reg.counter("plan_cache.shape_keys.misses"), 1);
+        assert_eq!(reg.gauge("plan_cache.shape_keys.entries"), Some(1.0));
+        assert_eq!(reg.gauge("plan_cache.banks.entries"), Some(0.0));
     }
 
     #[test]

@@ -24,10 +24,11 @@
 
 use super::sched::{Poll, Priority, SchedItem, Scheduler, Shed, SubmitOpts};
 use crate::nn::tensor::Tensor;
+use crate::obs::{mint_span, TraceKind, Tracer};
 use crate::tune::cost::TileCostModel;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Admission rejection. Only [`Full`](Rejected::Full) is transient —
@@ -117,6 +118,10 @@ impl ShapePolicy {
 
 /// One queued inference request.
 pub struct Request {
+    /// Trace span minted at admission ([`crate::obs::mint_span`]) —
+    /// stamps every event this request generates downstream (batch,
+    /// stage, shed, complete) so `--trace-json` output groups by it.
+    pub span: u64,
     /// Per-item input tensor (no batch axis; e.g. `[C, H, W]`).
     pub input: Tensor,
     /// Admission timestamp — latency is measured from here.
@@ -173,6 +178,21 @@ pub struct ServeQueue {
     /// requests (cost-aware callers use
     /// [`submit_with_tiles`](ServeQueue::submit_with_tiles)).
     default_tiles: u64,
+    /// Model name stamped on this queue's submit trace events (each
+    /// queue serves exactly one model; the router labels its queues).
+    model_label: String,
+    /// When set, admission records submit/reject trace events here and
+    /// workers record the rest of each span's lifecycle.
+    tracer: Option<Arc<Tracer>>,
+}
+
+/// The `priority` label trace events carry.
+pub(crate) fn lane(p: Priority) -> &'static str {
+    match p {
+        Priority::High => "high",
+        Priority::Normal => "normal",
+        Priority::Low => "low",
+    }
 }
 
 /// Pop the payload a dispatched [`SchedItem`] refers to.
@@ -222,6 +242,8 @@ impl ServeQueue {
             epoch: Instant::now(),
             policy,
             default_tiles: 1,
+            model_label: "default".to_string(),
+            tracer: None,
         }
     }
 
@@ -231,6 +253,28 @@ impl ServeQueue {
     pub fn with_default_tiles(mut self, tiles: u64) -> ServeQueue {
         self.default_tiles = tiles.max(1);
         self
+    }
+
+    /// Set the model name this queue's trace events carry (the shard
+    /// router labels each per-model queue it builds).
+    pub fn with_model_label(mut self, name: &str) -> ServeQueue {
+        self.model_label = name.to_string();
+        self
+    }
+
+    /// Attach a [`Tracer`]: admission starts recording submit/reject
+    /// events, and workers (which read it back via
+    /// [`tracer`](Self::tracer)) record shed/batch/stage/complete, so
+    /// every span ends in exactly one terminal event.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> ServeQueue {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// The attached tracer, if any — workers stamp batch-side events
+    /// through this.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
     }
 
     /// Microseconds elapsed on this queue's clock (the timeline request
@@ -265,24 +309,63 @@ impl ServeQueue {
         opts: SubmitOpts,
         tiles: u64,
     ) -> Result<Receiver<ServeResult>, Rejected> {
-        if let Some(policy) = &self.policy {
-            policy.validate(&input.dims)?;
-        }
+        self.submit_span(input, opts, tiles, mint_span())
+    }
+
+    /// [`submit_with_tiles`](Self::submit_with_tiles) with a
+    /// caller-minted span — the router mints early so it can attach
+    /// routing-side events (plan-cache probes) to the same span.
+    pub(crate) fn submit_span(
+        &self,
+        input: Tensor,
+        opts: SubmitOpts,
+        tiles: u64,
+        span: u64,
+    ) -> Result<Receiver<ServeResult>, Rejected> {
         let shape = spatial(&input.dims);
+        if let Some(tr) = &self.tracer {
+            // The submit event carries the request's *relative* SLO
+            // (microseconds of budget); shed events carry the absolute
+            // queue-clock numbers that justified the drop.
+            tr.record(
+                span,
+                self.now_us(),
+                TraceKind::Submit {
+                    model: self.model_label.clone(),
+                    priority: lane(opts.priority).to_string(),
+                    deadline_us: opts.deadline_us.unwrap_or(0),
+                    tiles: tiles.max(1),
+                    h: shape.0 as u64,
+                    w: shape.1 as u64,
+                },
+            );
+        }
+        let reject = |why: &str, err: Rejected| {
+            if let Some(tr) = &self.tracer {
+                tr.record(span, self.now_us(), TraceKind::Reject { why: why.to_string() });
+            }
+            Err(err)
+        };
+        if let Some(policy) = &self.policy {
+            if let Err(e) = policy.validate(&input.dims) {
+                return reject("bad_shape", e);
+            }
+        }
         let mut st = self.state.lock().unwrap();
         if st.closed {
-            return Err(Rejected::Closed);
+            return reject("closed", Rejected::Closed);
         }
         let now = self.now_us();
         let deadline = opts.deadline_us.map(|d| now.saturating_add(d));
         let Some(seq) = st.sched.submit(now, opts.priority, deadline, tiles.max(1), shape)
         else {
-            return Err(Rejected::Full);
+            return reject("queue_full", Rejected::Full);
         };
         let (tx, rx) = channel();
         st.reqs.insert(
             seq,
             Request {
+                span,
                 input,
                 enqueued: Instant::now(),
                 deadline_us: deadline,
@@ -535,6 +618,49 @@ mod tests {
         let batch = q.next_batch(1, Duration::from_secs(5)).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t.elapsed() < Duration::from_secs(1), "no window wait at max_batch 1");
+    }
+
+    #[test]
+    fn admission_records_submit_and_reject_spans() {
+        use crate::obs::TraceSink;
+        let tracer = Arc::new(Tracer::new(1 << 10));
+        let q = ServeQueue::with_dims(1, vec![1, 2, 2])
+            .with_model_label("resnet")
+            .with_tracer(tracer.clone());
+        let _ok = q.submit(item(1.0)).unwrap();
+        assert_eq!(q.submit(item(2.0)).unwrap_err(), Rejected::Full);
+        let bad = Tensor::from_vec(&[2, 2], vec![0.0; 4]);
+        assert!(matches!(q.submit(bad).unwrap_err(), Rejected::Shape { .. }));
+        let events = tracer.events();
+        assert_eq!(events.len(), 5, "3 submits + 2 rejects");
+        let submits: Vec<_> = events
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::Submit { .. }))
+            .collect();
+        assert_eq!(submits.len(), 3);
+        for ev in &submits {
+            match &ev.kind {
+                TraceKind::Submit { model, priority, h, w, .. } => {
+                    assert_eq!((model.as_str(), priority.as_str()), ("resnet", "normal"));
+                    assert_eq!((*h, *w), (2, 2));
+                }
+                _ => unreachable!(),
+            }
+        }
+        // Each reject stamps the span its own submit minted.
+        let whys: Vec<(u64, String)> = events
+            .iter()
+            .filter_map(|e| match &e.kind {
+                TraceKind::Reject { why } => Some((e.span, why.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(whys.len(), 2);
+        assert_eq!(whys[0], (submits[1].span, "queue_full".to_string()));
+        assert_eq!(whys[1], (submits[2].span, "bad_shape".to_string()));
+        // The admitted request carries its span into the batch.
+        let batch = q.next_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(batch[0].span, submits[0].span);
     }
 
     #[test]

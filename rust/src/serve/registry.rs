@@ -93,6 +93,10 @@ impl BatchModel for ServedModel {
             })
             .max(1)
     }
+
+    fn plan_cache_probe(&self, h: usize, w: usize) -> Option<bool> {
+        Some(self.plans.has_shape(&self.name, h, w))
+    }
 }
 
 /// Named model registry sharing one [`PlanCache`].

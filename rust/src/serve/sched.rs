@@ -91,6 +91,26 @@ pub struct Shed {
     pub decided_us: u64,
 }
 
+impl Shed {
+    /// How far past the deadline the request was predicted to land
+    /// (`decided + predicted − deadline`, µs) — strictly positive by
+    /// the shed invariant; the number a trace reader sorts sheds by.
+    pub fn overshoot_us(&self) -> u64 {
+        (self.decided_us + self.predicted_us).saturating_sub(self.deadline_us)
+    }
+
+    /// The trace event this justification renders as — stamped on the
+    /// span by whichever layer delivers the shed notice.
+    pub fn trace_event(&self) -> crate::obs::TraceKind {
+        crate::obs::TraceKind::Shed {
+            why: "deadline_unreachable".to_string(),
+            predicted_us: self.predicted_us,
+            deadline_us: self.deadline_us,
+            decided_us: self.decided_us,
+        }
+    }
+}
+
 /// Outcome of one [`Scheduler::poll`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Poll {
@@ -313,6 +333,19 @@ mod tests {
 
     fn item_at(s: &mut Scheduler, now: u64, pri: Priority, d: Option<u64>, tiles: u64) -> u64 {
         s.submit(now, pri, d, tiles, (8, 8)).expect("under cap")
+    }
+
+    #[test]
+    fn shed_justification_renders_overshoot_and_trace_event() {
+        let shed = Shed { predicted_us: 900, deadline_us: 800, decided_us: 100 };
+        assert_eq!(shed.overshoot_us(), 200);
+        match shed.trace_event() {
+            crate::obs::TraceKind::Shed { why, predicted_us, deadline_us, decided_us } => {
+                assert_eq!(why, "deadline_unreachable");
+                assert_eq!((predicted_us, deadline_us, decided_us), (900, 800, 100));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
     }
 
     #[test]

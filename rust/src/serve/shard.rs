@@ -18,12 +18,14 @@
 //! downstream — shape validation, weighted admission, deadline-based
 //! closing, shedding — is the per-shard queue's ordinary behaviour.
 
-use super::queue::{Rejected, ServeQueue, ServeResult};
+use super::queue::{lane, Rejected, ServeQueue, ServeResult};
 use super::sched::{admission_caps, SubmitOpts};
 use super::stats::ServeStats;
 use super::{worker_loop, AbortOnPanic, BatchModel, CloseOnDrop, ServeConfig};
 use crate::nn::tensor::Tensor;
+use crate::obs::{mint_span, TraceKind, Tracer};
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 
 /// One shard's static description: the model it serves, its share of the
 /// admission budget, and its serving knobs.
@@ -51,6 +53,10 @@ struct Shard<'a> {
 /// to the named model's shard.
 pub struct ShardRouter<'a> {
     shards: Vec<Shard<'a>>,
+    /// Router-level tracer: each shard's queue stamps admission events
+    /// itself; the router only needs this for routing failures, which
+    /// never reach a queue.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl ShardRouter<'_> {
@@ -65,14 +71,48 @@ impl ShardRouter<'_> {
         opts: SubmitOpts,
     ) -> Result<Receiver<ServeResult>, Rejected> {
         let Some(shard) = self.shards.iter().find(|s| s.name == model) else {
+            // Routing failure: no queue ever saw this request, so the
+            // router itself opens and terminates the span.
+            if let Some(tr) = &self.tracer {
+                let span = mint_span();
+                let (h, w) = match input.dims.as_slice() {
+                    [.., h, w] => (*h as u64, *w as u64),
+                    _ => (1, 1),
+                };
+                tr.record(
+                    span,
+                    0,
+                    TraceKind::Submit {
+                        model: model.to_string(),
+                        priority: lane(opts.priority).to_string(),
+                        deadline_us: opts.deadline_us.unwrap_or(0),
+                        tiles: 0,
+                        h,
+                        w,
+                    },
+                );
+                tr.record(span, 0, TraceKind::Reject { why: "unknown_model".to_string() });
+            }
             return Err(Rejected::UnknownModel { name: model.to_string() });
         };
         let (h, w) = match input.dims.as_slice() {
             [.., h, w] => (*h, *w),
             _ => (1, 1),
         };
+        // Probe before `tiles_for` resolves (and inserts) the geometry —
+        // the event must report what the cache knew at admission.
+        let plan_hit = shard.model.plan_cache_probe(h, w);
         let tiles = shard.model.tiles_for(h, w);
-        shard.queue.submit_with_tiles(input, opts, tiles)
+        let span = mint_span();
+        let rx = shard.queue.submit_span(input, opts, tiles, span)?;
+        if let (Some(tr), Some(hit)) = (&self.tracer, plan_hit) {
+            tr.record(
+                span,
+                shard.queue.now_us(),
+                TraceKind::PlanCache { model: shard.name.to_string(), hit },
+            );
+        }
+        Ok(rx)
     }
 
     /// Registered shard names, in registration order.
@@ -99,6 +139,21 @@ pub fn with_shards<'a, R>(
     stats: &[ServeStats],
     client: impl FnOnce(&ShardRouter<'a>) -> R,
 ) -> R {
+    with_shards_traced(shards, budget, stats, None, client)
+}
+
+/// [`with_shards`] with an optional [`Tracer`] shared by every shard:
+/// each per-model queue stamps its admission events under its own model
+/// label, workers stamp batch-side events, and the router terminates
+/// unknown-model spans — so one drain reconstructs the whole fleet's
+/// traffic with exact accounting.
+pub fn with_shards_traced<'a, R>(
+    shards: &[ShardSpec<'a>],
+    budget: usize,
+    stats: &[ServeStats],
+    tracer: Option<Arc<Tracer>>,
+    client: impl FnOnce(&ShardRouter<'a>) -> R,
+) -> R {
     assert!(!shards.is_empty(), "need at least one shard");
     assert_eq!(shards.len(), stats.len(), "one ServeStats per shard");
     let weights: Vec<u64> = shards.iter().map(|s| s.weight).collect();
@@ -107,13 +162,17 @@ pub fn with_shards<'a, R>(
         shards: shards
             .iter()
             .zip(&caps)
-            .map(|(spec, &cap)| Shard {
-                name: spec.name,
-                model: spec.model,
-                queue: ServeQueue::with_policy(cap, spec.model.shape_policy())
-                    .with_default_tiles(spec.model.tiles_per_item().max(1) as u64),
+            .map(|(spec, &cap)| {
+                let mut queue = ServeQueue::with_policy(cap, spec.model.shape_policy())
+                    .with_default_tiles(spec.model.tiles_per_item().max(1) as u64)
+                    .with_model_label(spec.name);
+                if let Some(tr) = &tracer {
+                    queue = queue.with_tracer(tr.clone());
+                }
+                Shard { name: spec.name, model: spec.model, queue }
             })
             .collect(),
+        tracer,
     };
     std::thread::scope(|scope| {
         for (i, spec) in shards.iter().enumerate() {
@@ -172,6 +231,53 @@ mod tests {
         // Per-shard stats separation: only shard a served anything.
         assert_eq!(stats[0].completed(), 1);
         assert_eq!(stats[1].completed(), 0);
+    }
+
+    #[test]
+    fn traced_fleet_labels_models_and_terminates_unknown_routes() {
+        use crate::obs::TraceSink;
+        let w = prng_tensor(93, &[3, 2, 3, 3], 0.4);
+        let engine = WinoEngine::from_weights(4, &w, Base::Legendre);
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let model_a = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let model_b = EngineModel::new(&engine, conv, [2, 8, 8]);
+        let specs = [
+            ShardSpec { name: "a", model: &model_a, weight: 1, cfg: ServeConfig::default() },
+            ShardSpec { name: "b", model: &model_b, weight: 1, cfg: ServeConfig::default() },
+        ];
+        let stats = [ServeStats::new(), ServeStats::new()];
+        let tracer = Arc::new(Tracer::default());
+        with_shards_traced(&specs, 8, &stats, Some(tracer.clone()), |router| {
+            let x = prng_tensor(19, &[2, 8, 8], 1.0);
+            let rx = router.submit("b", x.clone(), SubmitOpts::default()).unwrap();
+            rx.recv().unwrap().unwrap();
+            assert!(matches!(
+                router.submit("ghost", x, SubmitOpts::default()),
+                Err(Rejected::UnknownModel { .. })
+            ));
+        });
+        let acc = tracer.accounting();
+        assert!(acc.exact, "{acc:?}");
+        assert_eq!((acc.completed, acc.rejected), (1, 1));
+        // The completed span is labeled with its shard's model name, the
+        // rejected one with the name no shard answered to.
+        let events = tracer.events();
+        let labels: Vec<&str> = events
+            .iter()
+            .filter_map(|e| match &e.kind {
+                TraceKind::Submit { model, .. } => Some(model.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(labels, ["b", "ghost"]);
+        let why = events
+            .iter()
+            .find_map(|e| match &e.kind {
+                TraceKind::Reject { why } => Some(why.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(why, "unknown_model");
     }
 
     #[test]

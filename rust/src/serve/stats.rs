@@ -3,24 +3,36 @@
 //!
 //! One [`ServeStats`] is shared by all workers and clients of a serving
 //! run (interior mutability; workers record one batch at a time, so the
-//! single mutex is uncontended relative to engine passes). At the end of
-//! a run [`ServeStats::report`] folds the raw samples into a
-//! [`StatsReport`] — p50/p95/p99 latency (nearest-rank, via
-//! [`benchkit::percentile_sorted`]), requests/sec and tiles/sec — whose
-//! [`to_json`](StatsReport::to_json) output is what
+//! single mutex is uncontended relative to engine passes). Latency
+//! samples fold straight into a log-bucketed
+//! [`LogHistogram`](crate::obs::LogHistogram) — **fixed memory however
+//! long the run**, where the pre-observability version kept one `u64`
+//! per completed request and grew without bound under soak. At the end
+//! of a run [`ServeStats::report`] folds the aggregates into a
+//! [`StatsReport`] — p50/p95/p99/p99.9 latency (nearest-rank over the
+//! histogram buckets, ≤ ~41% bucket-width relative error, exact min/max)
+//! — whose [`to_json`](StatsReport::to_json) output is what
 //! `winoq serve --stats-json` writes and `scripts/ci.sh` smoke-checks.
+//! [`ServeStats::export_metrics`] additionally publishes the same
+//! aggregates into a process-wide
+//! [`MetricsRegistry`](crate::obs::MetricsRegistry) under the
+//! `serve.*` / `engine.stage_ns.*` names (`winoq serve
+//! --metrics-json`).
 
 use super::plan::CacheCounters;
-use crate::benchkit;
+use crate::obs::json::JsonObj;
+use crate::obs::{LogHistogram, MetricsRegistry};
 use std::sync::Mutex;
 
-/// Raw samples accumulated during a serving run.
+/// Aggregates accumulated during a serving run. Every field is fixed
+/// size — nothing here grows with request count.
 #[derive(Default)]
 struct StatsState {
-    /// One entry per completed request: enqueue→response microseconds.
-    latencies_us: Vec<u64>,
-    /// One entry per engine pass: requests in that micro-batch.
-    batch_sizes: Vec<usize>,
+    /// Enqueue→response latency histogram (microseconds), one sample
+    /// per completed request.
+    lat: LogHistogram,
+    /// Engine passes executed.
+    batches: u64,
     /// Admission rejections (queue full).
     rejected: u64,
     /// Requests shed by the scheduler (predicted cost could not meet the
@@ -54,11 +66,14 @@ impl ServeStats {
     /// through the engine, the queue depth left behind, and every
     /// member request's end-to-end latency in microseconds.
     pub fn record_batch(&self, batch_size: usize, tiles: u64, depth: usize, lat_us: &[u64]) {
+        let _ = batch_size; // completed = histogram count; size is lat_us.len()
         let mut st = self.state.lock().unwrap();
-        st.batch_sizes.push(batch_size);
+        st.batches += 1;
         st.tiles += tiles;
         st.max_queue_depth = st.max_queue_depth.max(depth);
-        st.latencies_us.extend_from_slice(lat_us);
+        for &v in lat_us {
+            st.lat.record(v);
+        }
     }
 
     /// Record one admission rejection (backpressure).
@@ -87,27 +102,47 @@ impl ServeStats {
 
     /// Completed-request count so far.
     pub fn completed(&self) -> u64 {
-        self.state.lock().unwrap().latencies_us.len() as u64
+        self.state.lock().unwrap().lat.count()
     }
 
-    /// Fold the samples into a report; `wall_seconds` is the run's
+    /// Clone of the latency histogram (microseconds) accumulated so far.
+    pub fn latency_histogram(&self) -> LogHistogram {
+        self.state.lock().unwrap().lat.clone()
+    }
+
+    /// Publish the run's aggregates into a [`MetricsRegistry`] under the
+    /// standard names (see the [`crate::obs::metrics`] naming scheme):
+    /// `serve.requests.*` counters, the `serve.latency_us` histogram
+    /// (merged, so repeated exports from several stats sinks fold),
+    /// `serve.{batches,tiles}`, the `serve.queue_depth.max` gauge, and
+    /// the three `engine.stage_ns.*` totals.
+    pub fn export_metrics(&self, reg: &MetricsRegistry) {
+        let st = self.state.lock().unwrap();
+        reg.inc("serve.requests.submitted", st.lat.count() + st.rejected + st.shed);
+        reg.inc("serve.requests.completed", st.lat.count());
+        reg.inc("serve.requests.rejected", st.rejected);
+        reg.inc("serve.requests.shed", st.shed);
+        reg.inc("serve.requests.deadline_missed", st.deadline_missed);
+        reg.inc("serve.batches", st.batches);
+        reg.inc("serve.tiles", st.tiles);
+        reg.set_gauge("serve.queue_depth.max", st.max_queue_depth as f64);
+        reg.merge_hist("serve.latency_us", &st.lat);
+        reg.inc("engine.stage_ns.input_transform", st.stage_ns[0]);
+        reg.inc("engine.stage_ns.hadamard", st.stage_ns[1]);
+        reg.inc("engine.stage_ns.inverse", st.stage_ns[2]);
+    }
+
+    /// Fold the aggregates into a report; `wall_seconds` is the run's
     /// wall-clock duration (measured by the caller around the whole
-    /// closed loop, queueing included). Percentiles are
-    /// [`benchkit::percentile_sorted`] (nearest-rank), the same estimator
-    /// the bench harness reports.
+    /// closed loop, queueing included). Percentiles are nearest-rank
+    /// over the latency histogram's log buckets — each reported value
+    /// is a bucket lower bound clamped into the exact observed
+    /// `[min, max]`, so `max` is exact and every percentile is within
+    /// one bucket (≤ ~41% relative) of the true sample.
     pub fn report(&self, wall_seconds: f64) -> StatsReport {
         let st = self.state.lock().unwrap();
-        let mut lat_ms: Vec<f64> = st.latencies_us.iter().map(|&v| v as f64 / 1e3).collect();
-        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |q: f64| {
-            if lat_ms.is_empty() {
-                0.0
-            } else {
-                benchkit::percentile_sorted(&lat_ms, q)
-            }
-        };
-        let completed = lat_ms.len() as u64;
-        let batches = st.batch_sizes.len() as u64;
+        let pct = |q: f64| st.lat.value_at_quantile(q) as f64 / 1e3;
+        let completed = st.lat.count();
         let wall = wall_seconds.max(1e-9);
         StatsReport {
             submitted: completed + st.rejected + st.shed,
@@ -115,19 +150,20 @@ impl ServeStats {
             rejected: st.rejected,
             shed: st.shed,
             deadline_missed: st.deadline_missed,
-            batches,
-            mean_batch: if batches == 0 {
+            batches: st.batches,
+            mean_batch: if st.batches == 0 {
                 0.0
             } else {
-                completed as f64 / batches as f64
+                completed as f64 / st.batches as f64
             },
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
             p999_ms: pct(0.999),
-            max_ms: lat_ms.last().copied().unwrap_or(0.0),
+            max_ms: st.lat.max().unwrap_or(0) as f64 / 1e3,
             requests_per_sec: completed as f64 / wall,
             tiles_per_sec: st.tiles as f64 / wall,
+            tiles: st.tiles,
             max_queue_depth: st.max_queue_depth,
             wall_seconds,
             stage_ns: st.stage_ns,
@@ -155,9 +191,14 @@ pub struct StatsReport {
     pub p99_ms: f64,
     /// p99.9 latency — the soak harness's tail-SLO headline number.
     pub p999_ms: f64,
+    /// Exact maximum latency (histogram min/max tracking is exact even
+    /// though percentiles are bucketed).
     pub max_ms: f64,
     pub requests_per_sec: f64,
     pub tiles_per_sec: f64,
+    /// Winograd tiles processed over the whole run — the denominator of
+    /// the per-tile stage costs in [`to_json`](Self::to_json).
+    pub tiles: u64,
     pub max_queue_depth: usize,
     pub wall_seconds: f64,
     /// Engine stage breakdown summed over every pass of the run:
@@ -168,41 +209,56 @@ pub struct StatsReport {
 }
 
 impl StatsReport {
-    /// Flat JSON object (no serde in the vendored crate set). Keys are
-    /// stable — `scripts/ci.sh` greps `"completed"` out of this.
+    /// Nanoseconds per tile for stage `i` (0.0 when no tiles ran) —
+    /// stage totals normalized by work done, comparable across runs of
+    /// different length.
+    pub fn stage_ns_per_tile(&self, i: usize) -> f64 {
+        if self.tiles == 0 {
+            0.0
+        } else {
+            self.stage_ns[i] as f64 / self.tiles as f64
+        }
+    }
+
+    /// Flat JSON object built on the shared [`crate::obs::json`] writer
+    /// (no serde in the vendored crate set). Keys are stable —
+    /// `scripts/ci.sh` greps `"completed"` and `"stage_ns"` out of
+    /// this; `stage_ns_per_tile` reports the same breakdown normalized
+    /// per tile.
     pub fn to_json(&self) -> String {
-        format!(
-            concat!(
-                "{{\"submitted\": {}, \"completed\": {}, \"rejected\": {}, ",
-                "\"shed\": {}, \"deadline_missed\": {}, \"batches\": {}, ",
-                "\"mean_batch\": {:.3}, ",
-                "\"latency_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, ",
-                "\"p999\": {:.3}, \"max\": {:.3}}}, ",
-                "\"requests_per_sec\": {:.2}, \"tiles_per_sec\": {:.1}, ",
-                "\"max_queue_depth\": {}, \"wall_seconds\": {:.4}, ",
-                "\"stage_ns\": {{\"input_transform\": {}, \"hadamard\": {}, ",
-                "\"inverse\": {}}}}}"
-            ),
-            self.submitted,
-            self.completed,
-            self.rejected,
-            self.shed,
-            self.deadline_missed,
-            self.batches,
-            self.mean_batch,
-            self.p50_ms,
-            self.p95_ms,
-            self.p99_ms,
-            self.p999_ms,
-            self.max_ms,
-            self.requests_per_sec,
-            self.tiles_per_sec,
-            self.max_queue_depth,
-            self.wall_seconds,
-            self.stage_ns[0],
-            self.stage_ns[1],
-            self.stage_ns[2],
-        )
+        let latency = JsonObj::new()
+            .f64("p50", self.p50_ms, 3)
+            .f64("p95", self.p95_ms, 3)
+            .f64("p99", self.p99_ms, 3)
+            .f64("p999", self.p999_ms, 3)
+            .f64("max", self.max_ms, 3)
+            .finish();
+        let stage = JsonObj::new()
+            .u64("input_transform", self.stage_ns[0])
+            .u64("hadamard", self.stage_ns[1])
+            .u64("inverse", self.stage_ns[2])
+            .finish();
+        let stage_per_tile = JsonObj::new()
+            .f64("input_transform", self.stage_ns_per_tile(0), 1)
+            .f64("hadamard", self.stage_ns_per_tile(1), 1)
+            .f64("inverse", self.stage_ns_per_tile(2), 1)
+            .finish();
+        JsonObj::new()
+            .u64("submitted", self.submitted)
+            .u64("completed", self.completed)
+            .u64("rejected", self.rejected)
+            .u64("shed", self.shed)
+            .u64("deadline_missed", self.deadline_missed)
+            .u64("batches", self.batches)
+            .f64("mean_batch", self.mean_batch, 3)
+            .raw("latency_ms", &latency)
+            .f64("requests_per_sec", self.requests_per_sec, 2)
+            .f64("tiles_per_sec", self.tiles_per_sec, 1)
+            .u64("max_queue_depth", self.max_queue_depth as u64)
+            .f64("wall_seconds", self.wall_seconds, 4)
+            .raw("stage_ns", &stage)
+            .raw("stage_ns_per_tile", &stage_per_tile)
+            .finish()
     }
 
     /// [`to_json`](Self::to_json) extended with the serving registry's
@@ -224,25 +280,17 @@ impl StatsReport {
         int_banks: CacheCounters,
         packed_banks: CacheCounters,
     ) -> String {
+        let pair = |c: CacheCounters| {
+            JsonObj::new().u64("hits", c.hits).u64("misses", c.misses).finish()
+        };
+        let cache = JsonObj::new()
+            .raw("plans", &pair(plans))
+            .raw("banks", &pair(banks))
+            .raw("int_banks", &pair(int_banks))
+            .raw("packed_banks", &pair(packed_banks))
+            .finish();
         let core = self.to_json();
-        format!(
-            concat!(
-                "{}, \"plan_cache\": {{",
-                "\"plans\": {{\"hits\": {}, \"misses\": {}}}, ",
-                "\"banks\": {{\"hits\": {}, \"misses\": {}}}, ",
-                "\"int_banks\": {{\"hits\": {}, \"misses\": {}}}, ",
-                "\"packed_banks\": {{\"hits\": {}, \"misses\": {}}}}}}}"
-            ),
-            &core[..core.len() - 1],
-            plans.hits,
-            plans.misses,
-            banks.hits,
-            banks.misses,
-            int_banks.hits,
-            int_banks.misses,
-            packed_banks.hits,
-            packed_banks.misses,
-        )
+        format!("{}, \"plan_cache\": {}}}", &core[..core.len() - 1], cache)
     }
 
     /// One-line human summary for the CLI.
@@ -283,12 +331,37 @@ mod tests {
         assert_eq!(r.rejected, 1);
         assert_eq!(r.batches, 2);
         assert!((r.mean_batch - 3.0).abs() < 1e-12);
-        assert!((r.p50_ms - 3.0).abs() < 1e-9);
+        // Nearest-rank p50 over 6 samples is the 3rd (3000 µs); the log
+        // histogram reports its bucket's lower bound, 2048 µs.
+        assert!((r.p50_ms - 2.048).abs() < 1e-9);
+        // Min/max tracking is exact, bucketing notwithstanding.
         assert!((r.max_ms - 6.0).abs() < 1e-9);
         assert!((r.requests_per_sec - 3.0).abs() < 1e-9);
         assert!((r.tiles_per_sec - 300.0).abs() < 1e-9);
+        assert_eq!(r.tiles, 600);
         assert_eq!(r.max_queue_depth, 7);
         assert_eq!(r.submitted, 7, "submitted = completed + rejected + shed");
+    }
+
+    /// The histogram percentiles stay within one log bucket (≤ ~41%
+    /// low) of the exact nearest-rank answer, and clamp to the exact
+    /// observed extremes.
+    #[test]
+    fn histogram_percentiles_agree_with_nearest_rank_within_bucket() {
+        let s = ServeStats::new();
+        // 1000 samples: 6, 12, ..., 6000 µs (exact nearest-rank p50 =
+        // 3000 µs, p95 = 5700 µs, max = 6000 µs).
+        let lat: Vec<u64> = (1..=1000u64).map(|i| i * 6).collect();
+        s.record_batch(lat.len(), 0, 0, &lat);
+        let r = s.report(1.0);
+        // Bucket lower bounds: 3000 → 2048, 5700 → 4096.
+        assert!((r.p50_ms - 2.048).abs() < 1e-9, "{}", r.p50_ms);
+        assert!((r.p95_ms - 4.096).abs() < 1e-9, "{}", r.p95_ms);
+        assert!((r.p999_ms - 4.096).abs() < 1e-9, "{}", r.p999_ms);
+        assert!((r.max_ms - 6.0).abs() < 1e-9);
+        for (approx, exact) in [(r.p50_ms, 3.0), (r.p95_ms, 5.7), (r.p999_ms, 6.0)] {
+            assert!(approx <= exact && approx >= exact * (1.0 - 0.415), "{approx} vs {exact}");
+        }
     }
 
     #[test]
@@ -303,19 +376,21 @@ mod tests {
         assert_eq!((r.completed, r.rejected, r.shed), (2, 1, 2));
         assert_eq!(r.submitted, r.completed + r.rejected + r.shed);
         assert_eq!(r.deadline_missed, 1);
-        // p99.9 of a tiny sample is the max (nearest-rank).
-        assert!((r.p999_ms - 9.0).abs() < 1e-9);
+        // p99.9 of a tiny sample is the max (nearest-rank): 9000 µs,
+        // whose histogram bucket starts at 8192 µs.
+        assert!((r.p999_ms - 8.192).abs() < 1e-9);
         let j = r.to_json();
         assert!(j.contains("\"submitted\": 5"), "{j}");
         assert!(j.contains("\"shed\": 2"), "{j}");
         assert!(j.contains("\"deadline_missed\": 1"), "{j}");
-        assert!(j.contains("\"p999\": 9.000"), "{j}");
+        assert!(j.contains("\"p999\": 8.192"), "{j}");
         assert!(s.report(1.0).to_json().contains("\"p999\""));
     }
 
     #[test]
     fn stage_breakdown_accumulates_and_is_emitted() {
         let s = ServeStats::new();
+        s.record_batch(1, 3, 0, &[1000]);
         s.record_stage_ns([100, 2000, 30]);
         s.record_stage_ns([1, 2, 3]);
         let r = s.report(1.0);
@@ -328,6 +403,25 @@ mod tests {
             ),
             "{j}"
         );
+        // Per-tile view: totals over the 3 tiles this run processed.
+        assert!((r.stage_ns_per_tile(1) - 2002.0 / 3.0).abs() < 1e-9);
+        assert!(
+            j.contains(
+                "\"stage_ns_per_tile\": {\"input_transform\": 33.7, \
+                 \"hadamard\": 667.3, \"inverse\": 11.0}"
+            ),
+            "{j}"
+        );
+    }
+
+    #[test]
+    fn zero_tiles_reports_zero_per_tile_cost() {
+        let s = ServeStats::new();
+        s.record_stage_ns([5, 5, 5]);
+        let r = s.report(1.0);
+        assert_eq!(r.tiles, 0);
+        assert_eq!(r.stage_ns_per_tile(0), 0.0);
+        assert!(r.to_json().contains("\"stage_ns_per_tile\": {\"input_transform\": 0.0"));
     }
 
     #[test]
@@ -353,6 +447,7 @@ mod tests {
             "unbalanced braces in {j}"
         );
         assert!(j.ends_with("}}}"), "{j}");
+        crate::tune::json::parse(&j).unwrap();
     }
 
     #[test]
@@ -372,8 +467,31 @@ mod tests {
             "\"tiles_per_sec\"",
             "\"max_queue_depth\"",
             "\"stage_ns\"",
+            "\"stage_ns_per_tile\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    /// `export_metrics` publishes the same aggregates the report folds.
+    #[test]
+    fn export_metrics_mirrors_the_report() {
+        let s = ServeStats::new();
+        s.record_batch(2, 20, 4, &[1000, 9000]);
+        s.record_reject();
+        s.record_shed();
+        s.record_stage_ns([7, 8, 9]);
+        let reg = MetricsRegistry::new();
+        s.export_metrics(&reg);
+        assert_eq!(reg.counter("serve.requests.submitted"), 4);
+        assert_eq!(reg.counter("serve.requests.completed"), 2);
+        assert_eq!(reg.counter("serve.requests.rejected"), 1);
+        assert_eq!(reg.counter("serve.requests.shed"), 1);
+        assert_eq!(reg.counter("serve.batches"), 1);
+        assert_eq!(reg.counter("serve.tiles"), 20);
+        assert_eq!(reg.gauge("serve.queue_depth.max"), Some(4.0));
+        assert_eq!(reg.counter("engine.stage_ns.hadamard"), 8);
+        let h = reg.histogram("serve.latency_us").unwrap();
+        assert_eq!((h.count(), h.max()), (2, Some(9000)));
     }
 }

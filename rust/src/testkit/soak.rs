@@ -28,7 +28,12 @@
 //! `BENCH_serve_soak.json` (schema in the README); `scripts/ci.sh`
 //! smoke-runs it and checks the totals reconcile exactly.
 
+use std::collections::{BTreeMap, BTreeSet};
+
 use crate::benchkit::percentile_sorted;
+use crate::obs::json::{JsonArr, JsonObj};
+use crate::obs::{TraceKind, TraceLog};
+use crate::serve::queue::lane;
 use crate::serve::{admission_caps, Poll, Priority, SchedItem, Scheduler, Shed};
 use crate::tune::cost::TileCostModel;
 use crate::wino::error::Prng;
@@ -220,55 +225,55 @@ impl SoakReport {
 
     /// Serialize to the `BENCH_serve_soak.json` schema (documented in the
     /// README; `scripts/ci.sh` parses the `totals` object with `sed`, so
-    /// key order is load-bearing).
+    /// key order is load-bearing — built on [`obs::json`](crate::obs::json)
+    /// like every other emitter in the tree).
     pub fn to_json(&self) -> String {
-        let per_model: Vec<String> = self
-            .per_model
-            .iter()
-            .map(|m| {
-                format!(
-                    "{{\"name\": \"{}\", \"submitted\": {}, \"completed\": {}, \
-                     \"rejected\": {}, \"shed\": {}, \"deadline_missed\": {}, \
-                     \"latency_us\": {{\"p50\": {:.3}, \"p99\": {:.3}, \"p999\": {:.3}}}, \
-                     \"requests_per_sec\": {:.3}}}",
-                    m.name,
-                    m.submitted,
-                    m.completed,
-                    m.rejected,
-                    m.shed,
-                    m.deadline_missed,
-                    m.p50_us,
-                    m.p99_us,
-                    m.p999_us,
-                    m.requests_per_sec,
-                )
-            })
-            .collect();
-        format!(
-            "{{\"bench\": \"serve_soak\", \"seed\": {}, \"requests\": {}, \
-             \"virtual_wall_us\": {}, \
-             \"totals\": {{\"submitted\": {}, \"completed\": {}, \"rejected\": {}, \
-             \"shed\": {}, \"deadline_missed\": {}}}, \
-             \"deadline_miss_rate\": {:.6}, \
-             \"latency_us\": {{\"p50\": {:.3}, \"p95\": {:.3}, \"p99\": {:.3}, \
-             \"p999\": {:.3}, \"max\": {:.3}}}, \
-             \"per_model\": [{}]}}\n",
-            self.seed,
-            self.requests,
-            self.virtual_wall_us,
-            self.submitted,
-            self.completed,
-            self.rejected,
-            self.shed,
-            self.deadline_missed,
-            self.deadline_miss_rate,
-            self.p50_us,
-            self.p95_us,
-            self.p99_us,
-            self.p999_us,
-            self.max_us,
-            per_model.join(", "),
-        )
+        let mut per_model = JsonArr::new();
+        for m in &self.per_model {
+            let lat = JsonObj::new()
+                .f64("p50", m.p50_us, 3)
+                .f64("p99", m.p99_us, 3)
+                .f64("p999", m.p999_us, 3)
+                .finish();
+            per_model = per_model.item(
+                &JsonObj::new()
+                    .str("name", &m.name)
+                    .u64("submitted", m.submitted)
+                    .u64("completed", m.completed)
+                    .u64("rejected", m.rejected)
+                    .u64("shed", m.shed)
+                    .u64("deadline_missed", m.deadline_missed)
+                    .raw("latency_us", &lat)
+                    .f64("requests_per_sec", m.requests_per_sec, 3)
+                    .finish(),
+            );
+        }
+        let totals = JsonObj::new()
+            .u64("submitted", self.submitted)
+            .u64("completed", self.completed)
+            .u64("rejected", self.rejected)
+            .u64("shed", self.shed)
+            .u64("deadline_missed", self.deadline_missed)
+            .finish();
+        let lat = JsonObj::new()
+            .f64("p50", self.p50_us, 3)
+            .f64("p95", self.p95_us, 3)
+            .f64("p99", self.p99_us, 3)
+            .f64("p999", self.p999_us, 3)
+            .f64("max", self.max_us, 3)
+            .finish();
+        let mut out = JsonObj::new()
+            .str("bench", "serve_soak")
+            .u64("seed", self.seed)
+            .u64("requests", self.requests)
+            .u64("virtual_wall_us", self.virtual_wall_us)
+            .raw("totals", &totals)
+            .f64("deadline_miss_rate", self.deadline_miss_rate, 6)
+            .raw("latency_us", &lat)
+            .raw("per_model", &per_model.finish())
+            .finish();
+        out.push('\n');
+        out
     }
 }
 
@@ -327,8 +332,32 @@ fn generate_arrivals(cfg: &SoakConfig, rng: &mut Prng) -> Vec<Arrival> {
 
 /// Run the soak simulation to completion and fold the report.
 pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
+    run_soak_with(cfg, None)
+}
+
+/// [`run_soak`], but with every request's lifecycle recorded as trace
+/// events (span = arrival index + 1). The simulation itself is
+/// untouched — tracing consumes no PRNG draws — so the returned report
+/// is byte-identical to the untraced run's, and the trace replays
+/// byte-identically per seed. Stage timings are synthesized from the
+/// batch's virtual service time with the measured 45/35/20 split of the
+/// real engine (input transform / Hadamard / inverse); plan-cache
+/// hit/miss is first-seen `(model, shape)`, mirroring
+/// [`PlanCache`](crate::serve::PlanCache) shape-key behavior.
+pub fn run_soak_traced(cfg: &SoakConfig) -> (SoakReport, TraceLog) {
+    let mut log = TraceLog::new();
+    let report = run_soak_with(cfg, Some(&mut log));
+    (report, log)
+}
+
+/// Shared event loop behind [`run_soak`] / [`run_soak_traced`].
+fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakReport {
     let mut rng = Prng::new(cfg.seed);
     let arrivals = generate_arrivals(cfg, &mut rng);
+    // Dispatched items are mapped back to spans by `submitted_us`:
+    // arrival gaps are ≥ 1 µs, so the timestamp is globally unique.
+    let mut span_by_at: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut seen_plans: BTreeSet<(usize, (usize, usize))> = BTreeSet::new();
     let weights: Vec<u64> = cfg.models.iter().map(|m| m.weight).collect();
     let caps = admission_caps(cfg.budget, &weights);
     let mut tenants: Vec<Tenant> = cfg
@@ -355,13 +384,42 @@ pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
         // event loop lands exactly on each arrival timestamp).
         while idx < arrivals.len() && arrivals[idx].at_us <= now {
             let a = arrivals[idx];
+            let span = idx as u64 + 1;
             let tnt = &mut tenants[a.model];
             tnt.submitted += 1;
-            if tnt
+            if let Some(log) = trace.as_deref_mut() {
+                log.record(
+                    span,
+                    a.at_us,
+                    TraceKind::Submit {
+                        model: cfg.models[a.model].name.clone(),
+                        priority: lane(a.priority).into(),
+                        // Relative SLO, like the threaded queue records.
+                        deadline_us: a.deadline_us.map_or(0, |d| d - a.at_us),
+                        tiles: a.tiles,
+                        h: a.shape.0 as u64,
+                        w: a.shape.1 as u64,
+                    },
+                );
+            }
+            let admitted = tnt
                 .sched
                 .submit(a.at_us, a.priority, a.deadline_us, a.tiles, a.shape)
-                .is_none()
-            {
+                .is_some();
+            if let Some(log) = trace.as_deref_mut() {
+                if admitted {
+                    span_by_at.insert(a.at_us, span);
+                    let hit = !seen_plans.insert((a.model, a.shape));
+                    log.record(
+                        span,
+                        a.at_us,
+                        TraceKind::PlanCache { model: cfg.models[a.model].name.clone(), hit },
+                    );
+                } else {
+                    log.record(span, a.at_us, TraceKind::Reject { why: "queue_full".into() });
+                }
+            }
+            if !admitted {
                 tnt.rejected += 1;
             }
             idx += 1;
@@ -387,6 +445,10 @@ pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
                     Poll::Dispatch { batch, shed } => {
                         for (item, why) in shed {
                             tnt.shed += 1;
+                            if let Some(log) = trace.as_deref_mut() {
+                                let span = span_by_at[&item.submitted_us];
+                                log.record(span, why.decided_us, why.trace_event());
+                            }
                             sheds.push(ShedTrace { model: mi, item, why });
                         }
                         if batch.is_empty() {
@@ -416,7 +478,41 @@ pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
                                 .min(),
                             size: batch.len(),
                         });
+                        // Synthesized stage split: the engine's measured
+                        // cost shape (45% input transform, 35% Hadamard,
+                        // remainder inverse) of the batch's service ns.
+                        let total_ns = (predicted + jitter) * 1000;
+                        let input_ns = total_ns * 45 / 100;
+                        let had_ns = total_ns * 35 / 100;
+                        let inv_ns = total_ns - input_ns - had_ns;
                         for it in &batch {
+                            if let Some(log) = trace.as_deref_mut() {
+                                let span = span_by_at[&it.submitted_us];
+                                let size = batch.len() as u64;
+                                log.record(
+                                    span,
+                                    now,
+                                    TraceKind::Batch { size, predicted_us: predicted },
+                                );
+                                log.record(
+                                    span,
+                                    done,
+                                    TraceKind::Stage {
+                                        input_transform_ns: input_ns,
+                                        hadamard_ns: had_ns,
+                                        inverse_ns: inv_ns,
+                                        tiles,
+                                    },
+                                );
+                                log.record(
+                                    span,
+                                    done,
+                                    TraceKind::Complete {
+                                        latency_us: done - it.submitted_us,
+                                        batch_size: size,
+                                    },
+                                );
+                            }
                             tnt.lat_us.push((done - it.submitted_us) as f64);
                             if it.deadline_us.is_some_and(|d| done > d) {
                                 tnt.missed += 1;
@@ -596,6 +692,83 @@ mod tests {
                 "shed without predicted-cost justification: {s:?}"
             );
         }
+    }
+
+    #[test]
+    fn traced_soak_replays_byte_identically_and_does_not_perturb_the_run() {
+        use crate::obs::TraceSink;
+        let cfg = two_tenant_config(0x7ACE, 384);
+        let (ra, ta) = run_soak_traced(&cfg);
+        let (rb, tb) = run_soak_traced(&cfg);
+        assert!(!ta.is_empty());
+        assert_eq!(
+            ta.to_json_lines(),
+            tb.to_json_lines(),
+            "same seed must replay the trace byte-identically"
+        );
+        assert_eq!(ra.to_json(), rb.to_json());
+        // Tracing consumes no PRNG draws, so the report matches the
+        // untraced run exactly.
+        assert_eq!(ra.to_json(), run_soak(&cfg).to_json());
+        let acc = ta.accounting();
+        assert!(acc.exact, "every span must end in exactly one terminal: {acc:?}");
+        assert_eq!(acc.submitted, ra.submitted);
+        assert_eq!(acc.completed, ra.completed);
+        assert_eq!(acc.rejected, ra.rejected);
+        assert_eq!(acc.shed, ra.shed);
+    }
+
+    #[test]
+    fn traced_spans_follow_the_lifecycle_grammar() {
+        use crate::obs::TraceSink;
+        let (r, t) = run_soak_traced(&two_tenant_config(11, 512));
+        assert!(r.shed > 0, "fixture must exercise the shed path");
+        let mut by_span: std::collections::BTreeMap<u64, Vec<&'static str>> =
+            std::collections::BTreeMap::new();
+        for ev in t.events() {
+            let name = match ev.kind {
+                TraceKind::Submit { .. } => "submit",
+                TraceKind::Reject { .. } => "reject",
+                TraceKind::Shed { .. } => "shed",
+                TraceKind::Batch { .. } => "batch",
+                TraceKind::PlanCache { .. } => "plan_cache",
+                TraceKind::Stage { tiles, .. } => {
+                    assert!(tiles > 0, "stage event without tiles");
+                    "stage"
+                }
+                TraceKind::Complete { .. } => "complete",
+            };
+            by_span.entry(ev.span).or_default().push(name);
+        }
+        assert_eq!(by_span.len() as u64, r.submitted);
+        for (span, kinds) in &by_span {
+            let ok = matches!(
+                kinds.as_slice(),
+                ["submit", "reject"]
+                    | ["submit", "plan_cache", "shed"]
+                    | ["submit", "plan_cache", "batch", "stage", "complete"]
+            );
+            assert!(ok, "span {span} has out-of-grammar event sequence {kinds:?}");
+        }
+    }
+
+    #[test]
+    fn every_seed_accounts_every_span_exactly_once() {
+        use crate::obs::TraceSink;
+        crate::testkit::forall(
+            0x50AB7,
+            6,
+            |rng: &mut Prng| rng.next_u64() % 10_000,
+            |&seed| {
+                let (r, t) = run_soak_traced(&two_tenant_config(seed, 160));
+                let acc = t.accounting();
+                acc.exact
+                    && acc.submitted == r.requests
+                    && acc.completed == r.completed
+                    && acc.rejected == r.rejected
+                    && acc.shed == r.shed
+            },
+        );
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! plan run direct convolution.
 
 use super::json::{self, escape, Json};
+use crate::obs::json::JsonObj;
 use crate::quant::scheme::QuantConfig;
 use crate::wino::basis::Base;
 use anyhow::{bail, Context, Result};
@@ -101,21 +102,17 @@ impl NetPlan {
             self.calib_pct,
         );
         for (i, l) in self.layers.iter().enumerate() {
-            out.push_str(&format!(
-                concat!(
-                    "    {{\"layer\": \"{}\", \"m\": {}, \"base\": \"{}\", ",
-                    "\"act_bits\": {}, \"weight_bits\": {}, ",
-                    "\"hadamard_bits\": {}, \"out_bits\": {}}}{}\n"
-                ),
-                escape(&l.layer),
-                l.m,
-                l.base.name(),
-                l.quant.act_bits,
-                l.quant.weight_bits,
-                l.quant.hadamard_bits,
-                l.quant.out_bits,
-                if i + 1 == self.layers.len() { "" } else { "," },
-            ));
+            let line = JsonObj::new()
+                .str("layer", &l.layer)
+                .u64("m", l.m as u64)
+                .str("base", l.base.name())
+                .u64("act_bits", u64::from(l.quant.act_bits))
+                .u64("weight_bits", u64::from(l.quant.weight_bits))
+                .u64("hadamard_bits", u64::from(l.quant.hadamard_bits))
+                .u64("out_bits", u64::from(l.quant.out_bits))
+                .finish();
+            let sep = if i + 1 == self.layers.len() { "" } else { "," };
+            out.push_str(&format!("    {line}{sep}\n"));
         }
         out.push_str("  ]\n}\n");
         out

@@ -50,11 +50,17 @@ echo "gemm bench OK (float/int tiled-vs-naive ratios: $RATIOS)"
 
 # Serve smoke: the micro-batching server must complete a synthetic
 # closed-loop run and report non-zero completions in its stats JSON.
-# Also refreshes the serve bench trajectory (BENCH_serve.json).
-echo "==> winoq serve smoke (synthetic closed loop)"
+# Also refreshes the serve bench trajectory (BENCH_serve.json) and
+# exercises the observability layer: the request trace must be
+# well-formed JSON lines with exact span accounting, and the metrics
+# snapshot must carry the registry's dotted names.
+echo "==> winoq serve smoke (synthetic closed loop + trace + metrics)"
 SMOKE_JSON="$(mktemp)"
+TRACE_JSONL="$(mktemp)"
+METRICS_JSONL="$(mktemp)"
 ./target/release/winoq serve --synthetic --requests 64 --max-batch 8 \
-  --stats-json "$SMOKE_JSON" --bench-json "$SCRIPT_DIR/../BENCH_serve.json"
+  --stats-json "$SMOKE_JSON" --bench-json "$SCRIPT_DIR/../BENCH_serve.json" \
+  --trace-json "$TRACE_JSONL" --metrics-json "$METRICS_JSONL"
 if [ ! -s "$SMOKE_JSON" ]; then
   echo "serve smoke FAILED: stats JSON missing or empty" >&2
   exit 1
@@ -65,13 +71,40 @@ if [ -z "$COMPLETED" ] || [ "$COMPLETED" -eq 0 ]; then
   cat "$SMOKE_JSON" >&2
   exit 1
 fi
-if ! grep -q '"stage_ns"' "$SMOKE_JSON"; then
+if ! grep -q '"stage_ns"' "$SMOKE_JSON" \
+   || ! grep -q '"stage_ns_per_tile"' "$SMOKE_JSON"; then
   echo "serve smoke FAILED: stats JSON lacks the per-stage breakdown" >&2
   cat "$SMOKE_JSON" >&2
   exit 1
 fi
-echo "serve smoke OK ($COMPLETED requests completed)"
-rm -f "$SMOKE_JSON"
+if [ ! -s "$TRACE_JSONL" ] || grep -qv '^{.*}$' "$TRACE_JSONL"; then
+  echo "serve smoke FAILED: trace output missing or not well-formed JSON lines" >&2
+  exit 1
+fi
+SUBMITS="$(grep -c '"event": "submit"' "$TRACE_JSONL" || true)"
+TERMINALS="$(grep -c '"event": "\(complete\|reject\|shed\)"' "$TRACE_JSONL" || true)"
+COMPLETES="$(grep -c '"event": "complete"' "$TRACE_JSONL" || true)"
+if [ "$COMPLETES" -ne 64 ] || [ "$SUBMITS" -lt 64 ] || [ "$SUBMITS" -ne "$TERMINALS" ]; then
+  echo "serve smoke FAILED: trace span accounting is not exact" \
+       "($SUBMITS submits, $TERMINALS terminals, $COMPLETES completes)" >&2
+  exit 1
+fi
+if ! grep -q '"event": "stage"' "$TRACE_JSONL" \
+   || ! grep -q '"event": "batch"' "$TRACE_JSONL"; then
+  echo "serve smoke FAILED: trace lacks batch/stage events" >&2
+  exit 1
+fi
+for metric in 'serve.requests.completed' 'serve.latency_us' \
+              'engine.stage_ns.hadamard' 'plan_cache.plans.entries' \
+              'serve.queue_depth.max'; do
+  if ! grep -q "\"metric\": \"$metric\"" "$METRICS_JSONL"; then
+    echo "serve smoke FAILED: metrics snapshot is missing $metric" >&2
+    cat "$METRICS_JSONL" >&2
+    exit 1
+  fi
+done
+echo "serve smoke OK ($COMPLETED completed; $SUBMITS traced spans, $(wc -l < "$METRICS_JSONL") metrics)"
+rm -f "$SMOKE_JSON" "$TRACE_JSONL" "$METRICS_JSONL"
 
 # Integer-engine smoke: a 9-bit-Hadamard quantized serve run must
 # complete (the quantized serving path is the integer engine) and the
@@ -91,6 +124,37 @@ if ! grep -q '"tiles_per_sec_ratio_int_vs_float"' "$INT_JSON" \
   exit 1
 fi
 echo "int smoke OK"
+
+# Numeric-health gate: the saturation telemetry must demonstrably fire.
+# Calibration-range input must show zero input-quantizer clips, the
+# adversarial (2x calibration) input must clip, and the w8_h9 profile
+# must show nonzero Hadamard-stage saturation on every case — the
+# paper's extra Hadamard bit observable as a counter, not a claim.
+echo "==> winoq bench --health-json (saturation counters) + BENCH_health.json"
+HEALTH_JSON="$SCRIPT_DIR/../BENCH_health.json"
+./target/release/winoq bench --health-json "$HEALTH_JSON"
+if [ ! -s "$HEALTH_JSON" ] || ! grep -q '"bench": "numeric_health"' "$HEALTH_JSON"; then
+  echo "health gate FAILED: BENCH_health.json missing or malformed" >&2
+  exit 1
+fi
+HEALTH_CASES="$(sed 's/}, {/}\n{/g' "$HEALTH_JSON")"
+if ! echo "$HEALTH_CASES" | grep -q '"quant": "w8"'; then
+  echo "health gate FAILED: no w8 case in BENCH_health.json" >&2
+  exit 1
+fi
+W8H9_SATS="$(echo "$HEALTH_CASES" | grep '"quant": "w8_h9"' \
+  | sed -n 's/.*"adv_hadamard_sat": \([0-9][0-9]*\).*/\1/p')"
+if [ -z "$W8H9_SATS" ] || echo "$W8H9_SATS" | awk '$1 == 0 { bad = 1 } END { exit !bad }'; then
+  echo "health gate FAILED: w8_h9 shows no Hadamard saturation under adversarial input ($W8H9_SATS)" >&2
+  cat "$HEALTH_JSON" >&2
+  exit 1
+fi
+CALIB_CLIPS="$(echo "$HEALTH_CASES" | sed -n 's/.*"calib_input_sat": \([0-9][0-9]*\).*/\1/p')"
+if echo "$CALIB_CLIPS" | awk '$1 != 0 { bad = 1 } END { exit !bad }'; then
+  echo "health gate FAILED: calibration-range input clipped ($CALIB_CLIPS)" >&2
+  exit 1
+fi
+echo "health gate OK (w8_h9 adversarial hadamard saturation: $(echo "$W8H9_SATS" | tr '\n' ' '))"
 
 # Tune smoke: the autotuner must sweep a tiny grid (2 layers × 2
 # candidates), emit a valid BENCH_tune.json + NetPlan, and the serve path
@@ -139,8 +203,9 @@ rm -rf "$TUNE_DIR"
 # (submitted = completed + rejected + shed).
 echo "==> winoq serve --soak (multi-model deadline soak) + BENCH_serve_soak.json"
 SOAK_JSON="$SCRIPT_DIR/../BENCH_serve_soak.json"
+SOAK_TRACE="$(mktemp)"
 ./target/release/winoq serve --soak --requests 256 --models 2 \
-  --deadline-us 20000 --soak-json "$SOAK_JSON"
+  --deadline-us 20000 --soak-json "$SOAK_JSON" --trace-json "$SOAK_TRACE"
 if [ ! -s "$SOAK_JSON" ] || ! grep -q '"bench": "serve_soak"' "$SOAK_JSON"; then
   echo "soak smoke FAILED: BENCH_serve_soak.json missing or malformed" >&2
   exit 1
@@ -164,6 +229,37 @@ if [ -z "$TOTALS" ] || ! echo "$TOTALS" | awk '{ exit !($1 == $2 + $3 + $4 && $1
   exit 1
 fi
 echo "soak smoke OK (totals: $TOTALS, miss rate: $MISS, p99.9: ${P999}us)"
+
+# Soak trace gate: the traced soak must emit well-formed JSON lines,
+# account for every one of the 256 spans exactly (one submit, one
+# terminal each), and — the determinism bar — replay byte-identically
+# (trace AND report) when rerun with the same seed.
+echo "==> soak trace gate (span accounting + per-seed byte-identity)"
+if [ ! -s "$SOAK_TRACE" ] || grep -qv '^{.*}$' "$SOAK_TRACE"; then
+  echo "soak trace FAILED: trace output missing or not well-formed JSON lines" >&2
+  exit 1
+fi
+SOAK_SUBMITS="$(grep -c '"event": "submit"' "$SOAK_TRACE" || true)"
+SOAK_TERMINALS="$(grep -c '"event": "\(complete\|reject\|shed\)"' "$SOAK_TRACE" || true)"
+if [ "$SOAK_SUBMITS" -ne 256 ] || [ "$SOAK_TERMINALS" -ne 256 ]; then
+  echo "soak trace FAILED: span accounting is not exact" \
+       "($SOAK_SUBMITS submits, $SOAK_TERMINALS terminals, want 256 each)" >&2
+  exit 1
+fi
+SOAK_JSON2="$(mktemp)"
+SOAK_TRACE2="$(mktemp)"
+./target/release/winoq serve --soak --requests 256 --models 2 \
+  --deadline-us 20000 --soak-json "$SOAK_JSON2" --trace-json "$SOAK_TRACE2"
+if ! cmp -s "$SOAK_TRACE" "$SOAK_TRACE2"; then
+  echo "soak trace FAILED: same seed did not replay the trace byte-identically" >&2
+  exit 1
+fi
+if ! cmp -s "$SOAK_JSON" "$SOAK_JSON2"; then
+  echo "soak trace FAILED: same seed did not replay the report byte-identically" >&2
+  exit 1
+fi
+echo "soak trace OK ($SOAK_SUBMITS spans, $(wc -l < "$SOAK_TRACE") events, byte-identical rerun)"
+rm -f "$SOAK_TRACE" "$SOAK_JSON2" "$SOAK_TRACE2"
 
 # Scale-out serving regression nets, run explicitly like the numeric
 # ones: the deadline-scheduler property suite, the arbitrary-H×W parity
