@@ -1,0 +1,474 @@
+//! Bench regression gating: diff two directories of `BENCH_*.json`
+//! artifacts (`bench/baselines/` vs a fresh run) with per-metric-class
+//! thresholds — `winoq benchdiff --baseline <dir> --current <dir>`,
+//! wired into `scripts/ci.sh` as a hard gate.
+//!
+//! Every numeric leaf of every report is flattened to a dotted key
+//! (array elements keyed by their `"name"` member when present, index
+//! otherwise) and classified by name:
+//!
+//! * **throughput** (`*per_sec*`, `*gflops*`, `*speedup*`) — higher is
+//!   better; FAIL when the current run loses more than
+//!   [`THROUGHPUT_TOLERANCE`] (10%) against the baseline;
+//! * **error** (`*err*`, `*rel_l2*`, `*loss*` leaves) — lower is
+//!   better; FAIL on *any* increase beyond float-noise
+//!   ([`ERROR_TOLERANCE`] relative). Accuracy regressions don't get a
+//!   10% grace band;
+//! * everything else — informational, reported but never gating.
+//!
+//! A bench file or gated metric present in the baseline but absent from
+//! the current run is itself a failure: silently dropping a benchmark
+//! must not pass the gate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::json::{JsonArr, JsonObj};
+use crate::tune::json::{parse, Json};
+
+/// Allowed relative throughput loss before the gate fails (10%).
+pub const THROUGHPUT_TOLERANCE: f64 = 0.10;
+/// Relative slack for error metrics — covers float formatting noise
+/// only; any genuine increase fails.
+pub const ERROR_TOLERANCE: f64 = 1e-9;
+
+/// How a metric gates, decided from its flattened key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricClass {
+    /// Higher is better; 10% loss tolerance.
+    Throughput,
+    /// Lower is better; any increase fails.
+    Error,
+    /// Reported, never gating.
+    Info,
+}
+
+/// Classify one flattened metric key.
+pub fn classify(key: &str) -> MetricClass {
+    let leaf = key.rsplit('.').next().unwrap_or(key);
+    if key.contains("per_sec") || key.contains("gflops") || key.contains("speedup") {
+        MetricClass::Throughput
+    } else if leaf.contains("err") || leaf.contains("rel_l2") || leaf.contains("loss") {
+        MetricClass::Error
+    } else {
+        MetricClass::Info
+    }
+}
+
+/// Gate outcome for one metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Gated metric within its threshold.
+    Pass,
+    /// Gated metric regressed (or vanished from the current run).
+    Fail,
+    /// Ungated metric, reported for context.
+    Info,
+}
+
+/// One metric's baseline-vs-current comparison.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    /// Flattened dotted key, e.g. `"latency_us.p99"`.
+    pub key: String,
+    pub class: MetricClass,
+    pub baseline: f64,
+    /// `None` when the key vanished from the current run.
+    pub current: Option<f64>,
+    pub verdict: Verdict,
+}
+
+impl MetricDiff {
+    /// Signed relative change, percent (`0.0` when the baseline is 0 or
+    /// the metric vanished).
+    pub fn delta_pct(&self) -> f64 {
+        match self.current {
+            Some(c) if self.baseline != 0.0 => (c - self.baseline) / self.baseline * 100.0,
+            _ => 0.0,
+        }
+    }
+}
+
+/// All metric diffs of one bench file.
+#[derive(Clone, Debug)]
+pub struct FileDiff {
+    /// Bench file name, e.g. `"BENCH_gemm.json"`.
+    pub file: String,
+    /// The current run never produced this file (always a failure).
+    pub missing: bool,
+    pub metrics: Vec<MetricDiff>,
+}
+
+impl FileDiff {
+    /// Gated failures in this file (the missing file counts as one).
+    pub fn failures(&self) -> u64 {
+        self.missing as u64
+            + self.metrics.iter().filter(|m| m.verdict == Verdict::Fail).count() as u64
+    }
+}
+
+/// Full benchdiff result over a baseline/current directory pair.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    pub files: Vec<FileDiff>,
+}
+
+impl DiffReport {
+    /// Total gating failures; the CLI exits nonzero iff this is > 0.
+    pub fn failures(&self) -> u64 {
+        self.files.iter().map(|f| f.failures()).sum()
+    }
+
+    /// Metrics compared across all files (gated and informational).
+    pub fn compared(&self) -> u64 {
+        self.files.iter().map(|f| f.metrics.len() as u64).sum()
+    }
+
+    pub fn ok(&self) -> bool {
+        self.failures() == 0
+    }
+
+    /// Human table: one line per gated metric plus a per-file roll-up
+    /// (informational metrics are summarized, not listed).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for f in &self.files {
+            if f.missing {
+                out.push_str(&format!("{}: FAIL (missing from current run)\n", f.file));
+                continue;
+            }
+            let info = f.metrics.iter().filter(|m| m.verdict == Verdict::Info).count();
+            out.push_str(&format!(
+                "{}: {} gated metrics, {} informational, {} failed\n",
+                f.file,
+                f.metrics.len() - info,
+                info,
+                f.failures()
+            ));
+            for m in &f.metrics {
+                if m.verdict == Verdict::Info {
+                    continue;
+                }
+                let class = match m.class {
+                    MetricClass::Throughput => "throughput",
+                    MetricClass::Error => "error",
+                    MetricClass::Info => "info",
+                };
+                match m.current {
+                    Some(c) => out.push_str(&format!(
+                        "  [{}] {} {}: {} -> {} ({:+.2}%)\n",
+                        if m.verdict == Verdict::Fail { "FAIL" } else { " ok " },
+                        class,
+                        m.key,
+                        m.baseline,
+                        c,
+                        m.delta_pct()
+                    )),
+                    None => out.push_str(&format!(
+                        "  [FAIL] {} {}: {} -> missing\n",
+                        class, m.key, m.baseline
+                    )),
+                }
+            }
+        }
+        out.push_str(&format!(
+            "benchdiff: {} metrics over {} files, {} failures\n",
+            self.compared(),
+            self.files.len(),
+            self.failures()
+        ));
+        out
+    }
+
+    /// Machine-readable report (house `obs::json` style): per-file
+    /// gated-metric verdicts plus the roll-up counts.
+    pub fn to_json(&self) -> String {
+        let mut files = JsonArr::new();
+        for f in &self.files {
+            let mut metrics = JsonArr::new();
+            for m in &f.metrics {
+                if m.verdict == Verdict::Info {
+                    continue;
+                }
+                let mut obj = JsonObj::new()
+                    .str("key", &m.key)
+                    .str(
+                        "class",
+                        match m.class {
+                            MetricClass::Throughput => "throughput",
+                            MetricClass::Error => "error",
+                            MetricClass::Info => "info",
+                        },
+                    )
+                    .raw("baseline", &format_num(m.baseline));
+                obj = match m.current {
+                    Some(c) => obj.raw("current", &format_num(c)),
+                    None => obj.raw("current", "null"),
+                };
+                metrics = metrics.item(
+                    &obj.f64("delta_pct", m.delta_pct(), 3)
+                        .bool("fail", m.verdict == Verdict::Fail)
+                        .finish(),
+                );
+            }
+            files = files.item(
+                &JsonObj::new()
+                    .str("file", &f.file)
+                    .bool("missing", f.missing)
+                    .u64("failures", f.failures())
+                    .raw("gated", &metrics.finish())
+                    .finish(),
+            );
+        }
+        let mut out = JsonObj::new()
+            .str("bench", "benchdiff")
+            .u64("files", self.files.len() as u64)
+            .u64("compared", self.compared())
+            .u64("failures", self.failures())
+            .bool("ok", self.ok())
+            .raw("per_file", &files.finish())
+            .finish();
+        out.push('\n');
+        out
+    }
+}
+
+/// Shortest-exact f64 rendering (`Display`) — benchdiff echoes the
+/// source documents' numbers rather than re-rounding them.
+fn format_num(v: f64) -> String {
+    if v.is_finite() {
+        v.to_string()
+    } else {
+        "null".into()
+    }
+}
+
+/// Flatten every numeric leaf of `j` into `out` under dotted keys.
+/// Array elements use their `"name"` string member as the key segment
+/// when they have one (the `per_model` convention), their index
+/// otherwise. Non-numeric leaves (strings, bools, nulls) are skipped —
+/// config echoes like `"bench": "gemm"` never gate.
+pub fn flatten(prefix: &str, j: &Json, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Num(v) => {
+            out.insert(prefix.to_string(), *v);
+        }
+        Json::Obj(members) => {
+            for (k, v) in members {
+                let key =
+                    if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(&key, v, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                let seg = v
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .map(str::to_string)
+                    .unwrap_or_else(|| i.to_string());
+                let key =
+                    if prefix.is_empty() { seg.clone() } else { format!("{prefix}.{seg}") };
+                flatten(&key, v, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Diff two flattened metric maps under the class thresholds. Keys only
+/// in `current` are ignored (new benches don't gate); gated keys only
+/// in `baseline` fail.
+pub fn diff_metrics(
+    baseline: &BTreeMap<String, f64>,
+    current: &BTreeMap<String, f64>,
+) -> Vec<MetricDiff> {
+    baseline
+        .iter()
+        .map(|(key, &b)| {
+            let class = classify(key);
+            let cur = current.get(key).copied();
+            let verdict = match (class, cur) {
+                (MetricClass::Info, _) => Verdict::Info,
+                (_, None) => Verdict::Fail,
+                (MetricClass::Throughput, Some(c)) => {
+                    if c < b * (1.0 - THROUGHPUT_TOLERANCE) {
+                        Verdict::Fail
+                    } else {
+                        Verdict::Pass
+                    }
+                }
+                (MetricClass::Error, Some(c)) => {
+                    if c > b * (1.0 + ERROR_TOLERANCE) + f64::EPSILON {
+                        Verdict::Fail
+                    } else {
+                        Verdict::Pass
+                    }
+                }
+            };
+            MetricDiff { key: key.clone(), class, baseline: b, current: cur, verdict }
+        })
+        .collect()
+}
+
+/// Parse one bench JSON document into its flattened metric map.
+pub fn flatten_document(doc: &str) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    flatten("", &parse(doc)?, &mut out);
+    Ok(out)
+}
+
+/// Compare every `BENCH_*.json` in `baseline` against its namesake in
+/// `current`. The baseline directory defines the contract: files it
+/// lacks are ignored, files it has must exist (and hold their gated
+/// metrics) in the current run.
+pub fn diff_dirs(baseline: &Path, current: &Path) -> Result<DiffReport> {
+    let mut names: Vec<String> = std::fs::read_dir(baseline)
+        .with_context(|| format!("reading baseline dir {}", baseline.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        bail!("no BENCH_*.json artifacts in baseline dir {}", baseline.display());
+    }
+    let mut files = Vec::new();
+    for name in names {
+        let base_doc = std::fs::read_to_string(baseline.join(&name))
+            .with_context(|| format!("reading baseline {name}"))?;
+        let base = flatten_document(&base_doc)
+            .with_context(|| format!("parsing baseline {name}"))?;
+        let cur_path = current.join(&name);
+        if !cur_path.exists() {
+            files.push(FileDiff { file: name, missing: true, metrics: Vec::new() });
+            continue;
+        }
+        let cur_doc = std::fs::read_to_string(&cur_path)
+            .with_context(|| format!("reading current {name}"))?;
+        let cur =
+            flatten_document(&cur_doc).with_context(|| format!("parsing current {name}"))?;
+        files.push(FileDiff { file: name, missing: false, metrics: diff_metrics(&base, &cur) });
+    }
+    Ok(DiffReport { files })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn classes_follow_key_names() {
+        assert_eq!(classify("tiles_per_sec"), MetricClass::Throughput);
+        assert_eq!(classify("int.gflops"), MetricClass::Throughput);
+        assert_eq!(classify("legendre.speedup"), MetricClass::Throughput);
+        assert_eq!(classify("layers.stem.rel_err"), MetricClass::Error);
+        assert_eq!(classify("tuned_err"), MetricClass::Error);
+        assert_eq!(classify("rel_l2"), MetricClass::Error);
+        assert_eq!(classify("latency_ms.p99"), MetricClass::Info);
+        assert_eq!(classify("completed"), MetricClass::Info);
+        // Only the leaf decides error-ness: a *container* named "errors"
+        // holding a count stays informational.
+        assert_eq!(classify("drift.alerts"), MetricClass::Info);
+    }
+
+    #[test]
+    fn throughput_gates_at_ten_percent() {
+        let base = m(&[("tiles_per_sec", 1000.0)]);
+        let ok = diff_metrics(&base, &m(&[("tiles_per_sec", 901.0)]));
+        assert_eq!(ok[0].verdict, Verdict::Pass);
+        let fail = diff_metrics(&base, &m(&[("tiles_per_sec", 899.0)]));
+        assert_eq!(fail[0].verdict, Verdict::Fail);
+        assert!((fail[0].delta_pct() - -10.1).abs() < 1e-9);
+        // Gains never fail.
+        let gain = diff_metrics(&base, &m(&[("tiles_per_sec", 2000.0)]));
+        assert_eq!(gain[0].verdict, Verdict::Pass);
+    }
+
+    #[test]
+    fn any_error_increase_fails_but_noise_passes() {
+        let base = m(&[("stem.rel_err", 0.002)]);
+        let same = diff_metrics(&base, &m(&[("stem.rel_err", 0.002)]));
+        assert_eq!(same[0].verdict, Verdict::Pass);
+        let better = diff_metrics(&base, &m(&[("stem.rel_err", 0.001)]));
+        assert_eq!(better[0].verdict, Verdict::Pass);
+        let worse = diff_metrics(&base, &m(&[("stem.rel_err", 0.0021)]));
+        assert_eq!(worse[0].verdict, Verdict::Fail, "a 5% error increase must gate");
+        // Sub-noise wiggle (1 part in 10^12) is formatting, not drift.
+        let noise = diff_metrics(&base, &m(&[("stem.rel_err", 0.002 * (1.0 + 1e-12))]));
+        assert_eq!(noise[0].verdict, Verdict::Pass);
+    }
+
+    #[test]
+    fn vanished_gated_metric_fails_vanished_info_does_not_gate() {
+        let base = m(&[("tiles_per_sec", 100.0), ("completed", 10.0)]);
+        let d = diff_metrics(&base, &m(&[]));
+        let tps = d.iter().find(|x| x.key == "tiles_per_sec").unwrap();
+        assert_eq!(tps.verdict, Verdict::Fail);
+        let info = d.iter().find(|x| x.key == "completed").unwrap();
+        assert_eq!(info.verdict, Verdict::Info);
+    }
+
+    #[test]
+    fn flatten_handles_nesting_named_arrays_and_skips_non_numbers() {
+        let doc = r#"{"bench": "serve_soak", "totals": {"completed": 5},
+            "per_model": [{"name": "model-a", "shed": 1}, {"shed": 2}],
+            "latency_us": {"p99": 1500.5}, "ok": true}"#;
+        let flat = flatten_document(doc).unwrap();
+        assert_eq!(flat.get("totals.completed"), Some(&5.0));
+        assert_eq!(flat.get("per_model.model-a.shed"), Some(&1.0));
+        assert_eq!(flat.get("per_model.1.shed"), Some(&2.0));
+        assert_eq!(flat.get("latency_us.p99"), Some(&1500.5));
+        assert!(!flat.contains_key("bench"), "strings are not metrics");
+        assert!(!flat.contains_key("ok"), "bools are not metrics");
+    }
+
+    #[test]
+    fn dir_diff_gates_and_reports() {
+        let root = std::env::temp_dir().join(format!("winoq_benchdiff_{}", std::process::id()));
+        let base_dir = root.join("baseline");
+        let cur_dir = root.join("current");
+        std::fs::create_dir_all(&base_dir).unwrap();
+        std::fs::create_dir_all(&cur_dir).unwrap();
+        let base = r#"{"bench": "gemm", "gflops": 10.0, "rel_err": 0.001}"#;
+        std::fs::write(base_dir.join("BENCH_gemm.json"), base).unwrap();
+        std::fs::write(base_dir.join("BENCH_tune.json"), r#"{"tiles_per_sec": 50}"#).unwrap();
+        std::fs::write(base_dir.join("notes.txt"), "ignored").unwrap();
+        // Current: gemm regresses on error, tune file is missing.
+        let cur = r#"{"bench": "gemm", "gflops": 11.0, "rel_err": 0.002}"#;
+        std::fs::write(cur_dir.join("BENCH_gemm.json"), cur).unwrap();
+        let report = diff_dirs(&base_dir, &cur_dir).unwrap();
+        assert_eq!(report.files.len(), 2, "only BENCH_*.json files are compared");
+        assert_eq!(report.failures(), 2, "{}", report.summary());
+        assert!(!report.ok());
+        let j = report.to_json();
+        assert!(j.contains("\"bench\": \"benchdiff\""), "{j}");
+        assert!(j.contains("\"failures\": 2"), "{j}");
+        assert!(j.contains("\"ok\": false"), "{j}");
+        assert!(j.contains("\"key\": \"rel_err\""), "{j}");
+        crate::tune::json::parse(j.trim_end()).unwrap();
+        // Fix the regressions: same bytes for gemm, tune file restored.
+        std::fs::write(cur_dir.join("BENCH_gemm.json"), base).unwrap();
+        std::fs::write(cur_dir.join("BENCH_tune.json"), r#"{"tiles_per_sec": 49}"#).unwrap();
+        let clean = diff_dirs(&base_dir, &cur_dir).unwrap();
+        assert!(clean.ok(), "{}", clean.summary());
+        assert!(clean.summary().contains("0 failures"));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn empty_baseline_dir_is_an_error() {
+        let root =
+            std::env::temp_dir().join(format!("winoq_benchdiff_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        let err = diff_dirs(&root, &root).unwrap_err();
+        assert!(err.to_string().contains("no BENCH_"), "{err}");
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}

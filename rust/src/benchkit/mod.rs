@@ -1,7 +1,11 @@
 //! Mini benchmarking harness (criterion is not in the vendored crate set):
 //! warmup + N timed samples, median / mean / p50-p95-p99 reporting. Used
 //! by the `rust/benches/*` targets (declared `harness = false`) and by the
-//! latency-percentile summaries the serve bench JSON carries.
+//! latency-percentile summaries the serve bench JSON carries. The
+//! [`diff`] submodule turns the emitted `BENCH_*.json` artifacts into a
+//! regression gate (`winoq benchdiff`).
+
+pub mod diff;
 
 use std::time::Instant;
 

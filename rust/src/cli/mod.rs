@@ -143,6 +143,38 @@ pub const VALUE_FLAGS: &[FlagSpec] = &[
         metavar: "N",
         help: "tune: tune only the first N eligible layers (0 = all)",
     },
+    // drift flags (see `winoq serve` / ARCHITECTURE.md "Accuracy drift")
+    FlagSpec {
+        name: "--drift-json",
+        metavar: "PATH",
+        help: "serve: enable shadow-oracle drift monitoring, write its report here",
+    },
+    FlagSpec {
+        name: "--drift-stride",
+        metavar: "N",
+        help: "serve/soak: shadow-sample every Nth request span (default 16; 0 = off)",
+    },
+    FlagSpec {
+        name: "--input-scale",
+        metavar: "F",
+        help: "serve: scale synthetic inputs by F (out-of-distribution drift exercise)",
+    },
+    FlagSpec {
+        name: "--drift-scale",
+        metavar: "F",
+        help: "soak: scale the synthetic drift error by F (models OOD traffic)",
+    },
+    // benchdiff flags (see `winoq benchdiff`)
+    FlagSpec {
+        name: "--baseline",
+        metavar: "DIR",
+        help: "benchdiff: directory of committed baseline BENCH_*.json artifacts",
+    },
+    FlagSpec {
+        name: "--current",
+        metavar: "DIR",
+        help: "benchdiff: directory holding the current run's BENCH_*.json artifacts",
+    },
     // soak flags (see `winoq serve --soak`)
     FlagSpec {
         name: "--models",
@@ -291,12 +323,13 @@ COMMANDS:
                     [--quant w8|w8_h9|none] [--artifact TAG] [--checkpoint P]
                     [--plan NETPLAN.json] [--stats-json PATH] [--bench-json PATH]
                     [--int-bench-json PATH] [--trace-json PATH]
-                    [--metrics-json PATH]
+                    [--metrics-json PATH] [--drift-json PATH] [--drift-stride N]
+                    [--input-scale F]
                   deterministic multi-model stress/soak simulation
                     --soak [--requests N] [--models N] [--deadline-us US]
                     [--seed S] [--queue-cap N] [--max-batch B]
                     [--batch-window-us US] [--workers W] [--soak-json PATH]
-                    [--trace-json PATH]
+                    [--trace-json PATH] [--drift-stride N] [--drift-scale F]
   tune            per-layer base/tile/bit-width autotuner → NetPlan JSON
                     --synthetic [--grid full|tiny] [--layers N]
                     [--objective error|throughput|balanced] [--max-err E]
@@ -307,6 +340,9 @@ COMMANDS:
                     (tiled panel GEMM vs naive oracles, float + int)
                     --health-json BENCH_health.json
                     (numeric-health saturation counters on adversarial input)
+  benchdiff       gate the current BENCH_*.json artifacts against baselines
+                    --baseline bench/baselines --current .
+                    [--out BENCH_diff.json]   (exit 1 on any regression)
   help            this message
 ";
 
@@ -467,6 +503,40 @@ mod tests {
         for f in ["--trace-json", "--metrics-json", "--health-json"] {
             assert!(help().contains(f), "help must document {f}");
         }
+    }
+
+    #[test]
+    fn drift_and_benchdiff_flags_registered() {
+        let a = Args::parse(&sv(&[
+            "serve",
+            "--synthetic",
+            "--drift-json",
+            "drift.json",
+            "--drift-stride",
+            "8",
+            "--input-scale",
+            "100",
+        ]))
+        .unwrap();
+        assert_eq!(a.flag("--drift-json"), Some("drift.json"));
+        assert_eq!(a.flag_u64("--drift-stride", 16).unwrap(), 8);
+        assert!((a.flag_f64("--input-scale", 1.0).unwrap() - 100.0).abs() < 1e-12);
+        let b = Args::parse(&sv(&[
+            "benchdiff",
+            "--baseline",
+            "bench/baselines",
+            "--current",
+            ".",
+        ]))
+        .unwrap();
+        assert_eq!(b.command, "benchdiff");
+        assert_eq!(b.flag("--baseline"), Some("bench/baselines"));
+        assert_eq!(b.flag("--current"), Some("."));
+        assert!(Args::parse(&sv(&["serve", "--drift-json"])).is_err(), "value required");
+        for f in ["--drift-json", "--drift-stride", "--input-scale", "--baseline", "--current"] {
+            assert!(help().contains(f), "help must document {f}");
+        }
+        assert!(help().contains("benchdiff"), "help must document the benchdiff command");
     }
 
     #[test]

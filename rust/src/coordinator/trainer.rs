@@ -8,7 +8,7 @@
 
 use super::schedule::Schedule;
 use crate::data::{loader, synthcifar, Loader, LoaderCfg};
-use crate::metrics::{MetricLog, StepRecord, Timer};
+use crate::obs::trainlog::{MetricLog, StepRecord, Timer};
 use crate::runtime::{Artifact, TrainState};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};

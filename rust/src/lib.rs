@@ -20,8 +20,10 @@
 //! * [`obs`] — the unified observability layer: process-wide metrics
 //!   registry (counters/gauges/log-bucketed histograms), request-span
 //!   tracing with exact accounting, numeric-health surfacing, and the
-//!   one shared JSON writer every `BENCH_*.json` emitter goes through.
-//!   (Distinct from [`metrics`], the training-step CSV logger.)
+//!   one shared JSON writer every `BENCH_*.json` emitter goes through,
+//!   plus windowed time-series and shadow-oracle accuracy-drift
+//!   monitoring (the training-step CSV logger lives at
+//!   [`obs::trainlog`]).
 //! * [`tune`] — the per-layer autotuner: sweeps base × tile size ×
 //!   Hadamard bit width per conv layer, selects winners under an
 //!   accuracy budget, and emits deployable [`tune::NetPlan`] JSON
@@ -31,8 +33,8 @@
 //! * [`runtime`] — PJRT client running the AOT'd JAX/Pallas artifacts
 //!   (stubbed bindings in this vendored build; see `runtime::pjrt_stub`).
 //! * [`coordinator`] — the training loop, schedules and experiments.
-//! * [`config`], [`cli`], [`metrics`], [`testkit`], [`benchkit`] —
-//!   infrastructure (no serde/clap/criterion in the vendored set).
+//! * [`config`], [`cli`], [`testkit`], [`benchkit`] — infrastructure
+//!   (no serde/clap/criterion in the vendored set).
 //!
 //! Start with the repo-level `README.md` for the quickstart and
 //! `docs/ARCHITECTURE.md` for the module graph and buffer layouts.
@@ -43,7 +45,6 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
-pub mod metrics;
 pub mod nn;
 pub mod obs;
 pub mod quant;

@@ -40,6 +40,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "tune" => cmd_tune(&args),
         "bench" => cmd_bench(&args),
+        "benchdiff" => cmd_benchdiff(&args),
         "serve-demo" => {
             eprintln!("serve-demo was retired; use `winoq serve --synthetic` (see `winoq help`)");
             std::process::exit(2);
@@ -253,9 +254,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use std::sync::Arc;
     use winoq::data::synthcifar;
     use winoq::nn::{ConvMode, ResNet18, ResNetCfg, Tensor};
+    use winoq::obs::drift::{DriftConfig, DriftMonitor};
     use winoq::obs::{MetricsRegistry, TraceSink, Tracer};
     use winoq::serve::{
-        run_closed_loop, run_closed_loop_with, BatchModel, ModelRegistry, ServeConfig, ServeStats,
+        run_closed_loop, run_closed_loop_observed, BatchModel, ModelRegistry, ServeConfig,
+        ServeStats,
     };
 
     if args.has_switch("--soak") {
@@ -294,6 +297,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.flag_or("--model", "resnet18-synthetic");
 
     let mut registry = ModelRegistry::new();
+    let mut loaded_plan: Option<winoq::tune::NetPlan> = None;
     let served = if let Some(plan_path) = args.flag("--plan") {
         // The NetPlan pins the whole operating point (width, per-layer
         // m/base/bits, calibration); a conflicting flag would be silently
@@ -315,7 +319,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             plan.layers.len(),
             plan.width_mult
         );
-        registry.register_netplan(name, &plan)?
+        let served = registry.register_netplan(name, &plan)?;
+        loaded_plan = Some(plan);
+        served
     } else if let Some(tag) = args.flag("--artifact") {
         registry.register_checkpoint(
             name,
@@ -368,11 +374,73 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let pool_n = concurrency.clamp(8, 64);
     let (batch, _) = synthcifar::generate_batch(synthcifar::TEST_SEED, 0, pool_n);
     let item = 3 * 32 * 32;
-    let inputs: Vec<Tensor> = (0..pool_n)
+    let mut inputs: Vec<Tensor> = (0..pool_n)
         .map(|i| {
             Tensor::from_vec(&[3, 32, 32], batch.data[i * item..(i + 1) * item].to_vec())
         })
         .collect();
+
+    // Shadow-oracle drift monitoring: budgets come from the NetPlan's
+    // tuned anchors (v2), or — for synthetic/artifact models with no
+    // plan — from a one-shot calibration probe over an in-distribution
+    // pool input. The probe runs BEFORE any --input-scale distortion so
+    // scaled traffic is judged against the calibrated operating point.
+    let drift = if args.flag("--drift-json").is_some() {
+        let dcfg = DriftConfig {
+            stride: args.flag_u64("--drift-stride", 16)?,
+            ..DriftConfig::default()
+        };
+        let dm = match &loaded_plan {
+            Some(plan) => {
+                let dm = DriftMonitor::from_netplan(dcfg, plan);
+                if dm.report_only() {
+                    eprintln!(
+                        "drift: NetPlan carries no tuned error anchors (v1 artifact?); \
+                         monitoring degrades to report-only"
+                    );
+                }
+                dm
+            }
+            None => {
+                // Budget anchor per layer = max rel-L2 over a few pool
+                // probes, so same-distribution traffic sits well under
+                // anchor × headroom while OOD traffic still clears it.
+                let mut dm = DriftMonitor::new(dcfg);
+                let mut anchors: std::collections::BTreeMap<String, f64> =
+                    std::collections::BTreeMap::new();
+                for input in inputs.iter().take(4) {
+                    for s in served.drift_probe(input) {
+                        let a = anchors.entry(s.layer).or_insert(0.0);
+                        *a = a.max(s.rel_err);
+                    }
+                }
+                for (layer, err) in &anchors {
+                    dm.set_budget(layer, Some(*err));
+                }
+                eprintln!(
+                    "drift: self-calibrated {} layer budget(s) from pool probes",
+                    anchors.len()
+                );
+                dm
+            }
+        };
+        Some(dm)
+    } else {
+        None
+    };
+
+    // Out-of-distribution knob: scale every pooled input. With quantized
+    // layers this drives activations past their calibrated ranges and the
+    // shadow oracle's rel-L2 through the tuned budget.
+    let input_scale = args.flag_f64("--input-scale", 1.0)?;
+    if input_scale != 1.0 {
+        for t in &mut inputs {
+            for v in &mut t.data {
+                *v *= input_scale as f32;
+            }
+        }
+        eprintln!("input pool scaled by {input_scale} (out-of-distribution exercise)");
+    }
 
     eprintln!(
         "closed loop: {requests} requests, {concurrency} clients | max_batch {}, \
@@ -381,7 +449,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let tracer = args.flag("--trace-json").map(|_| Arc::new(Tracer::default()));
     let stats = ServeStats::new();
-    let report = run_closed_loop_with(
+    let report = run_closed_loop_observed(
         served.as_ref(),
         &serve_cfg,
         &stats,
@@ -389,10 +457,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests,
         concurrency,
         tracer.clone(),
+        drift.as_ref(),
     );
     println!("{}", report.summary_line());
     if report.completed as usize != requests {
         bail!("served {} of {requests} requests", report.completed);
+    }
+
+    // Drift report: the windowed per-layer rel-L2 series, budgets, and
+    // alert counts — written unconditionally so CI can assert both the
+    // calibrated (zero alerts) and OOD (≥1 alert) directions.
+    if let Some(path) = args.flag("--drift-json") {
+        let dm = drift.as_ref().expect("monitor exists when --drift-json is set");
+        println!(
+            "drift: {} span(s) shadow-sampled, {} alert(s){}",
+            dm.sampled(),
+            dm.alerts(),
+            if dm.report_only() { " [report-only]" } else { "" }
+        );
+        std::fs::write(path, dm.to_json() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("drift report written to {path}");
     }
 
     // Request tracing: drain every span's lifecycle as JSON lines, after
@@ -428,6 +513,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let reg = MetricsRegistry::new();
         stats.export_metrics(&reg);
         registry.plans().export_metrics(&reg);
+        if let Some(dm) = &drift {
+            dm.export_metrics(&reg);
+        }
         for (prefix, _cin, _cout) in ResNet18::wino_eligible_units(&served.net.cfg) {
             let Some(engine) = served.net.wino_layer(&prefix).and_then(|la| la.int_engine())
             else {
@@ -594,6 +682,33 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `winoq benchdiff`: compare the current run's `BENCH_*.json` artifacts
+/// against a committed baseline directory and exit nonzero on any gated
+/// regression (throughput down >10%, or any error metric up at all).
+/// This is the CI gate `scripts/ci.sh` runs against `bench/baselines/`.
+fn cmd_benchdiff(args: &Args) -> Result<()> {
+    use winoq::benchkit::diff::diff_dirs;
+
+    let baseline = args.flag_or("--baseline", "bench/baselines");
+    let current = args.flag_or("--current", ".");
+    let report = diff_dirs(Path::new(baseline), Path::new(current))?;
+    print!("{}", report.summary());
+    if let Some(path) = args.flag("--out") {
+        std::fs::write(path, report.to_json() + "\n")
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("benchdiff JSON written to {path}");
+    }
+    if !report.ok() {
+        bail!(
+            "benchdiff: {} regression(s) in {} gated metric(s) vs {baseline}",
+            report.failures(),
+            report.compared()
+        );
+    }
+    println!("benchdiff: {} gated metric(s) within thresholds vs {baseline}", report.compared());
+    Ok(())
+}
+
 /// `winoq serve --soak`: the deterministic multi-model stress/soak
 /// simulation — seeded arrivals over N weighted model shards, per-request
 /// deadlines and priorities, shed/miss accounting, all on a virtual
@@ -638,6 +753,8 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
         shapes,
         models: tenants,
         service_jitter_div: 16,
+        drift_stride: args.flag_u64("--drift-stride", 0)?,
+        drift_err_scale: args.flag_f64("--drift-scale", 1.0)?,
     };
     let trace_path = args.flag("--trace-json");
     let (report, trace) = if trace_path.is_some() {
@@ -652,6 +769,9 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
             "  {}: {} ok / {} rejected / {} shed, p99 {:.0} µs, {:.0} req/s",
             m.name, m.completed, m.rejected, m.shed, m.p99_us, m.requests_per_sec
         );
+    }
+    if let Some(d) = &report.drift {
+        println!("  drift: {} span(s) shadow-sampled, {} alert(s)", d.sampled, d.alerts);
     }
     if !report.accounting_exact() {
         bail!(

@@ -1,0 +1,404 @@
+//! Shadow-oracle accuracy-drift monitoring.
+//!
+//! The paper's claim is an *accuracy* statement — 8-bit quantized
+//! Winograd within 0.5% of direct convolution — but quantized Winograd
+//! error is input-distribution-dependent (arXiv 1803.10986): a NetPlan
+//! calibrated on one activation distribution can silently go stale
+//! under real traffic. This module closes that loop: serve workers
+//! re-run a deterministic subset of live requests' Winograd-eligible
+//! layers through the f64 direct-conv oracle already used by
+//! [`tune::cost`](crate::tune::cost), record the per-layer rel-L2 error
+//! into windowed [`TimeSeries`], and compare each window against the
+//! budget the tuner accepted (NetPlan v2 `tuned_err`). Violations emit
+//! [`TraceKind::DriftAlert`] events into the trace stream and surface
+//! in the `winoq serve --drift-json` report.
+//!
+//! # Sampling rule
+//!
+//! A span is shadow-sampled iff `span % stride == seed % stride`
+//! (stride 0 disables sampling). The rule is a pure function of the
+//! span ID — it consumes **zero** PRNG draws — so enabling drift
+//! monitoring cannot perturb a deterministic soak run, and rerunning
+//! the same seed samples the same spans: the trace stream stays
+//! byte-identical.
+//!
+//! # Budgets
+//!
+//! The per-layer budget is `tuned_err × headroom` — the tuner's
+//! measured acceptance error with slack for ordinary input variation.
+//! Layers without a tuned anchor (v1 plans, self-calibrated synthetic
+//! serving before the first probe) are **report-only**: their series
+//! still record, but no alert can fire. Errors are carried as integer
+//! parts-per-billion (`rel_err × 1e9`) so histograms, trace payloads,
+//! and reports stay integer-exact and replay-stable.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use super::json::{JsonArr, JsonObj};
+use super::metrics::MetricsRegistry;
+use super::series::TimeSeries;
+use super::trace::TraceKind;
+use crate::wino::basis::Base;
+
+/// One sampled layer's shadow-oracle measurement.
+#[derive(Clone, Debug)]
+pub struct DriftSample {
+    /// Conv-unit prefix, e.g. `"stem"`.
+    pub layer: String,
+    /// Winograd tile size the layer executed with.
+    pub m: usize,
+    pub base: Base,
+    pub weight_bits: u32,
+    pub hadamard_bits: u32,
+    /// Rel-L2 of the served output vs the f64 direct oracle.
+    pub rel_err: f64,
+}
+
+/// Drift-monitor knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// Sample every `stride`-th span (`span % stride == seed % stride`);
+    /// 0 disables sampling entirely.
+    pub stride: u64,
+    /// Seed folded into the sampling offset so different deployments
+    /// don't all sample the same residue class.
+    pub seed: u64,
+    /// Width of one error window in (virtual) microseconds.
+    pub window_us: u64,
+    /// Retained windows per layer series.
+    pub windows: usize,
+    /// Budget slack: alert when a window's mean rel-L2 exceeds
+    /// `tuned_err × headroom`.
+    pub headroom: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            stride: 16,
+            seed: 0,
+            window_us: 1_000_000,
+            windows: 8,
+            headroom: 4.0,
+        }
+    }
+}
+
+/// Fixed-point ppb conversion, saturating (a wildly divergent output
+/// must clamp, not wrap).
+pub fn rel_err_to_ppb(rel_err: f64) -> u64 {
+    let ppb = rel_err.max(0.0) * 1e9;
+    if ppb >= 1e18 {
+        1_000_000_000_000_000_000
+    } else {
+        ppb.round() as u64
+    }
+}
+
+/// Per-layer identity captured from the first sample (reporting only).
+#[derive(Clone, Debug)]
+struct LayerMeta {
+    m: usize,
+    base: Base,
+    weight_bits: u32,
+    hadamard_bits: u32,
+}
+
+#[derive(Default, Debug)]
+struct DriftState {
+    /// Per-layer ppb error series, keyed by layer prefix.
+    series: BTreeMap<String, TimeSeries>,
+    meta: BTreeMap<String, LayerMeta>,
+    /// `(layer, window index)` pairs that already alerted — one alert
+    /// per violated window, not one per sample.
+    alerted: BTreeSet<(String, u64)>,
+    /// Per-layer alert counts.
+    alerts_by_layer: BTreeMap<String, u64>,
+    sampled: u64,
+    alerts: u64,
+}
+
+/// Thread-safe drift monitor: budgets are immutable after
+/// construction, all per-sample state sits behind one mutex (the
+/// sampled path is `1/stride` of traffic, so contention is negligible).
+#[derive(Debug)]
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    /// Per-layer tuned rel-L2 anchor; `None` = report-only layer.
+    budgets: BTreeMap<String, Option<f64>>,
+    state: Mutex<DriftState>,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: DriftConfig) -> DriftMonitor {
+        assert!(cfg.headroom > 0.0, "headroom must be positive");
+        DriftMonitor { cfg, budgets: BTreeMap::new(), state: Mutex::new(DriftState::default()) }
+    }
+
+    /// Budgets from a NetPlan's layers: v2 plans carry `tuned_err`,
+    /// v1 layers map to `None` (report-only).
+    pub fn from_netplan(cfg: DriftConfig, plan: &crate::tune::NetPlan) -> DriftMonitor {
+        let mut dm = DriftMonitor::new(cfg);
+        for l in &plan.layers {
+            dm.set_budget(&l.layer, l.tuned_err);
+        }
+        dm
+    }
+
+    /// Set (or clear) one layer's tuned rel-L2 anchor.
+    pub fn set_budget(&mut self, layer: &str, tuned_err: Option<f64>) {
+        if let Some(e) = tuned_err {
+            assert!(e.is_finite() && e >= 0.0, "tuned_err {e} out of domain");
+        }
+        self.budgets.insert(layer.to_string(), tuned_err);
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// True when no layer has a tuned anchor — series still record,
+    /// but no alert can fire.
+    pub fn report_only(&self) -> bool {
+        self.budgets.values().all(Option::is_none)
+    }
+
+    /// The deterministic sampling rule: a pure function of the span ID,
+    /// zero PRNG draws.
+    pub fn should_sample(&self, span: u64) -> bool {
+        self.cfg.stride > 0 && span % self.cfg.stride == self.cfg.seed % self.cfg.stride
+    }
+
+    /// One layer's alert ceiling in ppb, if it has a tuned anchor.
+    pub fn budget_ppb(&self, layer: &str) -> Option<u64> {
+        let tuned = (*self.budgets.get(layer)?)?;
+        Some(rel_err_to_ppb(tuned * self.cfg.headroom))
+    }
+
+    /// Ingest one sampled span's shadow measurements at virtual time
+    /// `at_us`. Returns the `DriftAlert` events the caller should stamp
+    /// onto the span's trace (empty when every layer is within budget
+    /// or report-only).
+    pub fn observe(&self, _span: u64, at_us: u64, samples: &[DriftSample]) -> Vec<TraceKind> {
+        let mut st = self.state.lock().unwrap();
+        st.sampled += 1;
+        let mut out = Vec::new();
+        for s in samples {
+            let ppb = rel_err_to_ppb(s.rel_err);
+            let series = st.series.entry(s.layer.clone()).or_insert_with(|| {
+                TimeSeries::new(
+                    &format!("drift.{}.rel_err_ppb", s.layer),
+                    self.cfg.window_us,
+                    self.cfg.windows,
+                )
+            });
+            series.record(at_us, ppb);
+            let (win_index, win_mean) = {
+                let w = series.current().expect("just recorded");
+                (w.index, w.hist.mean())
+            };
+            st.meta.entry(s.layer.clone()).or_insert(LayerMeta {
+                m: s.m,
+                base: s.base,
+                weight_bits: s.weight_bits,
+                hadamard_bits: s.hadamard_bits,
+            });
+            let Some(budget_ppb) = self.budget_ppb(&s.layer) else { continue };
+            let key = (s.layer.clone(), win_index);
+            if win_mean > budget_ppb as f64 && !st.alerted.contains(&key) {
+                st.alerted.insert(key);
+                st.alerts += 1;
+                *st.alerts_by_layer.entry(s.layer.clone()).or_insert(0) += 1;
+                out.push(TraceKind::DriftAlert {
+                    layer: s.layer.clone(),
+                    m: s.m as u64,
+                    base: s.base.name().to_string(),
+                    weight_bits: u64::from(s.weight_bits),
+                    hadamard_bits: u64::from(s.hadamard_bits),
+                    rel_err_ppb: win_mean.round() as u64,
+                    budget_ppb,
+                });
+            }
+        }
+        out
+    }
+
+    /// Spans sampled so far.
+    pub fn sampled(&self) -> u64 {
+        self.state.lock().unwrap().sampled
+    }
+
+    /// Budget-violation alerts emitted so far (one per violated
+    /// `(layer, window)`).
+    pub fn alerts(&self) -> u64 {
+        self.state.lock().unwrap().alerts
+    }
+
+    /// Export into a [`MetricsRegistry`]: `drift.sampled` /
+    /// `drift.alerts` counters plus every per-layer series family.
+    pub fn export_metrics(&self, reg: &MetricsRegistry) {
+        let st = self.state.lock().unwrap();
+        reg.inc("drift.sampled", st.sampled);
+        reg.inc("drift.alerts", st.alerts);
+        for series in st.series.values() {
+            series.export_metrics(reg);
+        }
+    }
+
+    /// The `--drift-json` report: sampling rule, totals, and one entry
+    /// per observed layer with its error statistics and budget.
+    pub fn to_json(&self) -> String {
+        let st = self.state.lock().unwrap();
+        let offset = if self.cfg.stride > 0 { self.cfg.seed % self.cfg.stride } else { 0 };
+        let mut layers = JsonArr::new();
+        for (layer, series) in &st.series {
+            let meta = &st.meta[layer];
+            let total = series.total();
+            let recent = series.merged();
+            let mut obj = JsonObj::new()
+                .str("layer", layer)
+                .u64("m", meta.m as u64)
+                .str("base", meta.base.name())
+                .u64("weight_bits", u64::from(meta.weight_bits))
+                .u64("hadamard_bits", u64::from(meta.hadamard_bits))
+                .u64("samples", total.count())
+                .f64("mean_rel_err", total.mean() / 1e9, 9)
+                .f64("max_rel_err", total.max().unwrap_or(0) as f64 / 1e9, 9)
+                .f64("recent_mean_rel_err", recent.mean() / 1e9, 9)
+                .u64("windows", series.windows().len() as u64);
+            if let Some(tuned) = self.budgets.get(layer).copied().flatten() {
+                obj = obj
+                    .f64("tuned_err", tuned, 9)
+                    .f64("budget", tuned * self.cfg.headroom, 9);
+            }
+            obj = obj.u64(
+                "alerts",
+                st.alerts_by_layer.get(layer).copied().unwrap_or(0),
+            );
+            layers = layers.item(&obj.finish());
+        }
+        JsonObj::new()
+            .u64("stride", self.cfg.stride)
+            .u64("offset", offset)
+            .u64("window_us", self.cfg.window_us)
+            .f64("headroom", self.cfg.headroom, 3)
+            .bool("report_only", self.report_only())
+            .u64("sampled", st.sampled)
+            .u64("alerts", st.alerts)
+            .raw("layers", &layers.finish())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(layer: &str, rel_err: f64) -> DriftSample {
+        DriftSample {
+            layer: layer.into(),
+            m: 4,
+            base: Base::Legendre,
+            weight_bits: 8,
+            hadamard_bits: 9,
+            rel_err,
+        }
+    }
+
+    #[test]
+    fn sampling_rule_is_a_pure_stride_over_spans() {
+        let dm = DriftMonitor::new(DriftConfig { stride: 8, seed: 3, ..DriftConfig::default() });
+        let picked: Vec<u64> = (1..=32).filter(|&s| dm.should_sample(s)).collect();
+        assert_eq!(picked, vec![3, 11, 19, 27]);
+        let off = DriftMonitor::new(DriftConfig { stride: 0, ..DriftConfig::default() });
+        assert!((1..=32).all(|s| !off.should_sample(s)));
+    }
+
+    #[test]
+    fn within_budget_traffic_never_alerts() {
+        let mut dm = DriftMonitor::new(DriftConfig::default());
+        dm.set_budget("stem", Some(0.005));
+        for span in 0..20u64 {
+            let evs = dm.observe(span, span * 1000, &[sample("stem", 0.004)]);
+            assert!(evs.is_empty(), "0.004 < 0.005*4 must not alert");
+        }
+        assert_eq!(dm.alerts(), 0);
+        assert_eq!(dm.sampled(), 20);
+    }
+
+    #[test]
+    fn budget_violation_alerts_once_per_window() {
+        let cfg = DriftConfig { window_us: 1000, windows: 4, headroom: 2.0, ..DriftConfig::default() };
+        let mut dm = DriftMonitor::new(cfg);
+        dm.set_budget("stem", Some(0.001));
+        // Window 0: three violating samples → exactly one alert.
+        let mut alerts = 0;
+        for i in 0..3u64 {
+            alerts += dm.observe(i, i * 10, &[sample("stem", 0.01)]).len();
+        }
+        assert_eq!(alerts, 1);
+        // Next window violates again → a second alert.
+        let evs = dm.observe(9, 1500, &[sample("stem", 0.01)]);
+        assert_eq!(evs.len(), 1);
+        match &evs[0] {
+            TraceKind::DriftAlert { layer, budget_ppb, rel_err_ppb, .. } => {
+                assert_eq!(layer, "stem");
+                assert_eq!(*budget_ppb, 2_000_000);
+                assert!(*rel_err_ppb > *budget_ppb);
+            }
+            other => panic!("expected DriftAlert, got {other:?}"),
+        }
+        assert_eq!(dm.alerts(), 2);
+    }
+
+    #[test]
+    fn unbudgeted_layers_are_report_only() {
+        let dm = DriftMonitor::new(DriftConfig::default());
+        assert!(dm.report_only());
+        let evs = dm.observe(1, 0, &[sample("stem", 123.0)]);
+        assert!(evs.is_empty(), "report-only layers must never alert");
+        assert_eq!(dm.alerts(), 0);
+        assert_eq!(dm.sampled(), 1);
+        // …but the series still records for the report.
+        let report = dm.to_json();
+        assert!(report.contains("\"report_only\": true"), "{report}");
+        assert!(report.contains("\"layer\": \"stem\""), "{report}");
+    }
+
+    #[test]
+    fn ppb_conversion_saturates_and_rounds() {
+        assert_eq!(rel_err_to_ppb(0.0025), 2_500_000);
+        assert_eq!(rel_err_to_ppb(0.0), 0);
+        assert_eq!(rel_err_to_ppb(-1.0), 0);
+        assert_eq!(rel_err_to_ppb(1e30), 1_000_000_000_000_000_000);
+    }
+
+    #[test]
+    fn report_is_parseable_and_carries_budgets() {
+        let mut dm = DriftMonitor::new(DriftConfig::default());
+        dm.set_budget("stem", Some(0.002));
+        dm.observe(16, 0, &[sample("stem", 0.001)]);
+        let doc = crate::tune::json::parse(&dm.to_json()).unwrap();
+        assert_eq!(doc.get("sampled").and_then(|j| j.as_u64()), Some(1));
+        assert_eq!(doc.get("alerts").and_then(|j| j.as_u64()), Some(0));
+        let layers = doc.get("layers").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(layers.len(), 1);
+        let stem = &layers[0];
+        assert_eq!(stem.get("samples").and_then(|j| j.as_u64()), Some(1));
+        let budget = stem.get("budget").and_then(|j| j.as_f64()).unwrap();
+        assert!((budget - 0.008).abs() < 1e-9, "budget {budget}");
+    }
+
+    #[test]
+    fn export_metrics_publishes_counters_and_series() {
+        let mut dm = DriftMonitor::new(DriftConfig::default());
+        dm.set_budget("stem", Some(0.0001));
+        dm.observe(0, 0, &[sample("stem", 0.01)]);
+        let reg = MetricsRegistry::new();
+        dm.export_metrics(&reg);
+        assert_eq!(reg.counter("drift.sampled"), 1);
+        assert_eq!(reg.counter("drift.alerts"), 1);
+        assert_eq!(reg.histogram("drift.stem.rel_err_ppb").unwrap().count(), 1);
+    }
+}

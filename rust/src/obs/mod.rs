@@ -18,17 +18,35 @@
 //!    [`engine::int`](crate::engine) (input-quantize clips, 9-bit
 //!    Hadamard clamp hits, requant epilogue clips), surfaced per layer
 //!    through the registry and `winoq bench --health-json`.
+//! 4. **Time series & drift** ([`series`], [`drift`]) — windowed
+//!    [`TimeSeries`] (ring of `LogHistogram` windows rotated on the
+//!    virtual clock) feeding queue-depth/latency windows and the
+//!    shadow-oracle accuracy-drift monitor: every Nth span's
+//!    Winograd-eligible layers are re-run against the f64 direct-conv
+//!    oracle, per-layer rel-L2 is compared to the NetPlan v2 tuned
+//!    budget, and violations emit [`TraceKind::DriftAlert`] events
+//!    plus the `winoq serve --drift-json` report.
 //!
-//! See the "Observability" section of `docs/ARCHITECTURE.md` for the
-//! naming scheme, span lifecycle, and metric catalog.
+//! [`trainlog`] is the training coordinator's step/CSV log — separate
+//! from serving metrics but kept under the same roof.
+//!
+//! See the "Observability" and "Accuracy drift & regression gating"
+//! sections of `docs/ARCHITECTURE.md` for the naming scheme, span
+//! lifecycle, sampling rule, and metric catalog.
 
+pub mod drift;
 pub mod hist;
 pub mod json;
 pub mod metrics;
+pub mod series;
 pub mod trace;
+pub mod trainlog;
 
+pub use drift::{DriftConfig, DriftMonitor, DriftSample};
 pub use hist::LogHistogram;
 pub use metrics::{MetricValue, MetricsRegistry};
+pub use series::TimeSeries;
 pub use trace::{
     mint_span, SpanAccounting, TraceEvent, TraceKind, TraceLog, TraceSink, Tracer,
 };
+pub use trainlog::{MetricLog, StepRecord, Timer};

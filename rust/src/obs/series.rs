@@ -1,0 +1,307 @@
+//! Windowed time-series: a ring of `LogHistogram` windows rotated on a
+//! virtual-clock boundary.
+//!
+//! The [`MetricsRegistry`](super::MetricsRegistry) aggregates over a
+//! process lifetime — good for totals, useless for "what happened in the
+//! last minute". A [`TimeSeries`] keeps the newest `capacity` fixed-width
+//! windows of samples (each a 128-bucket [`LogHistogram`], so memory is
+//! bounded regardless of sample rate) plus one lifetime histogram, and
+//! rotates purely on the caller-supplied timestamp. Under the soak
+//! harness's virtual microsecond clock the rotation points are therefore
+//! exact and replayable: the same `(at_us, value)` stream always produces
+//! the same windows, which is what lets drift monitoring ride inside the
+//! byte-identical soak pin.
+//!
+//! Conservation invariant (property-tested below with
+//! [`testkit::forall`](crate::testkit::forall)): every recorded sample
+//! lands in exactly one retained window or the `evicted` count, so
+//! `total.count() == evicted + Σ window counts` at all times.
+//!
+//! Consumers: queue-depth and inflight-batch gauges in
+//! [`serve::stats`](crate::serve), per-window latency, and the
+//! per-layer rel-L2 drift series in [`obs::drift`](super::drift).
+
+use super::hist::LogHistogram;
+use super::metrics::MetricsRegistry;
+
+/// One rotation window: all samples whose `at_us / window_us == index`.
+#[derive(Clone, Debug)]
+pub struct SeriesWindow {
+    /// Window ordinal: `at_us / window_us` of every sample inside.
+    pub index: u64,
+    /// The window's samples.
+    pub hist: LogHistogram,
+}
+
+/// Ring of the newest `capacity` windows plus a lifetime aggregate.
+///
+/// `record` is O(1); rotation evicts the oldest window by folding its
+/// count into `evicted` (its samples stay represented in `total`).
+/// Samples older than the oldest retained window are clamped into it so
+/// no sample is ever silently dropped — under the deterministic soak
+/// clock timestamps are monotone and the clamp never fires.
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    name: String,
+    window_us: u64,
+    capacity: usize,
+    windows: Vec<SeriesWindow>,
+    total: LogHistogram,
+    evicted: u64,
+}
+
+impl TimeSeries {
+    /// New series named `name`, rotating every `window_us` virtual
+    /// microseconds, retaining the newest `capacity` windows.
+    ///
+    /// # Panics
+    /// If `window_us == 0` or `capacity == 0`.
+    pub fn new(name: &str, window_us: u64, capacity: usize) -> TimeSeries {
+        assert!(window_us > 0, "window_us must be positive");
+        assert!(capacity > 0, "capacity must be positive");
+        TimeSeries {
+            name: name.to_string(),
+            window_us,
+            capacity,
+            windows: Vec::new(),
+            total: LogHistogram::new(),
+            evicted: 0,
+        }
+    }
+
+    /// Series name (used as the metric-name prefix on export).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Window width in virtual microseconds.
+    pub fn window_us(&self) -> u64 {
+        self.window_us
+    }
+
+    /// Record `value` at virtual time `at_us`.
+    pub fn record(&mut self, at_us: u64, value: u64) {
+        self.total.record(value);
+        let idx = at_us / self.window_us;
+        // Common path: the sample belongs to the newest window.
+        if let Some(last) = self.windows.last_mut() {
+            if last.index == idx {
+                last.hist.record(value);
+                return;
+            }
+        }
+        match self.windows.last().map(|w| w.index) {
+            Some(newest) if idx < newest => {
+                // Late sample: clamp into the nearest retained window
+                // (exact window if still retained, else the oldest).
+                let w = self
+                    .windows
+                    .iter_mut()
+                    .find(|w| w.index >= idx)
+                    .expect("newest window exists");
+                w.hist.record(value);
+            }
+            _ => {
+                // New boundary crossed: open a window, evict from the
+                // front once over capacity.
+                self.windows.push(SeriesWindow { index: idx, hist: LogHistogram::new() });
+                self.windows.last_mut().unwrap().hist.record(value);
+                while self.windows.len() > self.capacity {
+                    let old = self.windows.remove(0);
+                    self.evicted += old.hist.count();
+                }
+            }
+        }
+    }
+
+    /// Retained windows, oldest first. Indices are strictly increasing
+    /// (boundaries are monotone) but not necessarily contiguous — empty
+    /// windows are never materialised.
+    pub fn windows(&self) -> &[SeriesWindow] {
+        &self.windows
+    }
+
+    /// The newest retained window, if any sample has been recorded.
+    pub fn current(&self) -> Option<&SeriesWindow> {
+        self.windows.last()
+    }
+
+    /// Lifetime histogram over every sample ever recorded.
+    pub fn total(&self) -> &LogHistogram {
+        &self.total
+    }
+
+    /// Samples rotated out of the ring (still counted in `total`).
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Merge of all retained windows — the "recent" view. Equals the
+    /// histogram of the concatenated retained samples (LogHistogram
+    /// merge is associative; property-tested).
+    pub fn merged(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for w in &self.windows {
+            h.merge(&w.hist);
+        }
+        h
+    }
+
+    /// Export into a [`MetricsRegistry`] snapshot:
+    ///
+    /// - `<name>` — lifetime histogram,
+    /// - `<name>.recent` — merge of retained windows,
+    /// - `<name>.windows` — gauge, retained window count,
+    /// - `<name>.evicted` — counter, samples rotated out.
+    pub fn export_metrics(&self, reg: &MetricsRegistry) {
+        reg.merge_hist(&self.name, &self.total);
+        reg.merge_hist(&format!("{}.recent", self.name), &self.merged());
+        reg.set_gauge(&format!("{}.windows", self.name), self.windows.len() as f64);
+        if self.evicted > 0 {
+            reg.inc(&format!("{}.evicted", self.name), self.evicted);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_land_in_their_clock_window() {
+        let mut s = TimeSeries::new("q", 1000, 4);
+        s.record(0, 5);
+        s.record(999, 6);
+        s.record(1000, 7);
+        assert_eq!(s.windows().len(), 2);
+        assert_eq!(s.windows()[0].index, 0);
+        assert_eq!(s.windows()[0].hist.count(), 2);
+        assert_eq!(s.windows()[1].index, 1);
+        assert_eq!(s.windows()[1].hist.count(), 1);
+        assert_eq!(s.total().count(), 3);
+        assert_eq!(s.evicted(), 0);
+    }
+
+    #[test]
+    fn rotation_evicts_front_and_conserves_counts() {
+        let mut s = TimeSeries::new("q", 100, 3);
+        for i in 0..6u64 {
+            // One sample per window: windows 0..6.
+            s.record(i * 100, i + 1);
+        }
+        assert_eq!(s.windows().len(), 3);
+        let retained: Vec<u64> = s.windows().iter().map(|w| w.index).collect();
+        assert_eq!(retained, vec![3, 4, 5]);
+        assert_eq!(s.evicted(), 3);
+        let win_count: u64 = s.windows().iter().map(|w| w.hist.count()).sum();
+        assert_eq!(s.total().count(), s.evicted() + win_count);
+    }
+
+    #[test]
+    fn sparse_clocks_skip_empty_windows() {
+        let mut s = TimeSeries::new("q", 10, 8);
+        s.record(5, 1);
+        s.record(95, 2);
+        let idx: Vec<u64> = s.windows().iter().map(|w| w.index).collect();
+        assert_eq!(idx, vec![0, 9]);
+    }
+
+    #[test]
+    fn late_samples_clamp_into_nearest_retained_window() {
+        let mut s = TimeSeries::new("q", 10, 2);
+        s.record(0, 1); // window 0 — will be evicted
+        s.record(10, 2); // window 1
+        s.record(20, 3); // window 2; evicts window 0
+        s.record(1, 99); // late: window 0 gone, clamps into window 1
+        assert_eq!(s.windows()[0].index, 1);
+        assert_eq!(s.windows()[0].hist.count(), 2);
+        assert_eq!(s.total().count(), 4);
+        assert_eq!(s.evicted() + s.merged().count(), s.total().count());
+    }
+
+    #[test]
+    fn merged_equals_concatenation_of_retained() {
+        let mut s = TimeSeries::new("q", 50, 4);
+        let samples = [(0u64, 3u64), (10, 9), (60, 27), (120, 81), (130, 5)];
+        let mut direct = LogHistogram::new();
+        for &(t, v) in &samples {
+            s.record(t, v);
+            direct.record(v);
+        }
+        let m = s.merged();
+        assert_eq!(m.count(), direct.count());
+        assert_eq!(m.min(), direct.min());
+        assert_eq!(m.max(), direct.max());
+        assert_eq!(m.value_at_quantile(0.5), direct.value_at_quantile(0.5));
+    }
+
+    #[test]
+    fn export_metrics_publishes_the_series_family() {
+        let mut s = TimeSeries::new("serve.queue_depth", 100, 2);
+        for i in 0..4u64 {
+            s.record(i * 100, i);
+        }
+        let reg = MetricsRegistry::new();
+        s.export_metrics(&reg);
+        assert_eq!(reg.histogram("serve.queue_depth").unwrap().count(), 4);
+        assert_eq!(reg.histogram("serve.queue_depth.recent").unwrap().count(), 2);
+        assert_eq!(reg.gauge("serve.queue_depth.windows"), Some(2.0));
+        assert_eq!(reg.counter("serve.queue_depth.evicted"), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "window_us must be positive")]
+    fn zero_window_width_is_refused() {
+        TimeSeries::new("q", 0, 1);
+    }
+
+    /// Property suite over random sample streams (mostly-monotone clocks
+    /// with occasional late samples): window boundaries stay strictly
+    /// monotone, no sample is lost or double-counted, the ring respects
+    /// its capacity, and the merged view equals the concatenation of the
+    /// retained windows.
+    #[test]
+    fn rotation_properties_hold_for_random_streams() {
+        use crate::wino::error::Prng;
+        crate::testkit::forall(
+            0x5E21E5,
+            24,
+            |rng: &mut Prng| {
+                let window = 1 + rng.next_u64() % 1000;
+                let cap = 1 + (rng.next_u64() % 6) as usize;
+                let n = 1 + (rng.next_u64() % 200) as usize;
+                let mut t = 0u64;
+                let samples: Vec<(u64, u64)> = (0..n)
+                    .map(|_| {
+                        t += rng.next_u64() % (window / 2 + 2);
+                        let at = if rng.next_u64() % 8 == 0 {
+                            // Late sample: may fall behind the oldest
+                            // retained window and exercise the clamp.
+                            t.saturating_sub(rng.next_u64() % (window * 3))
+                        } else {
+                            t
+                        };
+                        (at, rng.next_u64() % 10_000)
+                    })
+                    .collect();
+                (window, cap, samples)
+            },
+            |(window, cap, samples)| {
+                let mut s = TimeSeries::new("p", *window, *cap);
+                for &(at, v) in samples {
+                    s.record(at, v);
+                }
+                let retained: u64 = s.windows().iter().map(|w| w.hist.count()).sum();
+                let conserved = s.total().count() == samples.len() as u64
+                    && s.total().count() == s.evicted() + retained;
+                let monotone = s.windows().windows(2).all(|p| p[0].index < p[1].index);
+                let bounded = s.windows().len() <= *cap && !s.windows().is_empty();
+                let merged = s.merged();
+                let retained_sum: u64 = s.windows().iter().map(|w| w.hist.sum()).sum();
+                let merge_is_concat =
+                    merged.count() == retained && merged.sum() == retained_sum;
+                conserved && monotone && bounded && merge_is_concat
+            },
+        );
+    }
+}

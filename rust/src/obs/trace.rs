@@ -85,6 +85,20 @@ pub enum TraceKind {
     },
     /// Response delivered. Terminal.
     Complete { latency_us: u64, batch_size: u64 },
+    /// Shadow-oracle drift check on a sampled span found one layer's
+    /// windowed rel-L2 error above its tuned budget. Non-terminal (the
+    /// span still completes normally); errors are carried in parts per
+    /// billion so the payload stays integer-exact and the trace stream
+    /// byte-identical across reruns.
+    DriftAlert {
+        layer: String,
+        m: u64,
+        base: String,
+        weight_bits: u64,
+        hadamard_bits: u64,
+        rel_err_ppb: u64,
+        budget_ppb: u64,
+    },
 }
 
 /// One timestamped event on one span.
@@ -142,6 +156,24 @@ impl TraceEvent {
                 .str("event", "complete")
                 .u64("latency_us", *latency_us)
                 .u64("batch_size", *batch_size)
+                .finish(),
+            TraceKind::DriftAlert {
+                layer,
+                m,
+                base,
+                weight_bits,
+                hadamard_bits,
+                rel_err_ppb,
+                budget_ppb,
+            } => head
+                .str("event", "drift_alert")
+                .str("layer", layer)
+                .u64("m", *m)
+                .str("base", base)
+                .u64("weight_bits", *weight_bits)
+                .u64("hadamard_bits", *hadamard_bits)
+                .u64("rel_err_ppb", *rel_err_ppb)
+                .u64("budget_ppb", *budget_ppb)
                 .finish(),
         }
     }
@@ -373,6 +405,35 @@ mod tests {
             doc.get("why").and_then(crate::tune::json::Json::as_str),
             Some("predicted past deadline")
         );
+    }
+
+    #[test]
+    fn drift_alert_is_non_terminal_and_renders_house_style() {
+        let ev = TraceEvent {
+            span: 11,
+            at_us: 500,
+            kind: TraceKind::DriftAlert {
+                layer: "s0b0.conv1".into(),
+                m: 4,
+                base: "legendre".into(),
+                weight_bits: 8,
+                hadamard_bits: 9,
+                rel_err_ppb: 7_500_000,
+                budget_ppb: 2_500_000,
+            },
+        };
+        assert!(!ev.is_terminal(), "a drift alert must not close the span");
+        let line = ev.to_json_line();
+        assert!(line.starts_with("{\"span\": 11, \"at_us\": 500, \"event\": \"drift_alert\""));
+        let doc = crate::tune::json::parse(&line).unwrap();
+        assert_eq!(doc.get("rel_err_ppb").and_then(|j| j.as_u64()), Some(7_500_000));
+        assert_eq!(doc.get("budget_ppb").and_then(|j| j.as_u64()), Some(2_500_000));
+        // Accounting stays exact with alerts interleaved.
+        let mut log = TraceLog::new();
+        log.record(11, 0, submit());
+        log.record(11, 500, ev.kind.clone());
+        log.record(11, 900, TraceKind::Complete { latency_us: 900, batch_size: 1 });
+        assert!(log.accounting().exact);
     }
 
     #[test]

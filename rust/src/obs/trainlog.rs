@@ -1,5 +1,6 @@
-//! Metric stream: step records, moving averages, CSV export and console
-//! reporting for the training coordinator and the bench harness.
+//! Training-step log: step records, moving averages, CSV export for the
+//! training coordinator — the one non-serving metrics surface, kept
+//! under `obs` so there is exactly one observability layer.
 
 use std::fmt::Write as _;
 use std::path::Path;

@@ -76,6 +76,7 @@ pub use stats::{ServeStats, StatsReport};
 use crate::engine::{EngineScratch, WinoEngine};
 use crate::nn::layers::Conv2dCfg;
 use crate::nn::tensor::Tensor;
+use crate::obs::drift::{DriftMonitor, DriftSample};
 use crate::obs::{TraceKind, Tracer};
 use crate::tune::cost::TileCostModel;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -119,6 +120,16 @@ pub trait BatchModel: Sync {
     /// `None` (the default) means the model keeps no such cache.
     fn plan_cache_probe(&self, _h: usize, _w: usize) -> Option<bool> {
         None
+    }
+
+    /// Shadow-oracle drift probe: re-run `item`'s Winograd-eligible
+    /// layers against the f64 direct-conv oracle and return one
+    /// [`DriftSample`] per lowered layer. Only called on the
+    /// deterministically sampled subset of spans when a
+    /// [`DriftMonitor`] is attached. The default (models with no
+    /// oracle path, e.g. single-engine test models) reports nothing.
+    fn drift_probe(&self, _item: &Tensor) -> Vec<DriftSample> {
+        Vec::new()
     }
 }
 
@@ -237,6 +248,22 @@ pub fn with_server_traced<R>(
     tracer: Option<Arc<Tracer>>,
     client: impl FnOnce(&ServeQueue) -> R,
 ) -> R {
+    with_server_observed(model, cfg, stats, tracer, None, client)
+}
+
+/// [`with_server_traced`] plus an optional [`DriftMonitor`]: workers
+/// shadow-sample every `stride`-th completed span through the model's
+/// [`drift_probe`](BatchModel::drift_probe) and stamp any resulting
+/// `drift_alert` events onto the span's trace (`winoq serve
+/// --drift-json`). Kept separate so `ServeConfig` stays `Copy`.
+pub fn with_server_observed<R>(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    tracer: Option<Arc<Tracer>>,
+    drift: Option<&DriftMonitor>,
+    client: impl FnOnce(&ServeQueue) -> R,
+) -> R {
     // Shape-validating queue: malformed submissions are rejected at
     // admission instead of reaching (and panicking) a worker. Plain
     // `submit` calls carry the model's nominal tile weight into the
@@ -246,11 +273,12 @@ pub fn with_server_traced<R>(
     if let Some(tr) = tracer {
         queue = queue.with_tracer(tr);
     }
+    stats.note_workers(cfg.workers.max(1));
     std::thread::scope(|scope| {
         for _ in 0..cfg.workers.max(1) {
             scope.spawn(|| {
                 let _guard = AbortOnPanic(&queue);
-                worker_loop(model, &queue, cfg, stats);
+                worker_loop(model, &queue, cfg, stats, drift);
             });
         }
         let _close = CloseOnDrop(&queue);
@@ -261,11 +289,12 @@ pub fn with_server_traced<R>(
 /// One worker: drain micro-batches per the scheduler's policy, deliver
 /// shed notices, stack the batch, run the engine pass, split and answer.
 /// Owns its [`EngineScratch`] for the whole session.
-fn worker_loop(
+pub(crate) fn worker_loop(
     model: &dyn BatchModel,
     queue: &ServeQueue,
     cfg: &ServeConfig,
     stats: &ServeStats,
+    drift: Option<&DriftMonitor>,
 ) {
     let mut scratch = EngineScratch::new();
     let window = Duration::from_micros(cfg.batch_window_us);
@@ -283,6 +312,7 @@ fn worker_loop(
         if batch.is_empty() {
             continue;
         }
+        let busy_started = Instant::now();
         let depth_after_drain = queue.depth();
         let bsz = batch.len();
         // Admission validated each shape against the model's policy, and
@@ -351,6 +381,21 @@ fn worker_loop(
             if req.deadline_us.is_some_and(|d| queue.now_us() > d) {
                 missed += 1;
             }
+            // Shadow-oracle drift check on the sampled subset: a pure
+            // span-stride rule (zero PRNG draws), stamped before the
+            // span's terminal event so alerts sit inside the lifecycle.
+            if let Some(dm) = drift {
+                if dm.should_sample(req.span) {
+                    let samples = model.drift_probe(&req.input);
+                    let at = queue.now_us();
+                    let alerts = dm.observe(req.span, at, &samples);
+                    if let Some(tr) = queue.tracer() {
+                        for kind in alerts {
+                            tr.record(req.span, at, kind);
+                        }
+                    }
+                }
+            }
             if let Some(tr) = queue.tracer() {
                 tr.record(
                     req.span,
@@ -361,11 +406,12 @@ fn worker_loop(
             // A gone client (dropped receiver) is not a server error.
             let _ = req.tx.send(Ok(Response { output, latency_us, batch_size: bsz }));
         }
-        stats.record_batch(bsz, batch_tiles, depth_after_drain, &lat_us);
+        stats.record_batch_at(bsz, batch_tiles, depth_after_drain, &lat_us, queue.now_us());
         if missed > 0 {
             stats.record_deadline_miss(missed);
         }
         stats.record_stage_ns(stage_ns);
+        stats.record_busy_us(busy_started.elapsed().as_micros() as u64);
     }
 }
 
@@ -420,10 +466,26 @@ pub fn run_closed_loop_with(
     concurrency: usize,
     tracer: Option<Arc<Tracer>>,
 ) -> StatsReport {
+    run_closed_loop_observed(model, cfg, stats, inputs, total_requests, concurrency, tracer, None)
+}
+
+/// [`run_closed_loop_with`] plus an optional [`DriftMonitor`] — the
+/// full-fat entry the CLI's `--drift-json` path drives.
+#[allow(clippy::too_many_arguments)]
+pub fn run_closed_loop_observed(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    inputs: &[Tensor],
+    total_requests: usize,
+    concurrency: usize,
+    tracer: Option<Arc<Tracer>>,
+    drift: Option<&DriftMonitor>,
+) -> StatsReport {
     assert!(!inputs.is_empty(), "need at least one input to serve");
     let started = Instant::now();
     let next = AtomicUsize::new(0);
-    with_server_traced(model, cfg, stats, tracer, |queue| {
+    with_server_observed(model, cfg, stats, tracer, drift, |queue| {
         std::thread::scope(|s| {
             for _ in 0..concurrency.max(1) {
                 s.spawn(|| loop {

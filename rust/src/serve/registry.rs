@@ -34,10 +34,13 @@ use super::plan::{PlanCache, PlanKey};
 use super::{BatchModel, ShapePolicy};
 use crate::data::synthcifar;
 use crate::engine::EngineScratch;
+use crate::nn::layers::Conv2dCfg;
 use crate::nn::tensor::Tensor;
 use crate::nn::winolayer::WinoConv2d;
 use crate::nn::{ConvMode, Params, ResNet18, ResNetCfg};
+use crate::obs::drift::DriftSample;
 use crate::runtime::manifest::Manifest;
+use crate::tune::cost::{direct_conv_f64, rel_l2};
 use crate::tune::netplan::NetPlan;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -96,6 +99,43 @@ impl BatchModel for ServedModel {
 
     fn plan_cache_probe(&self, h: usize, w: usize) -> Option<bool> {
         Some(self.plans.has_shape(&self.name, h, w))
+    }
+
+    /// Shadow-oracle probe: replay this item through the network,
+    /// capturing every Winograd-eligible layer's *actual* input
+    /// activations (the same stem-to-tail capture calibration uses), then
+    /// score each lowered layer's served output against the f64 direct
+    /// oracle from `tune::cost`. Layers are visited in network order, so
+    /// the sample list — and everything downstream of it — is
+    /// deterministic.
+    fn drift_probe(&self, item: &Tensor) -> Vec<DriftSample> {
+        let mut x = item.clone();
+        x.dims.insert(0, 1);
+        let captured = self.net.capture_wino_inputs(&x);
+        let conv = Conv2dCfg { stride: 1, padding: 1 };
+        let mut scratch = EngineScratch::new();
+        let mut out = Vec::new();
+        for (prefix, _cin, _cout) in ResNet18::wino_eligible_units(&self.net.cfg) {
+            let Some(layer) = self.net.wino_layer(&prefix) else { continue };
+            let Some(input) = captured.get(&prefix) else { continue };
+            let weights = &self.net.params[&format!("{prefix}.w")];
+            let got = layer.forward_with_scratch(input, conv, &mut scratch);
+            let oracle = direct_conv_f64(input, weights, conv.padding);
+            let rel_err = rel_l2(&got.data, &oracle);
+            let (weight_bits, hadamard_bits) = layer
+                .quant
+                .as_ref()
+                .map_or((32, 32), |(q, _)| (q.weight_bits, q.hadamard_bits));
+            out.push(DriftSample {
+                layer: prefix.clone(),
+                m: layer.wf.m,
+                base: layer.wf.base,
+                weight_bits,
+                hadamard_bits,
+                rel_err,
+            });
+        }
+        out
     }
 }
 
@@ -619,12 +659,16 @@ mod tests {
                     m: 4,
                     base: Base::Legendre,
                     quant: QuantConfig::w8_h9(),
+                    tuned_err: Some(0.05),
+                    tuned_tiles_per_sec: Some(100000.0),
                 },
                 LayerPlan {
                     layer: "s0b0.conv1".into(),
                     m: 2,
                     base: Base::Canonical,
                     quant: QuantConfig::w8(),
+                    tuned_err: None,
+                    tuned_tiles_per_sec: None,
                 },
             ],
         };

@@ -179,11 +179,12 @@ pub fn with_shards_traced<'a, R>(
             let queue = &router.shards[i].queue;
             let model = router.shards[i].model;
             let shard_stats = &stats[i];
+            shard_stats.note_workers(spec.cfg.workers.max(1));
             for _ in 0..spec.cfg.workers.max(1) {
                 let cfg = &spec.cfg;
                 scope.spawn(move || {
                     let _guard = AbortOnPanic(queue);
-                    worker_loop(model, queue, cfg, shard_stats);
+                    worker_loop(model, queue, cfg, shard_stats, None);
                 });
             }
         }

@@ -21,12 +21,19 @@
 
 use super::plan::CacheCounters;
 use crate::obs::json::JsonObj;
-use crate::obs::{LogHistogram, MetricsRegistry};
+use crate::obs::{LogHistogram, MetricsRegistry, TimeSeries};
 use std::sync::Mutex;
+
+/// Width of one stats time-series window (1 s of queue time). Short
+/// live runs land in a single window; soak runs (virtual clock, tens of
+/// seconds) rotate through many and exercise eviction.
+const SERIES_WINDOW_US: u64 = 1_000_000;
+/// Retained windows per stats series — older windows fold into the
+/// eviction tail, so memory stays fixed however long the run.
+const SERIES_WINDOWS: usize = 8;
 
 /// Aggregates accumulated during a serving run. Every field is fixed
 /// size — nothing here grows with request count.
-#[derive(Default)]
 struct StatsState {
     /// Enqueue→response latency histogram (microseconds), one sample
     /// per completed request.
@@ -49,6 +56,41 @@ struct StatsState {
     /// (each worker's scratch accumulates a pass, the worker drains it
     /// here per micro-batch).
     stage_ns: [u64; 3],
+    /// Queue depth left behind after each drain, bucketed into rotating
+    /// one-second windows of queue time (`serve.window.queue_depth`).
+    depth_series: TimeSeries,
+    /// Drained micro-batch sizes per window (`serve.window.batch_size`)
+    /// — the windowed view of batching efficiency under load swings.
+    batch_series: TimeSeries,
+    /// Per-request latency per window (`serve.window.latency_us`) — the
+    /// windowed counterpart of the lifetime `lat` histogram.
+    lat_series: TimeSeries,
+    /// Total wall-microseconds workers spent executing batches (not
+    /// parked waiting) — numerator of `worker_utilization`.
+    busy_us: u64,
+    /// Worker threads serving this stats sink (summed across shards
+    /// when shards share a sink).
+    workers: u64,
+}
+
+impl Default for StatsState {
+    fn default() -> StatsState {
+        StatsState {
+            lat: LogHistogram::default(),
+            batches: 0,
+            rejected: 0,
+            shed: 0,
+            deadline_missed: 0,
+            tiles: 0,
+            max_queue_depth: 0,
+            stage_ns: [0; 3],
+            depth_series: TimeSeries::new("serve.window.queue_depth", SERIES_WINDOW_US, SERIES_WINDOWS),
+            batch_series: TimeSeries::new("serve.window.batch_size", SERIES_WINDOW_US, SERIES_WINDOWS),
+            lat_series: TimeSeries::new("serve.window.latency_us", SERIES_WINDOW_US, SERIES_WINDOWS),
+            busy_us: 0,
+            workers: 0,
+        }
+    }
 }
 
 /// Shared, thread-safe stats sink for one serving run.
@@ -64,16 +106,51 @@ impl ServeStats {
 
     /// Record one completed micro-batch: its size, the tiles it pushed
     /// through the engine, the queue depth left behind, and every
-    /// member request's end-to-end latency in microseconds.
+    /// member request's end-to-end latency in microseconds. Samples land
+    /// in the time-series window containing queue time 0 — callers that
+    /// know the queue clock should prefer
+    /// [`record_batch_at`](Self::record_batch_at).
     pub fn record_batch(&self, batch_size: usize, tiles: u64, depth: usize, lat_us: &[u64]) {
-        let _ = batch_size; // completed = histogram count; size is lat_us.len()
+        self.record_batch_at(batch_size, tiles, depth, lat_us, 0);
+    }
+
+    /// [`record_batch`](Self::record_batch) stamped with the queue clock
+    /// (`ServeQueue::now_us` — wall time live, virtual time under soak,
+    /// so the windowed series rotate deterministically in soak reruns).
+    /// `now_us` picks the window each depth/batch-size/latency sample
+    /// falls into.
+    pub fn record_batch_at(
+        &self,
+        batch_size: usize,
+        tiles: u64,
+        depth: usize,
+        lat_us: &[u64],
+        now_us: u64,
+    ) {
         let mut st = self.state.lock().unwrap();
         st.batches += 1;
         st.tiles += tiles;
         st.max_queue_depth = st.max_queue_depth.max(depth);
+        st.depth_series.record(now_us, depth as u64);
+        st.batch_series.record(now_us, batch_size as u64);
         for &v in lat_us {
             st.lat.record(v);
+            st.lat_series.record(now_us, v);
         }
+    }
+
+    /// Note `n` worker threads draining into this sink (additive, so
+    /// shards sharing one sink account all their workers). Denominator
+    /// of the report's `worker_utilization`.
+    pub fn note_workers(&self, n: usize) {
+        self.state.lock().unwrap().workers += n as u64;
+    }
+
+    /// Fold `us` wall-microseconds of worker busy time (time spent
+    /// executing a batch rather than parked on the queue).
+    pub fn record_busy_us(&self, us: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.busy_us = st.busy_us.saturating_add(us);
     }
 
     /// Record one admission rejection (backpressure).
@@ -130,6 +207,11 @@ impl ServeStats {
         reg.inc("engine.stage_ns.input_transform", st.stage_ns[0]);
         reg.inc("engine.stage_ns.hadamard", st.stage_ns[1]);
         reg.inc("engine.stage_ns.inverse", st.stage_ns[2]);
+        reg.set_gauge("serve.workers", st.workers as f64);
+        reg.inc("serve.busy_us", st.busy_us);
+        st.depth_series.export_metrics(reg);
+        st.batch_series.export_metrics(reg);
+        st.lat_series.export_metrics(reg);
     }
 
     /// Fold the aggregates into a report; `wall_seconds` is the run's
@@ -144,6 +226,11 @@ impl ServeStats {
         let pct = |q: f64| st.lat.value_at_quantile(q) as f64 / 1e3;
         let completed = st.lat.count();
         let wall = wall_seconds.max(1e-9);
+        let worker_utilization = if st.workers == 0 {
+            0.0
+        } else {
+            (st.busy_us as f64 / 1e6) / (st.workers as f64 * wall)
+        };
         StatsReport {
             submitted: completed + st.rejected + st.shed,
             completed,
@@ -165,6 +252,10 @@ impl ServeStats {
             tiles_per_sec: st.tiles as f64 / wall,
             tiles: st.tiles,
             max_queue_depth: st.max_queue_depth,
+            queue_depth_recent_mean: st.depth_series.merged().mean(),
+            workers: st.workers,
+            busy_us: st.busy_us,
+            worker_utilization,
             wall_seconds,
             stage_ns: st.stage_ns,
         }
@@ -200,6 +291,18 @@ pub struct StatsReport {
     /// the per-tile stage costs in [`to_json`](Self::to_json).
     pub tiles: u64,
     pub max_queue_depth: usize,
+    /// Mean drain-time queue depth over the retained time-series
+    /// windows (the last ~8 s of queue time) — the recency-weighted
+    /// companion of the lifetime `max_queue_depth` high-water mark.
+    pub queue_depth_recent_mean: f64,
+    /// Worker threads that drained into this sink.
+    pub workers: u64,
+    /// Total wall-microseconds those workers spent executing batches.
+    pub busy_us: u64,
+    /// `busy_us / (workers × wall)` — fraction of worker capacity spent
+    /// executing rather than parked. Can exceed 1.0 slightly when the
+    /// caller's wall clock stops before the last worker drains.
+    pub worker_utilization: f64,
     pub wall_seconds: f64,
     /// Engine stage breakdown summed over every pass of the run:
     /// `[input-transform, hadamard/GEMM, inverse]` wall-nanoseconds —
@@ -255,6 +358,10 @@ impl StatsReport {
             .f64("requests_per_sec", self.requests_per_sec, 2)
             .f64("tiles_per_sec", self.tiles_per_sec, 1)
             .u64("max_queue_depth", self.max_queue_depth as u64)
+            .f64("queue_depth_recent_mean", self.queue_depth_recent_mean, 3)
+            .u64("workers", self.workers)
+            .u64("busy_us", self.busy_us)
+            .f64("worker_utilization", self.worker_utilization, 4)
             .f64("wall_seconds", self.wall_seconds, 4)
             .raw("stage_ns", &stage)
             .raw("stage_ns_per_tile", &stage_per_tile)
@@ -298,7 +405,8 @@ impl StatsReport {
         format!(
             "{} ok / {} rejected / {} shed ({} missed deadline) in {:.2}s | \
              {:.1} req/s, {:.0} tiles/s | \
-             batch mean {:.2} over {} passes | p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+             batch mean {:.2} over {} passes | p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms | \
+             {} workers {:.0}% busy",
             self.completed,
             self.rejected,
             self.shed,
@@ -311,6 +419,8 @@ impl StatsReport {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
+            self.workers,
+            self.worker_utilization * 100.0,
         )
     }
 }
@@ -471,6 +581,44 @@ mod tests {
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    /// Satellite surface: drain-time samples land in rotating windows,
+    /// worker bookkeeping folds into a utilization fraction, and both
+    /// show up in the JSON report and the metrics registry.
+    #[test]
+    fn windowed_series_and_worker_utilization() {
+        let s = ServeStats::new();
+        s.note_workers(2);
+        s.record_batch_at(2, 20, 3, &[1000, 2000], 500_000); // window 0
+        s.record_batch_at(1, 10, 5, &[3000], 1_500_000); // window 1
+        s.record_busy_us(600_000);
+        s.record_busy_us(400_000);
+        let r = s.report(1.0);
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.busy_us, 1_000_000);
+        // 1.0 busy-second over 2 workers × 1.0 s wall = 50%.
+        assert!((r.worker_utilization - 0.5).abs() < 1e-12);
+        // Depth samples 3 and 5 over the retained windows (sum is exact
+        // in the log histogram, so the mean is too).
+        assert!((r.queue_depth_recent_mean - 4.0).abs() < 1e-12);
+        let j = r.to_json();
+        assert!(j.contains("\"workers\": 2"), "{j}");
+        assert!(j.contains("\"busy_us\": 1000000"), "{j}");
+        assert!(j.contains("\"worker_utilization\": 0.5000"), "{j}");
+        assert!(j.contains("\"queue_depth_recent_mean\": 4.000"), "{j}");
+        let reg = MetricsRegistry::new();
+        s.export_metrics(&reg);
+        assert_eq!(reg.gauge("serve.workers"), Some(2.0));
+        assert_eq!(reg.counter("serve.busy_us"), 1_000_000);
+        // Two drains crossed a window boundary: two retained windows.
+        assert_eq!(reg.gauge("serve.window.queue_depth.windows"), Some(2.0));
+        let depth = reg.histogram("serve.window.queue_depth").unwrap();
+        assert_eq!((depth.count(), depth.max()), (2, Some(5)));
+        let lat = reg.histogram("serve.window.latency_us.recent").unwrap();
+        assert_eq!(lat.count(), 3);
+        let batch = reg.histogram("serve.window.batch_size").unwrap();
+        assert_eq!(batch.sum(), 3, "batch sizes 2 + 1");
     }
 
     /// `export_metrics` publishes the same aggregates the report folds.

@@ -31,12 +31,34 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::benchkit::percentile_sorted;
+use crate::obs::drift::{DriftConfig, DriftMonitor, DriftSample};
 use crate::obs::json::{JsonArr, JsonObj};
 use crate::obs::{TraceKind, TraceLog};
 use crate::serve::queue::lane;
 use crate::serve::{admission_caps, Poll, Priority, SchedItem, Scheduler, Shed};
 use crate::tune::cost::TileCostModel;
+use crate::wino::basis::Base;
 use crate::wino::error::Prng;
+
+/// Synthetic per-sample shadow-oracle rel-L2 the drift-enabled soak
+/// attributes to every sampled span (scaled by
+/// [`SoakConfig::drift_err_scale`]); the monitor's budget is this base
+/// times its headroom, so calibrated traffic (`scale = 1.0`, jitter
+/// < 10%) never alerts and scaled-out traffic must.
+const SOAK_DRIFT_BASE_ERR: f64 = 0.002;
+
+/// Deterministic synthetic rel-L2 for one sampled span: splitmix64 of
+/// `seed ^ span` jitters the base error by < 10%, then the out-of-
+/// distribution `scale` multiplies it. A pure function of the span id —
+/// the simulation's [`Prng`] is never touched, so enabling drift
+/// sampling cannot perturb arrivals, routing, or jitter.
+fn synthetic_rel_err(seed: u64, span: u64, scale: f64) -> f64 {
+    let mut z = (seed ^ span).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    SOAK_DRIFT_BASE_ERR * (1.0 + (z % 1000) as f64 / 10_000.0) * scale
+}
 
 /// One simulated tenant (model shard) of the soak run.
 #[derive(Clone, Debug)]
@@ -85,6 +107,15 @@ pub struct SoakConfig {
     /// Service jitter bound as a divisor: each batch adds
     /// `U[0, predicted/div]` µs. `0` disables jitter.
     pub service_jitter_div: u64,
+    /// Shadow-oracle drift sampling stride: every Nth span (offset
+    /// `seed % stride`, the [`DriftMonitor`] rule) gets a synthetic
+    /// drift measurement at completion. `0` disables drift entirely —
+    /// the report is then byte-identical to a pre-drift run.
+    pub drift_stride: u64,
+    /// Multiplier on the synthetic rel-L2 — `1.0` models calibrated
+    /// traffic (stays inside budget, zero alerts); large values model an
+    /// out-of-distribution input sweep and must raise alerts.
+    pub drift_err_scale: f64,
 }
 
 /// One generated request (pre-computed before the event loop runs).
@@ -112,6 +143,21 @@ pub struct BatchTrace {
     pub earliest_deadline_us: Option<u64>,
     /// Batch size (≥ 1, ≤ configured `max_batch`).
     pub size: usize,
+}
+
+/// Drift-sampling outcome of a soak run (present iff
+/// [`SoakConfig::drift_stride`] > 0).
+#[derive(Clone, Debug)]
+pub struct SoakDrift {
+    /// Spans that received a shadow-oracle measurement.
+    pub sampled: u64,
+    /// Budget-violation alerts raised (one per violated window per
+    /// layer — the [`DriftMonitor`] dedup rule).
+    pub alerts: u64,
+    /// The monitor's full JSON report
+    /// ([`DriftMonitor::to_json`]), embedded verbatim in
+    /// [`SoakReport::to_json`] under `"drift"`.
+    pub report: String,
 }
 
 /// One shed decision, with the scheduler's justification.
@@ -187,6 +233,10 @@ pub struct SoakReport {
     pub deadline_miss_rate: f64,
     /// Per-tenant breakdown, in [`SoakConfig::models`] order.
     pub per_model: Vec<ModelSoak>,
+    /// Drift-sampling summary — `Some` iff [`SoakConfig::drift_stride`]
+    /// was non-zero. Serialized as a trailing `"drift"` object so
+    /// drift-off reports keep their exact pre-drift bytes.
+    pub drift: Option<SoakDrift>,
     /// Every dispatched batch (not serialized to JSON).
     pub batches: Vec<BatchTrace>,
     /// Every shed decision (not serialized to JSON).
@@ -262,7 +312,7 @@ impl SoakReport {
             .f64("p999", self.p999_us, 3)
             .f64("max", self.max_us, 3)
             .finish();
-        let mut out = JsonObj::new()
+        let mut obj = JsonObj::new()
             .str("bench", "serve_soak")
             .u64("seed", self.seed)
             .u64("requests", self.requests)
@@ -270,8 +320,11 @@ impl SoakReport {
             .raw("totals", &totals)
             .f64("deadline_miss_rate", self.deadline_miss_rate, 6)
             .raw("latency_us", &lat)
-            .raw("per_model", &per_model.finish())
-            .finish();
+            .raw("per_model", &per_model.finish());
+        if let Some(d) = &self.drift {
+            obj = obj.raw("drift", &d.report);
+        }
+        let mut out = obj.finish();
         out.push('\n');
         out
     }
@@ -354,6 +407,22 @@ pub fn run_soak_traced(cfg: &SoakConfig) -> (SoakReport, TraceLog) {
 fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakReport {
     let mut rng = Prng::new(cfg.seed);
     let arrivals = generate_arrivals(cfg, &mut rng);
+    // Drift monitor: one "layer" per tenant, budget = base synthetic
+    // error × monitor headroom (2× covers the < 10% deterministic
+    // jitter with margin — calibrated traffic never alerts).
+    let drift = (cfg.drift_stride > 0).then(|| {
+        let mut dm = DriftMonitor::new(DriftConfig {
+            stride: cfg.drift_stride,
+            seed: cfg.seed,
+            window_us: 1_000_000,
+            windows: 8,
+            headroom: 2.0,
+        });
+        for m in &cfg.models {
+            dm.set_budget(&m.name, Some(SOAK_DRIFT_BASE_ERR));
+        }
+        dm
+    });
     // Dispatched items are mapped back to spans by `submitted_us`:
     // arrival gaps are ≥ 1 µs, so the timestamp is globally unique.
     let mut span_by_at: BTreeMap<u64, u64> = BTreeMap::new();
@@ -406,9 +475,13 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
                 .sched
                 .submit(a.at_us, a.priority, a.deadline_us, a.tiles, a.shape)
                 .is_some();
+            if admitted && (trace.is_some() || drift.is_some()) {
+                // Drift sampling needs the span id at completion even
+                // when untraced; the map itself never feeds the report.
+                span_by_at.insert(a.at_us, span);
+            }
             if let Some(log) = trace.as_deref_mut() {
                 if admitted {
-                    span_by_at.insert(a.at_us, span);
                     let hit = !seen_plans.insert((a.model, a.shape));
                     log.record(
                         span,
@@ -486,9 +559,10 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
                         let had_ns = total_ns * 35 / 100;
                         let inv_ns = total_ns - input_ns - had_ns;
                         for it in &batch {
+                            let span = span_by_at.get(&it.submitted_us).copied();
+                            let size = batch.len() as u64;
                             if let Some(log) = trace.as_deref_mut() {
-                                let span = span_by_at[&it.submitted_us];
-                                let size = batch.len() as u64;
+                                let span = span.unwrap();
                                 log.record(
                                     span,
                                     now,
@@ -504,8 +578,35 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
                                         tiles,
                                     },
                                 );
+                            }
+                            // Shadow-oracle drift sample at completion
+                            // time; alerts land between Stage and
+                            // Complete in the trace stream.
+                            if let (Some(dm), Some(span)) = (drift.as_ref(), span) {
+                                if dm.should_sample(span) {
+                                    let sample = DriftSample {
+                                        layer: cfg.models[mi].name.clone(),
+                                        m: 4,
+                                        base: Base::Legendre,
+                                        weight_bits: 8,
+                                        hadamard_bits: 9,
+                                        rel_err: synthetic_rel_err(
+                                            cfg.seed,
+                                            span,
+                                            cfg.drift_err_scale,
+                                        ),
+                                    };
+                                    let alerts = dm.observe(span, done, &[sample]);
+                                    if let Some(log) = trace.as_deref_mut() {
+                                        for kind in alerts {
+                                            log.record(span, done, kind);
+                                        }
+                                    }
+                                }
+                            }
+                            if let Some(log) = trace.as_deref_mut() {
                                 log.record(
-                                    span,
+                                    span.unwrap(),
                                     done,
                                     TraceKind::Complete {
                                         latency_us: done - it.submitted_us,
@@ -605,6 +706,11 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
         max_us: all_lat.last().copied().unwrap_or(0.0),
         deadline_miss_rate: missed as f64 / (completed.max(1)) as f64,
         per_model,
+        drift: drift.as_ref().map(|dm| SoakDrift {
+            sampled: dm.sampled(),
+            alerts: dm.alerts(),
+            report: dm.to_json(),
+        }),
         batches,
         sheds,
     }
@@ -644,6 +750,8 @@ pub fn two_tenant_config(seed: u64, requests: usize) -> SoakConfig {
             },
         ],
         service_jitter_div: 16,
+        drift_stride: 0,
+        drift_err_scale: 1.0,
     }
 }
 
@@ -737,6 +845,9 @@ mod tests {
                     "stage"
                 }
                 TraceKind::Complete { .. } => "complete",
+                // Non-terminal advisory; the fixture has drift off, so
+                // seeing one here is itself a bug.
+                TraceKind::DriftAlert { .. } => "drift_alert",
             };
             by_span.entry(ev.span).or_default().push(name);
         }
@@ -769,6 +880,69 @@ mod tests {
                     && acc.shed == r.shed
             },
         );
+    }
+
+    /// Drift-off runs must not change a single byte of the report —
+    /// enabling the subsystem is opt-in per config.
+    #[test]
+    fn drift_off_report_has_no_drift_object() {
+        let j = run_soak(&two_tenant_config(3, 128)).to_json();
+        assert!(!j.contains("\"drift\""), "{j}");
+    }
+
+    /// Drift-sampled, traced soak reruns are byte-identical (report and
+    /// trace), sampling consumes zero PRNG draws (the scheduling outcome
+    /// matches the drift-off run exactly), and calibrated traffic raises
+    /// zero alerts.
+    #[test]
+    fn drift_sampled_soak_replays_byte_identically_and_stays_calibrated() {
+        use crate::obs::TraceSink;
+        let mut cfg = two_tenant_config(0xD21F7, 384);
+        cfg.drift_stride = 8;
+        let (ra, ta) = run_soak_traced(&cfg);
+        let (rb, tb) = run_soak_traced(&cfg);
+        assert_eq!(ra.to_json(), rb.to_json(), "drift-sampled rerun must be byte-identical");
+        assert_eq!(ta.to_json_lines(), tb.to_json_lines());
+        let d = ra.drift.as_ref().expect("drift enabled");
+        assert!(d.sampled > 0, "stride 8 over 384 spans must sample");
+        assert_eq!(d.alerts, 0, "calibrated traffic must stay inside budget: {}", d.report);
+        assert!(ra.to_json().contains("\"drift\": {"), "{}", ra.to_json());
+        // Zero PRNG draws: scrubbing the drift object out of the report
+        // leaves exactly the drift-off run's bytes.
+        let mut off = cfg.clone();
+        off.drift_stride = 0;
+        let base = run_soak(&off);
+        assert_eq!(
+            (base.completed, base.shed, base.rejected, base.virtual_wall_us),
+            (ra.completed, ra.shed, ra.rejected, ra.virtual_wall_us),
+            "drift sampling must not perturb the simulation"
+        );
+    }
+
+    /// Out-of-distribution traffic (synthetic error scaled far past the
+    /// budget) must alert on every tenant, the alerts must appear in the
+    /// trace as non-terminal `drift_alert` events, and accounting must
+    /// stay exact with them interleaved.
+    #[test]
+    fn out_of_distribution_errors_raise_alerts_in_trace_and_report() {
+        use crate::obs::TraceSink;
+        let mut cfg = two_tenant_config(0x00D, 512);
+        cfg.drift_stride = 4;
+        cfg.drift_err_scale = 100.0;
+        let (r, t) = run_soak_traced(&cfg);
+        let d = r.drift.as_ref().expect("drift enabled");
+        assert!(d.alerts > 0, "100x errors must breach the budget: {}", d.report);
+        for m in &cfg.models {
+            assert!(
+                d.report.contains(&format!("\"layer\": \"{}\"", m.name)),
+                "per-tenant drift entry missing in {}",
+                d.report
+            );
+        }
+        let n_alerts = t.to_json_lines().matches("\"event\": \"drift_alert\"").count() as u64;
+        assert_eq!(n_alerts, d.alerts, "every alert must be traced exactly once");
+        let acc = t.accounting();
+        assert!(acc.exact, "alerts are non-terminal; accounting must stay exact: {acc:?}");
     }
 
     #[test]

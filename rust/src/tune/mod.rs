@@ -436,6 +436,10 @@ pub fn tune_synthetic(cfg: &TuneConfig) -> Result<TuneOutcome> {
             m: grid[winner].m,
             base: grid[winner].base,
             quant: grid[winner].quant(),
+            // v2: record the measured acceptance point so serve-side
+            // drift checks budget against what the tuner actually saw.
+            tuned_err: Some(measures[winner].err),
+            tuned_tiles_per_sec: Some(measures[winner].tiles_per_sec),
         });
         layer_results.push(LayerResult {
             prefix: prefix.clone(),
@@ -490,6 +494,8 @@ pub fn tune_synthetic(cfg: &TuneConfig) -> Result<TuneOutcome> {
                 m: baseline_cand.m,
                 base: baseline_cand.base,
                 quant: baseline_cand.quant(),
+                tuned_err: None,
+                tuned_tiles_per_sec: None,
             })
             .collect(),
         ..plan.clone()
@@ -777,6 +783,8 @@ mod tests {
                 m: 4,
                 base: Base::Legendre,
                 quant: QuantConfig::w8(),
+                tuned_err: None,
+                tuned_tiles_per_sec: None,
             }],
         };
         let cfg = ResNetCfg {

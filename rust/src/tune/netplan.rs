@@ -10,6 +10,14 @@
 //! plain JSON with an explicit `netplan_version` so older servers reject
 //! newer plans loudly instead of misreading them; layers absent from the
 //! plan run direct convolution.
+//!
+//! **v2** records the tuner's measured acceptance point per layer —
+//! `tuned_err` (rel-L2 vs the f64 direct oracle) and
+//! `tuned_tiles_per_sec` — so the drift monitor
+//! ([`obs::drift`](crate::obs::drift)) checks live traffic against the
+//! budget the tuner actually accepted, and `winoq benchdiff` has a
+//! committed perf anchor. v1 artifacts (no tuned fields) still load;
+//! drift checks on them degrade to report-only.
 
 use super::json::{self, escape, Json};
 use crate::obs::json::JsonObj;
@@ -18,8 +26,9 @@ use crate::wino::basis::Base;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-/// The NetPlan schema version this build writes and accepts.
-pub const NETPLAN_VERSION: u64 = 1;
+/// The NetPlan schema version this build writes. Versions `1..=2` are
+/// accepted on load; anything newer is rejected loudly.
+pub const NETPLAN_VERSION: u64 = 2;
 
 /// Tile sizes the tuner grid sweeps (and a loaded plan may use).
 pub const SUPPORTED_M: [usize; 3] = [2, 4, 6];
@@ -36,6 +45,13 @@ pub struct LayerPlan {
     /// rest are recorded explicitly so future grids can widen the sweep
     /// without a schema change).
     pub quant: QuantConfig,
+    /// v2: rel-L2 error (vs the f64 direct oracle) the tuner measured
+    /// when it accepted this operating point — the drift monitor's
+    /// per-layer budget anchor. `None` on v1 artifacts (report-only).
+    pub tuned_err: Option<f64>,
+    /// v2: Winograd tiles/sec the tuner measured for this operating
+    /// point — `winoq benchdiff`'s committed perf anchor. `None` on v1.
+    pub tuned_tiles_per_sec: Option<f64>,
 }
 
 /// A tuned network: per-layer operating points + reconstruction recipe.
@@ -102,15 +118,23 @@ impl NetPlan {
             self.calib_pct,
         );
         for (i, l) in self.layers.iter().enumerate() {
-            let line = JsonObj::new()
+            let mut obj = JsonObj::new()
                 .str("layer", &l.layer)
                 .u64("m", l.m as u64)
                 .str("base", l.base.name())
                 .u64("act_bits", u64::from(l.quant.act_bits))
                 .u64("weight_bits", u64::from(l.quant.weight_bits))
                 .u64("hadamard_bits", u64::from(l.quant.hadamard_bits))
-                .u64("out_bits", u64::from(l.quant.out_bits))
-                .finish();
+                .u64("out_bits", u64::from(l.quant.out_bits));
+            // v2 tuned anchors: emitted via `{}` (shortest exact f64
+            // representation) so save→load is lossless.
+            if let Some(e) = l.tuned_err {
+                obj = obj.raw("tuned_err", &e.to_string());
+            }
+            if let Some(t) = l.tuned_tiles_per_sec {
+                obj = obj.raw("tuned_tiles_per_sec", &t.to_string());
+            }
+            let line = obj.finish();
             let sep = if i + 1 == self.layers.len() { "" } else { "," };
             out.push_str(&format!("    {line}{sep}\n"));
         }
@@ -125,9 +149,9 @@ impl NetPlan {
             .get("netplan_version")
             .and_then(Json::as_u64)
             .context("NetPlan is missing netplan_version")?;
-        if version != NETPLAN_VERSION {
+        if !(1..=NETPLAN_VERSION).contains(&version) {
             bail!(
-                "NetPlan version {version} is not supported (this build reads v{NETPLAN_VERSION})"
+                "NetPlan version {version} is not supported (this build reads v1..=v{NETPLAN_VERSION})"
             );
         }
         let calib = member(&doc, "calib", "NetPlan")?;
@@ -184,6 +208,8 @@ impl NetPlan {
                     hadamard_bits: bits(l, "hadamard_bits", &what)?,
                     out_bits: bits(l, "out_bits", &what)?,
                 },
+                tuned_err: tuned(l, "tuned_err", &what, 0.0)?,
+                tuned_tiles_per_sec: tuned(l, "tuned_tiles_per_sec", &what, f64::MIN_POSITIVE)?,
             });
         }
         let width_mult = member(&doc, "width_mult", "NetPlan")?
@@ -219,6 +245,22 @@ impl NetPlan {
                 self.seed
             );
         }
+        for l in &self.layers {
+            for (key, v) in [
+                ("tuned_err", l.tuned_err),
+                ("tuned_tiles_per_sec", l.tuned_tiles_per_sec),
+            ] {
+                if let Some(v) = v {
+                    if !v.is_finite() {
+                        bail!(
+                            "NetPlan layer {:?} {key} = {v} is not finite and could \
+                             not be reloaded",
+                            l.layer
+                        );
+                    }
+                }
+            }
+        }
         std::fs::write(path, self.to_json())
             .with_context(|| format!("writing NetPlan {path:?}"))
     }
@@ -242,6 +284,19 @@ fn uint(doc: &Json, key: &str) -> Result<u64> {
     member(doc, key, "NetPlan")?
         .as_u64()
         .with_context(|| format!("NetPlan {key:?} must be a non-negative integer"))
+}
+
+/// Optional v2 tuned-anchor member: absent is `None`; present must be a
+/// finite number `>= floor` or the whole plan is rejected.
+fn tuned(l: &Json, key: &str, what: &str, floor: f64) -> Result<Option<f64>> {
+    let Some(j) = l.get(key) else { return Ok(None) };
+    let v = j
+        .as_f64()
+        .with_context(|| format!("{what} {key} must be a number"))?;
+    if !(v.is_finite() && v >= floor) {
+        bail!("{what} {key} = {v} must be a finite number >= {floor:e}");
+    }
+    Ok(Some(v))
 }
 
 /// Required bit-width member, range-checked to the quantizer's 2..=24.
@@ -275,18 +330,26 @@ mod tests {
                     m: 4,
                     base: Base::Legendre,
                     quant: QuantConfig::w8_h9(),
+                    tuned_err: Some(0.0025),
+                    tuned_tiles_per_sec: Some(1250000.0),
                 },
                 LayerPlan {
                     layer: "s0b0.conv1".into(),
                     m: 6,
                     base: Base::Canonical,
                     quant: QuantConfig::w8(),
+                    tuned_err: Some(0.004),
+                    tuned_tiles_per_sec: Some(987654.5),
                 },
+                // One untuned layer: the optional fields stay optional
+                // even inside a v2 artifact.
                 LayerPlan {
                     layer: "s0b0.conv2".into(),
                     m: 4,
                     base: Base::Legendre,
                     quant: QuantConfig::w8_h9(),
+                    tuned_err: None,
+                    tuned_tiles_per_sec: None,
                 },
             ],
         }
@@ -312,14 +375,44 @@ mod tests {
     }
 
     #[test]
+    fn v1_artifacts_without_tuned_fields_still_load() {
+        let mut v1 = sample();
+        v1.version = 1;
+        for l in &mut v1.layers {
+            l.tuned_err = None;
+            l.tuned_tiles_per_sec = None;
+        }
+        let text = v1.to_json();
+        assert!(text.contains("\"netplan_version\": 1"));
+        assert!(!text.contains("tuned_err"));
+        let loaded = NetPlan::from_json(&text).unwrap();
+        assert_eq!(loaded, v1);
+        assert!(loaded.layers.iter().all(|l| l.tuned_err.is_none()));
+        // And the reloaded v1 plan re-serialises byte-identically.
+        assert_eq!(loaded.to_json(), text);
+    }
+
+    #[test]
     fn rejects_future_versions_and_bad_fields() {
         let plan = sample();
         let bumped = plan.to_json().replace(
-            "\"netplan_version\": 1",
+            "\"netplan_version\": 2",
             "\"netplan_version\": 99",
         );
         let err = NetPlan::from_json(&bumped).unwrap_err();
         assert!(err.to_string().contains("version 99"), "{err}");
+
+        // v2 tuned-field domain violations are always errors.
+        for (from, to) in [
+            ("\"tuned_err\": 0.0025", "\"tuned_err\": -0.5"),
+            ("\"tuned_err\": 0.0025", "\"tuned_err\": \"small\""),
+            ("\"tuned_tiles_per_sec\": 1250000", "\"tuned_tiles_per_sec\": 0"),
+            ("\"tuned_tiles_per_sec\": 1250000", "\"tuned_tiles_per_sec\": -3"),
+        ] {
+            let bad = plan.to_json().replace(from, to);
+            assert_ne!(bad, plan.to_json(), "replace {from:?} matched nothing");
+            assert!(NetPlan::from_json(&bad).is_err(), "{to} must be rejected");
+        }
 
         let bad_m = plan.to_json().replace("\"m\": 6", "\"m\": 5");
         assert!(NetPlan::from_json(&bad_m).is_err(), "m=5 must be rejected");
@@ -348,6 +441,12 @@ mod tests {
         unrepresentable.seed = 1u64 << 53;
         let err = unrepresentable.save(&path).unwrap_err();
         assert!(err.to_string().contains("2^53"), "{err}");
+        // Same contract for the v2 tuned anchors: a NaN budget would
+        // reload as an error, so it must be refused at write time.
+        let mut nan_budget = sample();
+        nan_budget.layers[0].tuned_err = Some(f64::NAN);
+        let err = nan_budget.save(&path).unwrap_err();
+        assert!(err.to_string().contains("not finite"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -32,18 +32,24 @@ fn sample() -> NetPlan {
                 m: 4,
                 base: Base::Legendre,
                 quant: QuantConfig::w8_h9(),
+                tuned_err: Some(0.0025),
+                tuned_tiles_per_sec: Some(750000.0),
             },
             LayerPlan {
                 layer: "s0b0.conv1".into(),
                 m: 2,
                 base: Base::Canonical,
                 quant: QuantConfig::w8(),
+                tuned_err: None,
+                tuned_tiles_per_sec: None,
             },
             LayerPlan {
                 layer: "s2b1.conv2".into(),
                 m: 6,
                 base: Base::Chebyshev,
                 quant: QuantConfig::w8(),
+                tuned_err: Some(0.0075),
+                tuned_tiles_per_sec: Some(31250.0),
             },
         ],
     }
@@ -52,7 +58,11 @@ fn sample() -> NetPlan {
 /// Every schema invariant the reader promises its consumers. An `Ok`
 /// plan violating any of these is a misparse.
 fn assert_invariants(plan: &NetPlan) {
-    assert_eq!(plan.version, NETPLAN_VERSION);
+    assert!(
+        (1..=NETPLAN_VERSION).contains(&plan.version),
+        "version {} outside the accepted 1..={NETPLAN_VERSION}",
+        plan.version
+    );
     assert!(plan.calib_pct > 0.0 && plan.calib_pct <= 100.0);
     assert!(plan.width_mult > 0.0 && plan.width_mult.is_finite());
     for (i, l) in plan.layers.iter().enumerate() {
@@ -70,6 +80,13 @@ fn assert_invariants(plan: &NetPlan) {
             "duplicate layer {:?} survived parsing",
             l.layer
         );
+        // v2 tuned anchors: absent or in-domain, never NaN/negative.
+        if let Some(e) = l.tuned_err {
+            assert!(e.is_finite() && e >= 0.0, "layer {i}: tuned_err = {e}");
+        }
+        if let Some(t) = l.tuned_tiles_per_sec {
+            assert!(t.is_finite() && t > 0.0, "layer {i}: tuned_tiles_per_sec = {t}");
+        }
     }
 }
 
@@ -127,7 +144,12 @@ fn every_missing_required_field_errs() {
 fn value_domain_violations_err() {
     let doc = sample().to_json();
     let cases: &[(&str, &str)] = &[
-        ("\"netplan_version\": 1", "\"netplan_version\": 2"),
+        ("\"netplan_version\": 2", "\"netplan_version\": 3"),
+        ("\"netplan_version\": 2", "\"netplan_version\": 0"),
+        ("\"tuned_err\": 0.0025", "\"tuned_err\": -0.0025"),
+        ("\"tuned_err\": 0.0025", "\"tuned_err\": \"tiny\""),
+        ("\"tuned_tiles_per_sec\": 750000", "\"tuned_tiles_per_sec\": 0"),
+        ("\"tuned_tiles_per_sec\": 750000", "\"tuned_tiles_per_sec\": -1"),
         ("\"m\": 4", "\"m\": 5"),
         ("\"m\": 4", "\"m\": -4"),
         ("\"m\": 4", "\"m\": 4.5"),
@@ -156,10 +178,38 @@ fn value_domain_violations_err() {
         "".to_string(),
         "not json".to_string(),
         "[1, 2, 3]".to_string(),
-        "{\"netplan_version\": 1".to_string(),
+        "{\"netplan_version\": 2".to_string(),
     ] {
         assert!(NetPlan::from_json(&bad).is_err(), "accepted {bad:?}");
     }
+}
+
+#[test]
+fn v1_artifacts_load_and_round_trip() {
+    // A v1 document (no tuned fields, version 1) is what every pre-v2
+    // tuner emitted; it must load with `tuned_* = None` and survive the
+    // save/reload round trip bit-for-bit.
+    let mut v1 = sample();
+    v1.version = 1;
+    for l in &mut v1.layers {
+        l.tuned_err = None;
+        l.tuned_tiles_per_sec = None;
+    }
+    let doc = v1.to_json();
+    assert!(doc.contains("\"netplan_version\": 1"), "{doc}");
+    assert!(!doc.contains("tuned_"), "v1 fixture leaked tuned fields: {doc}");
+    let loaded = NetPlan::from_json(&doc).expect("v1 artifact must load");
+    assert_invariants(&loaded);
+    assert_eq!(loaded, v1);
+    assert_eq!(loaded.to_json(), doc, "v1 round trip drifted");
+    // A v1 document that *does* carry tuned fields is still subject to
+    // their domain checks (the fields are version-independent).
+    let smuggled = doc.replace(
+        "\"out_bits\": 8}",
+        "\"out_bits\": 8, \"tuned_err\": -1.0}",
+    );
+    assert_ne!(smuggled, doc, "fixture shape changed; update the splice");
+    assert!(NetPlan::from_json(&smuggled).is_err(), "negative tuned_err accepted");
 }
 
 #[test]

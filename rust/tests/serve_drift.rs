@@ -1,0 +1,143 @@
+//! Serve-path drift acceptance: the shadow-oracle monitor must stay
+//! silent on calibrated traffic and fire on out-of-distribution traffic
+//! — the same two directions `scripts/ci.sh` gates on the CLI.
+
+use std::collections::BTreeMap;
+
+use winoq::data::synthcifar;
+use winoq::nn::{ConvMode, ResNetCfg, Tensor};
+use winoq::obs::drift::{DriftConfig, DriftMonitor};
+use winoq::obs::{TraceSink, Tracer};
+use winoq::quant::QuantConfig;
+use winoq::serve::{
+    run_closed_loop_observed, BatchModel, ModelRegistry, ServeConfig, ServeStats,
+};
+use winoq::wino::basis::Base;
+
+const REQUESTS: usize = 48;
+const POOL: usize = 8;
+
+fn quantized_cfg() -> ResNetCfg {
+    ResNetCfg {
+        width_mult: 0.25,
+        num_classes: 10,
+        mode: ConvMode::Winograd {
+            m: 4,
+            base: Base::Legendre,
+            quant: Some(QuantConfig::w8()),
+        },
+    }
+}
+
+fn input_pool(scale: f32) -> Vec<Tensor> {
+    let (batch, _) = synthcifar::generate_batch(synthcifar::TEST_SEED, 0, POOL);
+    let item = 3 * 32 * 32;
+    (0..POOL)
+        .map(|i| {
+            let mut data = batch.data[i * item..(i + 1) * item].to_vec();
+            for v in &mut data {
+                *v *= scale;
+            }
+            Tensor::from_vec(&[3, 32, 32], data)
+        })
+        .collect()
+}
+
+/// Per-layer max rel-L2 over a few in-distribution probes — the same
+/// self-calibration `winoq serve --drift-json` performs without a plan.
+fn calibrated_monitor(model: &dyn BatchModel, pool: &[Tensor], stride: u64) -> DriftMonitor {
+    let mut dm =
+        DriftMonitor::new(DriftConfig { stride, ..DriftConfig::default() });
+    let mut anchors: BTreeMap<String, f64> = BTreeMap::new();
+    for input in pool.iter().take(4) {
+        for s in model.drift_probe(input) {
+            let a = anchors.entry(s.layer).or_insert(0.0);
+            *a = a.max(s.rel_err);
+        }
+    }
+    assert!(!anchors.is_empty(), "quantized net must expose wino layers to probe");
+    for (layer, err) in &anchors {
+        dm.set_budget(layer, Some(*err));
+    }
+    dm
+}
+
+fn serve_with(drift: &DriftMonitor, inputs: &[Tensor], tracer: Option<std::sync::Arc<Tracer>>) {
+    let mut registry = ModelRegistry::new();
+    let served = registry
+        .register_synthetic("drift-test", quantized_cfg(), 32, 7, 4)
+        .expect("register synthetic model");
+    let cfg = ServeConfig {
+        max_batch: 4,
+        batch_window_us: 500,
+        queue_cap: 64,
+        workers: 1,
+        cost: None,
+    };
+    let stats = ServeStats::new();
+    let report = run_closed_loop_observed(
+        served.as_ref(),
+        &cfg,
+        &stats,
+        inputs,
+        REQUESTS,
+        4,
+        tracer,
+        Some(drift),
+    );
+    assert_eq!(report.completed as usize, REQUESTS);
+}
+
+#[test]
+fn calibrated_traffic_raises_no_alerts() {
+    let pool = input_pool(1.0);
+    let mut registry = ModelRegistry::new();
+    let probe_model = registry
+        .register_synthetic("probe", quantized_cfg(), 32, 7, 4)
+        .expect("register synthetic model");
+    let dm = calibrated_monitor(probe_model.as_ref(), &pool, 4);
+    assert!(!dm.report_only(), "self-calibration must install budgets");
+    serve_with(&dm, &pool, None);
+    assert!(dm.sampled() > 0, "stride 4 over {REQUESTS} spans must sample");
+    assert_eq!(dm.alerts(), 0, "calibrated traffic must stay within budget:\n{}", dm.to_json());
+    let report = dm.to_json();
+    assert!(report.contains("\"report_only\": false"));
+    assert!(report.contains("\"layer\": "));
+}
+
+#[test]
+fn out_of_distribution_traffic_alerts_every_budgeted_layer() {
+    // Budgets from in-distribution probes, traffic scaled 100x past the
+    // quantizers' calibrated ranges.
+    let calibrated = input_pool(1.0);
+    let mut registry = ModelRegistry::new();
+    let probe_model = registry
+        .register_synthetic("probe", quantized_cfg(), 32, 7, 4)
+        .expect("register synthetic model");
+    let dm = calibrated_monitor(probe_model.as_ref(), &calibrated, 4);
+    let tracer = std::sync::Arc::new(Tracer::default());
+    serve_with(&dm, &input_pool(100.0), Some(tracer.clone()));
+    assert!(dm.sampled() > 0);
+    assert!(dm.alerts() >= 1, "100x inputs must violate some budget:\n{}", dm.to_json());
+
+    // Every layer that carries a budget must have alerted — OOD input
+    // at the stem distorts every downstream activation.
+    let report = winoq::tune::json::parse(&dm.to_json()).expect("report parses");
+    let layers = report.get("layers").and_then(|l| l.as_arr()).expect("layers array");
+    assert!(!layers.is_empty());
+    for layer in layers {
+        let name = layer.get("layer").and_then(|s| s.as_str()).expect("layer name");
+        if layer.get("budget").is_none() {
+            continue; // report-only entry (none expected here)
+        }
+        let alerts = layer.get("alerts").and_then(|a| a.as_u64()).expect("alert count");
+        assert!(alerts >= 1, "layer {name} stayed under budget on 100x input");
+    }
+
+    // The alerts also land in the trace stream as non-terminal events,
+    // so accounting still reconciles exactly.
+    let lines = tracer.to_json_lines();
+    let traced_alerts = lines.matches("\"event\": \"drift_alert\"").count() as u64;
+    assert_eq!(traced_alerts, dm.alerts());
+    assert!(tracer.accounting().exact);
+}

@@ -60,18 +60,24 @@ fn heterogeneous_plan() -> NetPlan {
                 m: 4,
                 base: Base::Legendre,
                 quant: QuantConfig::w8_h9(),
+                tuned_err: Some(0.005),
+                tuned_tiles_per_sec: Some(500000.0),
             },
             LayerPlan {
                 layer: "s0b0.conv1".into(),
                 m: 2,
                 base: Base::Canonical,
                 quant: QuantConfig::w8(),
+                tuned_err: None,
+                tuned_tiles_per_sec: None,
             },
             LayerPlan {
                 layer: "s0b1.conv2".into(),
                 m: 6,
                 base: Base::Chebyshev,
                 quant: QuantConfig::w8_h9(),
+                tuned_err: Some(0.0075),
+                tuned_tiles_per_sec: Some(250000.0),
             },
         ],
     }

@@ -106,6 +106,44 @@ done
 echo "serve smoke OK ($COMPLETED completed; $SUBMITS traced spans, $(wc -l < "$METRICS_JSONL") metrics)"
 rm -f "$SMOKE_JSON" "$TRACE_JSONL" "$METRICS_JSONL"
 
+# Drift smoke: shadow-oracle accuracy monitoring must stay quiet on
+# calibrated traffic (the budgets are self-calibrated from the same
+# distribution, so zero alerts) and must demonstrably fire on
+# out-of-distribution traffic (inputs scaled 100x past the quantizers'
+# calibrated ranges -> at least one alert). Both directions gated, so
+# the alarm is proven live, not just silent.
+echo "==> drift smoke (shadow oracle: calibrated quiet, OOD loud)"
+DRIFT_CAL="$(mktemp)"
+DRIFT_OOD="$(mktemp)"
+./target/release/winoq serve --synthetic --requests 64 --max-batch 8 \
+  --drift-json "$DRIFT_CAL" --drift-stride 4
+CAL_COUNTS="$(sed -n 's/.*"sampled": \([0-9]*\), "alerts": \([0-9]*\).*/\1 \2/p' "$DRIFT_CAL")"
+if [ -z "$CAL_COUNTS" ]; then
+  echo "drift smoke FAILED: calibrated drift report missing sampled/alerts" >&2
+  cat "$DRIFT_CAL" >&2
+  exit 1
+fi
+if ! echo "$CAL_COUNTS" | awk '{ exit !($1 > 0 && $2 == 0) }'; then
+  echo "drift smoke FAILED: calibrated traffic expected >0 sampled, 0 alerts (got: $CAL_COUNTS)" >&2
+  cat "$DRIFT_CAL" >&2
+  exit 1
+fi
+./target/release/winoq serve --synthetic --requests 64 --max-batch 8 \
+  --drift-json "$DRIFT_OOD" --drift-stride 4 --input-scale 100
+OOD_COUNTS="$(sed -n 's/.*"sampled": \([0-9]*\), "alerts": \([0-9]*\).*/\1 \2/p' "$DRIFT_OOD")"
+if [ -z "$OOD_COUNTS" ] || ! echo "$OOD_COUNTS" | awk '{ exit !($1 > 0 && $2 >= 1) }'; then
+  echo "drift smoke FAILED: 100x-scaled traffic raised no drift alert (got: $OOD_COUNTS)" >&2
+  cat "$DRIFT_OOD" >&2
+  exit 1
+fi
+if ! grep -q '"layer": ' "$DRIFT_OOD"; then
+  echo "drift smoke FAILED: OOD drift report carries no per-layer entries" >&2
+  cat "$DRIFT_OOD" >&2
+  exit 1
+fi
+echo "drift smoke OK (calibrated: $CAL_COUNTS sampled/alerts; OOD x100: $OOD_COUNTS)"
+rm -f "$DRIFT_CAL" "$DRIFT_OOD"
+
 # Integer-engine smoke: a 9-bit-Hadamard quantized serve run must
 # complete (the quantized serving path is the integer engine) and the
 # int-vs-float bench must emit a non-degenerate BENCH_int.json.
@@ -175,8 +213,13 @@ for key in '"bench": "tune"' '"winner"' '"endtoend"'; do
   fi
 done
 if [ ! -s "$TUNE_DIR/netplan.json" ] \
-   || ! grep -q '"netplan_version": 1' "$TUNE_DIR/netplan.json"; then
-  echo "tune smoke FAILED: NetPlan missing or unversioned" >&2
+   || ! grep -q '"netplan_version": 2' "$TUNE_DIR/netplan.json"; then
+  echo "tune smoke FAILED: NetPlan missing or not v2" >&2
+  exit 1
+fi
+if ! grep -q '"tuned_err"' "$TUNE_DIR/netplan.json"; then
+  echo "tune smoke FAILED: v2 NetPlan carries no tuned_err drift anchors" >&2
+  cat "$TUNE_DIR/netplan.json" >&2
   exit 1
 fi
 PLAN_JSON="$(mktemp)"
@@ -260,6 +303,24 @@ if ! cmp -s "$SOAK_JSON" "$SOAK_JSON2"; then
 fi
 echo "soak trace OK ($SOAK_SUBMITS spans, $(wc -l < "$SOAK_TRACE") events, byte-identical rerun)"
 rm -f "$SOAK_TRACE" "$SOAK_JSON2" "$SOAK_TRACE2"
+
+# Bench regression gate: every BENCH_*.json this run produced is diffed
+# against the committed baselines in bench/baselines/ — throughput
+# regressions beyond 10% or ANY error-metric increase fail the build.
+# First run on a fresh checkout bootstraps the baselines from the
+# current run's artifacts (commit them to arm the gate).
+echo "==> winoq benchdiff (BENCH_*.json vs bench/baselines/)"
+BASELINES="$SCRIPT_DIR/../bench/baselines"
+if ! ls "$BASELINES"/BENCH_*.json > /dev/null 2>&1; then
+  mkdir -p "$BASELINES"
+  cp "$SCRIPT_DIR"/../BENCH_*.json "$BASELINES"/
+  rm -f "$BASELINES/BENCH_diff.json" # the diff report is not itself a baseline
+  echo "benchdiff: no committed baselines yet; bootstrapped $(ls "$BASELINES" | wc -l)" \
+       "artifact(s) into bench/baselines/ — commit them to arm the gate"
+else
+  ./target/release/winoq benchdiff --baseline "$BASELINES" \
+    --current "$SCRIPT_DIR/.." --out "$SCRIPT_DIR/../BENCH_diff.json"
+fi
 
 # Scale-out serving regression nets, run explicitly like the numeric
 # ones: the deadline-scheduler property suite, the arbitrary-H×W parity
