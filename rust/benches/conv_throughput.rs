@@ -188,6 +188,9 @@ fn int_vs_dequantize_float(rng: &mut Prng) {
 }
 
 fn main() {
+    // Warm the persistent engine pool before any timed region so the
+    // first sample doesn't eat thread creation.
+    winoq::engine::pool::warm();
     let mut rng = Prng::new(9);
     engine_vs_per_tile(&mut rng);
     gemm_tiled_vs_naive();
@@ -196,7 +199,10 @@ fn main() {
     println!("note: the arithmetic-count advantage is 9/2.25 = 4.0x; the measured");
     println!("ratio reflects this CPU's memory behaviour and the naive direct loop.");
     println!(
-        "threads: {} (override with WINOQ_THREADS)",
-        winoq::engine::parallel::num_threads()
+        "threads: {} (override with WINOQ_THREADS); gemm kernels: float={} int={} \
+         (WINOQ_NO_SIMD=1 forces scalar)",
+        winoq::engine::parallel::num_threads(),
+        winoq::engine::gemm::Kernel::detect_f64().name(),
+        winoq::engine::gemm::Kernel::detect_i16().name(),
     );
 }

@@ -206,6 +206,12 @@ pub const SWITCH_FLAGS: &[FlagSpec] = &[
         metavar: "",
         help: "serve: run the deterministic multi-model soak simulation",
     },
+    FlagSpec {
+        name: "--no-simd",
+        metavar: "",
+        help: "force the scalar GEMM micro-kernels (skip AVX2/NEON detection; \
+               also WINOQ_NO_SIMD=1)",
+    },
     FlagSpec { name: "--verbose", metavar: "", help: "more logging where supported" },
     FlagSpec { name: "--help", metavar: "", help: "show this help (also -h)" },
 ];

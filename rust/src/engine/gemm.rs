@@ -8,9 +8,7 @@
 //! input row `K` times from cache and re-writing each output row `C`
 //! times; the integer path additionally paid a `Quantizer::quantize` call
 //! (with its per-element `qmax` range assert) for every output code. This
-//! module restructures that work the BLIS way without leaving portable
-//! Rust (no intrinsics — the kernels are shaped so the compiler
-//! auto-vectorizes them):
+//! module restructures that work the BLIS way:
 //!
 //! * **`MR`×`NR` register tiles** — the micro-kernels keep an
 //!   `MR × NR` block of accumulators in registers across the whole
@@ -29,15 +27,29 @@
 //!   tile: no per-element function call, no per-element range assert.
 //! * **Two-dimensional parallelism** — work splits over
 //!   `(frequency × T-blocks)` instead of frequency only
-//!   ([`parallel::par_for_states`]), so a small-`N²` layer with a wide
-//!   tile axis no longer leaves workers idle.
+//!   ([`parallel::par_for_states`] on the persistent
+//!   [`pool`](super::pool)), so a small-`N²` layer with a wide tile
+//!   axis no longer leaves workers idle. [`grid_items`] is the one
+//!   definition of that split; [`workers_for`] clamps the thread count
+//!   to it so packing-buffer leases can never under-split the grid.
+//! * **Explicit SIMD inner kernels behind runtime detection**
+//!   ([`Kernel`]) — the register-tile reduction has `std::arch`
+//!   implementations for AVX2 (`_mm256_madd_epi16` channel-pair lanes
+//!   for i16, `mul`+`add` f64 lanes) and NEON (`vmull_s16` widening
+//!   lanes, `f64x2` lanes), selected per dispatch by
+//!   `is_x86_feature_detected!` / `is_aarch64_feature_detected!` with
+//!   the scalar kernels as the always-available fallback, and a kill
+//!   switch (`--no-simd` / `WINOQ_NO_SIMD`) that forces scalar.
 //!
 //! **Bit-parity is a hard constraint**, not a tolerance: the float tiled
 //! path must equal [`panel_mul_f64_naive`] bit-for-bit and the integer
 //! tiled path must equal
 //! [`panel_mul_requant_i16_naive`](super::int::panel_mul_requant_i16_naive)
 //! exactly (`rust/tests/gemm_property.rs` pins both over randomized
-//! ragged shapes). Two design decisions follow from it:
+//! ragged shapes). That constraint shapes the SIMD policy too — see
+//! [`Kernel`] for the float-parity rules (un-reassociated `mul`+`add`
+//! lanes are bit-exact and serve-path eligible; FMA lanes are not and
+//! carry a documented tolerance). Two further design decisions follow:
 //!
 //! * **No channel (KC) blocking in the float kernel.** Splitting the
 //!   channel reduction into partial sums would reassociate the f64
@@ -83,13 +95,211 @@ pub const NC: usize = 256;
 
 const _: () = assert!(NC % NR == 0, "NC must be a multiple of NR");
 
+/// The 2-D `(frequency × T-block)` split rule: number of work items one
+/// panel dispatch fans out over. **The one definition** — the kernels
+/// iterate exactly `grid_items(nn, t_total)` items (`item / n_tb` is
+/// the frequency, `item % n_tb` the T-block) and [`workers_for`] clamps
+/// the worker count to it, so a packing-buffer lease sized off
+/// `workers_for` can never under-split the grid the kernels actually
+/// walk, however ragged `T` is against [`NC`].
+#[inline]
+pub fn grid_items(nn: usize, t_total: usize) -> usize {
+    nn * t_total.div_ceil(NC)
+}
+
 /// Worker count for one panel-GEMM dispatch: the thread pool clamped to
-/// the `(frequency × T-block)` item grid the kernels split over. The
-/// one definition callers size their packing-buffer leases with — keep
-/// it in lockstep with the `nn * t_total.div_ceil(NC)` grid inside
-/// [`panel_gemm_f64`] / [`panel_gemm_requant_i16`].
+/// the [`grid_items`] work grid (and floored at 1 so zero-tile shapes
+/// still get a packing-buffer lease).
 pub fn workers_for(nn: usize, t_total: usize) -> usize {
-    parallel::num_threads().min(nn * t_total.div_ceil(NC)).max(1)
+    parallel::num_threads().min(grid_items(nn, t_total)).max(1)
+}
+
+/// Global SIMD kill switch backing store: `true` disables every SIMD
+/// kernel. Seeded from `WINOQ_NO_SIMD` on first query; the CLI's
+/// `--no-simd` flag writes it via [`set_simd_enabled`].
+fn simd_disabled_flag() -> &'static std::sync::atomic::AtomicBool {
+    static FLAG: std::sync::OnceLock<std::sync::atomic::AtomicBool> =
+        std::sync::OnceLock::new();
+    FLAG.get_or_init(|| {
+        let off = std::env::var_os("WINOQ_NO_SIMD").is_some_and(|v| v != "0");
+        std::sync::atomic::AtomicBool::new(off)
+    })
+}
+
+/// True unless SIMD kernels are disabled (`WINOQ_NO_SIMD` env var, or
+/// the CLI `--no-simd` escape hatch via [`set_simd_enabled`]). When
+/// false, [`Kernel::detect_f64`] / [`Kernel::detect_i16`] always report
+/// [`Kernel::Scalar`].
+pub fn simd_enabled() -> bool {
+    !simd_disabled_flag().load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Flip the SIMD kill switch at runtime (the CLI calls this with
+/// `false` when `--no-simd` is passed).
+pub fn set_simd_enabled(on: bool) {
+    simd_disabled_flag().store(!on, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Which inner micro-kernel a panel dispatch runs. Selected once per
+/// dispatch by runtime feature detection ([`Kernel::detect_f64`] /
+/// [`Kernel::detect_i16`]); every variant computes the identical
+/// register-tile reduction, they differ only in lane width and (for the
+/// FMA variants) rounding:
+///
+/// | kernel     | arch      | int i16            | float f64            |
+/// |------------|-----------|--------------------|----------------------|
+/// | `Scalar`   | any       | exact (oracle)     | bit-exact (oracle)   |
+/// | `Avx2`     | x86-64    | exact (`madd`)     | bit-exact (mul+add)  |
+/// | `Avx2Fma`  | x86-64    | —                  | tolerance (fused)    |
+/// | `Neon`     | aarch64   | exact (`vmull`)    | bit-exact (mul+add)  |
+/// | `NeonFma`  | aarch64   | —                  | tolerance (fused)    |
+///
+/// **Float-parity policy.** The serve path only ever auto-selects
+/// kernels whose accumulation chain is *un-reassociated*: one product
+/// rounding plus one add rounding per channel step, per `(k, t)` lane —
+/// exactly the scalar chain, so `Avx2`/`Neon` f64 results are
+/// bit-identical to [`panel_mul_f64_naive`] and parity holds. The FMA
+/// variants fuse the multiply-add into a single rounding, which breaks
+/// the bitwise chain; they are **never** auto-selected (detection skips
+/// them) and exist for explicit opt-in benchmarking, gated by the
+/// documented tolerance in `rust/tests/gemm_property.rs`
+/// (`FMA_REL_TOL`). The integer kernels accumulate i16×i16 products
+/// exactly (i32 pair-sums, i64 totals — integer addition reassociates
+/// freely), so every int variant is bit-exact and serve-eligible.
+///
+/// **Integer operand precondition.** The AVX2 `madd` pair-sum is exact
+/// for any codes in `-32767..=32767`; the single unreachable corner is
+/// all four pair operands equal to `i16::MIN` (pair-sum `2^31`, one
+/// past `i32::MAX`). Quantized code banks are symmetric (`±(2^{b−1}−1)`
+/// — [`Quantizer`] clamps to `±qmax`), so `i16::MIN` never occurs on
+/// the serve path; the property suite generates in quantizer ranges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar register tiles — always available, the fallback
+    /// every other variant must match.
+    Scalar,
+    /// AVX2: i16 via `_mm256_madd_epi16` channel pairs widened to i64;
+    /// f64 via separate `_mm256_mul_pd` + `_mm256_add_pd` (bit-exact).
+    Avx2,
+    /// AVX2 + FMA f64 (`_mm256_fmadd_pd`): fused rounding, tolerance
+    /// only, never auto-selected.
+    Avx2Fma,
+    /// NEON: i16 via `vmull_s16` widening lanes accumulated in i64;
+    /// f64 via separate `vmulq_f64` + `vaddq_f64` (bit-exact).
+    Neon,
+    /// NEON fused f64 (`vfmaq_f64`): tolerance only, never
+    /// auto-selected.
+    NeonFma,
+}
+
+impl Kernel {
+    /// Stable lowercase name — emitted in `BENCH_gemm.json` (the CI
+    /// detected-feature gate greps it) and the bench summary line.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Avx2Fma => "avx2_fma",
+            Kernel::Neon => "neon",
+            Kernel::NeonFma => "neon_fma",
+        }
+    }
+
+    /// True when the kernel's f64 accumulation is bit-identical to the
+    /// scalar chain (everything except the fused variants).
+    pub fn f64_bit_exact(self) -> bool {
+        !matches!(self, Kernel::Avx2Fma | Kernel::NeonFma)
+    }
+
+    /// Runtime-detected kernel for the f64 panels: the widest
+    /// *bit-exact* variant this machine supports, or `Scalar` when SIMD
+    /// is disabled or undetected. FMA variants are intentionally never
+    /// returned (see the float-parity policy above).
+    pub fn detect_f64() -> Kernel {
+        if !simd_enabled() {
+            return Kernel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return Kernel::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Kernel::Neon;
+            }
+        }
+        Kernel::Scalar
+    }
+
+    /// Runtime-detected kernel for the i16 panels (every variant is
+    /// exact, so this is simply the widest supported one), or `Scalar`
+    /// when SIMD is disabled or undetected.
+    pub fn detect_i16() -> Kernel {
+        if !simd_enabled() {
+            return Kernel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return Kernel::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Kernel::Neon;
+            }
+        }
+        Kernel::Scalar
+    }
+
+    /// Every f64 kernel variant runnable on this machine right now
+    /// (ignoring the kill switch) — the forall parity suite iterates
+    /// this so CI exercises whatever the host supports.
+    pub fn available_f64() -> Vec<Kernel> {
+        #[allow(unused_mut)]
+        let mut v = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                v.push(Kernel::Avx2);
+                if is_x86_feature_detected!("fma") {
+                    v.push(Kernel::Avx2Fma);
+                }
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                v.push(Kernel::Neon);
+                v.push(Kernel::NeonFma);
+            }
+        }
+        v
+    }
+
+    /// Every i16 kernel variant runnable on this machine right now
+    /// (ignoring the kill switch).
+    pub fn available_i16() -> Vec<Kernel> {
+        #[allow(unused_mut)]
+        let mut v = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                v.push(Kernel::Avx2);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                v.push(Kernel::Neon);
+            }
+        }
+        v
+    }
 }
 
 /// Geometry of one panel multiply: input channels, output filters and
@@ -247,9 +457,335 @@ struct OutPtr<T>(*mut T);
 // SAFETY: the pointer is only dereferenced through disjoint
 // `(f, k, column-range)` row slices (one work item per `(f, T-block)`,
 // see `panel_gemm_f64` / `panel_gemm_requant_i16`), and the pointee
-// outlives the scoped threads that use it.
+// outlives the dispatch (pool dispatches block until every participant
+// leaves the closure).
 unsafe impl<T: Send> Send for OutPtr<T> {}
 unsafe impl<T: Send> Sync for OutPtr<T> {}
+
+/// Scalar `MR × NR` f64 micro-kernel: the full-`C` register-tile
+/// reduction, one mul rounding + one add rounding per channel step per
+/// lane. `acc` must be zeroed on entry. This is the chain every SIMD
+/// variant is judged against.
+#[inline]
+fn mk_f64_scalar(a: &[f64], bx: &[f64], c: usize, acc: &mut [[f64; NR]; MR]) {
+    for ci in 0..c {
+        let av = &a[ci * MR..][..MR];
+        let bv = &bx[ci * NR..][..NR];
+        for (ai, av) in av.iter().enumerate() {
+            for (bj, bv) in bv.iter().enumerate() {
+                acc[ai][bj] += av * bv;
+            }
+        }
+    }
+}
+
+/// Scalar `MR × NR` i16 micro-kernel: i16×i16→i32 products accumulated
+/// exactly in i64. `acc` must be zeroed on entry.
+#[inline]
+fn mk_i16_scalar(a: &[i16], bx: &[i16], c: usize, acc: &mut [[i64; NR]; MR]) {
+    for ci in 0..c {
+        let av = &a[ci * MR..][..MR];
+        let bv = &bx[ci * NR..][..NR];
+        for (ai, &av) in av.iter().enumerate() {
+            let aw = av as i32;
+            for (bj, &bv) in bv.iter().enumerate() {
+                acc[ai][bj] += (aw * bv as i32) as i64;
+            }
+        }
+    }
+}
+
+/// AVX2 micro-kernels. All are `unsafe` because they require the
+/// caller to have *verified* the feature at runtime
+/// ([`Kernel::detect_f64`] / [`Kernel::available_f64`] do); operand
+/// slices are the same `[C][MR]` / `[C][NR]` packed panels the scalar
+/// kernels read, so bounds are structural, not checked per element.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// f64 via separate `_mm256_mul_pd` + `_mm256_add_pd`. Each
+    /// accumulator lane performs exactly the scalar sequence (product
+    /// rounded, then sum rounded, per channel step), so the result is
+    /// **bit-identical** to [`super::mk_f64_scalar`] — no
+    /// reassociation, lanes are independent `(k, t)` chains.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mk_f64_avx2(
+        a: &[f64],
+        bx: &[f64],
+        c: usize,
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let mut acc_v = [[_mm256_setzero_pd(); 2]; MR];
+        for ci in 0..c {
+            let bp = bx.as_ptr().add(ci * NR);
+            let b_lo = _mm256_loadu_pd(bp);
+            let b_hi = _mm256_loadu_pd(bp.add(4));
+            let ap = a.as_ptr().add(ci * MR);
+            for (i, row) in acc_v.iter_mut().enumerate() {
+                let va = _mm256_set1_pd(*ap.add(i));
+                row[0] = _mm256_add_pd(row[0], _mm256_mul_pd(va, b_lo));
+                row[1] = _mm256_add_pd(row[1], _mm256_mul_pd(va, b_hi));
+            }
+        }
+        for (i, row) in acc_v.iter().enumerate() {
+            _mm256_storeu_pd(acc[i].as_mut_ptr(), row[0]);
+            _mm256_storeu_pd(acc[i].as_mut_ptr().add(4), row[1]);
+        }
+    }
+
+    /// f64 via `_mm256_fmadd_pd`: the fused multiply-add rounds once
+    /// per channel step instead of twice, so low bits differ from the
+    /// scalar chain — tolerance-gated, never auto-selected.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` **and** `fma` are available.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mk_f64_avx2_fma(
+        a: &[f64],
+        bx: &[f64],
+        c: usize,
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let mut acc_v = [[_mm256_setzero_pd(); 2]; MR];
+        for ci in 0..c {
+            let bp = bx.as_ptr().add(ci * NR);
+            let b_lo = _mm256_loadu_pd(bp);
+            let b_hi = _mm256_loadu_pd(bp.add(4));
+            let ap = a.as_ptr().add(ci * MR);
+            for (i, row) in acc_v.iter_mut().enumerate() {
+                let va = _mm256_set1_pd(*ap.add(i));
+                row[0] = _mm256_fmadd_pd(va, b_lo, row[0]);
+                row[1] = _mm256_fmadd_pd(va, b_hi, row[1]);
+            }
+        }
+        for (i, row) in acc_v.iter().enumerate() {
+            _mm256_storeu_pd(acc[i].as_mut_ptr(), row[0]);
+            _mm256_storeu_pd(acc[i].as_mut_ptr().add(4), row[1]);
+        }
+    }
+
+    /// i16 via `_mm256_madd_epi16` channel pairs — the LANCE-shaped
+    /// lane plan: the multiply stays in 16-bit precision inside the
+    /// kernel and only widens on accumulate.
+    ///
+    /// Per channel pair `(ci, ci+1)`:
+    /// * `vb` interleaves the two packed `[NR]` channel rows
+    ///   (`_mm_unpacklo/hi_epi16`), so each i32 lane holds the pair
+    ///   `(x[ci][t], x[ci+1][t])` for one column `t`;
+    /// * `va` broadcasts the weight pair `(a[ci][i], a[ci+1][i])` into
+    ///   every lane;
+    /// * `madd` yields the 8 exact i32 pair-sums
+    ///   `a₀·x₀ + a₁·x₁` (exact for codes ≥ `-32767`, see the operand
+    ///   precondition on [`Kernel`]);
+    /// * the pair-sums widen to i64 and accumulate — integer addition
+    ///   reassociates freely, so the final totals are **bit-identical**
+    ///   to [`super::mk_i16_scalar`].
+    ///
+    /// Odd `C` pairs the last channel with zeros.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mk_i16_avx2(
+        a: &[i16],
+        bx: &[i16],
+        c: usize,
+        acc: &mut [[i64; NR]; MR],
+    ) {
+        let mut acc_v = [[_mm256_setzero_si256(); 2]; MR];
+        let zero = _mm_setzero_si128();
+        let mut ci = 0;
+        while ci < c {
+            let pair = ci + 1 < c;
+            let b0 = _mm_loadu_si128(bx.as_ptr().add(ci * NR) as *const __m128i);
+            let b1 = if pair {
+                _mm_loadu_si128(bx.as_ptr().add((ci + 1) * NR) as *const __m128i)
+            } else {
+                zero
+            };
+            let lo = _mm_unpacklo_epi16(b0, b1);
+            let hi = _mm_unpackhi_epi16(b0, b1);
+            let vb = _mm256_set_m128i(hi, lo);
+            let ap = a.as_ptr().add(ci * MR);
+            for (i, row) in acc_v.iter_mut().enumerate() {
+                let a0 = *ap.add(i) as u16 as u32;
+                let a1 = if pair { *ap.add(MR + i) as u16 as u32 } else { 0 };
+                let va = _mm256_set1_epi32(((a1 << 16) | a0) as i32);
+                let prod = _mm256_madd_epi16(va, vb);
+                let w_lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
+                let w_hi =
+                    _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
+                row[0] = _mm256_add_epi64(row[0], w_lo);
+                row[1] = _mm256_add_epi64(row[1], w_hi);
+            }
+            ci += 2;
+        }
+        for (i, row) in acc_v.iter().enumerate() {
+            _mm256_storeu_si256(acc[i].as_mut_ptr() as *mut __m256i, row[0]);
+            _mm256_storeu_si256(acc[i].as_mut_ptr().add(4) as *mut __m256i, row[1]);
+        }
+    }
+}
+
+/// NEON micro-kernels — same contracts as the AVX2 set: `mul`+`add`
+/// f64 lanes are bit-exact, `vfmaq_f64` is tolerance-only, the i16
+/// kernel widens `vmull_s16` products into exact i64 totals.
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// f64 via separate `vmulq_f64` + `vaddq_f64` — bit-identical to
+    /// [`super::mk_f64_scalar`] (independent lanes, two roundings per
+    /// channel step).
+    ///
+    /// # Safety
+    /// Caller must have verified `neon` is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mk_f64_neon(
+        a: &[f64],
+        bx: &[f64],
+        c: usize,
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let mut acc_v = [[vdupq_n_f64(0.0); 4]; MR];
+        for ci in 0..c {
+            let bp = bx.as_ptr().add(ci * NR);
+            let b = [
+                vld1q_f64(bp),
+                vld1q_f64(bp.add(2)),
+                vld1q_f64(bp.add(4)),
+                vld1q_f64(bp.add(6)),
+            ];
+            let ap = a.as_ptr().add(ci * MR);
+            for (i, row) in acc_v.iter_mut().enumerate() {
+                let va = vdupq_n_f64(*ap.add(i));
+                for (j, acc_j) in row.iter_mut().enumerate() {
+                    *acc_j = vaddq_f64(*acc_j, vmulq_f64(va, b[j]));
+                }
+            }
+        }
+        for (i, row) in acc_v.iter().enumerate() {
+            for (j, acc_j) in row.iter().enumerate() {
+                vst1q_f64(acc[i].as_mut_ptr().add(2 * j), *acc_j);
+            }
+        }
+    }
+
+    /// f64 via `vfmaq_f64`: fused rounding — tolerance-gated, never
+    /// auto-selected.
+    ///
+    /// # Safety
+    /// Caller must have verified `neon` is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mk_f64_neon_fma(
+        a: &[f64],
+        bx: &[f64],
+        c: usize,
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        let mut acc_v = [[vdupq_n_f64(0.0); 4]; MR];
+        for ci in 0..c {
+            let bp = bx.as_ptr().add(ci * NR);
+            let b = [
+                vld1q_f64(bp),
+                vld1q_f64(bp.add(2)),
+                vld1q_f64(bp.add(4)),
+                vld1q_f64(bp.add(6)),
+            ];
+            let ap = a.as_ptr().add(ci * MR);
+            for (i, row) in acc_v.iter_mut().enumerate() {
+                let va = vdupq_n_f64(*ap.add(i));
+                for (j, acc_j) in row.iter_mut().enumerate() {
+                    *acc_j = vfmaq_f64(*acc_j, va, b[j]);
+                }
+            }
+        }
+        for (i, row) in acc_v.iter().enumerate() {
+            for (j, acc_j) in row.iter().enumerate() {
+                vst1q_f64(acc[i].as_mut_ptr().add(2 * j), *acc_j);
+            }
+        }
+    }
+
+    /// i16 via `vmull_s16` widening multiplies (i16×i16→i32, exact)
+    /// accumulated into i64 lanes with `vaddw_s32` — bit-identical to
+    /// [`super::mk_i16_scalar`].
+    ///
+    /// # Safety
+    /// Caller must have verified `neon` is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mk_i16_neon(
+        a: &[i16],
+        bx: &[i16],
+        c: usize,
+        acc: &mut [[i64; NR]; MR],
+    ) {
+        let mut acc_v = [[vdupq_n_s64(0); 4]; MR];
+        for ci in 0..c {
+            let bp = bx.as_ptr().add(ci * NR);
+            let b_lo = vld1_s16(bp);
+            let b_hi = vld1_s16(bp.add(4));
+            let ap = a.as_ptr().add(ci * MR);
+            for (i, row) in acc_v.iter_mut().enumerate() {
+                let va = vdup_n_s16(*ap.add(i));
+                let p_lo = vmull_s16(va, b_lo);
+                let p_hi = vmull_s16(va, b_hi);
+                row[0] = vaddw_s32(row[0], vget_low_s32(p_lo));
+                row[1] = vaddw_s32(row[1], vget_high_s32(p_lo));
+                row[2] = vaddw_s32(row[2], vget_low_s32(p_hi));
+                row[3] = vaddw_s32(row[3], vget_high_s32(p_hi));
+            }
+        }
+        for (i, row) in acc_v.iter().enumerate() {
+            for (j, acc_j) in row.iter().enumerate() {
+                vst1q_s64(acc[i].as_mut_ptr().add(2 * j), *acc_j);
+            }
+        }
+    }
+}
+
+/// Run the selected f64 micro-kernel (foreign-arch or undetected
+/// variants fall back to scalar — selection already guaranteed the
+/// feature exists for the native arms).
+#[inline]
+fn run_mk_f64(kernel: Kernel, a: &[f64], bx: &[f64], c: usize, acc: &mut [[f64; NR]; MR]) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: selection verified the feature (see Kernel docs).
+        Kernel::Avx2 => unsafe { x86::mk_f64_avx2(a, bx, c, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above, including `fma`.
+        Kernel::Avx2Fma => unsafe { x86::mk_f64_avx2_fma(a, bx, c, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: selection verified the feature (see Kernel docs).
+        Kernel::Neon => unsafe { arm::mk_f64_neon(a, bx, c, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Kernel::NeonFma => unsafe { arm::mk_f64_neon_fma(a, bx, c, acc) },
+        _ => mk_f64_scalar(a, bx, c, acc),
+    }
+}
+
+/// Run the selected i16 micro-kernel (FMA variants are float-only and
+/// fall back to scalar, as do foreign-arch variants).
+#[inline]
+fn run_mk_i16(kernel: Kernel, a: &[i16], bx: &[i16], c: usize, acc: &mut [[i64; NR]; MR]) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: selection verified the feature (see Kernel docs).
+        Kernel::Avx2 => unsafe { x86::mk_i16_avx2(a, bx, c, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: selection verified the feature (see Kernel docs).
+        Kernel::Neon => unsafe { arm::mk_i16_neon(a, bx, c, acc) },
+        _ => mk_i16_scalar(a, bx, c, acc),
+    }
+}
 
 /// Float per-frequency panel multiply over packed weights — stage 2 of
 /// [`WinoEngine::execute_into`](super::WinoEngine::execute_into).
@@ -264,8 +800,25 @@ unsafe impl<T: Send> Sync for OutPtr<T> {}
 ///
 /// Bit-for-bit equal to [`panel_mul_f64_naive`]: each `(k, f, t)`
 /// accumulator runs the identical `c = 0..C` fused chain, register-tiled
-/// but never reassociated.
+/// but never reassociated. Dispatches to the runtime-detected
+/// **bit-exact** micro-kernel ([`Kernel::detect_f64`] — scalar, or
+/// un-reassociated AVX2/NEON lanes; never FMA).
 pub fn panel_gemm_f64(
+    pw: &PackedF64,
+    xt: &[f64],
+    t_total: usize,
+    fake: Option<&Quantizer>,
+    had: &mut [f64],
+    packs: &mut [Vec<f64>],
+) {
+    panel_gemm_f64_with(Kernel::detect_f64(), pw, xt, t_total, fake, had, packs);
+}
+
+/// [`panel_gemm_f64`] with an explicit micro-kernel — the forall parity
+/// suite drives every [`Kernel::available_f64`] variant through this;
+/// production paths go through the auto-detecting wrapper.
+pub fn panel_gemm_f64_with(
+    kernel: Kernel,
     pw: &PackedF64,
     xt: &[f64],
     t_total: usize,
@@ -281,7 +834,7 @@ pub fn panel_gemm_f64(
     }
     let n_tb = t_total.div_ceil(NC);
     let out = OutPtr(had.as_mut_ptr());
-    parallel::par_for_states(nn * n_tb, packs, |item, buf| {
+    parallel::par_for_states(grid_items(nn, t_total), packs, |item, buf| {
         let f = item / n_tb;
         let tb = (item % n_tb) * NC;
         let te = (tb + NC).min(t_total);
@@ -294,15 +847,7 @@ pub fn panel_gemm_f64(
             for jb in 0..njb {
                 let bx = &buf[jb * c * NR..][..c * NR];
                 let mut acc = [[0.0f64; NR]; MR];
-                for ci in 0..c {
-                    let av = &a[ci * MR..][..MR];
-                    let bv = &bx[ci * NR..][..NR];
-                    for (ai, av) in av.iter().enumerate() {
-                        for (bj, bv) in bv.iter().enumerate() {
-                            acc[ai][bj] += av * bv;
-                        }
-                    }
-                }
+                run_mk_f64(kernel, a, bx, c, &mut acc);
                 let t0 = tb + jb * NR;
                 let cols = (te - t0).min(NR);
                 for (i, acc_row) in acc.iter().enumerate().take(rows) {
@@ -352,6 +897,25 @@ pub fn panel_gemm_requant_i16(
     panel_gemm_requant_i16_counted(pw, xt_codes, t_total, rq, had_codes, packs, &sat);
 }
 
+/// [`panel_gemm_requant_i16_counted`] with an explicit micro-kernel —
+/// the forall parity suite drives every [`Kernel::available_i16`]
+/// variant through this; every int variant is bit-exact, so production
+/// paths auto-detect.
+pub fn panel_gemm_requant_i16_with(
+    kernel: Kernel,
+    pw: &PackedI16,
+    xt_codes: &[i16],
+    t_total: usize,
+    rq: &Requant,
+    had_codes: &mut [i32],
+    packs: &mut [Vec<i16>],
+) {
+    let sat = std::sync::atomic::AtomicU64::new(0);
+    panel_gemm_requant_i16_counted_with(
+        kernel, pw, xt_codes, t_total, rq, had_codes, packs, &sat,
+    );
+}
+
 /// [`panel_gemm_requant_i16`] with numeric-health accounting: `sat`
 /// accumulates how many output codes the requant epilogue clamped
 /// (via [`Requant::apply_sat`] — value path bit-identical to
@@ -368,6 +932,30 @@ pub fn panel_gemm_requant_i16_counted(
     packs: &mut [Vec<i16>],
     sat: &std::sync::atomic::AtomicU64,
 ) {
+    panel_gemm_requant_i16_counted_with(
+        Kernel::detect_i16(),
+        pw,
+        xt_codes,
+        t_total,
+        rq,
+        had_codes,
+        packs,
+        sat,
+    );
+}
+
+/// [`panel_gemm_requant_i16_counted`] with an explicit micro-kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn panel_gemm_requant_i16_counted_with(
+    kernel: Kernel,
+    pw: &PackedI16,
+    xt_codes: &[i16],
+    t_total: usize,
+    rq: &Requant,
+    had_codes: &mut [i32],
+    packs: &mut [Vec<i16>],
+    sat: &std::sync::atomic::AtomicU64,
+) {
     let (nn, k, c) = (pw.nn, pw.k, pw.c);
     assert_eq!(xt_codes.len(), c * nn * t_total, "xt panel not [C][N²][T]");
     assert_eq!(had_codes.len(), nn * k * t_total, "had panel not [N²][K][T]");
@@ -376,7 +964,7 @@ pub fn panel_gemm_requant_i16_counted(
     }
     let n_tb = t_total.div_ceil(NC);
     let out = OutPtr(had_codes.as_mut_ptr());
-    parallel::par_for_states(nn * n_tb, packs, |item, buf| {
+    parallel::par_for_states(grid_items(nn, t_total), packs, |item, buf| {
         let f = item / n_tb;
         let tb = (item % n_tb) * NC;
         let te = (tb + NC).min(t_total);
@@ -390,16 +978,7 @@ pub fn panel_gemm_requant_i16_counted(
             for jb in 0..njb {
                 let bx = &buf[jb * c * NR..][..c * NR];
                 let mut acc = [[0i64; NR]; MR];
-                for ci in 0..c {
-                    let av = &a[ci * MR..][..MR];
-                    let bv = &bx[ci * NR..][..NR];
-                    for (ai, &av) in av.iter().enumerate() {
-                        let aw = av as i32;
-                        for (bj, &bv) in bv.iter().enumerate() {
-                            acc[ai][bj] += (aw * bv as i32) as i64;
-                        }
-                    }
-                }
+                run_mk_i16(kernel, a, bx, c, &mut acc);
                 let t0 = tb + jb * NR;
                 let cols = (te - t0).min(NR);
                 for (i, acc_row) in acc.iter().enumerate().take(rows) {
@@ -552,6 +1131,8 @@ pub fn gemm_bench_json(
             "{{\"bench\": \"gemm\", \"mr\": {}, \"nr\": {}, \"nc\": {}, ",
             "\"shape\": {{\"c\": {}, \"k\": {}, \"t\": {}, \"nn\": {}}}, ",
             "\"threads\": {}, ",
+            "\"kernel\": {{\"float\": \"{}\", \"int\": \"{}\", ",
+            "\"simd_enabled\": {}}}, ",
             "\"float\": {{\"tiled_seconds\": {:e}, \"naive_seconds\": {:e}, ",
             "\"tiled_tiles_per_sec\": {:.1}, \"naive_tiles_per_sec\": {:.1}, ",
             "\"ratio_tiled_vs_naive\": {:.3}}}, ",
@@ -567,6 +1148,9 @@ pub fn gemm_bench_json(
         t_total,
         nn,
         parallel::num_threads(),
+        Kernel::detect_f64().name(),
+        Kernel::detect_i16().name(),
+        simd_enabled(),
         s_f_tiled.median,
         s_f_naive.median,
         ftt,
@@ -690,6 +1274,17 @@ mod tests {
             assert!(section.get("ratio_tiled_vs_naive").is_some(), "{json}");
             assert!(section.get("tiled_tiles_per_sec").is_some(), "{json}");
         }
+        // The detected-kernel line the CI gate requires: stable names
+        // plus the kill-switch state.
+        let kern = doc.get("kernel").unwrap();
+        for path in ["float", "int"] {
+            let name = kern.get(path).unwrap().as_str().unwrap();
+            assert!(
+                ["scalar", "avx2", "neon"].contains(&name),
+                "unexpected auto-selected kernel {name:?} in {json}"
+            );
+        }
+        assert!(kern.get("simd_enabled").is_some(), "{json}");
     }
 
     #[test]
@@ -747,5 +1342,107 @@ mod tests {
         let rq = Quantizer::with_scale(8, 1.0).requant(1.0);
         let mut ihad: Vec<i32> = Vec::new();
         panel_gemm_requant_i16(&pwi, &[], 0, &rq, &mut ihad, &mut [Vec::new()]);
+    }
+
+    #[test]
+    fn grid_items_matches_the_loop_the_kernels_walk() {
+        // The split rule must equal a literal count of the (f, T-block)
+        // pairs the dispatch iterates — including the former off-by-one
+        // shapes: T exactly NC, NC±1, and zero tiles.
+        for &(nn, t) in &[
+            (1usize, 0usize),
+            (1, 1),
+            (4, NC - 1),
+            (4, NC),
+            (4, NC + 1),
+            (9, 2 * NC),
+            (16, 2 * NC + 7),
+        ] {
+            let mut walked = 0usize;
+            for _f in 0..nn {
+                let mut t0 = 0;
+                while t0 < t {
+                    walked += 1;
+                    t0 += NC;
+                }
+            }
+            assert_eq!(grid_items(nn, t), walked, "(nn={nn}, t={t})");
+            // workers_for never exceeds the grid (a lease per worker
+            // must map onto at least one item) and never hits zero.
+            let w = workers_for(nn, t);
+            assert!(w >= 1, "(nn={nn}, t={t})");
+            assert!(w <= grid_items(nn, t).max(1), "(nn={nn}, t={t})");
+        }
+    }
+
+    #[test]
+    fn every_available_kernel_matches_the_oracles_on_a_ragged_shape() {
+        // Quick in-crate smoke over whatever this host can run; the
+        // forall suite in tests/gemm_property.rs drives the full shape
+        // grid. Int must be bitwise, float bitwise for non-FMA variants.
+        let mut rng = Prng::new(0xA11);
+        let (c, k, t, nn) = (5usize, 7usize, NR + 3, 4usize);
+        let wt: Vec<f64> = (0..nn * k * c).map(|_| rng.uniform(1.0)).collect();
+        let xt: Vec<f64> = (0..c * nn * t).map(|_| rng.uniform(1.0)).collect();
+        let pw = Packed::pack(nn, k, c, 0.0, |f, ki, ci| wt[(f * k + ki) * c + ci]);
+        let mut naive = vec![0.0; nn * k * t];
+        panel_mul_f64_naive(&wt, PanelDims { c, k, nn }, &xt, t, None, &mut naive);
+        for kern in Kernel::available_f64() {
+            let mut got = vec![f64::NAN; nn * k * t];
+            panel_gemm_f64_with(kern, &pw, &xt, t, None, &mut got, &mut [Vec::new()]);
+            for (i, (a, b)) in got.iter().zip(&naive).enumerate() {
+                if kern.f64_bit_exact() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} idx {i}", kern.name());
+                } else {
+                    let rel = (a - b).abs() / b.abs().max(1e-300);
+                    assert!(rel < 1e-12, "{} idx {i}: {a} vs {b}", kern.name());
+                }
+            }
+        }
+        let wi: Vec<i16> =
+            (0..nn * k * c).map(|_| (rng.next_u64() % 255) as i16 - 127).collect();
+        let xi: Vec<i16> =
+            (0..c * nn * t).map(|_| (rng.next_u64() % 511) as i16 - 255).collect();
+        let pwi = Packed::pack(nn, k, c, 0i16, |f, ki, ci| wi[(f * k + ki) * c + ci]);
+        let rq = Quantizer::with_scale(8, 1.0).requant(0.05);
+        let mut want = vec![0i32; nn * k * t];
+        panel_gemm_requant_i16_with(
+            Kernel::Scalar,
+            &pwi,
+            &xi,
+            t,
+            &rq,
+            &mut want,
+            &mut [Vec::new()],
+        );
+        for kern in Kernel::available_i16() {
+            let mut got = vec![0i32; nn * k * t];
+            panel_gemm_requant_i16_with(
+                kern,
+                &pwi,
+                &xi,
+                t,
+                &rq,
+                &mut got,
+                &mut [Vec::new()],
+            );
+            assert_eq!(got, want, "int kernel {} must be bit-exact", kern.name());
+        }
+    }
+
+    #[test]
+    fn detection_never_returns_fma_and_kill_switch_forces_scalar() {
+        // Auto-detection must honor the float-parity policy: whatever it
+        // picks for f64 is bit-exact, and FMA variants are opt-in only.
+        assert!(Kernel::detect_f64().f64_bit_exact());
+        // The kill switch pins both paths to scalar; restore after (the
+        // other tests tolerate either state — every auto-selectable
+        // kernel is exact).
+        let was = simd_enabled();
+        set_simd_enabled(false);
+        assert_eq!(Kernel::detect_f64(), Kernel::Scalar);
+        assert_eq!(Kernel::detect_i16(), Kernel::Scalar);
+        assert!(!simd_enabled());
+        set_simd_enabled(was);
     }
 }

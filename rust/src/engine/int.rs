@@ -16,8 +16,11 @@
 //! 2. **Integer channel reduction** — one `[K,C] × [C,T]` panel multiply
 //!    per frequency point ([`panel_mul_requant_i16`], executed through
 //!    the register-tiled kernels of [`gemm`](super::gemm) over the
-//!    bank's pre-packed codes): i16×i16 products widened to i32,
-//!    accumulated over channels in i64 register tiles (exact, so
+//!    bank's pre-packed codes, with the inner micro-kernel auto-selected
+//!    per dispatch — AVX2 `madd` / NEON `vmull` when the host supports
+//!    them, scalar otherwise; every int variant is bit-exact, see
+//!    [`gemm::Kernel`](super::gemm::Kernel)): i16×i16 products widened
+//!    to i32, accumulated over channels in i64 register tiles (exact, so
 //!    accumulation order cannot matter), then requantized once per
 //!    `(k, f, t)` through the fused [`Requant`] epilogue into the
 //!    Hadamard code grid — 8 or 9 bits per

@@ -30,8 +30,9 @@
 //! equality, and `rust/tests/engine_parity.rs` checks the engine against
 //! the direct-convolution oracle at `1e-9` in f64.
 //!
-//! Parallelism comes from [`parallel`] (scoped threads with a
-//! rayon-shaped API; see that module for why rayon itself is not a
+//! Parallelism comes from [`parallel`] (a rayon-shaped API over the
+//! persistent worker [`pool`] — a dispatch wakes parked threads instead
+//! of spawning; see those modules for why rayon itself is not a
 //! dependency here), and repeated calls reuse [`EngineScratch`] buffers
 //! to stay allocation-free on the large workspaces.
 //!
@@ -64,6 +65,7 @@ pub mod gemm;
 pub mod int;
 pub mod layout;
 pub mod parallel;
+pub mod pool;
 pub mod scratch;
 
 pub use gemm::{PackedF64, PackedI16};

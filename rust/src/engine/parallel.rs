@@ -1,24 +1,27 @@
-//! Scoped-thread data parallelism for the batched engine.
+//! Data parallelism for the batched engine, on the persistent pool.
 //!
 //! The vendored build has no crates.io access, so `rayon` itself cannot be
 //! a dependency; this module provides the primitives the engine needs —
 //! rayon-style *indexed parallel iteration over disjoint mutable chunks*
 //! ([`par_chunks_mut`]), plain index ranges ([`par_for`]), and index
 //! ranges with one exclusive worker state each ([`par_for_states`], the
-//! panel GEMM's packing-buffer lease) — on top of
-//! [`std::thread::scope`]. Every engine stage is expressed as "each
-//! worker owns a contiguous run of work items", which is exactly
-//! `rayon`'s `par_chunks_mut().enumerate()` shape, so swapping the real
-//! crate in later is a one-line change per call site.
+//! panel GEMM's packing-buffer lease). Every engine stage is expressed
+//! as "each work item is owned by exactly one worker", which is exactly
+//! `rayon`'s indexed shape, so swapping the real crate in later is a
+//! one-line change per call site.
 //!
-//! Dispatch is frugal: the worker count is clamped to the item count and
-//! the calling thread always works the first run itself, so a stage with
-//! `W` runs spawns exactly `W − 1` threads and a single-run stage spawns
-//! none.
+//! Parallel dispatches run on the process-wide persistent
+//! [`pool`](super::pool): the calling thread always participates (it
+//! pre-claims the first item) and up to `W − 1` **parked pool threads**
+//! are woken to steal the rest off a shared counter — a dispatch is a
+//! condvar wake, not `W − 1` thread creations, which is the whole point
+//! (see the pool module docs for the spawn-tax story). A dispatch with
+//! `W` workers still involves at most `W` threads, the bound the tests
+//! pin.
 //!
 //! Thread count defaults to [`std::thread::available_parallelism`] and can
 //! be pinned with the `WINOQ_THREADS` environment variable (`1` forces the
-//! serial path, which the parity tests use to keep failure cases
+//! serial in-place path, which the parity tests use to keep failure cases
 //! deterministic to debug — results are identical either way because
 //! workers never share output elements).
 
@@ -65,47 +68,31 @@ where
         }
         return;
     }
-    // Split the chunk range into `workers` contiguous runs (first
-    // `rem` runs get one extra chunk), and the data slice with it. The
-    // worker count is clamped to the chunk count and the **calling
-    // thread works the first run itself**, so a stage dispatch spawns
-    // exactly `workers − 1` threads — never idle pool members created
-    // just to exit (see `caller_participates_and_spawns_are_bounded`).
-    let per = n_chunks / workers;
-    let rem = n_chunks % workers;
-    std::thread::scope(|scope| {
-        let mut rest = data;
-        let mut first_chunk = 0usize;
-        let mut own = None;
-        for w in 0..workers {
-            let my_chunks = per + usize::from(w < rem);
-            let my_len = (my_chunks * chunk_len).min(rest.len());
-            let (mine, tail) = rest.split_at_mut(my_len);
-            rest = tail;
-            let base = first_chunk;
-            first_chunk += my_chunks;
-            if w == 0 {
-                own = Some((base, mine));
-                continue;
-            }
-            let f = &f;
-            scope.spawn(move || {
-                for (ci, chunk) in mine.chunks_mut(chunk_len).enumerate() {
-                    f(base + ci, chunk);
-                }
-            });
-        }
-        let (base, mine) = own.expect("workers >= 2 always assigns run 0");
-        for (ci, chunk) in mine.chunks_mut(chunk_len).enumerate() {
-            f(base + ci, chunk);
-        }
+    // Chunks are claimed dynamically off the pool's stealing counter —
+    // each chunk index exactly once — so the reconstructed `&mut`
+    // sub-slices are disjoint by construction, the same guarantee the
+    // old contiguous-run split gave. The worker count is clamped to the
+    // chunk count and the calling thread always participates, so a
+    // `W`-worker dispatch involves at most `W` threads (pinned in
+    // `caller_participates_and_spawns_are_bounded`).
+    let len = data.len();
+    let base = super::pool::SendPtr(data.as_mut_ptr());
+    super::pool::global().dispatch(n_chunks, workers, |ci, _slot| {
+        let start = ci * chunk_len;
+        let end = (start + chunk_len).min(len);
+        // SAFETY: chunk index `ci` is claimed by exactly one
+        // participant, and `[start, end)` ranges of distinct chunks
+        // never overlap; `data` outlives the dispatch (it blocks).
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(ci, chunk);
     });
 }
 
-/// Run `f(i)` for every `i in 0..n` across up to [`num_threads`] scoped
-/// threads, handing each worker a contiguous index range. Use when the
-/// per-index work writes through interior indirection (e.g. gathering
-/// into thread-owned buffers) rather than into one shared slice.
+/// Run `f(i)` for every `i in 0..n` across up to [`num_threads`] pool
+/// participants, indices claimed dynamically. Use when the per-index
+/// work writes through interior indirection (e.g. gathering into
+/// thread-owned buffers) rather than into one shared slice.
 pub fn par_for<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -117,44 +104,22 @@ where
         }
         return;
     }
-    let per = n / workers;
-    let rem = n % workers;
-    std::thread::scope(|scope| {
-        let mut start = 0usize;
-        let mut own = None;
-        for w in 0..workers {
-            let len = per + usize::from(w < rem);
-            let range = start..start + len;
-            start += len;
-            if w == 0 {
-                // The caller works the first range itself (one fewer
-                // spawn per dispatch; see `par_chunks_mut`).
-                own = Some(range);
-                continue;
-            }
-            let f = &f;
-            scope.spawn(move || {
-                for i in range {
-                    f(i);
-                }
-            });
-        }
-        for i in own.expect("workers >= 2 always assigns range 0") {
-            f(i);
-        }
-    });
+    super::pool::global().dispatch(n, workers, |i, _slot| f(i));
 }
 
-/// Run `f(i, state)` for every `i in 0..n`, handing each worker a
-/// contiguous index range **and exclusive `&mut` access to one entry of
-/// `states`** — the shape the panel GEMM's two-dimensional
+/// Run `f(i, state)` for every `i in 0..n`, handing each participant
+/// **exclusive `&mut` access to one entry of `states`** for the whole
+/// dispatch — the shape the panel GEMM's two-dimensional
 /// `(frequency × T-block)` dispatch needs, where every worker streams
 /// input panels through its own packing buffer
 /// ([`EngineScratch`](super::scratch::EngineScratch) owns the buffers,
 /// this primitive leases them out). At most
-/// `min(num_threads(), n, states.len())` workers run; like the other
-/// primitives the calling thread works the first range itself, so
-/// `workers − 1` threads are spawned.
+/// `min(num_threads(), n, states.len())` workers run. The lease is the
+/// pool's **slot**: participants hold a distinct slot in `0..workers`
+/// from first claim to job end (the caller is always slot 0, so the
+/// serial path and the pooled path agree on which state the caller
+/// uses), which makes `&mut states[slot]` race-free even though item
+/// claiming is dynamic.
 pub fn par_for_states<S, F>(n: usize, states: &mut [S], f: F)
 where
     S: Send,
@@ -172,35 +137,15 @@ where
         }
         return;
     }
-    let per = n / workers;
-    let rem = n % workers;
-    std::thread::scope(|scope| {
-        let mut rest = &mut states[..workers];
-        let mut start = 0usize;
-        let mut own = None;
-        for w in 0..workers {
-            let len = per + usize::from(w < rem);
-            let range = start..start + len;
-            start += len;
-            let (s, tail) = std::mem::take(&mut rest)
-                .split_first_mut()
-                .expect("workers <= states.len()");
-            rest = tail;
-            if w == 0 {
-                own = Some((range, s));
-                continue;
-            }
-            let f = &f;
-            scope.spawn(move || {
-                for i in range {
-                    f(i, s);
-                }
-            });
-        }
-        let (range, s) = own.expect("workers >= 2 always assigns range 0");
-        for i in range {
-            f(i, s);
-        }
+    let base = super::pool::SendPtr(states.as_mut_ptr());
+    super::pool::global().dispatch(n, workers, |i, slot| {
+        debug_assert!(slot < workers);
+        // SAFETY: `slot < workers <= states.len()`, and the pool hands
+        // each participant a distinct slot held for the whole dispatch,
+        // so no two threads ever touch the same state; `states` outlives
+        // the dispatch (it blocks).
+        let s = unsafe { &mut *base.0.add(slot) };
+        f(i, s);
     });
 }
 
@@ -273,8 +218,8 @@ mod tests {
     #[test]
     fn caller_participates_and_spawns_are_bounded() {
         // A 3-chunk dispatch must involve at most 3 distinct threads, one
-        // of which is the caller (the first run is worked in place, so a
-        // machine with a big pool never creates threads just to exit).
+        // of which is the caller (it pre-claims the first item, so a
+        // machine with a big pool never wakes workers just to idle).
         use std::collections::HashSet;
         use std::sync::Mutex;
         let ids = Mutex::new(HashSet::new());

@@ -1,0 +1,422 @@
+//! Persistent work-stealing worker pool — the fix for the
+//! per-dispatch spawn tax.
+//!
+//! [`parallel`](super::parallel)'s primitives used to spawn `W − 1`
+//! scoped threads on **every** dispatch, so a serve-path micro-batch
+//! paid thread creation + teardown per engine stage — three times per
+//! batch — which masks the Winograd multiplication win exactly where
+//! the paper claims it (the Hadamard panel GEMM). This module owns a
+//! process-wide set of **parked** worker threads created once
+//! ([`global`]); a dispatch is now a condvar wake, not `W − 1`
+//! `clone(2)` calls.
+//!
+//! # Execution model
+//!
+//! A dispatch ([`WorkerPool::dispatch`]) publishes one job: a
+//! lifetime-erased `Fn(item, slot)` plus a shared atomic item counter.
+//! Participants — the **calling thread always included** — claim items
+//! one at a time from the counter, which is work stealing in its
+//! simplest honest form: a fast participant drains more of the range, a
+//! slow one is never waited on mid-range. Each participant holds a
+//! distinct **slot** in `0..max_slots` for the whole job (the caller is
+//! always slot 0), which is what
+//! [`par_for_states`](super::parallel::par_for_states) leases per-worker
+//! packing buffers against: slot exclusivity makes `&mut states[slot]`
+//! race-free even though item claiming is dynamic.
+//!
+//! The caller pre-claims item 0 before waking the pool, so it always
+//! participates (pinned by the `parallel` tests), then joins the shared
+//! counter. When the counter drains, the caller unlists the job and
+//! blocks until every pool participant has left the closure — only then
+//! does `dispatch` return, which is the safety contract that lets the
+//! job borrow the caller's stack (`f`, the data pointers inside it)
+//! without lifetimes.
+//!
+//! # Panic safety
+//!
+//! Every item runs under `catch_unwind`. The first payload is stored on
+//! the job and **re-raised on the calling thread** after all
+//! participants finish, so a panicking kernel looks exactly like it did
+//! under scoped spawning (the caller unwinds, tests can `should_panic`)
+//! while the pool threads survive to serve the next dispatch. Shutdown
+//! ([`Drop`]) parks no ghosts: it flags, wakes everyone, and joins.
+//!
+//! Concurrency across dispatches: multiple serve workers can dispatch
+//! simultaneously — jobs queue side by side and idle pool threads pick
+//! whichever has unclaimed slots and items, so one worker's batch does
+//! not serialize another's.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Raw mutable pointer wrapper the dispatch closures use to smuggle a
+/// slice base across threads; safety rests on the caller's disjointness
+/// argument (distinct items / distinct slots never alias).
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// One published dispatch: the erased closure, the stealing counter,
+/// slot allocation, and completion/panic state.
+struct Job {
+    /// Borrow of the dispatching caller's closure, transmuted to
+    /// `'static`. Sound because `dispatch` does not return until
+    /// `active == 0` and the job is unlisted — no participant can
+    /// touch `run` after the real borrow ends.
+    run: &'static (dyn Fn(usize, usize) + Sync),
+    n_items: usize,
+    /// Next unclaimed item — the work-stealing counter. Starts at 1;
+    /// the caller pre-claims item 0.
+    next_item: AtomicUsize,
+    /// Next unclaimed slot; pool workers claim (under the pool lock)
+    /// from 1 upward, the caller is slot 0.
+    next_slot: AtomicUsize,
+    max_slots: usize,
+    /// Pool participants currently inside the closure (caller excluded).
+    active: AtomicUsize,
+    /// Latched on first panic so other participants stop claiming.
+    panicked: AtomicBool,
+    /// First panic payload, re-raised by the caller.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Job {
+    /// Can a fresh pool worker still contribute? (Checked under the
+    /// pool lock, which makes check-then-claim atomic.)
+    fn claimable(&self) -> bool {
+        !self.panicked.load(Ordering::Relaxed)
+            && self.next_slot.load(Ordering::Relaxed) < self.max_slots
+            && self.next_item.load(Ordering::Relaxed) < self.n_items
+    }
+}
+
+/// Claim items off `job`'s counter and run them as `slot` until the
+/// counter drains (or a panic latches). `first` is a pre-claimed item.
+fn run_items(job: &Job, slot: usize, mut first: Option<usize>) {
+    loop {
+        let i = match first.take() {
+            Some(i) => i,
+            None => {
+                if job.panicked.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = job.next_item.fetch_add(1, Ordering::Relaxed);
+                if i >= job.n_items {
+                    break;
+                }
+                i
+            }
+        };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (job.run)(i, slot))) {
+            job.panicked.store(true, Ordering::Relaxed);
+            let mut p = job.panic.lock().unwrap();
+            if p.is_none() {
+                *p = Some(payload);
+            }
+        }
+    }
+}
+
+struct PoolState {
+    jobs: Vec<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for claimable jobs (or shutdown).
+    work_cv: Condvar,
+    /// Callers park here waiting for their job's `active` to hit 0.
+    done_cv: Condvar,
+}
+
+/// A fixed set of parked worker threads that repeatedly join published
+/// jobs. Create one explicitly for tests; production code shares
+/// [`global`].
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` parked workers (0 is valid: every dispatch then
+    /// runs entirely on the caller, which is also the serial-machine
+    /// configuration).
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { jobs: Vec::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("winoq-pool-{i}"))
+                    .spawn(move || worker_main(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of pool worker threads (the caller adds one more
+    /// participant on top at dispatch time).
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(item, slot)` for every `item in 0..n_items` across at
+    /// most `max_workers` participants (caller + pool workers), each
+    /// holding a distinct `slot in 0..max_workers` for the whole
+    /// dispatch. Items are claimed dynamically off a shared counter;
+    /// slots are exclusive. Blocks until every item has run and every
+    /// participant has left `f`; re-raises the first panic.
+    pub fn dispatch<F>(&self, n_items: usize, max_workers: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n_items == 0 {
+            return;
+        }
+        let max_slots = max_workers.max(1).min(n_items);
+        if max_slots <= 1 || self.threads() == 0 {
+            for i in 0..n_items {
+                f(i, 0);
+            }
+            return;
+        }
+        // Lifetime erasure: the wait below keeps the borrow alive for
+        // every participant, see the safety note on `Job::run`.
+        let local: &(dyn Fn(usize, usize) + Sync) = &f;
+        let run = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize, usize) + Sync),
+                &'static (dyn Fn(usize, usize) + Sync),
+            >(local)
+        };
+        let job = Arc::new(Job {
+            run,
+            n_items,
+            next_item: AtomicUsize::new(1),
+            next_slot: AtomicUsize::new(1),
+            max_slots,
+            active: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.push(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is slot 0 and pre-claimed item 0.
+        run_items(&job, 0, Some(0));
+        // Unlist (no new participants), then wait out the active ones.
+        let mut st = self.shared.state.lock().unwrap();
+        st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        while job.active.load(Ordering::Relaxed) > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        drop(st);
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Panic-safe shutdown: flag, wake every parked worker, join all of
+    /// them. Workers finish any job they are inside first (callers of
+    /// in-flight dispatches are still blocked in `dispatch`, which
+    /// keeps their borrows alive until the workers leave).
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: &PoolShared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let found = st.jobs.iter().find(|j| j.claimable()).cloned();
+        if let Some(job) = found {
+            // Check-then-claim is atomic: both happen under the lock.
+            let slot = job.next_slot.fetch_add(1, Ordering::Relaxed);
+            job.active.fetch_add(1, Ordering::Relaxed);
+            drop(st);
+            run_items(&job, slot, None);
+            st = shared.state.lock().unwrap();
+            job.active.fetch_sub(1, Ordering::Relaxed);
+            shared.done_cv.notify_all();
+            continue;
+        }
+        if st.shutdown {
+            return;
+        }
+        st = shared.work_cv.wait(st).unwrap();
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool every [`parallel`](super::parallel) primitive
+/// dispatches through. Created lazily with
+/// [`num_threads`](super::parallel::num_threads)` − 1` workers (the
+/// caller is the final participant); the serve session and the bench
+/// runners call [`warm`] up front so the one-time thread creation never
+/// lands inside a measured or deadline-bound dispatch.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(super::parallel::num_threads().saturating_sub(1)))
+}
+
+/// Force-create the global pool (idempotent). Called at serve-session
+/// and bench start so worker threads exist before the first request.
+pub fn warm() {
+    let _ = global();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.dispatch(257, 4, |i, _slot| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn caller_participates_and_slots_are_exclusive() {
+        let pool = WorkerPool::new(3);
+        let ids = Mutex::new(HashSet::new());
+        // Slot exclusivity: each slot's cell is touched by exactly one
+        // thread, tracked by stashing the thread id per slot.
+        let slot_owner: Vec<Mutex<Option<std::thread::ThreadId>>> =
+            (0..4).map(|_| Mutex::new(None)).collect();
+        pool.dispatch(64, 4, |_i, slot| {
+            let me = std::thread::current().id();
+            ids.lock().unwrap().insert(me);
+            let mut owner = slot_owner[slot].lock().unwrap();
+            match *owner {
+                None => *owner = Some(me),
+                Some(prev) => assert_eq!(prev, me, "slot {slot} switched threads"),
+            }
+        });
+        let ids = ids.into_inner().unwrap();
+        assert!(ids.len() <= 4, "4 slots must use at most 4 threads");
+        assert!(
+            ids.contains(&std::thread::current().id()),
+            "the calling thread must work items itself (it pre-claims item 0)"
+        );
+        // The caller always owns slot 0.
+        assert_eq!(
+            slot_owner[0].lock().unwrap().expect("slot 0 ran"),
+            std::thread::current().id()
+        );
+    }
+
+    #[test]
+    fn pool_threads_are_reused_across_dispatches_no_churn() {
+        let pool = WorkerPool::new(2);
+        let me = std::thread::current().id();
+        let mut helper_ids: HashSet<std::thread::ThreadId> = HashSet::new();
+        for _ in 0..8 {
+            let ids = Mutex::new(HashSet::new());
+            pool.dispatch(512, 3, |_i, _slot| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+            for id in ids.into_inner().unwrap() {
+                if id != me {
+                    helper_ids.insert(id);
+                }
+            }
+        }
+        // Reuse, not churn: across 8 dispatches every non-caller
+        // participant is one of the pool's 2 persistent threads.
+        assert!(
+            helper_ids.len() <= pool.threads(),
+            "expected at most {} distinct helper threads, saw {}",
+            pool.threads(),
+            helper_ids.len()
+        );
+    }
+
+    #[test]
+    fn panic_propagates_to_caller_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(32, 3, |i, _slot| {
+                if i == 7 {
+                    panic!("kernel blew up on item 7");
+                }
+            });
+        }))
+        .expect_err("dispatch must re-raise the job panic");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("item 7"), "payload must survive: {msg:?}");
+        // Pool still works after a panicking job (panic-safe workers) …
+        let hits = AtomicUsize::new(0);
+        pool.dispatch(16, 3, |_i, _slot| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+        // … and shutdown joins cleanly.
+        drop(pool);
+    }
+
+    #[test]
+    fn zero_items_zero_threads_and_serial_paths() {
+        let pool = WorkerPool::new(0);
+        pool.dispatch(0, 4, |_, _| panic!("no items expected"));
+        // No pool threads: everything runs on the caller, slot 0.
+        pool.dispatch(5, 4, |_, slot| assert_eq!(slot, 0));
+        let pool = WorkerPool::new(2);
+        pool.dispatch(0, 4, |_, _| panic!("no items expected"));
+        // max_workers == 1 short-circuits to the in-place serial loop.
+        pool.dispatch(5, 1, |_, slot| assert_eq!(slot, 0));
+    }
+
+    #[test]
+    fn concurrent_dispatches_from_multiple_callers_complete() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let total = total.clone();
+                scope.spawn(move || {
+                    for _ in 0..10 {
+                        pool.dispatch(100, 3, |_i, _slot| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 100);
+    }
+
+    #[test]
+    fn global_pool_is_created_once_and_warm_is_idempotent() {
+        warm();
+        let a = global() as *const WorkerPool;
+        warm();
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b, "warm/global must return the same pool");
+    }
+}

@@ -39,7 +39,12 @@ pub struct EngineScratch {
     pub(super) had_codes: Vec<i32>,
     /// Per-worker `C`×`NC` input packing buffers for the float panel
     /// GEMM (layout per buffer: `[⌈NC/NR⌉][C][NR]`, sized inside
-    /// [`gemm::pack_x_block`](super::gemm::pack_x_block)).
+    /// [`gemm::pack_x_block`](super::gemm::pack_x_block)). One buffer
+    /// per dispatch *slot*: the pool leases buffer `slot` exclusively to
+    /// whichever participant holds that slot for the whole dispatch
+    /// ([`parallel::par_for_states`](super::parallel::par_for_states)),
+    /// sized by [`gemm::workers_for`](super::gemm::workers_for) so the
+    /// lease can never under-split the `(frequency × T-block)` grid.
     pub(super) pack_f64: Vec<Vec<f64>>,
     /// Per-worker packing buffers for the integer panel GEMM.
     pub(super) pack_i16: Vec<Vec<i16>>,

@@ -30,6 +30,12 @@ fn main() {
         print!("{}", cli::help());
         return;
     }
+    // Global escape hatch: pin every panel-GEMM dispatch to the scalar
+    // micro-kernels before any command touches the engine (equivalent to
+    // WINOQ_NO_SIMD=1; `scripts/ci.sh` runs the parity suite both ways).
+    if args.has_switch("--no-simd") {
+        winoq::engine::gemm::set_simd_enabled(false);
+    }
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
@@ -496,7 +502,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
         if tracer.dropped() > 0 {
-            eprintln!("warning: {} trace events dropped at capacity", tracer.dropped());
+            eprintln!(
+                "warning: {} trace events dropped at capacity ({} terminal — \
+                 accounting reconciled against the drop counter)",
+                tracer.dropped(),
+                tracer.dropped_terminal()
+            );
         }
         std::fs::write(path, tracer.to_json_lines())
             .with_context(|| format!("writing {path}"))?;
@@ -665,7 +676,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let t_total = batch * hw.div_ceil(m) * hw.div_ceil(m);
     let nn = (m + 2) * (m + 2);
     eprintln!(
-        "panel GEMM bench: C={c} K={k} T={t_total} N²={nn} (m={m}), tiled vs naive…"
+        "panel GEMM bench: C={c} K={k} T={t_total} N²={nn} (m={m}), tiled vs naive \
+         [kernels: float={} int={}]…",
+        winoq::engine::gemm::Kernel::detect_f64().name(),
+        winoq::engine::gemm::Kernel::detect_i16().name(),
     );
     let (json, float_ratio, int_ratio) =
         winoq::engine::gemm::gemm_bench_json(c, k, t_total, nn, 1, 5);

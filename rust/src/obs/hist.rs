@@ -34,6 +34,10 @@ pub struct LogHistogram {
     count: u64,
     /// Saturating sum of all recorded values (mean reporting).
     sum: u64,
+    /// True once `sum` has saturated at `u64::MAX` — from then on the
+    /// exported mean is a floor, not the truth, and snapshots must say
+    /// so instead of silently reporting a corrupted average.
+    sum_overflowed: bool,
     min: u64,
     max: u64,
 }
@@ -46,7 +50,14 @@ impl Default for LogHistogram {
 
 impl LogHistogram {
     pub fn new() -> LogHistogram {
-        LogHistogram { counts: [0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+        LogHistogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0,
+            sum_overflowed: false,
+            min: u64::MAX,
+            max: 0,
+        }
     }
 
     /// Bucket index of a value: `0 → 0`, `1 → 1`, else with
@@ -82,24 +93,39 @@ impl LogHistogram {
         }
     }
 
-    /// Record one sample. O(1); the sum saturates rather than wraps.
+    /// Record one sample. O(1); the sum saturates rather than wraps,
+    /// and saturation latches [`sum_overflowed`](Self::sum_overflowed).
     pub fn record(&mut self, v: u64) {
         self.counts[Self::bucket_index(v)] += 1;
         self.count += 1;
-        self.sum = self.sum.saturating_add(v);
+        self.sum = match self.sum.checked_add(v) {
+            Some(s) => s,
+            None => {
+                self.sum_overflowed = true;
+                u64::MAX
+            }
+        };
         self.min = self.min.min(v);
         self.max = self.max.max(v);
     }
 
     /// Fold another histogram in (bucket-wise add; min/max widen; sum
-    /// saturates). Associative and commutative — the property suite
-    /// pins both — so per-worker histograms can merge in any order.
+    /// saturates and the overflow latch propagates). Associative and
+    /// commutative — the property suite pins both — so per-worker
+    /// histograms can merge in any order.
     pub fn merge(&mut self, other: &LogHistogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
         self.count += other.count;
-        self.sum = self.sum.saturating_add(other.sum);
+        self.sum = match self.sum.checked_add(other.sum) {
+            Some(s) => s,
+            None => {
+                self.sum_overflowed = true;
+                u64::MAX
+            }
+        };
+        self.sum_overflowed |= other.sum_overflowed;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
@@ -112,6 +138,13 @@ impl LogHistogram {
     /// Saturating sum of recorded values.
     pub fn sum(&self) -> u64 {
         self.sum
+    }
+
+    /// True if `sum` ever saturated (directly or via a merged
+    /// histogram that had) — when set, [`mean`](Self::mean) is a lower
+    /// bound, not an average, and exporters surface the flag.
+    pub fn sum_overflowed(&self) -> bool {
+        self.sum_overflowed
     }
 
     /// Exact smallest recorded value (`None` when empty).
@@ -297,6 +330,40 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.count(), 2);
         assert_eq!(h.sum(), u64::MAX, "sum saturates, never wraps");
+        assert!(h.sum_overflowed(), "saturation must latch the flag");
         assert_eq!(h.value_at_quantile(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn sum_overflow_latches_and_propagates_through_merge() {
+        // Below saturation the flag stays clear — an exact u64::MAX sum
+        // is fine, only a wrap-around sets it.
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.sum(), u64::MAX);
+        assert!(!h.sum_overflowed(), "exact MAX sum is not an overflow");
+        h.record(0);
+        assert!(!h.sum_overflowed(), "adding zero cannot overflow");
+        h.record(1);
+        assert!(h.sum_overflowed());
+        assert_eq!(h.sum(), u64::MAX, "sum stays saturated after overflow");
+
+        // Merge: the latch propagates from either side, and a merge
+        // whose combined sum overflows sets it even when neither input
+        // had overflowed on its own.
+        let mut clean = LogHistogram::new();
+        clean.record(7);
+        let mut acc = clean.clone();
+        acc.merge(&h);
+        assert!(acc.sum_overflowed(), "merge must carry the source latch");
+
+        let mut a = LogHistogram::new();
+        a.record(u64::MAX - 1);
+        let mut b = LogHistogram::new();
+        b.record(2);
+        assert!(!a.sum_overflowed() && !b.sum_overflowed());
+        a.merge(&b);
+        assert!(a.sum_overflowed(), "merge-time overflow must be detected");
+        assert_eq!(a.sum(), u64::MAX);
     }
 }

@@ -141,8 +141,10 @@ impl MetricsRegistry {
 
     /// Snapshot every metric as one JSON object per line (trailing
     /// newline included), sorted by metric name. Counters/gauges emit
-    /// `value`; histograms emit `count/min/max/mean` plus the standard
-    /// percentile ladder.
+    /// `value`; histograms emit `count/min/max/mean`, a
+    /// `sum_overflowed` honesty flag (when true the mean is a floor —
+    /// the underlying sum saturated), and the standard percentile
+    /// ladder.
     pub fn snapshot_json_lines(&self) -> String {
         let m = self.inner.lock().unwrap();
         let mut out = String::new();
@@ -165,6 +167,7 @@ impl MetricsRegistry {
                     .u64("min", h.min().unwrap_or(0))
                     .u64("max", h.max().unwrap_or(0))
                     .f64("mean", h.mean(), 3)
+                    .bool("sum_overflowed", h.sum_overflowed())
                     .u64("p50", h.value_at_quantile(0.50))
                     .u64("p95", h.value_at_quantile(0.95))
                     .u64("p99", h.value_at_quantile(0.99))
@@ -224,6 +227,18 @@ mod tests {
         assert_eq!(hist.get("p50").and_then(|j| j.as_u64()), Some(1000));
         assert_eq!(hist.get("p999").and_then(|j| j.as_u64()), Some(8192));
         assert!(snap.ends_with('\n'));
+    }
+
+    #[test]
+    fn snapshot_surfaces_hist_sum_overflow() {
+        let reg = MetricsRegistry::new();
+        reg.observe("ok.hist", 5);
+        reg.observe("bad.hist", u64::MAX);
+        reg.observe("bad.hist", u64::MAX);
+        let snap = reg.snapshot_json_lines();
+        let lines: Vec<&str> = snap.lines().collect();
+        assert!(lines[0].contains("\"sum_overflowed\": true"), "{}", lines[0]);
+        assert!(lines[1].contains("\"sum_overflowed\": false"), "{}", lines[1]);
     }
 
     #[test]

@@ -36,7 +36,10 @@
 //! response is bit-identical to running that request alone
 //! (`rust/tests/serve_parity.rs` pins this for both paper quant configs
 //! across bases). Workers hand the actual parallelism to the engine's
-//! scoped pool ([`engine::parallel`](crate::engine::parallel)); keep
+//! **persistent worker pool** ([`engine::pool`](crate::engine::pool),
+//! warmed once at session start so no request pays thread creation; a
+//! dispatch is a condvar wake) via
+//! [`engine::parallel`](crate::engine::parallel); keep
 //! `workers × WINOQ_THREADS` at or below the core count.
 //!
 //! **Serving at scale** adds three layers on top of that core loop (see
@@ -274,6 +277,9 @@ pub fn with_server_observed<R>(
         queue = queue.with_tracer(tr);
     }
     stats.note_workers(cfg.workers.max(1));
+    // Pay the engine pool's thread-creation cost here, before the first
+    // request is admitted, so no batch ever eats it as latency.
+    crate::engine::pool::warm();
     std::thread::scope(|scope| {
         for _ in 0..cfg.workers.max(1) {
             scope.spawn(|| {

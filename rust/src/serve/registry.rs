@@ -396,6 +396,11 @@ impl ModelRegistry {
     /// construction path in serving.
     fn build_net(&self, cfg: ResNetCfg, params: Params, bank_ns: &str) -> ResNet18 {
         use crate::nn::winolayer::WinoConv2d;
+        // Lowering and the calibration passes that follow run engine
+        // dispatches; warm the persistent pool so registration doesn't
+        // pay thread creation mid-calibration (serving sessions warm it
+        // again — idempotent).
+        crate::engine::pool::warm();
         match cfg.mode {
             ConvMode::Winograd { m, base, quant } => {
                 let key = PlanKey::f(m, 3, base);

@@ -174,6 +174,9 @@ pub fn with_shards_traced<'a, R>(
             .collect(),
         tracer,
     };
+    // One engine pool serves every shard's workers; warm it before the
+    // first admission so no shard's first batch pays thread creation.
+    crate::engine::pool::warm();
     std::thread::scope(|scope| {
         for (i, spec) in shards.iter().enumerate() {
             let queue = &router.shards[i].queue;

@@ -13,12 +13,25 @@
 //! tripwire that keeps both claims true as the kernels evolve.
 
 use winoq::engine::gemm::{
-    panel_gemm_f64, panel_gemm_requant_i16, panel_mul_f64_naive, Packed, MR, NC, NR,
+    panel_gemm_f64, panel_gemm_f64_with, panel_gemm_requant_i16,
+    panel_gemm_requant_i16_with, panel_mul_f64_naive, Kernel, Packed, MR, NC, NR,
 };
 use winoq::engine::int::{panel_mul_requant_i16, panel_mul_requant_i16_naive, PanelDims};
 use winoq::quant::scheme::Quantizer;
 use winoq::testkit::forall;
 use winoq::wino::error::Prng;
+
+/// Documented relative tolerance for the **FMA** f64 kernel variants
+/// (`avx2_fma` / `neon_fma`) against the scalar oracle. A fused
+/// multiply-add replaces the product's rounding with exact arithmetic,
+/// so each of the `C` accumulation steps differs from the scalar chain
+/// by at most one ulp of the running sum; with the suite's `C ≤ 9` and
+/// O(1)-magnitude operands, `C · 2⁻⁵²` is below `1e-14` — `1e-12` gives
+/// two orders of headroom without masking real bugs. Every *non*-FMA
+/// variant must match **bitwise** (the float-parity policy in the
+/// `gemm` module docs); the FMA variants are never auto-selected, so
+/// this tolerance gates opt-in benchmarking only.
+const FMA_REL_TOL: f64 = 1e-12;
 
 /// One randomized panel-GEMM case. Shapes are biased toward the ragged
 /// classes: `t` and `k` are drawn so non-multiples of `NR`/`MR` dominate.
@@ -82,9 +95,78 @@ fn int_case_matches(case: &Case, hadamard_bits: u32) -> bool {
     tiled == naive
 }
 
+/// Does `kernel` reproduce the oracles on `case`? Float: bitwise for
+/// bit-exact variants, within [`FMA_REL_TOL`] for the fused ones. Int:
+/// always bitwise.
+fn kernel_case_matches(case: &Case, kernel: Kernel) -> bool {
+    let Case { c, k, t, nn, wt, xt, fake_scale } = case;
+    let (c, k, t, nn) = (*c, *k, *t, *nn);
+    let fake = fake_scale.map(|s| Quantizer::with_scale(9, s));
+    let pw = Packed::pack(nn, k, c, 0.0f64, |f, ki, ci| wt[(f * k + ki) * c + ci]);
+    let mut tiled = vec![f64::NAN; nn * k * t];
+    let mut packs = vec![Vec::new(); 3];
+    panel_gemm_f64_with(kernel, &pw, xt, t, fake.as_ref(), &mut tiled, &mut packs);
+    let mut naive = vec![0.0f64; nn * k * t];
+    panel_mul_f64_naive(wt, PanelDims { c, k, nn }, xt, t, fake.as_ref(), &mut naive);
+    let float_ok = tiled.iter().zip(&naive).all(|(a, b)| {
+        if kernel.f64_bit_exact() {
+            a.to_bits() == b.to_bits()
+        } else {
+            // The fake-quant epilogue snaps both chains to the same code
+            // grid most of the time; the tolerance only has to absorb
+            // the raw fused-rounding divergence.
+            (a - b).abs() <= FMA_REL_TOL * b.abs().max(1.0)
+        }
+    });
+    if !float_ok {
+        return false;
+    }
+    // Int: quantizer-range codes (symmetric, never i16::MIN — the madd
+    // precondition documented on `Kernel`).
+    let wt_i: Vec<i16> = wt.iter().map(|v| (v * 180.0) as i16).collect();
+    let xt_i: Vec<i16> = xt.iter().map(|v| (v * 196.0) as i16).collect();
+    let hq = Quantizer::with_scale(9, 3.7e-4);
+    let rq = hq.requant(2.3e-4);
+    let pwi = Packed::pack(nn, k, c, 0i16, |f, ki, ci| wt_i[(f * k + ki) * c + ci]);
+    let mut got = vec![i32::MIN; nn * k * t];
+    panel_gemm_requant_i16_with(kernel, &pwi, &xt_i, t, &rq, &mut got, &mut [Vec::new()]);
+    let mut want = vec![0i32; nn * k * t];
+    panel_mul_requant_i16_naive(&xt_i, &wt_i, PanelDims { c, k, nn }, 2.3e-4, &hq, &mut want);
+    got == want
+}
+
 #[test]
 fn forall_tiled_float_gemm_is_bit_identical_to_naive() {
     forall(0xF10A, 120, gen_case, float_case_matches);
+}
+
+#[test]
+fn forall_every_kernel_variant_matches_the_oracles() {
+    // The tentpole's parity gate: every micro-kernel this host can run —
+    // scalar always, AVX2/NEON/FMA where detected — against the naive
+    // oracles over the ragged shape grid. Int variants must be bitwise;
+    // float variants bitwise unless fused (then FMA_REL_TOL). The int
+    // run only covers Scalar + the auto-selectable SIMD variant;
+    // `Kernel::available_f64()` additionally surfaces the FMA variants.
+    let f64_kernels = Kernel::available_f64();
+    let i16_kernels = Kernel::available_i16();
+    assert!(f64_kernels.contains(&Kernel::Scalar));
+    assert!(i16_kernels.contains(&Kernel::Scalar));
+    for kernel in f64_kernels {
+        forall(0x5EED ^ kernel.name().len() as u64, 40, gen_case, |case| {
+            kernel_case_matches(case, kernel)
+        });
+    }
+}
+
+#[test]
+fn auto_detected_kernels_are_serve_safe() {
+    // Whatever detection picks must be in the bit-exact class — the
+    // serve path's float results may never depend on the host's ISA.
+    assert!(Kernel::detect_f64().f64_bit_exact());
+    let named = ["scalar", "avx2", "neon"];
+    assert!(named.contains(&Kernel::detect_f64().name()));
+    assert!(named.contains(&Kernel::detect_i16().name()));
 }
 
 #[test]
@@ -162,4 +244,56 @@ fn direct_packed_driver_matches_raw_slice_entry() {
     let mut via_raw = vec![0i32; nn * k * t];
     panel_mul_requant_i16(&xt, &wt, PanelDims { c, k, nn }, ps, &hq, &mut via_raw);
     assert_eq!(via_packed, via_raw);
+}
+
+#[test]
+fn pool_reuses_threads_across_gemm_dispatches() {
+    // The spawn-tax fix itself: repeated panel dispatches must ride the
+    // same parked helper threads, never spawn fresh ones per call. A
+    // private pool makes the census deterministic regardless of what
+    // other tests do to the global pool.
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+    use winoq::engine::pool::WorkerPool;
+    let pool = WorkerPool::new(3);
+    let seen = Mutex::new(HashSet::new());
+    for round in 0..16 {
+        pool.dispatch(64, 4, |_item, _slot| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+        });
+        let ids = seen.lock().unwrap().len();
+        // Caller + at most 3 pool threads, whatever the round count.
+        assert!(ids <= 4, "round {round}: {ids} distinct threads — churn");
+    }
+    assert!(
+        seen.into_inner().unwrap().contains(&std::thread::current().id()),
+        "the dispatching thread must participate"
+    );
+}
+
+#[test]
+fn pool_shutdown_is_panic_safe() {
+    // A panicking work item must reach the caller as a panic, and the
+    // pool must stay serviceable afterwards (workers survive item
+    // panics); dropping the pool then joins cleanly instead of hanging.
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use winoq::engine::pool::WorkerPool;
+    let pool = WorkerPool::new(2);
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        pool.dispatch(32, 3, |item, _slot| {
+            if item == 11 {
+                panic!("poisoned item {item}");
+            }
+        });
+    }));
+    let msg = *caught.expect_err("panic must propagate").downcast::<String>().unwrap();
+    assert!(msg.contains("poisoned item 11"), "{msg}");
+    // Still alive: a full dispatch completes every item exactly once.
+    let hits = AtomicUsize::new(0);
+    pool.dispatch(100, 3, |_item, _slot| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 100);
+    drop(pool); // must join, not hang or double-panic
 }

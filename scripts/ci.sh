@@ -22,6 +22,15 @@ cargo test -q
 echo "==> golden transform vectors + int-vs-oracle parity"
 cargo test -q --test golden_transforms --test int_parity
 
+# GEMM kernel parity, both ways: once with runtime SIMD detection live
+# (whatever this host supports — AVX2/NEON plus the opt-in FMA
+# tolerance class) and once with the kill switch forcing the scalar
+# kernels, so a parity break in either the SIMD kernels or the fallback
+# dispatch can never hide behind the other configuration.
+echo "==> gemm kernel parity suite (detected SIMD, then WINOQ_NO_SIMD=1)"
+cargo test -q --test gemm_property
+WINOQ_NO_SIMD=1 cargo test -q --test gemm_property
+
 # Panel-GEMM bench: the register-tiled kernels must beat the naive
 # stage-2 oracles on both the float and integer paths at the
 # ResNet18-shaped layer, and the emitter itself asserts tiled/naive
@@ -35,6 +44,14 @@ if [ ! -s "$GEMM_JSON" ] || ! grep -q '"bench": "gemm"' "$GEMM_JSON"; then
   echo "gemm bench FAILED: BENCH_gemm.json missing or malformed" >&2
   exit 1
 fi
+# The detected-kernel line is mandatory: a bench artifact that cannot
+# say which micro-kernels produced it is not comparable to anything.
+KERNELS="$(sed -n 's/.*"kernel": {"float": "\([a-z0-9_]*\)", "int": "\([a-z0-9_]*\)".*/\1 \2/p' "$GEMM_JSON")"
+if [ -z "$KERNELS" ]; then
+  echo "gemm bench FAILED: BENCH_gemm.json lacks the detected-kernel line" >&2
+  cat "$GEMM_JSON" >&2
+  exit 1
+fi
 RATIOS="$(sed -n 's/.*"ratio_tiled_vs_naive": \([0-9.][0-9.]*\).*"ratio_tiled_vs_naive": \([0-9.][0-9.]*\).*/\1 \2/p' "$GEMM_JSON")"
 if [ -z "$RATIOS" ]; then
   echo "gemm bench FAILED: BENCH_gemm.json has no float+int ratios" >&2
@@ -46,7 +63,7 @@ if ! echo "$RATIOS" | awk '{ exit !($1 >= 1.0 && $2 >= 1.0) }'; then
   cat "$GEMM_JSON" >&2
   exit 1
 fi
-echo "gemm bench OK (float/int tiled-vs-naive ratios: $RATIOS)"
+echo "gemm bench OK (kernels: $KERNELS; float/int tiled-vs-naive ratios: $RATIOS)"
 
 # Serve smoke: the micro-batching server must complete a synthetic
 # closed-loop run and report non-zero completions in its stats JSON.
