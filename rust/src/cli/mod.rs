@@ -192,6 +192,56 @@ pub const VALUE_FLAGS: &[FlagSpec] = &[
         help: "soak: write the soak report JSON here (default BENCH_serve_soak.json)",
     },
     FlagSpec { name: "--seed", metavar: "S", help: "soak: PRNG seed for the request trace" },
+    FlagSpec {
+        name: "--chaos-seed",
+        metavar: "S",
+        help: "serve/soak: offset for every --chaos-* modular schedule (default 0)",
+    },
+    FlagSpec {
+        name: "--chaos-panic-every",
+        metavar: "N",
+        help: "serve/soak: panic the worker on every Nth batch (0 = off)",
+    },
+    FlagSpec {
+        name: "--chaos-corrupt-every",
+        metavar: "N",
+        help: "serve/soak: corrupt batch activations on every Nth batch (0 = off)",
+    },
+    FlagSpec {
+        name: "--chaos-corrupt-scale",
+        metavar: "F",
+        help: "serve/soak: activation multiplier for corrupt faults (default 100)",
+    },
+    FlagSpec {
+        name: "--chaos-latency-every",
+        metavar: "N",
+        help: "serve/soak: inject latency on every Nth batch (0 = off)",
+    },
+    FlagSpec {
+        name: "--chaos-latency-us",
+        metavar: "US",
+        help: "serve/soak: injected delay per latency fault (default 1000 µs)",
+    },
+    FlagSpec {
+        name: "--chaos-burst-every",
+        metavar: "N",
+        help: "soak: compress arrival gaps every Nth arrival window (0 = off)",
+    },
+    FlagSpec {
+        name: "--chaos-burst-len",
+        metavar: "K",
+        help: "soak: consecutive arrivals each saturation burst compresses (default 8)",
+    },
+    FlagSpec {
+        name: "--fallback-alerts",
+        metavar: "N",
+        help: "serve: consecutive drift violations that degrade a layer one rung (default 2)",
+    },
+    FlagSpec {
+        name: "--fallback-quiet",
+        metavar: "N",
+        help: "serve: consecutive in-budget samples that restore a degraded layer (default 16)",
+    },
 ];
 
 /// Bare switches (no value).
@@ -330,12 +380,17 @@ COMMANDS:
                     [--plan NETPLAN.json] [--stats-json PATH] [--bench-json PATH]
                     [--int-bench-json PATH] [--trace-json PATH]
                     [--metrics-json PATH] [--drift-json PATH] [--drift-stride N]
-                    [--input-scale F]
+                    [--input-scale F] [--chaos-* ...] [--fallback-alerts N]
+                    [--fallback-quiet N]
                   deterministic multi-model stress/soak simulation
                     --soak [--requests N] [--models N] [--deadline-us US]
                     [--seed S] [--queue-cap N] [--max-batch B]
                     [--batch-window-us US] [--workers W] [--soak-json PATH]
                     [--trace-json PATH] [--drift-stride N] [--drift-scale F]
+                    [--chaos-seed S] [--chaos-panic-every N]
+                    [--chaos-corrupt-every N] [--chaos-corrupt-scale F]
+                    [--chaos-latency-every N] [--chaos-latency-us US]
+                    [--chaos-burst-every N] [--chaos-burst-len K]
   tune            per-layer base/tile/bit-width autotuner → NetPlan JSON
                     --synthetic [--grid full|tiny] [--layers N]
                     [--objective error|throughput|balanced] [--max-err E]
@@ -543,6 +598,53 @@ mod tests {
             assert!(help().contains(f), "help must document {f}");
         }
         assert!(help().contains("benchdiff"), "help must document the benchdiff command");
+    }
+
+    #[test]
+    fn chaos_and_fallback_flags_registered() {
+        // The whole fault-injection family parses, round-trips its
+        // values, and is documented by help() — a typo'd chaos flag is
+        // a hard parse error, never a silently-ignored switch.
+        let a = Args::parse(&sv(&[
+            "serve",
+            "--synthetic",
+            "--chaos-seed",
+            "7",
+            "--chaos-panic-every",
+            "17",
+            "--chaos-latency-every",
+            "5",
+            "--chaos-latency-us",
+            "2000",
+            "--chaos-corrupt-every",
+            "3",
+            "--chaos-corrupt-scale",
+            "50",
+            "--chaos-burst-every",
+            "40",
+            "--chaos-burst-len",
+            "12",
+            "--fallback-alerts",
+            "1",
+            "--fallback-quiet",
+            "4",
+        ]))
+        .unwrap();
+        assert_eq!(a.flag_u64("--chaos-seed", 0).unwrap(), 7);
+        assert_eq!(a.flag_u64("--chaos-panic-every", 0).unwrap(), 17);
+        assert_eq!(a.flag_u64("--chaos-latency-every", 0).unwrap(), 5);
+        assert_eq!(a.flag_u64("--chaos-latency-us", 1000).unwrap(), 2000);
+        assert_eq!(a.flag_u64("--chaos-corrupt-every", 0).unwrap(), 3);
+        assert!((a.flag_f64("--chaos-corrupt-scale", 100.0).unwrap() - 50.0).abs() < 1e-12);
+        assert_eq!(a.flag_u64("--chaos-burst-every", 0).unwrap(), 40);
+        assert_eq!(a.flag_u64("--chaos-burst-len", 8).unwrap(), 12);
+        assert_eq!(a.flag_u64("--fallback-alerts", 2).unwrap(), 1);
+        assert_eq!(a.flag_u64("--fallback-quiet", 16).unwrap(), 4);
+        assert!(Args::parse(&sv(&["serve", "--chaos-panic-every"])).is_err(), "value required");
+        assert!(Args::parse(&sv(&["serve", "--chaos-panics-every", "17"])).is_err(), "typo");
+        for f in ["--chaos-panic-every", "--chaos-burst-len", "--fallback-quiet"] {
+            assert!(help().contains(f), "help must document {f}");
+        }
     }
 
     #[test]

@@ -45,9 +45,25 @@
 //! simultaneously — jobs queue side by side and idle pool threads pick
 //! whichever has unclaimed slots and items, so one worker's batch does
 //! not serialize another's.
+//!
+//! # Self-healing
+//!
+//! Pool threads normally never die (`run_items` catches every item
+//! panic), but a thread lost anyway — an injected exit via
+//! [`request_worker_exit`], or anything that unwinds outside the item
+//! closure — must not shrink the pool for the rest of the process.
+//! [`WorkerPool::replenish`] reaps finished threads and respawns back to
+//! the construction-time target, counting respawns in the
+//! `pool.respawned` metric ([`export_metrics`]). Every [`dispatch`]
+//! cheaply checks the live count and replenishes first when short, and
+//! the serve supervisor calls the module-level [`replenish`] after each
+//! worker restart — so a panic that quenched pool threads is healed
+//! before the next batch needs them. A shrunken (even empty) pool never
+//! deadlocks a dispatch regardless: the caller always participates and
+//! drains unclaimed items itself.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -130,14 +146,32 @@ struct PoolShared {
     work_cv: Condvar,
     /// Callers park here waiting for their job's `active` to hit 0.
     done_cv: Condvar,
+    /// Worker threads currently running `worker_main` (guard-decremented
+    /// on every exit path) — the cheap "are we short?" signal
+    /// [`WorkerPool::dispatch`] gates replenishment on.
+    alive: AtomicUsize,
+    /// Fault-injection hook: pending requests for a worker thread to
+    /// exit ([`WorkerPool::request_worker_exit`]). Each parked or
+    /// between-jobs worker consumes at most one and returns.
+    exit_requests: AtomicUsize,
 }
 
-/// A fixed set of parked worker threads that repeatedly join published
-/// jobs. Create one explicitly for tests; production code shares
+/// Process-lifetime count of pool threads respawned by
+/// [`WorkerPool::replenish`] — exported as `pool.respawned`.
+static RESPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// A set of parked worker threads that repeatedly join published jobs,
+/// replenished back to its construction-time target whenever threads
+/// are lost. Create one explicitly for tests; production code shares
 /// [`global`].
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Construction-time thread count [`replenish`](Self::replenish)
+    /// restores toward.
+    target: usize,
+    /// Monotonic name counter so respawned threads get fresh names.
+    next_name: AtomicUsize,
 }
 
 impl WorkerPool {
@@ -149,23 +183,87 @@ impl WorkerPool {
             state: Mutex::new(PoolState { jobs: Vec::new(), shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            alive: AtomicUsize::new(0),
+            exit_requests: AtomicUsize::new(0),
         });
-        let handles = (0..threads)
-            .map(|i| {
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("winoq-pool-{i}"))
-                    .spawn(move || worker_main(&shared))
-                    .expect("spawn pool worker")
-            })
-            .collect();
-        WorkerPool { shared, handles }
+        let pool = WorkerPool {
+            shared,
+            handles: Mutex::new(Vec::with_capacity(threads)),
+            target: threads,
+            next_name: AtomicUsize::new(0),
+        };
+        {
+            let mut handles = pool.handles.lock().unwrap();
+            for _ in 0..threads {
+                let h = pool.spawn_worker();
+                handles.push(h);
+            }
+        }
+        pool
     }
 
-    /// Number of pool worker threads (the caller adds one more
+    /// Spawn one worker thread, pre-registering it as alive (so a
+    /// concurrent dispatch's shortness check never double-counts a gap
+    /// that is already being filled).
+    fn spawn_worker(&self) -> JoinHandle<()> {
+        let shared = self.shared.clone();
+        let i = self.next_name.fetch_add(1, Ordering::Relaxed);
+        self.shared.alive.fetch_add(1, Ordering::Relaxed);
+        std::thread::Builder::new()
+            .name(format!("winoq-pool-{i}"))
+            .spawn(move || worker_main(&shared))
+            .expect("spawn pool worker")
+    }
+
+    /// The pool's target worker-thread count (the caller adds one more
     /// participant on top at dispatch time).
     pub fn threads(&self) -> usize {
-        self.handles.len()
+        self.target
+    }
+
+    /// Worker threads currently live (≤ [`threads`](Self::threads)
+    /// until [`replenish`](Self::replenish) heals a loss).
+    pub fn alive(&self) -> usize {
+        self.shared.alive.load(Ordering::Relaxed)
+    }
+
+    /// Ask `n` worker threads to exit (fault injection for the chaos
+    /// suite — production threads never exit on their own). Each parked
+    /// or between-jobs worker consumes one request and returns; the
+    /// next [`dispatch`](Self::dispatch) or explicit
+    /// [`replenish`](Self::replenish) respawns replacements.
+    pub fn request_worker_exit(&self, n: usize) {
+        self.shared.exit_requests.fetch_add(n, Ordering::Relaxed);
+        // Take the pool lock before waking so a worker between its
+        // exit check and `wait` cannot miss the notification.
+        let _st = self.shared.state.lock().unwrap();
+        self.shared.work_cv.notify_all();
+    }
+
+    /// Reap finished worker threads and respawn back to the target
+    /// count; returns how many were respawned (also added to the
+    /// `pool.respawned` metric). Idempotent and cheap when nothing
+    /// died.
+    pub fn replenish(&self) -> usize {
+        let mut handles = self.handles.lock().unwrap();
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() {
+                let _ = handles.remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        let mut spawned = 0;
+        while handles.len() < self.target {
+            let h = self.spawn_worker();
+            handles.push(h);
+            spawned += 1;
+        }
+        if spawned > 0 {
+            RESPAWNED.fetch_add(spawned as u64, Ordering::Relaxed);
+        }
+        spawned
     }
 
     /// Run `f(item, slot)` for every `item in 0..n_items` across at
@@ -182,11 +280,17 @@ impl WorkerPool {
             return;
         }
         let max_slots = max_workers.max(1).min(n_items);
-        if max_slots <= 1 || self.threads() == 0 {
+        if max_slots <= 1 || self.target == 0 {
             for i in 0..n_items {
                 f(i, 0);
             }
             return;
+        }
+        // Self-healing: if any worker thread died since the last
+        // dispatch, respawn before publishing (one relaxed load on the
+        // happy path).
+        if self.shared.alive.load(Ordering::Relaxed) < self.target {
+            self.replenish();
         }
         // Lifetime erasure: the wait below keeps the borrow alive for
         // every participant, see the safety note on `Job::run`.
@@ -238,15 +342,33 @@ impl Drop for WorkerPool {
             st.shutdown = true;
             self.shared.work_cv.notify_all();
         }
-        for h in self.handles.drain(..) {
+        for h in self.handles.get_mut().unwrap().drain(..) {
             let _ = h.join();
         }
     }
 }
 
 fn worker_main(shared: &PoolShared) {
+    /// Decrements the pool's live count on *any* exit path (requested
+    /// exit today; an unexpected unwind would also be counted, so the
+    /// next dispatch heals it).
+    struct AliveGuard<'a>(&'a PoolShared);
+    impl Drop for AliveGuard<'_> {
+        fn drop(&mut self) {
+            self.0.alive.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+    let _alive = AliveGuard(shared);
     let mut st = shared.state.lock().unwrap();
     loop {
+        // Consume at most one pending exit request (fault injection).
+        if shared
+            .exit_requests
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+        {
+            return;
+        }
         let found = st.jobs.iter().find(|j| j.claimable()).cloned();
         if let Some(job) = found {
             // Check-then-claim is atomic: both happen under the lock.
@@ -282,6 +404,35 @@ pub fn global() -> &'static WorkerPool {
 /// and bench start so worker threads exist before the first request.
 pub fn warm() {
     let _ = global();
+}
+
+/// Replenish the global pool back to its target thread count (no-op if
+/// nothing died, or if the pool was never created). The serve
+/// supervisor calls this after every worker restart so a panic that
+/// took pool threads with it is healed before the next batch.
+pub fn replenish() -> usize {
+    GLOBAL.get().map_or(0, WorkerPool::replenish)
+}
+
+/// Ask `n` global-pool threads to exit (chaos fault injection; forces
+/// creation so the request has someone to land on).
+pub fn request_worker_exit(n: usize) {
+    global().request_worker_exit(n);
+}
+
+/// Pool threads respawned over the process lifetime (all pools).
+pub fn respawned() -> u64 {
+    RESPAWNED.load(Ordering::Relaxed)
+}
+
+/// Publish the pool's health counters: `pool.respawned` plus the
+/// global pool's target/alive thread gauges.
+pub fn export_metrics(reg: &crate::obs::MetricsRegistry) {
+    reg.inc("pool.respawned", respawned());
+    if let Some(pool) = GLOBAL.get() {
+        reg.set_gauge("pool.threads", pool.threads() as f64);
+        reg.set_gauge("pool.alive", pool.alive() as f64);
+    }
 }
 
 #[cfg(test)]
@@ -409,6 +560,61 @@ mod tests {
             }
         });
         assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 100);
+    }
+
+    #[test]
+    fn requested_exits_are_healed_by_the_next_dispatch() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.alive(), 3);
+        let before = respawned();
+        pool.request_worker_exit(2);
+        // The exit requests land on parked workers; wait for them to
+        // actually die (bounded poll, virtue of the alive guard).
+        for _ in 0..1000 {
+            if pool.alive() <= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.alive(), 1, "two workers must have exited");
+        // A shrunken pool still completes dispatches (the caller
+        // participates and drains), and the dispatch path replenishes
+        // when it sees the shortfall.
+        let hits = AtomicUsize::new(0);
+        pool.dispatch(64, 4, |_i, _slot| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+        // `is_finished` can lag the alive-guard drop by an instant, so
+        // healing may take more than one replenish — poll, bounded.
+        for _ in 0..1000 {
+            if pool.alive() == 3 {
+                break;
+            }
+            pool.replenish();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.alive(), 3, "replenish must respawn dead workers");
+        assert!(
+            respawned() >= before + 2,
+            "pool.respawned must count the respawns (before {before}, now {})",
+            respawned()
+        );
+        // Explicit replenish with nothing dead is a no-op.
+        assert_eq!(pool.replenish(), 0);
+        drop(pool);
+    }
+
+    #[test]
+    fn exported_metrics_include_respawn_counter_and_thread_gauges() {
+        warm();
+        let reg = crate::obs::MetricsRegistry::new();
+        export_metrics(&reg);
+        assert!(reg.gauge("pool.threads").is_some());
+        assert!(reg.gauge("pool.alive").is_some());
+        // The counter is exported (other tests may bump the process-wide
+        // total concurrently, so bound rather than pin it).
+        assert!(reg.counter("pool.respawned") <= respawned());
     }
 
     #[test]

@@ -252,6 +252,27 @@ fn cmd_error_analysis(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--chaos-*` flag family into a fault schedule.
+/// Returns `None` when no fault kind is scheduled (chaos off), so both
+/// serve paths stay byte-identical to their pre-chaos behaviour unless
+/// a rule is explicitly armed.
+fn chaos_from_args(args: &Args) -> Result<Option<winoq::testkit::chaos::ChaosConfig>> {
+    use winoq::testkit::chaos::ChaosConfig;
+    let d = ChaosConfig::default();
+    let cfg = ChaosConfig {
+        seed: args.flag_u64("--chaos-seed", d.seed)?,
+        panic_every: args.flag_u64("--chaos-panic-every", 0)?,
+        corrupt_every: args.flag_u64("--chaos-corrupt-every", 0)?,
+        corrupt_scale: args.flag_f64("--chaos-corrupt-scale", d.corrupt_scale)?,
+        latency_every: args.flag_u64("--chaos-latency-every", 0)?,
+        latency_us: args.flag_u64("--chaos-latency-us", d.latency_us)?,
+        burst_every: args.flag_u64("--chaos-burst-every", 0)?,
+        burst_len: args.flag_u64("--chaos-burst-len", d.burst_len)?,
+        ..d
+    };
+    Ok(cfg.is_enabled().then_some(cfg))
+}
+
 /// `winoq serve`: the micro-batching inference server with the built-in
 /// synthetic closed-loop client (the only frontend in this vendored
 /// build — there is no socket listener; embedders drive
@@ -263,9 +284,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use winoq::obs::drift::{DriftConfig, DriftMonitor};
     use winoq::obs::{MetricsRegistry, TraceSink, Tracer};
     use winoq::serve::{
-        run_closed_loop, run_closed_loop_observed, BatchModel, ModelRegistry, ServeConfig,
-        ServeStats,
+        run_closed_loop, run_closed_loop_resilient, BatchModel, FallbackConfig,
+        FallbackController, ModelRegistry, Resilience, ServeConfig, ServeStats,
     };
+    use winoq::testkit::chaos::FaultPlan;
 
     if args.has_switch("--soak") {
         return cmd_serve_soak(args);
@@ -455,7 +477,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let tracer = args.flag("--trace-json").map(|_| Arc::new(Tracer::default()));
     let stats = ServeStats::new();
-    let report = run_closed_loop_observed(
+
+    // Resilience posture: supervised workers with the default bounded
+    // restart budget, an optional seeded fault plan (`--chaos-*`), and —
+    // whenever the drift monitor runs — the per-layer circuit breaker
+    // that walks degraded layers down the int → float → direct ladder.
+    let chaos_plan = chaos_from_args(args)?.map(|c| {
+        eprintln!(
+            "chaos armed: seed {} | panic/{} corrupt/{} (x{}) latency/{} ({} µs) burst/{} ({})",
+            c.seed,
+            c.panic_every,
+            c.corrupt_every,
+            c.corrupt_scale,
+            c.latency_every,
+            c.latency_us,
+            c.burst_every,
+            c.burst_len
+        );
+        Arc::new(FaultPlan::new(c))
+    });
+    let fallback = drift.as_ref().map(|_| {
+        let fcfg = FallbackConfig {
+            alerts_to_degrade: args.flag_u64("--fallback-alerts", 2)?.max(1) as u32,
+            quiet_to_restore: args.flag_u64("--fallback-quiet", 16)?.max(1) as u32,
+        };
+        Ok::<_, anyhow::Error>(Arc::new(FallbackController::new(fcfg)))
+    });
+    let fallback = match fallback {
+        Some(f) => Some(f?),
+        None => None,
+    };
+    let res = Resilience { chaos: chaos_plan, fallback: fallback.clone(), ..Resilience::default() };
+
+    let report = run_closed_loop_resilient(
         served.as_ref(),
         &serve_cfg,
         &stats,
@@ -464,10 +518,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         concurrency,
         tracer.clone(),
         drift.as_ref(),
+        &res,
     );
     println!("{}", report.summary_line());
-    if report.completed as usize != requests {
-        bail!("served {} of {requests} requests", report.completed);
+    if let Some(fb) = &fallback {
+        if fb.degraded() > 0 {
+            eprintln!(
+                "fallback: {} layer(s) still degraded at shutdown (serving off the \
+                 float/direct ladder)",
+                fb.degraded()
+            );
+        }
+    }
+    // Failed requests were *answered* (typed error, exact accounting) —
+    // they only fail the run when chaos wasn't deliberately armed.
+    let answered = report.completed + report.failed;
+    if report.failed > 0 && res.chaos.is_none() {
+        bail!("{} request(s) failed without injected faults", report.failed);
+    }
+    if answered as usize != requests {
+        bail!("served {answered} of {requests} requests ({} failed)", report.failed);
     }
 
     // Drift report: the windowed per-layer rel-L2 series, budgets, and
@@ -488,17 +558,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // Request tracing: drain every span's lifecycle as JSON lines, after
     // checking the accounting invariant (every submitted span ended in
-    // exactly one of complete/reject/shed).
+    // exactly one of complete/reject/shed/failed).
     if let Some(path) = args.flag("--trace-json") {
         let tracer = tracer.as_ref().expect("tracer exists when --trace-json is set");
         let acc = tracer.accounting();
         if !acc.exact {
             bail!(
-                "trace accounting does not reconcile: {} submitted vs {} + {} + {}",
+                "trace accounting does not reconcile: {} submitted vs {} + {} + {} + {}",
                 acc.submitted,
                 acc.completed,
                 acc.rejected,
-                acc.shed
+                acc.shed,
+                acc.failed
             );
         }
         if tracer.dropped() > 0 {
@@ -512,8 +583,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::write(path, tracer.to_json_lines())
             .with_context(|| format!("writing {path}"))?;
         eprintln!(
-            "trace JSON lines written to {path} ({} spans: {} completed, {} rejected, {} shed)",
-            acc.submitted, acc.completed, acc.rejected, acc.shed
+            "trace JSON lines written to {path} ({} spans: {} completed, {} rejected, \
+             {} shed, {} failed)",
+            acc.submitted, acc.completed, acc.rejected, acc.shed, acc.failed
         );
     }
 
@@ -524,6 +596,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let reg = MetricsRegistry::new();
         stats.export_metrics(&reg);
         registry.plans().export_metrics(&reg);
+        winoq::engine::pool::export_metrics(&reg);
         if let Some(dm) = &drift {
             dm.export_metrics(&reg);
         }
@@ -769,7 +842,23 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
         service_jitter_div: 16,
         drift_stride: args.flag_u64("--drift-stride", 0)?,
         drift_err_scale: args.flag_f64("--drift-scale", 1.0)?,
+        chaos: chaos_from_args(args)?,
     };
+    if let Some(c) = &cfg.chaos {
+        eprintln!(
+            "chaos armed: seed {} | panic/{} corrupt/{} (x{}) latency/{} ({} µs) \
+             burst/{} ({}) | restart budget {}",
+            c.seed,
+            c.panic_every,
+            c.corrupt_every,
+            c.corrupt_scale,
+            c.latency_every,
+            c.latency_us,
+            c.burst_every,
+            c.burst_len,
+            c.restart_budget
+        );
+    }
     let trace_path = args.flag("--trace-json");
     let (report, trace) = if trace_path.is_some() {
         let (r, t) = run_soak_traced(&cfg);
@@ -780,8 +869,8 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
     println!("{}", report.summary_line());
     for m in &report.per_model {
         println!(
-            "  {}: {} ok / {} rejected / {} shed, p99 {:.0} µs, {:.0} req/s",
-            m.name, m.completed, m.rejected, m.shed, m.p99_us, m.requests_per_sec
+            "  {}: {} ok / {} rejected / {} shed / {} failed, p99 {:.0} µs, {:.0} req/s",
+            m.name, m.completed, m.rejected, m.shed, m.failed, m.p99_us, m.requests_per_sec
         );
     }
     if let Some(d) = &report.drift {
@@ -789,11 +878,12 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
     }
     if !report.accounting_exact() {
         bail!(
-            "soak accounting does not reconcile: {} submitted vs {} + {} + {}",
+            "soak accounting does not reconcile: {} submitted vs {} + {} + {} + {}",
             report.submitted,
             report.completed,
             report.rejected,
-            report.shed
+            report.shed,
+            report.failed
         );
     }
     let path = args.flag_or("--soak-json", "BENCH_serve_soak.json");
@@ -806,14 +896,16 @@ fn cmd_serve_soak(args: &Args) -> Result<()> {
             || acc.completed != report.completed
             || acc.rejected != report.rejected
             || acc.shed != report.shed
+            || acc.failed != report.failed
         {
             bail!(
                 "soak trace accounting does not reconcile with the report: \
-                 trace {acc:?} vs report {}/{}/{}/{}",
+                 trace {acc:?} vs report {}/{}/{}/{}/{}",
                 report.submitted,
                 report.completed,
                 report.rejected,
-                report.shed
+                report.shed,
+                report.failed
             );
         }
         std::fs::write(tp, trace.to_json_lines()).with_context(|| format!("writing {tp}"))?;

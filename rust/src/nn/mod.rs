@@ -9,3 +9,4 @@ pub mod winolayer;
 
 pub use resnet::{ConvMode, Params, ResNet18, ResNetCfg};
 pub use tensor::Tensor;
+pub use winolayer::EngineMode;

@@ -19,7 +19,7 @@
 
 use super::layers::{batchnorm, conv2d, global_avg_pool, linear, relu, Conv2dCfg};
 use super::tensor::Tensor;
-use super::winolayer::WinoConv2d;
+use super::winolayer::{EngineMode, WinoConv2d};
 use crate::engine::{EngineScratch, TileGrid};
 use crate::quant::scheme::QuantConfig;
 use crate::wino::basis::Base;
@@ -380,8 +380,12 @@ impl ResNet18 {
                 cap.insert(prefix.to_string(), x.clone());
             }
         }
+        // A layer the drift-fallback controller degraded to Direct
+        // bypasses Winograd entirely — the raw weights are still in
+        // `params`, so direct conv is always available as the floor of
+        // the fallback ladder.
         let y = match self.wino.get(prefix) {
-            Some(layer) if stride == 1 => {
+            Some(layer) if stride == 1 && layer.mode() != EngineMode::Direct => {
                 layer.forward_with_scratch(x, Conv2dCfg { stride: 1, padding: pad }, scratch)
             }
             _ => conv2d(x, w, None, Conv2dCfg { stride, padding: pad }),
@@ -495,6 +499,36 @@ mod tests {
         for (a, b) in yd.data.iter().zip(&yw.data) {
             assert!((a - b).abs() < 2e-2, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn direct_mode_layers_bypass_winograd_exactly() {
+        // The fallback ladder's floor: degrading every lowered layer to
+        // EngineMode::Direct must reproduce the direct-conv net
+        // bit-for-bit (conv_unit falls through to the same conv2d over
+        // the same raw params), and restoring Int brings the Winograd
+        // output back.
+        use crate::nn::winolayer::EngineMode;
+        let direct = ResNet18::init(small_cfg(ConvMode::Direct), 7);
+        let wino = ResNet18::from_params(
+            small_cfg(ConvMode::Winograd { m: 4, base: Base::Legendre, quant: None }),
+            direct.params.clone(),
+        );
+        let x = rand_images(3, 1, 32);
+        let yd = direct.forward(&x);
+        let yw = wino.forward(&x);
+        let prefixes: Vec<String> = ResNet18::wino_eligible_units(&wino.cfg)
+            .into_iter()
+            .map(|(p, _, _)| p)
+            .collect();
+        for p in &prefixes {
+            wino.wino_layer(p).unwrap().set_mode(EngineMode::Direct);
+        }
+        assert_eq!(wino.forward(&x).data, yd.data, "Direct mode must be bit-exact");
+        for p in &prefixes {
+            wino.wino_layer(p).unwrap().set_mode(EngineMode::Int);
+        }
+        assert_eq!(wino.forward(&x).data, yw.data, "restore must return to Winograd");
     }
 
     #[test]

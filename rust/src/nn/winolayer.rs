@@ -36,7 +36,59 @@ use crate::wino::basis::Base;
 use crate::wino::matrix::Mat;
 use crate::wino::toomcook::WinogradPlan;
 use crate::wino::transform::WinoF;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Arc;
+
+/// Which execution engine a layer's [`WinoConv2d::forward`] dispatches
+/// to — the fallback ladder the serving circuit breaker walks when the
+/// drift monitor reports persistent budget violations
+/// (`Int → Float → Direct`, re-armed back to `Int` after a quiet
+/// period). Stored on the layer as an atomic so the serving drift probe
+/// can flip it through a shared `&dyn BatchModel` without locks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EngineMode {
+    /// Tuned quantized path: the integer-domain engine when the layer
+    /// has one (the default, and what the NetPlan calibrated for).
+    Int = 0,
+    /// Degraded one rung: the float fake-quant Winograd engine —
+    /// same transform algebra, no integer rounding on activations.
+    Float = 1,
+    /// Degraded fully: bypass Winograd and run direct convolution
+    /// (dispatched by the *model* — see `ResNet18::conv_unit`; the
+    /// layer itself serves the float engine for callers that cannot
+    /// bypass, e.g. the drift probe's per-layer forward).
+    Direct = 2,
+}
+
+impl EngineMode {
+    /// Stable lowercase label (`"int"`/`"float"`/`"direct"`) — what the
+    /// `fallback_engaged`/`fallback_cleared` trace events carry.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineMode::Int => "int",
+            EngineMode::Float => "float",
+            EngineMode::Direct => "direct",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant (atomic storage decode).
+    fn from_u8(v: u8) -> EngineMode {
+        match v {
+            1 => EngineMode::Float,
+            2 => EngineMode::Direct,
+            _ => EngineMode::Int,
+        }
+    }
+
+    /// One rung down the fallback ladder (`Direct` is the floor).
+    pub fn degraded(self) -> EngineMode {
+        match self {
+            EngineMode::Int => EngineMode::Float,
+            EngineMode::Float | EngineMode::Direct => EngineMode::Direct,
+        }
+    }
+}
 
 /// Per-layer quantization state (calibrated scales), if quantization is on.
 #[derive(Clone, Copy, Debug)]
@@ -69,6 +121,10 @@ pub struct WinoConv2d {
     /// Shared weight-code bank injected by the serve plan cache
     /// ([`set_int_codes`](Self::set_int_codes)) before calibration.
     int_codes: Option<Arc<IntWeightBank>>,
+    /// Current serving engine ([`EngineMode`] discriminant) — atomic so
+    /// the drift-fallback controller can degrade/restore a layer through
+    /// a shared reference while workers are serving.
+    mode: AtomicU8,
 }
 
 impl WinoConv2d {
@@ -111,7 +167,17 @@ impl WinoConv2d {
             }
         }
         let engine = WinoEngine::from_transformed_weights(wf.clone(), &wt, None);
-        WinoConv2d { wf, wt, k, c, quant: None, engine, int_engine: None, int_codes: None }
+        WinoConv2d {
+            wf,
+            wt,
+            k,
+            c,
+            quant: None,
+            engine,
+            int_engine: None,
+            int_codes: None,
+            mode: AtomicU8::new(EngineMode::Int as u8),
+        }
     }
 
     /// [`from_transformed`](Self::from_transformed) with an
@@ -156,7 +222,17 @@ impl WinoConv2d {
             }
         }
         let engine = WinoEngine::from_packed(wf.clone(), packed, None);
-        WinoConv2d { wf, wt, k, c, quant: None, engine, int_engine: None, int_codes: None }
+        WinoConv2d {
+            wf,
+            wt,
+            k,
+            c,
+            quant: None,
+            engine,
+            int_engine: None,
+            int_codes: None,
+            mode: AtomicU8::new(EngineMode::Int as u8),
+        }
     }
 
     /// The batched **float** (fake-quant) execution engine. Quantized
@@ -171,6 +247,19 @@ impl WinoConv2d {
     /// panels (see [`IntWinoEngine::supports`]).
     pub fn int_engine(&self) -> Option<&IntWinoEngine> {
         self.int_engine.as_ref()
+    }
+
+    /// Current serving [`EngineMode`] (the fallback ladder rung).
+    pub fn mode(&self) -> EngineMode {
+        EngineMode::from_u8(self.mode.load(Ordering::Relaxed))
+    }
+
+    /// Flip the serving engine — the drift-fallback controller's lever.
+    /// Takes effect on the next [`forward`](Self::forward); in-flight
+    /// passes finish on the engine they started with (both engines stay
+    /// lowered, so the flip is allocation-free and lock-free).
+    pub fn set_mode(&self, mode: EngineMode) {
+        self.mode.store(mode as u8, Ordering::Relaxed);
     }
 
     /// Inject a shared transformed-weight **code** bank (from
@@ -309,13 +398,16 @@ impl WinoConv2d {
     /// **serving path**. Quantized layers with a lowered
     /// [`IntWinoEngine`] execute fully in the integer domain (i16 code
     /// panels, integer channel reduction, one Hadamard requant);
-    /// everything else runs the float [`WinoEngine`]. Allocates a fresh
-    /// workspace; serving loops should prefer
-    /// [`forward_with_scratch`](Self::forward_with_scratch).
+    /// everything else — including a layer degraded off
+    /// [`EngineMode::Int`] by the drift-fallback controller — runs the
+    /// float [`WinoEngine`]. (`Direct` bypass happens at the model's
+    /// dispatch site; from the layer's own entry points `Direct` serves
+    /// the float engine.) Allocates a fresh workspace; serving loops
+    /// should prefer [`forward_with_scratch`](Self::forward_with_scratch).
     pub fn forward(&self, x: &Tensor, cfg: Conv2dCfg) -> Tensor {
         match &self.int_engine {
-            Some(ie) => ie.forward(x, cfg),
-            None => self.engine.forward(x, cfg),
+            Some(ie) if self.mode() == EngineMode::Int => ie.forward(x, cfg),
+            _ => self.engine.forward(x, cfg),
         }
     }
 
@@ -328,8 +420,8 @@ impl WinoConv2d {
         scratch: &mut EngineScratch,
     ) -> Tensor {
         match &self.int_engine {
-            Some(ie) => ie.forward_with(x, cfg, scratch),
-            None => self.engine.forward_with(x, cfg, scratch),
+            Some(ie) if self.mode() == EngineMode::Int => ie.forward_with(x, cfg, scratch),
+            _ => self.engine.forward_with(x, cfg, scratch),
         }
     }
 
@@ -590,6 +682,37 @@ mod tests {
         wide.quantize(QuantConfig::uniform(18), &x, 1);
         assert!(wide.int_engine().is_none());
         assert_eq!(wide.forward(&x, cfg).data, wide.forward_float(&x, cfg).data);
+    }
+
+    #[test]
+    fn engine_mode_flips_dispatch_and_restores() {
+        // The fallback controller's lever: Float mode must force the
+        // fake-quant float engine on a quantized layer, and restoring
+        // Int must bring back the integer path bit-for-bit.
+        let x = prng_tensor(60, &[1, 3, 10, 10], 1.0);
+        let w = prng_tensor(61, &[3, 3, 3, 3], 0.4);
+        let cfg = Conv2dCfg { stride: 1, padding: 1 };
+        let mut layer = WinoConv2d::new(4, &w, Base::Legendre);
+        layer.quantize(QuantConfig::w8_h9(), &x, 1);
+        assert_eq!(layer.mode(), EngineMode::Int);
+        let y_int = layer.forward(&x, cfg);
+        layer.set_mode(EngineMode::Float);
+        assert_eq!(layer.forward(&x, cfg).data, layer.forward_float(&x, cfg).data);
+        let mut scratch = EngineScratch::new();
+        assert_eq!(
+            layer.forward_with_scratch(&x, cfg, &mut scratch).data,
+            layer.forward_float(&x, cfg).data
+        );
+        // Direct from the layer's own entry point also serves float.
+        layer.set_mode(EngineMode::Direct);
+        assert_eq!(layer.forward(&x, cfg).data, layer.forward_float(&x, cfg).data);
+        layer.set_mode(EngineMode::Int);
+        assert_eq!(layer.forward(&x, cfg).data, y_int.data);
+        // Ladder arithmetic: Int → Float → Direct, floor at Direct.
+        assert_eq!(EngineMode::Int.degraded(), EngineMode::Float);
+        assert_eq!(EngineMode::Float.degraded(), EngineMode::Direct);
+        assert_eq!(EngineMode::Direct.degraded(), EngineMode::Direct);
+        assert_eq!(EngineMode::Float.as_str(), "float");
     }
 
     #[test]

@@ -12,16 +12,24 @@
 //!
 //! ```text
 //! submit ──→ (plan_cache hit/miss) ──→ batch ──→ stage ──→ complete
-//!    │
+//!    │                                   │
+//!    │                                   └──→ failed  (worker panic
+//!    │                                         poisoned the batch; the
+//!    │                                         supervisor failed its
+//!    │                                         members and restarted)
 //!    ├──→ reject   (admission refuses: queue_full, unknown_model, …)
 //!    └──→ shed     (scheduler drops a hopeless deadline, with the
 //!                   predicted/deadline/decided numbers that justify it)
 //! ```
 //!
 //! Every submitted span ends in **exactly one** of
-//! `complete`/`reject`/`shed` — the accounting invariant
+//! `complete`/`reject`/`shed`/`failed` — the accounting invariant
 //! ([`TraceSink::accounting`]) that `scripts/ci.sh` gates on and the
 //! property suite in `testkit::soak` pins against the soak report.
+//! Supervision and drift-fallback also emit process-level advisory
+//! events (`worker_restart` on span 0, `fallback_engaged`/
+//! `fallback_cleared` on the sampled span) — all non-terminal, so they
+//! never perturb accounting.
 //!
 //! Events serialize as JSON lines via [`obs::json`](crate::obs::json):
 //! `{"span": 3, "at_us": 120, "event": "submit", ...}` — one object per
@@ -85,6 +93,21 @@ pub enum TraceKind {
     },
     /// Response delivered. Terminal.
     Complete { latency_us: u64, batch_size: u64 },
+    /// The span's batch was poisoned by a worker panic: the supervisor
+    /// failed every member request with `reason` instead of aborting
+    /// the whole queue. Terminal.
+    Failed { reason: String },
+    /// A supervised serve worker came back after a panic: its
+    /// `restarts`-th restart, after `backoff_us` of exponential
+    /// backoff. Process-level (recorded on span 0), non-terminal.
+    WorkerRestart { worker: u64, restarts: u64, backoff_us: u64 },
+    /// The drift circuit breaker stepped `layer` down one engine rung
+    /// (`int` → `float` → `direct`) after persistent drift alerts.
+    /// Non-terminal advisory on the sampled span.
+    FallbackEngaged { layer: String, from: String, to: String },
+    /// The quiet period elapsed: `layer` re-armed back to `to`
+    /// (the fast quantized path). Non-terminal advisory.
+    FallbackCleared { layer: String, to: String },
     /// Shadow-oracle drift check on a sampled span found one layer's
     /// windowed rel-L2 error above its tuned budget. Non-terminal (the
     /// span still completes normally); errors are carried in parts per
@@ -157,6 +180,26 @@ impl TraceEvent {
                 .u64("latency_us", *latency_us)
                 .u64("batch_size", *batch_size)
                 .finish(),
+            TraceKind::Failed { reason } => {
+                head.str("event", "failed").str("reason", reason).finish()
+            }
+            TraceKind::WorkerRestart { worker, restarts, backoff_us } => head
+                .str("event", "worker_restart")
+                .u64("worker", *worker)
+                .u64("restarts", *restarts)
+                .u64("backoff_us", *backoff_us)
+                .finish(),
+            TraceKind::FallbackEngaged { layer, from, to } => head
+                .str("event", "fallback_engaged")
+                .str("layer", layer)
+                .str("from", from)
+                .str("to", to)
+                .finish(),
+            TraceKind::FallbackCleared { layer, to } => head
+                .str("event", "fallback_cleared")
+                .str("layer", layer)
+                .str("to", to)
+                .finish(),
             TraceKind::DriftAlert {
                 layer,
                 m,
@@ -178,11 +221,14 @@ impl TraceEvent {
         }
     }
 
-    /// True for the three lifecycle-ending kinds.
+    /// True for the four lifecycle-ending kinds.
     pub fn is_terminal(&self) -> bool {
         matches!(
             self.kind,
-            TraceKind::Reject { .. } | TraceKind::Shed { .. } | TraceKind::Complete { .. }
+            TraceKind::Reject { .. }
+                | TraceKind::Shed { .. }
+                | TraceKind::Complete { .. }
+                | TraceKind::Failed { .. }
         )
     }
 }
@@ -194,6 +240,9 @@ pub struct SpanAccounting {
     pub completed: u64,
     pub rejected: u64,
     pub shed: u64,
+    /// Spans whose batch was poisoned by a worker panic and failed by
+    /// the supervisor.
+    pub failed: u64,
     /// Every submitted span has exactly one terminal event, and no
     /// terminal event names an unsubmitted span.
     pub exact: bool,
@@ -234,6 +283,9 @@ pub trait TraceSink {
                 TraceKind::Complete { .. } => {
                     terminals.entry(ev.span).or_default().push("complete")
                 }
+                TraceKind::Failed { .. } => {
+                    terminals.entry(ev.span).or_default().push("failed")
+                }
                 _ => {}
             }
         }
@@ -250,11 +302,12 @@ pub trait TraceSink {
                 Some(["reject"]) => acc.rejected += 1,
                 Some(["shed"]) => acc.shed += 1,
                 Some(["complete"]) => acc.completed += 1,
+                Some(["failed"]) => acc.failed += 1,
                 _ => acc.exact = false,
             }
         }
-        acc.exact &=
-            acc.submitted == acc.completed + acc.rejected + acc.shed;
+        acc.exact &= acc.submitted
+            == acc.completed + acc.rejected + acc.shed + acc.failed;
         acc
     }
 }
@@ -408,6 +461,9 @@ impl TraceSink for Tracer {
                 TraceKind::Complete { .. } => {
                     terminals.entry(ev.span).or_default().push("complete")
                 }
+                TraceKind::Failed { .. } => {
+                    terminals.entry(ev.span).or_default().push("failed")
+                }
                 _ => {}
             }
         }
@@ -424,6 +480,7 @@ impl TraceSink for Tracer {
                 Some(["reject"]) => acc.rejected += 1,
                 Some(["shed"]) => acc.shed += 1,
                 Some(["complete"]) => acc.completed += 1,
+                Some(["failed"]) => acc.failed += 1,
                 None => dangling += 1,
                 _ => acc.exact = false,
             }
@@ -431,7 +488,7 @@ impl TraceSink for Tracer {
         // Each dropped terminal explains at most one dangling span.
         acc.exact &= dangling <= self.dropped_terminal();
         acc.exact &= acc.submitted
-            == acc.completed + acc.rejected + acc.shed + dangling;
+            == acc.completed + acc.rejected + acc.shed + acc.failed + dangling;
         acc
     }
 }
@@ -536,9 +593,81 @@ mod tests {
                 completed: 1,
                 rejected: 1,
                 shed: 1,
+                failed: 0,
                 exact: true
             }
         );
+    }
+
+    #[test]
+    fn failed_is_terminal_and_accounted() {
+        let ev = TraceEvent {
+            span: 4,
+            at_us: 70,
+            kind: TraceKind::Failed { reason: "worker panic: chaos".into() },
+        };
+        assert!(ev.is_terminal(), "failed must close the span");
+        let line = ev.to_json_line();
+        assert!(line.starts_with("{\"span\": 4, \"at_us\": 70, \"event\": \"failed\""));
+        let doc = crate::tune::json::parse(&line).unwrap();
+        assert_eq!(
+            doc.get("reason").and_then(crate::tune::json::Json::as_str),
+            Some("worker panic: chaos")
+        );
+        let mut log = TraceLog::new();
+        log.record(4, 0, submit());
+        log.record(4, 50, TraceKind::Batch { size: 2, predicted_us: 40 });
+        log.record(4, 70, ev.kind.clone());
+        let acc = log.accounting();
+        assert!(acc.exact, "{acc:?}");
+        assert_eq!((acc.submitted, acc.failed, acc.completed), (1, 1, 0));
+        // failed + complete on one span is a double terminal.
+        log.record(4, 80, TraceKind::Complete { latency_us: 80, batch_size: 1 });
+        assert!(!log.accounting().exact, "double terminal must not be exact");
+    }
+
+    #[test]
+    fn supervision_events_are_non_terminal_and_render_house_style() {
+        let restart = TraceEvent {
+            span: 0,
+            at_us: 900,
+            kind: TraceKind::WorkerRestart { worker: 2, restarts: 1, backoff_us: 200 },
+        };
+        assert!(!restart.is_terminal());
+        assert!(restart
+            .to_json_line()
+            .starts_with("{\"span\": 0, \"at_us\": 900, \"event\": \"worker_restart\""));
+        let engaged = TraceEvent {
+            span: 16,
+            at_us: 1000,
+            kind: TraceKind::FallbackEngaged {
+                layer: "stem".into(),
+                from: "int".into(),
+                to: "float".into(),
+            },
+        };
+        assert!(!engaged.is_terminal());
+        let line = engaged.to_json_line();
+        assert!(line.contains("\"event\": \"fallback_engaged\""), "{line}");
+        let doc = crate::tune::json::parse(&line).unwrap();
+        assert_eq!(doc.get("to").and_then(crate::tune::json::Json::as_str), Some("float"));
+        let cleared = TraceEvent {
+            span: 16,
+            at_us: 5000,
+            kind: TraceKind::FallbackCleared { layer: "stem".into(), to: "int".into() },
+        };
+        assert!(!cleared.is_terminal());
+        assert!(cleared.to_json_line().contains("\"event\": \"fallback_cleared\""));
+        // Interleaved with a normal lifecycle the accounting stays exact
+        // (worker_restart rides the reserved span 0, which is never
+        // submitted and never terminal, so it cannot dangle).
+        let mut log = TraceLog::new();
+        log.record(0, 900, restart.kind.clone());
+        log.record(16, 0, submit());
+        log.record(16, 1000, engaged.kind.clone());
+        log.record(16, 5000, cleared.kind.clone());
+        log.record(16, 6000, TraceKind::Complete { latency_us: 6000, batch_size: 1 });
+        assert!(log.accounting().exact);
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Drift-triggered graceful degradation: a per-layer circuit breaker
+//! over the engine fallback ladder `int → float → direct`.
+//!
+//! The paper's accuracy/speed trade is a *runtime* property: a layer
+//! tuned to a quantized Winograd operating point is fast while its
+//! activations stay inside the calibrated range, and silently wrong the
+//! moment traffic drifts out of it. The
+//! [`DriftMonitor`](crate::obs::drift::DriftMonitor) detects that
+//! (shadow-oracle rel-L2 vs the NetPlan budget); this module *acts* on
+//! it. Each sampled observation feeds
+//! [`FallbackController::note`] with a per-layer over-budget verdict:
+//!
+//! * `alerts_to_degrade` consecutive over-budget observations trip the
+//!   breaker one rung down the ladder
+//!   ([`EngineMode::degraded`](crate::nn::EngineMode::degraded)) and
+//!   emit a [`FallbackEngaged`](TraceKind::FallbackEngaged) event;
+//!   continued violations walk further, to the direct-conv floor.
+//! * `quiet_to_restore` consecutive in-budget observations on a
+//!   degraded layer re-arm it all the way back to
+//!   [`EngineMode::Int`](crate::nn::EngineMode::Int) (the tuned path)
+//!   and emit [`FallbackCleared`](TraceKind::FallbackCleared) — the
+//!   half-open probe of a classic circuit breaker: if the restored
+//!   quantized path drifts again, the breaker simply re-trips.
+//!
+//! The controller is pure policy: it decides mode transitions; the
+//! caller (the serve worker loop) applies them through
+//! [`BatchModel::set_layer_mode`](super::BatchModel::set_layer_mode)
+//! and publishes the [`degraded`](FallbackController::degraded) count
+//! as the `serve.degraded` gauge. Counting *sampled observations*
+//! (not the monitor's deduplicated per-window alert events) keeps the
+//! breaker responsive at any window length — a CI-sized run whose whole
+//! life fits in one drift window still accumulates a streak.
+
+use crate::nn::EngineMode;
+use crate::obs::drift::{rel_err_to_ppb, DriftMonitor, DriftSample};
+use crate::obs::TraceKind;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Circuit-breaker thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct FallbackConfig {
+    /// Consecutive over-budget sampled observations on one layer that
+    /// trip the breaker one rung down the ladder.
+    pub alerts_to_degrade: u32,
+    /// Consecutive in-budget sampled observations on a degraded layer
+    /// that restore it to the quantized path.
+    pub quiet_to_restore: u32,
+}
+
+impl Default for FallbackConfig {
+    fn default() -> FallbackConfig {
+        FallbackConfig { alerts_to_degrade: 2, quiet_to_restore: 16 }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct LayerBreaker {
+    mode: EngineMode,
+    /// Consecutive over-budget observations since the last transition.
+    streak: u32,
+    /// Consecutive in-budget observations since the last violation.
+    quiet: u32,
+}
+
+impl Default for LayerBreaker {
+    fn default() -> LayerBreaker {
+        LayerBreaker { mode: EngineMode::Int, streak: 0, quiet: 0 }
+    }
+}
+
+/// Per-layer breaker state shared by every serve worker (one mutex,
+/// touched only on the drift-sampled subset of spans).
+#[derive(Default)]
+pub struct FallbackController {
+    cfg: FallbackConfig,
+    layers: Mutex<BTreeMap<String, LayerBreaker>>,
+}
+
+impl FallbackController {
+    pub fn new(cfg: FallbackConfig) -> FallbackController {
+        assert!(cfg.alerts_to_degrade > 0, "alerts_to_degrade must be positive");
+        assert!(cfg.quiet_to_restore > 0, "quiet_to_restore must be positive");
+        FallbackController { cfg, layers: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn config(&self) -> &FallbackConfig {
+        &self.cfg
+    }
+
+    /// Feed one sampled observation for `layer`. Returns the mode the
+    /// layer should now run in plus the trace event to record, when
+    /// this observation crossed a threshold; `None` when the breaker
+    /// state merely advanced. The caller applies the returned mode via
+    /// `BatchModel::set_layer_mode` — the controller never touches
+    /// engines itself.
+    pub fn note(&self, layer: &str, violated: bool) -> Option<(EngineMode, TraceKind)> {
+        let mut layers = self.layers.lock().unwrap();
+        let st = layers.entry(layer.to_string()).or_default();
+        if violated {
+            st.quiet = 0;
+            st.streak += 1;
+            if st.streak < self.cfg.alerts_to_degrade {
+                return None;
+            }
+            st.streak = 0;
+            if st.mode == EngineMode::Direct {
+                return None; // already at the ladder's floor
+            }
+            let from = st.mode;
+            st.mode = from.degraded();
+            return Some((
+                st.mode,
+                TraceKind::FallbackEngaged {
+                    layer: layer.to_string(),
+                    from: from.as_str().to_string(),
+                    to: st.mode.as_str().to_string(),
+                },
+            ));
+        }
+        st.streak = 0;
+        if st.mode == EngineMode::Int {
+            return None; // healthy layer, nothing to restore
+        }
+        st.quiet += 1;
+        if st.quiet < self.cfg.quiet_to_restore {
+            return None;
+        }
+        st.quiet = 0;
+        st.mode = EngineMode::Int;
+        Some((
+            EngineMode::Int,
+            TraceKind::FallbackCleared {
+                layer: layer.to_string(),
+                to: EngineMode::Int.as_str().to_string(),
+            },
+        ))
+    }
+
+    /// The per-sample over-budget verdict [`note`](Self::note) consumes:
+    /// the sample's instantaneous rel-L2, in ppb, against the monitor's
+    /// headroom-scaled budget for that layer. Layers without a tuned
+    /// anchor never count as violated (report-only, like the monitor).
+    pub fn violated(dm: &DriftMonitor, sample: &DriftSample) -> bool {
+        dm.budget_ppb(&sample.layer)
+            .is_some_and(|budget| rel_err_to_ppb(sample.rel_err) > budget)
+    }
+
+    /// Layers currently serving off the quantized path — the
+    /// `serve.degraded` gauge.
+    pub fn degraded(&self) -> u64 {
+        let layers = self.layers.lock().unwrap();
+        layers.values().filter(|st| st.mode != EngineMode::Int).count() as u64
+    }
+
+    /// Current breaker mode for `layer` (never-observed layers are
+    /// healthy).
+    pub fn mode(&self, layer: &str) -> EngineMode {
+        let layers = self.layers.lock().unwrap();
+        layers.get(layer).map_or(EngineMode::Int, |st| st.mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrades_after_streak_and_walks_the_ladder() {
+        let fb = FallbackController::new(FallbackConfig {
+            alerts_to_degrade: 2,
+            quiet_to_restore: 3,
+        });
+        assert!(fb.note("stem", true).is_none(), "one violation is not a streak");
+        let (mode, ev) = fb.note("stem", true).expect("second violation trips");
+        assert_eq!(mode, EngineMode::Float);
+        match ev {
+            TraceKind::FallbackEngaged { layer, from, to } => {
+                assert_eq!((layer.as_str(), from.as_str(), to.as_str()), ("stem", "int", "float"));
+            }
+            other => panic!("expected FallbackEngaged, got {other:?}"),
+        }
+        assert_eq!(fb.degraded(), 1);
+        // Two more violations walk to the floor...
+        assert!(fb.note("stem", true).is_none());
+        let (mode, _) = fb.note("stem", true).unwrap();
+        assert_eq!(mode, EngineMode::Direct);
+        // ...and the floor absorbs further violations silently.
+        assert!(fb.note("stem", true).is_none());
+        assert!(fb.note("stem", true).is_none());
+        assert_eq!(fb.mode("stem"), EngineMode::Direct);
+        assert_eq!(fb.degraded(), 1, "one layer, however many rungs down");
+    }
+
+    #[test]
+    fn quiet_period_restores_and_violations_reset_it() {
+        let fb = FallbackController::new(FallbackConfig {
+            alerts_to_degrade: 1,
+            quiet_to_restore: 3,
+        });
+        fb.note("s0b0.conv1", true).expect("threshold 1 trips immediately");
+        assert_eq!(fb.mode("s0b0.conv1"), EngineMode::Float);
+        // Quiet, quiet — then a violation resets the quiet streak (and
+        // at threshold 1 immediately degrades another rung).
+        assert!(fb.note("s0b0.conv1", false).is_none());
+        assert!(fb.note("s0b0.conv1", false).is_none());
+        let (mode, _) = fb.note("s0b0.conv1", true).unwrap();
+        assert_eq!(mode, EngineMode::Direct);
+        // Three consecutive quiet observations restore fully to Int.
+        assert!(fb.note("s0b0.conv1", false).is_none());
+        assert!(fb.note("s0b0.conv1", false).is_none());
+        let (mode, ev) = fb.note("s0b0.conv1", false).expect("third quiet restores");
+        assert_eq!(mode, EngineMode::Int);
+        match ev {
+            TraceKind::FallbackCleared { layer, to } => {
+                assert_eq!((layer.as_str(), to.as_str()), ("s0b0.conv1", "int"));
+            }
+            other => panic!("expected FallbackCleared, got {other:?}"),
+        }
+        assert_eq!(fb.degraded(), 0);
+        // A healthy layer accumulates no quiet state and never "restores".
+        for _ in 0..10 {
+            assert!(fb.note("healthy", false).is_none());
+        }
+        assert_eq!(fb.mode("healthy"), EngineMode::Int);
+    }
+
+    #[test]
+    fn layers_trip_independently() {
+        let fb = FallbackController::new(FallbackConfig {
+            alerts_to_degrade: 1,
+            quiet_to_restore: 8,
+        });
+        fb.note("a", true).unwrap();
+        fb.note("b", true).unwrap();
+        assert!(fb.note("c", false).is_none());
+        assert_eq!(fb.degraded(), 2);
+        assert_eq!(fb.mode("a"), EngineMode::Float);
+        assert_eq!(fb.mode("c"), EngineMode::Int);
+    }
+
+    #[test]
+    fn violated_compares_instantaneous_rel_err_to_the_budget() {
+        use crate::obs::drift::DriftConfig;
+        let mut dm = DriftMonitor::new(DriftConfig::default());
+        dm.set_budget("stem", Some(0.001)); // budget = 0.001 × headroom 4
+        let sample = |layer: &str, rel_err: f64| DriftSample {
+            layer: layer.to_string(),
+            m: 4,
+            base: crate::wino::basis::Base::Legendre,
+            weight_bits: 8,
+            hadamard_bits: 9,
+            rel_err,
+        };
+        assert!(FallbackController::violated(&dm, &sample("stem", 0.5)));
+        assert!(!FallbackController::violated(&dm, &sample("stem", 0.002)));
+        // No tuned anchor → report-only, never violated.
+        assert!(!FallbackController::violated(&dm, &sample("unplanned", 9.0)));
+    }
+}

@@ -60,6 +60,7 @@
 //!   than one exact shape, and per-shape tile geometry is cached in the
 //!   [`PlanCache`] keyed `(model, h, w)`.
 
+pub mod fallback;
 pub mod plan;
 pub mod queue;
 pub mod registry;
@@ -67,9 +68,11 @@ pub mod sched;
 pub mod shard;
 pub mod stats;
 
+pub use fallback::{FallbackConfig, FallbackController};
 pub use plan::{PlanCache, PlanKey};
 pub use queue::{
-    DrainedBatch, Rejected, Request, Response, ServeQueue, ServeResult, ShapePolicy,
+    DrainedBatch, Rejected, Request, Response, ServeError, ServeQueue, ServeResult,
+    ShapePolicy,
 };
 pub use registry::{ModelRegistry, ServedModel};
 pub use sched::{admission_caps, Poll, Priority, SchedItem, Scheduler, Shed, SubmitOpts};
@@ -79,9 +82,12 @@ pub use stats::{ServeStats, StatsReport};
 use crate::engine::{EngineScratch, WinoEngine};
 use crate::nn::layers::Conv2dCfg;
 use crate::nn::tensor::Tensor;
+use crate::nn::EngineMode;
 use crate::obs::drift::{DriftMonitor, DriftSample};
 use crate::obs::{TraceKind, Tracer};
+use crate::testkit::chaos::{Fault, FaultPlan};
 use crate::tune::cost::TileCostModel;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -133,6 +139,16 @@ pub trait BatchModel: Sync {
     /// oracle path, e.g. single-engine test models) reports nothing.
     fn drift_probe(&self, _item: &Tensor) -> Vec<DriftSample> {
         Vec::new()
+    }
+
+    /// Flip one named layer onto a fallback-ladder rung (the
+    /// [`FallbackController`]'s lever). Must be safe to call while other
+    /// workers are serving (the registry model backs it with an atomic
+    /// per layer). Returns `false` when the model has no layer by that
+    /// name or no alternative engine — the default, for single-engine
+    /// test models, which therefore never degrade.
+    fn set_layer_mode(&self, _layer: &str, _mode: EngineMode) -> bool {
+        false
     }
 }
 
@@ -210,15 +226,117 @@ impl Drop for CloseOnDrop<'_> {
     }
 }
 
-/// Aborts the queue if the owning thread is unwinding — a dead worker
-/// must not leave clients blocked on responses that will never come.
-struct AbortOnPanic<'a>(&'a ServeQueue);
+/// Supervisor restart budget and backoff schedule for one worker
+/// thread. A panicking batch costs one restart; the budget bounds how
+/// many a single worker may consume over a session, so a deterministic
+/// model bug (every batch panics) degenerates into today's fail-fast
+/// abort instead of an infinite crash loop.
+#[derive(Clone, Copy, Debug)]
+pub struct RestartPolicy {
+    /// Restarts a worker may consume before the supervisor gives up,
+    /// aborts the queue and re-raises the panic.
+    pub max_restarts: u32,
+    /// Backoff before the first restart, microseconds.
+    pub backoff_base_us: u64,
+    /// Backoff ceiling (the doubling stops here).
+    pub backoff_cap_us: u64,
+}
 
-impl Drop for AbortOnPanic<'_> {
-    fn drop(&mut self) {
-        if std::thread::panicking() {
-            self.0.abort();
+impl Default for RestartPolicy {
+    fn default() -> RestartPolicy {
+        RestartPolicy { max_restarts: 5, backoff_base_us: 200, backoff_cap_us: 20_000 }
+    }
+}
+
+impl RestartPolicy {
+    /// Backoff before the `restarts`-th consecutive restart (1-based):
+    /// exponential from the base, capped.
+    pub fn backoff_us(&self, restarts: u32) -> u64 {
+        let base = self.backoff_base_us.max(1);
+        (base << (restarts.saturating_sub(1)).min(20)).min(self.backoff_cap_us.max(base))
+    }
+}
+
+/// The serving stack's resilience wiring: the supervisor's restart
+/// policy, an optional seeded fault plan (chaos testing) and an
+/// optional drift-fallback controller. `Default` is production posture:
+/// bounded restarts, no injected faults, no fallback (attach a
+/// controller whenever a [`DriftMonitor`] is attached).
+#[derive(Clone, Default)]
+pub struct Resilience {
+    pub restart: RestartPolicy,
+    /// Seeded fault schedule dealt to worker batches (`--chaos-*`).
+    pub chaos: Option<Arc<FaultPlan>>,
+    /// Per-layer circuit breaker fed by drift samples.
+    pub fallback: Option<Arc<FallbackController>>,
+}
+
+/// Best-effort panic payload rendering for `Failed{reason}`.
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One supervised worker: run [`worker_loop`] as a logical worker on
+/// this thread, catching panics. Each panic has already failed exactly
+/// its poisoned batch (see the failure path in `worker_loop`); the
+/// supervisor's job is the *worker lifecycle* — count the restart,
+/// stamp a `worker_restart` event on the reserved span 0, replenish any
+/// engine-pool threads the unwind may have quenched, back off, and run
+/// a fresh logical worker. Budget exhausted ⇒ abort the queue (pending
+/// submitters fail fast, new submissions see `Rejected::Closed`) and
+/// re-raise the panic so the session's caller still observes it.
+pub(crate) fn supervised_worker(
+    worker: u64,
+    model: &dyn BatchModel,
+    queue: &ServeQueue,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    drift: Option<&DriftMonitor>,
+    res: &Resilience,
+) {
+    let mut restarts: u32 = 0;
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(
+                model,
+                queue,
+                cfg,
+                stats,
+                drift,
+                res.chaos.as_deref(),
+                res.fallback.as_deref(),
+            );
+        }));
+        let payload = match run {
+            Ok(()) => return, // queue closed and drained: clean exit
+            Err(payload) => payload,
+        };
+        restarts += 1;
+        if restarts > res.restart.max_restarts {
+            // Fail-fast backstop: the pre-supervision behavior.
+            queue.abort();
+            resume_unwind(payload);
         }
+        let backoff_us = res.restart.backoff_us(restarts);
+        stats.record_worker_restart();
+        if let Some(tr) = queue.tracer() {
+            // Span 0 is the reserved "untraced" span: worker lifecycle
+            // events are process-level, not request-level, and span 0 is
+            // never submitted so accounting stays exact.
+            tr.record(
+                0,
+                queue.now_us(),
+                TraceKind::WorkerRestart { worker, restarts: restarts as u64, backoff_us },
+            );
+        }
+        crate::engine::pool::replenish();
+        std::thread::sleep(Duration::from_micros(backoff_us));
     }
 }
 
@@ -267,6 +385,26 @@ pub fn with_server_observed<R>(
     drift: Option<&DriftMonitor>,
     client: impl FnOnce(&ServeQueue) -> R,
 ) -> R {
+    with_server_resilient(model, cfg, stats, tracer, drift, &Resilience::default(), client)
+}
+
+/// The full-fat session entry: [`with_server_observed`] plus an explicit
+/// [`Resilience`] (restart policy, chaos plan, fallback controller).
+/// Every other `with_server*` variant delegates here with
+/// `Resilience::default()`, so **all** serving sessions run supervised:
+/// a worker panic fails only its poisoned batch
+/// ([`ServeError::Failed`]), the worker restarts with exponential
+/// backoff, and only an exhausted restart budget aborts the queue and
+/// re-raises the panic.
+pub fn with_server_resilient<R>(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    tracer: Option<Arc<Tracer>>,
+    drift: Option<&DriftMonitor>,
+    res: &Resilience,
+    client: impl FnOnce(&ServeQueue) -> R,
+) -> R {
     // Shape-validating queue: malformed submissions are rejected at
     // admission instead of reaching (and panicking) a worker. Plain
     // `submit` calls carry the model's nominal tile weight into the
@@ -281,26 +419,31 @@ pub fn with_server_observed<R>(
     // request is admitted, so no batch ever eats it as latency.
     crate::engine::pool::warm();
     std::thread::scope(|scope| {
-        for _ in 0..cfg.workers.max(1) {
-            scope.spawn(|| {
-                let _guard = AbortOnPanic(&queue);
-                worker_loop(model, &queue, cfg, stats, drift);
-            });
+        let q = &queue;
+        for worker in 0..cfg.workers.max(1) as u64 {
+            scope.spawn(move || supervised_worker(worker, model, q, cfg, stats, drift, res));
         }
-        let _close = CloseOnDrop(&queue);
-        client(&queue)
+        let _close = CloseOnDrop(q);
+        client(q)
     })
 }
 
-/// One worker: drain micro-batches per the scheduler's policy, deliver
-/// shed notices, stack the batch, run the engine pass, split and answer.
-/// Owns its [`EngineScratch`] for the whole session.
+/// One logical worker: drain micro-batches per the scheduler's policy,
+/// deliver shed notices, stack the batch, run the engine pass, split
+/// and answer. Owns its [`EngineScratch`] for its lifetime (a restart
+/// gets a fresh one). A panic inside the engine pass — injected by the
+/// chaos plan or genuine — fails exactly the poisoned batch's requests
+/// ([`ServeError::Failed`], `failed` trace terminals, `serve.failed`)
+/// and then re-raises for the supervisor to handle the worker
+/// lifecycle.
 pub(crate) fn worker_loop(
     model: &dyn BatchModel,
     queue: &ServeQueue,
     cfg: &ServeConfig,
     stats: &ServeStats,
     drift: Option<&DriftMonitor>,
+    chaos: Option<&FaultPlan>,
+    fallback: Option<&FallbackController>,
 ) {
     let mut scratch = EngineScratch::new();
     let window = Duration::from_micros(cfg.batch_window_us);
@@ -312,11 +455,26 @@ pub(crate) fn worker_loop(
             if let Some(tr) = queue.tracer() {
                 tr.record(req.span, queue.now_us(), why.trace_event());
             }
-            let _ = req.tx.send(Err(why));
+            let _ = req.tx.send(Err(ServeError::Shed(why)));
         }
-        let batch = drained.batch;
+        let mut batch = drained.batch;
         if batch.is_empty() {
             continue;
+        }
+        // Chaos: only real batches consume schedule indices, so the
+        // dealt fault sequence is the schedule's prefix regardless of
+        // how polls interleave. Corruption mutates the stacked inputs
+        // *and* what the drift probe later sees — the resulting alerts
+        // are genuine out-of-distribution measurements.
+        let fault = chaos.and_then(|c| c.next_fault());
+        match fault {
+            Some(Fault::Latency { us }) => std::thread::sleep(Duration::from_micros(us)),
+            Some(Fault::Corrupt { scale }) => {
+                for req in &mut batch {
+                    crate::testkit::chaos::corrupt_tensor(&mut req.input, scale);
+                }
+            }
+            _ => {}
         }
         let busy_started = Instant::now();
         let depth_after_drain = queue.depth();
@@ -354,7 +512,32 @@ pub(crate) fn worker_loop(
                 );
             }
         }
-        let y = model.infer_batch(&Tensor::from_vec(&dims, data), &mut scratch);
+        // The poisoned-batch boundary: a panic below this line (chaos
+        // or genuine) must not strand the batch's clients. Fail exactly
+        // these requests with a typed terminal, then re-raise so the
+        // supervisor restarts the worker.
+        let stacked = Tensor::from_vec(&dims, data);
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            if fault == Some(Fault::Panic) {
+                panic!("chaos: injected worker panic");
+            }
+            model.infer_batch(&stacked, &mut scratch)
+        }));
+        let y = match run {
+            Ok(y) => y,
+            Err(payload) => {
+                let reason = format!("worker panic: {}", panic_reason(payload.as_ref()));
+                stats.record_failed(bsz as u64);
+                let at = queue.now_us();
+                for req in batch {
+                    if let Some(tr) = queue.tracer() {
+                        tr.record(req.span, at, TraceKind::Failed { reason: reason.clone() });
+                    }
+                    let _ = req.tx.send(Err(ServeError::Failed { reason: reason.clone() }));
+                }
+                resume_unwind(payload);
+            }
+        };
         assert_eq!(y.dims[0], bsz, "model must preserve the batch axis");
         // Per-stage engine breakdown for this batch (accumulated in the
         // worker's scratch across every layer of the pass) — the stats
@@ -390,6 +573,9 @@ pub(crate) fn worker_loop(
             // Shadow-oracle drift check on the sampled subset: a pure
             // span-stride rule (zero PRNG draws), stamped before the
             // span's terminal event so alerts sit inside the lifecycle.
+            // The same samples feed the fallback circuit breaker, which
+            // may flip a layer's engine mode right here (taking effect
+            // from the next batch onward).
             if let Some(dm) = drift {
                 if dm.should_sample(req.span) {
                     let samples = model.drift_probe(&req.input);
@@ -398,6 +584,19 @@ pub(crate) fn worker_loop(
                     if let Some(tr) = queue.tracer() {
                         for kind in alerts {
                             tr.record(req.span, at, kind);
+                        }
+                    }
+                    if let Some(fb) = fallback {
+                        for s in &samples {
+                            let violated = FallbackController::violated(dm, s);
+                            let Some((mode, event)) = fb.note(&s.layer, violated) else {
+                                continue;
+                            };
+                            model.set_layer_mode(&s.layer, mode);
+                            stats.set_degraded(fb.degraded());
+                            if let Some(tr) = queue.tracer() {
+                                tr.record(req.span, at, event);
+                            }
                         }
                     }
                 }
@@ -475,8 +674,9 @@ pub fn run_closed_loop_with(
     run_closed_loop_observed(model, cfg, stats, inputs, total_requests, concurrency, tracer, None)
 }
 
-/// [`run_closed_loop_with`] plus an optional [`DriftMonitor`] — the
-/// full-fat entry the CLI's `--drift-json` path drives.
+/// [`run_closed_loop_with`] plus an optional [`DriftMonitor`] — what
+/// pre-resilience callers (the drift suite) drive. Default
+/// [`Resilience`]: supervised, no chaos, no fallback.
 #[allow(clippy::too_many_arguments)]
 pub fn run_closed_loop_observed(
     model: &dyn BatchModel,
@@ -488,10 +688,41 @@ pub fn run_closed_loop_observed(
     tracer: Option<Arc<Tracer>>,
     drift: Option<&DriftMonitor>,
 ) -> StatsReport {
+    run_closed_loop_resilient(
+        model,
+        cfg,
+        stats,
+        inputs,
+        total_requests,
+        concurrency,
+        tracer,
+        drift,
+        &Resilience::default(),
+    )
+}
+
+/// The full closed-loop entry — [`run_closed_loop_observed`] with an
+/// explicit [`Resilience`]; what `winoq serve --chaos-*` drives. A
+/// request answered with [`ServeError::Failed`] counts as consumed by
+/// the closed loop (it reached a terminal), so the loop always
+/// finishes and `submitted == completed + rejected + shed + failed`
+/// holds in the report.
+#[allow(clippy::too_many_arguments)]
+pub fn run_closed_loop_resilient(
+    model: &dyn BatchModel,
+    cfg: &ServeConfig,
+    stats: &ServeStats,
+    inputs: &[Tensor],
+    total_requests: usize,
+    concurrency: usize,
+    tracer: Option<Arc<Tracer>>,
+    drift: Option<&DriftMonitor>,
+    res: &Resilience,
+) -> StatsReport {
     assert!(!inputs.is_empty(), "need at least one input to serve");
     let started = Instant::now();
     let next = AtomicUsize::new(0);
-    with_server_observed(model, cfg, stats, tracer, drift, |queue| {
+    with_server_resilient(model, cfg, stats, tracer, drift, res, |queue| {
         std::thread::scope(|s| {
             for _ in 0..concurrency.max(1) {
                 s.spawn(|| loop {
@@ -605,7 +836,7 @@ mod tests {
     }
 
     #[test]
-    fn dead_worker_fails_fast_instead_of_hanging() {
+    fn dead_worker_fails_its_batch_then_restart_budget_aborts() {
         let stats = ServeStats::new();
         let cfg =
             ServeConfig { max_batch: 2, batch_window_us: 100, queue_cap: 4, ..Default::default() };
@@ -613,11 +844,17 @@ mod tests {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             with_server(&PanickingModel, &cfg, &stats, |queue| {
                 let rx = queue.submit(item()).unwrap();
-                // The worker dies on this batch: the response channel must
-                // error out rather than block forever...
-                assert!(rx.recv().is_err());
-                // ...and the queue must transition to Closed (the dying
-                // worker aborts it), never stranding later submitters.
+                // Supervision fails only the poisoned batch: the channel
+                // delivers a typed error instead of hanging up.
+                match rx.recv().expect("failed batches still answer") {
+                    Err(ServeError::Failed { reason }) => {
+                        assert!(reason.contains("model exploded"), "reason: {reason}");
+                    }
+                    other => panic!("expected ServeError::Failed, got {other:?}"),
+                }
+                // Every restarted incarnation dies too; once the restart
+                // budget exhausts, the queue transitions to Closed (the
+                // fail-fast backstop), never stranding later submitters.
                 loop {
                     match queue.submit(item()) {
                         Err(Rejected::Closed) => break,
@@ -629,7 +866,73 @@ mod tests {
                 }
             });
         }));
-        assert!(result.is_err(), "the worker's panic must propagate, not vanish");
+        assert!(result.is_err(), "the worker's final panic must propagate, not vanish");
+        assert_eq!(
+            stats.worker_restarts(),
+            RestartPolicy::default().max_restarts as u64,
+            "the supervisor must spend its whole restart budget before aborting"
+        );
+        assert!(stats.failed() >= 1, "the poisoned batch's requests count as failed");
+    }
+
+    /// A model that panics exactly once, then serves identity responses —
+    /// the supervisor must restart the worker and later requests must
+    /// complete normally.
+    struct FlakyModel {
+        blown: std::sync::atomic::AtomicBool,
+    }
+
+    impl BatchModel for FlakyModel {
+        fn input_dims(&self) -> &[usize] {
+            &[1, 2, 2]
+        }
+
+        fn infer_batch(&self, batch: &Tensor, _scratch: &mut EngineScratch) -> Tensor {
+            if !self.blown.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                panic!("transient fault");
+            }
+            batch.clone()
+        }
+
+        fn tiles_per_item(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn supervisor_restarts_worker_and_serving_recovers() {
+        let stats = ServeStats::new();
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window_us: 100,
+            queue_cap: 4,
+            ..Default::default()
+        };
+        let model = FlakyModel { blown: std::sync::atomic::AtomicBool::new(false) };
+        let item = || Tensor::from_vec(&[1, 2, 2], vec![1.0; 4]);
+        with_server(&model, &cfg, &stats, |queue| {
+            // First request poisons its batch...
+            let rx = queue.submit(item()).unwrap();
+            assert!(matches!(
+                rx.recv().expect("failed batches still answer"),
+                Err(ServeError::Failed { .. })
+            ));
+            // ...and after the supervised restart the next requests serve.
+            for _ in 0..3 {
+                let rx = queue.submit(item()).unwrap();
+                let resp = rx.recv().expect("restarted worker serves").expect("no shed");
+                assert_eq!(resp.output.dims, vec![1, 2, 2]);
+            }
+        });
+        assert_eq!(stats.worker_restarts(), 1, "exactly one restart for one transient fault");
+        assert_eq!(stats.failed(), 1);
+        let report = stats.report(0.01);
+        assert_eq!(report.completed, 3);
+        assert_eq!(
+            report.submitted,
+            report.completed + report.rejected + report.shed + report.failed,
+            "accounting stays exact across the restart"
+        );
     }
 
     #[test]

@@ -76,10 +76,45 @@ impl std::fmt::Display for Rejected {
 
 impl std::error::Error for Rejected {}
 
-/// What a response channel yields: the inference result, or the
-/// scheduler's justified decision to shed the request because its
-/// predicted cost could not meet its deadline.
-pub type ServeResult = Result<Response, Shed>;
+/// Terminal failure for an *admitted* request: either the scheduler's
+/// justified decision to shed it (predicted cost could not meet its
+/// deadline), or the supervisor failing it because the worker running
+/// its micro-batch panicked (the batch is poisoned; the rest of the
+/// queue keeps serving). `Failed` is what replaced the old
+/// abort-the-world panic path — the blast radius of a worker panic is
+/// exactly the batch it was executing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Shed by the scheduler, with the predicted-cost justification.
+    Shed(Shed),
+    /// The micro-batch carrying this request was poisoned by a worker
+    /// panic; `reason` is the panic payload (when it was a string).
+    Failed {
+        /// Human-readable panic payload, e.g. `"worker panic: chaos"`.
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed(shed) => write!(
+                f,
+                "request shed: predicted {} µs at {} µs misses deadline {} µs",
+                shed.predicted_us, shed.decided_us, shed.deadline_us
+            ),
+            ServeError::Failed { reason } => {
+                write!(f, "request failed: batch poisoned by worker panic ({reason})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a response channel yields: the inference result, or a terminal
+/// [`ServeError`] (shed by the scheduler, or failed by the supervisor).
+pub type ServeResult = Result<Response, ServeError>;
 
 /// Admission-time shape validation policy.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -584,8 +619,8 @@ mod tests {
         let (req, why) = &drained.shed[0];
         assert!(why.decided_us + why.predicted_us > why.deadline_us);
         // The worker (here: us) delivers the shed notice to the client.
-        req.tx.send(Err(*why)).unwrap();
-        assert_eq!(rx.recv().unwrap().unwrap_err(), *why);
+        req.tx.send(Err(ServeError::Shed(*why))).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Shed(*why));
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::engine::EngineScratch;
 use crate::nn::layers::Conv2dCfg;
 use crate::nn::tensor::Tensor;
 use crate::nn::winolayer::WinoConv2d;
-use crate::nn::{ConvMode, Params, ResNet18, ResNetCfg};
+use crate::nn::{ConvMode, EngineMode, Params, ResNet18, ResNetCfg};
 use crate::obs::drift::DriftSample;
 use crate::runtime::manifest::Manifest;
 use crate::tune::cost::{direct_conv_f64, rel_l2};
@@ -99,6 +99,21 @@ impl BatchModel for ServedModel {
 
     fn plan_cache_probe(&self, h: usize, w: usize) -> Option<bool> {
         Some(self.plans.has_shape(&self.name, h, w))
+    }
+
+    /// Drift-fallback hook: flip one lowered layer's engine mode
+    /// (int → float → direct) in place. Atomic per layer, so the
+    /// fallback controller can degrade a drifting layer while other
+    /// workers are mid-batch. Layers the plan never lowered (already
+    /// direct) report `false` — there is nothing to degrade.
+    fn set_layer_mode(&self, layer: &str, mode: EngineMode) -> bool {
+        match self.net.wino_layer(layer) {
+            Some(l) => {
+                l.set_mode(mode);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Shadow-oracle probe: replay this item through the network,
@@ -327,6 +342,17 @@ impl ModelRegistry {
             for (i, v) in vals.iter_mut().enumerate() {
                 let b = off + i * 4;
                 *v = f32::from_le_bytes([bytes[b], bytes[b + 1], bytes[b + 2], bytes[b + 3]]);
+                // Bit-rotted or truncated-write checkpoints surface as
+                // NaN/Inf weights; reject at load time rather than serve
+                // garbage logits (or poison a shared weight-bank cache
+                // entry keyed by these bytes).
+                if !v.is_finite() {
+                    bail!(
+                        "checkpoint blob {blob_path:?} has non-finite weight {v} at \
+                         {}[{i}] — corrupt checkpoint refused",
+                        spec.name
+                    );
+                }
             }
             off += n * 4;
             params.insert(spec.name.clone(), Tensor::from_vec(&spec.dims, vals));
@@ -821,6 +847,60 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("fc.w"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_non_finite_weights() {
+        // Chaos bit-rot on a valid checkpoint blob: NaN weights must be
+        // refused at load time with a typed complaint naming the rotted
+        // parameter, never served (and never poison the shared
+        // content-keyed bank cache).
+        let cfg = wino_cfg(None);
+        let params = ResNet18::init_params(&cfg, 17);
+        let mut names: Vec<&String> = params.keys().collect();
+        names.sort();
+        let mut manifest = String::from(
+            "winoq-manifest v1\nvariant rot\ntrain_batch 8\neval_batch 8\n\
+             image 3x32x32\nnum_classes 10\n",
+        );
+        let mut blob: Vec<u8> = Vec::new();
+        for name in &names {
+            let t = &params[name.as_str()];
+            let dims: Vec<String> = t.dims.iter().map(|d| d.to_string()).collect();
+            manifest.push_str(&format!("param {name} {}\n", dims.join("x")));
+            for v in &t.data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        crate::testkit::chaos::poison_floats(&mut blob, 42, 4);
+        let dir = std::env::temp_dir().join(format!("winoq-reg-rot-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("rot.manifest.txt"), &manifest).unwrap();
+        std::fs::write(dir.join("rot.init.bin"), &blob).unwrap();
+        let mut reg = ModelRegistry::new();
+        let err = reg
+            .register_checkpoint("rot", &dir, "rot", None, cfg.mode, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        assert!(reg.get("rot").is_none(), "a refused checkpoint must not register");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn layer_mode_hook_flips_lowered_layers_only() {
+        let mut reg = ModelRegistry::new();
+        let served = reg
+            .register_synthetic("rn", wino_cfg(Some(QuantConfig::w8())), 32, 7, 2)
+            .unwrap();
+        // A lowered layer flips; its engine mode is observable on the net.
+        assert!(served.set_layer_mode("s0b0.conv1", EngineMode::Float));
+        assert_eq!(
+            served.net.wino_layer("s0b0.conv1").unwrap().mode(),
+            EngineMode::Float
+        );
+        assert!(served.set_layer_mode("s0b0.conv1", EngineMode::Int));
+        // Unknown / never-lowered layers have nothing to degrade.
+        assert!(!served.set_layer_mode("no.such.layer", EngineMode::Direct));
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use super::queue::{lane, Rejected, ServeQueue, ServeResult};
 use super::sched::{admission_caps, SubmitOpts};
 use super::stats::ServeStats;
-use super::{worker_loop, AbortOnPanic, BatchModel, CloseOnDrop, ServeConfig};
+use super::{supervised_worker, BatchModel, CloseOnDrop, Resilience, ServeConfig};
 use crate::nn::tensor::Tensor;
 use crate::obs::{mint_span, TraceKind, Tracer};
 use std::sync::mpsc::Receiver;
@@ -177,17 +177,21 @@ pub fn with_shards_traced<'a, R>(
     // One engine pool serves every shard's workers; warm it before the
     // first admission so no shard's first batch pays thread creation.
     crate::engine::pool::warm();
+    // Shards run under default supervision: a panicking worker fails
+    // only its own batch and restarts within the default budget; other
+    // shards never notice.
+    let res = Resilience::default();
     std::thread::scope(|scope| {
+        let res = &res;
         for (i, spec) in shards.iter().enumerate() {
             let queue = &router.shards[i].queue;
             let model = router.shards[i].model;
             let shard_stats = &stats[i];
             shard_stats.note_workers(spec.cfg.workers.max(1));
-            for _ in 0..spec.cfg.workers.max(1) {
+            for worker in 0..spec.cfg.workers.max(1) as u64 {
                 let cfg = &spec.cfg;
                 scope.spawn(move || {
-                    let _guard = AbortOnPanic(queue);
-                    worker_loop(model, queue, cfg, shard_stats, None);
+                    supervised_worker(worker, model, queue, cfg, shard_stats, None, res);
                 });
             }
         }

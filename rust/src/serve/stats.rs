@@ -45,6 +45,16 @@ struct StatsState {
     /// Requests shed by the scheduler (predicted cost could not meet the
     /// deadline).
     shed: u64,
+    /// Requests failed terminally by the supervisor because their batch
+    /// was poisoned by a worker panic (`ServeError::Failed`).
+    failed: u64,
+    /// Worker restarts performed by the supervisor (each one follows a
+    /// poisoned batch and a backoff sleep).
+    worker_restarts: u64,
+    /// Layers currently serving via a fallback engine (float or direct)
+    /// instead of their tuned quantized path — the `serve.degraded`
+    /// gauge. Last-write-wins snapshot from the fallback controller.
+    degraded: u64,
     /// Completed requests whose response landed after their deadline.
     deadline_missed: u64,
     /// Winograd tiles processed (batch size × tiles per item).
@@ -80,6 +90,9 @@ impl Default for StatsState {
             batches: 0,
             rejected: 0,
             shed: 0,
+            failed: 0,
+            worker_restarts: 0,
+            degraded: 0,
             deadline_missed: 0,
             tiles: 0,
             max_queue_depth: 0,
@@ -163,6 +176,41 @@ impl ServeStats {
         self.state.lock().unwrap().shed += 1;
     }
 
+    /// Record `n` requests failed terminally because their batch was
+    /// poisoned by a worker panic (the supervisor's per-batch blast
+    /// radius — the rest of the queue keeps serving).
+    pub fn record_failed(&self, n: u64) {
+        self.state.lock().unwrap().failed += n;
+    }
+
+    /// Record one supervisor worker restart.
+    pub fn record_worker_restart(&self) {
+        self.state.lock().unwrap().worker_restarts += 1;
+    }
+
+    /// Snapshot the number of layers currently degraded to a fallback
+    /// engine (written by the fallback controller after every mode
+    /// change; last write wins).
+    pub fn set_degraded(&self, n: u64) {
+        self.state.lock().unwrap().degraded = n;
+    }
+
+    /// Layers currently degraded to a fallback engine (the gauge's
+    /// current value).
+    pub fn degraded(&self) -> u64 {
+        self.state.lock().unwrap().degraded
+    }
+
+    /// Failed-request count so far.
+    pub fn failed(&self) -> u64 {
+        self.state.lock().unwrap().failed
+    }
+
+    /// Supervisor worker-restart count so far.
+    pub fn worker_restarts(&self) -> u64 {
+        self.state.lock().unwrap().worker_restarts
+    }
+
     /// Record `n` completed-but-late requests from one batch.
     pub fn record_deadline_miss(&self, n: u64) {
         self.state.lock().unwrap().deadline_missed += n;
@@ -195,10 +243,16 @@ impl ServeStats {
     /// the three `engine.stage_ns.*` totals.
     pub fn export_metrics(&self, reg: &MetricsRegistry) {
         let st = self.state.lock().unwrap();
-        reg.inc("serve.requests.submitted", st.lat.count() + st.rejected + st.shed);
+        reg.inc(
+            "serve.requests.submitted",
+            st.lat.count() + st.rejected + st.shed + st.failed,
+        );
         reg.inc("serve.requests.completed", st.lat.count());
         reg.inc("serve.requests.rejected", st.rejected);
         reg.inc("serve.requests.shed", st.shed);
+        reg.inc("serve.failed", st.failed);
+        reg.inc("serve.worker_restarts", st.worker_restarts);
+        reg.set_gauge("serve.degraded", st.degraded as f64);
         reg.inc("serve.requests.deadline_missed", st.deadline_missed);
         reg.inc("serve.batches", st.batches);
         reg.inc("serve.tiles", st.tiles);
@@ -232,10 +286,13 @@ impl ServeStats {
             (st.busy_us as f64 / 1e6) / (st.workers as f64 * wall)
         };
         StatsReport {
-            submitted: completed + st.rejected + st.shed,
+            submitted: completed + st.rejected + st.shed + st.failed,
             completed,
             rejected: st.rejected,
             shed: st.shed,
+            failed: st.failed,
+            worker_restarts: st.worker_restarts,
+            degraded: st.degraded,
             deadline_missed: st.deadline_missed,
             batches: st.batches,
             mean_batch: if st.batches == 0 {
@@ -266,13 +323,19 @@ impl ServeStats {
 #[derive(Clone, Copy, Debug)]
 pub struct StatsReport {
     /// Every request this run accounted for: exactly
-    /// `completed + rejected + shed` (the accounting invariant the
-    /// deadline property suite pins).
+    /// `completed + rejected + shed + failed` (the accounting invariant
+    /// the deadline and chaos property suites pin).
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
     /// Requests shed by the scheduler with a predicted-cost justification.
     pub shed: u64,
+    /// Requests failed terminally by the supervisor (poisoned batch).
+    pub failed: u64,
+    /// Supervisor worker restarts over the run.
+    pub worker_restarts: u64,
+    /// Layers serving via a fallback engine at report time.
+    pub degraded: u64,
     /// Completed requests that landed after their deadline.
     pub deadline_missed: u64,
     pub batches: u64,
@@ -351,6 +414,7 @@ impl StatsReport {
             .u64("completed", self.completed)
             .u64("rejected", self.rejected)
             .u64("shed", self.shed)
+            .u64("failed", self.failed)
             .u64("deadline_missed", self.deadline_missed)
             .u64("batches", self.batches)
             .f64("mean_batch", self.mean_batch, 3)
@@ -360,6 +424,8 @@ impl StatsReport {
             .u64("max_queue_depth", self.max_queue_depth as u64)
             .f64("queue_depth_recent_mean", self.queue_depth_recent_mean, 3)
             .u64("workers", self.workers)
+            .u64("worker_restarts", self.worker_restarts)
+            .u64("degraded", self.degraded)
             .u64("busy_us", self.busy_us)
             .f64("worker_utilization", self.worker_utilization, 4)
             .f64("wall_seconds", self.wall_seconds, 4)
@@ -403,13 +469,14 @@ impl StatsReport {
     /// One-line human summary for the CLI.
     pub fn summary_line(&self) -> String {
         format!(
-            "{} ok / {} rejected / {} shed ({} missed deadline) in {:.2}s | \
+            "{} ok / {} rejected / {} shed / {} failed ({} missed deadline) in {:.2}s | \
              {:.1} req/s, {:.0} tiles/s | \
              batch mean {:.2} over {} passes | p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms | \
-             {} workers {:.0}% busy",
+             {} workers {:.0}% busy, {} restarts, {} degraded",
             self.completed,
             self.rejected,
             self.shed,
+            self.failed,
             self.deadline_missed,
             self.wall_seconds,
             self.requests_per_sec,
@@ -421,6 +488,8 @@ impl StatsReport {
             self.p99_ms,
             self.workers,
             self.worker_utilization * 100.0,
+            self.worker_restarts,
+            self.degraded,
         )
     }
 }
@@ -569,7 +638,10 @@ mod tests {
             "\"completed\"",
             "\"rejected\"",
             "\"shed\"",
+            "\"failed\"",
             "\"deadline_missed\"",
+            "\"worker_restarts\"",
+            "\"degraded\"",
             "\"batches\"",
             "\"latency_ms\"",
             "\"p99\"",
@@ -581,6 +653,41 @@ mod tests {
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    /// Resilience surface: failed requests extend the accounting
+    /// identity, restarts and the degraded gauge ride the report and
+    /// the metrics registry.
+    #[test]
+    fn failed_restarts_and_degraded_accounting() {
+        let s = ServeStats::new();
+        s.record_batch(2, 20, 0, &[1000, 2000]);
+        s.record_reject();
+        s.record_shed();
+        s.record_failed(3);
+        s.record_worker_restart();
+        s.record_worker_restart();
+        s.set_degraded(5);
+        s.set_degraded(1); // last write wins
+        assert_eq!(s.failed(), 3);
+        assert_eq!(s.worker_restarts(), 2);
+        let r = s.report(1.0);
+        assert_eq!((r.completed, r.rejected, r.shed, r.failed), (2, 1, 1, 3));
+        assert_eq!(r.submitted, r.completed + r.rejected + r.shed + r.failed);
+        assert_eq!(r.submitted, 7);
+        assert_eq!((r.worker_restarts, r.degraded), (2, 1));
+        let j = r.to_json();
+        assert!(j.contains("\"failed\": 3"), "{j}");
+        assert!(j.contains("\"worker_restarts\": 2"), "{j}");
+        assert!(j.contains("\"degraded\": 1"), "{j}");
+        assert!(r.summary_line().contains("3 failed"), "{}", r.summary_line());
+        assert!(r.summary_line().contains("2 restarts"), "{}", r.summary_line());
+        let reg = MetricsRegistry::new();
+        s.export_metrics(&reg);
+        assert_eq!(reg.counter("serve.requests.submitted"), 7);
+        assert_eq!(reg.counter("serve.failed"), 3);
+        assert_eq!(reg.counter("serve.worker_restarts"), 2);
+        assert_eq!(reg.gauge("serve.degraded"), Some(1.0));
     }
 
     /// Satellite surface: drain-time samples land in rotating windows,

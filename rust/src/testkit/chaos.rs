@@ -1,0 +1,327 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`ChaosConfig`] is a *seeded schedule*, not a random process:
+//! every fault site is a pure function of `(seed, index)`, so a chaos
+//! run is byte-identical per seed — the property the chaos suite pins
+//! and the only way "the queue survives three worker panics" is a
+//! reproducible test rather than an anecdote. The same plan drives both
+//! execution paths:
+//!
+//! * the threaded server (`winoq serve --chaos-*`): a shared
+//!   [`FaultPlan`] hands each drained micro-batch its fault via the
+//!   atomic batch counter ([`FaultPlan::next_fault`]);
+//! * the virtual-clock soak harness
+//!   ([`testkit::soak`](crate::testkit::soak)): the pure
+//!   [`ChaosConfig::fault_for`] / [`ChaosConfig::burst_at`] rules are
+//!   evaluated against the harness's own deterministic batch/arrival
+//!   indices, so no atomic ordering can leak into the report.
+//!
+//! Fault kinds map one-to-one onto the recovery paths this PR builds:
+//! worker panics exercise supervision (fail the batch, restart with
+//! backoff, bounded budget), injected latency exercises deadline
+//! shedding under slowdown, activation corruption drives the drift
+//! monitor over budget (engaging the per-layer engine fallback),
+//! arrival bursts exercise admission backpressure, and
+//! [`flip_bits`] rots checkpoint bytes for the registry's load-time
+//! validation.
+
+use crate::nn::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What happens to one micro-batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// The worker executing the batch panics (poisoning the batch; the
+    /// supervisor fails its members and restarts the worker).
+    Panic,
+    /// The batch's activations are corrupted in place (multiplied by
+    /// [`ChaosConfig::corrupt_scale`]) *before* inference — served
+    /// outputs drift out of the calibrated range, so the shadow-oracle
+    /// drift probe sees a genuine budget violation, not a simulated one.
+    Corrupt {
+        /// Multiplier applied to every activation of the batch.
+        scale: f64,
+    },
+    /// The worker sleeps (or the virtual clock advances) before running
+    /// the batch.
+    Latency {
+        /// Injected delay, microseconds.
+        us: u64,
+    },
+}
+
+/// Seeded fault schedule. All `*_every` knobs are modular rules on the
+/// batch (or arrival) index offset by the seed; `0` disables that fault
+/// kind. When several rules hit the same index, severity wins:
+/// panic > corrupt > latency.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Offsets every modular rule, so two runs with different seeds hit
+    /// different batch indices.
+    pub seed: u64,
+    /// Panic the worker on every `panic_every`-th batch.
+    pub panic_every: u64,
+    /// Corrupt activations on every `corrupt_every`-th batch.
+    pub corrupt_every: u64,
+    /// Activation multiplier for corrupt faults (OOD magnitude).
+    pub corrupt_scale: f64,
+    /// Inject latency on every `latency_every`-th batch.
+    pub latency_every: u64,
+    /// Injected delay per latency fault, microseconds.
+    pub latency_us: u64,
+    /// Compress arrival gaps on every `burst_every`-th arrival window.
+    pub burst_every: u64,
+    /// How many consecutive arrivals each burst compresses.
+    pub burst_len: u64,
+    /// Supervisor restart budget under this plan (soak path; the
+    /// threaded server takes it from `RestartPolicy`).
+    pub restart_budget: u32,
+    /// Base backoff per restart, microseconds (doubled per consecutive
+    /// restart, capped at 100× base).
+    pub backoff_us: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0,
+            panic_every: 0,
+            corrupt_every: 0,
+            corrupt_scale: 100.0,
+            latency_every: 0,
+            latency_us: 1000,
+            burst_every: 0,
+            burst_len: 8,
+            restart_budget: 5,
+            backoff_us: 200,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// True when any fault kind is scheduled.
+    pub fn is_enabled(&self) -> bool {
+        self.panic_every > 0
+            || self.corrupt_every > 0
+            || self.latency_every > 0
+            || self.burst_every > 0
+    }
+
+    /// The pure schedule: fault for the `idx`-th batch, most severe
+    /// rule first. This is the single source of truth both execution
+    /// paths evaluate.
+    pub fn fault_for(&self, idx: u64) -> Option<Fault> {
+        let hits = |every: u64| every > 0 && (idx + self.seed) % every == 0;
+        if hits(self.panic_every) {
+            Some(Fault::Panic)
+        } else if hits(self.corrupt_every) {
+            Some(Fault::Corrupt { scale: self.corrupt_scale })
+        } else if hits(self.latency_every) {
+            Some(Fault::Latency { us: self.latency_us })
+        } else {
+            None
+        }
+    }
+
+    /// Saturation-burst rule on *arrival* indices: true when the
+    /// `idx`-th arrival falls inside a burst window (the soak generator
+    /// compresses its inter-arrival gap to 1 µs, slamming the queue).
+    pub fn burst_at(&self, idx: u64) -> bool {
+        self.burst_every > 0 && (idx + self.seed) % self.burst_every < self.burst_len
+    }
+
+    /// Exponential backoff for the `restarts`-th consecutive restart
+    /// (1-based), capped at 100× the base.
+    pub fn backoff_for(&self, restarts: u32) -> u64 {
+        let base = self.backoff_us.max(1);
+        (base << (restarts.saturating_sub(1)).min(20)).min(base * 100)
+    }
+}
+
+/// A [`ChaosConfig`] bound to a live batch counter — the threaded
+/// server's view of the schedule. Workers race on `next_fault`, but the
+/// *set* of faults dealt over a run is exactly the schedule's prefix;
+/// only which worker draws which index varies.
+pub struct FaultPlan {
+    cfg: ChaosConfig,
+    batches: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: ChaosConfig) -> FaultPlan {
+        FaultPlan { cfg, batches: AtomicU64::new(0) }
+    }
+
+    pub fn config(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+
+    /// Claim the next batch index and return its scheduled fault.
+    pub fn next_fault(&self) -> Option<Fault> {
+        let idx = self.batches.fetch_add(1, Ordering::Relaxed);
+        self.cfg.fault_for(idx)
+    }
+
+    /// Batches dealt so far.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+}
+
+/// Apply a corrupt fault: scale every activation in place. Kept here so
+/// the threaded worker and the soak harness share one definition of
+/// "corrupted".
+pub fn corrupt_tensor(t: &mut Tensor, scale: f64) {
+    for v in &mut t.data {
+        *v = (*v as f64 * scale) as f32;
+    }
+}
+
+/// splitmix64 — the house deterministic mixer (same construction the
+/// soak harness uses for synthetic errors).
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Checkpoint bit-rot: flip `flips` pseudo-randomly chosen bits of
+/// `bytes`, deterministically per seed. Biased toward high bits of each
+/// chosen byte so float payloads land in sign/exponent territory
+/// (huge-magnitude or non-finite values rather than benign mantissa
+/// noise).
+pub fn flip_bits(bytes: &mut [u8], seed: u64, flips: usize) {
+    if bytes.is_empty() {
+        return;
+    }
+    for i in 0..flips {
+        let r = mix(seed.wrapping_add(i as u64));
+        let pos = (r % bytes.len() as u64) as usize;
+        let bit = 4 + ((r >> 32) % 4) as u32; // bits 4..=7 of the byte
+        bytes[pos] ^= 1u8 << bit;
+    }
+}
+
+/// Targeted checkpoint rot for f32-LE blobs: overwrite `n`
+/// pseudo-randomly chosen (4-byte-aligned) float slots with a NaN bit
+/// pattern, deterministically per seed. Unlike [`flip_bits`], this
+/// *guarantees* non-finite weights — the case the registry's load-time
+/// validation must refuse.
+pub fn poison_floats(bytes: &mut [u8], seed: u64, n: usize) {
+    let slots = bytes.len() / 4;
+    if slots == 0 {
+        return;
+    }
+    for i in 0..n {
+        let r = mix(seed.wrapping_add(0x5EED).wrapping_add(i as u64));
+        let pos = (r % slots as u64) as usize * 4;
+        bytes[pos..pos + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed_and_offset_by_it() {
+        let cfg = ChaosConfig { seed: 7, panic_every: 17, ..Default::default() };
+        let a: Vec<_> = (0..64).map(|i| cfg.fault_for(i)).collect();
+        let b: Vec<_> = (0..64).map(|i| cfg.fault_for(i)).collect();
+        assert_eq!(a, b, "pure schedule must not vary between evaluations");
+        // (idx + 7) % 17 == 0 → idx ∈ {10, 27, 44, 61}.
+        let panics: Vec<u64> =
+            (0..64).filter(|&i| cfg.fault_for(i) == Some(Fault::Panic)).collect();
+        assert_eq!(panics, vec![10, 27, 44, 61]);
+        let other = ChaosConfig { seed: 8, ..cfg };
+        assert_ne!(
+            (0..64).map(|i| other.fault_for(i)).collect::<Vec<_>>(),
+            a,
+            "a different seed must shift the schedule"
+        );
+    }
+
+    #[test]
+    fn severity_orders_overlapping_rules() {
+        // Every 2nd batch panics, every 3rd corrupts, every 5th lags;
+        // index 0 (+seed 0) hits all three → panic wins.
+        let cfg = ChaosConfig {
+            panic_every: 2,
+            corrupt_every: 3,
+            latency_every: 5,
+            ..Default::default()
+        };
+        assert_eq!(cfg.fault_for(0), Some(Fault::Panic));
+        assert_eq!(cfg.fault_for(3), Some(Fault::Corrupt { scale: 100.0 }));
+        assert_eq!(cfg.fault_for(5), Some(Fault::Latency { us: 1000 }));
+        assert_eq!(cfg.fault_for(7), None);
+        assert!(cfg.is_enabled());
+        assert!(!ChaosConfig::default().is_enabled());
+    }
+
+    #[test]
+    fn fault_plan_deals_the_schedule_prefix() {
+        let cfg = ChaosConfig { panic_every: 3, ..Default::default() };
+        let plan = FaultPlan::new(cfg);
+        let dealt: Vec<_> = (0..9).map(|_| plan.next_fault()).collect();
+        let pure: Vec<_> = (0..9).map(|i| cfg.fault_for(i)).collect();
+        assert_eq!(dealt, pure);
+        assert_eq!(plan.batches(), 9);
+    }
+
+    #[test]
+    fn bursts_cover_contiguous_arrival_windows() {
+        let cfg = ChaosConfig { burst_every: 10, burst_len: 3, ..Default::default() };
+        let in_burst: Vec<u64> = (0..20).filter(|&i| cfg.burst_at(i)).collect();
+        assert_eq!(in_burst, vec![0, 1, 2, 10, 11, 12]);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let cfg = ChaosConfig { backoff_us: 200, ..Default::default() };
+        assert_eq!(cfg.backoff_for(1), 200);
+        assert_eq!(cfg.backoff_for(2), 400);
+        assert_eq!(cfg.backoff_for(3), 800);
+        assert_eq!(cfg.backoff_for(30), 20_000, "capped at 100× base");
+    }
+
+    #[test]
+    fn corrupt_scales_in_place() {
+        let mut t = Tensor::from_vec(&[1, 2, 2], vec![1.0, -0.5, 0.25, 0.0]);
+        corrupt_tensor(&mut t, 100.0);
+        assert_eq!(t.data, vec![100.0, -50.0, 25.0, 0.0]);
+    }
+
+    #[test]
+    fn bit_rot_is_deterministic_and_hits_exponent_bits() {
+        let mut a = vec![0u8; 64];
+        let mut b = vec![0u8; 64];
+        flip_bits(&mut a, 42, 8);
+        flip_bits(&mut b, 42, 8);
+        assert_eq!(a, b, "same seed, same rot");
+        assert!(a.iter().any(|&v| v != 0), "flips must land");
+        for &v in &a {
+            assert_eq!(v & 0x0f, 0, "flips stay in the high nibble");
+        }
+        let mut c = vec![0u8; 64];
+        flip_bits(&mut c, 43, 8);
+        assert_ne!(a, c, "different seed, different rot");
+    }
+
+    #[test]
+    fn poisoned_floats_are_nan_and_deterministic() {
+        let clean: Vec<u8> = (0..16).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let mut a = clean.clone();
+        let mut b = clean.clone();
+        poison_floats(&mut a, 9, 3);
+        poison_floats(&mut b, 9, 3);
+        assert_eq!(a, b, "same seed, same poison");
+        let nans = a
+            .chunks_exact(4)
+            .filter(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]).is_nan())
+            .count();
+        assert!(nans >= 1 && nans <= 3, "poison lands on whole float slots: {nans}");
+        poison_floats(&mut [], 9, 3); // empty blob is a no-op, not a panic
+    }
+}

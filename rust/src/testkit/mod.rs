@@ -4,6 +4,7 @@
 
 use crate::wino::error::Prng;
 
+pub mod chaos;
 pub mod soak;
 
 /// A generator of values of `T` from the PRNG.

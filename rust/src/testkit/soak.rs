@@ -30,6 +30,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
+use super::chaos::{ChaosConfig, Fault};
 use crate::benchkit::percentile_sorted;
 use crate::obs::drift::{DriftConfig, DriftMonitor, DriftSample};
 use crate::obs::json::{JsonArr, JsonObj};
@@ -116,6 +117,13 @@ pub struct SoakConfig {
     /// traffic (stays inside budget, zero alerts); large values model an
     /// out-of-distribution input sweep and must raise alerts.
     pub drift_err_scale: f64,
+    /// Deterministic fault plan ([`ChaosConfig`]): injected worker
+    /// panics (fail the batch, restart the virtual worker with backoff
+    /// under [`ChaosConfig::restart_budget`], retire it when
+    /// exhausted), per-batch latency, activation corruption (scales the
+    /// synthetic drift error), and arrival-burst queue saturation.
+    /// `None` runs byte-identical to a pre-chaos soak.
+    pub chaos: Option<ChaosConfig>,
 }
 
 /// One generated request (pre-computed before the event loop runs).
@@ -184,6 +192,9 @@ pub struct ModelSoak {
     pub rejected: u64,
     /// Requests shed by the deadline policy.
     pub shed: u64,
+    /// Requests failed terminally (poisoned batch under an injected
+    /// panic, or drained after every tenant worker retired).
+    pub failed: u64,
     /// Completed requests that finished past their deadline.
     pub deadline_missed: u64,
     /// Latency percentiles over completed requests, µs (0 when none).
@@ -217,6 +228,13 @@ pub struct SoakReport {
     pub rejected: u64,
     /// Requests shed with predicted-cost justification.
     pub shed: u64,
+    /// Requests failed terminally (chaos panics / retired workers).
+    pub failed: u64,
+    /// Supervised virtual-worker restarts over the run (0 without
+    /// chaos).
+    pub worker_restarts: u64,
+    /// Virtual workers retired after exhausting the restart budget.
+    pub workers_retired: u64,
     /// Completed requests that finished past their deadline.
     pub deadline_missed: u64,
     /// Overall completed-latency percentiles, µs (0 when none completed).
@@ -245,25 +263,29 @@ pub struct SoakReport {
 
 impl SoakReport {
     /// The full-accounting invariant: every generated request is exactly
-    /// one of completed / rejected / shed.
+    /// one of completed / rejected / shed / failed.
     pub fn accounting_exact(&self) -> bool {
         let per_model_ok = self.per_model.iter().all(|m| {
-            m.submitted == m.completed + m.rejected + m.shed
+            m.submitted == m.completed + m.rejected + m.shed + m.failed
         });
         self.submitted == self.requests
-            && self.submitted == self.completed + self.rejected + self.shed
+            && self.submitted == self.completed + self.rejected + self.shed + self.failed
             && per_model_ok
     }
 
     /// One-line human summary for the CLI.
     pub fn summary_line(&self) -> String {
         format!(
-            "soak: {} submitted = {} ok + {} rejected + {} shed | {} missed deadline \
+            "soak: {} submitted = {} ok + {} rejected + {} shed + {} failed | \
+             {} restarts, {} retired | {} missed deadline \
              (rate {:.4}) | p50/p99/p99.9 {:.0}/{:.0}/{:.0} µs over {:.3}s virtual",
             self.submitted,
             self.completed,
             self.rejected,
             self.shed,
+            self.failed,
+            self.worker_restarts,
+            self.workers_retired,
             self.deadline_missed,
             self.deadline_miss_rate,
             self.p50_us,
@@ -292,6 +314,7 @@ impl SoakReport {
                     .u64("completed", m.completed)
                     .u64("rejected", m.rejected)
                     .u64("shed", m.shed)
+                    .u64("failed", m.failed)
                     .u64("deadline_missed", m.deadline_missed)
                     .raw("latency_us", &lat)
                     .f64("requests_per_sec", m.requests_per_sec, 3)
@@ -303,6 +326,9 @@ impl SoakReport {
             .u64("completed", self.completed)
             .u64("rejected", self.rejected)
             .u64("shed", self.shed)
+            .u64("failed", self.failed)
+            .u64("worker_restarts", self.worker_restarts)
+            .u64("workers_retired", self.workers_retired)
             .u64("deadline_missed", self.deadline_missed)
             .finish();
         let lat = JsonObj::new()
@@ -330,15 +356,22 @@ impl SoakReport {
     }
 }
 
+/// A retired virtual worker's busy-until sentinel: never free again.
+const RETIRED: u64 = u64::MAX;
+
 /// Live per-tenant state of the event loop.
 struct Tenant {
     sched: Scheduler,
-    /// Per-worker busy-until timestamps (virtual µs).
+    /// Per-worker busy-until timestamps (virtual µs); [`RETIRED`] marks
+    /// a worker whose restart budget is exhausted.
     workers: Vec<u64>,
+    /// Per-worker cumulative supervised-restart counts.
+    restarts: Vec<u32>,
     lat_us: Vec<f64>,
     submitted: u64,
     rejected: u64,
     shed: u64,
+    failed: u64,
     missed: u64,
 }
 
@@ -349,8 +382,14 @@ fn generate_arrivals(cfg: &SoakConfig, rng: &mut Prng) -> Vec<Arrival> {
     let total_w: u64 = cfg.models.iter().map(|m| m.weight).sum::<u64>().max(1);
     let mut t = 0u64;
     let mut arrivals = Vec::with_capacity(cfg.requests);
-    for _ in 0..cfg.requests {
-        t += 1 + rng.next_u64() % (2 * cfg.mean_gap_us.max(1));
+    for i in 0..cfg.requests {
+        // Saturation bursts: the gap draw still happens (so a burst
+        // changes arrival *times*, never the downstream routing /
+        // deadline draws), but arrivals inside a burst window land
+        // back-to-back, slamming the admission caps.
+        let gap = 1 + rng.next_u64() % (2 * cfg.mean_gap_us.max(1));
+        let burst = cfg.chaos.as_ref().is_some_and(|c| c.burst_at(i as u64));
+        t += if burst { 1 } else { gap };
         let mut pick = rng.next_u64() % total_w;
         let mut model = cfg.models.len() - 1;
         for (i, m) in cfg.models.iter().enumerate() {
@@ -436,16 +475,25 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
         .map(|(m, &cap)| Tenant {
             sched: Scheduler::new(cap),
             workers: vec![0u64; m.workers.max(1)],
+            restarts: vec![0u32; m.workers.max(1)],
             lat_us: Vec::new(),
             submitted: 0,
             rejected: 0,
             shed: 0,
+            failed: 0,
             missed: 0,
         })
         .collect();
 
     let mut batches: Vec<BatchTrace> = Vec::new();
     let mut sheds: Vec<ShedTrace> = Vec::new();
+    // Chaos state: one global batch index (only non-empty dispatched
+    // batches consume schedule slots, mirroring the threaded
+    // `FaultPlan`), plus run-wide restart/retire totals.
+    let chaos = cfg.chaos.as_ref().filter(|c| c.is_enabled());
+    let mut batch_idx = 0u64;
+    let mut worker_restarts = 0u64;
+    let mut workers_retired = 0u64;
     let mut now = 0u64;
     let mut idx = 0usize;
     loop {
@@ -534,12 +582,77 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
                         );
                         let tiles: u64 = batch.iter().map(|it| it.tiles).sum();
                         let predicted = cost.predict_us(tiles).max(1);
+                        // Chaos: claim this batch's scheduled fault —
+                        // only non-empty batches consume schedule slots,
+                        // mirroring the threaded `FaultPlan`.
+                        let fault = chaos.and_then(|c| {
+                            let f = c.fault_for(batch_idx);
+                            batch_idx += 1;
+                            f
+                        });
+                        if fault == Some(Fault::Panic) {
+                            // Poisoned batch: every member fails
+                            // terminally; the supervisor restarts this
+                            // virtual worker with backoff until its
+                            // budget is spent, then retires it.
+                            let c = chaos.unwrap();
+                            for it in &batch {
+                                tnt.failed += 1;
+                                if let Some(log) = trace.as_deref_mut() {
+                                    let span = span_by_at[&it.submitted_us];
+                                    log.record(
+                                        span,
+                                        now,
+                                        TraceKind::Batch {
+                                            size: batch.len() as u64,
+                                            predicted_us: predicted,
+                                        },
+                                    );
+                                    log.record(
+                                        span,
+                                        now,
+                                        TraceKind::Failed {
+                                            reason: "chaos: injected worker panic".into(),
+                                        },
+                                    );
+                                }
+                            }
+                            tnt.restarts[wi] += 1;
+                            if tnt.restarts[wi] > c.restart_budget {
+                                tnt.workers[wi] = RETIRED;
+                                workers_retired += 1;
+                            } else {
+                                worker_restarts += 1;
+                                let backoff_us = c.backoff_for(tnt.restarts[wi]);
+                                tnt.workers[wi] = now + backoff_us;
+                                if let Some(log) = trace.as_deref_mut() {
+                                    // Span 0 is the reserved "untraced"
+                                    // carrier: process-level events ride
+                                    // it without touching accounting.
+                                    log.record(
+                                        0,
+                                        now,
+                                        TraceKind::WorkerRestart {
+                                            worker: ((mi as u64) << 8) | wi as u64,
+                                            restarts: tnt.restarts[wi] as u64,
+                                            backoff_us,
+                                        },
+                                    );
+                                }
+                            }
+                            continue;
+                        }
+                        let (fault_lat_us, corrupt_mult) = match fault {
+                            Some(Fault::Latency { us }) => (us, 1.0),
+                            Some(Fault::Corrupt { scale }) => (0, scale),
+                            _ => (0, 1.0),
+                        };
                         let jitter = if cfg.service_jitter_div == 0 {
                             0
                         } else {
                             rng.next_u64() % (predicted / cfg.service_jitter_div + 1)
                         };
-                        let done = now + predicted + jitter;
+                        let done = now + predicted + jitter + fault_lat_us;
                         tnt.workers[wi] = done;
                         batches.push(BatchTrace {
                             model: mi,
@@ -590,10 +703,16 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
                                         base: Base::Legendre,
                                         weight_bits: 8,
                                         hadamard_bits: 9,
+                                        // An injected corruption fault
+                                        // scales this batch's synthetic
+                                        // error on top of the config's
+                                        // OOD multiplier — corrupted
+                                        // activations are exactly what
+                                        // the shadow oracle must flag.
                                         rel_err: synthetic_rel_err(
                                             cfg.seed,
                                             span,
-                                            cfg.drift_err_scale,
+                                            cfg.drift_err_scale * corrupt_mult,
                                         ),
                                     };
                                     let alerts = dm.observe(span, done, &[sample]);
@@ -622,6 +741,49 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
                     }
                 }
             }
+            // A tenant whose every worker retired can never serve again:
+            // drain its scheduler now (flush mode), failing batch members
+            // and recording sheds, so accounting stays exact and the run
+            // terminates instead of stranding admitted requests.
+            if chaos.is_some()
+                && tnt.workers.iter().all(|&b| b == RETIRED)
+                && tnt.sched.depth() > 0
+            {
+                let cost = &cfg.models[mi].cost;
+                loop {
+                    match tnt.sched.poll(now, cfg.max_batch, cfg.window_us, Some(cost), true) {
+                        Poll::Dispatch { batch, shed } => {
+                            let progressed = !batch.is_empty() || !shed.is_empty();
+                            for (item, why) in shed {
+                                tnt.shed += 1;
+                                if let Some(log) = trace.as_deref_mut() {
+                                    let span = span_by_at[&item.submitted_us];
+                                    log.record(span, why.decided_us, why.trace_event());
+                                }
+                                sheds.push(ShedTrace { model: mi, item, why });
+                            }
+                            for it in &batch {
+                                tnt.failed += 1;
+                                if let Some(log) = trace.as_deref_mut() {
+                                    let span = span_by_at[&it.submitted_us];
+                                    log.record(
+                                        span,
+                                        now,
+                                        TraceKind::Failed {
+                                            reason: "worker retired: restart budget exhausted"
+                                                .into(),
+                                        },
+                                    );
+                                }
+                            }
+                            if !progressed || tnt.sched.depth() == 0 {
+                                break;
+                            }
+                        }
+                        Poll::Idle | Poll::WaitUntil(_) => break,
+                    }
+                }
+            }
         }
         // 3. Advance the clock to the next event: the next arrival, a
         // worker freeing up (only relevant while that tenant has pending
@@ -638,7 +800,7 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
         for tnt in &tenants {
             if tnt.sched.depth() > 0 {
                 for &b in &tnt.workers {
-                    if b > now {
+                    if b > now && b != RETIRED {
                         next = next.min(b);
                     }
                 }
@@ -654,6 +816,7 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
     let wall = tenants
         .iter()
         .flat_map(|t| t.workers.iter().copied())
+        .filter(|&b| b != RETIRED)
         .max()
         .unwrap_or(0)
         .max(now);
@@ -679,6 +842,7 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
                 completed: t.lat_us.len() as u64,
                 rejected: t.rejected,
                 shed: t.shed,
+                failed: t.failed,
                 deadline_missed: t.missed,
                 p50_us: pct(&t.lat_us, 0.50),
                 p99_us: pct(&t.lat_us, 0.99),
@@ -698,6 +862,9 @@ fn run_soak_with(cfg: &SoakConfig, mut trace: Option<&mut TraceLog>) -> SoakRepo
         completed,
         rejected: per_model.iter().map(|m| m.rejected).sum(),
         shed: per_model.iter().map(|m| m.shed).sum(),
+        failed: per_model.iter().map(|m| m.failed).sum(),
+        worker_restarts,
+        workers_retired,
         deadline_missed: missed,
         p50_us: pct(&all_lat, 0.50),
         p95_us: pct(&all_lat, 0.95),
@@ -752,6 +919,7 @@ pub fn two_tenant_config(seed: u64, requests: usize) -> SoakConfig {
         service_jitter_div: 16,
         drift_stride: 0,
         drift_err_scale: 1.0,
+        chaos: None,
     }
 }
 
@@ -845,9 +1013,13 @@ mod tests {
                     "stage"
                 }
                 TraceKind::Complete { .. } => "complete",
-                // Non-terminal advisory; the fixture has drift off, so
-                // seeing one here is itself a bug.
+                TraceKind::Failed { .. } => "failed",
+                // Non-terminal advisories; the fixture has drift and
+                // chaos off, so seeing any here is itself a bug.
                 TraceKind::DriftAlert { .. } => "drift_alert",
+                TraceKind::WorkerRestart { .. } => "worker_restart",
+                TraceKind::FallbackEngaged { .. } => "fallback_engaged",
+                TraceKind::FallbackCleared { .. } => "fallback_cleared",
             };
             by_span.entry(ev.span).or_default().push(name);
         }
@@ -954,6 +1126,9 @@ mod tests {
             ", \"completed\": ",
             ", \"rejected\": ",
             ", \"shed\": ",
+            ", \"failed\": ",
+            ", \"worker_restarts\": ",
+            ", \"workers_retired\": ",
             ", \"deadline_missed\": ",
             "\"deadline_miss_rate\": ",
             "\"p999\": ",
@@ -961,5 +1136,180 @@ mod tests {
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    /// A chaos config for the fixture: panics on every 17th batch (seed
+    /// 7 offsets the schedule), latency on every 5th, bursts every 50
+    /// arrivals.
+    fn chaotic_config(seed: u64, requests: usize) -> SoakConfig {
+        let mut cfg = two_tenant_config(seed, requests);
+        cfg.chaos = Some(ChaosConfig {
+            seed: 7,
+            panic_every: 17,
+            latency_every: 5,
+            latency_us: 2_000,
+            burst_every: 50,
+            burst_len: 8,
+            // Deep enough that a long fixture run never retires a
+            // worker — retirement has its own dedicated test.
+            restart_budget: 100,
+            ..ChaosConfig::default()
+        });
+        cfg
+    }
+
+    #[test]
+    fn chaos_soak_accounts_exactly_and_replays_byte_identically() {
+        let cfg = chaotic_config(0xC405, 768);
+        let a = run_soak(&cfg);
+        let b = run_soak(&cfg);
+        assert!(a.accounting_exact(), "{}", a.summary_line());
+        assert_eq!(a.to_json(), b.to_json(), "chaos must replay byte-identically per seed");
+        assert!(a.failed > 0, "injected panics must fail batches: {}", a.summary_line());
+        assert!(
+            a.worker_restarts >= 3,
+            "the run must survive at least 3 panics via restarts: {}",
+            a.summary_line()
+        );
+        assert_eq!(a.workers_retired, 0, "sparse panics never exhaust the deep fixture budget");
+        assert!(a.completed > 0, "the fleet keeps serving between faults");
+        // A different chaos seed shifts which batches fail.
+        let mut other = cfg.clone();
+        other.chaos.as_mut().unwrap().seed = 8;
+        assert_ne!(run_soak(&other).to_json(), a.to_json());
+    }
+
+    #[test]
+    fn chaos_off_is_byte_identical_to_a_disabled_plan() {
+        // `Some(ChaosConfig::default())` schedules nothing — the report
+        // must be the pre-chaos bytes, same as `None`.
+        let mut cfg = two_tenant_config(0xC0FF, 256);
+        let off = run_soak(&cfg).to_json();
+        cfg.chaos = Some(ChaosConfig::default());
+        assert_eq!(run_soak(&cfg).to_json(), off);
+    }
+
+    #[test]
+    fn chaos_failed_spans_follow_the_lifecycle_grammar() {
+        use crate::obs::TraceSink;
+        let cfg = chaotic_config(0xFA11, 768);
+        let (r, t) = run_soak_traced(&cfg);
+        assert!(r.failed > 0, "{}", r.summary_line());
+        let acc = t.accounting();
+        assert!(acc.exact, "failed is terminal; accounting must stay exact: {acc:?}");
+        assert_eq!(acc.failed, r.failed);
+        assert_eq!(acc.submitted, r.submitted);
+        // Failed spans carry submit → plan_cache → batch → failed, and
+        // worker restarts ride span 0 without touching accounting.
+        let mut failed_spans = 0u64;
+        let mut by_span: std::collections::BTreeMap<u64, Vec<&'static str>> =
+            std::collections::BTreeMap::new();
+        for ev in t.events() {
+            let name = match ev.kind {
+                TraceKind::Submit { .. } => "submit",
+                TraceKind::Reject { .. } => "reject",
+                TraceKind::Shed { .. } => "shed",
+                TraceKind::Batch { .. } => "batch",
+                TraceKind::PlanCache { .. } => "plan_cache",
+                TraceKind::Stage { .. } => "stage",
+                TraceKind::Complete { .. } => "complete",
+                TraceKind::Failed { .. } => "failed",
+                TraceKind::WorkerRestart { .. } => {
+                    assert_eq!(ev.span, 0, "restarts are process-level, span-0 events");
+                    continue;
+                }
+                other => panic!("unexpected event in a drift-off chaos run: {other:?}"),
+            };
+            by_span.entry(ev.span).or_default().push(name);
+        }
+        for (span, kinds) in &by_span {
+            if *span == 0 {
+                continue;
+            }
+            if kinds.contains(&"failed") {
+                failed_spans += 1;
+                assert_eq!(
+                    kinds.as_slice(),
+                    ["submit", "plan_cache", "batch", "failed"],
+                    "span {span} has out-of-grammar failed sequence {kinds:?}"
+                );
+            }
+        }
+        assert_eq!(failed_spans, r.failed);
+        let restarts = t
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::WorkerRestart { .. }))
+            .count() as u64;
+        assert_eq!(restarts, r.worker_restarts, "every restart must be traced exactly once");
+    }
+
+    #[test]
+    fn relentless_panics_exhaust_budgets_retire_workers_and_still_account() {
+        // Every batch panics: all four virtual workers burn their
+        // budgets and retire; the drain path must fail or shed every
+        // remaining admitted request — nothing strands, nothing hangs.
+        let mut cfg = two_tenant_config(0xDEAD, 512);
+        cfg.chaos = Some(ChaosConfig {
+            panic_every: 1,
+            restart_budget: 3,
+            ..ChaosConfig::default()
+        });
+        let r = run_soak(&cfg);
+        assert!(r.accounting_exact(), "{}", r.summary_line());
+        assert_eq!(r.completed, 0, "no batch ever survives: {}", r.summary_line());
+        assert_eq!(r.workers_retired, 4, "both tenants' workers must retire");
+        assert_eq!(
+            r.worker_restarts, 4 * 3,
+            "each worker restarts exactly its budget before retiring"
+        );
+        assert!(r.failed > 0);
+        // Deterministic, like everything else.
+        assert_eq!(r.to_json(), run_soak(&cfg).to_json());
+    }
+
+    #[test]
+    fn corrupt_faults_force_drift_alerts_on_calibrated_traffic() {
+        // Calibrated traffic (err scale 1.0) never alerts on its own —
+        // the corrupt fault's activation scaling must push sampled
+        // batches over budget.
+        let mut cfg = two_tenant_config(0xC0DE, 512);
+        cfg.drift_stride = 2;
+        cfg.chaos = Some(ChaosConfig {
+            corrupt_every: 3,
+            corrupt_scale: 100.0,
+            ..ChaosConfig::default()
+        });
+        let r = run_soak(&cfg);
+        assert!(r.accounting_exact());
+        let d = r.drift.as_ref().expect("drift enabled");
+        assert!(d.alerts > 0, "corrupted batches must breach the budget: {}", d.report);
+        // Without the corrupt faults the same traffic stays quiet.
+        let mut clean = cfg.clone();
+        clean.chaos = None;
+        let rc = run_soak(&clean);
+        assert_eq!(rc.drift.as_ref().unwrap().alerts, 0, "calibrated baseline must not alert");
+    }
+
+    #[test]
+    fn bursts_saturate_admission_where_spaced_arrivals_do_not() {
+        // Same seed, tiny budget: burst-compressed arrivals must reject
+        // strictly more than the spaced baseline.
+        let mut cfg = two_tenant_config(0xB425, 512);
+        cfg.budget = 8;
+        let base = run_soak(&cfg);
+        cfg.chaos = Some(ChaosConfig {
+            burst_every: 20,
+            burst_len: 12,
+            ..ChaosConfig::default()
+        });
+        let burst = run_soak(&cfg);
+        assert!(base.accounting_exact() && burst.accounting_exact());
+        assert!(
+            burst.rejected > base.rejected,
+            "bursts must slam admission: {} vs baseline {}",
+            burst.rejected,
+            base.rejected
+        );
     }
 }

@@ -1,0 +1,385 @@
+//! Self-healing serving (ISSUE 10): deterministic fault injection against
+//! the real threaded server. A chaos-panicked batch fails with a typed
+//! `ServeError::Failed` (no client ever hangs), the supervisor restarts
+//! the worker within its bounded budget and serving recovers; persistent
+//! drift walks a layer down the int → float → direct fallback ladder and
+//! a quiet period re-arms it. A property sweep replays randomized chaos
+//! plans through the virtual-clock soak and demands exact accounting and
+//! byte-identical reports every time.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use winoq::engine::EngineScratch;
+use winoq::nn::tensor::Tensor;
+use winoq::nn::EngineMode;
+use winoq::obs::drift::{DriftConfig, DriftMonitor, DriftSample};
+use winoq::obs::trace::TraceKind;
+use winoq::obs::Tracer;
+use winoq::serve::{
+    with_server_resilient, BatchModel, FallbackConfig, FallbackController, Resilience,
+    ServeConfig, ServeError, ServeStats,
+};
+use winoq::testkit::chaos::{ChaosConfig, FaultPlan};
+use winoq::testkit::forall;
+use winoq::testkit::soak::{run_soak, SoakConfig, SoakModel};
+use winoq::tune::cost::TileCostModel;
+use winoq::wino::basis::Base;
+use winoq::wino::error::Prng;
+
+/// Identity model: enough surface for the queue/supervisor machinery
+/// without dragging a real network into the chaos path.
+struct EchoModel {
+    dims: Vec<usize>,
+}
+
+impl BatchModel for EchoModel {
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn infer_batch(&self, batch: &Tensor, _scratch: &mut EngineScratch) -> Tensor {
+        batch.clone()
+    }
+
+    fn tiles_per_item(&self) -> usize {
+        1
+    }
+}
+
+fn item(v: f32) -> Tensor {
+    Tensor::from_vec(&[1, 2, 2], vec![v; 4])
+}
+
+#[test]
+fn injected_panics_fail_only_their_batch_and_serving_recovers() {
+    let model = EchoModel { dims: vec![1, 2, 2] };
+    let cfg = ServeConfig { max_batch: 1, batch_window_us: 0, ..ServeConfig::default() };
+    let stats = ServeStats::new();
+    let tracer = Arc::new(Tracer::default());
+    // seed 0, panic_every 4 over 16 one-request batches: batches
+    // {0, 4, 8, 12} panic — four restarts, inside the default budget
+    // of five, so the session must survive to a clean close.
+    let chaos = ChaosConfig { panic_every: 4, ..ChaosConfig::default() };
+    let res = Resilience {
+        chaos: Some(Arc::new(FaultPlan::new(chaos))),
+        ..Resilience::default()
+    };
+    let (mut ok, mut failed) = (0u64, 0u64);
+    with_server_resilient(
+        &model,
+        &cfg,
+        &stats,
+        Some(tracer.clone()),
+        None,
+        &res,
+        |q| {
+            for i in 0..16 {
+                let rx = q.submit(item(i as f32)).expect("queue far below capacity");
+                match rx.recv().expect("failed batches still answer their clients") {
+                    Ok(resp) => {
+                        assert_eq!(resp.output.dims, vec![1, 2, 2]);
+                        ok += 1;
+                    }
+                    Err(ServeError::Failed { reason }) => {
+                        assert!(
+                            reason.contains("chaos: injected worker panic"),
+                            "unexpected failure reason: {reason}"
+                        );
+                        failed += 1;
+                    }
+                    Err(other) => panic!("no cost model, nothing sheds: {other}"),
+                }
+            }
+        },
+    );
+    assert_eq!(ok, 12, "healthy batches must serve normally");
+    assert_eq!(failed, 4, "exactly the scheduled batches fail");
+    assert_eq!(stats.completed(), 12);
+    assert_eq!(stats.failed(), 4);
+    assert_eq!(stats.worker_restarts(), 4, "one bounded restart per injected panic");
+    let report = stats.report(1.0);
+    assert_eq!(
+        report.submitted,
+        report.completed + report.rejected + report.shed + report.failed,
+        "exact accounting under chaos"
+    );
+
+    // The trace stream tells the same story: four spans terminate in
+    // `failed`, four `worker_restart` advisories sit on the reserved
+    // span 0, and span accounting still reconciles exactly.
+    let acc = tracer.accounting();
+    assert!(acc.exact, "trace accounting must reconcile under chaos");
+    assert_eq!(acc.completed, 12);
+    assert_eq!(acc.failed, 4);
+    let events = tracer.drain();
+    let failed_spans =
+        events.iter().filter(|e| matches!(e.kind, TraceKind::Failed { .. })).count();
+    assert_eq!(failed_spans, 4);
+    let restarts: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::WorkerRestart { .. }))
+        .collect();
+    assert_eq!(restarts.len(), 4);
+    assert!(
+        restarts.iter().all(|e| e.span == 0),
+        "worker lifecycle events are process-level (span 0)"
+    );
+}
+
+#[test]
+fn relentless_panics_exhaust_the_budget_and_abort_instead_of_crash_looping() {
+    let model = EchoModel { dims: vec![1, 2, 2] };
+    let cfg = ServeConfig { max_batch: 1, batch_window_us: 0, ..ServeConfig::default() };
+    let stats = ServeStats::new();
+    // Every batch panics: the supervisor burns its whole budget and
+    // then falls back to the fail-fast abort, re-raising the panic out
+    // of the session — a deterministic model bug must not crash-loop.
+    let chaos = ChaosConfig { panic_every: 1, ..ChaosConfig::default() };
+    let res = Resilience {
+        chaos: Some(Arc::new(FaultPlan::new(chaos))),
+        ..Resilience::default()
+    };
+    let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        with_server_resilient(&model, &cfg, &stats, None, None, &res, |q| {
+            let mut i = 0u64;
+            loop {
+                match q.submit(item(i as f32)) {
+                    Ok(rx) => {
+                        let _ = rx.recv();
+                    }
+                    Err(_) => break, // aborted: Rejected::Closed
+                }
+                i += 1;
+            }
+        });
+    }));
+    assert!(unwound.is_err(), "an exhausted restart budget re-raises the panic");
+    assert_eq!(stats.completed(), 0);
+    assert!(stats.failed() >= 1, "at least the first poisoned batch is typed-failed");
+    assert_eq!(
+        stats.worker_restarts() as u32,
+        winoq::serve::RestartPolicy::default().max_restarts,
+        "restarts stop exactly at the budget"
+    );
+}
+
+/// A model whose shadow oracle is a dial: OOD mode reports a rel-L2 far
+/// over budget, calm mode far under. `set_layer_mode` records every flip
+/// the circuit breaker makes.
+struct ModalModel {
+    dims: Vec<usize>,
+    ood: AtomicBool,
+    flips: Mutex<Vec<(String, EngineMode)>>,
+}
+
+impl BatchModel for ModalModel {
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn infer_batch(&self, batch: &Tensor, _scratch: &mut EngineScratch) -> Tensor {
+        batch.clone()
+    }
+
+    fn tiles_per_item(&self) -> usize {
+        1
+    }
+
+    fn drift_probe(&self, _item: &Tensor) -> Vec<DriftSample> {
+        let rel_err = if self.ood.load(Ordering::Relaxed) { 1.0 } else { 1e-5 };
+        vec![DriftSample {
+            layer: "l0".to_string(),
+            m: 4,
+            base: Base::Legendre,
+            weight_bits: 8,
+            hadamard_bits: 32,
+            rel_err,
+        }]
+    }
+
+    fn set_layer_mode(&self, layer: &str, mode: EngineMode) -> bool {
+        self.flips.lock().unwrap().push((layer.to_string(), mode));
+        true
+    }
+}
+
+#[test]
+fn drift_degrades_down_the_ladder_and_a_quiet_period_rearms() {
+    let model = ModalModel {
+        dims: vec![1, 2, 2],
+        ood: AtomicBool::new(true),
+        flips: Mutex::new(Vec::new()),
+    };
+    let cfg = ServeConfig { max_batch: 1, batch_window_us: 0, ..ServeConfig::default() };
+    let stats = ServeStats::new();
+    let tracer = Arc::new(Tracer::default());
+    // Sample every span; budget 1e-4 × headroom 4 → OOD (1.0) violates,
+    // calm (1e-5) is comfortably inside.
+    let mut dm = DriftMonitor::new(DriftConfig { stride: 1, ..DriftConfig::default() });
+    dm.set_budget("l0", Some(1e-4));
+    let fb = Arc::new(FallbackController::new(FallbackConfig {
+        alerts_to_degrade: 2,
+        quiet_to_restore: 3,
+    }));
+    let res = Resilience { fallback: Some(fb.clone()), ..Resilience::default() };
+    with_server_resilient(
+        &model,
+        &cfg,
+        &stats,
+        Some(tracer.clone()),
+        Some(&dm),
+        &res,
+        |q| {
+            let ask = |v: f32| {
+                q.submit(item(v))
+                    .expect("queue far below capacity")
+                    .recv()
+                    .expect("worker alive")
+                    .expect("nothing sheds or fails here")
+            };
+            // Two violations: Int → Float. Two more: Float → Direct.
+            for i in 0..4 {
+                ask(i as f32);
+            }
+            assert_eq!(fb.mode("l0"), EngineMode::Direct, "persistent drift bottoms out");
+            assert_eq!(fb.degraded(), 1);
+            assert_eq!(stats.degraded(), 1, "the serve.degraded gauge tracks the breaker");
+            // Calm traffic: three consecutive in-budget samples re-arm
+            // the layer straight back to the quantized path.
+            model.ood.store(false, Ordering::Relaxed);
+            for i in 0..3 {
+                ask(100.0 + i as f32);
+            }
+            assert_eq!(fb.mode("l0"), EngineMode::Int, "quiet period restores the layer");
+            assert_eq!(fb.degraded(), 0);
+            assert_eq!(stats.degraded(), 0);
+        },
+    );
+    // The breaker's flips landed on the model in ladder order, and the
+    // trace carries the matching engaged/cleared advisories.
+    let flips = model.flips.lock().unwrap().clone();
+    assert_eq!(
+        flips,
+        vec![
+            ("l0".to_string(), EngineMode::Float),
+            ("l0".to_string(), EngineMode::Direct),
+            ("l0".to_string(), EngineMode::Int),
+        ]
+    );
+    let events = tracer.drain();
+    let engaged: Vec<_> = events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            TraceKind::FallbackEngaged { layer, from, to } => {
+                Some((layer.clone(), from.clone(), to.clone()))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        engaged,
+        vec![
+            ("l0".to_string(), "int".to_string(), "float".to_string()),
+            ("l0".to_string(), "float".to_string(), "direct".to_string()),
+        ]
+    );
+    let cleared = events
+        .iter()
+        .filter(|e| matches!(&e.kind, TraceKind::FallbackCleared { layer, to }
+            if layer == "l0" && to == "int"))
+        .count();
+    assert_eq!(cleared, 1);
+}
+
+/// A small two-tenant soak fixture for the property sweep: enough
+/// pressure for shed/reject paths to fire, small enough to replay many
+/// randomized chaos plans quickly.
+fn soak_cfg(seed: u64, chaos: Option<ChaosConfig>) -> SoakConfig {
+    SoakConfig {
+        seed,
+        requests: 192,
+        budget: 24,
+        max_batch: 4,
+        window_us: 800,
+        mean_gap_us: 25,
+        deadline_us: 20_000,
+        tight_pct: 5,
+        no_deadline_pct: 10,
+        shapes: vec![(32, 32, 64), (16, 16, 16)],
+        models: vec![
+            SoakModel {
+                name: "a".to_string(),
+                weight: 2,
+                workers: 2,
+                cost: TileCostModel::new(40.0, 0.02),
+            },
+            SoakModel {
+                name: "b".to_string(),
+                weight: 1,
+                workers: 1,
+                cost: TileCostModel::new(60.0, 0.03),
+            },
+        ],
+        service_jitter_div: 16,
+        drift_stride: 0,
+        drift_err_scale: 1.0,
+        chaos,
+    }
+}
+
+#[test]
+fn property_randomized_chaos_plans_always_account_exactly_and_replay_identically() {
+    // ∀ chaos plans (including panic storms that exhaust restart
+    // budgets and retire workers): the soak accounts for every request
+    // exactly and the full report replays byte-identically.
+    forall(
+        0xC4A05,
+        8,
+        |rng: &mut Prng| {
+            (
+                rng.next_u64() % 1000,    // chaos schedule seed
+                1 + rng.next_u64() % 7,   // panic_every ∈ 1..=7 (always some panics)
+                rng.next_u64() % 6,       // latency_every (0 = off)
+                rng.next_u64() % 5,       // corrupt_every (0 = off)
+                rng.next_u64() % 30,      // burst_every (0 = off)
+            )
+        },
+        |&(seed, panic_every, latency_every, corrupt_every, burst_every)| {
+            let chaos = ChaosConfig {
+                seed,
+                panic_every,
+                latency_every,
+                latency_us: 1500,
+                corrupt_every,
+                corrupt_scale: 50.0,
+                burst_every,
+                burst_len: 6,
+                ..ChaosConfig::default()
+            };
+            let cfg = soak_cfg(0xBADC0DE ^ seed, Some(chaos));
+            let r1 = run_soak(&cfg);
+            let r2 = run_soak(&cfg);
+            r1.accounting_exact()
+                && r1.failed > 0
+                && r1.submitted == cfg.requests as u64
+                && r1.to_json() == r2.to_json()
+        },
+    );
+}
+
+#[test]
+fn property_disarmed_chaos_is_invisible() {
+    // ∀ seeds: a run with a present-but-disarmed chaos plan is
+    // byte-identical to a run with no plan at all — arming is the only
+    // thing that may perturb the simulation.
+    forall(
+        0x0FF,
+        6,
+        |rng: &mut Prng| rng.next_u64(),
+        |&seed| {
+            let armed_off = run_soak(&soak_cfg(seed, Some(ChaosConfig::default())));
+            let none = run_soak(&soak_cfg(seed, None));
+            armed_off.to_json() == none.to_json() && none.failed == 0
+        },
+    );
+}

@@ -12,7 +12,7 @@ use winoq::nn::layers::Conv2dCfg;
 use winoq::nn::tensor::Tensor;
 use winoq::serve::{
     with_server, with_shards, EngineModel, ModelRegistry, Rejected, Request, Response,
-    ServeConfig, ServeQueue, ServeStats, ShardSpec, SubmitOpts,
+    ServeConfig, ServeError, ServeQueue, ServeStats, ShardSpec, SubmitOpts,
 };
 use winoq::testkit::prng_tensor;
 use winoq::tune::cost::TileCostModel;
@@ -291,7 +291,7 @@ fn two_shard_weighted_admission_mixed_shapes_and_forced_shed() {
                         ok_b += 1;
                     }
                 }
-                Err(why) => {
+                Err(ServeError::Shed(why)) => {
                     assert!(hopeless, "sane deadlines must not shed");
                     assert!(
                         why.decided_us + why.predicted_us > why.deadline_us,
@@ -302,6 +302,9 @@ fn two_shard_weighted_admission_mixed_shapes_and_forced_shed() {
                     } else {
                         shed_b += 1;
                     }
+                }
+                Err(ServeError::Failed { reason }) => {
+                    panic!("no fault injection in this test, yet a batch failed: {reason}")
                 }
             }
         }

@@ -99,7 +99,7 @@ if [ ! -s "$TRACE_JSONL" ] || grep -qv '^{.*}$' "$TRACE_JSONL"; then
   exit 1
 fi
 SUBMITS="$(grep -c '"event": "submit"' "$TRACE_JSONL" || true)"
-TERMINALS="$(grep -c '"event": "\(complete\|reject\|shed\)"' "$TRACE_JSONL" || true)"
+TERMINALS="$(grep -c '"event": "\(complete\|reject\|shed\|failed\)"' "$TRACE_JSONL" || true)"
 COMPLETES="$(grep -c '"event": "complete"' "$TRACE_JSONL" || true)"
 if [ "$COMPLETES" -ne 64 ] || [ "$SUBMITS" -lt 64 ] || [ "$SUBMITS" -ne "$TERMINALS" ]; then
   echo "serve smoke FAILED: trace span accounting is not exact" \
@@ -160,6 +160,75 @@ if ! grep -q '"layer": ' "$DRIFT_OOD"; then
 fi
 echo "drift smoke OK (calibrated: $CAL_COUNTS sampled/alerts; OOD x100: $OOD_COUNTS)"
 rm -f "$DRIFT_CAL" "$DRIFT_OOD"
+
+# Chaos smoke: injected worker panics must fail exactly their poisoned
+# batches with a typed error while the supervisor restarts the worker
+# inside its bounded budget — the run exits 0, accounting stays exact
+# (completed + failed = requests), and the trace carries both the
+# failed terminals and the span-0 worker_restart advisories. At
+# max-batch 4 / 64 requests the schedule (seed 7, every 17th batch)
+# deals 1–4 panics for any batch-assembly timing, always under the
+# default restart budget of 5.
+echo "==> chaos smoke (injected panics: typed failures + bounded restarts)"
+CHAOS_STATS="$(mktemp)"
+CHAOS_TRACE="$(mktemp)"
+./target/release/winoq serve --synthetic --requests 64 --max-batch 4 \
+  --chaos-panic-every 17 --chaos-seed 7 \
+  --stats-json "$CHAOS_STATS" --trace-json "$CHAOS_TRACE"
+CHAOS_ACCT="$(sed -n 's/.*"completed": *\([0-9]*\), "rejected": *\([0-9]*\), "shed": *\([0-9]*\), "failed": *\([0-9]*\).*/\1 \2 \3 \4/p' "$CHAOS_STATS" | head -n 1)"
+if [ -z "$CHAOS_ACCT" ] || ! echo "$CHAOS_ACCT" | awk '{ exit !($1 + $4 == 64 && $4 >= 1) }'; then
+  echo "chaos smoke FAILED: expected completed+failed=64 with >=1 failed (got: $CHAOS_ACCT)" >&2
+  cat "$CHAOS_STATS" >&2
+  exit 1
+fi
+CHAOS_RESTARTS="$(sed -n 's/.*"worker_restarts": *\([0-9][0-9]*\).*/\1/p' "$CHAOS_STATS" | head -n 1)"
+if [ -z "$CHAOS_RESTARTS" ] || [ "$CHAOS_RESTARTS" -lt 1 ]; then
+  echo "chaos smoke FAILED: no supervised worker restart recorded ($CHAOS_RESTARTS)" >&2
+  cat "$CHAOS_STATS" >&2
+  exit 1
+fi
+CHAOS_SUBMITS="$(grep -c '"event": "submit"' "$CHAOS_TRACE" || true)"
+CHAOS_TERMINALS="$(grep -c '"event": "\(complete\|reject\|shed\|failed\)"' "$CHAOS_TRACE" || true)"
+CHAOS_FAILED="$(grep -c '"event": "failed"' "$CHAOS_TRACE" || true)"
+CHAOS_WR="$(grep -c '"event": "worker_restart"' "$CHAOS_TRACE" || true)"
+if [ "$CHAOS_SUBMITS" -ne "$CHAOS_TERMINALS" ] || [ "$CHAOS_FAILED" -lt 1 ] || [ "$CHAOS_WR" -lt 1 ]; then
+  echo "chaos smoke FAILED: trace not exact under chaos" \
+       "($CHAOS_SUBMITS submits, $CHAOS_TERMINALS terminals, $CHAOS_FAILED failed, $CHAOS_WR restarts)" >&2
+  exit 1
+fi
+echo "chaos smoke OK (accounting: $CHAOS_ACCT; $CHAOS_RESTARTS restart(s), $CHAOS_WR traced)"
+rm -f "$CHAOS_STATS" "$CHAOS_TRACE"
+
+# Fallback smoke: persistent drift must trip the per-layer circuit
+# breaker. 100x-scaled traffic with a 1-alert trip threshold (and an
+# unreachable quiet period, so the degradation is still visible at
+# export) must engage at least one layer's fallback — observable as a
+# fallback_engaged trace event AND a nonzero serve.degraded gauge —
+# while the run still completes every request and exits 0.
+echo "==> fallback smoke (drift-triggered engine degradation)"
+FB_TRACE="$(mktemp)"
+FB_METRICS="$(mktemp)"
+FB_DRIFT="$(mktemp)"
+./target/release/winoq serve --synthetic --requests 64 --max-batch 8 \
+  --drift-json "$FB_DRIFT" --drift-stride 4 --input-scale 100 \
+  --fallback-alerts 1 --fallback-quiet 100000 \
+  --trace-json "$FB_TRACE" --metrics-json "$FB_METRICS"
+if ! grep -q '"event": "fallback_engaged"' "$FB_TRACE"; then
+  echo "fallback smoke FAILED: no fallback_engaged event on 100x OOD traffic" >&2
+  exit 1
+fi
+DEGRADED="$(sed -n 's/.*"metric": "serve.degraded", "type": "gauge", "value": \([0-9.]*\).*/\1/p' "$FB_METRICS")"
+if [ -z "$DEGRADED" ] || ! echo "$DEGRADED" | awk '{ exit !($1 > 0) }'; then
+  echo "fallback smoke FAILED: serve.degraded gauge not raised (got: '$DEGRADED')" >&2
+  cat "$FB_METRICS" >&2
+  exit 1
+fi
+if ! grep -q '"metric": "pool.respawned"' "$FB_METRICS"; then
+  echo "fallback smoke FAILED: metrics snapshot lacks the pool.respawned counter" >&2
+  exit 1
+fi
+echo "fallback smoke OK (serve.degraded = $DEGRADED)"
+rm -f "$FB_TRACE" "$FB_METRICS" "$FB_DRIFT"
 
 # Integer-engine smoke: a 9-bit-Hadamard quantized serve run must
 # complete (the quantized serving path is the integer engine) and the
@@ -282,8 +351,8 @@ if [ -z "$MISS" ] || ! echo "$MISS" | awk '{ exit !($1 < 0.05) }'; then
   cat "$SOAK_JSON" >&2
   exit 1
 fi
-TOTALS="$(sed -n 's/.*"totals": {"submitted": \([0-9]*\), "completed": \([0-9]*\), "rejected": \([0-9]*\), "shed": \([0-9]*\).*/\1 \2 \3 \4/p' "$SOAK_JSON")"
-if [ -z "$TOTALS" ] || ! echo "$TOTALS" | awk '{ exit !($1 == $2 + $3 + $4 && $1 == 256) }'; then
+TOTALS="$(sed -n 's/.*"totals": {"submitted": \([0-9]*\), "completed": \([0-9]*\), "rejected": \([0-9]*\), "shed": \([0-9]*\), "failed": \([0-9]*\).*/\1 \2 \3 \4 \5/p' "$SOAK_JSON")"
+if [ -z "$TOTALS" ] || ! echo "$TOTALS" | awk '{ exit !($1 == $2 + $3 + $4 + $5 && $1 == 256) }'; then
   echo "soak smoke FAILED: totals do not reconcile ($TOTALS)" >&2
   cat "$SOAK_JSON" >&2
   exit 1
@@ -300,7 +369,7 @@ if [ ! -s "$SOAK_TRACE" ] || grep -qv '^{.*}$' "$SOAK_TRACE"; then
   exit 1
 fi
 SOAK_SUBMITS="$(grep -c '"event": "submit"' "$SOAK_TRACE" || true)"
-SOAK_TERMINALS="$(grep -c '"event": "\(complete\|reject\|shed\)"' "$SOAK_TRACE" || true)"
+SOAK_TERMINALS="$(grep -c '"event": "\(complete\|reject\|shed\|failed\)"' "$SOAK_TRACE" || true)"
 if [ "$SOAK_SUBMITS" -ne 256 ] || [ "$SOAK_TERMINALS" -ne 256 ]; then
   echo "soak trace FAILED: span accounting is not exact" \
        "($SOAK_SUBMITS submits, $SOAK_TERMINALS terminals, want 256 each)" >&2
@@ -341,9 +410,11 @@ fi
 
 # Scale-out serving regression nets, run explicitly like the numeric
 # ones: the deadline-scheduler property suite, the arbitrary-H×W parity
-# suite, and the multi-shard stress tests.
-echo "==> serve_deadline + shape_parity + serve_stress"
-cargo test -q --test serve_deadline --test shape_parity --test serve_stress
+# suite, the multi-shard stress tests, and the self-healing chaos suite
+# (fault injection, bounded restarts, drift-triggered fallback).
+echo "==> serve_deadline + shape_parity + serve_stress + serve_chaos"
+cargo test -q --test serve_deadline --test shape_parity --test serve_stress \
+  --test serve_chaos
 
 "$SCRIPT_DIR/lint.sh"
 
